@@ -1,0 +1,128 @@
+//! Real multi-process distributed training over TCP: this binary is the
+//! master; workers are separate `qmsvrg worker` processes (or `--spawn`
+//! spawns them as child processes for a one-command demo).
+//!
+//! ```bash
+//! # one-command demo (spawns 4 worker child processes):
+//! cargo run --release --offline --example distributed_tcp -- --spawn
+//!
+//! # manual: start the master, then start each worker in its own shell:
+//! cargo run --release --offline --example distributed_tcp
+//! target/release/qmsvrg worker --connect 127.0.0.1:7070 --shard 0 --workers 4 --bits 4 --adaptive
+//! ```
+
+use qmsvrg::algorithms::channel::QuantOpts;
+use qmsvrg::algorithms::ShardedObjective;
+use qmsvrg::coordinator::{Coordinator, CoordinatorOpts};
+use qmsvrg::data::synthetic::power_like;
+use qmsvrg::quant::{AdaptivePolicy, GridPolicy};
+use qmsvrg::rng::Xoshiro256pp;
+use qmsvrg::transport::tcp::TcpDuplex;
+
+const N_WORKERS: usize = 4;
+const ADDR: &str = "127.0.0.1:7070";
+const SEED: u64 = 42;
+const SAMPLES: usize = 20_000;
+
+fn main() -> anyhow::Result<()> {
+    let spawn = std::env::args().any(|a| a == "--spawn");
+
+    // the same dataset/shards every worker derives from the shared seed
+    let mut ds = power_like(SAMPLES, SEED);
+    ds.standardize();
+    let (train, _) = ds.split(0.8, SEED ^ 0x5117);
+    let prob = ShardedObjective::new(&train, N_WORKERS, 0.1);
+
+    let listener = std::net::TcpListener::bind(ADDR)?;
+    eprintln!("# master listening on {ADDR} for {N_WORKERS} workers");
+
+    let mut children = Vec::new();
+    if spawn {
+        let exe = std::env::current_exe()?;
+        // target/{profile}/examples/distributed_tcp -> target/{profile}/qmsvrg
+        let qmsvrg = exe
+            .parent()
+            .and_then(|p| p.parent())
+            .map(|p| p.join("qmsvrg"))
+            .filter(|p| p.exists())
+            .ok_or_else(|| anyhow::anyhow!("qmsvrg binary not found next to example; run `cargo build --release --offline` first"))?;
+        for i in 0..N_WORKERS {
+            children.push(
+                std::process::Command::new(&qmsvrg)
+                    .args([
+                        "worker",
+                        "--connect",
+                        ADDR,
+                        "--shard",
+                        &i.to_string(),
+                        "--workers",
+                        &N_WORKERS.to_string(),
+                        "--samples",
+                        &SAMPLES.to_string(),
+                        "--seed",
+                        &SEED.to_string(),
+                        "--bits",
+                        "4",
+                        "--adaptive",
+                    ])
+                    .spawn()?,
+            );
+        }
+    }
+
+    let mut links = Vec::new();
+    for i in 0..N_WORKERS {
+        let (stream, peer) = listener.accept()?;
+        eprintln!("# worker {i} connected from {peer}");
+        links.push(TcpDuplex::new(stream)?);
+    }
+
+    // quantization config must mirror what the workers were started with
+    // (workers compute μ, L from their own shard; the master uses the global
+    // bounds — both construct radii from the *broadcast* gnorm, and grid
+    // centers from replicated state, so they agree)
+    let quant = QuantOpts {
+        bits: 4,
+        policy: GridPolicy::Adaptive(AdaptivePolicy::practical(
+            prob.mu(),
+            prob.l_smooth(),
+            prob.dim(),
+            0.2,
+            8,
+        )),
+        plus: true,
+    };
+    let mut coord = Coordinator::new(
+        links,
+        train.d,
+        CoordinatorOpts {
+            step: 0.2,
+            epoch_len: 8,
+            outer_iters: 30,
+            memory_unit: true,
+            quant: Some(quant),
+        },
+        Xoshiro256pp::seed_from_u64(SEED).split(0),
+    );
+
+    let t0 = std::time::Instant::now();
+    coord.run(&mut |k, w, gn, bits| {
+        println!(
+            "epoch {k:>3}  loss {:.6}  |g| {:.3e}  bits {bits}",
+            prob.loss(w),
+            gn
+        );
+    })?;
+    let loss = coord.query_loss()?;
+    println!(
+        "done in {:.2?}: distributed loss {:.6}, total bits {}",
+        t0.elapsed(),
+        loss,
+        coord.ledger.total_bits()
+    );
+    coord.shutdown()?;
+    for mut c in children {
+        let _ = c.wait();
+    }
+    Ok(())
+}

@@ -1,0 +1,79 @@
+"""AOT compile path: lower every (entry, shape) pair to an HLO-text artifact.
+
+HLO *text* is the interchange format, NOT a serialized HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (from python/):  python -m compile.aot --out-dir ../artifacts
+
+Produces  artifacts/<entry>.<shape>.hlo.txt  plus a manifest.tsv the Rust
+runtime uses to discover entries and shapes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(entry: str, n_pad: int, d_pad: int, tile_n: int | None = None) -> str:
+    fn = model.entry_fn(entry)
+    if tile_n is not None:
+        fn = functools.partial(fn, tile_n=tile_n)
+    args = model.example_args(entry, n_pad, d_pad)
+    lowered = jax.jit(fn).lower(*args)
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="(compat) single-file mode marker; ignored")
+    ap.add_argument(
+        "--shapes",
+        default=None,
+        help="comma-separated subset of shape names (default: all in model.SHAPE_CONFIGS)",
+    )
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    wanted = set(args.shapes.split(",")) if args.shapes else None
+
+    manifest = []
+    for shape_name, n_pad, d_pad, tile_n in model.SHAPE_CONFIGS:
+        if wanted is not None and shape_name not in wanted:
+            continue
+        for entry in model.ENTRIES:
+            text = lower_entry(entry, n_pad, d_pad, tile_n)
+            fname = f"{entry}.{shape_name}.hlo.txt"
+            path = os.path.join(args.out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest.append((entry, shape_name, n_pad, d_pad, fname))
+            print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+        f.write("# entry\tshape\tn_pad\td_pad\tfile\n")
+        for row in manifest:
+            f.write("\t".join(str(x) for x in row) + "\n")
+    print(f"manifest: {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

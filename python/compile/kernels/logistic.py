@@ -1,0 +1,175 @@
+"""L1 — Pallas kernels for the logistic-ridge hot spot.
+
+The compute hot-spot of every algorithm in the paper (GD/SGD/SAG/SVRG/
+M-SVRG and their quantized variants) is the shard gradient
+
+    g(w) = -(1/n) Z^T sigma(-Z w) + 2*lam*w ,     Z = diag(y) X
+
+evaluated at the snapshot point (outer loop) and at the running iterate
+(inner loop). These kernels tile the padded margin matrix ``Z`` into
+``(TILE_N, d_pad)`` VMEM blocks, compute the per-tile partial gradient with
+an MXU-shaped contraction ``Z_tile^T @ coeff`` and mask out padding rows
+with an iota-vs-n_valid predicate, so one compiled artifact serves any
+shard size up to ``n_pad``.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): VMEM = the per-tile blocks
+selected by BlockSpec; MXU = the (d_pad, TILE_N) x (TILE_N, 1) contraction;
+the HBM<->VMEM schedule the paper's CPU cluster did not need is expressed
+by the grid over row tiles. ``interpret=True`` everywhere — the CPU PJRT
+plugin cannot execute Mosaic custom-calls; real-TPU perf is estimated in
+EXPERIMENTS.md from the VMEM footprint + MXU utilisation of these shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default row-tile. Multiple of the 8-sublane f32 tile and big enough to
+# keep the MXU contraction shaped well; callers may override.
+DEFAULT_TILE_N = 512
+
+
+def _pick_tile(n_pad: int, tile_n: int | None) -> int:
+    if n_pad <= 0:
+        raise ValueError(f"cannot tile n_pad={n_pad}")
+    t = tile_n or DEFAULT_TILE_N
+    t = min(t, n_pad)
+    while t > 0 and n_pad % t != 0:  # n_pad is always a power-of-two multiple of 8
+        t //= 2
+    if t == 0:
+        raise ValueError(f"cannot tile n_pad={n_pad}")
+    return t
+
+
+def _stable_sigmoid(s):
+    e = jnp.exp(-jnp.abs(s))
+    return jnp.where(s >= 0, 1.0 / (1.0 + e), e / (1.0 + e))
+
+
+# ----------------------------------------------------------------------------
+# gradient kernel
+# ----------------------------------------------------------------------------
+
+def _grad_kernel(z_ref, w_ref, nv_ref, o_ref, *, tile_n: int):
+    """One grid step: partial (unnormalised) gradient of one row tile."""
+    i = pl.program_id(0)
+    z = z_ref[...]                        # (TILE_N, d_pad)   VMEM block
+    w = w_ref[...]                        # (d_pad, 1)
+    n_valid = nv_ref[0, 0]                # scalar (broadcast to every tile)
+
+    s = jnp.dot(z, w)                     # (TILE_N, 1) margins — MXU
+    row = i * tile_n + jax.lax.broadcasted_iota(jnp.int32, (tile_n, 1), 0)
+    mask = (row < n_valid).astype(jnp.float32)
+    coeff = -_stable_sigmoid(-s) * mask   # (TILE_N, 1)
+
+    partial = jnp.dot(z.T, coeff)         # (d_pad, 1) — MXU contraction
+    o_ref[...] = partial.T                # (1, d_pad)
+
+
+def grad_partials(z, w, n_valid, *, tile_n: int | None = None):
+    """Per-tile partial gradients, shape (n_tiles, d_pad); sum/n + ridge in L2."""
+    n_pad, d_pad = z.shape
+    t = _pick_tile(n_pad, tile_n)
+    n_tiles = n_pad // t
+    nv = jnp.asarray(n_valid, jnp.int32).reshape(1, 1)
+    return pl.pallas_call(
+        functools.partial(_grad_kernel, tile_n=t),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((t, d_pad), lambda i: (i, 0)),        # Z row tile
+            pl.BlockSpec((d_pad, 1), lambda i: (0, 0)),        # w (resident)
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),            # n_valid
+        ],
+        out_specs=pl.BlockSpec((1, d_pad), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles, d_pad), jnp.float32),
+        interpret=True,
+    )(z, w.reshape(d_pad, 1), nv)
+
+
+# ----------------------------------------------------------------------------
+# loss kernel
+# ----------------------------------------------------------------------------
+
+def _loss_kernel(z_ref, w_ref, nv_ref, o_ref, *, tile_n: int):
+    """One grid step: partial (unnormalised) loss of one row tile."""
+    i = pl.program_id(0)
+    z = z_ref[...]
+    w = w_ref[...]
+    n_valid = nv_ref[0, 0]
+
+    s = jnp.dot(z, w)                     # (TILE_N, 1)
+    row = i * tile_n + jax.lax.broadcasted_iota(jnp.int32, (tile_n, 1), 0)
+    mask = (row < n_valid).astype(jnp.float32)
+    per = jnp.logaddexp(0.0, -s) * mask   # stable softplus(-s)
+    o_ref[...] = jnp.sum(per).reshape(1, 1)
+
+
+def loss_partials(z, w, n_valid, *, tile_n: int | None = None):
+    """Per-tile partial loss sums, shape (n_tiles, 1)."""
+    n_pad, d_pad = z.shape
+    t = _pick_tile(n_pad, tile_n)
+    n_tiles = n_pad // t
+    nv = jnp.asarray(n_valid, jnp.int32).reshape(1, 1)
+    return pl.pallas_call(
+        functools.partial(_loss_kernel, tile_n=t),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((t, d_pad), lambda i: (i, 0)),
+            pl.BlockSpec((d_pad, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_tiles, 1), jnp.float32),
+        interpret=True,
+    )(z, w.reshape(d_pad, 1), nv)
+
+
+# ----------------------------------------------------------------------------
+# fused loss+gradient kernel (one pass over Z — saves an HBM sweep)
+# ----------------------------------------------------------------------------
+
+def _loss_grad_kernel(z_ref, w_ref, nv_ref, og_ref, ol_ref, *, tile_n: int):
+    i = pl.program_id(0)
+    z = z_ref[...]
+    w = w_ref[...]
+    n_valid = nv_ref[0, 0]
+
+    s = jnp.dot(z, w)
+    row = i * tile_n + jax.lax.broadcasted_iota(jnp.int32, (tile_n, 1), 0)
+    mask = (row < n_valid).astype(jnp.float32)
+
+    per = jnp.logaddexp(0.0, -s) * mask
+    ol_ref[...] = jnp.sum(per).reshape(1, 1)
+
+    coeff = -_stable_sigmoid(-s) * mask
+    og_ref[...] = jnp.dot(z.T, coeff).T
+
+
+def loss_grad_partials(z, w, n_valid, *, tile_n: int | None = None):
+    """(grad partials (n_tiles, d_pad), loss partials (n_tiles, 1)) fused."""
+    n_pad, d_pad = z.shape
+    t = _pick_tile(n_pad, tile_n)
+    n_tiles = n_pad // t
+    nv = jnp.asarray(n_valid, jnp.int32).reshape(1, 1)
+    return pl.pallas_call(
+        functools.partial(_loss_grad_kernel, tile_n=t),
+        grid=(n_tiles,),
+        in_specs=[
+            pl.BlockSpec((t, d_pad), lambda i: (i, 0)),
+            pl.BlockSpec((d_pad, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, d_pad), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_tiles, d_pad), jnp.float32),
+            jax.ShapeDtypeStruct((n_tiles, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(z, w.reshape(d_pad, 1), nv)

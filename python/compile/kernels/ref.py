@@ -1,0 +1,66 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth the kernels are tested against (pytest +
+hypothesis). They are also what the L2 model would be without the L1
+kernels, so any deviation is a kernel bug, not a modeling choice.
+
+Problem (paper §4.1): logistic ridge regression over margins
+``z_i = y_i * x_i``::
+
+    f(w)  = (1/n) sum_i ln(1 + exp(-z_i·w)) + lam * ||w||^2
+    g(w)  = -(1/n) Z^T sigma(-Z w) + 2*lam*w            sigma(s) = 1/(1+e^s)
+
+All entry points operate on *padded* arrays: ``z`` has shape
+``(n_pad, d_pad)`` and only the first ``n_valid`` rows are real samples
+(the rest must be ignored, whatever garbage they hold). This is what lets a
+single AOT-compiled artifact serve any shard size up to ``n_pad``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sigmoid(s):
+    """Numerically-stable logistic function."""
+    return jnp.where(
+        s >= 0, 1.0 / (1.0 + jnp.exp(-jnp.abs(s))), jnp.exp(-jnp.abs(s)) / (1.0 + jnp.exp(-jnp.abs(s)))
+    )
+
+
+def _row_mask(n_pad: int, n_valid) -> jnp.ndarray:
+    """1.0 for real rows, 0.0 for padding rows."""
+    return (jnp.arange(n_pad, dtype=jnp.int32) < n_valid).astype(jnp.float32)
+
+
+def loss_ref(z, w, n_valid, lam):
+    """Mean logistic loss over the first ``n_valid`` rows + ridge term."""
+    n_pad = z.shape[0]
+    mask = _row_mask(n_pad, n_valid)
+    s = z @ w  # (n_pad,) margins
+    per = jnp.logaddexp(0.0, -s) * mask  # stable log(1 + e^{-s})
+    n = jnp.maximum(n_valid.astype(jnp.float32), 1.0)
+    return jnp.sum(per) / n + lam * jnp.dot(w, w)
+
+
+def grad_ref(z, w, n_valid, lam):
+    """Full gradient over the first ``n_valid`` rows (+ ridge)."""
+    n_pad = z.shape[0]
+    mask = _row_mask(n_pad, n_valid)
+    s = z @ w
+    coeff = -sigmoid(-s) * mask  # (n_pad,)
+    n = jnp.maximum(n_valid.astype(jnp.float32), 1.0)
+    return (z.T @ coeff) / n + 2.0 * lam * w
+
+
+def loss_grad_ref(z, w, n_valid, lam):
+    """(loss, gradient) in one pass — shares the margin computation."""
+    n_pad = z.shape[0]
+    mask = _row_mask(n_pad, n_valid)
+    s = z @ w
+    n = jnp.maximum(n_valid.astype(jnp.float32), 1.0)
+    per = jnp.logaddexp(0.0, -s) * mask
+    loss = jnp.sum(per) / n + lam * jnp.dot(w, w)
+    coeff = -sigmoid(-s) * mask
+    grad = (z.T @ coeff) / n + 2.0 * lam * w
+    return loss, grad

@@ -1,0 +1,106 @@
+"""L2 — JAX model: the jit-able entry points the Rust runtime executes.
+
+Each entry point composes the L1 Pallas kernels (tile partials) with the
+cheap epilogue (sum over tiles, 1/n normalisation, ridge term) and is
+AOT-lowered by ``aot.py`` to an HLO-text artifact for a fixed padded shape.
+The Rust workers then call the compiled executable with
+
+    z       f32[n_pad, d_pad]   margin matrix (padding rows = anything)
+    w       f32[d_pad]          current iterate (padding coords must be 0)
+    n_valid i32[]               number of real rows
+    lam     f32[]               ridge coefficient
+
+Python never runs at serve time; this module is import-only for the
+compile path and the pytest suite.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import logistic as k
+
+
+def full_grad(z, w, n_valid, lam, *, tile_n=None):
+    """Shard gradient g(w) — Algorithm 1 lines 3 (snapshot) and 8 (inner)."""
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    partials = k.grad_partials(z, w, n_valid, tile_n=tile_n)  # (n_tiles, d_pad)
+    n = jnp.maximum(n_valid.astype(jnp.float32), 1.0)
+    return jnp.sum(partials, axis=0) / n + 2.0 * lam * w
+
+
+def loss(z, w, n_valid, lam, *, tile_n=None):
+    """Shard loss f(w) — the zero-order stopping criterion of §4.1."""
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    partials = k.loss_partials(z, w, n_valid, tile_n=tile_n)  # (n_tiles, 1)
+    n = jnp.maximum(n_valid.astype(jnp.float32), 1.0)
+    return jnp.sum(partials) / n + lam * jnp.dot(w, w)
+
+
+def loss_grad(z, w, n_valid, lam, *, tile_n=None):
+    """Fused (f(w), g(w)) — one HBM sweep instead of two."""
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    gp, lp = k.loss_grad_partials(z, w, n_valid, tile_n=tile_n)
+    n = jnp.maximum(n_valid.astype(jnp.float32), 1.0)
+    l = jnp.sum(lp) / n + lam * jnp.dot(w, w)
+    g = jnp.sum(gp, axis=0) / n + 2.0 * lam * w
+    return l, g
+
+
+def svrg_inner_direction(z, w, w_snap, g_snap_q, g_tilde, n_valid, lam, *, tile_n=None):
+    """Fused SVRG inner-loop direction (Algorithm 1 line 9, one worker):
+
+        v = g(w) - q(g(w_snap)) + g_tilde
+
+    ``g_snap_q`` is the *quantized* snapshot gradient the master echoed back
+    (the memory-unit trick needs master and worker to agree on it bit-for-
+    bit, so the worker receives it rather than recomputing). Computing g(w)
+    here keeps the whole direction in one artifact => one PJRT call per
+    inner iteration on the XLA backend.
+
+    ``w_snap`` is accepted (and ignored beyond shape) so fixed/adaptive
+    variants that *do* recompute the snapshot gradient locally can share
+    the artifact signature; the "+"-variants pass the quantized one.
+    """
+    del w_snap  # signature compatibility; see docstring
+    g_w = full_grad(z, w, n_valid, lam, tile_n=tile_n)
+    return g_w - g_snap_q + g_tilde
+
+
+# Canonical padded shapes compiled by aot.py: (name, n_pad, d_pad, tile_n).
+#  - power-like dataset: d=9 -> d_pad=16; shards up to 16384 rows
+#  - mnist-like dataset: d=784(+1 bias) -> d_pad=896 (7*128 lanes);
+#    60000/8 workers = 7500 -> n_pad 8192
+# tile_n tuned per shape on the CPU-PJRT substrate (EXPERIMENTS.md §Perf:
+# 512 -> 2048 halves the mnist artifact's latency; the power shapes are
+# memory-bound and fastest as a single grid step). On a real TPU the mnist
+# tile (2048 x 896 f32 = 7 MiB) still fits VMEM; the power shapes would use
+# <= 4096-row tiles to stay within a 16 MiB budget.
+SHAPE_CONFIGS = (
+    ("power", 16384, 16, 16384),
+    ("power_small", 2048, 16, 2048),
+    ("mnist", 8192, 896, 2048),
+)
+
+ENTRIES = ("full_grad", "loss", "loss_grad", "svrg_inner_direction")
+
+
+def entry_fn(name):
+    return {
+        "full_grad": full_grad,
+        "loss": loss,
+        "loss_grad": loss_grad,
+        "svrg_inner_direction": svrg_inner_direction,
+    }[name]
+
+
+def example_args(entry: str, n_pad: int, d_pad: int):
+    """ShapeDtypeStructs matching what the Rust runtime will feed."""
+    z = jax.ShapeDtypeStruct((n_pad, d_pad), jnp.float32)
+    w = jax.ShapeDtypeStruct((d_pad,), jnp.float32)
+    nv = jax.ShapeDtypeStruct((), jnp.int32)
+    lam = jax.ShapeDtypeStruct((), jnp.float32)
+    if entry == "svrg_inner_direction":
+        return (z, w, w, w, w, nv, lam)
+    return (z, w, nv, lam)

@@ -1,0 +1,85 @@
+"""AOT semantics: properties the Rust runtime relies on.
+
+The Rust side feeds zero-padded rows and a zero-padded w into the compiled
+artifact, takes the first d entries of the gradient, and expects:
+  * padding rows never affect the result (masked by n_valid);
+  * padding *coordinates* of the gradient stay exactly 0 when w's padding
+    is 0 (so truncation is lossless);
+  * the svrg_inner_direction entry equals g(w) - g_snap_q + g_tilde.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+LAM = 0.1
+
+
+def padded_case(n, d, n_pad, d_pad, seed):
+    rng = np.random.default_rng(seed)
+    z = np.zeros((n_pad, d_pad), np.float32)
+    z[:n, :d] = rng.normal(size=(n, d)).astype(np.float32)
+    # poison the padding ROWS (they must be masked); padding COLS stay 0
+    z[n:, :d] = 777.0
+    w = np.zeros(d_pad, np.float32)
+    w[:d] = rng.normal(size=d).astype(np.float32)
+    return jnp.asarray(z), jnp.asarray(w), rng
+
+
+def test_grad_padding_coordinates_stay_zero():
+    z, w, _ = padded_case(100, 9, 128, 16, 0)
+    g = model.full_grad(z, w, jnp.asarray(100, jnp.int32), LAM)
+    assert np.all(np.asarray(g[9:]) == 0.0), "padding coords leaked"
+
+
+def test_padded_grad_equals_unpadded_ref():
+    n, d = 100, 9
+    z, w, _ = padded_case(n, d, 128, 16, 1)
+    g_pad = model.full_grad(z, w, jnp.asarray(n, jnp.int32), LAM)
+    g_ref = ref.grad_ref(z[:n, :d], w[:d], jnp.asarray(n, jnp.int32), LAM)
+    np.testing.assert_allclose(g_pad[:d], g_ref, rtol=1e-4, atol=1e-6)
+
+
+def test_padded_loss_equals_unpadded_ref():
+    n, d = 64, 9
+    z, w, _ = padded_case(n, d, 128, 16, 2)
+    l_pad = model.loss(z, w, jnp.asarray(n, jnp.int32), LAM)
+    l_ref = ref.loss_ref(z[:n, :d], w[:d], jnp.asarray(n, jnp.int32), LAM)
+    np.testing.assert_allclose(float(l_pad), float(l_ref), rtol=1e-5)
+
+
+def test_jit_matches_eager_for_all_entries():
+    """The artifact is the jitted function: jit must not change numerics."""
+    n, d_pad = 80, 16
+    z, w, rng = padded_case(n, 9, 128, d_pad, 3)
+    nv = jnp.asarray(n, jnp.int32)
+    for entry in ("full_grad", "loss"):
+        fn = model.entry_fn(entry)
+        eager = fn(z, w, nv, LAM)
+        jitted = jax.jit(fn)(z, w, nv, LAM)
+        np.testing.assert_allclose(
+            np.asarray(eager), np.asarray(jitted), rtol=1e-6, atol=1e-7
+        )
+    gq = jnp.asarray(rng.normal(size=d_pad).astype(np.float32))
+    gt = jnp.asarray(rng.normal(size=d_pad).astype(np.float32))
+    eager = model.svrg_inner_direction(z, w, w, gq, gt, nv, LAM)
+    jitted = jax.jit(model.svrg_inner_direction)(z, w, w, gq, gt, nv, LAM)
+    np.testing.assert_allclose(np.asarray(eager), np.asarray(jitted), rtol=1e-6, atol=1e-7)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    n=st.integers(1, 120),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_any_shard_size_fits_padded_artifact(n, seed):
+    """Rust picks an artifact with n_pad >= shard size; any n must work."""
+    z, w, _ = padded_case(n, 9, 128, 16, seed)
+    g = model.full_grad(z, w, jnp.asarray(n, jnp.int32), LAM)
+    g_ref = ref.grad_ref(z[:n, :9], w[:9], jnp.asarray(n, jnp.int32), LAM)
+    np.testing.assert_allclose(g[:9], g_ref, rtol=1e-3, atol=1e-4)
+    assert np.all(np.asarray(g[9:]) == 0.0)

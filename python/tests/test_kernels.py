@@ -1,0 +1,146 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+This is the core correctness signal for everything the Rust runtime
+executes — hypothesis sweeps shapes, tile sizes, validity fractions and
+data scales, asserting allclose against the reference.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import logistic as k
+from compile.kernels import ref
+
+LAM = 0.1
+
+
+def make_case(n_pad, d_pad, n_valid, seed, scale=1.0):
+    rng = np.random.default_rng(seed)
+    z = rng.normal(scale=scale, size=(n_pad, d_pad)).astype(np.float32)
+    # poison the padding rows: they must be ignored by construction
+    z[n_valid:] = 1e6
+    w = rng.normal(size=(d_pad,)).astype(np.float32)
+    return jnp.asarray(z), jnp.asarray(w), jnp.asarray(n_valid, jnp.int32)
+
+
+# -- fixed smoke cases -------------------------------------------------------
+
+@pytest.mark.parametrize("n_pad,d_pad,n_valid", [
+    (8, 8, 8),
+    (64, 16, 37),
+    (128, 16, 1),
+    (256, 896, 200),
+    (2048, 16, 2048),
+])
+def test_grad_matches_ref(n_pad, d_pad, n_valid):
+    z, w, nv = make_case(n_pad, d_pad, n_valid, seed=n_pad + d_pad)
+    got = k.grad_partials(z, w, nv).sum(axis=0) / max(n_valid, 1) + 2 * LAM * w
+    want = ref.grad_ref(z, w, nv, LAM)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("n_pad,d_pad,n_valid", [
+    (8, 8, 8),
+    (64, 16, 37),
+    (512, 32, 100),
+])
+def test_loss_matches_ref(n_pad, d_pad, n_valid):
+    z, w, nv = make_case(n_pad, d_pad, n_valid, seed=3)
+    got = k.loss_partials(z, w, nv).sum() / max(n_valid, 1) + LAM * jnp.dot(w, w)
+    want = ref.loss_ref(z, w, nv, LAM)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_fused_matches_separate():
+    z, w, nv = make_case(256, 16, 200, seed=7)
+    gp, lp = k.loss_grad_partials(z, w, nv)
+    np.testing.assert_allclose(gp, k.grad_partials(z, w, nv), rtol=1e-6)
+    np.testing.assert_allclose(lp, k.loss_partials(z, w, nv), rtol=1e-6)
+
+
+# -- tiling invariance -------------------------------------------------------
+
+@pytest.mark.parametrize("tile", [8, 16, 64, 256])
+def test_grad_tile_invariance(tile):
+    """The tile size is a schedule choice — it must not change the numbers."""
+    z, w, nv = make_case(256, 16, 199, seed=11)
+    base = k.grad_partials(z, w, nv, tile_n=256).sum(axis=0)
+    got = k.grad_partials(z, w, nv, tile_n=tile).sum(axis=0)
+    np.testing.assert_allclose(got, base, rtol=1e-4, atol=1e-5)
+
+
+def test_tile_pick_rejects_untileable():
+    with pytest.raises(ValueError):
+        k._pick_tile(0, None)
+
+
+# -- padding semantics -------------------------------------------------------
+
+def test_padding_rows_ignored():
+    """Same valid data, different garbage in the pad rows => same gradient."""
+    z1, w, nv = make_case(128, 16, 50, seed=13)
+    z2 = np.asarray(z1).copy()
+    z2[50:] = -123.456
+    g1 = k.grad_partials(z1, w, nv).sum(axis=0)
+    g2 = k.grad_partials(jnp.asarray(z2), w, nv).sum(axis=0)
+    np.testing.assert_allclose(g1, g2, rtol=0, atol=0)
+
+
+def test_n_valid_zero_gives_zero_partials():
+    z, w, _ = make_case(64, 16, 64, seed=17)
+    g = k.grad_partials(z, w, jnp.asarray(0, jnp.int32)).sum(axis=0)
+    np.testing.assert_allclose(g, np.zeros(16), atol=0)
+
+
+# -- hypothesis sweeps -------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(
+    log_n=st.integers(3, 9),
+    d_pad=st.sampled_from([8, 16, 32, 128]),
+    frac=st.floats(0.01, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+    scale=st.sampled_from([0.01, 1.0, 30.0]),
+)
+def test_grad_hypothesis(log_n, d_pad, frac, seed, scale):
+    n_pad = 2 ** log_n
+    n_valid = max(1, int(frac * n_pad))
+    z, w, nv = make_case(n_pad, d_pad, n_valid, seed=seed, scale=scale)
+    got = k.grad_partials(z, w, nv).sum(axis=0) / n_valid + 2 * LAM * w
+    want = ref.grad_ref(z, w, nv, LAM)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    log_n=st.integers(3, 8),
+    d_pad=st.sampled_from([8, 16, 64]),
+    frac=st.floats(0.01, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_loss_hypothesis(log_n, d_pad, frac, seed):
+    n_pad = 2 ** log_n
+    n_valid = max(1, int(frac * n_pad))
+    z, w, nv = make_case(n_pad, d_pad, n_valid, seed=seed)
+    got = k.loss_partials(z, w, nv).sum() / n_valid + LAM * float(jnp.dot(w, w))
+    want = ref.loss_ref(z, w, nv, LAM)
+    np.testing.assert_allclose(float(got), float(want), rtol=5e-4, atol=5e-4)
+
+
+# -- extreme margins stay finite (stable softplus / sigmoid) -----------------
+
+def test_extreme_margins_finite():
+    z = jnp.asarray(np.full((8, 8), 1e4, np.float32))
+    w = jnp.asarray(np.ones(8, np.float32))
+    nv = jnp.asarray(8, jnp.int32)
+    g = k.grad_partials(z, w, nv).sum(axis=0)
+    l = k.loss_partials(z, w, nv).sum()
+    assert np.isfinite(np.asarray(g)).all()
+    assert np.isfinite(float(l))
+    zneg = -z
+    g2 = k.grad_partials(zneg, w, nv).sum(axis=0)
+    l2 = k.loss_partials(zneg, w, nv).sum()
+    assert np.isfinite(np.asarray(g2)).all()
+    assert np.isfinite(float(l2))

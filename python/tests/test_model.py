@@ -1,0 +1,106 @@
+"""L2 correctness: model entry points, AOT shapes, manifest consistency."""
+
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model, aot
+from compile.kernels import ref
+
+LAM = 0.1
+
+
+def case(n_pad=64, d_pad=16, n_valid=40, seed=0):
+    rng = np.random.default_rng(seed)
+    z = jnp.asarray(rng.normal(size=(n_pad, d_pad)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(d_pad,)).astype(np.float32))
+    return z, w, jnp.asarray(n_valid, jnp.int32)
+
+
+def test_full_grad_vs_ref():
+    z, w, nv = case()
+    np.testing.assert_allclose(
+        model.full_grad(z, w, nv, LAM), ref.grad_ref(z, w, nv, LAM), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_loss_vs_ref():
+    z, w, nv = case(seed=1)
+    np.testing.assert_allclose(
+        float(model.loss(z, w, nv, LAM)), float(ref.loss_ref(z, w, nv, LAM)), rtol=1e-5
+    )
+
+
+def test_loss_grad_fused():
+    z, w, nv = case(seed=2)
+    l, g = model.loss_grad(z, w, nv, LAM)
+    lr, gr = ref.loss_grad_ref(z, w, nv, LAM)
+    np.testing.assert_allclose(float(l), float(lr), rtol=1e-5)
+    np.testing.assert_allclose(g, gr, rtol=1e-5, atol=1e-6)
+
+
+def test_svrg_direction_formula():
+    """v = g(w) - g_snap_q + g_tilde, exactly (Algorithm 1 line 9)."""
+    z, w, nv = case(seed=3)
+    rng = np.random.default_rng(4)
+    gq = jnp.asarray(rng.normal(size=w.shape).astype(np.float32))
+    gt = jnp.asarray(rng.normal(size=w.shape).astype(np.float32))
+    v = model.svrg_inner_direction(z, w, w, gq, gt, nv, LAM)
+    want = ref.grad_ref(z, w, nv, LAM) - gq + gt
+    np.testing.assert_allclose(v, want, rtol=1e-5, atol=1e-6)
+
+
+def test_svrg_direction_zero_residual_at_snapshot():
+    """At w == w_snap with exact (unquantized) snapshot gradient, the
+    variance-reduced direction collapses to g_tilde + ridge-free residual 0:
+    v = g(w) - g(w) + g_tilde = g_tilde."""
+    z, w, nv = case(seed=5)
+    g_snap = model.full_grad(z, w, nv, LAM)
+    gt = jnp.asarray(np.random.default_rng(6).normal(size=w.shape).astype(np.float32))
+    v = model.svrg_inner_direction(z, w, w, g_snap, gt, nv, LAM)
+    np.testing.assert_allclose(v, gt, rtol=1e-4, atol=1e-5)
+
+
+def test_gradient_is_grad_of_loss():
+    """Autodiff cross-check: our analytic gradient == jax.grad of the loss."""
+    z, w, nv = case(n_pad=32, d_pad=8, n_valid=32, seed=7)
+    auto = jax.grad(lambda w_: ref.loss_ref(z, w_, nv, LAM))(w)
+    ours = model.full_grad(z, w, nv, LAM)
+    np.testing.assert_allclose(ours, auto, rtol=1e-4, atol=1e-5)
+
+
+def test_example_args_arity():
+    for entry in model.ENTRIES:
+        args = model.example_args(entry, 64, 16)
+        n = 7 if entry == "svrg_inner_direction" else 4
+        assert len(args) == n
+
+
+@pytest.mark.parametrize("entry", model.ENTRIES)
+def test_lowering_produces_hlo(entry):
+    """Every entry lowers to parseable HLO text at a small shape."""
+    text = aot.lower_entry(entry, 64, 16)
+    assert "HloModule" in text
+    assert "f32[64,16]" in text
+
+
+def test_manifest_matches_artifacts():
+    art = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+    manifest = os.path.join(art, "manifest.tsv")
+    if not os.path.exists(manifest):
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    rows = [
+        line.strip().split("\t")
+        for line in open(manifest)
+        if line.strip() and not line.startswith("#")
+    ]
+    assert len(rows) == len(model.ENTRIES) * len(model.SHAPE_CONFIGS)
+    for entry, shape, n_pad, d_pad, fname in rows:
+        assert entry in model.ENTRIES
+        path = os.path.join(art, fname)
+        assert os.path.exists(path), fname
+        head = open(path).read(200)
+        assert "HloModule" in head

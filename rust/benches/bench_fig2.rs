@@ -1,0 +1,60 @@
+//! Regenerates Fig. 2 (Corollary 6 bounds) and times the sweep.
+
+use std::time::Duration;
+
+use qmsvrg::benchkit::Bencher;
+use qmsvrg::experiments::fig2;
+
+fn main() {
+    println!("== bench_fig2: Corollary 6 sufficient-condition sweeps ==");
+    let fig = fig2::run(20_000, 42);
+    println!(
+        "geometry: mu={:.4} L={:.4} d={} alpha_max={:.4}",
+        fig.geom.mu,
+        fig.geom.l,
+        fig.geom.d,
+        fig.geom.alpha_max()
+    );
+
+    // Fig 2(a): min T vs alpha — print a compact series per curve
+    println!("\n-- Fig 2(a): min epoch size T vs step size alpha --");
+    for c in &fig.vs_alpha {
+        let series: Vec<String> = c
+            .points
+            .iter()
+            .step_by(10)
+            .map(|p| match p.min_t {
+                Some(t) => format!("({:.3},{:.0})", p.x, t),
+                None => format!("({:.3},inf)", p.x),
+            })
+            .collect();
+        println!("{:<28} {}", c.label, series.join(" "));
+    }
+
+    // Fig 2(b): min T vs bits
+    println!("\n-- Fig 2(b): min epoch size T vs bits per dimension (alpha={:.4}) --", fig.alpha_for_b);
+    for c in &fig.vs_bits {
+        let series: Vec<String> = c
+            .points
+            .iter()
+            .map(|p| match p.min_t {
+                Some(t) => format!("({:.0},{:.0})", p.x, t),
+                None => format!("({:.0},inf)", p.x),
+            })
+            .collect();
+        println!("{:<12} {}", c.label, series.join(" "));
+    }
+
+    // paper-shape assertions, reported in the bench log
+    println!("\n-- shape checks --");
+    for (sb, max_alpha, bits, min_t) in fig2::feasibility_summary(&fig.geom) {
+        println!(
+            "sigma_bar={sb}: max feasible alpha (b/d=10) {:.4}, min b/d {:?}, min T {:?}",
+            max_alpha, bits, min_t
+        );
+    }
+
+    let mut b = Bencher::new(Duration::ZERO, Duration::from_millis(500), 1000);
+    b.bench("fig2 full sweep", || fig2::run(2_000, 42).vs_alpha.len());
+    b.finish("bench_fig2");
+}

@@ -1,0 +1,73 @@
+//! Regenerates Fig. 3: the full algorithm suite on the power dataset at
+//! b/d = 3 (panel a) and b/d = 10 (panel b); prints the per-iteration series
+//! the paper plots plus the headline checks, then times one full panel.
+
+use std::time::Duration;
+
+use qmsvrg::benchkit::Bencher;
+use qmsvrg::experiments::fig3::{self, Fig3Params};
+
+fn print_panel(label: &str, fig: &fig3::Fig3) {
+    println!("\n-- {label} (T=8, alpha=0.2, b/d={}) --", fig.params.bits_per_coord);
+    println!(
+        "{:<12} {:>10} {:>12} {:>8} {:>14}",
+        "algorithm", "final_loss", "final_|g|", "F1", "total_bits"
+    );
+    for t in &fig.traces {
+        let p = t.points.last().unwrap();
+        println!(
+            "{:<12} {:>10.6} {:>12.3e} {:>8.4} {:>14}",
+            t.algo, p.loss, p.grad_norm, p.test_f1, p.bits
+        );
+    }
+    // the loss-vs-iteration series (what the paper's subplot (a) shows)
+    println!("loss series (every 5 iters):");
+    for t in &fig.traces {
+        let series: Vec<String> = t
+            .points
+            .iter()
+            .step_by(5)
+            .map(|p| format!("{:.4}", p.loss))
+            .collect();
+        println!("  {:<12} {}", t.algo, series.join(" "));
+    }
+}
+
+fn main() {
+    println!("== bench_fig3: power-dataset convergence under quantization ==");
+    let mut p = Fig3Params::default();
+
+    p.bits_per_coord = 3;
+    let fig_a = fig3::run(&p).unwrap();
+    print_panel("Fig 3a", &fig_a);
+    let (ok, msvrg, qa, qf) = fig3::headline_check(&fig_a, 0.02);
+    println!(
+        "headline @3 bits: M-SVRG={msvrg:.5} QM-SVRG-A+={qa:.5} QM-SVRG-F+={qf:.5} -> {}",
+        if ok { "HOLDS" } else { "VIOLATED" }
+    );
+
+    p.bits_per_coord = 10;
+    let fig_b = fig3::run(&p).unwrap();
+    print_panel("Fig 3b", &fig_b);
+
+    // communication at matched quality: the 95% claim
+    let qa_tr = fig_a.traces.iter().find(|t| t.algo == "QM-SVRG-A+").unwrap();
+    let ms_tr = fig_a.traces.iter().find(|t| t.algo == "M-SVRG").unwrap();
+    println!(
+        "\ncompression at matched convergence: {} vs {} bits -> {:.1}% saved",
+        qa_tr.total_bits(),
+        ms_tr.total_bits(),
+        100.0 * (1.0 - qa_tr.total_bits() as f64 / ms_tr.total_bits() as f64)
+    );
+
+    let mut b = Bencher::new(Duration::ZERO, Duration::from_secs(20), 3);
+    let small = Fig3Params {
+        n_samples: 4000,
+        outer_iters: 25,
+        ..Fig3Params::default()
+    };
+    b.bench("fig3 panel (n=4000, 25 iters, 10 algos)", || {
+        fig3::run(&small).unwrap().traces.len()
+    });
+    b.finish("bench_fig3");
+}

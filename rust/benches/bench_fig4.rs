@@ -1,0 +1,80 @@
+//! Regenerates Fig. 4: MNIST digit-9 convergence at b/d ∈ {7, 10}
+//! (T=15, alpha=0.2) for the full suite; prints the series and times a panel.
+
+use std::time::Duration;
+
+use qmsvrg::benchkit::Bencher;
+use qmsvrg::experiments::fig4::{self, Fig4Params};
+
+fn print_panel(label: &str, fig: &fig4::Fig4) {
+    println!(
+        "\n-- {label} (digit 9, T=15, alpha=0.2, b/d={}) --",
+        fig.params.bits_per_coord
+    );
+    println!(
+        "{:<12} {:>10} {:>12} {:>8} {:>14}",
+        "algorithm", "final_loss", "final_|g|", "F1", "total_bits"
+    );
+    for t in &fig.traces {
+        let p = t.points.last().unwrap();
+        println!(
+            "{:<12} {:>10.6} {:>12.3e} {:>8.4} {:>14}",
+            t.algo, p.loss, p.grad_norm, p.test_f1, p.bits
+        );
+    }
+    println!("loss series (every 5 iters):");
+    for t in &fig.traces {
+        let series: Vec<String> = t
+            .points
+            .iter()
+            .step_by(5)
+            .map(|p| format!("{:.4}", p.loss))
+            .collect();
+        println!("  {:<12} {}", t.algo, series.join(" "));
+    }
+}
+
+fn main() {
+    println!("== bench_fig4: MNIST-like digit-9 convergence (d=784) ==");
+    let base = Fig4Params {
+        n_samples: 6_000,
+        outer_iters: 40,
+        ..Fig4Params::default()
+    };
+
+    for bits in [7u8, 10] {
+        let p = Fig4Params {
+            bits_per_coord: bits,
+            ..base.clone()
+        };
+        let fig = fig4::run(&p).unwrap();
+        print_panel(&format!("Fig 4{}", if bits == 7 { 'a' } else { 'b' }), &fig);
+        // paper shape: adaptive ~ unquantized; fixed-grid worse
+        let get = |name: &str| {
+            fig.traces
+                .iter()
+                .find(|t| t.algo == name)
+                .unwrap()
+                .final_loss()
+        };
+        println!(
+            "shape @{} bits: M-SVRG={:.4}  QM-SVRG-A+={:.4}  QM-SVRG-F+={:.4}  Q-SGD={:.4}",
+            bits,
+            get("M-SVRG"),
+            get("QM-SVRG-A+"),
+            get("QM-SVRG-F+"),
+            get("Q-SGD")
+        );
+    }
+
+    let mut b = Bencher::new(Duration::ZERO, Duration::from_secs(30), 2);
+    let small = Fig4Params {
+        n_samples: 1500,
+        outer_iters: 10,
+        ..Fig4Params::default()
+    };
+    b.bench("fig4 panel (n=1500, 10 iters, 10 algos)", || {
+        fig4::run(&small).unwrap().traces.len()
+    });
+    b.finish("bench_fig4");
+}

@@ -1,0 +1,70 @@
+//! Gradient-computation backends: native Rust vs the AOT JAX/Pallas artifact
+//! through PJRT, at the paper's two workload shapes. This is the worker's
+//! inner-loop cost — the compute half of the compute/communication tradeoff.
+
+use std::path::Path;
+use std::time::Duration;
+
+use qmsvrg::benchkit::Bencher;
+use qmsvrg::data::synthetic::{mnist_like, power_like};
+use qmsvrg::objective::{LogisticRidge, Objective};
+use qmsvrg::runtime::{XlaRuntime, XlaWorkerKernel};
+
+fn main() {
+    let mut b = Bencher::new(
+        Duration::from_millis(200),
+        Duration::from_secs(1),
+        100_000,
+    );
+    println!("== bench_gradient: native vs XLA worker kernels ==");
+
+    // power-like shard (Fig. 3 geometry): 2000 × 9
+    let mut ds = power_like(2000, 1);
+    ds.standardize();
+    let obj = LogisticRidge::new(&ds.x, &ds.y, ds.n, ds.d, 0.1);
+    let w: Vec<f64> = (0..9).map(|j| 0.1 * j as f64).collect();
+    let mut g = vec![0.0; 9];
+    b.bench("native full_grad 2000x9", || {
+        obj.grad(&w, &mut g);
+        g[0]
+    });
+    b.bench("native loss 2000x9", || obj.loss(&w));
+
+    // mnist-like shard (Fig. 4 geometry): 800 × 784
+    let dsm = mnist_like(800, 2).one_vs_all(9.0);
+    let objm = LogisticRidge::new(&dsm.x, &dsm.y, dsm.n, dsm.d, 0.1);
+    let wm: Vec<f64> = (0..784).map(|j| 0.01 * (j % 7) as f64).collect();
+    let mut gm = vec![0.0; 784];
+    b.bench("native full_grad 800x784", || {
+        objm.grad(&wm, &mut gm);
+        gm[0]
+    });
+
+    // XLA path (requires artifacts)
+    match XlaRuntime::load(Path::new("artifacts")) {
+        Ok(rt) => {
+            let mut z = vec![0.0f64; ds.n * ds.d];
+            for i in 0..ds.n {
+                z[i * ds.d..(i + 1) * ds.d].copy_from_slice(obj.margin_row(i));
+            }
+            let kernel = XlaWorkerKernel::new(&rt, "full_grad", &z, ds.n, ds.d, 0.1).unwrap();
+            b.bench("xla full_grad 2000x9 (resident Z)", || {
+                kernel.grad(&w, &mut g).unwrap();
+                g[0]
+            });
+
+            let mut zm = vec![0.0f64; dsm.n * dsm.d];
+            for i in 0..dsm.n {
+                zm[i * dsm.d..(i + 1) * dsm.d].copy_from_slice(objm.margin_row(i));
+            }
+            let kernelm =
+                XlaWorkerKernel::new(&rt, "full_grad", &zm, dsm.n, dsm.d, 0.1).unwrap();
+            b.bench("xla full_grad 800x784 (resident Z)", || {
+                kernelm.grad(&wm, &mut gm).unwrap();
+                gm[0]
+            });
+        }
+        Err(e) => println!("(xla benches skipped: {e:#})"),
+    }
+    b.finish("bench_gradient");
+}

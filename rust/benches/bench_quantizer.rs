@@ -1,0 +1,50 @@
+//! Microbenchmarks of the quantization hot path: URQ, codec pack/unpack,
+//! and the full channel round-trip at the paper's dimensions (d=9, d=784).
+
+use std::time::Duration;
+
+use qmsvrg::benchkit::Bencher;
+use qmsvrg::quant::{dequantize, pack_indices, quantize_urq, unpack_indices, Grid};
+use qmsvrg::rng::Xoshiro256pp;
+
+fn main() {
+    let mut b = Bencher::new(
+        Duration::from_millis(100),
+        Duration::from_millis(800),
+        1_000_000,
+    );
+    println!("== bench_quantizer: URQ + codec hot path ==");
+
+    for (d, bits) in [(9usize, 3u8), (9, 10), (784, 7), (784, 10)] {
+        let grid = Grid::uniform(vec![0.0; d], 2.0, bits).unwrap();
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let w: Vec<f64> = (0..d).map(|i| (i as f64 * 0.37).sin() * 1.8).collect();
+
+        b.bench(&format!("urq_quantize d={d} b/d={bits}"), || {
+            quantize_urq(&w, &grid, &mut rng).0
+        });
+
+        let (idx, _) = quantize_urq(&w, &grid, &mut rng);
+        b.bench(&format!("pack d={d} b/d={bits}"), || {
+            pack_indices(&idx, grid.bits()).unwrap()
+        });
+
+        let payload = pack_indices(&idx, grid.bits()).unwrap();
+        b.bench(&format!("unpack d={d} b/d={bits}"), || {
+            unpack_indices(&payload.bytes, grid.bits()).unwrap()
+        });
+
+        b.bench(&format!("dequantize d={d} b/d={bits}"), || {
+            dequantize(&idx, &grid)
+        });
+
+        // the full wire round-trip one inner iteration pays per vector
+        b.bench(&format!("roundtrip d={d} b/d={bits}"), || {
+            let (idx, _) = quantize_urq(&w, &grid, &mut rng);
+            let p = pack_indices(&idx, grid.bits()).unwrap();
+            let back = unpack_indices(&p.bytes, grid.bits()).unwrap();
+            dequantize(&back, &grid)
+        });
+    }
+    b.finish("bench_quantizer");
+}

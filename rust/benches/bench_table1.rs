@@ -1,0 +1,65 @@
+//! Regenerates Table 1: mean F1 over the 10 MNIST one-vs-all classifiers
+//! for {GD, M-SVRG, Q-GD, Q-SGD, Q-SAG, QM-SVRG-F+, QM-SVRG-A+} at
+//! b/d ∈ {7, 10}, and checks the paper's ordering claims.
+
+use std::time::Duration;
+
+use qmsvrg::benchkit::Bencher;
+use qmsvrg::experiments::table1::{self, col, Table1Params, TABLE1_ALGOS};
+
+fn main() {
+    println!("== bench_table1: MNIST mean F1 (10 one-vs-all classifiers) ==");
+    let p = Table1Params {
+        n_samples: 5_000,
+        outer_iters: 30,
+        ..Table1Params::default()
+    };
+    let t = table1::run(&p).unwrap();
+
+    // render the paper's table
+    print!("{:>4}", "b/d");
+    for a in TABLE1_ALGOS {
+        print!(" {:>11}", a);
+    }
+    println!();
+    for row in &t.rows {
+        print!("{:>4}", row.bits_per_coord);
+        for f in &row.mean_f1 {
+            print!(" {:>11.3}", f);
+        }
+        println!();
+    }
+    println!("(paper, real MNIST: b/d=7: GD .775 M-SVRG .841 Q-GD .127 Q-SGD .101 \
+              Q-SAG .130 Q-F .139 Q-A .806; b/d=10: .780 .841 .248 .402 .168 .280 .838)");
+
+    // ordering claims that must carry over to our substitute dataset
+    println!("\n-- shape checks --");
+    for row in &t.rows {
+        let f1 = &row.mean_f1;
+        let qa = f1[col("qm-svrg-a+")];
+        let msvrg = f1[col("m-svrg")];
+        let worst_fixed = ["q-gd", "q-sgd", "q-sag", "qm-svrg-f+"]
+            .iter()
+            .map(|a| f1[col(a)])
+            .fold(f64::NEG_INFINITY, f64::max);
+        println!(
+            "b/d={}: QM-SVRG-A+={qa:.3} vs M-SVRG={msvrg:.3} (gap {:+.3}); \
+             best fixed-grid quantized = {worst_fixed:.3} -> adaptive wins: {}",
+            row.bits_per_coord,
+            qa - msvrg,
+            qa > worst_fixed
+        );
+    }
+
+    let mut b = Bencher::new(Duration::ZERO, Duration::from_secs(30), 2);
+    let small = Table1Params {
+        n_samples: 1000,
+        outer_iters: 8,
+        bits: vec![7],
+        ..Table1Params::default()
+    };
+    b.bench("table1 (n=1000, 8 iters, 7 algos x 10 digits)", || {
+        table1::run(&small).unwrap().rows.len()
+    });
+    b.finish("bench_table1");
+}

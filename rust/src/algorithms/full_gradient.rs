@@ -1,0 +1,197 @@
+//! GD and Q-GD over the sharded problem.
+//!
+//! Per iteration: the master broadcasts the iterate (64d bits, or `b_w`
+//! quantized), every worker returns its node gradient (64d each, or `b_g`
+//! quantized), and the master steps on the mean — the `GD = 64d(1+N)` /
+//! `Q-GD = b_w + b_g·N` accounting rows of §4.1.
+
+use anyhow::Result;
+
+use super::channel::{QuantChannel, QuantOpts};
+use super::sharded::ShardedObjective;
+use crate::linalg;
+use crate::rng::Xoshiro256pp;
+
+/// Options for the GD family.
+#[derive(Clone, Debug)]
+pub struct GdOpts {
+    pub step: f64,
+    pub iters: usize,
+    /// `Some` = Q-GD with this quantization; `None` = exact GD.
+    pub quant: Option<QuantOpts>,
+}
+
+/// Per-iteration observer: `(iteration, iterate, grad_norm, cumulative_bits)`.
+pub type EvalFn<'a> = &'a mut dyn FnMut(usize, &[f64], f64, u64);
+
+/// Run (Q-)GD from the origin; returns the final iterate.
+pub fn run_gd(
+    prob: &ShardedObjective,
+    opts: &GdOpts,
+    rng: Xoshiro256pp,
+    eval: EvalFn,
+) -> Result<Vec<f64>> {
+    let d = prob.dim();
+    let n = prob.n_workers();
+    let mut ch = opts
+        .quant
+        .clone()
+        .map(|q| QuantChannel::new(q, d, n, rng));
+
+    let mut w = vec![0.0; d];
+    let mut g_node = vec![0.0; d];
+    let mut g_mean = vec![0.0; d];
+    let mut g_exact = vec![0.0; d];
+
+    for k in 0..opts.iters {
+        // report on the *true* iterate before the step
+        prob.full_grad(&w, &mut g_exact);
+        let bits = ch.as_ref().map(|c| c.ledger.total_bits()).unwrap_or_else(|| {
+            // exact GD bits: 64d(1+N) per completed iteration
+            (64 * d as u64 * (1 + n as u64)) * k as u64
+        });
+        eval(k, &w, linalg::nrm2(&g_exact), bits);
+
+        // downlink: broadcast the iterate
+        let w_bcast = match ch.as_mut() {
+            Some(c) => {
+                c.set_epoch(&w, linalg::nrm2(&g_exact));
+                c.send_w(&w)?
+            }
+            None => w.clone(),
+        };
+
+        // uplink: every worker returns its node gradient at the broadcast
+        for o in g_mean.iter_mut() {
+            *o = 0.0;
+        }
+        for i in 0..n {
+            prob.node_grad(i, &w_bcast, &mut g_node);
+            let g_rx = match ch.as_mut() {
+                Some(c) => c.send_g(i, &g_node)?,
+                None => g_node.clone(),
+            };
+            linalg::axpy(1.0 / n as f64, &g_rx, &mut g_mean);
+        }
+
+        linalg::axpy(-opts.step, &g_mean, &mut w);
+    }
+    prob.full_grad(&w, &mut g_exact);
+    let bits = ch
+        .as_ref()
+        .map(|c| c.ledger.total_bits())
+        .unwrap_or((64 * d as u64 * (1 + n as u64)) * opts.iters as u64);
+    eval(opts.iters, &w, linalg::nrm2(&g_exact), bits);
+    Ok(w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::power_like;
+    use crate::quant::GridPolicy;
+
+    fn prob() -> ShardedObjective {
+        let mut ds = power_like(400, 21);
+        ds.standardize();
+        ShardedObjective::new(&ds, 4, 0.1)
+    }
+
+    #[test]
+    fn gd_converges_to_stationarity() {
+        let p = prob();
+        let opts = GdOpts {
+            step: 1.0 / p.l_smooth(),
+            iters: 400,
+            quant: None,
+        };
+        let mut last_gn = f64::NAN;
+        let w = run_gd(
+            &p,
+            &opts,
+            Xoshiro256pp::seed_from_u64(1),
+            &mut |_, _, gn, _| last_gn = gn,
+        )
+        .unwrap();
+        assert!(last_gn < 1e-4, "grad norm {last_gn}");
+        assert!(crate::linalg::nrm2(&w) > 0.0);
+    }
+
+    #[test]
+    fn gd_loss_monotone_with_small_step() {
+        let p = prob();
+        let opts = GdOpts {
+            step: 0.5 / p.l_smooth(),
+            iters: 60,
+            quant: None,
+        };
+        let mut losses = Vec::new();
+        run_gd(&p, &opts, Xoshiro256pp::seed_from_u64(2), &mut |_, w, _, _| {
+            losses.push(p.loss(w));
+        })
+        .unwrap();
+        for pair in losses.windows(2) {
+            assert!(pair[1] <= pair[0] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn gd_bit_accounting_matches_formula() {
+        let p = prob();
+        let opts = GdOpts {
+            step: 0.1,
+            iters: 5,
+            quant: None,
+        };
+        let mut final_bits = 0;
+        run_gd(&p, &opts, Xoshiro256pp::seed_from_u64(3), &mut |_, _, _, b| {
+            final_bits = b;
+        })
+        .unwrap();
+        assert_eq!(final_bits, 64 * 9 * 5 * 5); // 64d(1+N)·iters, N=4
+    }
+
+    #[test]
+    fn qgd_measured_bits_match_formula() {
+        let p = prob();
+        let bits = 7u8;
+        let opts = GdOpts {
+            step: 0.1,
+            iters: 6,
+            quant: Some(QuantOpts {
+                bits,
+                policy: GridPolicy::Fixed { radius: 8.0 },
+                plus: false,
+            }),
+        };
+        let mut final_bits = 0;
+        run_gd(&p, &opts, Xoshiro256pp::seed_from_u64(4), &mut |_, _, _, b| {
+            final_bits = b;
+        })
+        .unwrap();
+        // per iter: b_w + b_g·N = 7·9·(1+4) = 315
+        assert_eq!(final_bits, 315 * 6);
+    }
+
+    #[test]
+    fn qgd_with_many_bits_tracks_gd() {
+        let p = prob();
+        let step = 0.5 / p.l_smooth();
+        let run = |quant| {
+            let opts = GdOpts {
+                step,
+                iters: 100,
+                quant,
+            };
+            run_gd(&p, &opts, Xoshiro256pp::seed_from_u64(5), &mut |_, _, _, _| {}).unwrap()
+        };
+        let w_exact = run(None);
+        let w_q = run(Some(QuantOpts {
+            bits: 16,
+            policy: GridPolicy::Fixed { radius: 16.0 },
+            plus: false,
+        }));
+        let dist = crate::linalg::linf_dist(&w_exact, &w_q);
+        assert!(dist < 1e-2, "dist={dist}");
+    }
+}

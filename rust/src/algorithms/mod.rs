@@ -1,0 +1,202 @@
+//! The paper's algorithm suite.
+//!
+//! Centralized *simulation* of the distributed algorithms: the master/worker
+//! message exchange is folded into a loop, but every vector that would cross
+//! a link goes through the real quantizer + wire codec and is metered in a
+//! [`crate::metrics::CommLedger`] — so convergence traces and measured bits
+//! are exactly those of the message-passing runtime in [`crate::coordinator`]
+//! (the integration tests assert this equivalence).
+//!
+//! | [`SolverKind`]    | family | quantized | grid      | memory unit |
+//! |-------------------|--------|-----------|-----------|-------------|
+//! | `Gd`              | GD     | no        | –         | –           |
+//! | `QGd`             | GD     | yes       | fixed     | –           |
+//! | `Sgd` / `QSgd`    | SGD    | per kind  | fixed     | –           |
+//! | `Sag` / `QSag`    | SAG    | per kind  | fixed     | –           |
+//! | `Svrg`            | SVRG   | no        | –         | no          |
+//! | `MSvrg`           | SVRG   | no        | –         | yes         |
+//! | `QmSvrgF[Plus]`   | SVRG   | yes       | fixed     | yes         |
+//! | `QmSvrgA[Plus]`   | SVRG   | yes       | adaptive  | yes         |
+//!
+//! `Plus` variants additionally quantize the inner-loop stochastic gradient
+//! `g_ξ(w_{k,t-1})` (§4.1's QM-SVRG-F+/A+).
+
+pub mod channel;
+pub mod full_gradient;
+pub mod sharded;
+pub mod stochastic;
+pub mod svrg;
+
+pub use channel::{QuantChannel, QuantOpts};
+pub use sharded::ShardedObjective;
+
+use anyhow::{bail, Result};
+
+use crate::metrics::AlgoBits;
+
+/// Every algorithm in the paper's benchmark suite (§4.1 legend names).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SolverKind {
+    Gd,
+    Sgd,
+    Sag,
+    Svrg,
+    MSvrg,
+    QGd,
+    QSgd,
+    QSag,
+    QmSvrgF,
+    QmSvrgA,
+    QmSvrgFPlus,
+    QmSvrgAPlus,
+}
+
+impl SolverKind {
+    pub const ALL: [SolverKind; 12] = [
+        SolverKind::Gd,
+        SolverKind::Sgd,
+        SolverKind::Sag,
+        SolverKind::Svrg,
+        SolverKind::MSvrg,
+        SolverKind::QGd,
+        SolverKind::QSgd,
+        SolverKind::QSag,
+        SolverKind::QmSvrgF,
+        SolverKind::QmSvrgA,
+        SolverKind::QmSvrgFPlus,
+        SolverKind::QmSvrgAPlus,
+    ];
+
+    /// Paper legend name.
+    pub fn name(&self) -> &'static str {
+        self.bits_kind().name()
+    }
+
+    /// The closed-form bit-accounting twin in [`crate::metrics::comm`].
+    pub fn bits_kind(&self) -> AlgoBits {
+        match self {
+            SolverKind::Gd => AlgoBits::Gd,
+            SolverKind::Sgd => AlgoBits::Sgd,
+            SolverKind::Sag => AlgoBits::Sag,
+            SolverKind::Svrg => AlgoBits::Svrg,
+            SolverKind::MSvrg => AlgoBits::MSvrg,
+            SolverKind::QGd => AlgoBits::QGd,
+            SolverKind::QSgd => AlgoBits::QSgd,
+            SolverKind::QSag => AlgoBits::QSag,
+            SolverKind::QmSvrgF => AlgoBits::QmSvrgF,
+            SolverKind::QmSvrgA => AlgoBits::QmSvrgA,
+            SolverKind::QmSvrgFPlus => AlgoBits::QmSvrgFPlus,
+            SolverKind::QmSvrgAPlus => AlgoBits::QmSvrgAPlus,
+        }
+    }
+
+    pub fn is_quantized(&self) -> bool {
+        matches!(
+            self,
+            SolverKind::QGd
+                | SolverKind::QSgd
+                | SolverKind::QSag
+                | SolverKind::QmSvrgF
+                | SolverKind::QmSvrgA
+                | SolverKind::QmSvrgFPlus
+                | SolverKind::QmSvrgAPlus
+        )
+    }
+
+    pub fn is_svrg_family(&self) -> bool {
+        matches!(
+            self,
+            SolverKind::Svrg
+                | SolverKind::MSvrg
+                | SolverKind::QmSvrgF
+                | SolverKind::QmSvrgA
+                | SolverKind::QmSvrgFPlus
+                | SolverKind::QmSvrgAPlus
+        )
+    }
+
+    /// Adaptive-grid variants (QM-SVRG-A / A+).
+    pub fn is_adaptive(&self) -> bool {
+        matches!(self, SolverKind::QmSvrgA | SolverKind::QmSvrgAPlus)
+    }
+
+    /// "+" variants: the inner-loop stochastic gradient is quantized too.
+    pub fn is_plus(&self) -> bool {
+        matches!(self, SolverKind::QmSvrgFPlus | SolverKind::QmSvrgAPlus)
+    }
+
+    /// The memory-unit rejection rule (M-SVRG and everything built on it).
+    pub fn has_memory_unit(&self) -> bool {
+        matches!(
+            self,
+            SolverKind::MSvrg
+                | SolverKind::QmSvrgF
+                | SolverKind::QmSvrgA
+                | SolverKind::QmSvrgFPlus
+                | SolverKind::QmSvrgAPlus
+        )
+    }
+}
+
+impl std::str::FromStr for SolverKind {
+    type Err = anyhow::Error;
+
+    /// Parse the CLI/legend spelling, case-insensitive: `gd`, `sgd`, `sag`,
+    /// `svrg`, `m-svrg`, `q-gd`, `q-sgd`, `q-sag`, `qm-svrg-f`, `qm-svrg-a`,
+    /// `qm-svrg-f+`, `qm-svrg-a+`.
+    fn from_str(s: &str) -> Result<Self> {
+        let k = s.to_ascii_lowercase();
+        Ok(match k.as_str() {
+            "gd" => SolverKind::Gd,
+            "sgd" => SolverKind::Sgd,
+            "sag" => SolverKind::Sag,
+            "svrg" => SolverKind::Svrg,
+            "m-svrg" | "msvrg" => SolverKind::MSvrg,
+            "q-gd" | "qgd" => SolverKind::QGd,
+            "q-sgd" | "qsgd" => SolverKind::QSgd,
+            "q-sag" | "qsag" => SolverKind::QSag,
+            "qm-svrg-f" | "qmsvrgf" => SolverKind::QmSvrgF,
+            "qm-svrg-a" | "qmsvrga" => SolverKind::QmSvrgA,
+            "qm-svrg-f+" | "qmsvrgf+" | "qm-svrg-fplus" => SolverKind::QmSvrgFPlus,
+            "qm-svrg-a+" | "qmsvrga+" | "qm-svrg-aplus" => SolverKind::QmSvrgAPlus,
+            other => bail!("unknown algorithm {other:?}"),
+        })
+    }
+}
+
+/// Marker trait namespace: re-export the runner entry points under one name
+/// so `prelude` users see a single surface.
+pub struct Algorithm;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_legend_names() {
+        for kind in SolverKind::ALL {
+            let name = kind.name();
+            let parsed: SolverKind = name.parse().unwrap();
+            assert_eq!(parsed, kind, "roundtrip {name}");
+        }
+        assert!("adam".parse::<SolverKind>().is_err());
+    }
+
+    #[test]
+    fn classification_flags_consistent() {
+        use SolverKind::*;
+        assert!(QmSvrgAPlus.is_quantized());
+        assert!(QmSvrgAPlus.is_adaptive());
+        assert!(QmSvrgAPlus.is_plus());
+        assert!(QmSvrgAPlus.has_memory_unit());
+        assert!(QmSvrgF.is_quantized() && !QmSvrgF.is_adaptive() && !QmSvrgF.is_plus());
+        assert!(!Svrg.has_memory_unit() && MSvrg.has_memory_unit());
+        assert!(!Gd.is_quantized() && QGd.is_quantized());
+        for k in SolverKind::ALL {
+            if k.is_adaptive() || k.is_plus() {
+                assert!(k.is_svrg_family());
+                assert!(k.is_quantized());
+            }
+        }
+    }
+}

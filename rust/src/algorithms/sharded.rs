@@ -1,0 +1,180 @@
+//! The distributed problem view: a dataset partitioned over N workers,
+//! `f(w) = (1/N) Σ_i f_i(w)` with `f_i` the node-level mean (paper eq. 1).
+
+use crate::data::Dataset;
+use crate::linalg;
+use crate::objective::{LogisticRidge, Objective};
+
+/// A logistic-ridge problem sharded across N workers.
+pub struct ShardedObjective {
+    shards: Vec<LogisticRidge>,
+    d: usize,
+    lambda: f64,
+    mu: f64,
+    l_smooth: f64,
+}
+
+impl ShardedObjective {
+    /// Shard `ds` contiguously over `n_workers` nodes.
+    pub fn new(ds: &Dataset, n_workers: usize, lambda: f64) -> Self {
+        let shards: Vec<LogisticRidge> = ds
+            .shard(n_workers)
+            .into_iter()
+            .map(|s| LogisticRidge::new(&s.x, &s.y, s.n, s.d, lambda))
+            .collect();
+        // Node gradients g_i are L_i-Lipschitz; the worst node bounds the
+        // mixture. μ = 2λ from the ridge term, identical on every node.
+        let l_smooth = shards
+            .iter()
+            .map(|s| s.l_smooth())
+            .fold(0.0f64, f64::max);
+        Self {
+            d: ds.d,
+            lambda,
+            mu: 2.0 * lambda,
+            l_smooth,
+            shards,
+        }
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    #[inline]
+    pub fn n_workers(&self) -> usize {
+        self.shards.len()
+    }
+
+    #[inline]
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    #[inline]
+    pub fn mu(&self) -> f64 {
+        self.mu
+    }
+
+    #[inline]
+    pub fn l_smooth(&self) -> f64 {
+        self.l_smooth
+    }
+
+    #[inline]
+    pub fn shard(&self, i: usize) -> &LogisticRidge {
+        &self.shards[i]
+    }
+
+    /// Node gradient `g_i(w)` into `out`.
+    pub fn node_grad(&self, i: usize, w: &[f64], out: &mut [f64]) {
+        self.shards[i].grad(w, out);
+    }
+
+    /// Global gradient `g(w) = (1/N) Σ g_i(w)` into `out`.
+    pub fn full_grad(&self, w: &[f64], out: &mut [f64]) {
+        let mut tmp = vec![0.0; self.d];
+        for o in out.iter_mut() {
+            *o = 0.0;
+        }
+        let inv_n = 1.0 / self.shards.len() as f64;
+        for s in &self.shards {
+            s.grad(w, &mut tmp);
+            linalg::axpy(inv_n, &tmp, out);
+        }
+    }
+
+    /// Global loss `f(w) = (1/N) Σ f_i(w)`.
+    pub fn loss(&self, w: &[f64]) -> f64 {
+        self.shards.iter().map(|s| s.loss(w)).sum::<f64>() / self.shards.len() as f64
+    }
+
+    /// Reference minimizer by long full-gradient descent (used by the
+    /// experiment drivers to plot `f(w_k) − f*`).
+    pub fn solve_reference(&self, iters: usize) -> Vec<f64> {
+        let mut w = vec![0.0; self.d];
+        let mut g = vec![0.0; self.d];
+        let step = 1.0 / self.l_smooth;
+        for _ in 0..iters {
+            self.full_grad(&w, &mut g);
+            if linalg::nrm2(&g) < 1e-14 {
+                break;
+            }
+            linalg::axpy(-step, &g, &mut w);
+        }
+        w
+    }
+
+    /// The theory-module geometry of this instance.
+    pub fn geometry(&self) -> crate::theory::Geometry {
+        crate::theory::Geometry::new(self.mu, self.l_smooth, self.d)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::power_like;
+
+    fn problem() -> (Dataset, ShardedObjective) {
+        let mut ds = power_like(600, 11);
+        ds.standardize();
+        let sharded = ShardedObjective::new(&ds, 4, 0.1);
+        (ds, sharded)
+    }
+
+    #[test]
+    fn shard_count_and_dims() {
+        let (_, p) = problem();
+        assert_eq!(p.n_workers(), 4);
+        assert_eq!(p.dim(), 9);
+        assert_eq!(p.shard(0).num_samples(), 150);
+    }
+
+    #[test]
+    fn node_grads_average_to_full() {
+        let (_, p) = problem();
+        let w: Vec<f64> = (0..9).map(|i| 0.1 * i as f64 - 0.4).collect();
+        let mut acc = vec![0.0; 9];
+        let mut tmp = vec![0.0; 9];
+        for i in 0..4 {
+            p.node_grad(i, &w, &mut tmp);
+            linalg::axpy(0.25, &tmp, &mut acc);
+        }
+        let mut full = vec![0.0; 9];
+        p.full_grad(&w, &mut full);
+        assert!(linalg::linf_dist(&acc, &full) < 1e-14);
+    }
+
+    #[test]
+    fn equal_shards_match_pooled_objective() {
+        // with equal shard sizes, mean-of-node-means == pooled sample mean
+        let (ds, p) = problem();
+        let pooled = LogisticRidge::new(&ds.x, &ds.y, ds.n, ds.d, 0.1);
+        let w = vec![0.05; 9];
+        assert!((p.loss(&w) - pooled.loss(&w)).abs() < 1e-12);
+        let mut g1 = vec![0.0; 9];
+        p.full_grad(&w, &mut g1);
+        let g2 = pooled.grad_vec(&w);
+        assert!(linalg::linf_dist(&g1, &g2) < 1e-12);
+    }
+
+    #[test]
+    fn reference_solution_has_tiny_gradient() {
+        let (_, p) = problem();
+        let w_star = p.solve_reference(20_000);
+        let mut g = vec![0.0; 9];
+        p.full_grad(&w_star, &mut g);
+        assert!(linalg::nrm2(&g) < 1e-9, "|g|={}", linalg::nrm2(&g));
+    }
+
+    #[test]
+    fn l_smooth_upper_bounds_every_shard() {
+        let (_, p) = problem();
+        for i in 0..p.n_workers() {
+            assert!(p.shard(i).l_smooth() <= p.l_smooth() + 1e-15);
+        }
+        assert!(p.mu() <= p.l_smooth());
+    }
+}

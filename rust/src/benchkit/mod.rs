@@ -1,0 +1,185 @@
+//! Measurement harness for the `cargo bench` targets (the offline registry
+//! has no `criterion`, so we carry our own): warmup, timed iterations,
+//! robust statistics, and a uniform report format that `bench_output.txt`
+//! captures.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics of one benchmark.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iterations: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    /// Nanoseconds per iteration (median).
+    pub fn ns_per_iter(&self) -> f64 {
+        self.median.as_nanos() as f64
+    }
+
+    /// Throughput in ops/sec implied by the median.
+    pub fn ops_per_sec(&self) -> f64 {
+        1e9 / self.ns_per_iter().max(1.0)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10} iters  median {:>12}  mean {:>12}  p95 {:>12}  [{} .. {}]",
+            self.name,
+            self.iterations,
+            fmt_dur(self.median),
+            fmt_dur(self.mean),
+            fmt_dur(self.p95),
+            fmt_dur(self.min),
+            fmt_dur(self.max),
+        )
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos();
+    if ns < 1_000 {
+        format!("{ns}ns")
+    } else if ns < 1_000_000 {
+        format!("{:.2}us", ns as f64 / 1e3)
+    } else if ns < 1_000_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else {
+        format!("{:.3}s", ns as f64 / 1e9)
+    }
+}
+
+/// Benchmark runner with a wall-clock budget per benchmark.
+pub struct Bencher {
+    /// Warmup budget before measurement starts.
+    pub warmup: Duration,
+    /// Measurement budget.
+    pub budget: Duration,
+    /// Hard cap on measured iterations (useful for slow end-to-end runs).
+    pub max_iters: usize,
+    results: Vec<BenchStats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            max_iters: 100_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: Duration, budget: Duration, max_iters: usize) -> Self {
+        Self {
+            warmup,
+            budget,
+            max_iters,
+            results: Vec::new(),
+        }
+    }
+
+    /// Fast preset for end-to-end benches (few, slow iterations).
+    pub fn end_to_end() -> Self {
+        Self::new(Duration::ZERO, Duration::from_secs(10), 5)
+    }
+
+    /// Measure `f`, which must do one unit of work per call. The closure's
+    /// return value is passed through `std::hint::black_box` so LLVM cannot
+    /// elide the work.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchStats {
+        // warmup
+        let w0 = Instant::now();
+        while w0.elapsed() < self.warmup {
+            std::hint::black_box(f());
+        }
+        // measure
+        let mut samples: Vec<Duration> = Vec::new();
+        let b0 = Instant::now();
+        while b0.elapsed() < self.budget && samples.len() < self.max_iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        if samples.is_empty() {
+            // budget was zero or the first call exceeded it: take one sample
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let n = samples.len();
+        let sum: Duration = samples.iter().sum();
+        let stats = BenchStats {
+            name: name.to_string(),
+            iterations: n,
+            mean: sum / n as u32,
+            median: samples[n / 2],
+            p95: samples[(n as f64 * 0.95) as usize % n.max(1)],
+            min: samples[0],
+            max: samples[n - 1],
+        };
+        println!("{}", stats.report());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+
+    /// Print a closing summary (called at the end of each bench binary).
+    pub fn finish(&self, title: &str) {
+        println!("\n== {title}: {} benchmarks ==", self.results.len());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let mut b = Bencher::new(Duration::ZERO, Duration::from_millis(50), 10_000);
+        let stats = b.bench("noop-ish", || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(stats.iterations > 10);
+        assert!(stats.min <= stats.median);
+        assert!(stats.median <= stats.max);
+        assert!(stats.ops_per_sec() > 1000.0);
+    }
+
+    #[test]
+    fn bench_handles_tiny_budget() {
+        let mut b = Bencher::new(Duration::ZERO, Duration::ZERO, 10);
+        let stats = b.bench("one-shot", || 42);
+        assert_eq!(stats.iterations, 1);
+    }
+
+    #[test]
+    fn max_iters_caps_samples() {
+        let mut b = Bencher::new(Duration::ZERO, Duration::from_secs(5), 3);
+        let stats = b.bench("capped", || 1 + 1);
+        assert_eq!(stats.iterations, 3);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500ns");
+        assert_eq!(fmt_dur(Duration::from_micros(1500)), "1.50ms");
+        assert_eq!(fmt_dur(Duration::from_millis(2500)), "2.500s");
+    }
+}

@@ -1,0 +1,164 @@
+//! Command-line interface (no `clap` offline; a small hand-rolled parser).
+//!
+//! ```text
+//! qmsvrg train [--algorithm qm-svrg-a+] [--dataset power|mnist|<file>] ...
+//! qmsvrg experiment fig2|fig3|fig4|table1 [--bits N] [--samples N] [--out DIR]
+//! qmsvrg worker --connect HOST:PORT ...     (TCP worker for distributed runs)
+//! qmsvrg info                               (artifact + geometry report)
+//! ```
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line: subcommand + `--key value` flags.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. Flags are `--key value` or `--key=value`;
+    /// bare `--key` is treated as `true`.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut it = argv.into_iter().peekable();
+        let mut args = Args {
+            command: it.next().unwrap_or_else(|| "help".to_string()),
+            ..Args::default()
+        };
+        while let Some(tok) = it.next() {
+            if let Some(key) = tok.strip_prefix("--") {
+                if key.is_empty() {
+                    bail!("empty flag name");
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // value is the next token unless it is another flag
+                    let take_next = it
+                        .peek()
+                        .map(|n| !n.starts_with("--"))
+                        .unwrap_or(false);
+                    let v = if take_next {
+                        it.next().unwrap()
+                    } else {
+                        "true".to_string()
+                    };
+                    args.flags.insert(key.to_string(), v);
+                }
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            Some(v) => v.parse().with_context(|| format!("--{key} {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    /// Error if any flag was never consumed by the command (typo guard).
+    pub fn reject_unknown(&self, known: &[&str]) -> Result<()> {
+        for k in self.flags.keys() {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown flag --{k} (known: {})", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+pub const USAGE: &str = "\
+qmsvrg — communication-efficient variance-reduced SGD (QM-SVRG)
+
+USAGE:
+  qmsvrg train       [--config FILE.toml] [--algorithm A]
+                     [--dataset power|mnist|PATH] [--samples N]
+                     [--workers N] [--epoch-len T] [--iters K] [--step A]
+                     [--bits B] [--lambda L] [--seed S] [--backend native|xla]
+                     [--out DIR]
+  qmsvrg experiment  fig2|fig3|fig4|table1|bounds [--bits B] [--samples N]
+                     [--iters K] [--seed S] [--out DIR]
+  qmsvrg worker      --connect HOST:PORT --shard-file PATH [--bits B] ...
+  qmsvrg info        [--artifacts DIR]
+  qmsvrg help
+
+Algorithms: gd sgd sag svrg m-svrg q-gd q-sgd q-sag
+            qm-svrg-f qm-svrg-a qm-svrg-f+ qm-svrg-a+
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = parse("train --algorithm qm-svrg-a+ --bits 3 --samples 1000");
+        assert_eq!(a.command, "train");
+        assert_eq!(a.get("algorithm"), Some("qm-svrg-a+"));
+        assert_eq!(a.get_usize("bits", 0).unwrap(), 3);
+        assert_eq!(a.get_usize("samples", 0).unwrap(), 1000);
+        assert_eq!(a.get_usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn equals_form_and_bool_flags() {
+        let a = parse("experiment fig3 --bits=10 --verbose --seed 5");
+        assert_eq!(a.command, "experiment");
+        assert_eq!(a.positional, vec!["fig3"]);
+        assert_eq!(a.get("bits"), Some("10"));
+        assert_eq!(a.get("verbose"), Some("true"));
+        assert_eq!(a.get_u64("seed", 0).unwrap(), 5);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        let a = parse("train --stpe 0.1");
+        assert!(a.reject_unknown(&["step"]).is_err());
+        let b = parse("train --step 0.1");
+        assert!(b.reject_unknown(&["step"]).is_ok());
+    }
+
+    #[test]
+    fn bad_numeric_value_is_an_error() {
+        let a = parse("train --bits three");
+        assert!(a.get_usize("bits", 0).is_err());
+    }
+
+    #[test]
+    fn empty_argv_gives_help() {
+        let a = Args::parse(Vec::<String>::new()).unwrap();
+        assert_eq!(a.command, "help");
+    }
+}

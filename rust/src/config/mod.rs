@@ -1,0 +1,193 @@
+//! Experiment configuration: a TOML-subset parser (no `serde`/`toml` in the
+//! offline registry) plus the typed config structs the CLI and experiment
+//! drivers consume.
+
+pub mod toml;
+
+pub use toml::{parse, TomlValue};
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// Which gradient backend workers use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust objective (default; any shape).
+    Native,
+    /// AOT-compiled JAX/Pallas artifact executed via PJRT.
+    Xla,
+}
+
+impl std::str::FromStr for Backend {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "native" => Ok(Backend::Native),
+            "xla" => Ok(Backend::Xla),
+            other => bail!("unknown backend {other:?} (native|xla)"),
+        }
+    }
+}
+
+/// Full training configuration (CLI flags and TOML files both land here).
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Algorithm name as in the paper's legend (e.g. "qm-svrg-a+").
+    pub algorithm: String,
+    /// Workers N.
+    pub n_workers: usize,
+    /// Epoch length T (inner iterations per outer loop).
+    pub epoch_len: usize,
+    /// Outer iterations K.
+    pub outer_iters: usize,
+    /// Step size α (constant over k, as in §4).
+    pub step_size: f64,
+    /// Bits per coordinate b/d for quantized algorithms.
+    pub bits_per_coord: u8,
+    /// Ridge coefficient λ.
+    pub lambda: f64,
+    /// Fixed-grid radius (QM-SVRG-F / Q-baselines).
+    pub fixed_radius: f64,
+    /// Adaptive-grid slack multiplier.
+    pub grid_slack: f64,
+    /// RNG seed for everything.
+    pub seed: u64,
+    /// Dataset: "power" | "mnist" | path to a file.
+    pub dataset: String,
+    /// Synthetic sample count (when the dataset is generated).
+    pub n_samples: usize,
+    /// Gradient backend.
+    pub backend: Backend,
+    /// Where to write traces (empty = stdout summary only).
+    pub out_dir: String,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            algorithm: "qm-svrg-a+".into(),
+            n_workers: 4,
+            epoch_len: 8,
+            outer_iters: 50,
+            step_size: 0.2,
+            bits_per_coord: 3,
+            lambda: 0.1,
+            fixed_radius: 4.0,
+            grid_slack: 1.0,
+            seed: 42,
+            dataset: "power".into(),
+            n_samples: 20_000,
+            backend: Backend::Native,
+            out_dir: String::new(),
+        }
+    }
+}
+
+impl TrainConfig {
+    /// Load from a parsed TOML table; unknown keys are an error (typo guard).
+    pub fn from_toml(table: &BTreeMap<String, TomlValue>) -> Result<Self> {
+        let mut cfg = TrainConfig::default();
+        for (k, v) in table {
+            match k.as_str() {
+                "algorithm" => cfg.algorithm = v.as_str().context("algorithm")?.to_string(),
+                "n_workers" => cfg.n_workers = v.as_usize().context("n_workers")?,
+                "epoch_len" => cfg.epoch_len = v.as_usize().context("epoch_len")?,
+                "outer_iters" => cfg.outer_iters = v.as_usize().context("outer_iters")?,
+                "step_size" => cfg.step_size = v.as_f64().context("step_size")?,
+                "bits_per_coord" => {
+                    cfg.bits_per_coord = v.as_usize().context("bits_per_coord")? as u8
+                }
+                "lambda" => cfg.lambda = v.as_f64().context("lambda")?,
+                "fixed_radius" => cfg.fixed_radius = v.as_f64().context("fixed_radius")?,
+                "grid_slack" => cfg.grid_slack = v.as_f64().context("grid_slack")?,
+                "seed" => cfg.seed = v.as_usize().context("seed")? as u64,
+                "dataset" => cfg.dataset = v.as_str().context("dataset")?.to_string(),
+                "n_samples" => cfg.n_samples = v.as_usize().context("n_samples")?,
+                "backend" => cfg.backend = v.as_str().context("backend")?.parse()?,
+                "out_dir" => cfg.out_dir = v.as_str().context("out_dir")?.to_string(),
+                other => bail!("unknown config key {other:?}"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.n_workers == 0 {
+            bail!("n_workers must be >= 1");
+        }
+        if self.epoch_len == 0 || self.outer_iters == 0 {
+            bail!("epoch_len and outer_iters must be >= 1");
+        }
+        if !(self.step_size > 0.0) {
+            bail!("step_size must be positive");
+        }
+        if self.bits_per_coord == 0 || self.bits_per_coord > 32 {
+            bail!("bits_per_coord must be in 1..=32");
+        }
+        if !(self.lambda > 0.0) {
+            bail!("lambda must be positive (strong convexity needs the ridge)");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_valid() {
+        TrainConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn from_toml_overrides() {
+        let t = parse(
+            r#"
+            algorithm = "q-sgd"
+            n_workers = 8
+            step_size = 0.05
+            bits_per_coord = 7
+            backend = "xla"
+            "#,
+        )
+        .unwrap();
+        let cfg = TrainConfig::from_toml(&t).unwrap();
+        assert_eq!(cfg.algorithm, "q-sgd");
+        assert_eq!(cfg.n_workers, 8);
+        assert_eq!(cfg.step_size, 0.05);
+        assert_eq!(cfg.bits_per_coord, 7);
+        assert_eq!(cfg.backend, Backend::Xla);
+        assert_eq!(cfg.epoch_len, 8); // default survives
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let t = parse("stepsize = 0.1").unwrap();
+        assert!(TrainConfig::from_toml(&t).is_err());
+    }
+
+    #[test]
+    fn validation_catches_bad_values() {
+        let mut c = TrainConfig::default();
+        c.n_workers = 0;
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::default();
+        c.bits_per_coord = 0;
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::default();
+        c.lambda = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = TrainConfig::default();
+        c.step_size = -1.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn backend_parse() {
+        assert_eq!("native".parse::<Backend>().unwrap(), Backend::Native);
+        assert_eq!("xla".parse::<Backend>().unwrap(), Backend::Xla);
+        assert!("gpu".parse::<Backend>().is_err());
+    }
+}

@@ -1,0 +1,287 @@
+//! Minimal TOML-subset parser.
+//!
+//! Supports what experiment configs actually use: top-level and `[table]`
+//! sections, `key = value` with strings, integers, floats, booleans, and
+//! homogeneous arrays; `#` comments. Table sections flatten into dotted keys
+//! (`[grid]` + `bits = 3` → `"grid.bits"`). Not supported (rejected loudly):
+//! multi-line strings, dates, inline tables, arrays of tables.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            other => bail!("expected number, got {other:?}"),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            TomlValue::Int(i) => Ok(*i),
+            other => bail!("expected integer, got {other:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let i = self.as_i64()?;
+        if i < 0 {
+            bail!("expected non-negative integer, got {i}");
+        }
+        Ok(i as usize)
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            other => bail!("expected bool, got {other:?}"),
+        }
+    }
+
+    pub fn as_array(&self) -> Result<&[TomlValue]> {
+        match self {
+            TomlValue::Array(a) => Ok(a),
+            other => bail!("expected array, got {other:?}"),
+        }
+    }
+}
+
+/// Parse TOML text into a flat `dotted.key -> value` map.
+pub fn parse(text: &str) -> Result<BTreeMap<String, TomlValue>> {
+    let mut out = BTreeMap::new();
+    let mut prefix = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .with_context(|| format!("line {}: unterminated table header", lineno + 1))?
+                .trim();
+            if name.is_empty() || name.starts_with('[') {
+                bail!("line {}: unsupported table header {line:?}", lineno + 1);
+            }
+            prefix = format!("{name}.");
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+        let key = key.trim();
+        if key.is_empty() {
+            bail!("line {}: empty key", lineno + 1);
+        }
+        let full_key = format!("{prefix}{key}");
+        let value = parse_value(value.trim())
+            .with_context(|| format!("line {}: bad value for {key:?}", lineno + 1))?;
+        if out.insert(full_key.clone(), value).is_some() {
+            bail!("line {}: duplicate key {full_key:?}", lineno + 1);
+        }
+    }
+    Ok(out)
+}
+
+/// Load and parse a TOML file.
+pub fn parse_file(path: &std::path::Path) -> Result<BTreeMap<String, TomlValue>> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("read {}", path.display()))?;
+    parse(&text)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // a '#' outside quotes starts a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue> {
+    if s.is_empty() {
+        bail!("empty value");
+    }
+    if let Some(body) = s.strip_prefix('"') {
+        let body = body
+            .strip_suffix('"')
+            .context("unterminated string literal")?;
+        if body.contains('"') {
+            bail!("embedded quotes not supported");
+        }
+        return Ok(TomlValue::Str(body.to_string()));
+    }
+    if s == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if s == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if let Some(body) = s.strip_prefix('[') {
+        let body = body.strip_suffix(']').context("unterminated array")?;
+        let mut items = Vec::new();
+        let trimmed = body.trim();
+        if !trimmed.is_empty() {
+            for item in split_top_level(trimmed)? {
+                items.push(parse_value(item.trim())?);
+            }
+        }
+        return Ok(TomlValue::Array(items));
+    }
+    let clean = s.replace('_', "");
+    if let Ok(i) = clean.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = clean.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+/// Split an array body on commas not nested inside brackets or strings.
+fn split_top_level(s: &str) -> Result<Vec<&str>> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => {
+                depth = depth.checked_sub(1).context("unbalanced brackets")?;
+            }
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    if in_str {
+        bail!("unterminated string in array");
+    }
+    parts.push(&s[start..]);
+    Ok(parts)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars() {
+        let t = parse(
+            r#"
+            name = "hello"   # trailing comment
+            count = 42
+            big = 1_000_000
+            rate = 0.25
+            neg = -3.5
+            on = true
+            off = false
+            "#,
+        )
+        .unwrap();
+        assert_eq!(t["name"], TomlValue::Str("hello".into()));
+        assert_eq!(t["count"], TomlValue::Int(42));
+        assert_eq!(t["big"], TomlValue::Int(1_000_000));
+        assert_eq!(t["rate"], TomlValue::Float(0.25));
+        assert_eq!(t["neg"], TomlValue::Float(-3.5));
+        assert_eq!(t["on"], TomlValue::Bool(true));
+        assert_eq!(t["off"], TomlValue::Bool(false));
+    }
+
+    #[test]
+    fn tables_flatten_to_dotted_keys() {
+        let t = parse(
+            r#"
+            top = 1
+            [grid]
+            bits = 3
+            radius = 2.0
+            [solver]
+            name = "svrg"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(t["top"], TomlValue::Int(1));
+        assert_eq!(t["grid.bits"], TomlValue::Int(3));
+        assert_eq!(t["grid.radius"], TomlValue::Float(2.0));
+        assert_eq!(t["solver.name"], TomlValue::Str("svrg".into()));
+    }
+
+    #[test]
+    fn arrays() {
+        let t = parse(r#"xs = [1, 2, 3]
+ys = [0.5, 1.5]
+names = ["a", "b"]
+empty = []
+nested = [[1, 2], [3]]"#)
+            .unwrap();
+        assert_eq!(
+            t["xs"],
+            TomlValue::Array(vec![
+                TomlValue::Int(1),
+                TomlValue::Int(2),
+                TomlValue::Int(3)
+            ])
+        );
+        assert_eq!(t["empty"], TomlValue::Array(vec![]));
+        let nested = t["nested"].as_array().unwrap();
+        assert_eq!(nested.len(), 2);
+        assert_eq!(nested[0].as_array().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn comments_inside_strings_survive() {
+        let t = parse(r##"s = "a # not a comment""##).unwrap();
+        assert_eq!(t["s"], TomlValue::Str("a # not a comment".into()));
+    }
+
+    #[test]
+    fn errors_are_loud() {
+        assert!(parse("= 3").is_err());
+        assert!(parse("x 3").is_err());
+        assert!(parse("x = ").is_err());
+        assert!(parse("x = \"unterminated").is_err());
+        assert!(parse("x = [1, 2").is_err());
+        assert!(parse("[table\nx = 1").is_err());
+        assert!(parse("x = 1\nx = 2").is_err());
+        assert!(parse("x = what").is_err());
+    }
+
+    #[test]
+    fn accessors_type_check() {
+        let v = TomlValue::Int(5);
+        assert_eq!(v.as_f64().unwrap(), 5.0);
+        assert_eq!(v.as_usize().unwrap(), 5);
+        assert!(v.as_str().is_err());
+        assert!(TomlValue::Int(-1).as_usize().is_err());
+        assert!(TomlValue::Str("x".into()).as_bool().is_err());
+    }
+}

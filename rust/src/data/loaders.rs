@@ -1,0 +1,251 @@
+//! File loaders: CSV, libsvm, and MNIST IDX.
+//!
+//! Used when the real datasets are present on disk (`data/` by convention);
+//! the experiment drivers fall back to [`super::synthetic`] otherwise and
+//! record the substitution in their output.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, Read};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::Dataset;
+
+/// Load a numeric CSV: one sample per line, label in `label_col`, every other
+/// column a feature. `skip_header` drops the first line. Rows containing
+/// non-numeric fields (the UCI power data marks missing values with `?`) are
+/// skipped.
+pub fn load_csv(
+    path: &Path,
+    sep: char,
+    label_col: usize,
+    skip_header: bool,
+) -> Result<Dataset> {
+    let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let reader = BufReader::new(f);
+    let mut x = Vec::new();
+    let mut y = Vec::new();
+    let mut d = None;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        if skip_header && lineno == 0 {
+            continue;
+        }
+        if line.trim().is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(sep).collect();
+        if label_col >= fields.len() {
+            bail!("line {}: label col {} out of range", lineno + 1, label_col);
+        }
+        let parsed: Option<Vec<f64>> = fields.iter().map(|s| s.trim().parse().ok()).collect();
+        let Some(vals) = parsed else {
+            continue; // missing-value row
+        };
+        let dim = vals.len() - 1;
+        match d {
+            None => d = Some(dim),
+            Some(dd) if dd != dim => {
+                bail!("line {}: {} features, expected {}", lineno + 1, dim, dd)
+            }
+            _ => {}
+        }
+        y.push(vals[label_col]);
+        for (j, v) in vals.into_iter().enumerate() {
+            if j != label_col {
+                x.push(v);
+            }
+        }
+    }
+    let d = d.context("empty csv")?;
+    let n = y.len();
+    Dataset::new(x, y, n, d)
+}
+
+/// Load libsvm/svmlight format: `label idx:val idx:val ...` (1-based indices).
+pub fn load_libsvm(path: &Path, dim: Option<usize>) -> Result<Dataset> {
+    let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let reader = BufReader::new(f);
+    let mut rows: Vec<(f64, Vec<(usize, f64)>)> = Vec::new();
+    let mut max_idx = 0usize;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let line = line.split('#').next().unwrap_or("").trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let label: f64 = it
+            .next()
+            .context("missing label")?
+            .parse()
+            .with_context(|| format!("line {}: bad label", lineno + 1))?;
+        let mut feats = Vec::new();
+        for tok in it {
+            let (i, v) = tok
+                .split_once(':')
+                .with_context(|| format!("line {}: bad pair {tok:?}", lineno + 1))?;
+            let i: usize = i.parse().with_context(|| format!("line {}: bad index", lineno + 1))?;
+            if i == 0 {
+                bail!("line {}: libsvm indices are 1-based", lineno + 1);
+            }
+            let v: f64 = v.parse().with_context(|| format!("line {}: bad value", lineno + 1))?;
+            max_idx = max_idx.max(i);
+            feats.push((i - 1, v));
+        }
+        rows.push((label, feats));
+    }
+    let d = dim.unwrap_or(max_idx);
+    if d < max_idx {
+        bail!("declared dim {} < max feature index {}", d, max_idx);
+    }
+    let n = rows.len();
+    let mut x = vec![0.0; n * d];
+    let mut y = Vec::with_capacity(n);
+    for (i, (label, feats)) in rows.into_iter().enumerate() {
+        y.push(label);
+        for (j, v) in feats {
+            x[i * d + j] = v;
+        }
+    }
+    Dataset::new(x, y, n, d)
+}
+
+/// Load an MNIST IDX image/label pair (the standard `train-images-idx3-ubyte`
+/// / `train-labels-idx1-ubyte` files). Pixels are scaled to [0, 1].
+pub fn load_mnist_idx(images: &Path, labels: &Path) -> Result<Dataset> {
+    let img = read_idx(images)?;
+    let lab = read_idx(labels)?;
+    let (img_dims, img_data) = img;
+    let (lab_dims, lab_data) = lab;
+    if img_dims.len() != 3 {
+        bail!("image file must be rank 3, got {:?}", img_dims);
+    }
+    if lab_dims.len() != 1 {
+        bail!("label file must be rank 1, got {:?}", lab_dims);
+    }
+    let n = img_dims[0];
+    if lab_dims[0] != n {
+        bail!("count mismatch: {} images vs {} labels", n, lab_dims[0]);
+    }
+    let d = img_dims[1] * img_dims[2];
+    let x = img_data.iter().map(|&b| b as f64 / 255.0).collect();
+    let y = lab_data.iter().map(|&b| b as f64).collect();
+    Dataset::new(x, y, n, d)
+}
+
+/// Parse an IDX file: magic (2 zero bytes, type byte 0x08=u8, rank byte),
+/// rank big-endian u32 dims, then raw data.
+fn read_idx(path: &Path) -> Result<(Vec<usize>, Vec<u8>)> {
+    let mut f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf)?;
+    if buf.len() < 4 || buf[0] != 0 || buf[1] != 0 {
+        bail!("not an IDX file: {}", path.display());
+    }
+    if buf[2] != 0x08 {
+        bail!("unsupported IDX element type 0x{:02x}", buf[2]);
+    }
+    let rank = buf[3] as usize;
+    let header = 4 + 4 * rank;
+    if buf.len() < header {
+        bail!("truncated IDX header");
+    }
+    let mut dims = Vec::with_capacity(rank);
+    for r in 0..rank {
+        let o = 4 + 4 * r;
+        dims.push(u32::from_be_bytes([buf[o], buf[o + 1], buf[o + 2], buf[o + 3]]) as usize);
+    }
+    let expected: usize = dims.iter().product();
+    if buf.len() != header + expected {
+        bail!(
+            "IDX size mismatch: {} data bytes, dims {:?} need {}",
+            buf.len() - header,
+            dims,
+            expected
+        );
+    }
+    Ok((dims, buf[header..].to_vec()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmpfile(name: &str, contents: &[u8]) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("qmsvrg_test_loaders");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        let mut f = File::create(&p).unwrap();
+        f.write_all(contents).unwrap();
+        p
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let p = tmpfile(
+            "a.csv",
+            b"h1,h2,h3\n1.0,2.0,1\n3.0,4.0,-1\n5.0,?,1\n7.0,8.0,-1\n",
+        );
+        let ds = load_csv(&p, ',', 2, true).unwrap();
+        assert_eq!(ds.n, 3); // missing-value row skipped
+        assert_eq!(ds.d, 2);
+        assert_eq!(ds.y, vec![1.0, -1.0, -1.0]);
+        assert_eq!(ds.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn csv_label_in_middle() {
+        let p = tmpfile("b.csv", b"1.0;9.0;2.0\n3.0;-9.0;4.0\n");
+        let ds = load_csv(&p, ';', 1, false).unwrap();
+        assert_eq!(ds.y, vec![9.0, -9.0]);
+        assert_eq!(ds.row(0), &[1.0, 2.0]);
+    }
+
+    #[test]
+    fn libsvm_sparse() {
+        let p = tmpfile("c.svm", b"+1 1:0.5 3:2.0\n-1 2:1.5 # comment\n\n");
+        let ds = load_libsvm(&p, None).unwrap();
+        assert_eq!(ds.n, 2);
+        assert_eq!(ds.d, 3);
+        assert_eq!(ds.row(0), &[0.5, 0.0, 2.0]);
+        assert_eq!(ds.row(1), &[0.0, 1.5, 0.0]);
+        assert_eq!(ds.y, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn libsvm_rejects_zero_index() {
+        let p = tmpfile("d.svm", b"1 0:0.5\n");
+        assert!(load_libsvm(&p, None).is_err());
+    }
+
+    #[test]
+    fn idx_roundtrip() {
+        // 2 images of 2x2 + 2 labels
+        let mut img = vec![0u8, 0, 0x08, 3];
+        img.extend_from_slice(&2u32.to_be_bytes());
+        img.extend_from_slice(&2u32.to_be_bytes());
+        img.extend_from_slice(&2u32.to_be_bytes());
+        img.extend_from_slice(&[0, 128, 255, 64, 10, 20, 30, 40]);
+        let mut lab = vec![0u8, 0, 0x08, 1];
+        lab.extend_from_slice(&2u32.to_be_bytes());
+        lab.extend_from_slice(&[3, 7]);
+        let pi = tmpfile("img.idx", &img);
+        let pl = tmpfile("lab.idx", &lab);
+        let ds = load_mnist_idx(&pi, &pl).unwrap();
+        assert_eq!(ds.n, 2);
+        assert_eq!(ds.d, 4);
+        assert_eq!(ds.y, vec![3.0, 7.0]);
+        assert!((ds.row(0)[2] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn idx_rejects_garbage() {
+        let p = tmpfile("bad.idx", b"\xff\xff\x08\x01");
+        assert!(read_idx(&p).is_err());
+        let p2 = tmpfile("trunc.idx", &[0, 0, 0x08, 1, 0, 0, 0, 5, 1, 2]);
+        assert!(read_idx(&p2).is_err());
+    }
+}

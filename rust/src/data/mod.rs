@@ -1,0 +1,262 @@
+//! Datasets: dense storage, preprocessing, sharding, synthetic generators and
+//! file loaders.
+//!
+//! The paper evaluates on the UCI *Individual Household Electric Power
+//! Consumption* dataset (2,075,259 × d=9, binarized by a hard threshold) and
+//! on MNIST (60,000 × 784, one-vs-all). Neither is redistributable inside
+//! this offline environment, so [`synthetic`] provides generators that match
+//! their dimensions and geometry (see DESIGN.md §2 for the substitution
+//! argument); [`loaders`] reads the real files (CSV / libsvm / MNIST IDX)
+//! when they are present on disk.
+
+pub mod loaders;
+pub mod synthetic;
+
+use anyhow::{bail, Result};
+
+use crate::rng::Xoshiro256pp;
+
+/// A dense supervised dataset: row-major features + labels.
+///
+/// Binary tasks use labels in {-1, +1}; multiclass tasks store class ids
+/// 0..k-1 as f64 and are reduced one-vs-all by [`Dataset::one_vs_all`].
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub x: Vec<f64>,
+    pub y: Vec<f64>,
+    pub n: usize,
+    pub d: usize,
+}
+
+impl Dataset {
+    pub fn new(x: Vec<f64>, y: Vec<f64>, n: usize, d: usize) -> Result<Self> {
+        if x.len() != n * d {
+            bail!("x has {} entries, expected {}*{}", x.len(), n, d);
+        }
+        if y.len() != n {
+            bail!("y has {} entries, expected {}", y.len(), n);
+        }
+        Ok(Self { x, y, n, d })
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Standardize features to zero mean / unit variance in place; returns
+    /// the (mean, std) per column so a test set can reuse the transform.
+    pub fn standardize(&mut self) -> (Vec<f64>, Vec<f64>) {
+        let mut mean = vec![0.0; self.d];
+        let mut std = vec![0.0; self.d];
+        for i in 0..self.n {
+            for j in 0..self.d {
+                mean[j] += self.x[i * self.d + j];
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= self.n as f64;
+        }
+        for i in 0..self.n {
+            for j in 0..self.d {
+                let c = self.x[i * self.d + j] - mean[j];
+                std[j] += c * c;
+            }
+        }
+        for s in std.iter_mut() {
+            *s = (*s / self.n as f64).sqrt();
+            if *s < 1e-12 {
+                *s = 1.0; // constant column: leave centered
+            }
+        }
+        self.apply_standardization(&mean, &std);
+        (mean, std)
+    }
+
+    /// Apply a precomputed (mean, std) transform (for test splits).
+    pub fn apply_standardization(&mut self, mean: &[f64], std: &[f64]) {
+        assert_eq!(mean.len(), self.d);
+        assert_eq!(std.len(), self.d);
+        for i in 0..self.n {
+            for j in 0..self.d {
+                let v = &mut self.x[i * self.d + j];
+                *v = (*v - mean[j]) / std[j];
+            }
+        }
+    }
+
+    /// Append a constant-1 bias column (d -> d+1).
+    pub fn with_bias(&self) -> Dataset {
+        let d2 = self.d + 1;
+        let mut x = vec![0.0; self.n * d2];
+        for i in 0..self.n {
+            x[i * d2..i * d2 + self.d].copy_from_slice(self.row(i));
+            x[i * d2 + self.d] = 1.0;
+        }
+        Dataset {
+            x,
+            y: self.y.clone(),
+            n: self.n,
+            d: d2,
+        }
+    }
+
+    /// Deterministic shuffled train/test split.
+    pub fn split(&self, train_frac: f64, seed: u64) -> (Dataset, Dataset) {
+        assert!((0.0..=1.0).contains(&train_frac));
+        let mut idx: Vec<usize> = (0..self.n).collect();
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        rng.shuffle(&mut idx);
+        let n_train = ((self.n as f64) * train_frac).round() as usize;
+        let take = |ids: &[usize]| {
+            let mut x = Vec::with_capacity(ids.len() * self.d);
+            let mut y = Vec::with_capacity(ids.len());
+            for &i in ids {
+                x.extend_from_slice(self.row(i));
+                y.push(self.y[i]);
+            }
+            Dataset {
+                x,
+                y,
+                n: ids.len(),
+                d: self.d,
+            }
+        };
+        (take(&idx[..n_train]), take(&idx[n_train..]))
+    }
+
+    /// Contiguous sharding across `n_workers` (last shard takes the slack);
+    /// this is the "divide data samples among N workers" of §1.
+    pub fn shard(&self, n_workers: usize) -> Vec<Dataset> {
+        assert!(n_workers >= 1 && n_workers <= self.n);
+        let base = self.n / n_workers;
+        let rem = self.n % n_workers;
+        let mut out = Vec::with_capacity(n_workers);
+        let mut start = 0;
+        for w in 0..n_workers {
+            let len = base + usize::from(w < rem);
+            let rows = &self.x[start * self.d..(start + len) * self.d];
+            out.push(Dataset {
+                x: rows.to_vec(),
+                y: self.y[start..start + len].to_vec(),
+                n: len,
+                d: self.d,
+            });
+            start += len;
+        }
+        out
+    }
+
+    /// One-vs-all reduction: labels become +1 where `y == class`, else -1.
+    pub fn one_vs_all(&self, class: f64) -> Dataset {
+        let y = self
+            .y
+            .iter()
+            .map(|&v| if v == class { 1.0 } else { -1.0 })
+            .collect();
+        Dataset {
+            x: self.x.clone(),
+            y,
+            n: self.n,
+            d: self.d,
+        }
+    }
+
+    /// Distinct class labels, sorted (for multiclass drivers).
+    pub fn classes(&self) -> Vec<f64> {
+        let mut c = self.y.clone();
+        c.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        c.dedup();
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset::new(
+            vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0],
+            vec![1.0, -1.0, 1.0, -1.0, 1.0],
+            5,
+            2,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn new_validates_shapes() {
+        assert!(Dataset::new(vec![1.0; 6], vec![1.0; 3], 3, 2).is_ok());
+        assert!(Dataset::new(vec![1.0; 5], vec![1.0; 3], 3, 2).is_err());
+        assert!(Dataset::new(vec![1.0; 6], vec![1.0; 2], 3, 2).is_err());
+    }
+
+    #[test]
+    fn standardize_zero_mean_unit_var() {
+        let mut ds = toy();
+        ds.standardize();
+        for j in 0..ds.d {
+            let mean: f64 = (0..ds.n).map(|i| ds.x[i * ds.d + j]).sum::<f64>() / ds.n as f64;
+            let var: f64 =
+                (0..ds.n).map(|i| ds.x[i * ds.d + j].powi(2)).sum::<f64>() / ds.n as f64;
+            assert!(mean.abs() < 1e-12);
+            assert!((var - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn standardize_handles_constant_column() {
+        let mut ds = Dataset::new(vec![3.0, 1.0, 3.0, 2.0, 3.0, 3.0], vec![1.0; 3], 3, 2).unwrap();
+        ds.standardize();
+        for i in 0..3 {
+            assert_eq!(ds.x[i * 2], 0.0); // centered, not divided by 0
+        }
+    }
+
+    #[test]
+    fn split_partitions_and_is_deterministic() {
+        let ds = toy();
+        let (tr1, te1) = ds.split(0.6, 42);
+        let (tr2, te2) = ds.split(0.6, 42);
+        assert_eq!(tr1.n, 3);
+        assert_eq!(te1.n, 2);
+        assert_eq!(tr1.x, tr2.x);
+        assert_eq!(te1.y, te2.y);
+        let (tr3, _) = ds.split(0.6, 43);
+        assert!(tr3.x != tr1.x || tr3.y != tr1.y);
+    }
+
+    #[test]
+    fn shard_covers_all_rows() {
+        let ds = toy();
+        let shards = ds.shard(2);
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0].n + shards[1].n, 5);
+        assert_eq!(shards[0].n, 3); // remainder goes to the first shards
+        let mut all: Vec<f64> = Vec::new();
+        for s in &shards {
+            all.extend_from_slice(&s.x);
+        }
+        assert_eq!(all, ds.x);
+    }
+
+    #[test]
+    fn one_vs_all_labels() {
+        let ds = Dataset::new(vec![0.0; 8], vec![0.0, 1.0, 2.0, 1.0], 4, 2).unwrap();
+        let b = ds.one_vs_all(1.0);
+        assert_eq!(b.y, vec![-1.0, 1.0, -1.0, 1.0]);
+        assert_eq!(ds.classes(), vec![0.0, 1.0, 2.0]);
+    }
+
+    #[test]
+    fn with_bias_appends_ones() {
+        let ds = toy();
+        let b = ds.with_bias();
+        assert_eq!(b.d, 3);
+        for i in 0..b.n {
+            assert_eq!(b.row(i)[2], 1.0);
+            assert_eq!(&b.row(i)[..2], ds.row(i));
+        }
+    }
+}

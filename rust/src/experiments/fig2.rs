@@ -1,0 +1,194 @@
+//! Fig. 2 — sufficient conditions from Corollary 6 on the power-dataset
+//! geometry: (a) minimum epoch size T vs step size α; (b) minimum T vs bits
+//! per coordinate b/d; each for target contraction factors σ̄.
+
+use crate::data::synthetic::power_like;
+use crate::objective::{LogisticRidge, Objective};
+use crate::theory::{self, Geometry};
+
+/// One sweep point: the bound `min T` (None = infeasible at this setting).
+#[derive(Clone, Debug)]
+pub struct BoundPoint {
+    pub x: f64,
+    pub min_t: Option<f64>,
+}
+
+/// One curve of Fig. 2 (fixed σ̄ and fixed b/d or α).
+#[derive(Clone, Debug)]
+pub struct BoundCurve {
+    pub label: String,
+    pub points: Vec<BoundPoint>,
+}
+
+/// Full Fig. 2 output.
+pub struct Fig2 {
+    /// Geometry used (from the power-like dataset, §4.1 constants).
+    pub geom: Geometry,
+    /// (a) min T vs α, curves over (σ̄, b/d).
+    pub vs_alpha: Vec<BoundCurve>,
+    /// (b) min T vs b/d, curves over σ̄ at `alpha_for_b`.
+    pub vs_bits: Vec<BoundCurve>,
+    pub alpha_for_b: f64,
+}
+
+/// The geometry of the paper's power-dataset experiment: λ = 0.1 ⇒ μ = 0.2,
+/// L from the standardized margins (§4.1's max-eig bound).
+pub fn power_geometry(n: usize, seed: u64) -> Geometry {
+    let mut ds = power_like(n, seed);
+    ds.standardize();
+    let obj = LogisticRidge::new(&ds.x, &ds.y, ds.n, ds.d, 0.1);
+    Geometry::new(obj.mu(), obj.l_smooth(), ds.d)
+}
+
+/// Regenerate Fig. 2.
+pub fn run(n_samples: usize, seed: u64) -> Fig2 {
+    let geom = power_geometry(n_samples, seed);
+    let sigma_bars = [0.2, 0.5, 0.9];
+    let bpds = [8.0, 10.0];
+
+    // (a) min T vs α
+    let alphas: Vec<f64> = (1..=60).map(|i| i as f64 * geom.alpha_max() / 61.0).collect();
+    let mut vs_alpha = Vec::new();
+    for &sb in &sigma_bars {
+        for &bpd in &bpds {
+            let points = alphas
+                .iter()
+                .map(|&a| BoundPoint {
+                    x: a,
+                    min_t: theory::min_t_cor6(&geom, a, sb, bpd),
+                })
+                .collect();
+            vs_alpha.push(BoundCurve {
+                label: format!("sigma={sb} b/d={bpd}"),
+                points,
+            });
+        }
+        // unquantized reference (b/d -> inf)
+        let points = alphas
+            .iter()
+            .map(|&a| BoundPoint {
+                x: a,
+                min_t: theory::min_t_unquantized(&geom, a, sb),
+            })
+            .collect();
+        vs_alpha.push(BoundCurve {
+            label: format!("sigma={sb} unquantized"),
+            points,
+        });
+    }
+
+    // (b) min T vs b/d at a representative feasible α
+    let alpha_for_b = 0.25 * geom.alpha_max();
+    let mut vs_bits = Vec::new();
+    for &sb in &sigma_bars {
+        let points = (2..=20)
+            .map(|b| BoundPoint {
+                x: b as f64,
+                min_t: theory::min_t_cor6(&geom, alpha_for_b, sb, b as f64),
+            })
+            .collect();
+        vs_bits.push(BoundCurve {
+            label: format!("sigma={sb}"),
+            points,
+        });
+    }
+
+    Fig2 {
+        geom,
+        vs_alpha,
+        vs_bits,
+        alpha_for_b,
+    }
+}
+
+/// Max feasible step size and min bits, echoing the paper's headline reads
+/// of Fig. 2 ("σ̄=0.2 needs 10 bits and α < 0.047; σ̄=0.9 attainable at 8
+/// bits with α up to 0.124" — on *their* geometry; ours is reported here).
+pub fn feasibility_summary(geom: &Geometry) -> Vec<(f64, f64, Option<u32>, Option<f64>)> {
+    [0.2, 0.5, 0.9]
+        .iter()
+        .map(|&sb| {
+            // widest feasible alpha for this sigma at b/d=10
+            let mut max_alpha = 0.0;
+            for i in 1..=1000 {
+                let a = i as f64 * geom.alpha_max() / 1001.0;
+                if theory::min_t_cor6(geom, a, sb, 10.0).is_some() {
+                    max_alpha = a;
+                }
+            }
+            let a_mid = 0.25 * geom.alpha_max();
+            let bits = theory::min_bpd_cor6(geom, a_mid, sb);
+            let min_t = theory::min_t_cor6(geom, a_mid, sb, 10.0);
+            (sb, max_alpha, bits, min_t)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_shapes() {
+        let f = run(2000, 1);
+        // 3 sigma × (2 bpd + 1 unquantized) curves in (a)
+        assert_eq!(f.vs_alpha.len(), 9);
+        // 3 sigma curves in (b)
+        assert_eq!(f.vs_bits.len(), 3);
+        for c in &f.vs_alpha {
+            assert_eq!(c.points.len(), 60);
+        }
+    }
+
+    #[test]
+    fn more_bits_never_hurts_the_bound() {
+        let f = run(2000, 1);
+        for c in &f.vs_bits {
+            let ts: Vec<Option<f64>> = c.points.iter().map(|p| p.min_t).collect();
+            // once feasible, min T decreases (or stays) with more bits
+            let mut last: Option<f64> = None;
+            for t in ts.into_iter().flatten() {
+                if let Some(prev) = last {
+                    assert!(t <= prev + 1e-9, "min T not monotone: {prev} -> {t}");
+                }
+                last = Some(t);
+            }
+            assert!(last.is_some(), "curve {} never feasible", c.label);
+        }
+    }
+
+    #[test]
+    fn tighter_sigma_needs_more_bits() {
+        let f = run(2000, 1);
+        let s = feasibility_summary(&f.geom);
+        // rows are sigma = 0.2, 0.5, 0.9
+        let b02 = s[0].2;
+        let b09 = s[2].2.unwrap();
+        if let Some(b02) = b02 {
+            assert!(b02 >= b09);
+        }
+        // easier target admits a larger max step size
+        assert!(s[2].1 >= s[0].1);
+    }
+
+    #[test]
+    fn unquantized_bound_dominates_quantized() {
+        let f = run(2000, 1);
+        // compare "sigma=0.9 b/d=8" to "sigma=0.9 unquantized" pointwise
+        let q = f
+            .vs_alpha
+            .iter()
+            .find(|c| c.label == "sigma=0.9 b/d=8")
+            .unwrap();
+        let u = f
+            .vs_alpha
+            .iter()
+            .find(|c| c.label == "sigma=0.9 unquantized")
+            .unwrap();
+        for (pq, pu) in q.points.iter().zip(&u.points) {
+            if let (Some(tq), Some(tu)) = (pq.min_t, pu.min_t) {
+                assert!(tq >= tu - 1e-9);
+            }
+        }
+    }
+}

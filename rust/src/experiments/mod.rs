@@ -1,0 +1,44 @@
+//! Experiment drivers: one per paper table/figure (DESIGN.md §4).
+//!
+//! Each driver is a plain function returning structured results, shared by
+//! the CLI (`qmsvrg experiment <id>`) and the `cargo bench` harness (one
+//! bench target per figure/table), so the numbers in `bench_output.txt` are
+//! produced by exactly the code documented here.
+
+pub mod bounds;
+pub mod fig2;
+pub mod fig3;
+pub mod fig4;
+pub mod table1;
+
+use crate::config::TrainConfig;
+use crate::data::Dataset;
+use crate::metrics::RunTrace;
+
+/// Run one algorithm on a (train, test) pair and return its trace.
+pub fn run_algo(
+    algo: &str,
+    base: &TrainConfig,
+    train: &Dataset,
+    test: &Dataset,
+) -> anyhow::Result<RunTrace> {
+    let cfg = TrainConfig {
+        algorithm: algo.to_string(),
+        ..base.clone()
+    };
+    Ok(crate::driver::train_with_test(&cfg, train, test)?.trace)
+}
+
+/// The benchmark suites of Figs. 3/4 (paper legend order).
+pub const CONVERGENCE_SUITE: [&str; 10] = [
+    "gd",
+    "sgd",
+    "sag",
+    "m-svrg",
+    "q-gd",
+    "q-sgd",
+    "q-sag",
+    "qm-svrg-f+",
+    "qm-svrg-a+",
+    "svrg",
+];

@@ -1,0 +1,59 @@
+//! # QM-SVRG — Communication-efficient Variance-reduced SGD
+//!
+//! A distributed-optimization framework reproducing *"Communication-efficient
+//! Variance-reduced Stochastic Gradient Descent"* (Ghadikolaei & Magnússon,
+//! 2020): SVRG whose uplink and downlink traffic is quantized to a few bits
+//! per coordinate over **adaptive lattice grids**, preserving linear
+//! convergence to the true minimizer (QM-SVRG-A), plus the paper's entire
+//! baseline suite (GD / SGD / SAG / SVRG / M-SVRG and their quantized
+//! versions).
+//!
+//! Architecture (DESIGN.md):
+//! * **L3** (this crate) — master/worker coordinator, quantizer + wire codec,
+//!   transports with bit metering, algorithms, experiments.
+//! * **L2/L1** (python/, build-time only) — JAX logistic-ridge model with a
+//!   Pallas gradient kernel, AOT-lowered to `artifacts/*.hlo.txt`.
+//! * **runtime** — loads those artifacts via PJRT (`xla` crate) so worker
+//!   gradients can run on the compiled XLA path (`Backend::Xla`).
+//!
+//! Quickstart: see `examples/quickstart.rs`, or:
+//!
+//! ```no_run
+//! use qmsvrg::prelude::*;
+//! let mut ds = qmsvrg::data::synthetic::power_like(10_000, 42);
+//! ds.standardize();
+//! let cfg = TrainConfig { outer_iters: 20, ..TrainConfig::default() };
+//! let report = qmsvrg::driver::train(&cfg, &ds).unwrap();
+//! println!("final loss {:.6}", report.trace.final_loss());
+//! ```
+
+pub mod algorithms;
+pub mod benchkit;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod driver;
+pub mod experiments;
+pub mod linalg;
+pub mod metrics;
+pub mod objective;
+pub mod quant;
+pub mod rng;
+pub mod runtime;
+pub mod telemetry;
+pub mod testkit;
+pub mod theory;
+pub mod transport;
+pub mod worker;
+
+/// Convenience re-exports for downstream users.
+pub mod prelude {
+    pub use crate::algorithms::{Algorithm, SolverKind};
+    pub use crate::config::{Backend, TrainConfig};
+    pub use crate::data::Dataset;
+    pub use crate::metrics::{RunTrace, TracePoint};
+    pub use crate::objective::{LogisticRidge, Objective};
+    pub use crate::quant::{Grid, GridPolicy};
+    pub use crate::rng::Xoshiro256pp;
+}

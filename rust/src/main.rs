@@ -1,0 +1,390 @@
+//! `qmsvrg` — the leader binary: training runs, experiment reproduction,
+//! TCP worker mode, and artifact inspection.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use qmsvrg::cli::{Args, USAGE};
+use qmsvrg::config::TrainConfig;
+use qmsvrg::data::{loaders, synthetic, Dataset};
+use qmsvrg::experiments::{bounds, fig2, fig3, fig4, table1};
+use qmsvrg::telemetry::{self, Table};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "train" => cmd_train(&args),
+        "experiment" => cmd_experiment(&args),
+        "worker" => cmd_worker(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+/// Resolve `--dataset`: synthetic generators or a file on disk.
+fn load_dataset(name: &str, n_samples: usize, seed: u64) -> Result<(Dataset, Dataset)> {
+    let (mut train, mut test) = match name {
+        "power" => {
+            let ds = synthetic::power_like(n_samples, seed);
+            ds.split(0.8, seed ^ 0x5117)
+        }
+        "mnist" => {
+            // prefer real IDX files if present (data/), else synthetic
+            let img = Path::new("data/train-images-idx3-ubyte");
+            let lab = Path::new("data/train-labels-idx1-ubyte");
+            let ds = if img.exists() && lab.exists() {
+                eprintln!("# using real MNIST from data/");
+                loaders::load_mnist_idx(img, lab)?
+            } else {
+                synthetic::mnist_like(n_samples, seed)
+            };
+            ds.split(0.8, seed ^ 0x919)
+        }
+        path if path.ends_with(".csv") => {
+            let ds = loaders::load_csv(Path::new(path), ',', 0, true)?;
+            ds.split(0.8, seed)
+        }
+        path if path.ends_with(".svm") || path.ends_with(".libsvm") => {
+            let ds = loaders::load_libsvm(Path::new(path), None)?;
+            ds.split(0.8, seed)
+        }
+        other => bail!("unknown dataset {other:?} (power|mnist|*.csv|*.svm)"),
+    };
+    let (mean, std) = train.standardize();
+    test.apply_standardization(&mean, &std);
+    Ok((train, test))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    args.reject_unknown(&[
+        "algorithm", "dataset", "samples", "workers", "epoch-len", "iters", "step", "bits",
+        "lambda", "seed", "backend", "out", "digit", "fixed-radius", "slack", "config",
+    ])?;
+    // start from a TOML config file when given, then apply CLI overrides
+    let base = match args.get("config") {
+        Some(path) => {
+            let table = qmsvrg::config::toml::parse_file(Path::new(path))?;
+            TrainConfig::from_toml(&table)?
+        }
+        None => TrainConfig::default(),
+    };
+    let cfg = TrainConfig {
+        algorithm: args.get_or("algorithm", &base.algorithm),
+        n_workers: args.get_usize("workers", base.n_workers)?,
+        epoch_len: args.get_usize("epoch-len", base.epoch_len)?,
+        outer_iters: args.get_usize("iters", base.outer_iters)?,
+        step_size: args.get_f64("step", base.step_size)?,
+        bits_per_coord: args.get_usize("bits", base.bits_per_coord as usize)? as u8,
+        lambda: args.get_f64("lambda", base.lambda)?,
+        fixed_radius: args.get_f64("fixed-radius", base.fixed_radius)?,
+        grid_slack: args.get_f64("slack", base.grid_slack)?,
+        seed: args.get_u64("seed", base.seed)?,
+        dataset: args.get_or("dataset", &base.dataset),
+        n_samples: args.get_usize("samples", base.n_samples)?,
+        backend: match args.get("backend") {
+            Some(b) => b.parse()?,
+            None => base.backend,
+        },
+        out_dir: args.get_or("out", &base.out_dir),
+    };
+    cfg.validate()?;
+
+    let (mut train, mut test) = load_dataset(&cfg.dataset, cfg.n_samples, cfg.seed)?;
+    if cfg.dataset == "mnist" {
+        let digit = args.get_f64("digit", 9.0)?;
+        train = train.one_vs_all(digit);
+        test = test.one_vs_all(digit);
+    }
+
+    eprintln!(
+        "# {} on {} (n={}, d={}, N={} workers, T={}, K={}, α={}, b/d={}, backend={:?})",
+        cfg.algorithm,
+        cfg.dataset,
+        train.n,
+        train.d,
+        cfg.n_workers,
+        cfg.epoch_len,
+        cfg.outer_iters,
+        cfg.step_size,
+        cfg.bits_per_coord,
+        cfg.backend
+    );
+    let t0 = std::time::Instant::now();
+    let report = qmsvrg::driver::train_with_test(&cfg, &train, &test)?;
+    let dt = t0.elapsed();
+
+    let mut table = Table::new(&["iter", "loss", "grad_norm", "test_f1", "cum_bits"]);
+    for p in &report.trace.points {
+        table.row(&[
+            p.iteration.to_string(),
+            format!("{:.6}", p.loss),
+            format!("{:.3e}", p.grad_norm),
+            format!("{:.4}", p.test_f1),
+            p.bits.to_string(),
+        ]);
+    }
+    println!("{}", table.render());
+    println!(
+        "final: loss={:.6} f1={:.4} bits={} wall={:.2?}",
+        report.trace.final_loss(),
+        report.trace.final_f1(),
+        report.trace.total_bits(),
+        dt
+    );
+    if !cfg.out_dir.is_empty() {
+        telemetry::write_traces(Path::new(&cfg.out_dir), &[report.trace])?;
+        println!("traces written to {}", cfg.out_dir);
+    }
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    args.reject_unknown(&["bits", "samples", "iters", "seed", "out", "workers"])?;
+    let which = args
+        .positional
+        .first()
+        .context("experiment name required: fig2|fig3|fig4|table1|bounds")?;
+    let out = args.get_or("out", "");
+    let seed = args.get_u64("seed", 42)?;
+    match which.as_str() {
+        "fig2" => {
+            let f = fig2::run(args.get_usize("samples", 20_000)?, seed);
+            println!(
+                "# Fig 2 geometry: mu={:.4} L={:.4} d={} (alpha_max={:.4})",
+                f.geom.mu,
+                f.geom.l,
+                f.geom.d,
+                f.geom.alpha_max()
+            );
+            let mut t = Table::new(&["curve", "x", "min_T"]);
+            for c in f.vs_alpha.iter().chain(f.vs_bits.iter()) {
+                for p in c.points.iter().step_by(6) {
+                    t.row(&[
+                        c.label.clone(),
+                        format!("{:.4}", p.x),
+                        p.min_t
+                            .map(|v| format!("{v:.1}"))
+                            .unwrap_or_else(|| "infeasible".into()),
+                    ]);
+                }
+            }
+            println!("{}", t.render());
+            let mut s = Table::new(&["sigma_bar", "max_alpha(b/d=10)", "min b/d", "min T"]);
+            for (sb, ma, bits, mt) in fig2::feasibility_summary(&f.geom) {
+                s.row(&[
+                    format!("{sb}"),
+                    format!("{ma:.4}"),
+                    bits.map(|b| b.to_string()).unwrap_or_else(|| "-".into()),
+                    mt.map(|t| format!("{t:.0}")).unwrap_or_else(|| "-".into()),
+                ]);
+            }
+            println!("{}", s.render());
+        }
+        "fig3" => {
+            let p = fig3::Fig3Params {
+                n_samples: args.get_usize("samples", 20_000)?,
+                n_workers: args.get_usize("workers", 10)?,
+                bits_per_coord: args.get_usize("bits", 3)? as u8,
+                outer_iters: args.get_usize("iters", 50)?,
+                seed,
+            };
+            let fig = fig3::run(&p)?;
+            print_convergence("Fig 3", &fig.traces);
+            let (ok, msvrg, qa, qf) = fig3::headline_check(&fig, 0.02);
+            println!(
+                "headline (b/d={}): M-SVRG={msvrg:.4} QM-SVRG-A+={qa:.4} QM-SVRG-F+={qf:.4} -> {}",
+                p.bits_per_coord,
+                if ok { "HOLDS" } else { "VIOLATED" }
+            );
+            if !out.is_empty() {
+                telemetry::write_traces(Path::new(&out), &fig.traces)?;
+            }
+        }
+        "fig4" => {
+            let p = fig4::Fig4Params {
+                n_samples: args.get_usize("samples", 10_000)?,
+                n_workers: args.get_usize("workers", 10)?,
+                bits_per_coord: args.get_usize("bits", 7)? as u8,
+                outer_iters: args.get_usize("iters", 50)?,
+                digit: 9.0,
+                seed,
+            };
+            let fig = fig4::run(&p)?;
+            print_convergence("Fig 4 (digit 9)", &fig.traces);
+            if !out.is_empty() {
+                telemetry::write_traces(Path::new(&out), &fig.traces)?;
+            }
+        }
+        "table1" => {
+            let p = table1::Table1Params {
+                n_samples: args.get_usize("samples", 8_000)?,
+                n_workers: args.get_usize("workers", 10)?,
+                outer_iters: args.get_usize("iters", 50)?,
+                bits: match args.get("bits") {
+                    Some(b) => vec![b.parse()?],
+                    None => vec![7, 10],
+                },
+                seed,
+            };
+            let t = table1::run(&p)?;
+            let mut header = vec!["b/d"];
+            header.extend(table1::TABLE1_ALGOS);
+            let mut tbl = Table::new(&header);
+            for row in &t.rows {
+                let mut cells = vec![row.bits_per_coord.to_string()];
+                cells.extend(row.mean_f1.iter().map(|f| format!("{f:.3}")));
+                tbl.row(&cells);
+            }
+            println!("{}", tbl.render());
+        }
+        "bounds" => {
+            let p = bounds::BoundsParams {
+                n_samples: args.get_usize("samples", 20_000)?,
+                outer_iters: args.get_usize("iters", 60)?,
+                seed,
+                ..bounds::BoundsParams::default()
+            };
+            let r = bounds::run(&p)?;
+            println!(
+                "# Prop. 4 on live QM-SVRG-F: mu={:.3} L={:.3} alpha={} T={}",
+                r.geom.mu, r.geom.l, p.alpha, r.epoch_len
+            );
+            println!(
+                "sigma bound = {:.4}   sigma fitted = {}   gamma = {:.3e}",
+                r.sigma_bound,
+                r.sigma_fitted
+                    .map(|s| format!("{s:.4}"))
+                    .unwrap_or_else(|| "n/a".into()),
+                r.gamma
+            );
+            println!(
+                "measured beta = {:.3e}  delta = {:.3e}  recursion held on {:.0}% of steps",
+                r.beta,
+                r.delta,
+                100.0 * r.recursion_hold_frac
+            );
+            let series: Vec<String> = r
+                .subopt
+                .iter()
+                .step_by((r.subopt.len() / 12).max(1))
+                .map(|d| format!("{d:.2e}"))
+                .collect();
+            println!("suboptimality: {}", series.join(" "));
+        }
+        other => bail!("unknown experiment {other:?}"),
+    }
+    Ok(())
+}
+
+fn print_convergence(title: &str, traces: &[qmsvrg::metrics::RunTrace]) {
+    println!("# {title}");
+    let mut t = Table::new(&["algorithm", "final_loss", "final_|g|", "final_F1", "total_bits"]);
+    for tr in traces {
+        let p = tr.points.last().unwrap();
+        t.row(&[
+            tr.algo.clone(),
+            format!("{:.6}", p.loss),
+            format!("{:.3e}", p.grad_norm),
+            format!("{:.4}", p.test_f1),
+            p.bits.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+}
+
+/// TCP worker mode: connect to a master and serve a shard.
+fn cmd_worker(args: &Args) -> Result<()> {
+    args.reject_unknown(&[
+        "connect", "dataset", "samples", "shard", "workers", "lambda", "bits", "seed",
+        "adaptive", "backend",
+    ])?;
+    let addr = args.get("connect").context("--connect HOST:PORT required")?;
+    let n_samples = args.get_usize("samples", 20_000)?;
+    let seed = args.get_u64("seed", 42)?;
+    let shard_idx = args.get_usize("shard", 0)?;
+    let n_workers = args.get_usize("workers", 4)?;
+    let lambda = args.get_f64("lambda", 0.1)?;
+
+    // workers regenerate their shard deterministically from the shared seed
+    let (train, _) = load_dataset(&args.get_or("dataset", "power"), n_samples, seed)?;
+    let shards = train.shard(n_workers);
+    let shard = &shards[shard_idx];
+    let obj = qmsvrg::objective::LogisticRidge::new(&shard.x, &shard.y, shard.n, shard.d, lambda);
+    eprintln!(
+        "# worker {shard_idx}/{n_workers}: shard n={} d={}, connecting to {addr}",
+        shard.n, shard.d
+    );
+
+    let quant = match args.get("bits") {
+        Some(b) => {
+            let bits: u8 = b.parse()?;
+            use qmsvrg::objective::Objective;
+            let policy = if args.get("adaptive").is_some() {
+                qmsvrg::quant::GridPolicy::Adaptive(qmsvrg::quant::AdaptivePolicy::practical(
+                    Objective::mu(&obj),
+                    Objective::l_smooth(&obj),
+                    Objective::dim(&obj),
+                    0.2,
+                    8,
+                ))
+            } else {
+                qmsvrg::quant::GridPolicy::Fixed { radius: 4.0 }
+            };
+            Some(qmsvrg::worker::WorkerQuant {
+                bits,
+                policy,
+                plus: true,
+            })
+        }
+        None => None,
+    };
+    let link = qmsvrg::transport::tcp::TcpDuplex::connect(addr)?;
+    let rng = qmsvrg::rng::Xoshiro256pp::seed_from_u64(seed).split(2000 + shard_idx as u64);
+    qmsvrg::worker::WorkerNode::new(obj, link, quant, rng).run()?;
+    eprintln!("# worker {shard_idx} done");
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    args.reject_unknown(&["artifacts"])?;
+    let dir = args.get_or("artifacts", "artifacts");
+    match qmsvrg::runtime::XlaRuntime::load(Path::new(&dir)) {
+        Ok(rt) => {
+            println!("# artifacts in {dir}:");
+            let mut t = Table::new(&["entry", "shape", "n_pad", "d_pad", "file"]);
+            for a in rt.manifest() {
+                t.row(&[
+                    a.entry.clone(),
+                    a.shape.clone(),
+                    a.n_pad.to_string(),
+                    a.d_pad.to_string(),
+                    a.file.clone(),
+                ]);
+            }
+            println!("{}", t.render());
+        }
+        Err(e) => println!("no artifacts loaded: {e:#}"),
+    }
+    let geom = fig2::power_geometry(10_000, 42);
+    println!(
+        "power-like geometry: mu={:.4} L={:.4} kappa={:.1} alpha_max={:.4}",
+        geom.mu,
+        geom.l,
+        geom.kappa(),
+        geom.alpha_max()
+    );
+    Ok(())
+}

@@ -1,0 +1,208 @@
+//! Communication accounting.
+//!
+//! Two views, which the tests reconcile:
+//!
+//! 1. **Closed-form** per-iteration bit counts, exactly the §4.1 formulas
+//!    (one "iteration" = one *outer* loop for the SVRG family):
+//!
+//!    | algorithm            | bits / iteration              |
+//!    |----------------------|-------------------------------|
+//!    | SGD, SAG             | `128 d`                       |
+//!    | GD                   | `64 d (1 + N)`                |
+//!    | SVRG, M-SVRG         | `64 d N + 192 d T`            |
+//!    | Q-SGD, Q-SAG         | `b_w + b_g`                   |
+//!    | Q-GD                 | `b_w + b_g N`                 |
+//!    | QM-SVRG-F/A          | `64 d N + 64 d T + (b_w+b_g)T`|
+//!    | QM-SVRG-F+/A+        | `64 d N + (b_w+b_g) T`        |
+//!
+//! 2. **Measured** bits: every message that crosses a [`crate::transport`]
+//!    link adds its actual payload size to a [`CommLedger`].
+
+/// The algorithms of the paper's benchmark suite.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum AlgoBits {
+    Gd,
+    Sgd,
+    Sag,
+    Svrg,
+    MSvrg,
+    QGd,
+    QSgd,
+    QSag,
+    QmSvrgF,
+    QmSvrgA,
+    QmSvrgFPlus,
+    QmSvrgAPlus,
+}
+
+impl AlgoBits {
+    /// Closed-form bits per (outer) iteration, §4.1.
+    ///
+    /// `d` dimension, `n_workers` N, `t` inner epoch length, `b_w`/`b_g`
+    /// total bits for one quantized parameter / gradient vector.
+    pub fn bits_per_iteration(
+        &self,
+        d: u64,
+        n_workers: u64,
+        t: u64,
+        b_w: u64,
+        b_g: u64,
+    ) -> u64 {
+        match self {
+            AlgoBits::Sgd | AlgoBits::Sag => 128 * d,
+            AlgoBits::Gd => 64 * d * (1 + n_workers),
+            AlgoBits::Svrg | AlgoBits::MSvrg => 64 * d * n_workers + 192 * d * t,
+            AlgoBits::QSgd | AlgoBits::QSag => b_w + b_g,
+            AlgoBits::QGd => b_w + b_g * n_workers,
+            AlgoBits::QmSvrgF | AlgoBits::QmSvrgA => {
+                64 * d * n_workers + 64 * d * t + (b_w + b_g) * t
+            }
+            AlgoBits::QmSvrgFPlus | AlgoBits::QmSvrgAPlus => 64 * d * n_workers + (b_w + b_g) * t,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AlgoBits::Gd => "GD",
+            AlgoBits::Sgd => "SGD",
+            AlgoBits::Sag => "SAG",
+            AlgoBits::Svrg => "SVRG",
+            AlgoBits::MSvrg => "M-SVRG",
+            AlgoBits::QGd => "Q-GD",
+            AlgoBits::QSgd => "Q-SGD",
+            AlgoBits::QSag => "Q-SAG",
+            AlgoBits::QmSvrgF => "QM-SVRG-F",
+            AlgoBits::QmSvrgA => "QM-SVRG-A",
+            AlgoBits::QmSvrgFPlus => "QM-SVRG-F+",
+            AlgoBits::QmSvrgAPlus => "QM-SVRG-A+",
+        }
+    }
+}
+
+/// Measured communication: uplink/downlink payload bits by category.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CommLedger {
+    /// Worker -> master payload bits.
+    pub uplink_bits: u64,
+    /// Master -> worker payload bits.
+    pub downlink_bits: u64,
+    /// Messages counted (both directions).
+    pub messages: u64,
+    /// URQ saturation events observed (unbiasedness violations).
+    pub saturations: u64,
+}
+
+impl CommLedger {
+    pub fn record_uplink(&mut self, bits: u64) {
+        self.uplink_bits += bits;
+        self.messages += 1;
+    }
+
+    pub fn record_downlink(&mut self, bits: u64) {
+        self.downlink_bits += bits;
+        self.messages += 1;
+    }
+
+    pub fn total_bits(&self) -> u64 {
+        self.uplink_bits + self.downlink_bits
+    }
+
+    pub fn merge(&mut self, other: &CommLedger) {
+        self.uplink_bits += other.uplink_bits;
+        self.downlink_bits += other.downlink_bits;
+        self.messages += other.messages;
+        self.saturations += other.saturations;
+    }
+
+    /// Compression ratio vs an all-f64 baseline carrying the same vectors.
+    pub fn compression_vs(&self, baseline_bits: u64) -> f64 {
+        if baseline_bits == 0 {
+            return 0.0;
+        }
+        1.0 - self.total_bits() as f64 / baseline_bits as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn formulas_match_paper_table() {
+        let (d, n, t) = (9u64, 4u64, 8u64);
+        let (bw, bg) = (27u64, 27u64); // b/d = 3
+        assert_eq!(AlgoBits::Sgd.bits_per_iteration(d, n, t, bw, bg), 128 * 9);
+        assert_eq!(
+            AlgoBits::Gd.bits_per_iteration(d, n, t, bw, bg),
+            64 * 9 * 5
+        );
+        assert_eq!(
+            AlgoBits::Svrg.bits_per_iteration(d, n, t, bw, bg),
+            64 * 9 * 4 + 192 * 9 * 8
+        );
+        assert_eq!(AlgoBits::QSgd.bits_per_iteration(d, n, t, bw, bg), 54);
+        assert_eq!(
+            AlgoBits::QGd.bits_per_iteration(d, n, t, bw, bg),
+            27 + 27 * 4
+        );
+        assert_eq!(
+            AlgoBits::QmSvrgA.bits_per_iteration(d, n, t, bw, bg),
+            64 * 9 * 4 + 64 * 9 * 8 + 54 * 8
+        );
+        assert_eq!(
+            AlgoBits::QmSvrgAPlus.bits_per_iteration(d, n, t, bw, bg),
+            64 * 9 * 4 + 54 * 8
+        );
+    }
+
+    #[test]
+    fn plus_variant_strictly_cheaper() {
+        let (d, n, t, bw, bg) = (784, 8, 15, 784 * 7, 784 * 7);
+        assert!(
+            AlgoBits::QmSvrgAPlus.bits_per_iteration(d, n, t, bw, bg)
+                < AlgoBits::QmSvrgA.bits_per_iteration(d, n, t, bw, bg)
+        );
+        assert!(
+            AlgoBits::QmSvrgA.bits_per_iteration(d, n, t, bw, bg)
+                < AlgoBits::MSvrg.bits_per_iteration(d, n, t, bw, bg)
+        );
+    }
+
+    #[test]
+    fn headline_95_percent_compression() {
+        // b/d = 3 vs 64-bit floats in the inner loop: (b_w+b_g)T vs 192dT
+        // term-for-term; the paper's "as much as 95%" claim.
+        let d = 9u64;
+        let t = 8u64;
+        let bw = 3 * d;
+        let bg = 3 * d;
+        let quantized_inner = (bw + bg) * t;
+        let float_inner = 192 * d * t;
+        let saving = 1.0 - quantized_inner as f64 / float_inner as f64;
+        assert!(saving > 0.95, "saving={saving}");
+    }
+
+    #[test]
+    fn ledger_accumulates_and_merges() {
+        let mut a = CommLedger::default();
+        a.record_uplink(100);
+        a.record_downlink(40);
+        assert_eq!(a.total_bits(), 140);
+        assert_eq!(a.messages, 2);
+        let mut b = CommLedger::default();
+        b.record_uplink(10);
+        b.saturations = 3;
+        a.merge(&b);
+        assert_eq!(a.total_bits(), 150);
+        assert_eq!(a.messages, 3);
+        assert_eq!(a.saturations, 3);
+    }
+
+    #[test]
+    fn compression_ratio() {
+        let mut l = CommLedger::default();
+        l.record_uplink(32);
+        assert!((l.compression_vs(640) - 0.95).abs() < 1e-12);
+        assert_eq!(l.compression_vs(0), 0.0);
+    }
+}

@@ -1,0 +1,222 @@
+//! Performance measures (§4.1): loss / gradient-norm traces, F1-score, and
+//! the communication-bit ledger.
+
+pub mod comm;
+
+pub use comm::{AlgoBits, CommLedger};
+
+use crate::linalg;
+
+/// Binary confusion counts for ±1 labels.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Confusion {
+    pub tp: u64,
+    pub fp: u64,
+    pub tn: u64,
+    pub fn_: u64,
+}
+
+impl Confusion {
+    pub fn precision(&self) -> f64 {
+        if self.tp + self.fp == 0 {
+            0.0
+        } else {
+            self.tp as f64 / (self.tp + self.fp) as f64
+        }
+    }
+
+    pub fn recall(&self) -> f64 {
+        if self.tp + self.fn_ == 0 {
+            0.0
+        } else {
+            self.tp as f64 / (self.tp + self.fn_) as f64
+        }
+    }
+
+    /// F1 = harmonic mean of precision and recall (Table 1's measure).
+    pub fn f1(&self) -> f64 {
+        let p = self.precision();
+        let r = self.recall();
+        if p + r == 0.0 {
+            0.0
+        } else {
+            2.0 * p * r / (p + r)
+        }
+    }
+
+    pub fn accuracy(&self) -> f64 {
+        let total = self.tp + self.fp + self.tn + self.fn_;
+        if total == 0 {
+            0.0
+        } else {
+            (self.tp + self.tn) as f64 / total as f64
+        }
+    }
+}
+
+/// Score a linear classifier `sign(w·x)` against ±1 labels.
+pub fn confusion_binary(w: &[f64], x: &[f64], y: &[f64], n: usize, d: usize) -> Confusion {
+    debug_assert_eq!(x.len(), n * d);
+    debug_assert_eq!(y.len(), n);
+    let mut c = Confusion::default();
+    for i in 0..n {
+        let s = linalg::dot(&x[i * d..(i + 1) * d], w);
+        let pred_pos = s > 0.0;
+        let actual_pos = y[i] > 0.0;
+        match (pred_pos, actual_pos) {
+            (true, true) => c.tp += 1,
+            (true, false) => c.fp += 1,
+            (false, false) => c.tn += 1,
+            (false, true) => c.fn_ += 1,
+        }
+    }
+    c
+}
+
+/// F1 of `sign(w·x)` on a ±1-labeled set.
+pub fn f1_binary(w: &[f64], x: &[f64], y: &[f64], n: usize, d: usize) -> f64 {
+    confusion_binary(w, x, y, n, d).f1()
+}
+
+/// Multiclass accuracy of one-vs-all classifiers: predict
+/// `argmax_l w^(l)·x` (§4.1's MNIST protocol).
+pub fn ova_accuracy(ws: &[Vec<f64>], x: &[f64], y: &[f64], n: usize, d: usize) -> f64 {
+    debug_assert!(!ws.is_empty());
+    let mut correct = 0usize;
+    for i in 0..n {
+        let xi = &x[i * d..(i + 1) * d];
+        let mut best = 0usize;
+        let mut best_s = f64::NEG_INFINITY;
+        for (l, w) in ws.iter().enumerate() {
+            let s = linalg::dot(w, xi);
+            if s > best_s {
+                best_s = s;
+                best = l;
+            }
+        }
+        if y[i] as usize == best {
+            correct += 1;
+        }
+    }
+    correct as f64 / n as f64
+}
+
+/// One optimization-trace point (one outer iteration of Fig. 3/4).
+#[derive(Clone, Debug)]
+pub struct TracePoint {
+    pub iteration: usize,
+    pub loss: f64,
+    pub grad_norm: f64,
+    pub test_f1: f64,
+    /// Cumulative communicated bits up to and including this iteration.
+    pub bits: u64,
+}
+
+/// A whole run's trace plus its identity, for the experiment tables.
+#[derive(Clone, Debug, Default)]
+pub struct RunTrace {
+    pub algo: String,
+    pub points: Vec<TracePoint>,
+}
+
+impl RunTrace {
+    pub fn new(algo: &str) -> Self {
+        Self {
+            algo: algo.to_string(),
+            points: Vec::new(),
+        }
+    }
+
+    pub fn final_loss(&self) -> f64 {
+        self.points.last().map(|p| p.loss).unwrap_or(f64::NAN)
+    }
+
+    pub fn final_f1(&self) -> f64 {
+        self.points.last().map(|p| p.test_f1).unwrap_or(f64::NAN)
+    }
+
+    pub fn total_bits(&self) -> u64 {
+        self.points.last().map(|p| p.bits).unwrap_or(0)
+    }
+
+    /// Suboptimality trace `f(w_k) - f*` given a reference optimum.
+    pub fn suboptimality(&self, f_star: f64) -> Vec<f64> {
+        self.points.iter().map(|p| p.loss - f_star).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn confusion_and_f1() {
+        // perfect separator on axis 0
+        let x = vec![1.0, 0.0, -1.0, 0.0, 2.0, 0.0, -2.0, 0.0];
+        let y = vec![1.0, -1.0, 1.0, -1.0];
+        let w = vec![1.0, 0.0];
+        let c = confusion_binary(&w, &x, &y, 4, 2);
+        assert_eq!((c.tp, c.tn, c.fp, c.fn_), (2, 2, 0, 0));
+        assert_eq!(c.f1(), 1.0);
+        assert_eq!(c.accuracy(), 1.0);
+        // inverted separator: all wrong
+        let winv = vec![-1.0, 0.0];
+        let c2 = confusion_binary(&winv, &x, &y, 4, 2);
+        assert_eq!(c2.f1(), 0.0);
+    }
+
+    #[test]
+    fn f1_known_value() {
+        // tp=1, fp=1, fn=1 -> p=0.5, r=0.5, f1=0.5
+        let c = Confusion {
+            tp: 1,
+            fp: 1,
+            tn: 0,
+            fn_: 1,
+        };
+        assert!((c.f1() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn degenerate_f1_is_zero() {
+        let c = Confusion::default();
+        assert_eq!(c.f1(), 0.0);
+        assert_eq!(c.precision(), 0.0);
+        assert_eq!(c.recall(), 0.0);
+    }
+
+    #[test]
+    fn ova_picks_argmax() {
+        // 2 classes in d=2; class 0 -> +x0, class 1 -> +x1
+        let ws = vec![vec![1.0, 0.0], vec![0.0, 1.0]];
+        let x = vec![3.0, 1.0, 1.0, 3.0];
+        let y = vec![0.0, 1.0];
+        assert_eq!(ova_accuracy(&ws, &x, &y, 2, 2), 1.0);
+        let ybad = vec![1.0, 0.0];
+        assert_eq!(ova_accuracy(&ws, &x, &ybad, 2, 2), 0.0);
+    }
+
+    #[test]
+    fn trace_accessors() {
+        let mut t = RunTrace::new("svrg");
+        assert!(t.final_loss().is_nan());
+        t.points.push(TracePoint {
+            iteration: 0,
+            loss: 1.0,
+            grad_norm: 0.5,
+            test_f1: 0.7,
+            bits: 100,
+        });
+        t.points.push(TracePoint {
+            iteration: 1,
+            loss: 0.4,
+            grad_norm: 0.1,
+            test_f1: 0.9,
+            bits: 250,
+        });
+        assert_eq!(t.final_loss(), 0.4);
+        assert_eq!(t.final_f1(), 0.9);
+        assert_eq!(t.total_bits(), 250);
+        assert_eq!(t.suboptimality(0.3), vec![0.7, 0.10000000000000003]);
+    }
+}

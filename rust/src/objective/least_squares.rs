@@ -1,0 +1,152 @@
+//! Least-squares ridge: `f(w) = (1/2n) Σ (x_i·w - y_i)² + λ‖w‖²`.
+//!
+//! A second strongly-convex/smooth instance (the paper's theory covers the
+//! whole class) used by the ablation benches and to demonstrate the public
+//! API is not logistic-specific.
+
+use super::Objective;
+use crate::linalg;
+
+#[derive(Clone, Debug)]
+pub struct LeastSquaresRidge {
+    x: Vec<f64>, // n × d row-major
+    y: Vec<f64>,
+    n: usize,
+    d: usize,
+    pub lambda: f64,
+    l_smooth: f64,
+}
+
+impl LeastSquaresRidge {
+    pub fn new(x: Vec<f64>, y: Vec<f64>, n: usize, d: usize, lambda: f64) -> Self {
+        assert_eq!(x.len(), n * d);
+        assert_eq!(y.len(), n);
+        assert!(n > 0 && d > 0);
+        // Per-sample Hessian is x_i x_iᵀ + 2λI ⇒ L ≤ max_i ‖x_i‖² + 2λ.
+        let max_sq = (0..n)
+            .map(|i| linalg::nrm2_sq(&x[i * d..(i + 1) * d]))
+            .fold(0.0, f64::max);
+        let l_smooth = max_sq + 2.0 * lambda;
+        Self {
+            x,
+            y,
+            n,
+            d,
+            lambda,
+            l_smooth,
+        }
+    }
+
+    #[inline]
+    fn row(&self, i: usize) -> &[f64] {
+        &self.x[i * self.d..(i + 1) * self.d]
+    }
+}
+
+impl Objective for LeastSquaresRidge {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn num_samples(&self) -> usize {
+        self.n
+    }
+
+    fn loss(&self, w: &[f64]) -> f64 {
+        let mut acc = 0.0;
+        for i in 0..self.n {
+            let r = linalg::dot(self.row(i), w) - self.y[i];
+            acc += 0.5 * r * r;
+        }
+        acc / self.n as f64 + self.lambda * linalg::nrm2_sq(w)
+    }
+
+    fn grad(&self, w: &[f64], out: &mut [f64]) {
+        for o in out.iter_mut() {
+            *o = 0.0;
+        }
+        let inv_n = 1.0 / self.n as f64;
+        for i in 0..self.n {
+            let row = self.row(i);
+            let r = linalg::dot(row, w) - self.y[i];
+            linalg::axpy(r * inv_n, row, out);
+        }
+        linalg::axpy(2.0 * self.lambda, w, out);
+    }
+
+    fn sample_grad(&self, i: usize, w: &[f64], out: &mut [f64]) {
+        let row = self.row(i);
+        let r = linalg::dot(row, w) - self.y[i];
+        for (o, &x) in out.iter_mut().zip(row) {
+            *o = r * x;
+        }
+        linalg::axpy(2.0 * self.lambda, w, out);
+    }
+
+    fn l_smooth(&self) -> f64 {
+        self.l_smooth
+    }
+
+    fn mu(&self) -> f64 {
+        2.0 * self.lambda
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::objective::tests::check_grad_fd;
+
+    fn toy() -> LeastSquaresRidge {
+        let x = vec![1.0, 2.0, -1.0, 0.5, 0.3, -0.7, 2.0, 1.0];
+        let y = vec![1.0, -0.5, 0.2, 2.0];
+        LeastSquaresRidge::new(x, y, 4, 2, 0.05)
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        let obj = toy();
+        check_grad_fd(&obj, &[0.5, -0.25], 1e-4);
+        check_grad_fd(&obj, &[0.0, 0.0], 1e-4);
+    }
+
+    #[test]
+    fn closed_form_minimizer_has_zero_gradient() {
+        // Solve (XᵀX/n + 2λI) w = Xᵀy/n by hand for d=2 and check ∇f(w*) ≈ 0.
+        let obj = toy();
+        let (n, d) = (4usize, 2usize);
+        let mut a = [0.0f64; 4]; // 2x2
+        let mut b = [0.0f64; 2];
+        for i in 0..n {
+            let r = &obj.x[i * d..(i + 1) * d];
+            for p in 0..d {
+                b[p] += r[p] * obj.y[i] / n as f64;
+                for q in 0..d {
+                    a[p * d + q] += r[p] * r[q] / n as f64;
+                }
+            }
+        }
+        a[0] += 2.0 * obj.lambda;
+        a[3] += 2.0 * obj.lambda;
+        let det = a[0] * a[3] - a[1] * a[2];
+        let w = [
+            (a[3] * b[0] - a[1] * b[1]) / det,
+            (a[0] * b[1] - a[2] * b[0]) / det,
+        ];
+        let g = obj.grad_vec(&w);
+        assert!(crate::linalg::nrm2(&g) < 1e-10, "g={g:?}");
+    }
+
+    #[test]
+    fn sample_grads_average_to_full() {
+        let obj = toy();
+        let w = [0.3, 0.7];
+        let mut acc = vec![0.0; 2];
+        let mut tmp = vec![0.0; 2];
+        for i in 0..obj.num_samples() {
+            obj.sample_grad(i, &w, &mut tmp);
+            crate::linalg::axpy(0.25, &tmp, &mut acc);
+        }
+        assert!(crate::linalg::linf_dist(&acc, &obj.grad_vec(&w)) < 1e-12);
+    }
+}

@@ -1,0 +1,101 @@
+//! Objective functions: the paper's logistic ridge regression (§4.1) plus a
+//! least-squares ridge instance, behind one [`Objective`] trait.
+//!
+//! An objective owns a view of the (margin-transformed) data and exposes
+//! loss / full gradient / per-sample gradient, along with the smoothness and
+//! strong-convexity constants the paper derives for the grid policy and the
+//! theory module:
+//!
+//! * `L  = (1/4N) Σ ‖z_i‖² + 2λ` (logistic; Hessian max-eig bound of §4.1)
+//! * `μ  = 2λ` (ridge term's strong convexity)
+
+pub mod hinge;
+pub mod least_squares;
+pub mod logistic;
+
+pub use hinge::SmoothedHingeRidge;
+pub use least_squares::LeastSquaresRidge;
+pub use logistic::LogisticRidge;
+
+/// A finite-sum objective `f(w) = (1/n) Σ f_i(w) + reg(w)` over dense rows.
+pub trait Objective: Send + Sync {
+    /// Problem dimension `d`.
+    fn dim(&self) -> usize;
+
+    /// Number of summands `n`.
+    fn num_samples(&self) -> usize;
+
+    /// Full loss `f(w)`.
+    fn loss(&self, w: &[f64]) -> f64;
+
+    /// Full gradient into `out` (length `d`).
+    fn grad(&self, w: &[f64], out: &mut [f64]);
+
+    /// Gradient of a single summand `f_i` (including the regularizer so that
+    /// `(1/n) Σ ∇f_i = ∇f`) into `out`.
+    fn sample_grad(&self, i: usize, w: &[f64], out: &mut [f64]);
+
+    /// Gradient of the mean over an index batch, into `out`.
+    fn batch_grad(&self, idx: &[usize], w: &[f64], out: &mut [f64]) {
+        let d = self.dim();
+        let mut tmp = vec![0.0; d];
+        for o in out.iter_mut() {
+            *o = 0.0;
+        }
+        for &i in idx {
+            self.sample_grad(i, w, &mut tmp);
+            crate::linalg::axpy(1.0 / idx.len() as f64, &tmp, out);
+        }
+    }
+
+    /// Smoothness constant (Lipschitz constant of every ∇f_i).
+    fn l_smooth(&self) -> f64;
+
+    /// Strong-convexity constant of `f`.
+    fn mu(&self) -> f64;
+
+    /// Convenience: allocate-and-return full gradient.
+    fn grad_vec(&self, w: &[f64]) -> Vec<f64> {
+        let mut g = vec![0.0; self.dim()];
+        self.grad(w, &mut g);
+        g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg;
+
+    /// Finite-difference check helper shared by the objective impl tests.
+    pub(crate) fn check_grad_fd<O: Objective>(obj: &O, w: &[f64], tol: f64) {
+        let g = obj.grad_vec(w);
+        let h = 1e-6;
+        for j in 0..obj.dim() {
+            let mut wp = w.to_vec();
+            let mut wm = w.to_vec();
+            wp[j] += h;
+            wm[j] -= h;
+            let fd = (obj.loss(&wp) - obj.loss(&wm)) / (2.0 * h);
+            assert!(
+                (fd - g[j]).abs() < tol * (1.0 + fd.abs()),
+                "coord {j}: fd={fd} analytic={}",
+                g[j]
+            );
+        }
+    }
+
+    #[test]
+    fn batch_grad_of_all_indices_is_full_grad() {
+        let z = vec![
+            0.3, -1.2, 0.8, 0.1, -0.5, 0.9, 1.1, -0.2, 0.0, 0.4, -0.7, 0.6,
+        ];
+        let obj = LogisticRidge::from_margins(z, 4, 3, 0.1);
+        let w = [0.2, -0.1, 0.5];
+        let idx: Vec<usize> = (0..4).collect();
+        let mut gb = vec![0.0; 3];
+        obj.batch_grad(&idx, &w, &mut gb);
+        let gf = obj.grad_vec(&w);
+        assert!(linalg::linf_dist(&gb, &gf) < 1e-12);
+    }
+}

@@ -1,0 +1,237 @@
+//! Grid policies: fixed lattice (QM-SVRG-F, the Q-baselines) vs the paper's
+//! adaptive lattice (QM-SVRG-A), eqs. (4a)/(4b).
+//!
+//! Two radius modes:
+//!
+//! * [`RadiusMode::Theoretical`] — the paper's sufficient-condition radii:
+//!   `r_wk = 2‖g̃_k‖/μ` (4a), `r_gk = 2L‖g̃_k‖/μ` (4b). These guarantee the
+//!   iterates stay inside the grid, but are extremely conservative — at
+//!   condition number κ they put the lattice span at ~κ·‖g̃‖, so with few
+//!   bits the spacing dwarfs the step size.
+//! * [`RadiusMode::Practical`] — trajectory-scaled radii. The quantity the
+//!   downlink actually quantizes is `u_{k,t}`, whose distance from the grid
+//!   center `w̃_k` is bounded by the accumulated steps `≈ αT‖g̃_k‖`; the "+"
+//!   uplink quantizes `g_ξ(w_{k,t})` whose distance from its center
+//!   `g_ξ(w̃_k)` is at most `L‖w_{k,t} − w̃_k‖`. Radii are therefore
+//!   `r_w = slack·αT‖g̃‖/√d` and `r_g = L·r_w` per coordinate (the √d folds
+//!   the vector-norm bound down to coordinate scale; rare out-of-grid
+//!   coordinates saturate and are counted). This is the regime the paper's
+//!   *experiments* run in — its §4 notes the theoretical bounds "are only
+//!   sufficient conditions and may be very conservative, and we may be able
+//!   to quantize in practice well beyond those bounds".
+//!
+//! Because M-SVRG's memory unit makes `‖g̃_k‖` non-increasing, both modes
+//! shrink monotonically over epochs, which is what preserves linear
+//! convergence with a *fixed* number of bits (Proposition 5).
+//!
+//! Both sides of every link construct grids from replicated state only
+//! (values that were themselves communicated), so no grid parameters ever
+//! travel on the wire.
+
+use anyhow::Result;
+
+use super::grid::Grid;
+
+/// How adaptive radii scale with the snapshot gradient norm.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RadiusMode {
+    /// Paper eqs. (4a)/(4b): `r_w = 2‖g̃‖/μ`, `r_g = 2L‖g̃‖/μ`.
+    Theoretical,
+    /// Trajectory-scaled: `r_w = slack·αT‖g̃‖/√d`, `r_g = L·r_w`.
+    Practical { alpha: f64, epoch_len: usize },
+}
+
+/// How a link builds its quantization grid each epoch.
+#[derive(Clone, Debug, PartialEq)]
+pub enum GridPolicy {
+    /// Fixed lattice `R(c₀, r₀)` for all epochs (QM-SVRG-F and Q-baselines).
+    Fixed { radius: f64 },
+    /// Paper's adaptive lattice: radius scales with the snapshot gradient
+    /// norm and shrinks as the memory unit ratchets `‖g̃_k‖` down.
+    Adaptive(AdaptivePolicy),
+}
+
+/// Parameters of the adaptive policy.
+#[derive(Clone, Debug, PartialEq)]
+pub struct AdaptivePolicy {
+    /// Strong-convexity constant μ of the objective.
+    pub mu: f64,
+    /// Smoothness constant L of the objective.
+    pub l_smooth: f64,
+    /// Problem dimension (used by the practical mode's √d normalisation).
+    pub dim: usize,
+    /// Radius scaling mode.
+    pub mode: RadiusMode,
+    /// Safety multiplier on the radius (default 2.0 in practical mode to
+    /// absorb quantization-noise accumulation; 1.0 = paper in theoretical).
+    pub slack: f64,
+    /// Radius floor, so the grid never collapses below fp-noise scale.
+    pub min_radius: f64,
+}
+
+impl AdaptivePolicy {
+    /// The paper's theoretical radii (eqs. 4a/4b).
+    pub fn theoretical(mu: f64, l_smooth: f64) -> Self {
+        Self {
+            mu,
+            l_smooth,
+            dim: 1,
+            mode: RadiusMode::Theoretical,
+            slack: 1.0,
+            min_radius: 1e-12,
+        }
+    }
+
+    /// Trajectory-scaled radii (the experiments' regime).
+    pub fn practical(mu: f64, l_smooth: f64, dim: usize, alpha: f64, epoch_len: usize) -> Self {
+        Self {
+            mu,
+            l_smooth,
+            dim,
+            mode: RadiusMode::Practical { alpha, epoch_len },
+            slack: 2.0,
+            min_radius: 1e-12,
+        }
+    }
+
+    /// Backwards-compatible alias for [`AdaptivePolicy::theoretical`].
+    pub fn new(mu: f64, l_smooth: f64) -> Self {
+        Self::theoretical(mu, l_smooth)
+    }
+
+    /// Downlink (parameter) radius at snapshot gradient norm `‖g̃_k‖`.
+    pub fn r_w(&self, snapshot_grad_norm: f64) -> f64 {
+        let r = match self.mode {
+            RadiusMode::Theoretical => 2.0 * snapshot_grad_norm / self.mu,
+            RadiusMode::Practical { alpha, epoch_len } => {
+                alpha * epoch_len as f64 * snapshot_grad_norm / (self.dim as f64).sqrt()
+            }
+        };
+        (r * self.slack).max(self.min_radius)
+    }
+
+    /// Uplink (gradient) radius at snapshot gradient norm `‖g̃_k‖`.
+    pub fn r_g(&self, snapshot_grad_norm: f64) -> f64 {
+        match self.mode {
+            RadiusMode::Theoretical => {
+                (2.0 * self.l_smooth * snapshot_grad_norm / self.mu * self.slack)
+                    .max(self.min_radius)
+            }
+            // Lipschitz amplification of the parameter displacement. The
+            // spectral bound L overshoots the *per-coordinate* gradient
+            // change by ~√d on isotropic data (row norm vs spectral norm of
+            // the Hessian), so the practical radius uses L/√d — without this
+            // the d=784 runs drown in uplink quantization noise.
+            RadiusMode::Practical { .. } => {
+                (self.l_smooth / (self.dim as f64).sqrt() * self.r_w(snapshot_grad_norm))
+                    .max(self.min_radius)
+            }
+        }
+    }
+}
+
+impl GridPolicy {
+    /// Grid for the parameter (downlink) channel at this epoch.
+    ///
+    /// * fixed: centered wherever the link state was initialised (caller
+    ///   passes the initial center once and keeps reusing it);
+    /// * adaptive: centered at the current shared snapshot `w̃_k`.
+    pub fn w_grid(&self, center: &[f64], snapshot_grad_norm: f64, bits: u8) -> Result<Grid> {
+        match self {
+            GridPolicy::Fixed { radius } => Grid::uniform(center.to_vec(), *radius, bits),
+            GridPolicy::Adaptive(p) => {
+                Grid::uniform(center.to_vec(), p.r_w(snapshot_grad_norm), bits)
+            }
+        }
+    }
+
+    /// Grid for the gradient (uplink) channel at this epoch.
+    pub fn g_grid(&self, center: &[f64], snapshot_grad_norm: f64, bits: u8) -> Result<Grid> {
+        match self {
+            GridPolicy::Fixed { radius } => Grid::uniform(center.to_vec(), *radius, bits),
+            GridPolicy::Adaptive(p) => {
+                Grid::uniform(center.to_vec(), p.r_g(snapshot_grad_norm), bits)
+            }
+        }
+    }
+
+    pub fn is_adaptive(&self) -> bool {
+        matches!(self, GridPolicy::Adaptive(_))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn theoretical_radii_match_paper_formulas() {
+        let p = AdaptivePolicy::theoretical(0.2, 3.0);
+        let gnorm = 1.5;
+        assert!((p.r_w(gnorm) - 2.0 * 1.5 / 0.2).abs() < 1e-12);
+        assert!((p.r_g(gnorm) - 2.0 * 3.0 * 1.5 / 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn practical_radii_match_trajectory_bound() {
+        let p = AdaptivePolicy::practical(0.2, 3.0, 9, 0.2, 8);
+        let gnorm = 1.5;
+        let r_w = 2.0 * 0.2 * 8.0 * 1.5 / 3.0; // slack·αT‖g̃‖/√9
+        assert!((p.r_w(gnorm) - r_w).abs() < 1e-12);
+        // uplink radius = (L/√d)·r_w = (3/3)·r_w
+        assert!((p.r_g(gnorm) - r_w).abs() < 1e-12);
+    }
+
+    #[test]
+    fn practical_much_tighter_than_theoretical() {
+        let th = AdaptivePolicy::theoretical(0.2, 2.45);
+        let pr = AdaptivePolicy::practical(0.2, 2.45, 9, 0.2, 8);
+        // at κ ≈ 12 the theoretical lattice is ~9x wider
+        assert!(th.r_w(1.0) > 8.0 * pr.r_w(1.0));
+        assert!(th.r_g(1.0) > 8.0 * pr.r_g(1.0));
+    }
+
+    #[test]
+    fn radius_floor_kicks_in() {
+        let p = AdaptivePolicy::theoretical(0.2, 3.0);
+        assert_eq!(p.r_w(0.0), p.min_radius);
+        assert_eq!(p.r_g(0.0), p.min_radius);
+    }
+
+    #[test]
+    fn adaptive_grid_shrinks_with_gradient() {
+        let pol = GridPolicy::Adaptive(AdaptivePolicy::theoretical(0.2, 3.0));
+        let c = vec![0.0; 4];
+        let g1 = pol.w_grid(&c, 1.0, 5).unwrap();
+        let g2 = pol.w_grid(&c, 0.1, 5).unwrap();
+        assert!(g2.radius()[0] < g1.radius()[0]);
+        assert!((g2.radius()[0] / g1.radius()[0] - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fixed_grid_ignores_gradient() {
+        let pol = GridPolicy::Fixed { radius: 2.5 };
+        let c = vec![1.0; 3];
+        let g1 = pol.w_grid(&c, 1.0, 4).unwrap();
+        let g2 = pol.w_grid(&c, 1e-9, 4).unwrap();
+        assert_eq!(g1.radius(), g2.radius());
+        assert_eq!(g1.radius()[0], 2.5);
+    }
+
+    #[test]
+    fn uplink_radius_amplification() {
+        // theoretical: r_g / r_w = L (eq. 4b); practical: L/√d
+        let th = AdaptivePolicy::theoretical(0.5, 7.0);
+        assert!((th.r_g(2.0) / th.r_w(2.0) - 7.0).abs() < 1e-12);
+        let pr = AdaptivePolicy::practical(0.5, 7.0, 16, 0.1, 10);
+        assert!((pr.r_g(2.0) / pr.r_w(2.0) - 7.0 / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slack_multiplies_radius() {
+        let mut p = AdaptivePolicy::theoretical(0.2, 3.0);
+        let base = p.r_w(1.0);
+        p.slack = 1.5;
+        assert!((p.r_w(1.0) - 1.5 * base).abs() < 1e-12);
+    }
+}

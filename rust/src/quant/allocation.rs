@@ -1,0 +1,183 @@
+//! Non-uniform bit allocation over coordinates (the general `{b_i}` of
+//! Definition 2 — the paper's experiments use the uniform special case).
+//!
+//! Given a total budget `b` and a per-coordinate scale (e.g. the gradient's
+//! per-coordinate standard deviation, or the adaptive radius), allocate more
+//! bits to coordinates with a larger dynamic range. With a uniform grid the
+//! per-coordinate URQ error is `spacing_i²/4 ∝ r_i²/4^{b_i}`, so the total
+//! error `Σ r_i² 4^{-b_i}` is minimized (continuous relaxation, by Lagrange
+//! multipliers) at
+//!
+//! `b_i = b/d + log₂(r_i / geomean(r))`
+//!
+//! — the classic reverse-water-filling solution. [`allocate_bits`] rounds
+//! that solution to integers while preserving the exact total budget.
+
+/// Allocate `total_bits` across coordinates proportionally to
+/// `log2(scale_i / geomean)`, each in `[1, max_bits]`, preserving
+/// `Σ b_i = total_bits` exactly.
+///
+/// Scales that are zero/non-finite are treated as the smallest positive
+/// scale (they still need ≥1 bit to be representable on the wire).
+pub fn allocate_bits(scales: &[f64], total_bits: u64, max_bits: u8) -> Vec<u8> {
+    let d = scales.len();
+    assert!(d > 0, "empty allocation");
+    assert!(
+        total_bits >= d as u64,
+        "budget {total_bits} cannot give every one of {d} coordinates a bit"
+    );
+    assert!(max_bits >= 1 && max_bits <= 32);
+    assert!(
+        (max_bits as u64) * (d as u64) >= total_bits,
+        "budget {total_bits} exceeds {d} x {max_bits}"
+    );
+
+    // sanitize scales
+    let min_pos = scales
+        .iter()
+        .copied()
+        .filter(|s| s.is_finite() && *s > 0.0)
+        .fold(f64::INFINITY, f64::min);
+    let fallback = if min_pos.is_finite() { min_pos } else { 1.0 };
+    let s: Vec<f64> = scales
+        .iter()
+        .map(|&x| if x.is_finite() && x > 0.0 { x } else { fallback })
+        .collect();
+
+    // continuous water-filling solution around the mean budget
+    let mean_log: f64 = s.iter().map(|x| x.log2()).sum::<f64>() / d as f64;
+    let base = total_bits as f64 / d as f64;
+    let ideal: Vec<f64> = s.iter().map(|x| base + (x.log2() - mean_log)).collect();
+
+    // round down into range, then distribute the remaining bits greedily to
+    // the coordinates with the largest fractional shortfall
+    let mut bits: Vec<u8> = ideal
+        .iter()
+        .map(|&x| x.floor().clamp(1.0, max_bits as f64) as u8)
+        .collect();
+    let mut used: u64 = bits.iter().map(|&b| b as u64).sum();
+
+    // greedy corrections to hit the exact budget
+    while used < total_bits {
+        // give a bit to the coordinate with the largest (ideal - assigned)
+        let j = (0..d)
+            .filter(|&j| bits[j] < max_bits)
+            .max_by(|&a, &b| {
+                let da = ideal[a] - bits[a] as f64;
+                let db = ideal[b] - bits[b] as f64;
+                da.partial_cmp(&db).unwrap()
+            })
+            .expect("budget <= d*max_bits guarantees a candidate");
+        bits[j] += 1;
+        used += 1;
+    }
+    while used > total_bits {
+        // take a bit from the coordinate with the smallest (ideal - assigned)
+        let j = (0..d)
+            .filter(|&j| bits[j] > 1)
+            .min_by(|&a, &b| {
+                let da = ideal[a] - bits[a] as f64;
+                let db = ideal[b] - bits[b] as f64;
+                da.partial_cmp(&db).unwrap()
+            })
+            .expect("budget >= d guarantees a candidate");
+        bits[j] -= 1;
+        used -= 1;
+    }
+    bits
+}
+
+/// Total URQ error proxy `Σ r_i² 4^{-b_i}` (lower is better) — what the
+/// allocator minimizes; exposed for the ablation bench.
+pub fn error_proxy(scales: &[f64], bits: &[u8]) -> f64 {
+    scales
+        .iter()
+        .zip(bits)
+        .map(|(&r, &b)| r * r * 0.25f64.powi(b as i32))
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_scales_give_uniform_bits() {
+        let bits = allocate_bits(&[2.0; 8], 24, 16);
+        assert_eq!(bits, vec![3u8; 8]);
+        assert_eq!(bits.iter().map(|&b| b as u64).sum::<u64>(), 24);
+    }
+
+    #[test]
+    fn budget_preserved_exactly() {
+        let scales = [0.1, 1.0, 10.0, 100.0, 3.0];
+        for budget in [5u64, 13, 27, 80] {
+            let bits = allocate_bits(&scales, budget, 32);
+            assert_eq!(
+                bits.iter().map(|&b| b as u64).sum::<u64>(),
+                budget,
+                "budget {budget}"
+            );
+            assert!(bits.iter().all(|&b| (1..=32).contains(&b)));
+        }
+    }
+
+    #[test]
+    fn wider_coordinates_get_more_bits() {
+        let scales = [0.01, 0.1, 1.0, 10.0];
+        let bits = allocate_bits(&scales, 20, 16);
+        assert!(bits[0] <= bits[1]);
+        assert!(bits[1] <= bits[2]);
+        assert!(bits[2] <= bits[3]);
+        assert!(bits[3] - bits[0] >= 3, "{bits:?}");
+    }
+
+    #[test]
+    fn beats_uniform_on_heterogeneous_scales() {
+        let scales: Vec<f64> = (0..16).map(|i| 10f64.powi(i % 4)).collect();
+        let budget = 16 * 5;
+        let nonuniform = allocate_bits(&scales, budget, 16);
+        let uniform = vec![5u8; 16];
+        assert!(
+            error_proxy(&scales, &nonuniform) < error_proxy(&scales, &uniform) * 0.5,
+            "nonuniform {} vs uniform {}",
+            error_proxy(&scales, &nonuniform),
+            error_proxy(&scales, &uniform)
+        );
+    }
+
+    #[test]
+    fn handles_degenerate_scales() {
+        let bits = allocate_bits(&[0.0, f64::NAN, 1.0, f64::INFINITY], 12, 8);
+        assert_eq!(bits.iter().map(|&b| b as u64).sum::<u64>(), 12);
+        assert!(bits.iter().all(|&b| b >= 1));
+    }
+
+    #[test]
+    #[should_panic(expected = "budget")]
+    fn rejects_budget_below_one_bit_each() {
+        allocate_bits(&[1.0; 10], 5, 8);
+    }
+
+    #[test]
+    fn grid_accepts_allocation() {
+        // end-to-end: a per-coordinate allocation builds a valid grid and
+        // quantization round-trips
+        use crate::quant::{dequantize, pack_indices, quantize_urq, unpack_indices, Grid};
+        use crate::rng::Xoshiro256pp;
+        let scales = [0.1, 1.0, 5.0, 0.5];
+        let bits = allocate_bits(&scales, 14, 10);
+        let grid = Grid::new(vec![0.0; 4], scales.to_vec(), bits.clone()).unwrap();
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let w = [0.05, -0.8, 4.2, 0.3];
+        let (idx, stats) = quantize_urq(&w, &grid, &mut rng);
+        assert_eq!(stats.saturated, 0);
+        let payload = pack_indices(&idx, grid.bits()).unwrap();
+        assert_eq!(payload.bits, 14);
+        let back = unpack_indices(&payload.bytes, grid.bits()).unwrap();
+        let wq = dequantize(&back, &grid);
+        for j in 0..4 {
+            assert!((wq[j] - w[j]).abs() <= grid.spacing(j) + 1e-12);
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Bit-packing wire codec for quantized vectors.
+//!
+//! The experiments count communication from *actual payload sizes*, so the
+//! codec packs each coordinate's lattice index with exactly `b_i` bits into a
+//! contiguous MSB-first bitstream. A `b/d = 3`, `d = 9` parameter vector is
+//! 27 bits ≈ 4 bytes on the wire — versus 576 bits for f64, the paper's
+//! "95% compression" headline.
+//!
+//! Grid parameters (center/radius) are *not* shipped: sender and receiver
+//! derive them from replicated shared state (see `quant::adaptive`), exactly
+//! like the paper's master/worker pair.
+
+use anyhow::{bail, Result};
+
+/// A quantized vector as it travels on the wire.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct QuantizedPayload {
+    /// Packed MSB-first index bitstream.
+    pub bytes: Vec<u8>,
+    /// Exact payload size in bits (`Σ b_i`) — the number the experiments log.
+    pub bits: u64,
+}
+
+/// Pack lattice indices, `bits[i]` bits for index `i`, MSB-first.
+///
+/// Hot path: word-wise — indices are shifted into a 64-bit accumulator and
+/// flushed a byte at a time, instead of one wire bit per loop iteration
+/// (§Perf: ~6x over the bit-by-bit version at d=784).
+pub fn pack_indices(idx: &[u32], bits: &[u8]) -> Result<QuantizedPayload> {
+    if idx.len() != bits.len() {
+        bail!("idx/bits length mismatch: {} vs {}", idx.len(), bits.len());
+    }
+    let total_bits: u64 = bits.iter().map(|&b| b as u64).sum();
+    let mut bytes = Vec::with_capacity(total_bits.div_ceil(8) as usize);
+    let mut acc: u64 = 0; // MSB-aligned bit accumulator
+    let mut filled: u32 = 0; // bits currently in acc
+    for (&k, &b) in idx.iter().zip(bits) {
+        if b == 0 || b > 32 {
+            bail!("bits out of range: {b}");
+        }
+        if b < 32 && k >= (1u32 << b) {
+            bail!("index {k} does not fit in {b} bits");
+        }
+        // append b bits of k below the already-filled prefix
+        acc |= (k as u64) << (64 - b as u32 - filled);
+        filled += b as u32;
+        while filled >= 8 {
+            bytes.push((acc >> 56) as u8);
+            acc <<= 8;
+            filled -= 8;
+        }
+    }
+    if filled > 0 {
+        bytes.push((acc >> 56) as u8);
+    }
+    debug_assert_eq!(bytes.len() as u64, total_bits.div_ceil(8));
+    Ok(QuantizedPayload {
+        bytes,
+        bits: total_bits,
+    })
+}
+
+/// Unpack `bits.len()` indices from an MSB-first bitstream (word-wise twin
+/// of [`pack_indices`]).
+pub fn unpack_indices(payload: &[u8], bits: &[u8]) -> Result<Vec<u32>> {
+    let total_bits: u64 = bits.iter().map(|&b| b as u64).sum();
+    if (payload.len() as u64) < total_bits.div_ceil(8) {
+        bail!(
+            "payload too short: {} bytes for {} bits",
+            payload.len(),
+            total_bits
+        );
+    }
+    let mut out = Vec::with_capacity(bits.len());
+    let mut acc: u64 = 0; // MSB-aligned
+    let mut filled: u32 = 0;
+    let mut next_byte = 0usize;
+    for &b in bits {
+        if b == 0 || b > 32 {
+            bail!("bits out of range: {b}");
+        }
+        while filled < b as u32 {
+            // payload length was validated above; pad with zeros past the end
+            let byte = payload.get(next_byte).copied().unwrap_or(0);
+            next_byte += 1;
+            acc |= (byte as u64) << (56 - filled);
+            filled += 8;
+        }
+        out.push((acc >> (64 - b as u32)) as u32);
+        acc <<= b as u32;
+        filled -= b as u32;
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn roundtrip_uniform_bits() {
+        let idx = vec![0u32, 7, 3, 5, 1, 6, 2, 4];
+        let bits = vec![3u8; 8];
+        let p = pack_indices(&idx, &bits).unwrap();
+        assert_eq!(p.bits, 24);
+        assert_eq!(p.bytes.len(), 3);
+        assert_eq!(unpack_indices(&p.bytes, &bits).unwrap(), idx);
+    }
+
+    #[test]
+    fn roundtrip_mixed_bits() {
+        let idx = vec![1u32, 1023, 0, 65535, 7];
+        let bits = vec![1u8, 10, 4, 16, 3];
+        let p = pack_indices(&idx, &bits).unwrap();
+        assert_eq!(p.bits, 34);
+        assert_eq!(unpack_indices(&p.bytes, &bits).unwrap(), idx);
+    }
+
+    #[test]
+    fn roundtrip_32_bit() {
+        let idx = vec![u32::MAX, 0, 12345678];
+        let bits = vec![32u8; 3];
+        let p = pack_indices(&idx, &bits).unwrap();
+        assert_eq!(unpack_indices(&p.bytes, &bits).unwrap(), idx);
+    }
+
+    #[test]
+    fn rejects_overflowing_index() {
+        assert!(pack_indices(&[8], &[3]).is_err());
+        assert!(pack_indices(&[2], &[1]).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_lengths() {
+        assert!(pack_indices(&[1, 2], &[3]).is_err());
+        assert!(unpack_indices(&[0u8], &[16]).is_err());
+    }
+
+    #[test]
+    fn payload_bits_is_exact_sum() {
+        // the "95% compression" arithmetic: d=9, b/d=3 -> 27 bits vs 576.
+        let idx = vec![0u32; 9];
+        let bits = vec![3u8; 9];
+        let p = pack_indices(&idx, &bits).unwrap();
+        assert_eq!(p.bits, 27);
+        assert_eq!(p.bytes.len(), 4);
+        let f64_bits = 64 * 9;
+        assert!((p.bits as f64) / (f64_bits as f64) < 0.05);
+    }
+
+    #[test]
+    fn fuzz_roundtrip() {
+        let mut rng = Xoshiro256pp::seed_from_u64(99);
+        for _ in 0..200 {
+            let d = 1 + rng.gen_index(64);
+            let bits: Vec<u8> = (0..d).map(|_| 1 + rng.gen_index(16) as u8).collect();
+            let idx: Vec<u32> = bits
+                .iter()
+                .map(|&b| (rng.next_u64() % (1u64 << b)) as u32)
+                .collect();
+            let p = pack_indices(&idx, &bits).unwrap();
+            assert_eq!(unpack_indices(&p.bytes, &bits).unwrap(), idx);
+        }
+    }
+}

@@ -1,0 +1,204 @@
+//! The quantization space `R(c, r, {b_i})` of Definition 2.
+
+use anyhow::{bail, Result};
+
+/// A `d`-dimensional lattice with `2^{b_i}` points in coordinate `i`,
+/// centered at `c`, spanning `[c_i - r_i, c_i + r_i]` per coordinate.
+///
+/// `levels(i) = 2^{b_i}` points are placed uniformly over the span, so the
+/// spacing in coordinate `i` is `2 r_i / (2^{b_i} - 1)` and the worst-case
+/// per-coordinate rounding error of a nearest/URQ quantizer is half/one
+/// spacing respectively.
+#[derive(Clone, Debug)]
+pub struct Grid {
+    center: Vec<f64>,
+    radius: Vec<f64>,
+    bits: Vec<u8>,
+    // precomputed geometry (§Perf: keeps the per-coordinate quantizer free
+    // of divisions and shifts on the hot path)
+    lo: Vec<f64>,
+    spacing: Vec<f64>,
+    inv_spacing: Vec<f64>,
+}
+
+impl Grid {
+    /// Uniform bit allocation: `b_i = bits` for every coordinate (the
+    /// allocation used throughout the paper's experiments).
+    pub fn uniform(center: Vec<f64>, radius: f64, bits: u8) -> Result<Self> {
+        let d = center.len();
+        Self::new(center, vec![radius; d], vec![bits; d])
+    }
+
+    /// Fully general per-coordinate radii and bit widths.
+    pub fn new(center: Vec<f64>, radius: Vec<f64>, bits: Vec<u8>) -> Result<Self> {
+        if center.len() != radius.len() || center.len() != bits.len() {
+            bail!(
+                "grid dims disagree: center={} radius={} bits={}",
+                center.len(),
+                radius.len(),
+                bits.len()
+            );
+        }
+        if center.is_empty() {
+            bail!("empty grid");
+        }
+        for (i, &b) in bits.iter().enumerate() {
+            if b == 0 || b > 32 {
+                bail!("bits[{i}]={b} out of range 1..=32");
+            }
+        }
+        for (i, &r) in radius.iter().enumerate() {
+            if !(r > 0.0) || !r.is_finite() {
+                bail!("radius[{i}]={r} must be positive finite");
+            }
+        }
+        let d = center.len();
+        let mut lo = Vec::with_capacity(d);
+        let mut spacing = Vec::with_capacity(d);
+        let mut inv_spacing = Vec::with_capacity(d);
+        for i in 0..d {
+            let s = 2.0 * radius[i] / ((1u64 << bits[i]) - 1) as f64;
+            lo.push(center[i] - radius[i]);
+            spacing.push(s);
+            inv_spacing.push(1.0 / s);
+        }
+        Ok(Self {
+            center,
+            radius,
+            bits,
+            lo,
+            spacing,
+            inv_spacing,
+        })
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.center.len()
+    }
+
+    #[inline]
+    pub fn center(&self) -> &[f64] {
+        &self.center
+    }
+
+    #[inline]
+    pub fn radius(&self) -> &[f64] {
+        &self.radius
+    }
+
+    #[inline]
+    pub fn bits(&self) -> &[u8] {
+        &self.bits
+    }
+
+    /// Total bits `b = Σ b_i` for one quantized vector on this grid.
+    pub fn total_bits(&self) -> u64 {
+        self.bits.iter().map(|&b| b as u64).sum()
+    }
+
+    /// Number of lattice points in coordinate `i`.
+    #[inline]
+    pub fn levels(&self, i: usize) -> u64 {
+        1u64 << self.bits[i]
+    }
+
+    /// Lattice spacing in coordinate `i`.
+    #[inline]
+    pub fn spacing(&self, i: usize) -> f64 {
+        self.spacing[i]
+    }
+
+    /// Reciprocal lattice spacing in coordinate `i` (hot-path quantizer).
+    #[inline]
+    pub fn inv_spacing(&self, i: usize) -> f64 {
+        self.inv_spacing[i]
+    }
+
+    /// Lower edge of coordinate `i`.
+    #[inline]
+    pub fn lo(&self, i: usize) -> f64 {
+        self.lo[i]
+    }
+
+    /// Value of lattice index `k` in coordinate `i`.
+    #[inline]
+    pub fn value_of(&self, i: usize, k: u32) -> f64 {
+        debug_assert!((k as u64) < self.levels(i));
+        self.lo[i] + self.spacing[i] * k as f64
+    }
+
+    /// Whether `w` lies inside the convex hull of the grid (per coordinate).
+    pub fn contains(&self, w: &[f64]) -> bool {
+        debug_assert_eq!(w.len(), self.dim());
+        w.iter().enumerate().all(|(i, &x)| {
+            let lo = self.lo(i);
+            let hi = lo + 2.0 * self.radius[i];
+            x >= lo && x <= hi
+        })
+    }
+
+    /// Worst-case URQ error bound `max_{i,j} ||v_i - v_j||` restricted to one
+    /// cell: the cell diagonal `sqrt(Σ spacing_i^2)` (Example 3's error
+    /// boundedness, tightened to the containing cube).
+    pub fn cell_diagonal(&self) -> f64 {
+        (0..self.dim())
+            .map(|i| self.spacing(i) * self.spacing(i))
+            .sum::<f64>()
+            .sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_grid_geometry() {
+        let g = Grid::uniform(vec![0.0, 1.0], 2.0, 3).unwrap();
+        assert_eq!(g.dim(), 2);
+        assert_eq!(g.levels(0), 8);
+        assert!((g.spacing(0) - 4.0 / 7.0).abs() < 1e-12);
+        assert_eq!(g.lo(0), -2.0);
+        assert_eq!(g.lo(1), -1.0);
+        assert_eq!(g.value_of(0, 0), -2.0);
+        assert!((g.value_of(0, 7) - 2.0).abs() < 1e-12);
+        assert_eq!(g.total_bits(), 6);
+    }
+
+    #[test]
+    fn one_bit_grid_is_two_endpoints() {
+        let g = Grid::uniform(vec![5.0], 1.0, 1).unwrap();
+        assert_eq!(g.levels(0), 2);
+        assert_eq!(g.value_of(0, 0), 4.0);
+        assert_eq!(g.value_of(0, 1), 6.0);
+        assert_eq!(g.spacing(0), 2.0);
+    }
+
+    #[test]
+    fn contains_checks_hull() {
+        let g = Grid::uniform(vec![0.0, 0.0], 1.0, 4).unwrap();
+        assert!(g.contains(&[0.5, -0.5]));
+        assert!(g.contains(&[1.0, 1.0]));
+        assert!(!g.contains(&[1.01, 0.0]));
+    }
+
+    #[test]
+    fn rejects_bad_params() {
+        assert!(Grid::uniform(vec![], 1.0, 4).is_err());
+        assert!(Grid::uniform(vec![0.0], 0.0, 4).is_err());
+        assert!(Grid::uniform(vec![0.0], -1.0, 4).is_err());
+        assert!(Grid::uniform(vec![0.0], f64::NAN, 4).is_err());
+        assert!(Grid::uniform(vec![0.0], 1.0, 0).is_err());
+        assert!(Grid::uniform(vec![0.0], 1.0, 33).is_err());
+        assert!(Grid::new(vec![0.0], vec![1.0, 2.0], vec![4]).is_err());
+    }
+
+    #[test]
+    fn cell_diagonal_matches_manual() {
+        let g = Grid::new(vec![0.0, 0.0], vec![1.0, 2.0], vec![2, 2]).unwrap();
+        let s0: f64 = 2.0 / 3.0;
+        let s1: f64 = 4.0 / 3.0;
+        assert!((g.cell_diagonal() - (s0 * s0 + s1 * s1).sqrt()).abs() < 1e-12);
+    }
+}

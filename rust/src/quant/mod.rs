@@ -1,0 +1,27 @@
+//! Quantization: lattice grids, unbiased random quantizer (URQ), the wire
+//! codec, and the paper's adaptive-radius policy.
+//!
+//! This is the paper's central mechanism (Definition 2, Example 3, eqs. 4a/4b):
+//!
+//! * [`grid::Grid`] — a `d`-dimensional lattice `R(c, r, {b_i})` with `2^{b_i}`
+//!   points per coordinate, centered at `c`, covering `[c_i - r_i, c_i + r_i]`.
+//! * [`urq`] — the unbiased random quantizer: each coordinate rounds to one of
+//!   its two nearest lattice points with probabilities inversely proportional
+//!   to distance, so `E[q(w)] = w` for `w ∈ Conv(R)`.
+//! * [`codec`] — bit-packing of lattice indices into byte payloads. Communication
+//!   bits in the experiments are measured from these payloads, not just from
+//!   the closed-form `b_w + b_g` formulas.
+//! * [`adaptive`] — the QM-SVRG-A grid policy: centers track the shared
+//!   replicated state, radii shrink as `r_wk = 2‖g̃_k‖/μ`, `r_gk = 2L‖g̃_k‖/μ`.
+
+pub mod adaptive;
+pub mod allocation;
+pub mod codec;
+pub mod grid;
+pub mod urq;
+
+pub use adaptive::{AdaptivePolicy, GridPolicy, RadiusMode};
+pub use allocation::{allocate_bits, error_proxy};
+pub use codec::{pack_indices, unpack_indices, QuantizedPayload};
+pub use grid::Grid;
+pub use urq::{dequantize, dequantize_into, quantize_deterministic, quantize_urq, QuantStats};

@@ -1,0 +1,213 @@
+//! Unbiased random quantizer (URQ, Example 3) and the deterministic
+//! nearest-point quantizer.
+//!
+//! Per coordinate, a value `x` inside the grid falls between two lattice
+//! points `v_k <= x <= v_{k+1}`; URQ rounds up with probability
+//! `(x - v_k)/spacing` — inversely proportional to distance — which makes the
+//! quantizer unbiased: `E[q(x)] = x` (the construction of §4.1 / Sa et al.).
+//!
+//! Values *outside* the grid hull (the paper assumes `w ∈ Conv(R)`; in
+//! practice adaptive radii keep this true with overwhelming margin) saturate
+//! to the nearest edge. Saturation breaks unbiasedness, so it is counted in
+//! [`QuantStats`] and surfaced by the telemetry — experiments assert it stays
+//! rare.
+
+use super::grid::Grid;
+use crate::rng::Xoshiro256pp;
+
+/// Side effects of a quantization call, for telemetry/assertions.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct QuantStats {
+    /// Coordinates that fell outside the grid and were clamped.
+    pub saturated: u32,
+}
+
+/// URQ: map `w` to per-coordinate lattice indices using `rng` for the
+/// randomized rounding. Returns the index vector and saturation stats.
+pub fn quantize_urq(w: &[f64], grid: &Grid, rng: &mut Xoshiro256pp) -> (Vec<u32>, QuantStats) {
+    assert_eq!(w.len(), grid.dim(), "dim mismatch");
+    let mut idx = Vec::with_capacity(w.len());
+    let mut stats = QuantStats::default();
+    for (i, &x) in w.iter().enumerate() {
+        idx.push(quantize_coord_urq(x, grid, i, rng, &mut stats));
+    }
+    (idx, stats)
+}
+
+#[inline]
+fn quantize_coord_urq(
+    x: f64,
+    grid: &Grid,
+    i: usize,
+    rng: &mut Xoshiro256pp,
+    stats: &mut QuantStats,
+) -> u32 {
+    let lo = grid.lo(i);
+    let levels = grid.levels(i);
+    let t = (x - lo) * grid.inv_spacing(i); // fractional lattice coordinate
+    let max_k = (levels - 1) as f64;
+    // fp tolerance: reconstructing a lattice point can overshoot the hull by
+    // an ulp; only count *real* out-of-grid values as saturation
+    let tol = 1e-9 * (max_k + 1.0);
+    if t <= 0.0 {
+        if t < -tol {
+            stats.saturated += 1;
+        }
+        return 0;
+    }
+    if t >= max_k {
+        if t > max_k + tol {
+            stats.saturated += 1;
+        }
+        return (levels - 1) as u32;
+    }
+    let k = t.floor();
+    let frac = t - k;
+    // round up w.p. frac -> E[index] = t -> E[value] = x  (unbiased)
+    let up = rng.next_f64() < frac;
+    k as u32 + up as u32
+}
+
+/// Deterministic nearest-point quantizer (biased; used as an ablation and by
+/// the Q-baselines when configured).
+pub fn quantize_deterministic(w: &[f64], grid: &Grid) -> (Vec<u32>, QuantStats) {
+    assert_eq!(w.len(), grid.dim(), "dim mismatch");
+    let mut idx = Vec::with_capacity(w.len());
+    let mut stats = QuantStats::default();
+    for (i, &x) in w.iter().enumerate() {
+        let lo = grid.lo(i);
+        let spacing = grid.spacing(i);
+        let max_k = (grid.levels(i) - 1) as f64;
+        let t = (x - lo) / spacing;
+        let tol = 1e-9 * (max_k + 1.0);
+        let k = if t <= 0.0 {
+            if t < -tol {
+                stats.saturated += 1;
+            }
+            0.0
+        } else if t >= max_k {
+            if t > max_k + tol {
+                stats.saturated += 1;
+            }
+            max_k
+        } else {
+            t.round()
+        };
+        idx.push(k as u32);
+    }
+    (idx, stats)
+}
+
+/// Reconstruct the real-valued lattice point from indices (the receiver side;
+/// also what the sender must use as its own copy of the shared state).
+pub fn dequantize(idx: &[u32], grid: &Grid) -> Vec<f64> {
+    assert_eq!(idx.len(), grid.dim(), "dim mismatch");
+    idx.iter()
+        .enumerate()
+        .map(|(i, &k)| grid.value_of(i, k))
+        .collect()
+}
+
+/// Dequantize into a caller-owned buffer (hot-path variant, no allocation).
+pub fn dequantize_into(idx: &[u32], grid: &Grid, out: &mut [f64]) {
+    assert_eq!(idx.len(), grid.dim());
+    assert_eq!(out.len(), grid.dim());
+    for (i, &k) in idx.iter().enumerate() {
+        out[i] = grid.value_of(i, k);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rng() -> Xoshiro256pp {
+        Xoshiro256pp::seed_from_u64(1234)
+    }
+
+    #[test]
+    fn roundtrip_error_bounded_by_spacing() {
+        let grid = Grid::uniform(vec![0.0; 8], 2.0, 5).unwrap();
+        let mut r = rng();
+        let w: Vec<f64> = (0..8).map(|i| -1.9 + 0.47 * i as f64).collect();
+        let (idx, stats) = quantize_urq(&w, &grid, &mut r);
+        assert_eq!(stats.saturated, 0);
+        let wq = dequantize(&idx, &grid);
+        for (a, b) in w.iter().zip(&wq) {
+            assert!((a - b).abs() <= grid.spacing(0) + 1e-12);
+        }
+    }
+
+    #[test]
+    fn urq_is_unbiased() {
+        // E[q(x)] = x within statistical error.
+        let grid = Grid::uniform(vec![0.0], 1.0, 2).unwrap(); // 4 levels
+        let x = [0.3777];
+        let mut r = rng();
+        let n = 200_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let (idx, _) = quantize_urq(&x, &grid, &mut r);
+            sum += dequantize(&idx, &grid)[0];
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.3777).abs() < 2e-3, "mean={mean}");
+    }
+
+    #[test]
+    fn lattice_points_are_fixed_points() {
+        // A value already on the lattice must quantize to itself, always.
+        let grid = Grid::uniform(vec![1.0, -1.0], 3.0, 3).unwrap();
+        let w = vec![grid.value_of(0, 5), grid.value_of(1, 2)];
+        let mut r = rng();
+        for _ in 0..100 {
+            let (idx, stats) = quantize_urq(&w, &grid, &mut r);
+            assert_eq!(idx, vec![5, 2]);
+            assert_eq!(stats.saturated, 0);
+        }
+    }
+
+    #[test]
+    fn saturation_clamps_and_counts() {
+        let grid = Grid::uniform(vec![0.0, 0.0], 1.0, 4).unwrap();
+        let w = [5.0, -7.0];
+        let mut r = rng();
+        let (idx, stats) = quantize_urq(&w, &grid, &mut r);
+        assert_eq!(stats.saturated, 2);
+        assert_eq!(idx[0], (grid.levels(0) - 1) as u32);
+        assert_eq!(idx[1], 0);
+        let wq = dequantize(&idx, &grid);
+        assert_eq!(wq, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn deterministic_picks_nearest() {
+        let grid = Grid::uniform(vec![0.0], 1.0, 1).unwrap(); // {-1, +1}
+        let (idx, _) = quantize_deterministic(&[0.1], &grid);
+        assert_eq!(dequantize(&idx, &grid), vec![1.0]);
+        let (idx, _) = quantize_deterministic(&[-0.1], &grid);
+        assert_eq!(dequantize(&idx, &grid), vec![-1.0]);
+    }
+
+    #[test]
+    fn deterministic_error_at_most_half_spacing() {
+        let grid = Grid::uniform(vec![0.0; 4], 2.0, 6).unwrap();
+        let w = [0.123, -1.9, 1.99, 0.777];
+        let (idx, _) = quantize_deterministic(&w, &grid);
+        let wq = dequantize(&idx, &grid);
+        for (a, b) in w.iter().zip(&wq) {
+            assert!((a - b).abs() <= grid.spacing(0) / 2.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn dequantize_into_matches() {
+        let grid = Grid::uniform(vec![0.5; 3], 1.5, 4).unwrap();
+        let mut r = rng();
+        let (idx, _) = quantize_urq(&[0.1, 0.9, -0.3], &grid, &mut r);
+        let a = dequantize(&idx, &grid);
+        let mut b = vec![0.0; 3];
+        dequantize_into(&idx, &grid, &mut b);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,220 @@
+//! Run telemetry: trace recording to CSV / JSON-lines, and fixed-width
+//! experiment tables for terminal output.
+
+use std::fmt::Write as _;
+use std::fs::File;
+use std::io::Write as _;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::metrics::RunTrace;
+
+/// Render one run trace as CSV (header + one row per outer iteration).
+pub fn trace_to_csv(trace: &RunTrace) -> String {
+    let mut s = String::from("iteration,loss,grad_norm,test_f1,cum_bits\n");
+    for p in &trace.points {
+        let _ = writeln!(
+            s,
+            "{},{:.17e},{:.17e},{:.6},{}",
+            p.iteration, p.loss, p.grad_norm, p.test_f1, p.bits
+        );
+    }
+    s
+}
+
+/// Render one run trace as JSON lines (one object per point).
+pub fn trace_to_jsonl(trace: &RunTrace) -> String {
+    let mut s = String::new();
+    for p in &trace.points {
+        let _ = writeln!(
+            s,
+            "{{\"algo\":{},\"iteration\":{},\"loss\":{},\"grad_norm\":{},\"test_f1\":{},\"cum_bits\":{}}}",
+            json_str(&trace.algo),
+            p.iteration,
+            json_num(p.loss),
+            json_num(p.grad_norm),
+            json_num(p.test_f1),
+            p.bits
+        );
+    }
+    s
+}
+
+/// JSON string escaping (quotes, backslash, control chars).
+pub fn json_str(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+/// JSON-safe float formatting (NaN/inf are not valid JSON -> null).
+pub fn json_num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "null".to_string()
+    }
+}
+
+/// Write a set of traces into `dir/<algo>.csv` and a combined JSONL.
+pub fn write_traces(dir: &Path, traces: &[RunTrace]) -> Result<()> {
+    std::fs::create_dir_all(dir).with_context(|| format!("mkdir {}", dir.display()))?;
+    let mut combined = String::new();
+    for t in traces {
+        let fname = format!("{}.csv", sanitize(&t.algo));
+        let mut f = File::create(dir.join(&fname))?;
+        f.write_all(trace_to_csv(t).as_bytes())?;
+        combined.push_str(&trace_to_jsonl(t));
+    }
+    File::create(dir.join("traces.jsonl"))?.write_all(combined.as_bytes())?;
+    Ok(())
+}
+
+fn sanitize(name: &str) -> String {
+    name.chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || c == '-' || c == '_' {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect()
+}
+
+/// Fixed-width terminal table used by the experiment drivers and benches.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "column count mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (j, cell) in row.iter().enumerate() {
+                widths[j] = widths[j].max(cell.len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize], out: &mut String| {
+            for (j, cell) in cells.iter().enumerate() {
+                let _ = write!(out, "{:>width$}", cell, width = widths[j]);
+                if j + 1 < ncol {
+                    out.push_str("  ");
+                }
+            }
+            out.push('\n');
+        };
+        fmt_row(&self.header, &widths, &mut out);
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            fmt_row(row, &widths, &mut out);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::TracePoint;
+
+    fn trace() -> RunTrace {
+        let mut t = RunTrace::new("QM-SVRG-A+");
+        t.points.push(TracePoint {
+            iteration: 0,
+            loss: 0.693,
+            grad_norm: 0.5,
+            test_f1: 0.4,
+            bits: 128,
+        });
+        t.points.push(TracePoint {
+            iteration: 1,
+            loss: 0.41,
+            grad_norm: 0.2,
+            test_f1: 0.8,
+            bits: 300,
+        });
+        t
+    }
+
+    #[test]
+    fn csv_shape() {
+        let csv = trace_to_csv(&trace());
+        let lines: Vec<&str> = csv.trim().lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("iteration,loss"));
+        assert!(lines[1].starts_with("0,"));
+        assert!(lines[2].ends_with(",300"));
+    }
+
+    #[test]
+    fn jsonl_escapes_and_nan() {
+        assert_eq!(json_str("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
+        assert_eq!(json_num(f64::NAN), "null");
+        assert_eq!(json_num(1.5), "1.5");
+        let j = trace_to_jsonl(&trace());
+        assert_eq!(j.trim().lines().count(), 2);
+        assert!(j.contains("\"algo\":\"QM-SVRG-A+\""));
+    }
+
+    #[test]
+    fn write_traces_creates_files() {
+        let dir = std::env::temp_dir().join("qmsvrg_test_telemetry");
+        let _ = std::fs::remove_dir_all(&dir);
+        write_traces(&dir, &[trace()]).unwrap();
+        assert!(dir.join("QM-SVRG-A_.csv").exists());
+        assert!(dir.join("traces.jsonl").exists());
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["algo", "f1"]);
+        t.row(&["GD".into(), "0.775".into()]);
+        t.row(&["QM-SVRG-A+".into(), "0.806".into()]);
+        let r = t.render();
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // all rows same width
+        assert_eq!(lines[0].len(), lines[2].len());
+        assert_eq!(lines[2].len(), lines[3].len());
+    }
+
+    #[test]
+    #[should_panic(expected = "column count mismatch")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only one".into()]);
+    }
+}

@@ -1,0 +1,115 @@
+//! Property-testing mini-framework (no `proptest` offline): seeded random
+//! case generation with failure minimization by rerunning the failing seed.
+//!
+//! Usage:
+//! ```no_run
+//! # // no_run: doctest binaries bypass the rpath to libstdc++ that the xla
+//! # // crate's build config injects for normal targets
+//! use qmsvrg::testkit::forall;
+//! forall(100, 0xC0FFEE, |rng| {
+//!     let x = rng.gen_uniform(-10.0, 10.0);
+//!     assert!(x.abs() <= 10.0);
+//! });
+//! ```
+//!
+//! Each case gets an independent split of the root rng; on panic, the case
+//! index and per-case seed are printed so the failure replays exactly with
+//! [`replay`].
+
+use crate::rng::Xoshiro256pp;
+
+/// Run `prop` on `cases` independently-seeded rngs derived from `seed`.
+/// Panics with the failing case id on the first failure.
+pub fn forall(cases: u64, seed: u64, prop: impl Fn(&mut Xoshiro256pp) + std::panic::RefUnwindSafe) {
+    let root = Xoshiro256pp::seed_from_u64(seed);
+    for case in 0..cases {
+        let mut rng = root.split(case);
+        let result = std::panic::catch_unwind(|| {
+            let mut rng_inner = rng.clone();
+            prop(&mut rng_inner);
+        });
+        if let Err(payload) = result {
+            eprintln!(
+                "\nproperty failed at case {case}/{cases} (root seed {seed:#x}); \
+                 replay with testkit::replay({seed:#x}, {case}, prop)"
+            );
+            std::panic::resume_unwind(payload);
+        }
+        // keep the borrow checker happy about the clone above
+        let _ = &mut rng;
+    }
+}
+
+/// Re-run a single failing case from [`forall`] under a debugger or with
+/// extra logging.
+pub fn replay(seed: u64, case: u64, mut prop: impl FnMut(&mut Xoshiro256pp)) {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed).split(case);
+    prop(&mut rng);
+}
+
+/// Generate a random vector with entries uniform in [lo, hi).
+pub fn gen_vec(rng: &mut Xoshiro256pp, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+    (0..len).map(|_| rng.gen_uniform(lo, hi)).collect()
+}
+
+/// Generate a random unit-norm direction.
+pub fn gen_unit_vec(rng: &mut Xoshiro256pp, len: usize) -> Vec<f64> {
+    loop {
+        let v: Vec<f64> = (0..len).map(|_| rng.gen_normal()).collect();
+        let n = crate::linalg::nrm2(&v);
+        if n > 1e-9 {
+            return v.into_iter().map(|x| x / n).collect();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(50, 1, |rng| {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn forall_propagates_failure() {
+        forall(50, 2, |rng| {
+            // fails with probability 1 - 0.5^50 over the sweep
+            assert!(rng.next_f64() < 0.5);
+        });
+    }
+
+    #[test]
+    fn replay_reproduces_case_stream() {
+        let mut seen = Vec::new();
+        forall(5, 3, |rng| {
+            // property records nothing; just checks determinism below
+            let _ = rng.next_u64();
+        });
+        for case in 0..5 {
+            replay(3, case, |rng| seen.push(rng.next_u64()));
+        }
+        let again: Vec<u64> = (0..5)
+            .map(|case| {
+                let mut v = 0;
+                replay(3, case, |rng| v = rng.next_u64());
+                v
+            })
+            .collect();
+        assert_eq!(seen, again);
+    }
+
+    #[test]
+    fn gen_unit_vec_has_unit_norm() {
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        for _ in 0..20 {
+            let v = gen_unit_vec(&mut rng, 7);
+            assert!((crate::linalg::nrm2(&v) - 1.0).abs() < 1e-12);
+        }
+    }
+}

@@ -1,0 +1,292 @@
+//! Closed-form convergence bounds: Proposition 4, Proposition 5, and
+//! Corollary 6. These regenerate Fig. 2 and provide runtime sanity checks
+//! (e.g. asserting a configured run satisfies its own sufficient conditions).
+//!
+//! Notation: `alpha` step size, `t` epoch length, `bpd` bits per coordinate
+//! `b/d`, `d` dimension, `mu`/`l` the strong-convexity/smoothness constants.
+
+pub mod empirical;
+
+/// Problem geometry bundle handed to all bound functions.
+#[derive(Clone, Copy, Debug)]
+pub struct Geometry {
+    pub mu: f64,
+    pub l: f64,
+    pub d: usize,
+}
+
+impl Geometry {
+    pub fn new(mu: f64, l: f64, d: usize) -> Self {
+        assert!(mu > 0.0 && l >= mu && d > 0, "need 0 < mu <= L, d > 0");
+        Self { mu, l, d }
+    }
+
+    /// Condition number κ = L/μ.
+    pub fn kappa(&self) -> f64 {
+        self.l / self.mu
+    }
+
+    /// Step-size feasibility bound of Props. 4/5: `alpha < 1/(6L)`.
+    pub fn alpha_max(&self) -> f64 {
+        1.0 / (6.0 * self.l)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Proposition 4 — fixed grids
+// ---------------------------------------------------------------------------
+
+/// Contraction factor σ_k of Proposition 4 (fixed quantization grid):
+/// `σ = (1/(μT) + 3Lα²) / (α − 3Lα²)`. Returns `None` when the premise
+/// `α < 1/6L` fails or σ ∉ (0, 1).
+pub fn sigma_prop4(geom: &Geometry, alpha: f64, t: u64) -> Option<f64> {
+    if alpha <= 0.0 || alpha >= geom.alpha_max() || t == 0 {
+        return None;
+    }
+    let num = 1.0 / (geom.mu * t as f64) + 3.0 * geom.l * alpha * alpha;
+    let den = alpha - 3.0 * geom.l * alpha * alpha;
+    if den <= 0.0 {
+        return None;
+    }
+    let sigma = num / den;
+    (sigma > 0.0 && sigma < 1.0).then_some(sigma)
+}
+
+/// Minimum epoch length of Proposition 4: `T > 1/(μα(1 − 6Lα))`.
+pub fn min_t_prop4(geom: &Geometry, alpha: f64) -> Option<f64> {
+    let den = geom.mu * alpha * (1.0 - 6.0 * geom.l * alpha);
+    (alpha > 0.0 && den > 0.0).then(|| 1.0 / den)
+}
+
+/// Ambiguity-ball offset γ_k of Proposition 4 given the measured quantization
+/// error moments `delta` (gradient, uplink) and `beta_sum = Σ_t β_{k,t}`
+/// (parameter, downlink): `γ = (3Tα²δ + Σβ) / (2Tα − 12LTα² − 2/μ)`.
+pub fn gamma_prop4(
+    geom: &Geometry,
+    alpha: f64,
+    t: u64,
+    delta: f64,
+    beta_sum: f64,
+) -> Option<f64> {
+    let tf = t as f64;
+    let den = 2.0 * tf * alpha - 12.0 * geom.l * tf * alpha * alpha - 2.0 / geom.mu;
+    if den <= 0.0 {
+        return None;
+    }
+    Some((3.0 * tf * alpha * alpha * delta + beta_sum) / den)
+}
+
+// ---------------------------------------------------------------------------
+// Proposition 5 — adaptive grids
+// ---------------------------------------------------------------------------
+
+/// Quantization penalty term shared by Prop. 5 / Cor. 6:
+/// `(4L/μ) · (1 + 3L²α²) · d / (2^{b/d} − 1)²`.
+fn quant_penalty(geom: &Geometry, alpha: f64, bpd: f64) -> f64 {
+    let levels = (2f64).powf(bpd) - 1.0;
+    4.0 * geom.l / geom.mu * (1.0 + 3.0 * geom.l * geom.l * alpha * alpha) * geom.d as f64
+        / (levels * levels)
+}
+
+/// Contraction factor σ_k of Proposition 5 (adaptive grids, QM-SVRG-A):
+/// `σ = (1/T + 3μLα² + penalty·μ... )` — as printed:
+/// `σ = (1/T + 3μLα² + (4L/μ)(1+3L²α²)d/(2^{b/d}−1)²) / (μ(α − 3Lα²))`.
+pub fn sigma_prop5(geom: &Geometry, alpha: f64, t: u64, bpd: f64) -> Option<f64> {
+    if alpha <= 0.0 || alpha >= geom.alpha_max() || t == 0 {
+        return None;
+    }
+    let num = 1.0 / t as f64
+        + 3.0 * geom.mu * geom.l * alpha * alpha
+        + quant_penalty(geom, alpha, bpd);
+    let den = geom.mu * (alpha - 3.0 * geom.l * alpha * alpha);
+    if den <= 0.0 {
+        return None;
+    }
+    let sigma = num / den;
+    (sigma > 0.0 && sigma < 1.0).then_some(sigma)
+}
+
+/// Minimum bits per coordinate of Proposition 5 (premise for linear
+/// convergence at any rate): `b/d ≥ ⌈log2(1 + √(4Ld(1+3L²α²)/(μ²α(1−6Lα))))⌉`.
+pub fn min_bpd_prop5(geom: &Geometry, alpha: f64) -> Option<u32> {
+    let den = geom.mu * geom.mu * alpha * (1.0 - 6.0 * geom.l * alpha);
+    if alpha <= 0.0 || den <= 0.0 {
+        return None;
+    }
+    let inner = 4.0 * geom.l * geom.d as f64 * (1.0 + 3.0 * geom.l * geom.l * alpha * alpha) / den;
+    Some((1.0 + inner.sqrt()).log2().ceil() as u32)
+}
+
+/// Minimum epoch length of Proposition 5:
+/// `T > 1/(μα(1−6Lα) − (4L/μ)(1+3L²α²) d/(2^{b/d}−1)²)`.
+pub fn min_t_prop5(geom: &Geometry, alpha: f64, bpd: f64) -> Option<f64> {
+    let den = geom.mu * alpha * (1.0 - 6.0 * geom.l * alpha) - quant_penalty(geom, alpha, bpd);
+    (alpha > 0.0 && den > 0.0).then(|| 1.0 / den)
+}
+
+// ---------------------------------------------------------------------------
+// Corollary 6 — targeting a contraction factor σ̄
+// ---------------------------------------------------------------------------
+
+/// Minimum bits per coordinate to ensure contraction ≤ σ̄ (Corollary 6):
+/// `b/d ≥ ⌈log2(1 + √(4Ld(1+3L²α²)/(μ²α(σ̄ − 3Lασ̄ − 3Lα))))⌉`.
+pub fn min_bpd_cor6(geom: &Geometry, alpha: f64, sigma_bar: f64) -> Option<u32> {
+    let gap = sigma_bar - 3.0 * geom.l * alpha * sigma_bar - 3.0 * geom.l * alpha;
+    let den = geom.mu * geom.mu * alpha * gap;
+    if alpha <= 0.0 || !(0.0 < sigma_bar && sigma_bar < 1.0) || den <= 0.0 {
+        return None;
+    }
+    let inner = 4.0 * geom.l * geom.d as f64 * (1.0 + 3.0 * geom.l * geom.l * alpha * alpha) / den;
+    Some((1.0 + inner.sqrt()).log2().ceil() as u32)
+}
+
+/// Minimum epoch length to ensure contraction ≤ σ̄ (Corollary 6):
+/// `T > 1/(μα(σ̄ − 3Lασ̄ − 3Lα) − (1+3L²α²)·4Ld/(μ(2^{b/d}−1)²))`.
+pub fn min_t_cor6(geom: &Geometry, alpha: f64, sigma_bar: f64, bpd: f64) -> Option<f64> {
+    if alpha <= 0.0 || !(0.0 < sigma_bar && sigma_bar < 1.0) {
+        return None;
+    }
+    let gap = sigma_bar - 3.0 * geom.l * alpha * sigma_bar - 3.0 * geom.l * alpha;
+    let levels = (2f64).powf(bpd) - 1.0;
+    let den = geom.mu * alpha * gap
+        - (1.0 + 3.0 * geom.l * geom.l * alpha * alpha) * 4.0 * geom.l * geom.d as f64
+            / (geom.mu * levels * levels);
+    (den > 0.0).then(|| 1.0 / den)
+}
+
+/// Unquantized analogue of Cor. 6 (b/d → ∞): the grid penalty vanishes.
+pub fn min_t_unquantized(geom: &Geometry, alpha: f64, sigma_bar: f64) -> Option<f64> {
+    let gap = sigma_bar - 3.0 * geom.l * alpha * sigma_bar - 3.0 * geom.l * alpha;
+    let den = geom.mu * alpha * gap;
+    (alpha > 0.0 && 0.0 < sigma_bar && sigma_bar < 1.0 && den > 0.0).then(|| 1.0 / den)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn geom() -> Geometry {
+        // power-like standardized data: mu = 2λ = 0.2, L ≈ d/4 + 0.2
+        Geometry::new(0.2, 2.45, 9)
+    }
+
+    #[test]
+    fn geometry_validation() {
+        assert!(std::panic::catch_unwind(|| Geometry::new(0.0, 1.0, 2)).is_err());
+        assert!(std::panic::catch_unwind(|| Geometry::new(1.0, 0.5, 2)).is_err());
+        let g = geom();
+        assert!((g.kappa() - 12.25).abs() < 1e-12);
+        assert!((g.alpha_max() - 1.0 / 14.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop4_sigma_decreases_in_t() {
+        let g = geom();
+        let a = 0.02;
+        let s1 = sigma_prop4(&g, a, 400).unwrap();
+        let s2 = sigma_prop4(&g, a, 4000).unwrap();
+        assert!(s2 < s1);
+        assert!(s1 < 1.0 && s2 > 0.0);
+    }
+
+    #[test]
+    fn prop4_rejects_bad_alpha() {
+        let g = geom();
+        assert!(sigma_prop4(&g, g.alpha_max(), 100).is_none());
+        assert!(sigma_prop4(&g, -0.1, 100).is_none());
+        assert!(sigma_prop4(&g, 0.02, 0).is_none());
+    }
+
+    #[test]
+    fn prop4_min_t_is_binding() {
+        // at T slightly above the bound, sigma < 1 must hold
+        let g = geom();
+        let a = 0.02;
+        let tmin = min_t_prop4(&g, a).unwrap();
+        let t = tmin.ceil() as u64 + 1;
+        assert!(sigma_prop4(&g, a, t).is_some());
+    }
+
+    #[test]
+    fn prop5_more_bits_help() {
+        let g = geom();
+        let a = 0.02;
+        let t = 2000;
+        let s10 = sigma_prop5(&g, a, t, 10.0);
+        let s15 = sigma_prop5(&g, a, t, 15.0);
+        match (s10, s15) {
+            (Some(x), Some(y)) => assert!(y <= x),
+            (None, Some(_)) => {} // 10 bits infeasible, 15 feasible: also fine
+            other => panic!("unexpected: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn prop5_saturates_beyond_15_bits() {
+        // paper: "no difference between b/d=15 and b/d=64"
+        let g = geom();
+        let a = 0.02;
+        let t = 2000;
+        let s15 = sigma_prop5(&g, a, t, 15.0).unwrap();
+        let s64 = sigma_prop5(&g, a, t, 64.0).unwrap();
+        assert!((s15 - s64).abs() < 1e-3, "s15={s15} s64={s64}");
+    }
+
+    #[test]
+    fn cor6_bits_monotone_in_sigma_bar() {
+        // easier targets (bigger σ̄) need fewer bits
+        let g = geom();
+        let a = 0.01;
+        let b02 = min_bpd_cor6(&g, a, 0.2);
+        let b09 = min_bpd_cor6(&g, a, 0.9).unwrap();
+        if let Some(b02) = b02 {
+            assert!(b02 >= b09);
+        }
+        // d=10 -> d=1000 costs ~ log2(sqrt(100)) ≈ 3..4 bits (paper's remark)
+        let g10 = Geometry::new(0.2, 2.45, 10);
+        let g1000 = Geometry::new(0.2, 2.45, 1000);
+        let b10 = min_bpd_cor6(&g10, a, 0.9).unwrap();
+        let b1000 = min_bpd_cor6(&g1000, a, 0.9).unwrap();
+        let extra = b1000 as i64 - b10 as i64;
+        assert!((3..=4).contains(&extra), "extra bits = {extra}");
+    }
+
+    #[test]
+    fn cor6_min_t_decreases_with_bits_and_matches_unquantized_limit() {
+        let g = geom();
+        let a = 0.01;
+        let sb = 0.9;
+        let t8 = min_t_cor6(&g, a, sb, 8.0);
+        let t12 = min_t_cor6(&g, a, sb, 12.0).unwrap();
+        let t64 = min_t_cor6(&g, a, sb, 64.0).unwrap();
+        let tinf = min_t_unquantized(&g, a, sb).unwrap();
+        if let Some(t8) = t8 {
+            assert!(t8 >= t12);
+        }
+        assert!(t12 >= t64);
+        assert!((t64 - tinf).abs() / tinf < 1e-6);
+    }
+
+    #[test]
+    fn cor6_infeasible_cases_return_none() {
+        let g = geom();
+        // huge alpha: gap negative
+        assert!(min_bpd_cor6(&g, 0.2, 0.5).is_none());
+        // tiny bits: penalty dominates
+        assert!(min_t_cor6(&g, 0.01, 0.9, 1.0).is_none());
+        // sigma_bar out of range
+        assert!(min_t_cor6(&g, 0.01, 1.5, 10.0).is_none());
+    }
+
+    #[test]
+    fn gamma_prop4_positive_when_feasible() {
+        let g = geom();
+        let a = 0.02;
+        let t = 2000;
+        let gamma = gamma_prop4(&g, a, t, 1e-3, 1e-2).unwrap();
+        assert!(gamma > 0.0);
+        // zero quantization error -> zero offset (recovers exact SVRG)
+        let gamma0 = gamma_prop4(&g, a, t, 0.0, 0.0).unwrap();
+        assert_eq!(gamma0, 0.0);
+    }
+}

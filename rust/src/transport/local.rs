@@ -1,0 +1,91 @@
+//! In-process transport: a pair of connected [`Duplex`] endpoints over
+//! `std::sync::mpsc` channels. This is what the single-process coordinator
+//! uses (one worker thread per shard).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use anyhow::{anyhow, Result};
+
+use super::{Duplex, Message};
+
+/// One end of an in-process duplex link.
+pub struct LocalDuplex {
+    tx: Sender<Message>,
+    rx: Receiver<Message>,
+}
+
+/// Create a connected (master_end, worker_end) pair.
+pub fn pair() -> (LocalDuplex, LocalDuplex) {
+    let (tx_a, rx_b) = channel();
+    let (tx_b, rx_a) = channel();
+    (
+        LocalDuplex { tx: tx_a, rx: rx_a },
+        LocalDuplex { tx: tx_b, rx: rx_b },
+    )
+}
+
+impl Duplex for LocalDuplex {
+    fn send(&mut self, msg: Message) -> Result<()> {
+        self.tx
+            .send(msg)
+            .map_err(|_| anyhow!("peer disconnected (send)"))
+    }
+
+    fn recv(&mut self) -> Result<Message> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("peer disconnected (recv)"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_between_threads() {
+        let (mut master, mut worker) = pair();
+        let t = std::thread::spawn(move || {
+            // worker echoes gradients until shutdown
+            loop {
+                match worker.recv().unwrap() {
+                    Message::ParamsRaw { w } => {
+                        worker.send(Message::GradRaw { g: w }).unwrap();
+                    }
+                    Message::Shutdown => break,
+                    other => panic!("unexpected {other:?}"),
+                }
+            }
+        });
+        master
+            .send(Message::ParamsRaw {
+                w: vec![1.0, 2.0, 3.0],
+            })
+            .unwrap();
+        match master.recv().unwrap() {
+            Message::GradRaw { g } => assert_eq!(g, vec![1.0, 2.0, 3.0]),
+            other => panic!("unexpected {other:?}"),
+        }
+        master.send(Message::Shutdown).unwrap();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn disconnect_is_an_error_not_a_hang() {
+        let (mut master, worker) = pair();
+        drop(worker);
+        assert!(master.send(Message::Ack).is_err());
+        assert!(master.recv().is_err());
+    }
+
+    #[test]
+    fn messages_preserve_order() {
+        let (mut a, mut b) = pair();
+        for i in 0..100u32 {
+            a.send(Message::EpochBegin { epoch: i }).unwrap();
+        }
+        for i in 0..100u32 {
+            assert_eq!(b.recv().unwrap(), Message::EpochBegin { epoch: i });
+        }
+    }
+}

@@ -1,0 +1,328 @@
+//! Message-passing layer between the master and the workers.
+//!
+//! * [`Message`] — the protocol, with an exact binary wire format (used
+//!   verbatim by the TCP transport, and for size accounting everywhere);
+//! * [`local`] — in-process duplex pairs over `std::sync::mpsc` (the offline
+//!   registry has no tokio; the coordinator's event loop is thread-based);
+//! * [`tcp`] — length-framed `std::net::TcpStream` transport for real
+//!   multi-process deployments (`examples/distributed_tcp.rs`);
+//! * [`sim`] — a latency/bandwidth model wrapper that accumulates *virtual*
+//!   wall-clock per link, used to study the uplink≪downlink asymmetry the
+//!   paper motivates (§1).
+
+pub mod local;
+pub mod sim;
+pub mod tcp;
+
+pub use local::pair;
+pub use sim::{LinkModel, SimDuplex};
+
+use anyhow::{bail, Result};
+
+/// Protocol messages. Quantized payloads carry packed lattice indices; the
+/// accompanying `bits` is the exact payload size `Σ b_i` (what the ledger
+/// meters — framing overhead is reported separately by the transports).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Message {
+    // ---- master -> worker
+    /// Start epoch `epoch`: compute and uplink the node gradient at the
+    /// current snapshot.
+    EpochBegin { epoch: u32 },
+    /// Memory unit rejected the new snapshot: restore the previous one and
+    /// re-cache its node gradient.
+    EpochRevert,
+    /// Snapshot accepted; `gnorm` = ‖g̃_k‖ drives this epoch's grid radii.
+    EpochCommit { gnorm: f64 },
+    /// Inner-loop turn: uplink the snapshot gradient (quantized) and the
+    /// current-iterate gradient (raw or quantized per variant).
+    InnerRequest,
+    /// Quantized broadcast of `w_{k,t}` (packed URQ indices on `R_{w,k}`).
+    ParamsQ { payload: Vec<u8>, bits: u64 },
+    /// Unquantized broadcast (exact SVRG/M-SVRG).
+    ParamsRaw { w: Vec<f64> },
+    /// End of epoch: set the snapshot to the stored iterate `w_{k,ζ}`.
+    SnapshotChoose { zeta: u32 },
+    /// Instrumentation (not metered): report local loss at the snapshot.
+    QueryLoss,
+    /// Terminate the worker loop.
+    Shutdown,
+
+    // ---- worker -> master
+    /// Exact node gradient (outer loop; 64d bits on the ledger).
+    GradRaw { g: Vec<f64> },
+    /// Quantized gradient (packed URQ indices on `R_{g_ξ,k}`).
+    GradQ { payload: Vec<u8>, bits: u64 },
+    /// Loss over this worker's shard (instrumentation).
+    LossValue { loss: f64 },
+    /// Generic acknowledgement.
+    Ack,
+}
+
+impl Message {
+    const TAG_EPOCH_BEGIN: u8 = 1;
+    const TAG_EPOCH_REVERT: u8 = 2;
+    const TAG_EPOCH_COMMIT: u8 = 3;
+    const TAG_INNER_REQUEST: u8 = 4;
+    const TAG_PARAMS_Q: u8 = 5;
+    const TAG_PARAMS_RAW: u8 = 6;
+    const TAG_SNAPSHOT_CHOOSE: u8 = 7;
+    const TAG_QUERY_LOSS: u8 = 8;
+    const TAG_SHUTDOWN: u8 = 9;
+    const TAG_GRAD_RAW: u8 = 10;
+    const TAG_GRAD_Q: u8 = 11;
+    const TAG_LOSS_VALUE: u8 = 12;
+    const TAG_ACK: u8 = 13;
+
+    /// Serialize to the wire format: `tag` byte + fields in little-endian.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(16);
+        match self {
+            Message::EpochBegin { epoch } => {
+                b.push(Self::TAG_EPOCH_BEGIN);
+                b.extend_from_slice(&epoch.to_le_bytes());
+            }
+            Message::EpochRevert => b.push(Self::TAG_EPOCH_REVERT),
+            Message::EpochCommit { gnorm } => {
+                b.push(Self::TAG_EPOCH_COMMIT);
+                b.extend_from_slice(&gnorm.to_le_bytes());
+            }
+            Message::InnerRequest => b.push(Self::TAG_INNER_REQUEST),
+            Message::ParamsQ { payload, bits } => {
+                b.push(Self::TAG_PARAMS_Q);
+                b.extend_from_slice(&bits.to_le_bytes());
+                b.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+                b.extend_from_slice(payload);
+            }
+            Message::ParamsRaw { w } => {
+                b.push(Self::TAG_PARAMS_RAW);
+                encode_f64s(&mut b, w);
+            }
+            Message::SnapshotChoose { zeta } => {
+                b.push(Self::TAG_SNAPSHOT_CHOOSE);
+                b.extend_from_slice(&zeta.to_le_bytes());
+            }
+            Message::QueryLoss => b.push(Self::TAG_QUERY_LOSS),
+            Message::Shutdown => b.push(Self::TAG_SHUTDOWN),
+            Message::GradRaw { g } => {
+                b.push(Self::TAG_GRAD_RAW);
+                encode_f64s(&mut b, g);
+            }
+            Message::GradQ { payload, bits } => {
+                b.push(Self::TAG_GRAD_Q);
+                b.extend_from_slice(&bits.to_le_bytes());
+                b.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+                b.extend_from_slice(payload);
+            }
+            Message::LossValue { loss } => {
+                b.push(Self::TAG_LOSS_VALUE);
+                b.extend_from_slice(&loss.to_le_bytes());
+            }
+            Message::Ack => b.push(Self::TAG_ACK),
+        }
+        b
+    }
+
+    /// Decode from the wire format.
+    pub fn decode(buf: &[u8]) -> Result<Message> {
+        let mut r = Reader { buf, pos: 0 };
+        let tag = r.u8()?;
+        let msg = match tag {
+            Self::TAG_EPOCH_BEGIN => Message::EpochBegin { epoch: r.u32()? },
+            Self::TAG_EPOCH_REVERT => Message::EpochRevert,
+            Self::TAG_EPOCH_COMMIT => Message::EpochCommit { gnorm: r.f64()? },
+            Self::TAG_INNER_REQUEST => Message::InnerRequest,
+            Self::TAG_PARAMS_Q => {
+                let bits = r.u64()?;
+                let len = r.u32()? as usize;
+                Message::ParamsQ {
+                    payload: r.bytes(len)?.to_vec(),
+                    bits,
+                }
+            }
+            Self::TAG_PARAMS_RAW => Message::ParamsRaw { w: r.f64s()? },
+            Self::TAG_SNAPSHOT_CHOOSE => Message::SnapshotChoose { zeta: r.u32()? },
+            Self::TAG_QUERY_LOSS => Message::QueryLoss,
+            Self::TAG_SHUTDOWN => Message::Shutdown,
+            Self::TAG_GRAD_RAW => Message::GradRaw { g: r.f64s()? },
+            Self::TAG_GRAD_Q => {
+                let bits = r.u64()?;
+                let len = r.u32()? as usize;
+                Message::GradQ {
+                    payload: r.bytes(len)?.to_vec(),
+                    bits,
+                }
+            }
+            Self::TAG_LOSS_VALUE => Message::LossValue { loss: r.f64()? },
+            Self::TAG_ACK => Message::Ack,
+            other => bail!("unknown message tag {other}"),
+        };
+        if r.pos != buf.len() {
+            bail!("trailing bytes after message (tag {tag})");
+        }
+        Ok(msg)
+    }
+
+    /// Logical payload bits this message adds to the communication ledger
+    /// (the quantity the paper counts): packed bits for quantized payloads,
+    /// 64/coordinate for raw vectors, 0 for control/instrumentation.
+    pub fn ledger_bits(&self) -> u64 {
+        match self {
+            Message::ParamsQ { bits, .. } | Message::GradQ { bits, .. } => *bits,
+            Message::ParamsRaw { w } => 64 * w.len() as u64,
+            Message::GradRaw { g } => 64 * g.len() as u64,
+            _ => 0,
+        }
+    }
+}
+
+fn encode_f64s(b: &mut Vec<u8>, xs: &[f64]) {
+    b.extend_from_slice(&(xs.len() as u32).to_le_bytes());
+    for x in xs {
+        b.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("message truncated: need {n} bytes at {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.u32()? as usize;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.f64()?);
+        }
+        Ok(v)
+    }
+}
+
+/// A bidirectional, blocking message link (one end of a master↔worker pair).
+pub trait Duplex: Send {
+    fn send(&mut self, msg: Message) -> Result<()>;
+    fn recv(&mut self) -> Result<Message>;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_messages() -> Vec<Message> {
+        vec![
+            Message::EpochBegin { epoch: 7 },
+            Message::EpochRevert,
+            Message::EpochCommit { gnorm: 0.125 },
+            Message::InnerRequest,
+            Message::ParamsQ {
+                payload: vec![0xAB, 0xCD, 0x01],
+                bits: 21,
+            },
+            Message::ParamsRaw {
+                w: vec![1.5, -2.25, 0.0],
+            },
+            Message::SnapshotChoose { zeta: 3 },
+            Message::QueryLoss,
+            Message::Shutdown,
+            Message::GradRaw {
+                g: vec![f64::MIN_POSITIVE, -1e300],
+            },
+            Message::GradQ {
+                payload: vec![],
+                bits: 0,
+            },
+            Message::LossValue { loss: 0.693 },
+            Message::Ack,
+        ]
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_all_variants() {
+        for msg in all_messages() {
+            let bytes = msg.encode();
+            let back = Message::decode(&bytes).unwrap();
+            assert_eq!(back, msg, "roundtrip {msg:?}");
+        }
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Message::decode(&[]).is_err());
+        assert!(Message::decode(&[99]).is_err()); // unknown tag
+        assert!(Message::decode(&[Message::TAG_EPOCH_BEGIN, 1]).is_err()); // truncated
+        // trailing bytes
+        let mut b = Message::Ack.encode();
+        b.push(0);
+        assert!(Message::decode(&b).is_err());
+        // payload length beyond buffer
+        let mut b = vec![Message::TAG_GRAD_Q];
+        b.extend_from_slice(&5u64.to_le_bytes());
+        b.extend_from_slice(&1000u32.to_le_bytes());
+        assert!(Message::decode(&b).is_err());
+    }
+
+    #[test]
+    fn ledger_bits_by_kind() {
+        assert_eq!(
+            Message::ParamsQ {
+                payload: vec![0; 4],
+                bits: 27
+            }
+            .ledger_bits(),
+            27
+        );
+        assert_eq!(
+            Message::GradRaw {
+                g: vec![0.0; 9]
+            }
+            .ledger_bits(),
+            576
+        );
+        assert_eq!(Message::Ack.ledger_bits(), 0);
+        assert_eq!(Message::QueryLoss.ledger_bits(), 0);
+        assert_eq!(Message::LossValue { loss: 1.0 }.ledger_bits(), 0);
+    }
+
+    #[test]
+    fn fuzz_roundtrip_random_payloads() {
+        use crate::rng::Xoshiro256pp;
+        let mut rng = Xoshiro256pp::seed_from_u64(17);
+        for _ in 0..100 {
+            let n = rng.gen_index(50);
+            let payload: Vec<u8> = (0..n).map(|_| rng.next_u64() as u8).collect();
+            let msg = Message::GradQ {
+                payload,
+                bits: rng.next_u64() % 10_000,
+            };
+            assert_eq!(Message::decode(&msg.encode()).unwrap(), msg);
+            let w: Vec<f64> = (0..rng.gen_index(20)).map(|_| rng.gen_normal()).collect();
+            let msg = Message::ParamsRaw { w };
+            assert_eq!(Message::decode(&msg.encode()).unwrap(), msg);
+        }
+    }
+}

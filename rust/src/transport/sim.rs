@@ -1,0 +1,193 @@
+//! Simulated-network wrapper: accumulates *virtual* communication time per
+//! link from a latency + bandwidth model, without sleeping.
+//!
+//! This models the asymmetric links of §1 ("the uplink channel may have a
+//! much lower speed than the downlink channel"): a message of `b` payload
+//! bits costs `latency + b / rate` seconds in its direction. The
+//! uplink-vs-downlink experiment (`examples/uplink_tradeoff.rs`) uses this
+//! to convert measured bits into wall-clock estimates per algorithm.
+
+use anyhow::Result;
+
+use super::{Duplex, Message};
+
+/// Direction-specific link parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkModel {
+    /// Per-message latency (seconds).
+    pub latency_s: f64,
+    /// Uplink rate (bits/second) — worker → master.
+    pub uplink_bps: f64,
+    /// Downlink rate (bits/second) — master → worker.
+    pub downlink_bps: f64,
+}
+
+impl LinkModel {
+    /// An LTE-ish asymmetric profile (§1's motivating regime).
+    pub fn asymmetric_lte() -> Self {
+        Self {
+            latency_s: 0.010,
+            uplink_bps: 5e6,
+            downlink_bps: 50e6,
+        }
+    }
+
+    /// A symmetric datacenter-ish profile.
+    pub fn symmetric_fast() -> Self {
+        Self {
+            latency_s: 0.0001,
+            uplink_bps: 1e9,
+            downlink_bps: 1e9,
+        }
+    }
+
+    /// Virtual seconds to move `bits` in the given direction.
+    pub fn cost_s(&self, bits: u64, uplink: bool) -> f64 {
+        let rate = if uplink {
+            self.uplink_bps
+        } else {
+            self.downlink_bps
+        };
+        self.latency_s + bits as f64 / rate
+    }
+}
+
+/// Wraps a [`Duplex`] end and charges virtual time per message.
+///
+/// `is_master_end = true` means `send` travels on the downlink and `recv`
+/// consumes uplink messages.
+pub struct SimDuplex<D: Duplex> {
+    inner: D,
+    model: LinkModel,
+    is_master_end: bool,
+    /// Accumulated virtual seconds on this link (both directions).
+    pub virtual_time_s: f64,
+    /// Bits observed per direction (payload bits, as metered by the ledger).
+    pub uplink_bits: u64,
+    pub downlink_bits: u64,
+}
+
+impl<D: Duplex> SimDuplex<D> {
+    pub fn new(inner: D, model: LinkModel, is_master_end: bool) -> Self {
+        Self {
+            inner,
+            model,
+            is_master_end,
+            virtual_time_s: 0.0,
+            uplink_bits: 0,
+            downlink_bits: 0,
+        }
+    }
+
+    fn charge(&mut self, msg: &Message, sending: bool) {
+        let bits = msg.ledger_bits();
+        if bits == 0 {
+            // control messages still pay latency
+            self.virtual_time_s += self.model.latency_s;
+            return;
+        }
+        let uplink = self.is_master_end ^ sending; // master sends on downlink
+        self.virtual_time_s += self.model.cost_s(bits, uplink);
+        if uplink {
+            self.uplink_bits += bits;
+        } else {
+            self.downlink_bits += bits;
+        }
+    }
+}
+
+impl<D: Duplex> Duplex for SimDuplex<D> {
+    fn send(&mut self, msg: Message) -> Result<()> {
+        self.charge(&msg, true);
+        self.inner.send(msg)
+    }
+
+    fn recv(&mut self) -> Result<Message> {
+        let msg = self.inner.recv()?;
+        self.charge(&msg, false);
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::local::pair;
+
+    #[test]
+    fn cost_model_arithmetic() {
+        let m = LinkModel {
+            latency_s: 0.01,
+            uplink_bps: 1000.0,
+            downlink_bps: 10_000.0,
+        };
+        assert!((m.cost_s(100, true) - 0.11).abs() < 1e-12);
+        assert!((m.cost_s(100, false) - 0.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn master_send_charges_downlink() {
+        let (m_end, mut w_end) = pair();
+        let model = LinkModel {
+            latency_s: 0.0,
+            uplink_bps: 1.0,
+            downlink_bps: 2.0,
+        };
+        let mut master = SimDuplex::new(m_end, model, true);
+        // 2 coords raw = 128 bits on the downlink at 2 bps -> 64 s
+        master
+            .send(Message::ParamsRaw { w: vec![0.0, 1.0] })
+            .unwrap();
+        assert_eq!(master.downlink_bits, 128);
+        assert_eq!(master.uplink_bits, 0);
+        assert!((master.virtual_time_s - 64.0).abs() < 1e-9);
+        let _ = w_end.recv().unwrap();
+
+        // worker replies 128 bits on the uplink at 1 bps -> +128 s
+        w_end
+            .send(Message::GradRaw { g: vec![0.0, 1.0] })
+            .unwrap();
+        let _ = master.recv().unwrap();
+        assert_eq!(master.uplink_bits, 128);
+        assert!((master.virtual_time_s - 192.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn control_messages_pay_latency_only() {
+        let (m_end, mut w_end) = pair();
+        let model = LinkModel {
+            latency_s: 0.5,
+            uplink_bps: 1.0,
+            downlink_bps: 1.0,
+        };
+        let mut master = SimDuplex::new(m_end, model, true);
+        master.send(Message::InnerRequest).unwrap();
+        assert_eq!(master.virtual_time_s, 0.5);
+        assert_eq!(master.downlink_bits, 0);
+        let _ = w_end.recv().unwrap();
+    }
+
+    #[test]
+    fn quantized_messages_charge_packed_bits() {
+        let (m_end, mut w_end) = pair();
+        let mut master = SimDuplex::new(
+            m_end,
+            LinkModel {
+                latency_s: 0.0,
+                uplink_bps: 27.0,
+                downlink_bps: 1e9,
+            },
+            true,
+        );
+        w_end
+            .send(Message::GradQ {
+                payload: vec![0u8; 4],
+                bits: 27,
+            })
+            .unwrap();
+        let _ = master.recv().unwrap();
+        // 27 bits at 27 bps = 1 virtual second
+        assert!((master.virtual_time_s - 1.0).abs() < 1e-12);
+        assert_eq!(master.uplink_bits, 27);
+    }
+}

@@ -1,0 +1,330 @@
+//! The worker node: owns one data shard, answers the master's protocol.
+//!
+//! Workers keep replicated state (current iterate, snapshot, grid centers)
+//! that mirrors the master's, so quantization grids are constructed
+//! identically on both ends without shipping grid parameters.
+//!
+//! Gradient computation is pluggable via [`GradientSource`]:
+//! * [`LogisticRidge`] — pure-Rust shard;
+//! * [`XlaShard`] — the AOT JAX/Pallas artifact through PJRT
+//!   ([`crate::runtime::XlaWorkerKernel`]), shard resident on device.
+
+use anyhow::{bail, Context, Result};
+
+
+use crate::objective::{LogisticRidge, Objective};
+use crate::quant::{self, Grid, GridPolicy};
+use crate::rng::Xoshiro256pp;
+use crate::runtime::{XlaRuntime, XlaWorkerKernel};
+use crate::transport::{Duplex, Message};
+
+/// How a worker computes its shard gradients.
+///
+/// The two implementations are distinct *types* (not enum variants) because
+/// the PJRT handles inside [`XlaShard`] are not `Send`: a native worker can
+/// be built on one thread and moved to another, while an XLA worker must be
+/// constructed on the thread that runs it (see `driver::run_distributed`).
+pub trait GradientSource {
+    fn dim(&self) -> usize;
+    fn grad(&self, w: &[f64], out: &mut [f64]) -> Result<()>;
+    fn loss(&self, w: &[f64]) -> f64;
+}
+
+impl GradientSource for LogisticRidge {
+    fn dim(&self) -> usize {
+        Objective::dim(self)
+    }
+
+    fn grad(&self, w: &[f64], out: &mut [f64]) -> Result<()> {
+        Objective::grad(self, w, out);
+        Ok(())
+    }
+
+    fn loss(&self, w: &[f64]) -> f64 {
+        Objective::loss(self, w)
+    }
+}
+
+/// Shard gradients through the compiled JAX/Pallas artifact (PJRT); keeps
+/// the pure-Rust objective for the loss instrumentation (off the hot path).
+pub struct XlaShard {
+    kernel: XlaWorkerKernel,
+    oracle: LogisticRidge,
+}
+
+impl XlaShard {
+    /// Upload the shard to the device and bind the `full_grad` executable.
+    pub fn new(rt: &XlaRuntime, shard: LogisticRidge) -> Result<Self> {
+        // margins z_i = y_i x_i are what LogisticRidge stores; rebuild the
+        // row-major buffer for upload
+        let n = shard.num_samples();
+        let d = Objective::dim(&shard);
+        let mut z = vec![0.0f64; n * d];
+        for i in 0..n {
+            z[i * d..(i + 1) * d].copy_from_slice(shard.margin_row(i));
+        }
+        let kernel = XlaWorkerKernel::new(rt, "full_grad", &z, n, d, shard.lambda)
+            .context("build XlaWorkerKernel")?;
+        Ok(XlaShard {
+            kernel,
+            oracle: shard,
+        })
+    }
+}
+
+impl GradientSource for XlaShard {
+    fn dim(&self) -> usize {
+        Objective::dim(&self.oracle)
+    }
+
+    fn grad(&self, w: &[f64], out: &mut [f64]) -> Result<()> {
+        self.kernel.grad(w, out)
+    }
+
+    fn loss(&self, w: &[f64]) -> f64 {
+        Objective::loss(&self.oracle, w)
+    }
+}
+
+/// Quantization settings mirrored from the master (must match bit-for-bit).
+#[derive(Clone, Debug)]
+pub struct WorkerQuant {
+    pub bits: u8,
+    pub policy: GridPolicy,
+    /// "+" variants: the current-iterate gradient is quantized too.
+    pub plus: bool,
+}
+
+/// The worker event loop.
+pub struct WorkerNode<D: Duplex, B: GradientSource> {
+    backend: B,
+    link: D,
+    quant: Option<WorkerQuant>,
+    rng: Xoshiro256pp,
+}
+
+impl<D: Duplex, B: GradientSource> WorkerNode<D, B> {
+    pub fn new(
+        backend: B,
+        link: D,
+        quant: Option<WorkerQuant>,
+        rng: Xoshiro256pp,
+    ) -> Self {
+        Self {
+            backend,
+            link,
+            quant,
+            rng,
+        }
+    }
+
+    /// Run until `Shutdown`. Implements the worker side of Algorithm 1.
+    pub fn run(mut self) -> Result<()> {
+        let d = self.backend.dim();
+        // replicated state
+        let mut w_cur = vec![0.0; d]; // w_{k,t}
+        let mut w_snapshot = vec![0.0; d]; // w̃_k
+        let mut w_snapshot_prev = vec![0.0; d];
+        let mut w_hist: Vec<Vec<f64>> = Vec::new(); // w_{k,0..T-1}
+        let mut g_snapshot = vec![0.0; d]; // g_i(w̃_k), cached
+        let mut g_center = vec![0.0; d]; // shared center of R_{g_i,k}
+        let mut gnorm = 1.0f64; // ‖g̃_k‖ from EpochCommit
+        let mut g_cur = vec![0.0; d];
+        // per-epoch grid cache (rebuilt at EpochCommit; §Perf)
+        let mut w_grid: Option<Grid> = None;
+        let mut g_grid: Option<Grid> = None;
+
+        loop {
+            match self.link.recv()? {
+                Message::EpochBegin { .. } => {
+                    // snapshot gradient at the (proposed) new snapshot = w_cur
+                    // chosen by SnapshotChoose, already in w_snapshot.
+                    self.backend.grad(&w_snapshot, &mut g_snapshot)?;
+                    self.link.send(Message::GradRaw {
+                        g: g_snapshot.clone(),
+                    })?;
+                }
+                Message::EpochRevert => {
+                    // memory unit rejected: restore previous snapshot
+                    w_snapshot.copy_from_slice(&w_snapshot_prev);
+                    self.backend.grad(&w_snapshot, &mut g_snapshot)?;
+                    self.link.send(Message::Ack)?;
+                }
+                Message::EpochCommit { gnorm: gn } => {
+                    gnorm = gn;
+                    w_snapshot_prev.copy_from_slice(&w_snapshot);
+                    // the exact g_i(w̃_k) was just shared on the raw uplink:
+                    // both ends center R_{g_i,k} on it
+                    g_center.copy_from_slice(&g_snapshot);
+                    w_cur.copy_from_slice(&w_snapshot);
+                    w_hist.clear();
+                    w_hist.push(w_cur.clone());
+                    // rebuild this epoch's grids once
+                    if let Some(q) = &self.quant {
+                        g_grid = Some(q.policy.g_grid(&g_center, gnorm, q.bits)?);
+                        w_grid = Some(q.policy.w_grid(&w_snapshot, gnorm, q.bits)?);
+                    }
+                    self.link.send(Message::Ack)?;
+                }
+                Message::InnerRequest => {
+                    self.backend.grad(&w_cur, &mut g_cur)?;
+                    match &self.quant {
+                        Some(q) => {
+                            // uplink 1: quantized snapshot gradient
+                            let grid = match &g_grid {
+                                Some(g) => g,
+                                None => {
+                                    g_grid =
+                                        Some(q.policy.g_grid(&g_center, gnorm, q.bits)?);
+                                    g_grid.as_ref().unwrap()
+                                }
+                            };
+                            let (idx, _) =
+                                quant::quantize_urq(&g_snapshot, grid, &mut self.rng);
+                            let payload = quant::pack_indices(&idx, grid.bits())?;
+                            self.link.send(Message::GradQ {
+                                bits: payload.bits,
+                                payload: payload.bytes,
+                            })?;
+                            // uplink 2: current gradient (raw or quantized)
+                            if q.plus {
+                                let (idx, _) =
+                                    quant::quantize_urq(&g_cur, grid, &mut self.rng);
+                                let payload = quant::pack_indices(&idx, grid.bits())?;
+                                self.link.send(Message::GradQ {
+                                    bits: payload.bits,
+                                    payload: payload.bytes,
+                                })?;
+                            } else {
+                                self.link.send(Message::GradRaw { g: g_cur.clone() })?;
+                            }
+                        }
+                        None => {
+                            // exact SVRG: both gradients raw
+                            self.link.send(Message::GradRaw {
+                                g: g_snapshot.clone(),
+                            })?;
+                            self.link.send(Message::GradRaw { g: g_cur.clone() })?;
+                        }
+                    }
+                }
+                Message::ParamsQ { payload, .. } => {
+                    // reconstruct w_{k,t} from the broadcast lattice indices
+                    let q = self
+                        .quant
+                        .as_ref()
+                        .context("ParamsQ received by unquantized worker")?;
+                    let grid = match &w_grid {
+                        Some(g) => g,
+                        None => {
+                            w_grid = Some(q.policy.w_grid(&w_snapshot, gnorm, q.bits)?);
+                            w_grid.as_ref().unwrap()
+                        }
+                    };
+                    let idx = quant::unpack_indices(&payload, grid.bits())?;
+                    quant::dequantize_into(&idx, grid, &mut w_cur);
+                    if w_hist.len() < usize::MAX {
+                        w_hist.push(w_cur.clone());
+                    }
+                }
+                Message::ParamsRaw { w } => {
+                    if w.len() != d {
+                        bail!("ParamsRaw dim {} != {}", w.len(), d);
+                    }
+                    w_cur.copy_from_slice(&w);
+                    w_hist.push(w_cur.clone());
+                }
+                Message::SnapshotChoose { zeta } => {
+                    let zeta = zeta as usize;
+                    if zeta >= w_hist.len() {
+                        bail!("zeta {} out of range ({})", zeta, w_hist.len());
+                    }
+                    w_snapshot.copy_from_slice(&w_hist[zeta]);
+                    self.link.send(Message::Ack)?;
+                }
+                Message::QueryLoss => {
+                    let loss = self.backend.loss(&w_snapshot);
+                    self.link.send(Message::LossValue { loss })?;
+                }
+                Message::Shutdown => return Ok(()),
+                other => bail!("worker: unexpected message {other:?}"),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synthetic::power_like;
+    use crate::transport::local::pair;
+
+    fn shard() -> LogisticRidge {
+        let mut ds = power_like(100, 3);
+        ds.standardize();
+        LogisticRidge::new(&ds.x, &ds.y, ds.n, ds.d, 0.1)
+    }
+
+    #[test]
+    fn worker_answers_epoch_begin_with_exact_gradient() {
+        let obj = shard();
+        let expect = Objective::grad_vec(&obj, &vec![0.0; 9]);
+        let (mut master, wlink) = pair();
+        let node = WorkerNode::new(
+            obj,
+            wlink,
+            None,
+            Xoshiro256pp::seed_from_u64(1),
+        );
+        let t = std::thread::spawn(move || node.run().unwrap());
+        master.send(Message::EpochBegin { epoch: 0 }).unwrap();
+        match master.recv().unwrap() {
+            Message::GradRaw { g } => {
+                assert!(crate::linalg::linf_dist(&g, &expect) < 1e-15)
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        master.send(Message::Shutdown).unwrap();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn worker_rejects_out_of_range_zeta() {
+        let obj = shard();
+        let (mut master, wlink) = pair();
+        let node = WorkerNode::new(
+            obj,
+            wlink,
+            None,
+            Xoshiro256pp::seed_from_u64(2),
+        );
+        let t = std::thread::spawn(move || node.run());
+        master.send(Message::EpochBegin { epoch: 0 }).unwrap();
+        let _ = master.recv().unwrap();
+        master.send(Message::EpochCommit { gnorm: 1.0 }).unwrap();
+        let _ = master.recv().unwrap();
+        master.send(Message::SnapshotChoose { zeta: 99 }).unwrap();
+        assert!(t.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn worker_loss_query_matches_objective() {
+        let obj = shard();
+        let expect = Objective::loss(&obj, &vec![0.0; 9]);
+        let (mut master, wlink) = pair();
+        let node = WorkerNode::new(
+            obj,
+            wlink,
+            None,
+            Xoshiro256pp::seed_from_u64(3),
+        );
+        let t = std::thread::spawn(move || node.run().unwrap());
+        master.send(Message::QueryLoss).unwrap();
+        match master.recv().unwrap() {
+            Message::LossValue { loss } => assert!((loss - expect).abs() < 1e-15),
+            other => panic!("unexpected {other:?}"),
+        }
+        master.send(Message::Shutdown).unwrap();
+        t.join().unwrap();
+    }
+}

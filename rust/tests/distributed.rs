@@ -1,0 +1,283 @@
+//! Integration: the message-passing runtime (coordinator + worker threads
+//! over local and TCP transports) against the centralized simulator.
+
+use qmsvrg::algorithms::channel::QuantOpts;
+use qmsvrg::algorithms::svrg::{run_svrg, SvrgOpts};
+use qmsvrg::algorithms::ShardedObjective;
+use qmsvrg::config::TrainConfig;
+use qmsvrg::coordinator::{Coordinator, CoordinatorOpts};
+use qmsvrg::data::synthetic::power_like;
+use qmsvrg::data::Dataset;
+use qmsvrg::objective::LogisticRidge;
+use qmsvrg::quant::{AdaptivePolicy, GridPolicy};
+use qmsvrg::rng::Xoshiro256pp;
+use qmsvrg::transport::local::pair;
+use qmsvrg::transport::tcp::TcpDuplex;
+use qmsvrg::worker::{WorkerNode, WorkerQuant};
+
+fn dataset() -> Dataset {
+    let mut ds = power_like(1200, 5);
+    ds.standardize();
+    ds
+}
+
+fn quant_opts(ds: &Dataset, n_workers: usize, bits: u8, plus: bool) -> QuantOpts {
+    let prob = ShardedObjective::new(ds, n_workers, 0.1);
+    QuantOpts {
+        bits,
+        policy: GridPolicy::Adaptive(AdaptivePolicy::practical(
+            prob.mu(),
+            prob.l_smooth(),
+            prob.dim(),
+            0.2,
+            8,
+        )),
+        plus,
+    }
+}
+
+/// Spawn native worker threads over local channels and run the coordinator.
+fn run_local_distributed(
+    ds: &Dataset,
+    n_workers: usize,
+    opts: CoordinatorOpts,
+    seed: u64,
+) -> (Vec<f64>, Vec<f64>, u64) {
+    let shards = ds.shard(n_workers);
+    let mut links = Vec::new();
+    let mut handles = Vec::new();
+    let root = Xoshiro256pp::seed_from_u64(seed);
+    for (i, s) in shards.into_iter().enumerate() {
+        let (m, w) = pair();
+        links.push(m);
+        let wq = opts.quant.as_ref().map(|q| WorkerQuant {
+            bits: q.bits,
+            policy: q.policy.clone(),
+            plus: q.plus,
+        });
+        let rng = root.split(100 + i as u64);
+        handles.push(std::thread::spawn(move || {
+            let obj = LogisticRidge::new(&s.x, &s.y, s.n, s.d, 0.1);
+            WorkerNode::new(obj, w, wq, rng).run()
+        }));
+    }
+    let mut coord = Coordinator::new(links, ds.d, opts, root.split(0));
+    let mut gns = Vec::new();
+    let w = coord.run(&mut |_, _, gn, _| gns.push(gn)).unwrap();
+    let bits = coord.ledger.total_bits();
+    coord.shutdown().unwrap();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+    (w, gns, bits)
+}
+
+#[test]
+fn distributed_unquantized_matches_centralized_exactly_in_math() {
+    // With quantization off there is no randomness in the exchanged values:
+    // given the same ξ/ζ draws the distributed run must contract like the
+    // simulator. We check the contraction factor, not bitwise equality
+    // (separate rng streams).
+    let ds = dataset();
+    let opts = CoordinatorOpts {
+        step: 0.2,
+        epoch_len: 8,
+        outer_iters: 25,
+        memory_unit: true,
+        quant: None,
+    };
+    let (_, gns, _) = run_local_distributed(&ds, 4, opts, 11);
+    // T=8 epochs at alpha=0.2 contract by ~1.3x/epoch; demand >=200x overall
+    assert!(gns.last().unwrap() < &(gns[0] * 5e-3), "trace: {gns:?}");
+
+    // centralized twin
+    let prob = ShardedObjective::new(&ds, 4, 0.1);
+    let mut gns_c = Vec::new();
+    run_svrg(
+        &prob,
+        &SvrgOpts {
+            step: 0.2,
+            epoch_len: 8,
+            outer_iters: 25,
+            memory_unit: true,
+            quant: None,
+        },
+        Xoshiro256pp::seed_from_u64(11),
+        &mut |_, _, gn, _| gns_c.push(gn),
+    )
+    .unwrap();
+    assert!(gns_c.last().unwrap() < &(gns_c[0] * 5e-3));
+}
+
+#[test]
+fn distributed_quantized_converges_and_meters_bits() {
+    let ds = dataset();
+    let n_workers = 4;
+    let bits = 4u8;
+    let q = quant_opts(&ds, n_workers, bits, true);
+    let opts = CoordinatorOpts {
+        step: 0.2,
+        epoch_len: 8,
+        outer_iters: 20,
+        memory_unit: true,
+        quant: Some(q),
+    };
+    let (_, gns, total_bits) = run_local_distributed(&ds, n_workers, opts, 13);
+    assert!(
+        gns.last().unwrap() < &(gns[0] * 0.05),
+        "no contraction: {gns:?}"
+    );
+    // measured bits: per epoch 64dN + (b_w + 2 b_g) T, d=9
+    let (d, n, t) = (9u64, n_workers as u64, 8u64);
+    let per_epoch = 64 * d * n + 3 * (bits as u64) * d * t;
+    assert_eq!(total_bits, per_epoch * 20 + 64 * d * n /* final report */);
+}
+
+#[test]
+fn distributed_memory_unit_never_increases_gnorm() {
+    let ds = dataset();
+    let q = quant_opts(&ds, 3, 3, true);
+    let opts = CoordinatorOpts {
+        step: 0.2,
+        epoch_len: 8,
+        outer_iters: 30,
+        memory_unit: true,
+        quant: Some(q),
+    };
+    let (_, gns, _) = run_local_distributed(&ds, 3, opts, 17);
+    for w in gns.windows(2) {
+        assert!(w[1] <= w[0] + 1e-12, "gnorm grew: {} -> {}", w[0], w[1]);
+    }
+}
+
+#[test]
+fn distributed_over_tcp_loopback() {
+    // full QM-SVRG-A+ across real sockets
+    let ds = dataset();
+    let n_workers = 2;
+    let q = quant_opts(&ds, n_workers, 5, true);
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+
+    // worker processes (threads with TCP links here)
+    let shards = ds.shard(n_workers);
+    let mut worker_handles = Vec::new();
+    for (i, s) in shards.into_iter().enumerate() {
+        let q = q.clone();
+        let addr = addr.to_string();
+        worker_handles.push(std::thread::spawn(move || {
+            let link = TcpDuplex::connect(&addr).unwrap();
+            let obj = LogisticRidge::new(&s.x, &s.y, s.n, s.d, 0.1);
+            let wq = WorkerQuant {
+                bits: q.bits,
+                policy: q.policy.clone(),
+                plus: q.plus,
+            };
+            WorkerNode::new(obj, link, Some(wq), Xoshiro256pp::seed_from_u64(500 + i as u64))
+                .run()
+                .unwrap();
+        }));
+    }
+    let mut links = Vec::new();
+    for _ in 0..n_workers {
+        let (stream, _) = listener.accept().unwrap();
+        links.push(TcpDuplex::new(stream).unwrap());
+    }
+
+    let mut coord = Coordinator::new(
+        links,
+        ds.d,
+        CoordinatorOpts {
+            step: 0.2,
+            epoch_len: 8,
+            outer_iters: 15,
+            memory_unit: true,
+            quant: Some(q),
+        },
+        Xoshiro256pp::seed_from_u64(99),
+    );
+    let mut gns = Vec::new();
+    coord.run(&mut |_, _, gn, _| gns.push(gn)).unwrap();
+    let loss = coord.query_loss().unwrap();
+    coord.shutdown().unwrap();
+    for h in worker_handles {
+        h.join().unwrap();
+    }
+    assert!(
+        gns.last().unwrap() < &(gns[0] * 0.2),
+        "no contraction over TCP: {gns:?}"
+    );
+    assert!(loss.is_finite() && loss > 0.0);
+}
+
+#[test]
+fn worker_crash_surfaces_as_error_not_hang() {
+    // a worker that dies mid-protocol must turn into an Err at the master
+    let ds = dataset();
+    let shards = ds.shard(2);
+    let mut links = Vec::new();
+    let mut handles = Vec::new();
+    for (i, s) in shards.into_iter().enumerate() {
+        let (m, w) = pair();
+        links.push(m);
+        handles.push(std::thread::spawn(move || {
+            if i == 1 {
+                // crash: drop the link immediately
+                drop(w);
+                return;
+            }
+            let obj = LogisticRidge::new(&s.x, &s.y, s.n, s.d, 0.1);
+            // run() will itself error once the master gives up; ignore
+            let _ = WorkerNode::new(obj, w, None, Xoshiro256pp::seed_from_u64(1)).run();
+        }));
+    }
+    let mut coord = Coordinator::new(
+        links,
+        ds.d,
+        CoordinatorOpts {
+            step: 0.2,
+            epoch_len: 4,
+            outer_iters: 3,
+            memory_unit: false,
+            quant: None,
+        },
+        Xoshiro256pp::seed_from_u64(1),
+    );
+    let result = coord.run(&mut |_, _, _, _| {});
+    assert!(result.is_err(), "master should observe the dead worker");
+    // drop the coordinator first: it holds the channel senders that keep the
+    // surviving worker blocked in recv()
+    drop(coord);
+    for h in handles {
+        let _ = h.join();
+    }
+}
+
+#[test]
+fn driver_end_to_end_with_local_runtime() {
+    // the public driver::train path on the distributed runtime (native)
+    let ds = dataset();
+    let cfg = TrainConfig {
+        algorithm: "qm-svrg-a+".into(),
+        n_workers: 3,
+        epoch_len: 8,
+        outer_iters: 12,
+        ..TrainConfig::default()
+    };
+    let kind = cfg.algorithm.parse().unwrap();
+    let prob = ShardedObjective::new(&ds, cfg.n_workers, cfg.lambda);
+    let quant = qmsvrg::driver::quant_opts_for(kind, &cfg, &prob);
+    let mut losses = Vec::new();
+    qmsvrg::driver::run_distributed(
+        kind,
+        &cfg,
+        &ds,
+        quant,
+        Xoshiro256pp::seed_from_u64(7),
+        &mut |_, w, _, _| losses.push(prob.loss(w)),
+        false,
+    )
+    .unwrap();
+    assert!(losses.last().unwrap() < &losses[0]);
+}

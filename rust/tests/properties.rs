@@ -1,0 +1,239 @@
+//! Property-based tests (testkit mini-framework): invariants of the
+//! quantizer, codec, grids, RNG, and algorithm state machines under random
+//! inputs.
+
+use qmsvrg::linalg;
+use qmsvrg::quant::{
+    dequantize, pack_indices, quantize_deterministic, quantize_urq, unpack_indices,
+    AdaptivePolicy, Grid, GridPolicy,
+};
+use qmsvrg::rng::Xoshiro256pp;
+use qmsvrg::testkit::{forall, gen_vec};
+
+#[test]
+fn prop_urq_error_bounded_by_one_spacing() {
+    forall(300, 0xA1, |rng| {
+        let d = 1 + rng.gen_index(32);
+        let bits = 1 + rng.gen_index(12) as u8;
+        let radius = rng.gen_uniform(0.1, 50.0);
+        let center = gen_vec(rng, d, -5.0, 5.0);
+        let grid = Grid::uniform(center.clone(), radius, bits).unwrap();
+        // points inside the hull
+        let w: Vec<f64> = center
+            .iter()
+            .map(|c| c + rng.gen_uniform(-radius, radius))
+            .collect();
+        let (idx, stats) = quantize_urq(&w, &grid, rng);
+        assert_eq!(stats.saturated, 0, "in-hull point saturated");
+        let wq = dequantize(&idx, &grid);
+        for (j, (a, b)) in w.iter().zip(&wq).enumerate() {
+            assert!(
+                (a - b).abs() <= grid.spacing(j) + 1e-9,
+                "coord {j}: err {} > spacing {}",
+                (a - b).abs(),
+                grid.spacing(j)
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_deterministic_error_at_most_half_spacing() {
+    forall(300, 0xA2, |rng| {
+        let d = 1 + rng.gen_index(16);
+        let bits = 1 + rng.gen_index(10) as u8;
+        let radius = rng.gen_uniform(0.5, 20.0);
+        let grid = Grid::uniform(vec![0.0; d], radius, bits).unwrap();
+        let w = gen_vec(rng, d, -radius, radius);
+        let (idx, _) = quantize_deterministic(&w, &grid);
+        let wq = dequantize(&idx, &grid);
+        for j in 0..d {
+            assert!((w[j] - wq[j]).abs() <= grid.spacing(j) / 2.0 + 1e-9);
+        }
+    });
+}
+
+#[test]
+fn prop_codec_roundtrip_arbitrary_bitwidths() {
+    forall(500, 0xA3, |rng| {
+        let d = 1 + rng.gen_index(100);
+        let bits: Vec<u8> = (0..d).map(|_| 1 + rng.gen_index(32) as u8).collect();
+        let idx: Vec<u32> = bits
+            .iter()
+            .map(|&b| {
+                if b == 32 {
+                    rng.next_u64() as u32
+                } else {
+                    (rng.next_u64() % (1u64 << b)) as u32
+                }
+            })
+            .collect();
+        let payload = pack_indices(&idx, &bits).unwrap();
+        assert_eq!(
+            payload.bits,
+            bits.iter().map(|&b| b as u64).sum::<u64>(),
+            "payload bits must be the exact sum"
+        );
+        assert_eq!(payload.bytes.len() as u64, payload.bits.div_ceil(8));
+        let back = unpack_indices(&payload.bytes, &bits).unwrap();
+        assert_eq!(back, idx);
+    });
+}
+
+#[test]
+fn prop_quantization_is_projection_idempotent() {
+    // quantizing a lattice point returns the same point, both quantizers
+    forall(200, 0xA4, |rng| {
+        let d = 1 + rng.gen_index(8);
+        let bits = 1 + rng.gen_index(8) as u8;
+        let grid = Grid::uniform(gen_vec(rng, d, -2.0, 2.0), rng.gen_uniform(0.5, 5.0), bits)
+            .unwrap();
+        let idx: Vec<u32> = (0..d)
+            .map(|i| (rng.next_u64() % grid.levels(i)) as u32)
+            .collect();
+        let v = dequantize(&idx, &grid);
+        let (i2, s2) = quantize_urq(&v, &grid, rng);
+        assert_eq!(i2, idx);
+        assert_eq!(s2.saturated, 0);
+        let (i3, _) = quantize_deterministic(&v, &grid);
+        assert_eq!(i3, idx);
+    });
+}
+
+#[test]
+fn prop_urq_unbiased_mean() {
+    // statistical unbiasedness on random scalars (tighter CLT bound)
+    forall(20, 0xA5, |rng| {
+        let radius = rng.gen_uniform(0.5, 4.0);
+        let bits = 2 + rng.gen_index(4) as u8;
+        let grid = Grid::uniform(vec![0.0], radius, bits).unwrap();
+        let x = rng.gen_uniform(-radius * 0.95, radius * 0.95);
+        let n = 40_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let (idx, _) = quantize_urq(&[x], &grid, rng);
+            sum += dequantize(&idx, &grid)[0];
+        }
+        let mean = sum / n as f64;
+        let spacing = grid.spacing(0);
+        // URQ per-draw variance ≤ spacing²/4 ⇒ 6σ ≈ 6·spacing/(2√n)
+        let tol = 3.0 * spacing / (n as f64).sqrt() * 2.0;
+        assert!(
+            (mean - x).abs() < tol,
+            "bias {} exceeds tol {tol} (spacing {spacing})",
+            mean - x
+        );
+    });
+}
+
+#[test]
+fn prop_adaptive_radii_monotone_in_gnorm() {
+    forall(200, 0xA6, |rng| {
+        let mu = rng.gen_uniform(0.01, 1.0);
+        let l = mu * rng.gen_uniform(1.0, 50.0);
+        let d = 1 + rng.gen_index(1000);
+        let pol = AdaptivePolicy::practical(mu, l, d, rng.gen_uniform(0.01, 0.5), 1 + rng.gen_index(50));
+        let g1 = rng.gen_uniform(0.0, 10.0);
+        let g2 = rng.gen_uniform(0.0, 10.0);
+        let (lo, hi) = if g1 < g2 { (g1, g2) } else { (g2, g1) };
+        assert!(pol.r_w(lo) <= pol.r_w(hi) + 1e-15);
+        assert!(pol.r_g(lo) <= pol.r_g(hi) + 1e-15);
+        assert!(pol.r_w(hi) >= pol.min_radius);
+    });
+}
+
+#[test]
+fn prop_grid_policy_agreement_master_worker() {
+    // both ends constructing grids from the same shared state must agree
+    // exactly — this is what keeps the wire format decodable
+    forall(200, 0xA7, |rng| {
+        let d = 1 + rng.gen_index(64);
+        let bits = 1 + rng.gen_index(10) as u8;
+        let pol = GridPolicy::Adaptive(AdaptivePolicy::practical(
+            0.2,
+            2.45,
+            d,
+            0.2,
+            8,
+        ));
+        let center = gen_vec(rng, d, -1.0, 1.0);
+        let gnorm = rng.gen_uniform(1e-8, 5.0);
+        let master = pol.w_grid(&center, gnorm, bits).unwrap();
+        let worker = pol.w_grid(&center, gnorm, bits).unwrap();
+        assert_eq!(master.center(), worker.center());
+        assert_eq!(master.radius(), worker.radius());
+        assert_eq!(master.bits(), worker.bits());
+        // a vector quantized by the master decodes identically at the worker
+        let w = gen_vec(rng, d, -0.5, 0.5);
+        let (idx, _) = quantize_urq(&w, &master, rng);
+        let payload = pack_indices(&idx, master.bits()).unwrap();
+        let decoded = unpack_indices(&payload.bytes, worker.bits()).unwrap();
+        assert_eq!(dequantize(&decoded, &worker), dequantize(&idx, &master));
+    });
+}
+
+#[test]
+fn prop_rng_split_streams_pairwise_distinct() {
+    forall(50, 0xA8, |rng| {
+        let seed = rng.next_u64();
+        let root = Xoshiro256pp::seed_from_u64(seed);
+        let a = rng.gen_range(1000);
+        let b = rng.gen_range(1000);
+        if a != b {
+            let mut sa = root.split(a);
+            let mut sb = root.split(b);
+            let matches = (0..32).filter(|_| sa.next_u64() == sb.next_u64()).count();
+            assert!(matches < 2, "streams {a} and {b} collide");
+        }
+    });
+}
+
+#[test]
+fn prop_linalg_dot_matches_naive() {
+    forall(300, 0xA9, |rng| {
+        let n = rng.gen_index(200);
+        let a = gen_vec(rng, n, -10.0, 10.0);
+        let b = gen_vec(rng, n, -10.0, 10.0);
+        let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        let got = linalg::dot(&a, &b);
+        assert!(
+            (naive - got).abs() <= 1e-9 * (1.0 + naive.abs()),
+            "dot mismatch: {naive} vs {got}"
+        );
+    });
+}
+
+#[test]
+fn prop_message_codec_total() {
+    // any encodable message decodes to itself; already covered per-variant,
+    // here with randomized payload content and sizes
+    use qmsvrg::transport::Message;
+    forall(300, 0xAA, |rng| {
+        let msg = match rng.gen_index(5) {
+            0 => Message::ParamsQ {
+                payload: (0..rng.gen_index(200)).map(|_| rng.next_u64() as u8).collect(),
+                bits: rng.next_u64() % 100_000,
+            },
+            1 => Message::GradQ {
+                payload: (0..rng.gen_index(200)).map(|_| rng.next_u64() as u8).collect(),
+                bits: rng.next_u64() % 100_000,
+            },
+            2 => {
+                let n = rng.gen_index(100);
+                Message::ParamsRaw {
+                    w: gen_vec(rng, n, -1e6, 1e6),
+                }
+            }
+            3 => {
+                let n = rng.gen_index(100);
+                Message::GradRaw {
+                    g: gen_vec(rng, n, -1e6, 1e6),
+                }
+            }
+            _ => Message::EpochCommit {
+                gnorm: rng.gen_uniform(0.0, 1e9),
+            },
+        };
+        assert_eq!(Message::decode(&msg.encode()).unwrap(), msg);
+    });
+}

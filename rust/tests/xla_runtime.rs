@@ -1,0 +1,172 @@
+//! Integration: the PJRT runtime against the AOT artifacts, and the
+//! XLA-vs-native backend equivalence. Requires `make artifacts`.
+
+use std::path::Path;
+
+use qmsvrg::data::synthetic::power_like;
+use qmsvrg::objective::{LogisticRidge, Objective};
+use qmsvrg::runtime::{XlaRuntime, XlaWorkerKernel};
+use qmsvrg::worker::{GradientSource, XlaShard};
+
+fn runtime() -> Option<XlaRuntime> {
+    match XlaRuntime::load(Path::new("artifacts")) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping: {e:#} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+fn padded_case(
+    n: usize,
+    d: usize,
+    n_pad: usize,
+    d_pad: usize,
+    seed: u64,
+) -> (Vec<f64>, Vec<f32>, Vec<f64>, Vec<f32>) {
+    let mut ds = power_like(n, seed);
+    ds.standardize();
+    assert_eq!(ds.d, d);
+    let obj = LogisticRidge::new(&ds.x, &ds.y, ds.n, ds.d, 0.1);
+    let mut z64 = vec![0.0f64; n * d];
+    for i in 0..n {
+        z64[i * d..(i + 1) * d].copy_from_slice(obj.margin_row(i));
+    }
+    let mut z_pad = vec![0.0f32; n_pad * d_pad];
+    for i in 0..n {
+        for j in 0..d {
+            z_pad[i * d_pad + j] = z64[i * d + j] as f32;
+        }
+    }
+    let w64: Vec<f64> = (0..d).map(|j| 0.1 * j as f64 - 0.3).collect();
+    let mut w_pad = vec![0.0f32; d_pad];
+    for j in 0..d {
+        w_pad[j] = w64[j] as f32;
+    }
+    (z64, z_pad, w64, w_pad)
+}
+
+#[test]
+fn manifest_covers_all_entries_and_shapes() {
+    let Some(rt) = runtime() else { return };
+    for entry in ["full_grad", "loss", "loss_grad", "svrg_inner_direction"] {
+        for shape in ["power", "power_small", "mnist"] {
+            rt.info(entry, shape)
+                .unwrap_or_else(|e| panic!("missing {entry}.{shape}: {e}"));
+        }
+    }
+}
+
+#[test]
+fn xla_full_grad_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let (n, d) = (1000usize, 9usize);
+    let (_, z_pad, w64, w_pad) = padded_case(n, d, 2048, 16, 3);
+    let g32 = rt
+        .full_grad("power_small", &z_pad, &w_pad, n as i32, 0.1)
+        .unwrap();
+
+    let mut ds = power_like(n, 3);
+    ds.standardize();
+    let obj = LogisticRidge::new(&ds.x, &ds.y, ds.n, ds.d, 0.1);
+    let g_native = obj.grad_vec(&w64);
+
+    for j in 0..d {
+        assert!(
+            (g32[j] as f64 - g_native[j]).abs() < 1e-4,
+            "coord {j}: xla {} vs native {}",
+            g32[j],
+            g_native[j]
+        );
+    }
+    // padding coordinates must stay exactly zero (w padding is zero and the
+    // ridge term is the only thing touching them)
+    for j in d..16 {
+        assert_eq!(g32[j], 0.0, "padding coord {j} leaked");
+    }
+}
+
+#[test]
+fn xla_loss_and_fused_agree() {
+    let Some(rt) = runtime() else { return };
+    let (n, d) = (500usize, 9usize);
+    let (_, z_pad, w64, w_pad) = padded_case(n, d, 2048, 16, 7);
+    let loss = rt.loss("power_small", &z_pad, &w_pad, n as i32, 0.1).unwrap();
+    let (loss2, grad2) = rt
+        .loss_grad("power_small", &z_pad, &w_pad, n as i32, 0.1)
+        .unwrap();
+    let grad1 = rt
+        .full_grad("power_small", &z_pad, &w_pad, n as i32, 0.1)
+        .unwrap();
+    assert!((loss - loss2).abs() < 1e-5);
+    for (a, b) in grad1.iter().zip(&grad2) {
+        assert!((a - b).abs() < 1e-5);
+    }
+    // against native
+    let mut ds = power_like(n, 7);
+    ds.standardize();
+    let obj = LogisticRidge::new(&ds.x, &ds.y, ds.n, ds.d, 0.1);
+    assert!((loss as f64 - Objective::loss(&obj, &w64)).abs() < 1e-4);
+}
+
+#[test]
+fn worker_kernel_resident_buffer_path() {
+    let Some(rt) = runtime() else { return };
+    let (n, d) = (700usize, 9usize);
+    let mut ds = power_like(n, 11);
+    ds.standardize();
+    let obj = LogisticRidge::new(&ds.x, &ds.y, ds.n, ds.d, 0.1);
+    let mut z = vec![0.0f64; n * d];
+    for i in 0..n {
+        z[i * d..(i + 1) * d].copy_from_slice(obj.margin_row(i));
+    }
+    let kernel = XlaWorkerKernel::new(&rt, "full_grad", &z, n, d, 0.1).unwrap();
+    // multiple calls with different w reuse the resident Z buffer
+    for t in 0..5 {
+        let w: Vec<f64> = (0..d).map(|j| 0.05 * (j as f64) - 0.01 * t as f64).collect();
+        let mut g_xla = vec![0.0; d];
+        kernel.grad(&w, &mut g_xla).unwrap();
+        let g_native = obj.grad_vec(&w);
+        for j in 0..d {
+            assert!(
+                (g_xla[j] - g_native[j]).abs() < 1e-4,
+                "t={t} coord {j}: {} vs {}",
+                g_xla[j],
+                g_native[j]
+            );
+        }
+    }
+}
+
+#[test]
+fn xla_shard_gradient_source_equivalence() {
+    let Some(rt) = runtime() else { return };
+    let mut ds = power_like(800, 13);
+    ds.standardize();
+    let obj = LogisticRidge::new(&ds.x, &ds.y, ds.n, ds.d, 0.1);
+    let native_g = obj.grad_vec(&vec![0.2; 9]);
+    let native_loss = Objective::loss(&obj, &vec![0.2; 9]);
+    let shard = XlaShard::new(&rt, obj).unwrap();
+    let mut g = vec![0.0; 9];
+    GradientSource::grad(&shard, &vec![0.2; 9], &mut g).unwrap();
+    for j in 0..9 {
+        assert!((g[j] - native_g[j]).abs() < 1e-4);
+    }
+    assert!((GradientSource::loss(&shard, &vec![0.2; 9]) - native_loss).abs() < 1e-12);
+}
+
+#[test]
+fn best_shape_selection() {
+    let Some(rt) = runtime() else { return };
+    // a 1500-row shard needs the 2048-row artifact, not 16384
+    let a = rt.best_shape_for("full_grad", 1500, 9).unwrap();
+    assert_eq!(a.shape, "power_small");
+    let b = rt.best_shape_for("full_grad", 5000, 9).unwrap();
+    assert_eq!(b.shape, "power");
+    // mnist dims route to the mnist shape
+    let c = rt.best_shape_for("full_grad", 5000, 784).unwrap();
+    assert_eq!(c.shape, "mnist");
+    // impossible request errors
+    assert!(rt.best_shape_for("full_grad", 100_000, 9).is_err());
+}
