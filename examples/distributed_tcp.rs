@@ -4,10 +4,10 @@
 //!
 //! ```bash
 //! # one-command demo (spawns 4 worker child processes):
-//! cargo run --release --offline --example distributed_tcp -- --spawn
+//! cargo run --release --example distributed_tcp -- --spawn
 //!
 //! # manual: start the master, then start each worker in its own shell:
-//! cargo run --release --offline --example distributed_tcp
+//! cargo run --release --example distributed_tcp
 //! target/release/qmsvrg worker --connect 127.0.0.1:7070 --shard 0 --workers 4 --bits 4 --adaptive
 //! ```
 
@@ -45,7 +45,7 @@ fn main() -> anyhow::Result<()> {
             .and_then(|p| p.parent())
             .map(|p| p.join("qmsvrg"))
             .filter(|p| p.exists())
-            .ok_or_else(|| anyhow::anyhow!("qmsvrg binary not found next to example; run `cargo build --release --offline` first"))?;
+            .ok_or_else(|| anyhow::anyhow!("qmsvrg binary not found next to example; run `cargo build --release` first"))?;
         for i in 0..N_WORKERS {
             children.push(
                 std::process::Command::new(&qmsvrg)

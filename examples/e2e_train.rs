@@ -11,8 +11,11 @@
 //! Also cross-checks the XLA backend against the native backend and records
 //! the numbers EXPERIMENTS.md cites.
 //!
+//! Needs the PJRT runtime compiled in (`--features xla`) and the artifacts
+//! built:
+//!
 //! ```bash
-//! make artifacts && cargo run --release --offline --example e2e_train
+//! make artifacts && cargo run --release --features xla --example e2e_train
 //! ```
 
 use qmsvrg::algorithms::ShardedObjective;

@@ -3,7 +3,7 @@
 //! full multiclass accuracy of the one-vs-all ensemble.
 //!
 //! ```bash
-//! cargo run --release --offline --example mnist_multiclass -- [samples] [iters]
+//! cargo run --release --example mnist_multiclass -- [samples] [iters]
 //! ```
 
 use qmsvrg::config::TrainConfig;

@@ -3,7 +3,7 @@
 //! written to CSV.
 //!
 //! ```bash
-//! cargo run --release --offline --example power_binary -- [bits] [out_dir]
+//! cargo run --release --example power_binary -- [bits] [out_dir]
 //! ```
 
 use qmsvrg::experiments::fig3::{self, Fig3Params};

@@ -2,7 +2,7 @@
 //! dataset and compare against unquantized M-SVRG.
 //!
 //! ```bash
-//! cargo run --release --offline --example quickstart
+//! cargo run --release --example quickstart
 //! ```
 
 use qmsvrg::config::TrainConfig;

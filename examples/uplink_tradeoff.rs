@@ -9,7 +9,7 @@
 //! only compressed the downlink.
 //!
 //! ```bash
-//! cargo run --release --offline --example uplink_tradeoff
+//! cargo run --release --example uplink_tradeoff
 //! ```
 
 use qmsvrg::config::TrainConfig;

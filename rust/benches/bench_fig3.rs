@@ -35,9 +35,11 @@ fn print_panel(label: &str, fig: &fig3::Fig3) {
 
 fn main() {
     println!("== bench_fig3: power-dataset convergence under quantization ==");
-    let mut p = Fig3Params::default();
+    let mut p = Fig3Params {
+        bits_per_coord: 3,
+        ..Fig3Params::default()
+    };
 
-    p.bits_per_coord = 3;
     let fig_a = fig3::run(&p).unwrap();
     print_panel("Fig 3a", &fig_a);
     let (ok, msvrg, qa, qf) = fig3::headline_check(&fig_a, 0.02);

@@ -1,6 +1,9 @@
 //! Gradient-computation backends: native Rust vs the AOT JAX/Pallas artifact
 //! through PJRT, at the paper's two workload shapes. This is the worker's
 //! inner-loop cost — the compute half of the compute/communication tradeoff.
+//!
+//! The XLA rows need a `--features xla` build plus `make artifacts`; in the
+//! default build `XlaRuntime::load` errors and those rows print as skipped.
 
 use std::path::Path;
 use std::time::Duration;

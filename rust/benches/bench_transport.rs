@@ -130,8 +130,6 @@ fn main() {
     }
 
     // end-to-end distributed epoch cost (local transport, native backend)
-    let prob = ShardedObjective::new(&ds, 4, 0.1);
-    let _ = prob;
     let cfg = TrainConfig {
         algorithm: "qm-svrg-a+".into(),
         n_workers: 4,

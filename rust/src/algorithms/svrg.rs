@@ -88,9 +88,8 @@ pub fn run_svrg(
         // ---- outer: collect exact node gradients (64dN bits, all variants)
         for (i, gi) in node_g.iter_mut().enumerate() {
             prob.node_grad(i, &w_tilde, gi);
-            match ch.as_mut() {
-                Some(c) => c.send_raw_up(d),
-                None => {}
+            if let Some(c) = ch.as_mut() {
+                c.send_raw_up(d);
             }
         }
         for o in g_tilde.iter_mut() {
@@ -109,7 +108,6 @@ pub fn run_svrg(
             // workers recompute their snapshot gradients at the restored w̃
             for (i, gi) in node_g.iter_mut().enumerate() {
                 prob.node_grad(i, &w_tilde, gi);
-                let _ = i;
             }
         } else {
             prev_w.copy_from_slice(&w_tilde);
@@ -176,7 +174,6 @@ pub fn run_svrg(
     // final report on the last snapshot
     for (i, gi) in node_g.iter_mut().enumerate() {
         prob.node_grad(i, &w_tilde, gi);
-        let _ = i;
     }
     for o in g_tilde.iter_mut() {
         *o = 0.0;

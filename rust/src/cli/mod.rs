@@ -106,7 +106,9 @@ USAGE:
                      [--out DIR]
   qmsvrg experiment  fig2|fig3|fig4|table1|bounds [--bits B] [--samples N]
                      [--iters K] [--seed S] [--out DIR]
-  qmsvrg worker      --connect HOST:PORT --shard-file PATH [--bits B] ...
+  qmsvrg worker      --connect HOST:PORT --shard IDX --workers N
+                     [--dataset D] [--samples N] [--seed S] [--lambda L]
+                     [--bits B] [--adaptive]
   qmsvrg info        [--artifacts DIR]
   qmsvrg help
 

@@ -170,18 +170,27 @@ mod tests {
 
     #[test]
     fn validation_catches_bad_values() {
-        let mut c = TrainConfig::default();
-        c.n_workers = 0;
-        assert!(c.validate().is_err());
-        let mut c = TrainConfig::default();
-        c.bits_per_coord = 0;
-        assert!(c.validate().is_err());
-        let mut c = TrainConfig::default();
-        c.lambda = 0.0;
-        assert!(c.validate().is_err());
-        let mut c = TrainConfig::default();
-        c.step_size = -1.0;
-        assert!(c.validate().is_err());
+        let cases = [
+            TrainConfig {
+                n_workers: 0,
+                ..TrainConfig::default()
+            },
+            TrainConfig {
+                bits_per_coord: 0,
+                ..TrainConfig::default()
+            },
+            TrainConfig {
+                lambda: 0.0,
+                ..TrainConfig::default()
+            },
+            TrainConfig {
+                step_size: -1.0,
+                ..TrainConfig::default()
+            },
+        ];
+        for c in cases {
+            assert!(c.validate().is_err(), "{c:?} should be rejected");
+        }
     }
 
     #[test]

@@ -5,8 +5,8 @@
 //! [`crate::algorithms::svrg`] — same mathematics, but every exchange
 //! travels through a [`Duplex`] (in-process channels, or TCP across
 //! processes), and workers may compute gradients on the compiled XLA
-//! artifact ([`crate::worker::GradientBackend::Xla`]). The integration tests
-//! assert the two produce equivalent convergence traces.
+//! artifact ([`crate::worker::XlaShard`], `--features xla` builds). The
+//! integration tests assert the two produce equivalent convergence traces.
 //!
 //! Metering convention (matches §4.1's accounting): each worker's uplink
 //! message is metered individually; a parameter broadcast is metered **once**

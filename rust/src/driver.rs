@@ -6,7 +6,9 @@
 //! quantization policy from the problem geometry (μ, L per §4.1), and runs
 //! either the centralized simulator ([`crate::algorithms`]) or the
 //! message-passing runtime ([`crate::coordinator`]) — the latter also
-//! supports the XLA gradient backend.
+//! supports the XLA gradient backend when the crate is built with
+//! `--features xla` (default builds report a clear runtime error for
+//! `Backend::Xla` instead).
 
 use anyhow::{bail, Context, Result};
 

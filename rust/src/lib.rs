@@ -13,8 +13,11 @@
 //!   transports with bit metering, algorithms, experiments.
 //! * **L2/L1** (python/, build-time only) — JAX logistic-ridge model with a
 //!   Pallas gradient kernel, AOT-lowered to `artifacts/*.hlo.txt`.
-//! * **runtime** — loads those artifacts via PJRT (`xla` crate) so worker
-//!   gradients can run on the compiled XLA path (`Backend::Xla`).
+//! * **runtime** — loads those artifacts via PJRT so worker gradients can run
+//!   on the compiled XLA path (`Backend::Xla`). Gated behind the non-default
+//!   `xla` cargo feature: default builds keep the pure-Rust gradient path
+//!   first-class and report a clear runtime error for `Backend::Xla` instead
+//!   of failing to compile on machines without an XLA installation.
 //!
 //! Quickstart: see `examples/quickstart.rs`, or:
 //!

@@ -22,6 +22,24 @@ pub struct QuantStats {
     pub saturated: u32,
 }
 
+/// Tolerance (in fractional-lattice units) separating fp noise from genuine
+/// out-of-grid values at the hull edges.
+///
+/// Computing `t = (x - lo) · inv_spacing` loses ulps twice: the subtraction
+/// cancels against the larger of `|x|`, `|lo|` (scaled to lattice units by
+/// `inv_spacing`), and the edge index itself carries ~ulp(`max_k`). The bound
+/// is therefore **relative to the operand span**, not to the level count —
+/// a fixed `1e-9·levels` tolerance lets a wide, few-bit grid (huge spacing)
+/// swallow genuine overshoot that is many orders of magnitude above fp noise.
+/// 16 ulps of the dominant magnitude keeps exact lattice points (including
+/// both grid edges, which `Grid::value_of` reconstructs to within a few ulps)
+/// classified as in-grid while anything farther out counts as saturated.
+#[inline]
+fn edge_tol(x: f64, lo: f64, inv_spacing: f64, max_k: f64) -> f64 {
+    let operand_span = x.abs().max(lo.abs()) * inv_spacing;
+    16.0 * f64::EPSILON * operand_span.max(max_k)
+}
+
 /// URQ: map `w` to per-coordinate lattice indices using `rng` for the
 /// randomized rounding. Returns the index vector and saturation stats.
 pub fn quantize_urq(w: &[f64], grid: &Grid, rng: &mut Xoshiro256pp) -> (Vec<u32>, QuantStats) {
@@ -47,8 +65,8 @@ fn quantize_coord_urq(
     let t = (x - lo) * grid.inv_spacing(i); // fractional lattice coordinate
     let max_k = (levels - 1) as f64;
     // fp tolerance: reconstructing a lattice point can overshoot the hull by
-    // an ulp; only count *real* out-of-grid values as saturation
-    let tol = 1e-9 * (max_k + 1.0);
+    // a few ulps; only count *real* out-of-grid values as saturation
+    let tol = edge_tol(x, lo, grid.inv_spacing(i), max_k);
     if t <= 0.0 {
         if t < -tol {
             stats.saturated += 1;
@@ -79,7 +97,7 @@ pub fn quantize_deterministic(w: &[f64], grid: &Grid) -> (Vec<u32>, QuantStats) 
         let spacing = grid.spacing(i);
         let max_k = (grid.levels(i) - 1) as f64;
         let t = (x - lo) / spacing;
-        let tol = 1e-9 * (max_k + 1.0);
+        let tol = edge_tol(x, lo, 1.0 / spacing, max_k);
         let k = if t <= 0.0 {
             if t < -tol {
                 stats.saturated += 1;
@@ -178,6 +196,49 @@ mod tests {
         assert_eq!(idx[1], 0);
         let wq = dequantize(&idx, &grid);
         assert_eq!(wq, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn wide_few_bit_grid_still_detects_real_overshoot() {
+        // Regression: the old tolerance scaled with the level count
+        // (1e-9·levels) in lattice units, so a radius-1e9 3-bit grid
+        // (spacing ≈ 2.9e8) silently absorbed genuine overshoot of ~1.0.
+        // The span-relative tolerance must flag it.
+        let grid = Grid::uniform(vec![0.0], 1e9, 3).unwrap();
+        let mut r = rng();
+        let (idx, stats) = quantize_urq(&[1.0e9 + 1.0], &grid, &mut r);
+        assert_eq!(stats.saturated, 1, "overshoot by 1.0 not counted");
+        assert_eq!(idx[0], (grid.levels(0) - 1) as u32);
+        let (_, stats) = quantize_deterministic(&[-1.0e9 - 1.0], &grid);
+        assert_eq!(stats.saturated, 1);
+    }
+
+    #[test]
+    fn exact_grid_edges_never_count_as_saturated() {
+        // QuantStats.saturated must stay exact at the hull edges across
+        // magnitudes and bit widths: reconstructed edge lattice points are
+        // in-grid by definition.
+        let mut r = rng();
+        for (center, radius, bits) in [
+            (0.0, 1.0, 1u8),
+            (5.0, 1e-6, 4),
+            (-3.0, 1e9, 3),
+            (1e6, 2.5, 12),
+            (0.25, 4.0, 16),
+        ] {
+            let grid = Grid::uniform(vec![center; 2], radius, bits).unwrap();
+            let max_k = (grid.levels(0) - 1) as u32;
+            let edges = [grid.value_of(0, 0), grid.value_of(1, max_k)];
+            let (idx, stats) = quantize_urq(&edges, &grid, &mut r);
+            assert_eq!(
+                stats.saturated, 0,
+                "edge of grid(c={center}, r={radius}, b={bits}) misclassified"
+            );
+            assert_eq!(idx, vec![0, max_k]);
+            let (idx, stats) = quantize_deterministic(&edges, &grid);
+            assert_eq!(stats.saturated, 0);
+            assert_eq!(idx, vec![0, max_k]);
+        }
     }
 
     #[test]

@@ -1,0 +1,110 @@
+//! Fallback runtime used when the `xla` feature is off (the default build).
+//!
+//! Exposes the same `XlaRuntime`/`XlaWorkerKernel` API as the `pjrt` module so
+//! every caller compiles unchanged, but [`XlaRuntime::load`] fails with a
+//! clear, actionable error instead of the whole crate failing to *compile*
+//! on machines without an XLA/PJRT installation. The pure-Rust gradient path
+//! (`Backend::Native`, [`crate::objective::LogisticRidge`]) implements the
+//! same gradient interface ([`crate::worker::GradientSource`]) and is the
+//! first-class backend of this reproduction.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use super::{manifest_best_shape, manifest_info, ArtifactInfo};
+
+const UNAVAILABLE: &str = "the XLA/PJRT runtime is not compiled into this build; \
+                           rebuild with `cargo build --features xla` (see README.md) \
+                           or use the pure-Rust backend (backend=native)";
+
+/// Same surface as the PJRT-backed runtime; never constructable in this
+/// configuration ([`XlaRuntime::load`] always errors), so the remaining
+/// methods exist purely to keep call sites compiling.
+pub struct XlaRuntime {
+    manifest: Vec<ArtifactInfo>,
+}
+
+impl XlaRuntime {
+    /// Always fails: this build has no PJRT engine to execute artifacts.
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        bail!(
+            "cannot load XLA artifacts from {}: {UNAVAILABLE}",
+            artifacts_dir.display()
+        )
+    }
+
+    pub fn manifest(&self) -> &[ArtifactInfo] {
+        &self.manifest
+    }
+
+    /// Look up the manifest row for (entry, shape).
+    pub fn info(&self, entry: &str, shape: &str) -> Result<&ArtifactInfo> {
+        manifest_info(&self.manifest, entry, shape)
+    }
+
+    /// Cheapest artifact (fewest padded elements) that can hold an `n × d`
+    /// shard.
+    pub fn best_shape_for(&self, entry: &str, n: usize, d: usize) -> Result<&ArtifactInfo> {
+        manifest_best_shape(&self.manifest, entry, n, d)
+    }
+
+    /// One-shot `full_grad` through literals (unavailable in this build).
+    pub fn full_grad(
+        &self,
+        _shape: &str,
+        _z: &[f32],
+        _w: &[f32],
+        _n_valid: i32,
+        _lam: f32,
+    ) -> Result<Vec<f32>> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    /// One-shot `loss` through literals (unavailable in this build).
+    pub fn loss(
+        &self,
+        _shape: &str,
+        _z: &[f32],
+        _w: &[f32],
+        _n_valid: i32,
+        _lam: f32,
+    ) -> Result<f32> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    /// One-shot fused `(loss, grad)` (unavailable in this build).
+    pub fn loss_grad(
+        &self,
+        _shape: &str,
+        _z: &[f32],
+        _w: &[f32],
+        _n_valid: i32,
+        _lam: f32,
+    ) -> Result<(f32, Vec<f32>)> {
+        bail!("{UNAVAILABLE}")
+    }
+}
+
+/// Same surface as the PJRT worker kernel; construction always fails in this
+/// build, so [`XlaWorkerKernel::grad`] is unreachable at runtime.
+pub struct XlaWorkerKernel {
+    _priv: (),
+}
+
+impl XlaWorkerKernel {
+    pub fn new(
+        _rt: &XlaRuntime,
+        _entry: &str,
+        _z: &[f64],
+        _n: usize,
+        _d: usize,
+        _lam: f64,
+    ) -> Result<Self> {
+        bail!("{UNAVAILABLE}")
+    }
+
+    pub fn grad(&self, _w: &[f64], _out: &mut [f64]) -> Result<()> {
+        bail!("{UNAVAILABLE}")
+    }
+}

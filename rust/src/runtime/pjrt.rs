@@ -1,0 +1,256 @@
+//! The PJRT-backed execution engine (compiled only with `--features xla`).
+//!
+//! Two execution paths:
+//! * [`XlaWorkerKernel`] — the hot path: the shard's margin matrix `Z` is
+//!   uploaded to a device buffer **once** and reused across every gradient
+//!   call (only `w` moves per call);
+//! * plain [`XlaRuntime::full_grad`] etc. — convenience literal-based calls
+//!   used by tests and one-shot tools.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{manifest_best_shape, manifest_info, parse_manifest, ArtifactInfo};
+
+/// The artifact registry + executable cache over one PJRT client.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Vec<ArtifactInfo>,
+    // Executables are compiled on first use; Mutex so &self can cache.
+    cache: Mutex<HashMap<(String, String), std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl XlaRuntime {
+    /// Open `artifacts_dir`, reading its manifest. Compilation is lazy.
+    pub fn load(artifacts_dir: &Path) -> Result<Self> {
+        let manifest_path = artifacts_dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!(
+                "read {} — run `make artifacts` first",
+                manifest_path.display()
+            )
+        })?;
+        let manifest = parse_manifest(&text)?;
+        if manifest.is_empty() {
+            bail!("empty manifest at {}", manifest_path.display());
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Self {
+            client,
+            dir: artifacts_dir.to_path_buf(),
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &[ArtifactInfo] {
+        &self.manifest
+    }
+
+    /// Look up the manifest row for (entry, shape).
+    pub fn info(&self, entry: &str, shape: &str) -> Result<&ArtifactInfo> {
+        manifest_info(&self.manifest, entry, shape)
+    }
+
+    /// Cheapest artifact (fewest padded elements) that can hold an `n × d`
+    /// shard.
+    pub fn best_shape_for(&self, entry: &str, n: usize, d: usize) -> Result<&ArtifactInfo> {
+        manifest_best_shape(&self.manifest, entry, n, d)
+    }
+
+    /// Compile (or fetch from cache) the executable for (entry, shape).
+    pub fn executable(
+        &self,
+        entry: &str,
+        shape: &str,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let key = (entry.to_string(), shape.to_string());
+        if let Some(e) = self.cache.lock().unwrap().get(&key) {
+            return Ok(e.clone());
+        }
+        let info = self.info(entry, shape)?;
+        let path = self.dir.join(&info.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {entry}.{shape}: {e:?}"))?;
+        let exe = std::sync::Arc::new(exe);
+        self.cache.lock().unwrap().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// One-shot `full_grad` through literals (test/verification path).
+    /// `z` is the padded margin matrix (n_pad × d_pad, f32 row-major).
+    pub fn full_grad(
+        &self,
+        shape: &str,
+        z: &[f32],
+        w: &[f32],
+        n_valid: i32,
+        lam: f32,
+    ) -> Result<Vec<f32>> {
+        let info = self.info("full_grad", shape)?.clone();
+        self.check_dims(&info, z, w)?;
+        let exe = self.executable("full_grad", shape)?;
+        let z_lit = xla::Literal::vec1(z).reshape(&[info.n_pad as i64, info.d_pad as i64])?;
+        let w_lit = xla::Literal::vec1(w);
+        let nv_lit = xla::Literal::scalar(n_valid);
+        let lam_lit = xla::Literal::scalar(lam);
+        let result = exe.execute::<xla::Literal>(&[z_lit, w_lit, nv_lit, lam_lit])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?; // lowered with return_tuple=True
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// One-shot `loss` through literals.
+    pub fn loss(&self, shape: &str, z: &[f32], w: &[f32], n_valid: i32, lam: f32) -> Result<f32> {
+        let info = self.info("loss", shape)?.clone();
+        self.check_dims(&info, z, w)?;
+        let exe = self.executable("loss", shape)?;
+        let z_lit = xla::Literal::vec1(z).reshape(&[info.n_pad as i64, info.d_pad as i64])?;
+        let result = exe.execute::<xla::Literal>(&[
+            z_lit,
+            xla::Literal::vec1(w),
+            xla::Literal::scalar(n_valid),
+            xla::Literal::scalar(lam),
+        ])?[0][0]
+            .to_literal_sync()?;
+        let out = result.to_tuple1()?;
+        Ok(out.get_first_element::<f32>()?)
+    }
+
+    /// One-shot fused `(loss, grad)` through literals.
+    pub fn loss_grad(
+        &self,
+        shape: &str,
+        z: &[f32],
+        w: &[f32],
+        n_valid: i32,
+        lam: f32,
+    ) -> Result<(f32, Vec<f32>)> {
+        let info = self.info("loss_grad", shape)?.clone();
+        self.check_dims(&info, z, w)?;
+        let exe = self.executable("loss_grad", shape)?;
+        let z_lit = xla::Literal::vec1(z).reshape(&[info.n_pad as i64, info.d_pad as i64])?;
+        let result = exe.execute::<xla::Literal>(&[
+            z_lit,
+            xla::Literal::vec1(w),
+            xla::Literal::scalar(n_valid),
+            xla::Literal::scalar(lam),
+        ])?[0][0]
+            .to_literal_sync()?;
+        let (l, g) = result.to_tuple2()?;
+        Ok((l.get_first_element::<f32>()?, g.to_vec::<f32>()?))
+    }
+
+    fn check_dims(&self, info: &ArtifactInfo, z: &[f32], w: &[f32]) -> Result<()> {
+        if z.len() != info.n_pad * info.d_pad {
+            bail!(
+                "z has {} elems, artifact {} needs {}×{}",
+                z.len(),
+                info.shape,
+                info.n_pad,
+                info.d_pad
+            );
+        }
+        if w.len() != info.d_pad {
+            bail!("w has {} elems, artifact needs {}", w.len(), info.d_pad);
+        }
+        Ok(())
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+}
+
+/// The worker hot path: shard data resident on device, one PJRT call per
+/// gradient. Padding rows are zero-filled and masked out by `n_valid` inside
+/// the kernel.
+pub struct XlaWorkerKernel {
+    exe: std::sync::Arc<xla::PjRtLoadedExecutable>,
+    z_buf: xla::PjRtBuffer,
+    nv_buf: xla::PjRtBuffer,
+    lam_buf: xla::PjRtBuffer,
+    d_pad: usize,
+    d: usize,
+}
+
+impl XlaWorkerKernel {
+    /// Upload shard margins (n × d, f64 row-major) into the padded device
+    /// buffer for `entry` (usually "full_grad") and keep it resident.
+    pub fn new(
+        rt: &XlaRuntime,
+        entry: &str,
+        z: &[f64],
+        n: usize,
+        d: usize,
+        lam: f64,
+    ) -> Result<Self> {
+        let info = rt.best_shape_for(entry, n, d)?.clone();
+        let exe = rt.executable(entry, &info.shape)?;
+        let mut z_pad = vec![0.0f32; info.n_pad * info.d_pad];
+        for i in 0..n {
+            for j in 0..d {
+                z_pad[i * info.d_pad + j] = z[i * d + j] as f32;
+            }
+        }
+        let z_buf = rt
+            .client
+            .buffer_from_host_buffer(&z_pad, &[info.n_pad, info.d_pad], None)
+            .map_err(|e| anyhow!("upload z: {e:?}"))?;
+        let nv_buf = rt
+            .client
+            .buffer_from_host_buffer(&[n as i32], &[], None)
+            .map_err(|e| anyhow!("upload n_valid: {e:?}"))?;
+        let lam_buf = rt
+            .client
+            .buffer_from_host_buffer(&[lam as f32], &[], None)
+            .map_err(|e| anyhow!("upload lam: {e:?}"))?;
+        Ok(Self {
+            exe,
+            z_buf,
+            nv_buf,
+            lam_buf,
+            d_pad: info.d_pad,
+            d,
+        })
+    }
+
+    /// Gradient at `w` (length d, f64); returns length-d f64. Exactly one
+    /// host→device transfer (w) and one PJRT execution.
+    pub fn grad(&self, w: &[f64], out: &mut [f64]) -> Result<()> {
+        if w.len() != self.d || out.len() != self.d {
+            bail!("dim mismatch: w={}, out={}, d={}", w.len(), out.len(), self.d);
+        }
+        let mut w_pad = vec![0.0f32; self.d_pad];
+        for (j, &x) in w.iter().enumerate() {
+            w_pad[j] = x as f32;
+        }
+        let w_buf = self
+            .exe
+            .client()
+            .buffer_from_host_buffer(&w_pad, &[self.d_pad], None)
+            .map_err(|e| anyhow!("upload w: {e:?}"))?;
+        let args = [&self.z_buf, &w_buf, &self.nv_buf, &self.lam_buf];
+        let result = self
+            .exe
+            .execute_b(&args)
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("download: {e:?}"))?;
+        let g = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let g32 = g.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+        for (o, &v) in out.iter_mut().zip(g32.iter().take(self.d)) {
+            *o = v as f64;
+        }
+        Ok(())
+    }
+}

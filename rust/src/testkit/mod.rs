@@ -2,9 +2,7 @@
 //! case generation with failure minimization by rerunning the failing seed.
 //!
 //! Usage:
-//! ```no_run
-//! # // no_run: doctest binaries bypass the rpath to libstdc++ that the xla
-//! # // crate's build config injects for normal targets
+//! ```
 //! use qmsvrg::testkit::forall;
 //! forall(100, 0xC0FFEE, |rng| {
 //!     let x = rng.gen_uniform(-10.0, 10.0);
@@ -20,14 +18,17 @@ use crate::rng::Xoshiro256pp;
 
 /// Run `prop` on `cases` independently-seeded rngs derived from `seed`.
 /// Panics with the failing case id on the first failure.
-pub fn forall(cases: u64, seed: u64, prop: impl Fn(&mut Xoshiro256pp) + std::panic::RefUnwindSafe) {
+///
+/// Each case's rng is exactly `Xoshiro256pp::seed_from_u64(seed).split(case)`
+/// — the same stream [`replay`] reconstructs — and the property consumes that
+/// rng directly (no clone whose advancement would be thrown away), so a
+/// failure printed here is guaranteed to reproduce bit-for-bit under
+/// `replay(seed, case, prop)`.
+pub fn forall(cases: u64, seed: u64, prop: impl Fn(&mut Xoshiro256pp)) {
     let root = Xoshiro256pp::seed_from_u64(seed);
     for case in 0..cases {
         let mut rng = root.split(case);
-        let result = std::panic::catch_unwind(|| {
-            let mut rng_inner = rng.clone();
-            prop(&mut rng_inner);
-        });
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut rng)));
         if let Err(payload) = result {
             eprintln!(
                 "\nproperty failed at case {case}/{cases} (root seed {seed:#x}); \
@@ -35,8 +36,6 @@ pub fn forall(cases: u64, seed: u64, prop: impl Fn(&mut Xoshiro256pp) + std::pan
             );
             std::panic::resume_unwind(payload);
         }
-        // keep the borrow checker happy about the clone above
-        let _ = &mut rng;
     }
 }
 
@@ -102,6 +101,36 @@ mod tests {
             })
             .collect();
         assert_eq!(seen, again);
+    }
+
+    #[test]
+    fn failing_case_replays_identically() {
+        // plant a failure (x % 5 == 0 fires at case 6 for seed 7 — and with
+        // probability 1 - 0.8^1000 for any reseeding of this sweep), then
+        // check that `replay` regenerates the exact draw the failing case saw.
+        use std::sync::Mutex;
+        let seen: Mutex<Vec<u64>> = Mutex::new(Vec::new());
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            forall(1000, 7, |rng| {
+                let x = rng.next_u64();
+                seen.lock().unwrap().push(x);
+                assert!(x % 5 != 0, "planted failure");
+            });
+        }));
+        assert!(result.is_err(), "the planted property never failed");
+        let seen = seen.into_inner().unwrap();
+        let failing_case = (seen.len() - 1) as u64;
+        let failing_draw = *seen.last().unwrap();
+        assert_eq!(failing_draw % 5, 0);
+        let mut replayed = 0;
+        replay(7, failing_case, |rng| replayed = rng.next_u64());
+        assert_eq!(replayed, failing_draw, "replay diverged from forall");
+        // every earlier (passing) case replays identically too
+        for (case, &draw) in seen.iter().enumerate() {
+            let mut v = 0;
+            replay(7, case as u64, |rng| v = rng.next_u64());
+            assert_eq!(v, draw, "case {case} not reproducible");
+        }
     }
 
     #[test]

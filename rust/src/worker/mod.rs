@@ -5,9 +5,11 @@
 //! identically on both ends without shipping grid parameters.
 //!
 //! Gradient computation is pluggable via [`GradientSource`]:
-//! * [`LogisticRidge`] — pure-Rust shard;
+//! * [`LogisticRidge`] — pure-Rust shard (the default backend);
 //! * [`XlaShard`] — the AOT JAX/Pallas artifact through PJRT
 //!   ([`crate::runtime::XlaWorkerKernel`]), shard resident on device.
+//!   Usable only in `--features xla` builds; in default builds its
+//!   constructor reports the runtime module's clear unavailability error.
 
 use anyhow::{bail, Context, Result};
 
@@ -223,9 +225,7 @@ impl<D: Duplex, B: GradientSource> WorkerNode<D, B> {
                     };
                     let idx = quant::unpack_indices(&payload, grid.bits())?;
                     quant::dequantize_into(&idx, grid, &mut w_cur);
-                    if w_hist.len() < usize::MAX {
-                        w_hist.push(w_cur.clone());
-                    }
+                    w_hist.push(w_cur.clone());
                 }
                 Message::ParamsRaw { w } => {
                     if w.len() != d {
@@ -268,7 +268,7 @@ mod tests {
     #[test]
     fn worker_answers_epoch_begin_with_exact_gradient() {
         let obj = shard();
-        let expect = Objective::grad_vec(&obj, &vec![0.0; 9]);
+        let expect = Objective::grad_vec(&obj, &[0.0; 9]);
         let (mut master, wlink) = pair();
         let node = WorkerNode::new(
             obj,
@@ -310,7 +310,7 @@ mod tests {
     #[test]
     fn worker_loss_query_matches_objective() {
         let obj = shard();
-        let expect = Objective::loss(&obj, &vec![0.0; 9]);
+        let expect = Objective::loss(&obj, &[0.0; 9]);
         let (mut master, wlink) = pair();
         let node = WorkerNode::new(
             obj,

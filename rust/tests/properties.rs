@@ -127,6 +127,42 @@ fn prop_urq_unbiased_mean() {
 }
 
 #[test]
+fn prop_urq_unbiased_vector_mean() {
+    // E[q(x)] = x coordinate-wise for whole vectors on per-coordinate grids:
+    // the empirical mean error over N draws must sit inside a 6σ CLT band,
+    // σ ≤ spacing/2 per draw (URQ error is supported on one cell).
+    forall(8, 0xB0, |rng| {
+        let d = 2 + rng.gen_index(6);
+        let bits = 2 + rng.gen_index(3) as u8;
+        let radius = rng.gen_uniform(0.5, 3.0);
+        let center = gen_vec(rng, d, -1.0, 1.0);
+        let grid = Grid::uniform(center.clone(), radius, bits).unwrap();
+        let x: Vec<f64> = center
+            .iter()
+            .map(|c| c + rng.gen_uniform(-radius * 0.9, radius * 0.9))
+            .collect();
+        let n = 30_000;
+        let mut sum = vec![0.0; d];
+        for _ in 0..n {
+            let (idx, stats) = quantize_urq(&x, &grid, rng);
+            assert_eq!(stats.saturated, 0);
+            let xq = dequantize(&idx, &grid);
+            for (s, v) in sum.iter_mut().zip(&xq) {
+                *s += v;
+            }
+        }
+        let six_sigma = 6.0 * (grid.spacing(0) / 2.0) / (n as f64).sqrt();
+        for (j, s) in sum.iter().enumerate() {
+            let bias = s / n as f64 - x[j];
+            assert!(
+                bias.abs() < six_sigma,
+                "coord {j}: bias {bias:.3e} outside 6sigma {six_sigma:.3e}"
+            );
+        }
+    });
+}
+
+#[test]
 fn prop_adaptive_radii_monotone_in_gnorm() {
     forall(200, 0xA6, |rng| {
         let mu = rng.gen_uniform(0.01, 1.0);

@@ -1,5 +1,8 @@
 //! Integration: the PJRT runtime against the AOT artifacts, and the
-//! XLA-vs-native backend equivalence. Requires `make artifacts`.
+//! XLA-vs-native backend equivalence. Requires a `--features xla` build (with
+//! real PJRT bindings patched in) and `make artifacts`; every test skips
+//! cleanly otherwise — in default builds `XlaRuntime::load` reports the
+//! runtime module's unavailability error and `runtime()` returns `None`.
 
 use std::path::Path;
 
@@ -145,15 +148,15 @@ fn xla_shard_gradient_source_equivalence() {
     let mut ds = power_like(800, 13);
     ds.standardize();
     let obj = LogisticRidge::new(&ds.x, &ds.y, ds.n, ds.d, 0.1);
-    let native_g = obj.grad_vec(&vec![0.2; 9]);
-    let native_loss = Objective::loss(&obj, &vec![0.2; 9]);
+    let native_g = obj.grad_vec(&[0.2; 9]);
+    let native_loss = Objective::loss(&obj, &[0.2; 9]);
     let shard = XlaShard::new(&rt, obj).unwrap();
     let mut g = vec![0.0; 9];
-    GradientSource::grad(&shard, &vec![0.2; 9], &mut g).unwrap();
+    GradientSource::grad(&shard, &[0.2; 9], &mut g).unwrap();
     for j in 0..9 {
         assert!((g[j] - native_g[j]).abs() < 1e-4);
     }
-    assert!((GradientSource::loss(&shard, &vec![0.2; 9]) - native_loss).abs() < 1e-12);
+    assert!((GradientSource::loss(&shard, &[0.2; 9]) - native_loss).abs() < 1e-12);
 }
 
 #[test]

@@ -1,0 +1,168 @@
+//! Offline API stub of the `xla` PJRT bindings.
+//!
+//! The qmsvrg `xla` cargo feature compiles `qmsvrg::runtime` against this
+//! crate so that `cargo build --features xla` typechecks in registries where
+//! the real bindings (and an XLA/PJRT installation) are unavailable. Every
+//! entry point that would touch PJRT returns [`Error`] at runtime —
+//! [`PjRtClient::cpu`] fails first, so no stub object is ever constructed.
+//!
+//! Deployments with a real XLA install substitute the real crate by editing
+//! the `xla` dependency in `rust/Cargo.toml` to point at the real bindings
+//! instead of this path (Cargo's `[patch]` cannot override a path
+//! dependency):
+//!
+//! ```toml
+//! xla = { git = "https://github.com/LaurentMazare/xla-rs", optional = true }
+//! ```
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the real bindings' surface: `Debug` for the
+/// `{e:?}`-style formatting qmsvrg uses, `std::error::Error` for `?`.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: this build links the vendored `xla` API stub (no PJRT); \
+         patch in the real xla crate and rebuild with --features xla"
+    )))
+}
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+
+    pub fn buffer_from_host_buffer<T>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_buffer")
+    }
+}
+
+/// A compiled executable bound to its client.
+pub struct PjRtLoadedExecutable {
+    client: PjRtClient,
+}
+
+impl PjRtLoadedExecutable {
+    pub fn client(&self) -> &PjRtClient {
+        &self.client
+    }
+
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+
+    pub fn execute_b<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+/// A device buffer.
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// A host-side literal value.
+pub struct Literal {
+    _priv: (),
+}
+
+impl Literal {
+    pub fn vec1<T>(_data: &[T]) -> Literal {
+        Literal { _priv: () }
+    }
+
+    pub fn scalar<T>(_value: T) -> Literal {
+        Literal { _priv: () }
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Ok(Literal { _priv: () })
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal> {
+        unavailable("Literal::to_tuple1")
+    }
+
+    pub fn to_tuple2(&self) -> Result<(Literal, Literal)> {
+        unavailable("Literal::to_tuple2")
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    pub fn get_first_element<T>(&self) -> Result<T> {
+        unavailable("Literal::get_first_element")
+    }
+}
+
+/// Parsed HLO module text.
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file<P: AsRef<Path>>(_path: P) -> Result<Self> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation built from an HLO module.
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_pjrt_entry_point_errors() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("stub"));
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let lit = Literal::vec1(&[1.0f32, 2.0]).reshape(&[1, 2]).unwrap();
+        assert!(lit.to_vec::<f32>().is_err());
+        assert!(lit.to_tuple1().is_err());
+        assert!(Literal::scalar(3i32).get_first_element::<i32>().is_err());
+    }
+}
