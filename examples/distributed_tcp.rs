@@ -12,12 +12,12 @@
 //! ```
 
 use qmsvrg::algorithms::channel::QuantOpts;
+use qmsvrg::algorithms::svrg::{run_svrg, SvrgOpts};
 use qmsvrg::algorithms::ShardedObjective;
-use qmsvrg::coordinator::{Coordinator, CoordinatorOpts};
+use qmsvrg::cluster::Cluster;
 use qmsvrg::data::synthetic::power_like;
 use qmsvrg::quant::{AdaptivePolicy, GridPolicy};
 use qmsvrg::rng::Xoshiro256pp;
-use qmsvrg::transport::tcp::TcpDuplex;
 
 const N_WORKERS: usize = 4;
 const ADDR: &str = "127.0.0.1:7070";
@@ -27,10 +27,13 @@ const SAMPLES: usize = 20_000;
 fn main() -> anyhow::Result<()> {
     let spawn = std::env::args().any(|a| a == "--spawn");
 
-    // the same dataset/shards every worker derives from the shared seed
-    let mut ds = power_like(SAMPLES, SEED);
-    ds.standardize();
-    let (train, _) = ds.split(0.8, SEED ^ 0x5117);
+    // the same dataset/shards every worker derives from the shared seed —
+    // this must follow the exact pipeline of the `qmsvrg worker` loader
+    // (split first, then standardize the train split), or the two processes
+    // would disagree on the data and the grids would not replicate
+    let ds = power_like(SAMPLES, SEED);
+    let (mut train, _) = ds.split(0.8, SEED ^ 0x5117);
+    train.standardize();
     let prob = ShardedObjective::new(&train, N_WORKERS, 0.1);
 
     let listener = std::net::TcpListener::bind(ADDR)?;
@@ -70,17 +73,9 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    let mut links = Vec::new();
-    for i in 0..N_WORKERS {
-        let (stream, peer) = listener.accept()?;
-        eprintln!("# worker {i} connected from {peer}");
-        links.push(TcpDuplex::new(stream)?);
-    }
-
-    // quantization config must mirror what the workers were started with
-    // (workers compute μ, L from their own shard; the master uses the global
-    // bounds — both construct radii from the *broadcast* gnorm, and grid
-    // centers from replicated state, so they agree)
+    // quantization config must mirror what the workers were started with:
+    // `qmsvrg worker` rebuilds the same global ShardedObjective from the
+    // shared seed, so μ, L, d — and therefore every grid — replicate exactly
     let quant = QuantOpts {
         bits: 4,
         policy: GridPolicy::Adaptive(AdaptivePolicy::practical(
@@ -92,35 +87,37 @@ fn main() -> anyhow::Result<()> {
         )),
         plus: true,
     };
-    let mut coord = Coordinator::new(
-        links,
-        train.d,
-        CoordinatorOpts {
+    let root = Xoshiro256pp::seed_from_u64(SEED);
+    let mut cluster =
+        qmsvrg::coordinator::tcp(&listener, N_WORKERS, train.d, Some(quant), &root)?;
+    eprintln!("# all {N_WORKERS} workers connected");
+
+    let t0 = std::time::Instant::now();
+    let w = run_svrg(
+        &mut cluster,
+        &SvrgOpts {
             step: 0.2,
             epoch_len: 8,
             outer_iters: 30,
             memory_unit: true,
-            quant: Some(quant),
         },
-        Xoshiro256pp::seed_from_u64(SEED).split(0),
-    );
-
-    let t0 = std::time::Instant::now();
-    coord.run(&mut |k, w, gn, bits| {
-        println!(
-            "epoch {k:>3}  loss {:.6}  |g| {:.3e}  bits {bits}",
-            prob.loss(w),
-            gn
-        );
-    })?;
-    let loss = coord.query_loss()?;
+        root.algo_stream(),
+        &mut |k, w, gn, bits| {
+            println!(
+                "epoch {k:>3}  loss {:.6}  |g| {:.3e}  bits {bits}",
+                prob.loss(w),
+                gn
+            );
+        },
+    )?;
+    let loss = cluster.query_losses(&w)?;
     println!(
         "done in {:.2?}: distributed loss {:.6}, total bits {}",
         t0.elapsed(),
         loss,
-        coord.ledger.total_bits()
+        cluster.total_bits()
     );
-    coord.shutdown()?;
+    cluster.shutdown()?;
     for mut c in children {
         let _ = c.wait();
     }

@@ -56,7 +56,7 @@ fn main() -> anyhow::Result<()> {
         &cfg,
         &train,
         quant.clone(),
-        Xoshiro256pp::seed_from_u64(cfg.seed),
+        &Xoshiro256pp::seed_from_u64(cfg.seed),
         &mut |k, w, gn, bits| {
             let loss = prob.loss(w);
             println!("epoch {k:>3}  loss {loss:.6}  |g| {gn:.3e}  wire bits {bits}");
@@ -74,7 +74,7 @@ fn main() -> anyhow::Result<()> {
         &cfg,
         &train,
         quant,
-        Xoshiro256pp::seed_from_u64(cfg.seed),
+        &Xoshiro256pp::seed_from_u64(cfg.seed),
         &mut |_, w, _, _| native_trace.push(prob.loss(w)),
         false,
     )?;

@@ -11,6 +11,7 @@
 use qmsvrg::algorithms::channel::QuantOpts;
 use qmsvrg::algorithms::svrg::{run_svrg, SvrgOpts};
 use qmsvrg::algorithms::ShardedObjective;
+use qmsvrg::cluster::InProcessCluster;
 use qmsvrg::data::synthetic::power_like;
 use qmsvrg::quant::{AdaptivePolicy, GridPolicy};
 use qmsvrg::rng::Xoshiro256pp;
@@ -24,16 +25,17 @@ fn problem() -> ShardedObjective {
 fn run(prob: &ShardedObjective, quant: Option<QuantOpts>, memory: bool, seed: u64) -> (f64, f64) {
     let mut first = f64::NAN;
     let mut last = f64::NAN;
+    let root = Xoshiro256pp::seed_from_u64(seed);
+    let mut cluster = InProcessCluster::new(prob, quant, &root);
     run_svrg(
-        prob,
+        &mut cluster,
         &SvrgOpts {
             step: 0.2,
             epoch_len: 8,
             outer_iters: 50,
             memory_unit: memory,
-            quant,
         },
-        Xoshiro256pp::seed_from_u64(seed),
+        root.algo_stream(),
         &mut |k, _, gn, _| {
             if k == 0 {
                 first = gn;
@@ -131,16 +133,17 @@ fn main() {
         };
         let mut last = f64::NAN;
         let mut bits = 0;
+        let root = Xoshiro256pp::seed_from_u64(4);
+        let mut cluster = InProcessCluster::new(&prob, Some(q), &root);
         run_svrg(
-            &prob,
+            &mut cluster,
             &SvrgOpts {
                 step: 0.2,
                 epoch_len: t_len,
                 outer_iters: 50,
                 memory_unit: true,
-                quant: Some(q),
             },
-            Xoshiro256pp::seed_from_u64(4),
+            root.algo_stream(),
             &mut |_, _, gn, b| {
                 last = gn;
                 bits = b;

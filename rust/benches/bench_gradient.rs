@@ -8,6 +8,7 @@
 use std::path::Path;
 use std::time::Duration;
 
+use qmsvrg::algorithms::ShardedObjective;
 use qmsvrg::benchkit::Bencher;
 use qmsvrg::data::synthetic::{mnist_like, power_like};
 use qmsvrg::objective::{LogisticRidge, Objective};
@@ -42,6 +43,40 @@ fn main() {
         objm.grad(&wm, &mut gm);
         gm[0]
     });
+
+    // sharded snapshot fan-out: the outer-loop collection of Algorithm 1 on
+    // the in-process cluster — sequential per-shard loop vs the
+    // std::thread::scope fan-out (bit-identical results; see EXPERIMENTS.md)
+    println!("\n-- snapshot gradient fan-out, N=8 shards --");
+    let fanout_ratio = |b: &mut Bencher, label: &str, prob: &ShardedObjective, w: &[f64]| {
+        let n = prob.n_workers();
+        let d = prob.dim();
+        let mut outs = vec![vec![0.0; d]; n];
+        let seq_ns = b
+            .bench(&format!("{label} sequential"), || {
+                for (i, out) in outs.iter_mut().enumerate() {
+                    prob.node_grad(i, w, out);
+                }
+                outs[0][0]
+            })
+            .ns_per_iter();
+        let par_ns = b
+            .bench(&format!("{label} scoped threads"), || {
+                prob.node_grads_parallel(w, &mut outs);
+                outs[0][0]
+            })
+            .ns_per_iter();
+        println!("   -> {label}: parallel/sequential speedup {:.2}x", seq_ns / par_ns);
+    };
+    // power geometry, 8 × 10000 × 9
+    let mut big = power_like(80_000, 5);
+    big.standardize();
+    let prob8 = ShardedObjective::new(&big, 8, 0.1);
+    fanout_ratio(&mut b, "8x10000x9 (power)", &prob8, &w);
+    // mnist geometry, 8 × 800 × 784
+    let big_m = mnist_like(6_400, 7).one_vs_all(9.0);
+    let prob8m = ShardedObjective::new(&big_m, 8, 0.1);
+    fanout_ratio(&mut b, "8x800x784 (mnist)", &prob8m, &wm);
 
     // XLA path (requires artifacts)
     match XlaRuntime::load(Path::new("artifacts")) {

@@ -148,11 +148,12 @@ fn main() {
             &cfg,
             &ds,
             quant,
-            qmsvrg::rng::Xoshiro256pp::seed_from_u64(1),
+            &qmsvrg::rng::Xoshiro256pp::seed_from_u64(1),
             &mut |_, _, _, _| {},
             false,
         )
         .unwrap()
+        .0
         .len()
     });
     b2.finish("bench_transport");

@@ -24,10 +24,19 @@ pub struct QuantOpts {
 }
 
 /// All master↔worker links of one run, with bit metering.
+///
+/// Randomness mirrors the message-passing runtime exactly: the downlink URQ
+/// draws from the root's [`Xoshiro256pp::quant_stream`], and worker `i`'s
+/// uplink URQ from [`Xoshiro256pp::worker_stream`]`(i)` — the same streams a
+/// real [`crate::worker::WorkerNode`] would own — so the in-process backend
+/// is bit-identical to the threaded/TCP ones at a fixed seed.
 pub struct QuantChannel {
     opts: QuantOpts,
     d: usize,
-    rng: Xoshiro256pp,
+    /// Master-side (downlink) URQ stream.
+    w_rng: Xoshiro256pp,
+    /// Per-worker (uplink) URQ streams.
+    g_rngs: Vec<Xoshiro256pp>,
     pub ledger: CommLedger,
     /// Shared center of each worker's gradient grid `R_{g_ξ,k}` (replicated
     /// state: the last snapshot gradient both ends agreed on).
@@ -45,11 +54,12 @@ pub struct QuantChannel {
 }
 
 impl QuantChannel {
-    pub fn new(opts: QuantOpts, d: usize, n_workers: usize, rng: Xoshiro256pp) -> Self {
+    pub fn new(opts: QuantOpts, d: usize, n_workers: usize, root: Xoshiro256pp) -> Self {
         Self {
             opts,
             d,
-            rng,
+            w_rng: root.quant_stream(),
+            g_rngs: (0..n_workers).map(|i| root.worker_stream(i)).collect(),
             ledger: CommLedger::default(),
             g_centers: vec![vec![0.0; d]; n_workers],
             w_center: vec![0.0; d],
@@ -94,8 +104,9 @@ impl QuantChannel {
     }
 
     /// Downlink: quantize parameters on `R_{w,k}`; meters `b_w` payload bits.
-    /// Returns the value the workers reconstruct.
-    pub fn send_w(&mut self, u: &[f64]) -> Result<Vec<f64>> {
+    /// Writes the value the workers reconstruct into `out` (no allocation
+    /// beyond the quantizer's own index/payload buffers).
+    pub fn send_w_into(&mut self, u: &[f64], out: &mut [f64]) -> Result<()> {
         if self.w_grid.is_none() {
             self.w_grid = Some(self.opts.policy.w_grid(
                 &self.w_center,
@@ -104,19 +115,28 @@ impl QuantChannel {
             )?);
         }
         let grid = self.w_grid.as_ref().unwrap();
-        let (idx, stats) = quant::quantize_urq(u, grid, &mut self.rng);
+        let (idx, stats) = quant::quantize_urq(u, grid, &mut self.w_rng);
         let payload = quant::pack_indices(&idx, grid.bits())?;
         self.ledger.record_downlink(payload.bits);
         self.ledger.saturations += stats.saturated as u64;
         // receiver-side reconstruction from the actual wire bytes
         let idx_rx = quant::unpack_indices(&payload.bytes, grid.bits())?;
         debug_assert_eq!(idx_rx, idx);
-        Ok(quant::dequantize(&idx_rx, grid))
+        quant::dequantize_into(&idx_rx, grid, out);
+        Ok(())
     }
 
-    /// Uplink: quantize worker `i`'s gradient on `R_{g_ξ,k}`; meters `b_g`
-    /// payload bits. Returns the value the master reconstructs.
-    pub fn send_g(&mut self, worker: usize, g: &[f64]) -> Result<Vec<f64>> {
+    /// Allocating convenience wrapper over [`Self::send_w_into`].
+    pub fn send_w(&mut self, u: &[f64]) -> Result<Vec<f64>> {
+        let mut out = vec![0.0; u.len()];
+        self.send_w_into(u, &mut out)?;
+        Ok(out)
+    }
+
+    /// Uplink: quantize worker `i`'s gradient on `R_{g_ξ,k}` using worker
+    /// `i`'s URQ stream; meters `b_g` payload bits. Writes the value the
+    /// master reconstructs into `out`.
+    pub fn send_g_into(&mut self, worker: usize, g: &[f64], out: &mut [f64]) -> Result<()> {
         if self.g_grids[worker].is_none() {
             self.g_grids[worker] = Some(self.opts.policy.g_grid(
                 &self.g_centers[worker],
@@ -125,13 +145,21 @@ impl QuantChannel {
             )?);
         }
         let grid = self.g_grids[worker].as_ref().unwrap();
-        let (idx, stats) = quant::quantize_urq(g, grid, &mut self.rng);
+        let (idx, stats) = quant::quantize_urq(g, grid, &mut self.g_rngs[worker]);
         let payload = quant::pack_indices(&idx, grid.bits())?;
         self.ledger.record_uplink(payload.bits);
         self.ledger.saturations += stats.saturated as u64;
         let idx_rx = quant::unpack_indices(&payload.bytes, grid.bits())?;
         debug_assert_eq!(idx_rx, idx);
-        Ok(quant::dequantize(&idx_rx, grid))
+        quant::dequantize_into(&idx_rx, grid, out);
+        Ok(())
+    }
+
+    /// Allocating convenience wrapper over [`Self::send_g_into`].
+    pub fn send_g(&mut self, worker: usize, g: &[f64]) -> Result<Vec<f64>> {
+        let mut out = vec![0.0; g.len()];
+        self.send_g_into(worker, g, &mut out)?;
+        Ok(out)
     }
 
     /// Meter an unquantized (64-bit float) uplink vector of dimension `d`.

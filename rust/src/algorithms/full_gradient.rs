@@ -24,13 +24,14 @@ pub struct GdOpts {
 /// Per-iteration observer: `(iteration, iterate, grad_norm, cumulative_bits)`.
 pub type EvalFn<'a> = &'a mut dyn FnMut(usize, &[f64], f64, u64);
 
-/// Run (Q-)GD from the origin; returns the final iterate.
+/// Run (Q-)GD from the origin; returns the final iterate and the number of
+/// URQ saturation events observed on the channel (0 when unquantized).
 pub fn run_gd(
     prob: &ShardedObjective,
     opts: &GdOpts,
     rng: Xoshiro256pp,
     eval: EvalFn,
-) -> Result<Vec<f64>> {
+) -> Result<(Vec<f64>, u64)> {
     let d = prob.dim();
     let n = prob.n_workers();
     let mut ch = opts
@@ -82,7 +83,8 @@ pub fn run_gd(
         .map(|c| c.ledger.total_bits())
         .unwrap_or((64 * d as u64 * (1 + n as u64)) * opts.iters as u64);
     eval(opts.iters, &w, linalg::nrm2(&g_exact), bits);
-    Ok(w)
+    let saturations = ch.as_ref().map(|c| c.ledger.saturations).unwrap_or(0);
+    Ok((w, saturations))
 }
 
 #[cfg(test)]
@@ -106,7 +108,7 @@ mod tests {
             quant: None,
         };
         let mut last_gn = f64::NAN;
-        let w = run_gd(
+        let (w, _) = run_gd(
             &p,
             &opts,
             Xoshiro256pp::seed_from_u64(1),
@@ -183,7 +185,9 @@ mod tests {
                 iters: 100,
                 quant,
             };
-            run_gd(&p, &opts, Xoshiro256pp::seed_from_u64(5), &mut |_, _, _, _| {}).unwrap()
+            run_gd(&p, &opts, Xoshiro256pp::seed_from_u64(5), &mut |_, _, _, _| {})
+                .unwrap()
+                .0
         };
         let w_exact = run(None);
         let w_q = run(Some(QuantOpts {

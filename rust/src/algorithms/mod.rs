@@ -1,11 +1,12 @@
 //! The paper's algorithm suite.
 //!
-//! Centralized *simulation* of the distributed algorithms: the master/worker
-//! message exchange is folded into a loop, but every vector that would cross
-//! a link goes through the real quantizer + wire codec and is metered in a
-//! [`crate::metrics::CommLedger`] — so convergence traces and measured bits
-//! are exactly those of the message-passing runtime in [`crate::coordinator`]
-//! (the integration tests assert this equivalence).
+//! The SVRG family ([`svrg::run_svrg`]) is written once, generic over
+//! [`crate::cluster::Cluster`]: run it on the in-process backend and every
+//! vector that would cross a link still goes through the real quantizer +
+//! wire codec and is metered in a [`crate::metrics::CommLedger`] — so
+//! convergence traces and measured bits are *bit-identical* to the
+//! message-passing backends (the integration tests assert this). The
+//! GD/SGD/SAG baselines below run centrally over [`QuantChannel`].
 //!
 //! | [`SolverKind`]    | family | quantized | grid      | memory unit |
 //! |-------------------|--------|-----------|-----------|-------------|

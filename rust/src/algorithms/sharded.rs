@@ -72,6 +72,27 @@ impl ShardedObjective {
         self.shards[i].grad(w, out);
     }
 
+    /// All node gradients `g_i(w)` at once, one thread per shard
+    /// (`std::thread::scope`). This is the outer-loop snapshot fan-out of
+    /// Algorithm 1: the shards are independent, each writes its own output
+    /// buffer, and `grad` is deterministic — so the result is bit-identical
+    /// to calling [`Self::node_grad`] per shard, just wall-clock-parallel
+    /// (see EXPERIMENTS.md §Perf and `bench_gradient`).
+    pub fn node_grads_parallel(&self, w: &[f64], outs: &mut [Vec<f64>]) {
+        debug_assert_eq!(outs.len(), self.shards.len());
+        if self.shards.len() <= 1 {
+            if let (Some(s), Some(out)) = (self.shards.first(), outs.first_mut()) {
+                s.grad(w, out);
+            }
+            return;
+        }
+        std::thread::scope(|scope| {
+            for (shard, out) in self.shards.iter().zip(outs.iter_mut()) {
+                scope.spawn(move || shard.grad(w, out));
+            }
+        });
+    }
+
     /// Global gradient `g(w) = (1/N) Σ g_i(w)` into `out`.
     pub fn full_grad(&self, w: &[f64], out: &mut [f64]) {
         let mut tmp = vec![0.0; self.d];
@@ -158,6 +179,19 @@ mod tests {
         p.full_grad(&w, &mut g1);
         let g2 = pooled.grad_vec(&w);
         assert!(linalg::linf_dist(&g1, &g2) < 1e-12);
+    }
+
+    #[test]
+    fn parallel_node_grads_bit_identical_to_sequential() {
+        let (_, p) = problem();
+        let w: Vec<f64> = (0..9).map(|i| 0.3 - 0.07 * i as f64).collect();
+        let mut seq = vec![vec![0.0; 9]; 4];
+        for (i, out) in seq.iter_mut().enumerate() {
+            p.node_grad(i, &w, out);
+        }
+        let mut par = vec![vec![1.0; 9]; 4]; // poisoned: must be overwritten
+        p.node_grads_parallel(&w, &mut par);
+        assert_eq!(seq, par);
     }
 
     #[test]

@@ -26,13 +26,14 @@ pub struct StochasticOpts {
     pub eval_every: usize,
 }
 
-/// Run (Q-)SGD; returns the final iterate.
+/// Run (Q-)SGD; returns the final iterate and the channel's URQ saturation
+/// count (0 when unquantized).
 pub fn run_sgd(
     prob: &ShardedObjective,
     opts: &StochasticOpts,
     mut rng: Xoshiro256pp,
     eval: EvalFn,
-) -> Result<Vec<f64>> {
+) -> Result<(Vec<f64>, u64)> {
     let d = prob.dim();
     let n = prob.n_workers();
     let mut ch = opts
@@ -69,16 +70,18 @@ pub fn run_sgd(
     prob.full_grad(&w, &mut g_exact);
     let bits = measured_or_formula(&ch, opts.iters, d, 128);
     eval(opts.iters, &w, linalg::nrm2(&g_exact), bits);
-    Ok(w)
+    let saturations = ch.as_ref().map(|c| c.ledger.saturations).unwrap_or(0);
+    Ok((w, saturations))
 }
 
-/// Run (Q-)SAG; returns the final iterate.
+/// Run (Q-)SAG; returns the final iterate and the channel's URQ saturation
+/// count (0 when unquantized).
 pub fn run_sag(
     prob: &ShardedObjective,
     opts: &StochasticOpts,
     mut rng: Xoshiro256pp,
     eval: EvalFn,
-) -> Result<Vec<f64>> {
+) -> Result<(Vec<f64>, u64)> {
     let d = prob.dim();
     let n = prob.n_workers();
     let mut ch = opts
@@ -122,7 +125,8 @@ pub fn run_sag(
     prob.full_grad(&w, &mut g_exact);
     let bits = measured_or_formula(&ch, opts.iters, d, 128);
     eval(opts.iters, &w, linalg::nrm2(&g_exact), bits);
-    Ok(w)
+    let saturations = ch.as_ref().map(|c| c.ledger.saturations).unwrap_or(0);
+    Ok((w, saturations))
 }
 
 fn measured_or_formula(
@@ -161,7 +165,7 @@ mod tests {
     #[test]
     fn sgd_descends_loss() {
         let p = prob();
-        let w = run_sgd(
+        let (w, _) = run_sgd(
             &p,
             &opts(600, None),
             Xoshiro256pp::seed_from_u64(1),

@@ -1,6 +1,12 @@
 //! The SVRG family: SVRG, M-SVRG, and all four QM-SVRG variants — the
 //! paper's Algorithm 1 plus the memory unit of Section 3.
 //!
+//! This is the **only** implementation of Algorithm 1 in the repo: the loop
+//! is generic over [`Cluster`], so the same code drives the in-process
+//! backend (shards in this process, scoped-thread fan-out), worker threads
+//! over local duplex links, and real TCP deployments — and all three produce
+//! bit-identical traces at a fixed seed (`rust/tests/distributed.rs`).
+//!
 //! One *outer* iteration (epoch) k:
 //!
 //! 1. every worker sends its exact node gradient `g_i(w̃_k)` (64d · N bits);
@@ -19,7 +25,10 @@
 //!    `w_{k,t} = q(u; R_{w,k})` (b_w bits);
 //! 5. `w̃_{k+1} = w_{k,ζ}` for ζ uniform on {0..T−1}.
 //!
-//! Unquantized runs meter the §4.1 closed-form instead (`64dN + 192dT`).
+//! Every exchange — including the raw 64-bit ones and the final gradient
+//! collection after the last epoch — is metered on the cluster's ledger, so
+//! unquantized runs measure exactly the §4.1 closed form `64dN + 192dT` per
+//! epoch (plus the final `64dN` report).
 //!
 //! NOTE on "+" accounting: §4.1 prices QM-SVRG-F+/A+ at `64dN + (b_w+b_g)T`
 //! although the text has the worker quantize *two* gradient vectors per inner
@@ -29,13 +38,14 @@
 
 use anyhow::Result;
 
-use super::channel::{QuantChannel, QuantOpts};
 use super::full_gradient::EvalFn;
-use super::sharded::ShardedObjective;
+use crate::cluster::Cluster;
 use crate::linalg;
 use crate::rng::Xoshiro256pp;
 
-/// Options for the SVRG family.
+/// Options for the SVRG family. Quantization is a property of the *cluster*
+/// (pass [`super::channel::QuantOpts`] to the backend's constructor), not of
+/// the algorithm.
 #[derive(Clone, Debug)]
 pub struct SvrgOpts {
     /// Step size α (constant over k, as in the experiments).
@@ -46,170 +56,130 @@ pub struct SvrgOpts {
     pub outer_iters: usize,
     /// Memory unit (M-SVRG): reject snapshots whose gradient norm grew.
     pub memory_unit: bool,
-    /// `Some` = quantized (QM-SVRG-*); `None` = exact SVRG/M-SVRG.
-    pub quant: Option<QuantOpts>,
 }
 
-/// Run the configured SVRG variant; returns the final snapshot `w̃`.
+/// Run Algorithm 1 on `cluster`; returns the final snapshot `w̃`.
 ///
-/// `eval` is called once per outer iteration (after the memory-unit check,
-/// i.e. on the snapshot the epoch actually starts from) and once more after
-/// the final epoch: `(k, w̃_k, ‖g̃_k‖, cumulative_bits)`.
-pub fn run_svrg(
-    prob: &ShardedObjective,
+/// `rng` drives the master's ξ/ζ draws only (use the root's
+/// [`Xoshiro256pp::algo_stream`]; quantization randomness lives in the
+/// cluster). `eval` is called once per outer iteration — after the
+/// memory-unit check, i.e. on the snapshot the epoch actually starts from —
+/// and once more after the final epoch: `(k, w̃_k, ‖g̃_k‖, cumulative_bits)`.
+///
+/// The inner loop allocates nothing: gradients land in scratch buffers and
+/// the ζ-eligible history is a flat T×d matrix (§Perf, EXPERIMENTS.md).
+pub fn run_svrg<C: Cluster>(
+    cluster: &mut C,
     opts: &SvrgOpts,
     mut rng: Xoshiro256pp,
     eval: EvalFn,
 ) -> Result<Vec<f64>> {
-    let d = prob.dim();
-    let n = prob.n_workers();
+    let d = cluster.dim();
+    let n = cluster.n_workers();
     let t_len = opts.epoch_len;
-    let mut ch = opts
-        .quant
-        .clone()
-        .map(|q| QuantChannel::new(q, d, n, rng.split(u64::MAX)));
 
     // snapshot state
     let mut w_tilde = vec![0.0; d];
     let mut g_tilde = vec![0.0; d];
-    // memory unit: previous accepted snapshot
+    // memory unit: previous accepted snapshot (+ its node gradients, so a
+    // rejection needs no recomputation on the master side)
     let mut prev_w = vec![0.0; d];
     let mut prev_g = vec![0.0; d];
     let mut prev_gnorm = f64::INFINITY;
-
-    // scratch
     let mut node_g = vec![vec![0.0; d]; n];
-    let mut g_cur = vec![0.0; d];
-    let mut g_snap = vec![0.0; d];
+    let mut prev_node_g = vec![vec![0.0; d]; n];
+
+    // scratch — reused across all inner iterations
+    let mut g_cur_rx = vec![0.0; d];
+    let mut g_snap_rx = vec![0.0; d];
     let mut u = vec![0.0; d];
-    let mut w_hist: Vec<Vec<f64>> = Vec::with_capacity(t_len);
+    let mut w = vec![0.0; d];
+    // ζ-eligible iterates w_{k,0..T−1}, flat T×d
+    let mut w_hist = vec![0.0; t_len * d];
 
     for k in 0..opts.outer_iters {
         // ---- outer: collect exact node gradients (64dN bits, all variants)
-        for (i, gi) in node_g.iter_mut().enumerate() {
-            prob.node_grad(i, &w_tilde, gi);
-            if let Some(c) = ch.as_mut() {
-                c.send_raw_up(d);
-            }
-        }
-        for o in g_tilde.iter_mut() {
-            *o = 0.0;
-        }
-        for gi in &node_g {
-            linalg::axpy(1.0 / n as f64, gi, &mut g_tilde);
-        }
+        cluster.snapshot_grads_into(k, &w_tilde, &mut node_g)?;
+        mean_into(&node_g, &mut g_tilde);
         let mut gnorm = linalg::nrm2(&g_tilde);
 
         // ---- memory unit: reject a snapshot whose gradient norm grew
         if opts.memory_unit && gnorm > prev_gnorm {
+            cluster.revert_epoch()?;
             w_tilde.copy_from_slice(&prev_w);
             g_tilde.copy_from_slice(&prev_g);
             gnorm = prev_gnorm;
-            // workers recompute their snapshot gradients at the restored w̃
-            for (i, gi) in node_g.iter_mut().enumerate() {
-                prob.node_grad(i, &w_tilde, gi);
+            for (gi, pgi) in node_g.iter_mut().zip(&prev_node_g) {
+                gi.copy_from_slice(pgi);
             }
         } else {
             prev_w.copy_from_slice(&w_tilde);
             prev_g.copy_from_slice(&g_tilde);
             prev_gnorm = gnorm;
+            for (pgi, gi) in prev_node_g.iter_mut().zip(&node_g) {
+                pgi.copy_from_slice(gi);
+            }
         }
-
-        let bits = measured_or_formula(&ch, k, d, n, t_len);
-        eval(k, &w_tilde, gnorm, bits);
 
         // ---- grids for this epoch
-        if let Some(c) = ch.as_mut() {
-            c.set_epoch(&w_tilde, gnorm);
-            for (i, gi) in node_g.iter().enumerate() {
-                // the exact node gradient was just shared on the raw uplink,
-                // so both ends may center R_{g_ξ,k} on it
-                c.set_g_center(i, gi);
-            }
-        }
+        cluster.commit_epoch(&w_tilde, &node_g, gnorm)?;
+        eval(k, &w_tilde, gnorm, cluster.total_bits());
 
         // ---- inner loop
-        let mut w = w_tilde.clone();
-        w_hist.clear();
-        w_hist.push(w.clone()); // w_{k,0} = w̃_k
+        w.copy_from_slice(&w_tilde);
+        w_hist[..d].copy_from_slice(&w); // w_{k,0} = w̃_k
+        let mut hist_len = 1;
         for _t in 1..=t_len {
             let xi = rng.gen_index(n);
-            prob.node_grad(xi, &w, &mut g_cur);
-            prob.node_grad(xi, &w_tilde, &mut g_snap);
-
-            let (g_cur_rx, g_snap_rx) = match ch.as_mut() {
-                Some(c) => {
-                    let snap_q = c.send_g(xi, &g_snap)?; // b_g
-                    let cur_rx = if c.opts().plus {
-                        c.send_g(xi, &g_cur)? // b_g ("+": quantized too)
-                    } else {
-                        c.send_raw_up(d); // 64d exact
-                        g_cur.clone()
-                    };
-                    (cur_rx, snap_q)
-                }
-                None => {
-                    (g_cur.clone(), g_snap.clone())
-                }
-            };
+            cluster.inner_grads(xi, &w, &w_tilde, &mut g_snap_rx, &mut g_cur_rx)?;
 
             // u = w − α (g_ξ(w) − q(g_ξ(w̃)) + g̃)
-            for j in 0..d {
-                u[j] = w[j] - opts.step * (g_cur_rx[j] - g_snap_rx[j] + g_tilde[j]);
+            for (j, uj) in u.iter_mut().enumerate() {
+                *uj = w[j] - opts.step * (g_cur_rx[j] - g_snap_rx[j] + g_tilde[j]);
             }
-            w = match ch.as_mut() {
-                Some(c) => c.send_w(&u)?, // w_{k,t} = q(u; R_{w,k}), b_w bits
-                None => u.clone(),
-            };
-            if w_hist.len() < t_len {
-                w_hist.push(w.clone()); // only w_{k,0..T−1} are ζ-eligible
+            cluster.broadcast_params(&u, &mut w)?; // w_{k,t} = q(u; R_{w,k})
+            if hist_len < t_len {
+                // only w_{k,0..T−1} are ζ-eligible
+                w_hist[hist_len * d..(hist_len + 1) * d].copy_from_slice(&w);
+                hist_len += 1;
             }
         }
 
         // ---- w̃_{k+1} = w_{k,ζ}, ζ uniform on {0..T−1}
-        let zeta = rng.gen_index(t_len.min(w_hist.len()));
-        w_tilde.copy_from_slice(&w_hist[zeta]);
+        let zeta = rng.gen_index(hist_len);
+        cluster.choose_snapshot(zeta)?;
+        w_tilde.copy_from_slice(&w_hist[zeta * d..(zeta + 1) * d]);
     }
 
-    // final report on the last snapshot
-    for (i, gi) in node_g.iter_mut().enumerate() {
-        prob.node_grad(i, &w_tilde, gi);
-    }
-    for o in g_tilde.iter_mut() {
-        *o = 0.0;
-    }
-    for gi in &node_g {
-        linalg::axpy(1.0 / n as f64, gi, &mut g_tilde);
-    }
-    let bits = measured_or_formula(&ch, opts.outer_iters, d, n, t_len);
+    // final report on the last snapshot (metered like any collection)
+    cluster.snapshot_grads_into(opts.outer_iters, &w_tilde, &mut node_g)?;
+    mean_into(&node_g, &mut g_tilde);
     eval(
         opts.outer_iters,
         &w_tilde,
         linalg::nrm2(&g_tilde),
-        bits,
+        cluster.total_bits(),
     );
     Ok(w_tilde)
 }
 
-fn measured_or_formula(
-    ch: &Option<QuantChannel>,
-    epochs_done: usize,
-    d: usize,
-    n: usize,
-    t_len: usize,
-) -> u64 {
-    match ch {
-        Some(c) => c.ledger.total_bits(),
-        // §4.1: SVRG / M-SVRG = 64dN + 192dT per outer iteration
-        None => {
-            (64 * d as u64 * n as u64 + 192 * d as u64 * t_len as u64) * epochs_done as u64
-        }
+/// `out = (1/N) Σ node_g[i]`.
+fn mean_into(node_g: &[Vec<f64>], out: &mut [f64]) {
+    for o in out.iter_mut() {
+        *o = 0.0;
+    }
+    let inv_n = 1.0 / node_g.len() as f64;
+    for gi in node_g {
+        linalg::axpy(inv_n, gi, out);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::algorithms::channel::QuantOpts;
+    use crate::algorithms::sharded::ShardedObjective;
+    use crate::cluster::InProcessCluster;
     use crate::data::synthetic::power_like;
     use crate::quant::{AdaptivePolicy, GridPolicy};
 
@@ -225,7 +195,6 @@ mod tests {
             epoch_len: 8,
             outer_iters: 40,
             memory_unit: false,
-            quant: None,
         }
     }
 
@@ -243,17 +212,24 @@ mod tests {
         }
     }
 
+    /// Run on a fresh in-process cluster from one root seed.
+    fn run(
+        p: &ShardedObjective,
+        opts: &SvrgOpts,
+        quant: Option<QuantOpts>,
+        seed: u64,
+        eval: EvalFn,
+    ) -> Vec<f64> {
+        let root = Xoshiro256pp::seed_from_u64(seed);
+        let mut cluster = InProcessCluster::new(p, quant, &root);
+        run_svrg(&mut cluster, opts, root.algo_stream(), eval).unwrap()
+    }
+
     #[test]
     fn svrg_converges_linearly() {
         let p = prob();
         let mut gns = Vec::new();
-        run_svrg(
-            &p,
-            &base_opts(),
-            Xoshiro256pp::seed_from_u64(1),
-            &mut |_, _, gn, _| gns.push(gn),
-        )
-        .unwrap();
+        run(&p, &base_opts(), None, 1, &mut |_, _, gn, _| gns.push(gn));
         let first = gns[0];
         let last = *gns.last().unwrap();
         assert!(
@@ -268,13 +244,7 @@ mod tests {
         let mut opts = base_opts();
         opts.memory_unit = true;
         let mut gns = Vec::new();
-        run_svrg(
-            &p,
-            &opts,
-            Xoshiro256pp::seed_from_u64(2),
-            &mut |_, _, gn, _| gns.push(gn),
-        )
-        .unwrap();
+        run(&p, &opts, None, 2, &mut |_, _, gn, _| gns.push(gn));
         for pair in gns.windows(2) {
             assert!(
                 pair[1] <= pair[0] + 1e-12,
@@ -292,15 +262,9 @@ mod tests {
         let p = prob();
         let mut opts = base_opts();
         opts.memory_unit = true;
-        opts.quant = Some(adaptive_quant(3, &p, true));
+        let q = adaptive_quant(3, &p, true);
         let mut gns = Vec::new();
-        run_svrg(
-            &p,
-            &opts,
-            Xoshiro256pp::seed_from_u64(3),
-            &mut |_, _, gn, _| gns.push(gn),
-        )
-        .unwrap();
+        run(&p, &opts, Some(q), 3, &mut |_, _, gn, _| gns.push(gn));
         let first = gns[0];
         let last = *gns.last().unwrap();
         assert!(
@@ -315,19 +279,13 @@ mod tests {
         let p = prob();
         let mut opts = base_opts();
         opts.memory_unit = true;
-        opts.quant = Some(QuantOpts {
+        let q = QuantOpts {
             bits: 3,
             policy: GridPolicy::Fixed { radius: 4.0 },
             plus: false,
-        });
+        };
         let mut gns = Vec::new();
-        run_svrg(
-            &p,
-            &opts,
-            Xoshiro256pp::seed_from_u64(4),
-            &mut |_, _, gn, _| gns.push(gn),
-        )
-        .unwrap();
+        run(&p, &opts, Some(q), 4, &mut |_, _, gn, _| gns.push(gn));
         let last = *gns.last().unwrap();
         // the fixed 3-bit lattice has spacing 8/7 ≈ 1.14; the iterate cannot
         // resolve the optimum below the lattice scale
@@ -342,20 +300,15 @@ mod tests {
             let mut adaptive_final = f64::NAN;
             let mut o = base_opts();
             o.memory_unit = true;
-            o.quant = Some(QuantOpts {
+            let fixed = QuantOpts {
                 bits,
                 policy: GridPolicy::Fixed { radius: 4.0 },
                 plus: false,
-            });
-            run_svrg(&p, &o, Xoshiro256pp::seed_from_u64(5), &mut |_, _, gn, _| {
-                fixed_final = gn
-            })
-            .unwrap();
-            o.quant = Some(adaptive_quant(bits, &p, false));
-            run_svrg(&p, &o, Xoshiro256pp::seed_from_u64(5), &mut |_, _, gn, _| {
+            };
+            run(&p, &o, Some(fixed), 5, &mut |_, _, gn, _| fixed_final = gn);
+            run(&p, &o, Some(adaptive_quant(bits, &p, false)), 5, &mut |_, _, gn, _| {
                 adaptive_final = gn
-            })
-            .unwrap();
+            });
             assert!(
                 adaptive_final < fixed_final,
                 "bits={bits}: adaptive {adaptive_final} vs fixed {fixed_final}"
@@ -369,12 +322,10 @@ mod tests {
         let mut opts = base_opts();
         opts.outer_iters = 4;
         let mut bits = 0;
-        run_svrg(&p, &opts, Xoshiro256pp::seed_from_u64(6), &mut |_, _, _, b| {
-            bits = b
-        })
-        .unwrap();
-        // (64·9·8 + 192·9·8)·4
-        assert_eq!(bits, (64 * 9 * 8 + 192 * 9 * 8) * 4);
+        run(&p, &opts, None, 6, &mut |_, _, _, b| bits = b);
+        // (64·9·8 + 192·9·8) per epoch · 4 epochs, plus the metered final
+        // gradient report (64·9·8)
+        assert_eq!(bits, (64 * 9 * 8 + 192 * 9 * 8) * 4 + 64 * 9 * 8);
     }
 
     #[test]
@@ -386,24 +337,21 @@ mod tests {
         opts.epoch_len = t;
         opts.memory_unit = true;
 
-        // non-plus: 64dN + 64dT + (b_w + b_g)T per epoch
-        opts.quant = Some(adaptive_quant(bpd as u8, &p, false));
+        // non-plus: (64dN + 64dT + (b_w + b_g)T) per epoch + final 64dN
         let mut bits = 0;
-        run_svrg(&p, &opts, Xoshiro256pp::seed_from_u64(7), &mut |_, _, _, b| {
+        run(&p, &opts, Some(adaptive_quant(bpd as u8, &p, false)), 7, &mut |_, _, _, b| {
             bits = b
-        })
-        .unwrap();
+        });
         let per_epoch = 64 * d * n + 64 * d * t as u64 + 2 * bpd * d * t as u64;
-        assert_eq!(bits, per_epoch * k as u64);
+        assert_eq!(bits, per_epoch * k as u64 + 64 * d * n);
 
-        // plus: 64dN + (b_w + 2 b_g)T per epoch (both inner gradients cross)
-        opts.quant = Some(adaptive_quant(bpd as u8, &p, true));
-        run_svrg(&p, &opts, Xoshiro256pp::seed_from_u64(7), &mut |_, _, _, b| {
+        // plus: (64dN + (b_w + 2 b_g)T) per epoch (both inner gradients
+        // cross) + final 64dN
+        run(&p, &opts, Some(adaptive_quant(bpd as u8, &p, true)), 7, &mut |_, _, _, b| {
             bits = b
-        })
-        .unwrap();
+        });
         let per_epoch_plus = 64 * d * n + 3 * bpd * d * t as u64;
-        assert_eq!(bits, per_epoch_plus * k as u64);
+        assert_eq!(bits, per_epoch_plus * k as u64 + 64 * d * n);
     }
 
     #[test]
@@ -414,16 +362,12 @@ mod tests {
         o.outer_iters = 5;
         let mut bits_base = 0;
         let mut bits_plus = 0;
-        o.quant = Some(adaptive_quant(3, &p, false));
-        run_svrg(&p, &o, Xoshiro256pp::seed_from_u64(8), &mut |_, _, _, b| {
+        run(&p, &o, Some(adaptive_quant(3, &p, false)), 8, &mut |_, _, _, b| {
             bits_base = b
-        })
-        .unwrap();
-        o.quant = Some(adaptive_quant(3, &p, true));
-        run_svrg(&p, &o, Xoshiro256pp::seed_from_u64(8), &mut |_, _, _, b| {
+        });
+        run(&p, &o, Some(adaptive_quant(3, &p, true)), 8, &mut |_, _, _, b| {
             bits_plus = b
-        })
-        .unwrap();
+        });
         assert!(bits_plus < bits_base);
     }
 
@@ -432,20 +376,18 @@ mod tests {
         let p = prob();
         let mut o = base_opts();
         o.memory_unit = true;
-        o.quant = Some(adaptive_quant(4, &p, true));
-        let run = |seed| {
+        let go = |seed| {
             let mut trace = Vec::new();
-            let w = run_svrg(&p, &o, Xoshiro256pp::seed_from_u64(seed), &mut |_, _, gn, _| {
+            let w = run(&p, &o, Some(adaptive_quant(4, &p, true)), seed, &mut |_, _, gn, _| {
                 trace.push(gn)
-            })
-            .unwrap();
+            });
             (w, trace)
         };
-        let (w1, t1) = run(9);
-        let (w2, t2) = run(9);
+        let (w1, t1) = go(9);
+        let (w2, t2) = go(9);
         assert_eq!(w1, w2);
         assert_eq!(t1, t2);
-        let (w3, _) = run(10);
+        let (w3, _) = go(10);
         assert_ne!(w1, w3);
     }
 }

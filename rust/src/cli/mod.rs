@@ -102,7 +102,8 @@ USAGE:
   qmsvrg train       [--config FILE.toml] [--algorithm A]
                      [--dataset power|mnist|PATH] [--samples N]
                      [--workers N] [--epoch-len T] [--iters K] [--step A]
-                     [--bits B] [--lambda L] [--seed S] [--backend native|xla]
+                     [--bits B] [--lambda L] [--seed S]
+                     [--backend native|threaded|xla]
                      [--out DIR]
   qmsvrg experiment  fig2|fig3|fig4|table1|bounds [--bits B] [--samples N]
                      [--iters K] [--seed S] [--out DIR]

@@ -1,0 +1,165 @@
+//! The in-process backend: shards live in this process, "links" are function
+//! calls — but every quantized exchange still runs the real URQ + wire codec
+//! (via [`QuantChannel`]) so bit counts are payload-exact and reconstructed
+//! values are identical to what a remote end would see. Replaces the old
+//! centralized simulator loop in `algorithms::svrg`.
+
+use anyhow::Result;
+
+use super::{active_ledger, Cluster};
+use crate::algorithms::channel::{QuantChannel, QuantOpts};
+use crate::algorithms::sharded::ShardedObjective;
+use crate::metrics::CommLedger;
+use crate::rng::Xoshiro256pp;
+
+/// [`Cluster`] over a [`ShardedObjective`] held in this process.
+pub struct InProcessCluster<'a> {
+    prob: &'a ShardedObjective,
+    ch: Option<QuantChannel>,
+    /// Metering for unquantized runs (quantized runs meter on the channel).
+    raw_ledger: CommLedger,
+    /// Scratch for the exact gradient that feeds the uplink quantizer.
+    g_scratch: Vec<f64>,
+    /// This epoch's exact snapshot gradients `g_i(w̃_k)`, cached at
+    /// [`Cluster::commit_epoch`] — the same per-epoch cache a `WorkerNode`
+    /// keeps, so the inner loop never recomputes them.
+    g_snap: Vec<Vec<f64>>,
+}
+
+impl<'a> InProcessCluster<'a> {
+    /// `root` is the run's root rng; the channel derives the master/worker
+    /// URQ streams from it (the same streams the threaded/TCP backends use).
+    pub fn new(
+        prob: &'a ShardedObjective,
+        quant: Option<QuantOpts>,
+        root: &Xoshiro256pp,
+    ) -> Self {
+        let d = prob.dim();
+        let n = prob.n_workers();
+        Self {
+            prob,
+            ch: quant.map(|q| QuantChannel::new(q, d, n, root.clone())),
+            raw_ledger: CommLedger::default(),
+            g_scratch: vec![0.0; d],
+            g_snap: vec![vec![0.0; d]; n],
+        }
+    }
+
+    fn meter_uplink(&mut self, bits: u64) {
+        match self.ch.as_mut() {
+            Some(c) => c.ledger.record_uplink(bits),
+            None => self.raw_ledger.record_uplink(bits),
+        }
+    }
+}
+
+impl Cluster for InProcessCluster<'_> {
+    fn dim(&self) -> usize {
+        self.prob.dim()
+    }
+
+    fn n_workers(&self) -> usize {
+        self.prob.n_workers()
+    }
+
+    fn snapshot_grads_into(
+        &mut self,
+        _epoch: usize,
+        w_tilde: &[f64],
+        node_g: &mut [Vec<f64>],
+    ) -> Result<()> {
+        // one scoped thread per shard: the fan-out really runs in parallel
+        self.prob.node_grads_parallel(w_tilde, node_g);
+        let d = self.prob.dim() as u64;
+        for _ in 0..node_g.len() {
+            self.meter_uplink(64 * d);
+        }
+        Ok(())
+    }
+
+    fn revert_epoch(&mut self) -> Result<()> {
+        // the engine restores node_g from its own copies; shards are
+        // stateless here, so there is nothing to roll back
+        Ok(())
+    }
+
+    fn commit_epoch(&mut self, w_tilde: &[f64], node_g: &[Vec<f64>], gnorm: f64) -> Result<()> {
+        // cache this epoch's snapshot gradients for the inner loop
+        for (cache, gi) in self.g_snap.iter_mut().zip(node_g) {
+            cache.copy_from_slice(gi);
+        }
+        if let Some(c) = self.ch.as_mut() {
+            c.set_epoch(w_tilde, gnorm);
+            for (i, gi) in node_g.iter().enumerate() {
+                // the exact node gradient was just shared on the raw uplink,
+                // so both ends may center R_{g_ξ,k} on it
+                c.set_g_center(i, gi);
+            }
+        }
+        Ok(())
+    }
+
+    fn inner_grads(
+        &mut self,
+        xi: usize,
+        w: &[f64],
+        w_tilde: &[f64],
+        g_snap_rx: &mut [f64],
+        g_cur_rx: &mut [f64],
+    ) -> Result<()> {
+        // `g_snap` was cached at commit (g_i at the committed w̃_k, which is
+        // exactly `w_tilde` here), so no recomputation — same per-epoch cache
+        // a WorkerNode keeps
+        debug_assert_eq!(w_tilde.len(), g_snap_rx.len());
+        match self.ch.as_mut() {
+            Some(c) => {
+                // worker ξ's URQ stream draws for the snapshot gradient
+                // first, then (in the "+" variants) for the current one —
+                // the same order a WorkerNode uses
+                c.send_g_into(xi, &self.g_snap[xi], g_snap_rx)?; // b_g
+                if c.opts().plus {
+                    self.prob.node_grad(xi, w, &mut self.g_scratch);
+                    c.send_g_into(xi, &self.g_scratch, g_cur_rx)?; // b_g
+                } else {
+                    c.send_raw_up(self.prob.dim()); // 64d exact
+                    self.prob.node_grad(xi, w, g_cur_rx);
+                }
+            }
+            None => {
+                g_snap_rx.copy_from_slice(&self.g_snap[xi]);
+                self.prob.node_grad(xi, w, g_cur_rx);
+                let d = self.prob.dim() as u64;
+                self.raw_ledger.record_uplink(64 * d);
+                self.raw_ledger.record_uplink(64 * d);
+            }
+        }
+        Ok(())
+    }
+
+    fn broadcast_params(&mut self, u: &[f64], w_out: &mut [f64]) -> Result<()> {
+        match self.ch.as_mut() {
+            Some(c) => c.send_w_into(u, w_out), // b_w, metered once
+            None => {
+                w_out.copy_from_slice(u);
+                self.raw_ledger.record_downlink(64 * u.len() as u64);
+                Ok(())
+            }
+        }
+    }
+
+    fn choose_snapshot(&mut self, _zeta: usize) -> Result<()> {
+        Ok(())
+    }
+
+    fn query_losses(&mut self, w_tilde: &[f64]) -> Result<f64> {
+        Ok(self.prob.loss(w_tilde))
+    }
+
+    fn ledger(&self) -> &CommLedger {
+        active_ledger(&self.ch, &self.raw_ledger)
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        Ok(())
+    }
+}

@@ -1,0 +1,262 @@
+//! The message-passing master: [`Cluster`] over any [`Duplex`] — in-process
+//! channels ([`ThreadedCluster`](super::ThreadedCluster) wraps this), TCP
+//! sockets across processes, or the latency-model `SimDuplex`. The wire
+//! format is unchanged from the original coordinator.
+//!
+//! Every collective (gradient collection, commit/revert acks, snapshot
+//! choice, loss query) issues its request to **all** links before blocking
+//! on any receive, so all workers compute concurrently; replies are drained
+//! in link order, which keeps the fan-in deterministic regardless of how the
+//! worker threads are scheduled.
+
+use anyhow::{bail, Context, Result};
+
+use super::Cluster;
+use crate::algorithms::channel::QuantOpts;
+use crate::metrics::CommLedger;
+use crate::quant::{self, Grid};
+use crate::rng::Xoshiro256pp;
+use crate::transport::tcp::TcpDuplex;
+use crate::transport::{Duplex, Message};
+
+/// Master side of a message-passing deployment (one link per worker).
+pub struct MessageCluster<D: Duplex> {
+    links: Vec<D>,
+    d: usize,
+    quant: Option<QuantOpts>,
+    /// Downlink URQ rounding stream (the workers never see it — they
+    /// reconstruct from the broadcast indices).
+    quant_rng: Xoshiro256pp,
+    pub ledger: CommLedger,
+    // replicated grid state, mirrored bit-for-bit by every worker:
+    /// Center of `R_{w,k}` (the snapshot under the adaptive policy; the
+    /// initial point under the fixed policy).
+    w_center: Vec<f64>,
+    /// Center of each worker's `R_{g_ξ,k}`.
+    g_centers: Vec<Vec<f64>>,
+    /// `‖g̃_k‖` driving the adaptive radii.
+    gnorm: f64,
+    // per-epoch grid cache (§Perf: one construction per epoch, not per send)
+    w_grid: Option<Grid>,
+    g_grids: Vec<Option<Grid>>,
+}
+
+impl<D: Duplex> MessageCluster<D> {
+    /// `root` is the run's root rng (the same one the workers derived their
+    /// streams from).
+    pub fn new(
+        links: Vec<D>,
+        d: usize,
+        quant: Option<QuantOpts>,
+        root: &Xoshiro256pp,
+    ) -> Self {
+        assert!(!links.is_empty(), "need at least one worker");
+        let n = links.len();
+        Self {
+            links,
+            d,
+            quant,
+            quant_rng: root.quant_stream(),
+            ledger: CommLedger::default(),
+            w_center: vec![0.0; d],
+            g_centers: vec![vec![0.0; d]; n],
+            gnorm: 1.0,
+            w_grid: None,
+            g_grids: vec![None; n],
+        }
+    }
+
+    /// Send `msg` on every link (no blocking receives in between).
+    fn fan_out(&mut self, msg: &Message) -> Result<()> {
+        for link in &mut self.links {
+            link.send(msg.clone())?;
+        }
+        Ok(())
+    }
+
+    fn collect_acks(&mut self) -> Result<()> {
+        for (i, link) in self.links.iter_mut().enumerate() {
+            match link.recv()? {
+                Message::Ack => {}
+                other => bail!("worker {i}: expected Ack, got {other:?}"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Receive one gradient message from worker `xi`, reconstruct it on the
+    /// epoch's cached grid into `out`, and meter the uplink.
+    fn recv_gradient_into(&mut self, xi: usize, out: &mut [f64]) -> Result<()> {
+        match self.links[xi].recv()? {
+            Message::GradRaw { g } => {
+                if g.len() != self.d {
+                    bail!("worker {xi}: gradient dim {}", g.len());
+                }
+                self.ledger.record_uplink(64 * self.d as u64);
+                out.copy_from_slice(&g);
+            }
+            Message::GradQ { payload, bits } => {
+                let grid = self.g_grids[xi]
+                    .as_ref()
+                    .context("GradQ from worker but master is unquantized")?;
+                let idx = quant::unpack_indices(&payload, grid.bits())?;
+                if idx.len() != self.d {
+                    bail!("worker {xi}: quantized dim {}", idx.len());
+                }
+                self.ledger.record_uplink(bits);
+                quant::dequantize_into(&idx, grid, out);
+            }
+            other => bail!("worker {xi}: expected gradient, got {other:?}"),
+        }
+        Ok(())
+    }
+}
+
+impl MessageCluster<TcpDuplex> {
+    /// Accept `n_workers` TCP connections (in arrival order) and build the
+    /// master side of a multi-process deployment.
+    pub fn over_tcp(
+        listener: &std::net::TcpListener,
+        n_workers: usize,
+        d: usize,
+        quant: Option<QuantOpts>,
+        root: &Xoshiro256pp,
+    ) -> Result<Self> {
+        let mut links = Vec::with_capacity(n_workers);
+        for _ in 0..n_workers {
+            let (stream, _) = listener.accept().context("accept")?;
+            links.push(TcpDuplex::new(stream)?);
+        }
+        Ok(Self::new(links, d, quant, root))
+    }
+}
+
+impl<D: Duplex> Cluster for MessageCluster<D> {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn n_workers(&self) -> usize {
+        self.links.len()
+    }
+
+    fn snapshot_grads_into(
+        &mut self,
+        epoch: usize,
+        _w_tilde: &[f64],
+        node_g: &mut [Vec<f64>],
+    ) -> Result<()> {
+        self.fan_out(&Message::EpochBegin {
+            epoch: epoch as u32,
+        })?;
+        for (i, link) in self.links.iter_mut().enumerate() {
+            match link.recv()? {
+                Message::GradRaw { g } => {
+                    if g.len() != self.d {
+                        bail!("worker {i}: gradient dim {}", g.len());
+                    }
+                    self.ledger.record_uplink(64 * self.d as u64);
+                    node_g[i].copy_from_slice(&g);
+                }
+                other => bail!("worker {i}: expected GradRaw, got {other:?}"),
+            }
+        }
+        Ok(())
+    }
+
+    fn revert_epoch(&mut self) -> Result<()> {
+        self.fan_out(&Message::EpochRevert)?;
+        self.collect_acks()
+    }
+
+    fn commit_epoch(&mut self, w_tilde: &[f64], node_g: &[Vec<f64>], gnorm: f64) -> Result<()> {
+        self.gnorm = gnorm.max(1e-300);
+        if let Some(q) = &self.quant {
+            if q.policy.is_adaptive() {
+                self.w_center.copy_from_slice(w_tilde);
+                for (c, g) in self.g_centers.iter_mut().zip(node_g) {
+                    c.copy_from_slice(g);
+                }
+                // centers (and possibly radii) moved: every cached grid is stale
+                self.w_grid = None;
+                for g in self.g_grids.iter_mut() {
+                    *g = None;
+                }
+            }
+        }
+        self.fan_out(&Message::EpochCommit { gnorm })?;
+        self.collect_acks()
+    }
+
+    fn inner_grads(
+        &mut self,
+        xi: usize,
+        _w: &[f64],
+        _w_tilde: &[f64],
+        g_snap_rx: &mut [f64],
+        g_cur_rx: &mut [f64],
+    ) -> Result<()> {
+        self.links[xi].send(Message::InnerRequest)?;
+        if let Some(q) = &self.quant {
+            if self.g_grids[xi].is_none() {
+                self.g_grids[xi] =
+                    Some(q.policy.g_grid(&self.g_centers[xi], self.gnorm, q.bits)?);
+            }
+        }
+        // uplink 1: quantized (or raw) snapshot gradient
+        self.recv_gradient_into(xi, g_snap_rx)?;
+        // uplink 2: current-iterate gradient
+        self.recv_gradient_into(xi, g_cur_rx)
+    }
+
+    fn broadcast_params(&mut self, u: &[f64], w_out: &mut [f64]) -> Result<()> {
+        if self.quant.is_some() {
+            if self.w_grid.is_none() {
+                let q = self.quant.as_ref().unwrap();
+                self.w_grid = Some(q.policy.w_grid(&self.w_center, self.gnorm, q.bits)?);
+            }
+            let grid = self.w_grid.as_ref().unwrap();
+            let (idx, stats) = quant::quantize_urq(u, grid, &mut self.quant_rng);
+            let payload = quant::pack_indices(&idx, grid.bits())?;
+            self.ledger.record_downlink(payload.bits); // broadcast: metered once
+            self.ledger.saturations += stats.saturated as u64;
+            quant::dequantize_into(&idx, grid, w_out);
+            let msg = Message::ParamsQ {
+                payload: payload.bytes,
+                bits: payload.bits,
+            };
+            self.fan_out(&msg)
+        } else {
+            self.ledger.record_downlink(64 * self.d as u64);
+            w_out.copy_from_slice(u);
+            self.fan_out(&Message::ParamsRaw { w: u.to_vec() })
+        }
+    }
+
+    fn choose_snapshot(&mut self, zeta: usize) -> Result<()> {
+        self.fan_out(&Message::SnapshotChoose {
+            zeta: zeta as u32,
+        })?;
+        self.collect_acks()
+    }
+
+    fn query_losses(&mut self, _w_tilde: &[f64]) -> Result<f64> {
+        self.fan_out(&Message::QueryLoss)?;
+        let mut acc = 0.0;
+        for (i, link) in self.links.iter_mut().enumerate() {
+            match link.recv()? {
+                Message::LossValue { loss } => acc += loss,
+                other => bail!("worker {i}: expected LossValue, got {other:?}"),
+            }
+        }
+        Ok(acc / self.links.len() as f64)
+    }
+
+    fn ledger(&self) -> &CommLedger {
+        &self.ledger
+    }
+
+    fn shutdown(&mut self) -> Result<()> {
+        self.fan_out(&Message::Shutdown)
+    }
+}

@@ -1,0 +1,145 @@
+//! The pluggable cluster layer: the master-side protocol verbs of the
+//! paper's Algorithm 1, abstracted over *where the workers live*.
+//!
+//! [`crate::algorithms::svrg::run_svrg`] is the **single** Algorithm-1
+//! implementation in this repo; it is generic over [`Cluster`] and never
+//! touches a socket, a channel, or a shard directly. Three backends:
+//!
+//! * [`InProcessCluster`] — the shards live in this process
+//!   ([`crate::algorithms::ShardedObjective`]); quantized exchanges run
+//!   through the real quantizer + wire codec ([`QuantChannel`]) so bits are
+//!   payload-exact, and the outer-loop snapshot fan-out computes shard
+//!   gradients on scoped threads. This replaces the old centralized
+//!   simulator loop.
+//! * [`ThreadedCluster`] — one worker thread per shard over in-process
+//!   duplex links ([`crate::transport::local::pair`]); a thin wrapper around
+//!   [`MessageCluster`].
+//! * [`MessageCluster`] — the message-passing master over any
+//!   [`crate::transport::Duplex`] (local channels, TCP sockets, or the
+//!   latency-model [`crate::transport::SimDuplex`]); unchanged wire format.
+//!   Every collective issues its send to **all** links before blocking on
+//!   any receive, so workers compute concurrently.
+//!
+//! **Determinism.** All three backends derive their randomness from one root
+//! rng through the fixed streams in [`crate::rng`] (`algo_stream` for the
+//! master's ξ/ζ draws, `quant_stream` for downlink URQ rounding,
+//! `worker_stream(i)` for worker `i`'s uplink URQ rounding), and every value
+//! that crosses a link is reconstructed from the same wire bytes on both
+//! ends. At a fixed seed the three backends therefore produce **bit-identical
+//! convergence traces and bit ledgers** — `rust/tests/distributed.rs` pins
+//! this.
+//!
+//! **Metering convention** (matches §4.1's accounting): each worker's uplink
+//! message is metered individually; a parameter broadcast is metered **once**
+//! per inner iteration (broadcast channel); the final gradient collection
+//! after the last epoch is metered like any other. Uplink URQ *saturation*
+//! events are observable only at the quantizing end, so a message-passing
+//! master's ledger counts downlink saturations only, while the in-process
+//! backend (which owns both ends) counts both.
+
+pub mod in_process;
+pub mod message;
+pub mod threaded;
+
+pub use in_process::InProcessCluster;
+pub use message::MessageCluster;
+pub use threaded::ThreadedCluster;
+
+use anyhow::Result;
+
+use crate::algorithms::channel::QuantChannel;
+use crate::metrics::CommLedger;
+
+/// Master-side protocol verbs of Algorithm 1.
+///
+/// The engine owns the optimization state (`w̃`, `g̃`, the ζ-eligible iterate
+/// history) and the ξ/ζ randomness; the cluster owns the workers, the
+/// quantization grids, and the communication ledger. `w`/`w_tilde` arguments
+/// are the master's replicated copies — in-process backends compute with
+/// them, message-passing backends ignore them (their workers hold
+/// bit-identical replicas).
+pub trait Cluster {
+    /// Problem dimension d.
+    fn dim(&self) -> usize;
+
+    /// Number of workers N.
+    fn n_workers(&self) -> usize;
+
+    /// Outer-loop fan-out/fan-in: every worker computes its exact node
+    /// gradient at the current snapshot and uplinks it (64d bits each) into
+    /// `node_g`. Requests are issued to all workers before any reply is
+    /// awaited.
+    fn snapshot_grads_into(
+        &mut self,
+        epoch: usize,
+        w_tilde: &[f64],
+        node_g: &mut [Vec<f64>],
+    ) -> Result<()>;
+
+    /// Memory-unit rejection: every worker restores its previous snapshot
+    /// (and re-caches that snapshot's gradient). Not metered.
+    fn revert_epoch(&mut self) -> Result<()>;
+
+    /// Snapshot accepted: commit replicated state and re-center this epoch's
+    /// grids — `R_{w,k}` at `w̃_k`, each `R_{g_ξ,k}` at that worker's
+    /// just-shared node gradient (adaptive policy; the fixed policy keeps its
+    /// initial centers for the whole run).
+    fn commit_epoch(&mut self, w_tilde: &[f64], node_g: &[Vec<f64>], gnorm: f64) -> Result<()>;
+
+    /// Inner-loop turn for worker ξ: uplink `q(g_ξ(w̃_k))` (b_g bits) and
+    /// `g_ξ(w_{k,t−1})` (exact 64d, or b_g in the "+" variants). Writes the
+    /// master-side reconstructions into the scratch buffers.
+    fn inner_grads(
+        &mut self,
+        xi: usize,
+        w: &[f64],
+        w_tilde: &[f64],
+        g_snap_rx: &mut [f64],
+        g_cur_rx: &mut [f64],
+    ) -> Result<()>;
+
+    /// Broadcast `w_{k,t} = q(u; R_{w,k})` (b_w bits, metered once); writes
+    /// the reconstruction every worker ends up with into `w_out`.
+    fn broadcast_params(&mut self, u: &[f64], w_out: &mut [f64]) -> Result<()>;
+
+    /// End of epoch: every worker sets its snapshot to the stored iterate
+    /// `w_{k,ζ}`.
+    fn choose_snapshot(&mut self, zeta: usize) -> Result<()>;
+
+    /// Average of the workers' local losses at the current snapshot
+    /// (instrumentation; not metered). Pass the engine's current `w̃`:
+    /// message-passing backends evaluate at their workers' replicated
+    /// snapshot (which equals it) and ignore the argument; the in-process
+    /// backend evaluates at the passed vector.
+    fn query_losses(&mut self, w_tilde: &[f64]) -> Result<f64>;
+
+    /// The master-side communication ledger.
+    fn ledger(&self) -> &CommLedger;
+
+    /// Cumulative payload bits on the ledger.
+    fn total_bits(&self) -> u64 {
+        self.ledger().total_bits()
+    }
+
+    /// URQ saturation events on the ledger (see the module note on which end
+    /// observes them).
+    fn saturations(&self) -> u64 {
+        self.ledger().saturations
+    }
+
+    /// Terminate remote workers (no-op in-process). Call after the engine
+    /// returns — and after any final [`Cluster::query_losses`].
+    fn shutdown(&mut self) -> Result<()>;
+}
+
+/// Shared helper: the ledger of an optional [`QuantChannel`], falling back
+/// to a raw ledger for unquantized runs.
+pub(crate) fn active_ledger<'a>(
+    ch: &'a Option<QuantChannel>,
+    raw: &'a CommLedger,
+) -> &'a CommLedger {
+    match ch {
+        Some(c) => &c.ledger,
+        None => raw,
+    }
+}

@@ -1,0 +1,153 @@
+//! The threaded backend: one native worker thread per shard over in-process
+//! duplex links — [`MessageCluster`] plus thread lifecycle management.
+
+use anyhow::{anyhow, Result};
+
+use super::{Cluster, MessageCluster};
+use crate::algorithms::channel::QuantOpts;
+use crate::data::Dataset;
+use crate::metrics::CommLedger;
+use crate::objective::LogisticRidge;
+use crate::rng::Xoshiro256pp;
+use crate::transport::local::{pair, LocalDuplex};
+use crate::worker::{GradientSource, WorkerNode, WorkerQuant};
+
+/// [`Cluster`] whose workers are threads in this process, each owning one
+/// shard and speaking the full wire protocol over a local duplex.
+pub struct ThreadedCluster {
+    inner: MessageCluster<LocalDuplex>,
+    handles: Vec<std::thread::JoinHandle<Result<()>>>,
+}
+
+impl ThreadedCluster {
+    /// Spawn native (pure-Rust gradient) workers over `train` sharded
+    /// `n_workers` ways.
+    pub fn spawn(
+        train: &Dataset,
+        n_workers: usize,
+        lambda: f64,
+        quant: Option<QuantOpts>,
+        root: &Xoshiro256pp,
+    ) -> Result<Self> {
+        Self::spawn_with(train, n_workers, quant, root, move |_i, s: Dataset| {
+            Ok(LogisticRidge::new(&s.x, &s.y, s.n, s.d, lambda))
+        })
+    }
+
+    /// Spawn workers with a custom gradient backend. `make_backend` runs on
+    /// the worker's own thread (PJRT handles are not `Send`, so an XLA
+    /// backend must be constructed where it runs — see
+    /// [`crate::driver::run_distributed`]).
+    pub fn spawn_with<B, F>(
+        train: &Dataset,
+        n_workers: usize,
+        quant: Option<QuantOpts>,
+        root: &Xoshiro256pp,
+        make_backend: F,
+    ) -> Result<Self>
+    where
+        B: GradientSource + 'static,
+        F: Fn(usize, Dataset) -> Result<B> + Send + Clone + 'static,
+    {
+        let shards = train.shard(n_workers);
+        let mut links = Vec::with_capacity(n_workers);
+        let mut handles = Vec::with_capacity(n_workers);
+        for (i, shard) in shards.into_iter().enumerate() {
+            let (master_end, worker_end) = pair();
+            links.push(master_end);
+            let wq = quant.as_ref().map(WorkerQuant::from);
+            let rng = root.worker_stream(i);
+            let make = make_backend.clone();
+            handles.push(std::thread::spawn(move || -> Result<()> {
+                let backend = make(i, shard)?;
+                WorkerNode::new(backend, worker_end, wq, rng).run()
+            }));
+        }
+        Ok(Self {
+            inner: MessageCluster::new(links, train.d, quant, root),
+            handles,
+        })
+    }
+
+    /// Join all worker threads, surfacing the first worker error.
+    fn join_workers(&mut self) -> Result<()> {
+        let mut first_err: Option<anyhow::Error> = None;
+        for h in self.handles.drain(..) {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    first_err.get_or_insert(e);
+                }
+                Err(_) => {
+                    first_err.get_or_insert(anyhow!("worker thread panicked"));
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+}
+
+impl Cluster for ThreadedCluster {
+    fn dim(&self) -> usize {
+        self.inner.dim()
+    }
+
+    fn n_workers(&self) -> usize {
+        self.inner.n_workers()
+    }
+
+    fn snapshot_grads_into(
+        &mut self,
+        epoch: usize,
+        w_tilde: &[f64],
+        node_g: &mut [Vec<f64>],
+    ) -> Result<()> {
+        self.inner.snapshot_grads_into(epoch, w_tilde, node_g)
+    }
+
+    fn revert_epoch(&mut self) -> Result<()> {
+        self.inner.revert_epoch()
+    }
+
+    fn commit_epoch(&mut self, w_tilde: &[f64], node_g: &[Vec<f64>], gnorm: f64) -> Result<()> {
+        self.inner.commit_epoch(w_tilde, node_g, gnorm)
+    }
+
+    fn inner_grads(
+        &mut self,
+        xi: usize,
+        w: &[f64],
+        w_tilde: &[f64],
+        g_snap_rx: &mut [f64],
+        g_cur_rx: &mut [f64],
+    ) -> Result<()> {
+        self.inner.inner_grads(xi, w, w_tilde, g_snap_rx, g_cur_rx)
+    }
+
+    fn broadcast_params(&mut self, u: &[f64], w_out: &mut [f64]) -> Result<()> {
+        self.inner.broadcast_params(u, w_out)
+    }
+
+    fn choose_snapshot(&mut self, zeta: usize) -> Result<()> {
+        self.inner.choose_snapshot(zeta)
+    }
+
+    fn query_losses(&mut self, w_tilde: &[f64]) -> Result<f64> {
+        self.inner.query_losses(w_tilde)
+    }
+
+    fn ledger(&self) -> &CommLedger {
+        self.inner.ledger()
+    }
+
+    /// Tell every worker to exit, then join their threads (worker errors
+    /// surface here). If the engine erred mid-run, dropping the cluster
+    /// without calling this is fine: the severed links unblock the threads.
+    fn shutdown(&mut self) -> Result<()> {
+        self.inner.shutdown()?;
+        self.join_workers()
+    }
+}

@@ -9,12 +9,18 @@ pub use toml::{parse, TomlValue};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 
-/// Which gradient backend workers use.
+/// Which [`crate::cluster`] backend a run uses. All three produce
+/// bit-identical traces at a fixed seed.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Backend {
-    /// Pure-Rust objective (default; any shape).
+    /// In-process cluster: shards in this process, scoped-thread snapshot
+    /// fan-out, pure-Rust gradients (default; any algorithm).
     Native,
-    /// AOT-compiled JAX/Pallas artifact executed via PJRT.
+    /// Message-passing cluster: one worker thread per shard over duplex
+    /// links, pure-Rust gradients (SVRG family).
+    Threaded,
+    /// Threaded cluster whose workers execute the AOT-compiled JAX/Pallas
+    /// artifact via PJRT (`--features xla` builds).
     Xla,
 }
 
@@ -23,8 +29,9 @@ impl std::str::FromStr for Backend {
     fn from_str(s: &str) -> Result<Self> {
         match s {
             "native" => Ok(Backend::Native),
+            "threaded" => Ok(Backend::Threaded),
             "xla" => Ok(Backend::Xla),
-            other => bail!("unknown backend {other:?} (native|xla)"),
+            other => bail!("unknown backend {other:?} (native|threaded|xla)"),
         }
     }
 }
@@ -196,6 +203,7 @@ mod tests {
     #[test]
     fn backend_parse() {
         assert_eq!("native".parse::<Backend>().unwrap(), Backend::Native);
+        assert_eq!("threaded".parse::<Backend>().unwrap(), Backend::Threaded);
         assert_eq!("xla".parse::<Backend>().unwrap(), Backend::Xla);
         assert!("gpu".parse::<Backend>().is_err());
     }

@@ -1,278 +1,44 @@
-//! The master node: the paper's Algorithm 1 (+ memory unit) over real
-//! message-passing links.
+//! Thin constructors for the message-passing backends of the
+//! [`crate::cluster`] layer.
 //!
-//! This is the production counterpart of the centralized simulator in
-//! [`crate::algorithms::svrg`] — same mathematics, but every exchange
-//! travels through a [`Duplex`] (in-process channels, or TCP across
-//! processes), and workers may compute gradients on the compiled XLA
-//! artifact ([`crate::worker::XlaShard`], `--features xla` builds). The
-//! integration tests assert the two produce equivalent convergence traces.
-//!
-//! Metering convention (matches §4.1's accounting): each worker's uplink
-//! message is metered individually; a parameter broadcast is metered **once**
-//! per inner iteration, not once per worker (broadcast channel).
+//! The master event loop that used to live here is gone: the paper's
+//! Algorithm 1 exists in exactly one place —
+//! [`crate::algorithms::svrg::run_svrg`], generic over
+//! [`crate::cluster::Cluster`] — and this module only assembles the master
+//! side of a threaded or TCP deployment around it. See
+//! `rust/tests/distributed.rs` and `examples/distributed_tcp.rs` for
+//! end-to-end usage.
 
-use anyhow::{bail, Context, Result};
+pub use crate::cluster::{MessageCluster, ThreadedCluster};
+
+use anyhow::Result;
 
 use crate::algorithms::channel::QuantOpts;
-use crate::linalg;
-use crate::metrics::CommLedger;
-use crate::quant::{self, Grid};
+use crate::data::Dataset;
 use crate::rng::Xoshiro256pp;
-use crate::transport::{Duplex, Message};
+use crate::transport::tcp::TcpDuplex;
 
-/// Master-side options (mirror of [`crate::algorithms::svrg::SvrgOpts`]).
-#[derive(Clone, Debug)]
-pub struct CoordinatorOpts {
-    pub step: f64,
-    pub epoch_len: usize,
-    pub outer_iters: usize,
-    pub memory_unit: bool,
-    pub quant: Option<QuantOpts>,
+/// Spawn native worker threads over in-process duplex links
+/// ([`ThreadedCluster::spawn`]).
+pub fn threaded(
+    train: &Dataset,
+    n_workers: usize,
+    lambda: f64,
+    quant: Option<QuantOpts>,
+    root: &Xoshiro256pp,
+) -> Result<ThreadedCluster> {
+    ThreadedCluster::spawn(train, n_workers, lambda, quant, root)
 }
 
-/// Per-epoch observer: `(epoch, snapshot, grad_norm, cumulative_bits)`.
-pub type EpochEval<'a> = &'a mut dyn FnMut(usize, &[f64], f64, u64);
-
-/// The master event loop over `links` (one per worker).
-pub struct Coordinator<D: Duplex> {
-    links: Vec<D>,
-    opts: CoordinatorOpts,
+/// Accept `n_workers` TCP connections and build the master side of a
+/// multi-process deployment ([`MessageCluster::over_tcp`]); workers are
+/// separate `qmsvrg worker` processes.
+pub fn tcp(
+    listener: &std::net::TcpListener,
+    n_workers: usize,
     d: usize,
-    rng: Xoshiro256pp,
-    pub ledger: CommLedger,
+    quant: Option<QuantOpts>,
+    root: &Xoshiro256pp,
+) -> Result<MessageCluster<TcpDuplex>> {
+    MessageCluster::over_tcp(listener, n_workers, d, quant, root)
 }
-
-impl<D: Duplex> Coordinator<D> {
-    pub fn new(links: Vec<D>, d: usize, opts: CoordinatorOpts, rng: Xoshiro256pp) -> Self {
-        assert!(!links.is_empty(), "need at least one worker");
-        Self {
-            links,
-            opts,
-            d,
-            rng,
-            ledger: CommLedger::default(),
-        }
-    }
-
-    fn n(&self) -> usize {
-        self.links.len()
-    }
-
-    fn broadcast(&mut self, msg: &Message) -> Result<()> {
-        for link in &mut self.links {
-            link.send(msg.clone())?;
-        }
-        Ok(())
-    }
-
-    fn collect_acks(&mut self) -> Result<()> {
-        for (i, link) in self.links.iter_mut().enumerate() {
-            match link.recv()? {
-                Message::Ack => {}
-                other => bail!("worker {i}: expected Ack, got {other:?}"),
-            }
-        }
-        Ok(())
-    }
-
-    /// Average the workers' local losses at the current snapshot
-    /// (instrumentation; not metered).
-    pub fn query_loss(&mut self) -> Result<f64> {
-        self.broadcast(&Message::QueryLoss)?;
-        let mut acc = 0.0;
-        for link in &mut self.links {
-            match link.recv()? {
-                Message::LossValue { loss } => acc += loss,
-                other => bail!("expected LossValue, got {other:?}"),
-            }
-        }
-        Ok(acc / self.n() as f64)
-    }
-
-    /// Run Algorithm 1 for `outer_iters` epochs; returns the final snapshot.
-    pub fn run(&mut self, eval: EpochEval) -> Result<Vec<f64>> {
-        let d = self.d;
-        let n = self.n();
-        let t_len = self.opts.epoch_len;
-        let quant = self.opts.quant.clone();
-
-        let mut w_tilde = vec![0.0; d];
-        let mut g_tilde = vec![0.0; d];
-        let mut node_g = vec![vec![0.0; d]; n];
-        let mut prev_node_g = vec![vec![0.0; d]; n];
-        let mut prev_w = vec![0.0; d];
-        let mut prev_g = vec![0.0; d];
-        let mut prev_gnorm = f64::INFINITY;
-        let mut u = vec![0.0; d];
-        let mut w_hist: Vec<Vec<f64>> = Vec::with_capacity(t_len);
-
-        for k in 0..self.opts.outer_iters {
-            // ---- outer: exact node gradients (64d uplink each)
-            self.broadcast(&Message::EpochBegin { epoch: k as u32 })?;
-            for (i, link) in self.links.iter_mut().enumerate() {
-                match link.recv()? {
-                    Message::GradRaw { g } => {
-                        if g.len() != d {
-                            bail!("worker {i}: gradient dim {}", g.len());
-                        }
-                        self.ledger.record_uplink(64 * d as u64);
-                        node_g[i].copy_from_slice(&g);
-                    }
-                    other => bail!("worker {i}: expected GradRaw, got {other:?}"),
-                }
-            }
-            for o in g_tilde.iter_mut() {
-                *o = 0.0;
-            }
-            for gi in &node_g {
-                linalg::axpy(1.0 / n as f64, gi, &mut g_tilde);
-            }
-            let mut gnorm = linalg::nrm2(&g_tilde);
-
-            // ---- memory unit
-            if self.opts.memory_unit && gnorm > prev_gnorm {
-                self.broadcast(&Message::EpochRevert)?;
-                self.collect_acks()?;
-                w_tilde.copy_from_slice(&prev_w);
-                g_tilde.copy_from_slice(&prev_g);
-                gnorm = prev_gnorm;
-                for (gi, pgi) in node_g.iter_mut().zip(&prev_node_g) {
-                    gi.copy_from_slice(pgi);
-                }
-            } else {
-                prev_w.copy_from_slice(&w_tilde);
-                prev_g.copy_from_slice(&g_tilde);
-                prev_gnorm = gnorm;
-                for (pgi, gi) in prev_node_g.iter_mut().zip(&node_g) {
-                    pgi.copy_from_slice(gi);
-                }
-            }
-
-            self.broadcast(&Message::EpochCommit { gnorm })?;
-            self.collect_acks()?;
-
-            // per-epoch grid cache (§Perf): one construction per epoch, not
-            // one per send/recv
-            let w_grid: Option<Grid> = match &quant {
-                Some(q) => Some(q.policy.w_grid(&w_tilde, gnorm, q.bits)?),
-                None => None,
-            };
-            let mut g_grids: Vec<Option<Grid>> = vec![None; n];
-
-            eval(k, &w_tilde, gnorm, self.ledger.total_bits());
-
-            // ---- inner loop
-            let mut w = w_tilde.clone();
-            w_hist.clear();
-            w_hist.push(w.clone());
-            for _t in 1..=t_len {
-                let xi = self.rng.gen_index(n);
-                self.links[xi].send(Message::InnerRequest)?;
-
-                if let Some(q) = &quant {
-                    if g_grids[xi].is_none() {
-                        g_grids[xi] = Some(q.policy.g_grid(&node_g[xi], gnorm, q.bits)?);
-                    }
-                }
-                // uplink 1: quantized (or raw) snapshot gradient
-                let g_snap_rx = self.recv_gradient(xi, g_grids[xi].as_ref())?;
-                // uplink 2: current-iterate gradient
-                let g_cur_rx = self.recv_gradient(xi, g_grids[xi].as_ref())?;
-
-                // u = w − α (g_ξ(w) − q(g_ξ(w̃)) + g̃)
-                for j in 0..d {
-                    u[j] = w[j] - self.opts.step * (g_cur_rx[j] - g_snap_rx[j] + g_tilde[j]);
-                }
-
-                // downlink: broadcast w_{k,t} (metered once)
-                match &quant {
-                    Some(_) => {
-                        let grid = w_grid.as_ref().unwrap();
-                        let (idx, stats) = quant::quantize_urq(&u, grid, &mut self.rng);
-                        let payload = quant::pack_indices(&idx, grid.bits())?;
-                        self.ledger.record_downlink(payload.bits);
-                        self.ledger.saturations += stats.saturated as u64;
-                        quant::dequantize_into(&idx, grid, &mut w);
-                        self.broadcast(&Message::ParamsQ {
-                            payload: payload.bytes,
-                            bits: payload.bits,
-                        })?;
-                    }
-                    None => {
-                        self.ledger.record_downlink(64 * d as u64);
-                        w.copy_from_slice(&u);
-                        self.broadcast(&Message::ParamsRaw { w: w.clone() })?;
-                    }
-                }
-                if w_hist.len() < t_len {
-                    w_hist.push(w.clone());
-                }
-            }
-
-            // ---- snapshot choice
-            let zeta = self.rng.gen_index(t_len.min(w_hist.len()));
-            self.broadcast(&Message::SnapshotChoose { zeta: zeta as u32 })?;
-            self.collect_acks()?;
-            w_tilde.copy_from_slice(&w_hist[zeta]);
-        }
-
-        // final gradient report
-        self.broadcast(&Message::EpochBegin {
-            epoch: self.opts.outer_iters as u32,
-        })?;
-        for o in g_tilde.iter_mut() {
-            *o = 0.0;
-        }
-        for (i, link) in self.links.iter_mut().enumerate() {
-            match link.recv()? {
-                Message::GradRaw { g } => {
-                    self.ledger.record_uplink(64 * d as u64);
-                    linalg::axpy(1.0 / n as f64, &g, &mut g_tilde);
-                }
-                other => bail!("worker {i}: expected GradRaw, got {other:?}"),
-            }
-        }
-        eval(
-            self.opts.outer_iters,
-            &w_tilde,
-            linalg::nrm2(&g_tilde),
-            self.ledger.total_bits(),
-        );
-        Ok(w_tilde)
-    }
-
-    /// Receive one gradient message from worker `xi` and reconstruct it on
-    /// the epoch's cached grid; meters the uplink.
-    fn recv_gradient(&mut self, xi: usize, grid: Option<&Grid>) -> Result<Vec<f64>> {
-        match self.links[xi].recv()? {
-            Message::GradRaw { g } => {
-                if g.len() != self.d {
-                    bail!("worker {xi}: gradient dim {}", g.len());
-                }
-                self.ledger.record_uplink(64 * self.d as u64);
-                Ok(g)
-            }
-            Message::GradQ { payload, bits } => {
-                let grid =
-                    grid.context("GradQ from worker but coordinator is unquantized")?;
-                let idx = quant::unpack_indices(&payload, grid.bits())?;
-                if idx.len() != self.d {
-                    bail!("worker {xi}: quantized dim {}", idx.len());
-                }
-                self.ledger.record_uplink(bits);
-                Ok(quant::dequantize(&idx, grid))
-            }
-            other => bail!("worker {xi}: expected gradient, got {other:?}"),
-        }
-    }
-
-    /// Tell every worker to exit.
-    pub fn shutdown(&mut self) -> Result<()> {
-        self.broadcast(&Message::Shutdown)
-    }
-}
-
-// Integration tests (spawning real worker threads over local/TCP transports,
-// and cross-checking against the centralized simulator) live in
-// rust/tests/distributed.rs.

@@ -13,6 +13,7 @@ use anyhow::{Context, Result};
 use crate::algorithms::channel::QuantOpts;
 use crate::algorithms::svrg::{run_svrg, SvrgOpts};
 use crate::algorithms::ShardedObjective;
+use crate::cluster::InProcessCluster;
 use crate::data::synthetic::power_like;
 use crate::quant::{Grid, GridPolicy};
 use crate::rng::Xoshiro256pp;
@@ -87,27 +88,26 @@ pub fn run(p: &BoundsParams) -> Result<BoundsReport> {
     let sigma_bound = theory::sigma_prop4(&geom, p.alpha, epoch_len as u64)
         .context("sigma not in (0,1) at these settings")?;
 
-    // run QM-SVRG-F at exactly these settings
+    // run QM-SVRG-F at exactly these settings (in-process cluster)
     let opts = SvrgOpts {
         step: p.alpha,
         epoch_len,
         outer_iters: p.outer_iters,
         memory_unit: false, // Prop. 4 is about plain quantized SVRG
-        quant: Some(QuantOpts {
-            bits: p.bits_per_coord,
-            policy: GridPolicy::Fixed {
-                radius: p.fixed_radius,
-            },
-            plus: false,
-        }),
     };
+    let quant = QuantOpts {
+        bits: p.bits_per_coord,
+        policy: GridPolicy::Fixed {
+            radius: p.fixed_radius,
+        },
+        plus: false,
+    };
+    let root = Xoshiro256pp::seed_from_u64(p.seed);
+    let mut cluster = InProcessCluster::new(&prob, Some(quant), &root);
     let mut losses = Vec::new();
-    run_svrg(
-        &prob,
-        &opts,
-        Xoshiro256pp::seed_from_u64(p.seed),
-        &mut |_, w, _, _| losses.push(prob.loss(w)),
-    )?;
+    run_svrg(&mut cluster, &opts, root.algo_stream(), &mut |_, w, _, _| {
+        losses.push(prob.loss(w))
+    })?;
 
     // suboptimality against a tight reference optimum
     let w_star = prob.solve_reference(200_000);

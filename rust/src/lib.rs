@@ -9,8 +9,9 @@
 //! versions).
 //!
 //! Architecture (DESIGN.md):
-//! * **L3** (this crate) — master/worker coordinator, quantizer + wire codec,
-//!   transports with bit metering, algorithms, experiments.
+//! * **L3** (this crate) — one Algorithm-1 engine over the pluggable
+//!   [`cluster`] layer (in-process / threaded / TCP backends), quantizer +
+//!   wire codec, transports with bit metering, algorithms, experiments.
 //! * **L2/L1** (python/, build-time only) — JAX logistic-ridge model with a
 //!   Pallas gradient kernel, AOT-lowered to `artifacts/*.hlo.txt`.
 //! * **runtime** — loads those artifacts via PJRT so worker gradients can run
@@ -33,6 +34,7 @@
 pub mod algorithms;
 pub mod benchkit;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod data;
@@ -53,6 +55,7 @@ pub mod worker;
 /// Convenience re-exports for downstream users.
 pub mod prelude {
     pub use crate::algorithms::{Algorithm, SolverKind};
+    pub use crate::cluster::{Cluster, InProcessCluster, MessageCluster, ThreadedCluster};
     pub use crate::config::{Backend, TrainConfig};
     pub use crate::data::Dataset;
     pub use crate::metrics::{RunTrace, TracePoint};

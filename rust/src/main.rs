@@ -318,7 +318,10 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let n_workers = args.get_usize("workers", 4)?;
     let lambda = args.get_f64("lambda", 0.1)?;
 
-    // workers regenerate their shard deterministically from the shared seed
+    // workers regenerate the whole dataset deterministically from the shared
+    // seed: their own shard for gradients, and (for adaptive grids) the
+    // *global* problem geometry (μ, L, d) so the quantization grids
+    // replicate the master's bit-for-bit
     let (train, _) = load_dataset(&args.get_or("dataset", "power"), n_samples, seed)?;
     let shards = train.shard(n_workers);
     let shard = &shards[shard_idx];
@@ -331,12 +334,13 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let quant = match args.get("bits") {
         Some(b) => {
             let bits: u8 = b.parse()?;
-            use qmsvrg::objective::Objective;
             let policy = if args.get("adaptive").is_some() {
+                let prob =
+                    qmsvrg::algorithms::ShardedObjective::new(&train, n_workers, lambda);
                 qmsvrg::quant::GridPolicy::Adaptive(qmsvrg::quant::AdaptivePolicy::practical(
-                    Objective::mu(&obj),
-                    Objective::l_smooth(&obj),
-                    Objective::dim(&obj),
+                    prob.mu(),
+                    prob.l_smooth(),
+                    prob.dim(),
                     0.2,
                     8,
                 ))
@@ -352,7 +356,8 @@ fn cmd_worker(args: &Args) -> Result<()> {
         None => None,
     };
     let link = qmsvrg::transport::tcp::TcpDuplex::connect(addr)?;
-    let rng = qmsvrg::rng::Xoshiro256pp::seed_from_u64(seed).split(2000 + shard_idx as u64);
+    // the same stream an in-process worker i would draw from
+    let rng = qmsvrg::rng::Xoshiro256pp::seed_from_u64(seed).worker_stream(shard_idx);
     qmsvrg::worker::WorkerNode::new(obj, link, quant, rng).run()?;
     eprintln!("# worker {shard_idx} done");
     Ok(())

@@ -9,6 +9,14 @@
 //! `split()` derives an independent stream (e.g. one per worker) so that
 //! adding workers or reordering messages does not perturb other streams.
 
+/// Fixed stream ids for the master↔worker protocol (see [`crate::cluster`]):
+/// every backend derives its randomness from one *root* rng through these
+/// streams, so the in-process, threaded, and TCP backends draw identical
+/// sequences and produce bit-identical traces from the same seed.
+const STREAM_ALGO: u64 = 0xA160_0001;
+const STREAM_MASTER_QUANT: u64 = 0xA160_0002;
+const STREAM_WORKER_BASE: u64 = 0x574B_0000_0000;
+
 /// splitmix64 — used to expand seeds and to derive split streams.
 #[inline]
 pub fn splitmix64(state: &mut u64) -> u64 {
@@ -54,6 +62,24 @@ impl Xoshiro256pp {
             splitmix64(&mut sm),
         ];
         Self { s }
+    }
+
+    /// The master's ξ/ζ sample-draw stream (the Algorithm-1 engine's rng).
+    pub fn algo_stream(&self) -> Self {
+        self.split(STREAM_ALGO)
+    }
+
+    /// The master's downlink URQ rounding stream.
+    pub fn quant_stream(&self) -> Self {
+        self.split(STREAM_MASTER_QUANT)
+    }
+
+    /// Worker `i`'s uplink URQ rounding stream. One stream per worker, so
+    /// adding workers or reordering their messages never perturbs another
+    /// worker's draws — and a remote `qmsvrg worker` process can derive the
+    /// exact stream its in-process twin would use.
+    pub fn worker_stream(&self, worker: usize) -> Self {
+        self.split(STREAM_WORKER_BASE + worker as u64)
     }
 
     #[inline]

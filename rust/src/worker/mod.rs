@@ -13,7 +13,7 @@
 
 use anyhow::{bail, Context, Result};
 
-
+use crate::algorithms::channel::QuantOpts;
 use crate::objective::{LogisticRidge, Objective};
 use crate::quant::{self, Grid, GridPolicy};
 use crate::rng::Xoshiro256pp;
@@ -30,6 +30,20 @@ pub trait GradientSource {
     fn dim(&self) -> usize;
     fn grad(&self, w: &[f64], out: &mut [f64]) -> Result<()>;
     fn loss(&self, w: &[f64]) -> f64;
+}
+
+impl<B: GradientSource + ?Sized> GradientSource for Box<B> {
+    fn dim(&self) -> usize {
+        (**self).dim()
+    }
+
+    fn grad(&self, w: &[f64], out: &mut [f64]) -> Result<()> {
+        (**self).grad(w, out)
+    }
+
+    fn loss(&self, w: &[f64]) -> f64 {
+        (**self).loss(w)
+    }
 }
 
 impl GradientSource for LogisticRidge {
@@ -97,6 +111,16 @@ pub struct WorkerQuant {
     pub plus: bool,
 }
 
+impl From<&QuantOpts> for WorkerQuant {
+    fn from(q: &QuantOpts) -> Self {
+        Self {
+            bits: q.bits,
+            policy: q.policy.clone(),
+            plus: q.plus,
+        }
+    }
+}
+
 /// The worker event loop.
 pub struct WorkerNode<D: Duplex, B: GradientSource> {
     backend: B,
@@ -129,7 +153,12 @@ impl<D: Duplex, B: GradientSource> WorkerNode<D, B> {
         let mut w_snapshot_prev = vec![0.0; d];
         let mut w_hist: Vec<Vec<f64>> = Vec::new(); // w_{k,0..T-1}
         let mut g_snapshot = vec![0.0; d]; // g_i(w̃_k), cached
+        // grid centers are *replicated state*: under the adaptive policy they
+        // track the just-shared snapshot values; under the fixed policy they
+        // stay at the initial point for the whole run (the master's
+        // QuantChannel/MessageCluster mirror exactly this rule)
         let mut g_center = vec![0.0; d]; // shared center of R_{g_i,k}
+        let mut w_center = vec![0.0; d]; // shared center of R_{w,k}
         let mut gnorm = 1.0f64; // ‖g̃_k‖ from EpochCommit
         let mut g_cur = vec![0.0; d];
         // per-epoch grid cache (rebuilt at EpochCommit; §Perf)
@@ -153,18 +182,30 @@ impl<D: Duplex, B: GradientSource> WorkerNode<D, B> {
                     self.link.send(Message::Ack)?;
                 }
                 Message::EpochCommit { gnorm: gn } => {
-                    gnorm = gn;
+                    gnorm = gn.max(1e-300); // same clamp as the master side
                     w_snapshot_prev.copy_from_slice(&w_snapshot);
-                    // the exact g_i(w̃_k) was just shared on the raw uplink:
-                    // both ends center R_{g_i,k} on it
-                    g_center.copy_from_slice(&g_snapshot);
                     w_cur.copy_from_slice(&w_snapshot);
                     w_hist.clear();
                     w_hist.push(w_cur.clone());
                     // rebuild this epoch's grids once
                     if let Some(q) = &self.quant {
-                        g_grid = Some(q.policy.g_grid(&g_center, gnorm, q.bits)?);
-                        w_grid = Some(q.policy.w_grid(&w_snapshot, gnorm, q.bits)?);
+                        if q.policy.is_adaptive() {
+                            // the exact g_i(w̃_k) was just shared on the raw
+                            // uplink: both ends re-center R_{g_i,k} on it,
+                            // and R_{w,k} on the snapshot
+                            g_center.copy_from_slice(&g_snapshot);
+                            w_center.copy_from_slice(&w_snapshot);
+                            g_grid = Some(q.policy.g_grid(&g_center, gnorm, q.bits)?);
+                            w_grid = Some(q.policy.w_grid(&w_center, gnorm, q.bits)?);
+                        } else {
+                            // fixed policy: same lattice every epoch
+                            if g_grid.is_none() {
+                                g_grid = Some(q.policy.g_grid(&g_center, gnorm, q.bits)?);
+                            }
+                            if w_grid.is_none() {
+                                w_grid = Some(q.policy.w_grid(&w_center, gnorm, q.bits)?);
+                            }
+                        }
                     }
                     self.link.send(Message::Ack)?;
                 }
@@ -219,7 +260,7 @@ impl<D: Duplex, B: GradientSource> WorkerNode<D, B> {
                     let grid = match &w_grid {
                         Some(g) => g,
                         None => {
-                            w_grid = Some(q.policy.w_grid(&w_snapshot, gnorm, q.bits)?);
+                            w_grid = Some(q.policy.w_grid(&w_center, gnorm, q.bits)?);
                             w_grid.as_ref().unwrap()
                         }
                     };
