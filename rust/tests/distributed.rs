@@ -1,11 +1,15 @@
-//! Integration: the message-passing runtime (coordinator + worker threads
-//! over local and TCP transports) against the centralized simulator.
+//! Integration: the three [`qmsvrg::cluster::Cluster`] backends of the one
+//! Algorithm-1 engine. The old tests asserted that two hand-mirrored
+//! implementations *behaved alike*; these assert something stronger — that
+//! the in-process, threaded, and TCP backends of the single implementation
+//! produce **bit-identical** convergence traces and bit ledgers at a fixed
+//! seed.
 
 use qmsvrg::algorithms::channel::QuantOpts;
 use qmsvrg::algorithms::svrg::{run_svrg, SvrgOpts};
 use qmsvrg::algorithms::ShardedObjective;
+use qmsvrg::cluster::{Cluster, InProcessCluster, MessageCluster, ThreadedCluster};
 use qmsvrg::config::TrainConfig;
-use qmsvrg::coordinator::{Coordinator, CoordinatorOpts};
 use qmsvrg::data::synthetic::power_like;
 use qmsvrg::data::Dataset;
 use qmsvrg::objective::LogisticRidge;
@@ -36,77 +40,167 @@ fn quant_opts(ds: &Dataset, n_workers: usize, bits: u8, plus: bool) -> QuantOpts
     }
 }
 
-/// Spawn native worker threads over local channels and run the coordinator.
-fn run_local_distributed(
-    ds: &Dataset,
-    n_workers: usize,
-    opts: CoordinatorOpts,
-    seed: u64,
-) -> (Vec<f64>, Vec<f64>, u64) {
-    let shards = ds.shard(n_workers);
-    let mut links = Vec::new();
-    let mut handles = Vec::new();
+fn opts(outer_iters: usize, memory_unit: bool) -> SvrgOpts {
+    SvrgOpts {
+        step: 0.2,
+        epoch_len: 8,
+        outer_iters,
+        memory_unit,
+    }
+}
+
+/// What one run pins down, bit for bit.
+#[derive(Debug, PartialEq)]
+struct RunFingerprint {
+    /// `‖g̃_k‖` per epoch, as raw f64 bits.
+    gnorm_bits: Vec<u64>,
+    /// Cumulative ledger bits per epoch.
+    bits: Vec<u64>,
+    /// Final snapshot, as raw f64 bits.
+    w_bits: Vec<u64>,
+    uplink_bits: u64,
+    downlink_bits: u64,
+    messages: u64,
+}
+
+fn run_on<C: Cluster>(
+    cluster: &mut C,
+    o: &SvrgOpts,
+    root: &Xoshiro256pp,
+) -> RunFingerprint {
+    let mut gnorm_bits = Vec::new();
+    let mut bits = Vec::new();
+    let w = run_svrg(cluster, o, root.algo_stream(), &mut |_, _, gn, b| {
+        gnorm_bits.push(gn.to_bits());
+        bits.push(b);
+    })
+    .unwrap();
+    let ledger = cluster.ledger().clone();
+    cluster.shutdown().unwrap();
+    RunFingerprint {
+        gnorm_bits,
+        bits,
+        w_bits: w.iter().map(|x| x.to_bits()).collect(),
+        uplink_bits: ledger.uplink_bits,
+        downlink_bits: ledger.downlink_bits,
+        messages: ledger.messages,
+    }
+}
+
+fn run_in_process(ds: &Dataset, n: usize, q: Option<QuantOpts>, o: &SvrgOpts, seed: u64) -> RunFingerprint {
+    let prob = ShardedObjective::new(ds, n, 0.1);
     let root = Xoshiro256pp::seed_from_u64(seed);
+    let mut cluster = InProcessCluster::new(&prob, q, &root);
+    run_on(&mut cluster, o, &root)
+}
+
+fn run_threaded(ds: &Dataset, n: usize, q: Option<QuantOpts>, o: &SvrgOpts, seed: u64) -> RunFingerprint {
+    let root = Xoshiro256pp::seed_from_u64(seed);
+    // through the thin coordinator constructor (== ThreadedCluster::spawn)
+    let mut cluster = qmsvrg::coordinator::threaded(ds, n, 0.1, q, &root).unwrap();
+    run_on(&mut cluster, o, &root)
+}
+
+/// Full QM-SVRG across real loopback sockets (worker threads holding the
+/// TCP client ends, exactly like separate `qmsvrg worker` processes would).
+fn run_tcp(ds: &Dataset, n: usize, q: Option<QuantOpts>, o: &SvrgOpts, seed: u64) -> RunFingerprint {
+    let root = Xoshiro256pp::seed_from_u64(seed);
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+
+    // spawn worker i, then accept its connection before spawning i+1: link
+    // order == worker order, so the TCP run is bit-comparable to the other
+    // backends (a real deployment doesn't need this — each link is
+    // self-consistent — but the fingerprint comparison does)
+    let shards = ds.shard(n);
+    let mut handles = Vec::new();
+    let mut links = Vec::new();
     for (i, s) in shards.into_iter().enumerate() {
-        let (m, w) = pair();
-        links.push(m);
-        let wq = opts.quant.as_ref().map(|q| WorkerQuant {
-            bits: q.bits,
-            policy: q.policy.clone(),
-            plus: q.plus,
-        });
-        let rng = root.split(100 + i as u64);
+        let wq = q.as_ref().map(WorkerQuant::from);
+        let rng = root.worker_stream(i);
+        let addr = addr.clone();
         handles.push(std::thread::spawn(move || {
+            let link = TcpDuplex::connect(&addr).unwrap();
             let obj = LogisticRidge::new(&s.x, &s.y, s.n, s.d, 0.1);
-            WorkerNode::new(obj, w, wq, rng).run()
+            WorkerNode::new(obj, link, wq, rng).run().unwrap();
         }));
+        let (stream, _) = listener.accept().unwrap();
+        links.push(TcpDuplex::new(stream).unwrap());
     }
-    let mut coord = Coordinator::new(links, ds.d, opts, root.split(0));
-    let mut gns = Vec::new();
-    let w = coord.run(&mut |_, _, gn, _| gns.push(gn)).unwrap();
-    let bits = coord.ledger.total_bits();
-    coord.shutdown().unwrap();
+    let mut cluster = MessageCluster::new(links, ds.d, q, &root);
+    let fp = {
+        let mut gnorm_bits = Vec::new();
+        let mut bits = Vec::new();
+        let w = run_svrg(&mut cluster, o, root.algo_stream(), &mut |_, _, gn, b| {
+            gnorm_bits.push(gn.to_bits());
+            bits.push(b);
+        })
+        .unwrap();
+        // exercise the loss query while the workers are still alive
+        let loss = cluster.query_losses(&w).unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        let ledger = cluster.ledger().clone();
+        cluster.shutdown().unwrap();
+        RunFingerprint {
+            gnorm_bits,
+            bits,
+            w_bits: w.iter().map(|x| x.to_bits()).collect(),
+            uplink_bits: ledger.uplink_bits,
+            downlink_bits: ledger.downlink_bits,
+            messages: ledger.messages,
+        }
+    };
     for h in handles {
-        h.join().unwrap().unwrap();
+        h.join().unwrap();
     }
-    (w, gns, bits)
+    // (QueryLoss is instrumentation: unmetered, so it cannot perturb the
+    // ledger fields the fingerprint compares)
+    fp
 }
 
 #[test]
-fn distributed_unquantized_matches_centralized_exactly_in_math() {
-    // With quantization off there is no randomness in the exchanged values:
-    // given the same ξ/ζ draws the distributed run must contract like the
-    // simulator. We check the contraction factor, not bitwise equality
-    // (separate rng streams).
+fn three_backends_bit_identical() {
+    // QM-SVRG-A+ at 5 bits: quantized uplink AND downlink, memory unit on —
+    // every protocol verb and every rng stream is exercised
     let ds = dataset();
-    let opts = CoordinatorOpts {
-        step: 0.2,
-        epoch_len: 8,
-        outer_iters: 25,
-        memory_unit: true,
-        quant: None,
-    };
-    let (_, gns, _) = run_local_distributed(&ds, 4, opts, 11);
-    // T=8 epochs at alpha=0.2 contract by ~1.3x/epoch; demand >=200x overall
-    assert!(gns.last().unwrap() < &(gns[0] * 5e-3), "trace: {gns:?}");
+    let n = 4;
+    let o = opts(12, true);
+    let q = quant_opts(&ds, n, 5, true);
+    let a = run_in_process(&ds, n, Some(q.clone()), &o, 33);
+    let b = run_threaded(&ds, n, Some(q.clone()), &o, 33);
+    let c = run_tcp(&ds, n, Some(q), &o, 33);
+    assert_eq!(a, b, "in-process vs threaded");
+    assert_eq!(a, c, "in-process vs tcp");
+}
 
-    // centralized twin
-    let prob = ShardedObjective::new(&ds, 4, 0.1);
-    let mut gns_c = Vec::new();
-    run_svrg(
-        &prob,
-        &SvrgOpts {
-            step: 0.2,
-            epoch_len: 8,
-            outer_iters: 25,
-            memory_unit: true,
-            quant: None,
-        },
-        Xoshiro256pp::seed_from_u64(11),
-        &mut |_, _, gn, _| gns_c.push(gn),
-    )
-    .unwrap();
-    assert!(gns_c.last().unwrap() < &(gns_c[0] * 5e-3));
+#[test]
+fn three_backends_bit_identical_unquantized() {
+    // M-SVRG (no quantization): raw vectors cross the links; the ledgers
+    // must still agree exactly with the in-process metering
+    let ds = dataset();
+    let n = 3;
+    let o = opts(10, true);
+    let a = run_in_process(&ds, n, None, &o, 44);
+    let b = run_threaded(&ds, n, None, &o, 44);
+    let c = run_tcp(&ds, n, None, &o, 44);
+    assert_eq!(a, b);
+    assert_eq!(a, c);
+}
+
+#[test]
+fn threaded_n8_fanin_deterministic() {
+    // 8 worker threads race on the fan-in, but replies are drained in link
+    // order: repeated runs — and the serial in-process ordering — must match
+    // bit for bit
+    let ds = dataset();
+    let n = 8;
+    let o = opts(8, true);
+    let q = quant_opts(&ds, n, 4, true);
+    let serial = run_in_process(&ds, n, Some(q.clone()), &o, 55);
+    for _ in 0..3 {
+        let threaded = run_threaded(&ds, n, Some(q.clone()), &o, 55);
+        assert_eq!(serial, threaded);
+    }
 }
 
 #[test]
@@ -115,112 +209,56 @@ fn distributed_quantized_converges_and_meters_bits() {
     let n_workers = 4;
     let bits = 4u8;
     let q = quant_opts(&ds, n_workers, bits, true);
-    let opts = CoordinatorOpts {
-        step: 0.2,
-        epoch_len: 8,
-        outer_iters: 20,
-        memory_unit: true,
-        quant: Some(q),
-    };
-    let (_, gns, total_bits) = run_local_distributed(&ds, n_workers, opts, 13);
+    let root = Xoshiro256pp::seed_from_u64(13);
+    let mut cluster = ThreadedCluster::spawn(&ds, n_workers, 0.1, Some(q), &root).unwrap();
+    let mut gns = Vec::new();
+    let mut total_bits = 0;
+    run_svrg(&mut cluster, &opts(20, true), root.algo_stream(), &mut |_, _, gn, b| {
+        gns.push(gn);
+        total_bits = b;
+    })
+    .unwrap();
+    cluster.shutdown().unwrap();
     assert!(
         gns.last().unwrap() < &(gns[0] * 0.05),
         "no contraction: {gns:?}"
     );
-    // measured bits: per epoch 64dN + (b_w + 2 b_g) T, d=9
+    // measured bits: per epoch 64dN + (b_w + 2 b_g)T, d=9, plus the final
+    // metered gradient report (64dN)
     let (d, n, t) = (9u64, n_workers as u64, 8u64);
     let per_epoch = 64 * d * n + 3 * (bits as u64) * d * t;
-    assert_eq!(total_bits, per_epoch * 20 + 64 * d * n /* final report */);
+    assert_eq!(total_bits, per_epoch * 20 + 64 * d * n);
 }
 
 #[test]
 fn distributed_memory_unit_never_increases_gnorm() {
     let ds = dataset();
     let q = quant_opts(&ds, 3, 3, true);
-    let opts = CoordinatorOpts {
-        step: 0.2,
-        epoch_len: 8,
-        outer_iters: 30,
-        memory_unit: true,
-        quant: Some(q),
-    };
-    let (_, gns, _) = run_local_distributed(&ds, 3, opts, 17);
+    let root = Xoshiro256pp::seed_from_u64(17);
+    let mut cluster = ThreadedCluster::spawn(&ds, 3, 0.1, Some(q), &root).unwrap();
+    let mut gns = Vec::new();
+    run_svrg(&mut cluster, &opts(30, true), root.algo_stream(), &mut |_, _, gn, _| {
+        gns.push(gn)
+    })
+    .unwrap();
+    cluster.shutdown().unwrap();
     for w in gns.windows(2) {
         assert!(w[1] <= w[0] + 1e-12, "gnorm grew: {} -> {}", w[0], w[1]);
     }
 }
 
 #[test]
-fn distributed_over_tcp_loopback() {
-    // full QM-SVRG-A+ across real sockets
-    let ds = dataset();
-    let n_workers = 2;
-    let q = quant_opts(&ds, n_workers, 5, true);
-
-    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
-    let addr = listener.local_addr().unwrap();
-
-    // worker processes (threads with TCP links here)
-    let shards = ds.shard(n_workers);
-    let mut worker_handles = Vec::new();
-    for (i, s) in shards.into_iter().enumerate() {
-        let q = q.clone();
-        let addr = addr.to_string();
-        worker_handles.push(std::thread::spawn(move || {
-            let link = TcpDuplex::connect(&addr).unwrap();
-            let obj = LogisticRidge::new(&s.x, &s.y, s.n, s.d, 0.1);
-            let wq = WorkerQuant {
-                bits: q.bits,
-                policy: q.policy.clone(),
-                plus: q.plus,
-            };
-            WorkerNode::new(obj, link, Some(wq), Xoshiro256pp::seed_from_u64(500 + i as u64))
-                .run()
-                .unwrap();
-        }));
-    }
-    let mut links = Vec::new();
-    for _ in 0..n_workers {
-        let (stream, _) = listener.accept().unwrap();
-        links.push(TcpDuplex::new(stream).unwrap());
-    }
-
-    let mut coord = Coordinator::new(
-        links,
-        ds.d,
-        CoordinatorOpts {
-            step: 0.2,
-            epoch_len: 8,
-            outer_iters: 15,
-            memory_unit: true,
-            quant: Some(q),
-        },
-        Xoshiro256pp::seed_from_u64(99),
-    );
-    let mut gns = Vec::new();
-    coord.run(&mut |_, _, gn, _| gns.push(gn)).unwrap();
-    let loss = coord.query_loss().unwrap();
-    coord.shutdown().unwrap();
-    for h in worker_handles {
-        h.join().unwrap();
-    }
-    assert!(
-        gns.last().unwrap() < &(gns[0] * 0.2),
-        "no contraction over TCP: {gns:?}"
-    );
-    assert!(loss.is_finite() && loss > 0.0);
-}
-
-#[test]
 fn worker_crash_surfaces_as_error_not_hang() {
     // a worker that dies mid-protocol must turn into an Err at the master
     let ds = dataset();
+    let root = Xoshiro256pp::seed_from_u64(1);
     let shards = ds.shard(2);
     let mut links = Vec::new();
     let mut handles = Vec::new();
     for (i, s) in shards.into_iter().enumerate() {
         let (m, w) = pair();
         links.push(m);
+        let rng = root.worker_stream(i);
         handles.push(std::thread::spawn(move || {
             if i == 1 {
                 // crash: drop the link immediately
@@ -229,26 +267,15 @@ fn worker_crash_surfaces_as_error_not_hang() {
             }
             let obj = LogisticRidge::new(&s.x, &s.y, s.n, s.d, 0.1);
             // run() will itself error once the master gives up; ignore
-            let _ = WorkerNode::new(obj, w, None, Xoshiro256pp::seed_from_u64(1)).run();
+            let _ = WorkerNode::new(obj, w, None, rng).run();
         }));
     }
-    let mut coord = Coordinator::new(
-        links,
-        ds.d,
-        CoordinatorOpts {
-            step: 0.2,
-            epoch_len: 4,
-            outer_iters: 3,
-            memory_unit: false,
-            quant: None,
-        },
-        Xoshiro256pp::seed_from_u64(1),
-    );
-    let result = coord.run(&mut |_, _, _, _| {});
+    let mut cluster = MessageCluster::new(links, ds.d, None, &root);
+    let result = run_svrg(&mut cluster, &opts(3, false), root.algo_stream(), &mut |_, _, _, _| {});
     assert!(result.is_err(), "master should observe the dead worker");
-    // drop the coordinator first: it holds the channel senders that keep the
+    // drop the cluster first: it holds the channel senders that keep the
     // surviving worker blocked in recv()
-    drop(coord);
+    drop(cluster);
     for h in handles {
         let _ = h.join();
     }
@@ -256,7 +283,7 @@ fn worker_crash_surfaces_as_error_not_hang() {
 
 #[test]
 fn driver_end_to_end_with_local_runtime() {
-    // the public driver::train path on the distributed runtime (native)
+    // the public driver::run_distributed path on the threaded backend
     let ds = dataset();
     let cfg = TrainConfig {
         algorithm: "qm-svrg-a+".into(),
@@ -269,15 +296,16 @@ fn driver_end_to_end_with_local_runtime() {
     let prob = ShardedObjective::new(&ds, cfg.n_workers, cfg.lambda);
     let quant = qmsvrg::driver::quant_opts_for(kind, &cfg, &prob);
     let mut losses = Vec::new();
-    qmsvrg::driver::run_distributed(
+    let (_, ledger) = qmsvrg::driver::run_distributed(
         kind,
         &cfg,
         &ds,
         quant,
-        Xoshiro256pp::seed_from_u64(7),
+        &Xoshiro256pp::seed_from_u64(7),
         &mut |_, w, _, _| losses.push(prob.loss(w)),
         false,
     )
     .unwrap();
     assert!(losses.last().unwrap() < &losses[0]);
+    assert!(ledger.total_bits() > 0);
 }
