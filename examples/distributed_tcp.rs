@@ -6,7 +6,12 @@
 //! # one-command demo (spawns 4 worker child processes):
 //! cargo run --release --example distributed_tcp -- --spawn
 //!
-//! # manual: start the master, then start each worker in its own shell:
+//! # same demo on the DIANA compressed-difference uplink:
+//! cargo run --release --example distributed_tcp -- --spawn --compressor diana
+//!
+//! # manual: start the master, then start each worker in its own shell
+//! # (worker flags must mirror the master's — the Config handshake refuses
+//! # a mismatch):
 //! cargo run --release --example distributed_tcp
 //! target/release/qmsvrg worker --connect 127.0.0.1:7070 --shard 0 --workers 4 --bits 4 --adaptive
 //! ```
@@ -16,7 +21,7 @@ use qmsvrg::algorithms::svrg::{run_svrg, SvrgOpts};
 use qmsvrg::algorithms::ShardedObjective;
 use qmsvrg::cluster::Cluster;
 use qmsvrg::data::synthetic::power_like;
-use qmsvrg::quant::{AdaptivePolicy, GridPolicy};
+use qmsvrg::quant::CompressorKind;
 use qmsvrg::rng::Xoshiro256pp;
 
 const N_WORKERS: usize = 4;
@@ -25,7 +30,27 @@ const SEED: u64 = 42;
 const SAMPLES: usize = 20_000;
 
 fn main() -> anyhow::Result<()> {
-    let spawn = std::env::args().any(|a| a == "--spawn");
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let spawn = args.iter().any(|a| a == "--spawn");
+    let compressor: CompressorKind = match args.iter().position(|a| a == "--compressor") {
+        Some(i) => args
+            .get(i + 1)
+            .ok_or_else(|| anyhow::anyhow!("--compressor needs a value (urq|diana)"))?
+            .parse()?,
+        None => CompressorKind::Urq,
+    };
+    let mut k = 0;
+    while k < args.len() {
+        match args[k].as_str() {
+            "--spawn" => {}
+            "--compressor" => k += 1, // skip the value token (parsed above)
+            other if other.starts_with("--") => {
+                anyhow::bail!("unknown flag {other} (known: --spawn, --compressor urq|diana)")
+            }
+            _ => {}
+        }
+        k += 1;
+    }
 
     // the same dataset/shards every worker derives from the shared seed —
     // this must follow the exact pipeline of the `qmsvrg worker` loader
@@ -67,6 +92,8 @@ fn main() -> anyhow::Result<()> {
                         "--bits",
                         "4",
                         "--adaptive",
+                        "--compressor",
+                        compressor.name(),
                     ])
                     .spawn()?,
             );
@@ -78,14 +105,11 @@ fn main() -> anyhow::Result<()> {
     // shared seed, so μ, L, d — and therefore every grid — replicate exactly
     let quant = QuantOpts {
         bits: 4,
-        policy: GridPolicy::Adaptive(AdaptivePolicy::practical(
-            prob.mu(),
-            prob.l_smooth(),
-            prob.dim(),
-            0.2,
-            8,
-        )),
+        // the shared builder the workers' CLI also uses, so the Config
+        // handshake fingerprints can only differ on real parameter mismatch
+        policy: qmsvrg::driver::grid_policy_for(&prob, true, 0.2, 8, 1.0, 4.0),
         plus: true,
+        compressor,
     };
     let root = Xoshiro256pp::seed_from_u64(SEED);
     let mut cluster =

@@ -6,14 +6,16 @@
 //!    rule (what actually buys the monotone grid shrinkage);
 //! 3. **URQ vs deterministic rounding** — unbiasedness matters for the
 //!    variance-reduced direction;
-//! 4. **Grid slack** — sensitivity to the practical radius multiplier.
+//! 4. **Grid slack** — sensitivity to the practical radius multiplier;
+//! 5. **Bit allocation** — uniform vs variance-weighted `{b_i}`;
+//! 6. **Uplink compressor** — URQ re-centered grids vs DIANA error memory.
 
 use qmsvrg::algorithms::channel::QuantOpts;
 use qmsvrg::algorithms::svrg::{run_svrg, SvrgOpts};
 use qmsvrg::algorithms::ShardedObjective;
 use qmsvrg::cluster::InProcessCluster;
 use qmsvrg::data::synthetic::power_like;
-use qmsvrg::quant::{AdaptivePolicy, GridPolicy};
+use qmsvrg::quant::{AdaptivePolicy, CompressorKind, GridPolicy};
 use qmsvrg::rng::Xoshiro256pp;
 
 fn problem() -> ShardedObjective {
@@ -65,6 +67,7 @@ fn main() {
                 8,
             )),
             plus: true,
+            compressor: CompressorKind::Urq,
         };
         let theoretical = QuantOpts {
             bits,
@@ -73,6 +76,7 @@ fn main() {
                 prob.l_smooth(),
             )),
             plus: true,
+            compressor: CompressorKind::Urq,
         };
         let (_, gp) = run(&prob, Some(practical), true, 1);
         let (_, gt) = run(&prob, Some(theoretical), true, 1);
@@ -93,6 +97,7 @@ fn main() {
             bits: 3,
             policy: GridPolicy::Adaptive(pol),
             plus: true,
+            compressor: CompressorKind::Urq,
         };
         let (g0, gk) = run(&prob, Some(q), memory, 2);
         println!("{label:<20} |g|: {g0:.3e} -> {gk:.3e} (contraction {:.1e})", gk / g0);
@@ -109,6 +114,7 @@ fn main() {
             bits: 3,
             policy: GridPolicy::Adaptive(pol),
             plus: true,
+            compressor: CompressorKind::Urq,
         };
         let (_, gk) = run(&prob, Some(q), true, 3);
         println!("{slack:>7.1} {gk:>14.3e}");
@@ -130,6 +136,7 @@ fn main() {
                 t_len,
             )),
             plus: true,
+            compressor: CompressorKind::Urq,
         };
         let mut last = f64::NAN;
         let mut bits = 0;
@@ -178,6 +185,29 @@ fn main() {
         println!(" bits on high-variance pixels — Definition 2 allows this, the");
         println!(" paper's experiments use the uniform special case)");
     }
+
+    // 6. compressor seam: URQ (re-centered grids) vs DIANA (error memory)
+    println!("\n-- ablation 6: uplink compressor (QM-SVRG-A+, memory unit) --");
+    println!("{:>5} {:>16} {:>16}", "b/d", "urq final |g|", "diana final |g|");
+    for bits in [3u8, 5, 8] {
+        let mk = |compressor| QuantOpts {
+            bits,
+            policy: GridPolicy::Adaptive(AdaptivePolicy::practical(
+                prob.mu(),
+                prob.l_smooth(),
+                prob.dim(),
+                0.2,
+                8,
+            )),
+            plus: true,
+            compressor,
+        };
+        let (_, gu) = run(&prob, Some(mk(CompressorKind::Urq)), true, 6);
+        let (_, gd) = run(&prob, Some(mk(CompressorKind::Diana)), true, 6);
+        println!("{bits:>5} {gu:>16.3e} {gd:>16.3e}");
+    }
+    println!("(same Σ b_i on the wire; DIANA compresses g − h against a");
+    println!(" per-worker error memory instead of re-centering the lattice)");
 
     println!("\n== bench_ablation done ==");
 }

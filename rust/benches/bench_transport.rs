@@ -28,6 +28,7 @@ fn main() {
     let msg_q = Message::GradQ {
         payload: vec![0xAB; 28], // d=9 @ 25 bits? representative packed size
         bits: 27,
+        sats: 0,
     };
     let msg_raw = Message::GradRaw {
         g: (0..784).map(|i| i as f64 * 0.001).collect(),
@@ -77,6 +78,7 @@ fn main() {
     let gq = Message::GradQ {
         payload: vec![0u8; 4],
         bits: 27,
+        sats: 0,
     };
     b.bench("tcp loopback echo (GradQ 27b)", || {
         c.send(gq.clone()).unwrap();

@@ -1,15 +1,21 @@
-//! The quantized master↔worker channel used by the centralized simulators.
+//! The quantized master↔worker channel used by the in-process backend and
+//! the centralized GD/SGD/SAG baselines.
 //!
-//! Owns: the grid policy, the per-link shared replicated state (grid centers),
-//! the URQ randomness, and the measured-bit ledger. Every quantized exchange
-//! really runs URQ + bit-packing, so the bit counts in the experiment traces
-//! are payload-exact, and the dequantized value returned to the caller is
-//! *identical* to what the remote end would reconstruct.
+//! Owns the URQ randomness and the measured-bit ledger; the grid life-cycle
+//! (centers, recenter-or-keep, gnorm clamp, invalidation, saturation
+//! accounting) lives in the one shared
+//! [`crate::quant::ReplicatedGrid`] state machine, and the uplink scheme in
+//! the pluggable [`crate::quant::Compressor`] — the same types a
+//! [`crate::worker::WorkerNode`] and a [`crate::cluster::MessageCluster`]
+//! hold, so this channel *is* both ends of every link rather than a copy of
+//! them. Every quantized exchange really runs URQ + bit-packing, so the bit
+//! counts in the experiment traces are payload-exact, and the value returned
+//! to the caller is *identical* to what a remote end would reconstruct.
 
 use anyhow::Result;
 
 use crate::metrics::CommLedger;
-use crate::quant::{self, Grid, GridPolicy};
+use crate::quant::{CompressorKind, GridPolicy, QuantState};
 use crate::rng::Xoshiro256pp;
 
 /// Quantization options for a run.
@@ -21,6 +27,8 @@ pub struct QuantOpts {
     pub policy: GridPolicy,
     /// Quantize the inner-loop stochastic gradient too ("+" variants).
     pub plus: bool,
+    /// Gradient-compression scheme on the uplink (`--compressor urq|diana`).
+    pub compressor: CompressorKind,
 }
 
 /// All master↔worker links of one run, with bit metering.
@@ -31,98 +39,57 @@ pub struct QuantOpts {
 /// real [`crate::worker::WorkerNode`] would own — so the in-process backend
 /// is bit-identical to the threaded/TCP ones at a fixed seed.
 pub struct QuantChannel {
-    opts: QuantOpts,
+    /// "+" variants: the inner-loop current gradient is quantized too. The
+    /// remaining options live inside [`QuantState`] — no second copy here.
+    plus: bool,
     d: usize,
     /// Master-side (downlink) URQ stream.
     w_rng: Xoshiro256pp,
     /// Per-worker (uplink) URQ streams.
     g_rngs: Vec<Xoshiro256pp>,
     pub ledger: CommLedger,
-    /// Shared center of each worker's gradient grid `R_{g_ξ,k}` (replicated
-    /// state: the last snapshot gradient both ends agreed on).
-    g_centers: Vec<Vec<f64>>,
-    /// Shared center of the parameter grid `R_{w,k}` (the snapshot `w̃_k`
-    /// under the adaptive policy; the initial point under the fixed policy).
-    w_center: Vec<f64>,
-    /// Snapshot gradient norm `‖g̃_k‖` driving the adaptive radii.
-    gnorm: f64,
-    // per-epoch grid cache (§Perf: grid construction is O(d) allocations;
-    // building once per epoch instead of once per send is ~3 fewer
-    // constructions per inner iteration)
-    w_grid: Option<Grid>,
-    g_grids: Vec<Option<Grid>>,
+    /// The replicated grid/compressor state machine (this channel owns both
+    /// link ends, so one replica stands in for all of them).
+    state: QuantState,
 }
 
 impl QuantChannel {
     pub fn new(opts: QuantOpts, d: usize, n_workers: usize, root: Xoshiro256pp) -> Self {
         Self {
-            opts,
+            state: QuantState::new(opts.policy, opts.bits, opts.compressor, d, n_workers),
+            plus: opts.plus,
             d,
             w_rng: root.quant_stream(),
             g_rngs: (0..n_workers).map(|i| root.worker_stream(i)).collect(),
             ledger: CommLedger::default(),
-            g_centers: vec![vec![0.0; d]; n_workers],
-            w_center: vec![0.0; d],
-            gnorm: 1.0,
-            w_grid: None,
-            g_grids: vec![None; n_workers],
         }
     }
 
-    pub fn opts(&self) -> &QuantOpts {
-        &self.opts
+    /// Whether the inner-loop current gradient is quantized too ("+").
+    pub fn plus(&self) -> bool {
+        self.plus
     }
 
-    /// Begin epoch k: refresh the parameter-grid center (adaptive policy
-    /// re-centers at the snapshot `w̃_k`; fixed policy keeps its center) and
-    /// the gradient norm driving the radii.
-    pub fn set_epoch(&mut self, snapshot_w: &[f64], snapshot_gnorm: f64) {
-        if self.opts.policy.is_adaptive() {
-            self.w_center.copy_from_slice(snapshot_w);
-        }
-        let gnorm = snapshot_gnorm.max(1e-300);
-        if self.opts.policy.is_adaptive() && gnorm != self.gnorm {
-            // radius changed: every cached grid is stale
-            for g in self.g_grids.iter_mut() {
-                *g = None;
-            }
-        }
-        self.gnorm = gnorm;
-        if self.opts.policy.is_adaptive() {
-            self.w_grid = None; // center moved
-        }
+    /// Epoch boundary for the SVRG family: commit the just-shared snapshot
+    /// `w̃_k`, node gradients, and `‖g̃_k‖` to the replicated grid state
+    /// (gradient grids re-center only for compressors that ask for it).
+    pub fn commit_epoch(&mut self, w_tilde: &[f64], node_g: &[Vec<f64>], gnorm: f64) {
+        self.state.commit_epoch(w_tilde, node_g, gnorm);
     }
 
-    /// Update worker `i`'s gradient-grid center to a newly *shared* value
-    /// (both ends know it: either the exact gradient sent unquantized in the
-    /// outer loop, or the dequantized uplink value).
-    pub fn set_g_center(&mut self, worker: usize, shared: &[f64]) {
-        if self.opts.policy.is_adaptive() {
-            self.g_centers[worker].copy_from_slice(shared);
-            self.g_grids[worker] = None;
-        }
+    /// Per-iteration epoch state for the GD/SGD/SAG baselines: refresh the
+    /// parameter-grid center and the radius-driving gradient norm only (no
+    /// shared node gradients exist on these paths).
+    pub fn set_epoch(&mut self, w: &[f64], gnorm: f64) {
+        self.state.grid.commit_epoch(w, None, gnorm);
     }
 
     /// Downlink: quantize parameters on `R_{w,k}`; meters `b_w` payload bits.
-    /// Writes the value the workers reconstruct into `out` (no allocation
-    /// beyond the quantizer's own index/payload buffers).
+    /// Writes the value the workers reconstruct into `out`.
     pub fn send_w_into(&mut self, u: &[f64], out: &mut [f64]) -> Result<()> {
-        if self.w_grid.is_none() {
-            self.w_grid = Some(self.opts.policy.w_grid(
-                &self.w_center,
-                self.gnorm,
-                self.opts.bits,
-            )?);
-        }
-        let grid = self.w_grid.as_ref().unwrap();
-        let (idx, stats) = quant::quantize_urq(u, grid, &mut self.w_rng);
-        let payload = quant::pack_indices(&idx, grid.bits())?;
-        self.ledger.record_downlink(payload.bits);
-        self.ledger.saturations += stats.saturated as u64;
-        // receiver-side reconstruction from the actual wire bytes
-        let idx_rx = quant::unpack_indices(&payload.bytes, grid.bits())?;
-        debug_assert_eq!(idx_rx, idx);
-        quant::dequantize_into(&idx_rx, grid, out);
+        let e = self.state.grid.encode_w(u, &mut self.w_rng, out)?;
+        self.ledger.record_downlink(e.payload.bits);
+        self.ledger.saturations += e.sats as u64;
         Ok(())
     }
 
@@ -133,25 +100,14 @@ impl QuantChannel {
         Ok(out)
     }
 
-    /// Uplink: quantize worker `i`'s gradient on `R_{g_ξ,k}` using worker
-    /// `i`'s URQ stream; meters `b_g` payload bits. Writes the value the
-    /// master reconstructs into `out`.
+    /// Uplink: compress worker `i`'s gradient using worker `i`'s URQ stream;
+    /// meters `b_g` payload bits. Writes the value the master reconstructs
+    /// into `out`.
     pub fn send_g_into(&mut self, worker: usize, g: &[f64], out: &mut [f64]) -> Result<()> {
-        if self.g_grids[worker].is_none() {
-            self.g_grids[worker] = Some(self.opts.policy.g_grid(
-                &self.g_centers[worker],
-                self.gnorm,
-                self.opts.bits,
-            )?);
-        }
-        let grid = self.g_grids[worker].as_ref().unwrap();
-        let (idx, stats) = quant::quantize_urq(g, grid, &mut self.g_rngs[worker]);
-        let payload = quant::pack_indices(&idx, grid.bits())?;
-        self.ledger.record_uplink(payload.bits);
-        self.ledger.saturations += stats.saturated as u64;
-        let idx_rx = quant::unpack_indices(&payload.bytes, grid.bits())?;
-        debug_assert_eq!(idx_rx, idx);
-        quant::dequantize_into(&idx_rx, grid, out);
+        let QuantState { grid, comp } = &mut self.state;
+        let e = comp.encode(grid, worker, g, &mut self.g_rngs[worker], out)?;
+        self.ledger.record_uplink(e.payload.bits);
+        self.ledger.saturations += e.sats as u64;
         Ok(())
     }
 
@@ -189,6 +145,7 @@ mod tests {
                 bits,
                 policy,
                 plus: false,
+                compressor: CompressorKind::Urq,
             },
             4,
             2,
@@ -214,8 +171,9 @@ mod tests {
     fn send_g_uses_per_worker_center() {
         let pol = GridPolicy::Adaptive(AdaptivePolicy::new(1.0, 1.0));
         let mut ch = channel(pol, 8);
-        ch.set_epoch(&[0.0; 4], 0.5); // r_g = 2·1·0.5/1 = 1.0
-        ch.set_g_center(1, &[10.0, 10.0, 10.0, 10.0]);
+        // commit re-centers each worker's gradient grid at its node gradient
+        let node_g = vec![vec![0.0; 4], vec![10.0; 4]];
+        ch.commit_epoch(&[0.0; 4], &node_g, 0.5); // r_g = 2·1·0.5/1 = 1.0
         // a gradient near worker 1's center quantizes fine ...
         let g = vec![10.1, 9.9, 10.0, 10.4];
         let gq = ch.send_g(1, &g).unwrap();
@@ -261,5 +219,30 @@ mod tests {
         ch.send_raw_down(9);
         assert_eq!(ch.ledger.uplink_bits, 576);
         assert_eq!(ch.ledger.downlink_bits, 576);
+    }
+
+    #[test]
+    fn diana_channel_meters_same_bits_and_reconstructs() {
+        // the DIANA uplink costs the same Σ b_i on the wire; only the
+        // encoding differs (difference vs value)
+        let mut ch = QuantChannel::new(
+            QuantOpts {
+                bits: 8,
+                policy: GridPolicy::Fixed { radius: 4.0 },
+                plus: false,
+                compressor: CompressorKind::Diana,
+            },
+            4,
+            2,
+            Xoshiro256pp::seed_from_u64(7),
+        );
+        let g = vec![0.3, -0.2, 0.1, 0.05];
+        let g1 = ch.send_g(0, &g).unwrap();
+        assert_eq!(ch.ledger.uplink_bits, 32);
+        assert!(crate::linalg::linf_dist(&g, &g1) <= 8.0 / 255.0 + 1e-12);
+        // second send: error memory already tracks g
+        let g2 = ch.send_g(0, &g).unwrap();
+        assert!(crate::linalg::linf_dist(&g, &g2) <= 8.0 / 255.0 + 1e-12);
+        assert_eq!(ch.ledger.uplink_bits, 64);
     }
 }

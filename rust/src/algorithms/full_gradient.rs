@@ -91,7 +91,7 @@ pub fn run_gd(
 mod tests {
     use super::*;
     use crate::data::synthetic::power_like;
-    use crate::quant::GridPolicy;
+    use crate::quant::{CompressorKind, GridPolicy};
 
     fn prob() -> ShardedObjective {
         let mut ds = power_like(400, 21);
@@ -164,6 +164,7 @@ mod tests {
                 bits,
                 policy: GridPolicy::Fixed { radius: 8.0 },
                 plus: false,
+                compressor: CompressorKind::Urq,
             }),
         };
         let mut final_bits = 0;
@@ -194,6 +195,7 @@ mod tests {
             bits: 16,
             policy: GridPolicy::Fixed { radius: 16.0 },
             plus: false,
+            compressor: CompressorKind::Urq,
         }));
         let dist = crate::linalg::linf_dist(&w_exact, &w_q);
         assert!(dist < 1e-2, "dist={dist}");

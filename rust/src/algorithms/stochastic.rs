@@ -145,7 +145,7 @@ fn measured_or_formula(
 mod tests {
     use super::*;
     use crate::data::synthetic::power_like;
-    use crate::quant::GridPolicy;
+    use crate::quant::{CompressorKind, GridPolicy};
 
     fn prob() -> ShardedObjective {
         let mut ds = power_like(400, 31);
@@ -232,6 +232,7 @@ mod tests {
             bits: 3,
             policy: GridPolicy::Fixed { radius: 6.0 },
             plus: false,
+            compressor: CompressorKind::Urq,
         };
         let mut bits = 0;
         run_sgd(
@@ -268,6 +269,7 @@ mod tests {
             bits: 3,
             policy: GridPolicy::Fixed { radius: 6.0 },
             plus: false,
+            compressor: CompressorKind::Urq,
         };
         let mut gn_q = f64::NAN;
         let mut gn_x = f64::NAN;

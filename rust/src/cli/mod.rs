@@ -103,18 +103,26 @@ USAGE:
                      [--dataset power|mnist|PATH] [--samples N]
                      [--workers N] [--epoch-len T] [--iters K] [--step A]
                      [--bits B] [--lambda L] [--seed S]
+                     [--compressor urq|diana]
                      [--backend native|threaded|xla]
                      [--out DIR]
   qmsvrg experiment  fig2|fig3|fig4|table1|bounds [--bits B] [--samples N]
                      [--iters K] [--seed S] [--out DIR]
   qmsvrg worker      --connect HOST:PORT --shard IDX --workers N
                      [--dataset D] [--samples N] [--seed S] [--lambda L]
-                     [--bits B] [--adaptive]
+                     [--bits B] [--adaptive] [--compressor urq|diana]
+                     [--plus true|false] [--step A] [--epoch-len T]
+                     [--slack S] [--fixed-radius R]
   qmsvrg info        [--artifacts DIR]
   qmsvrg help
 
 Algorithms: gd sgd sag svrg m-svrg q-gd q-sgd q-sag
             qm-svrg-f qm-svrg-a qm-svrg-f+ qm-svrg-a+
+Compressors (quantized algorithms): urq (per-epoch re-centered grids,
+            the paper's scheme) | diana (compressed differences with
+            per-worker error memory). Both ends of a run must agree —
+            the master broadcasts its config at connect and workers
+            refuse a compressor/bits/policy or protocol-version mismatch.
 ";
 
 #[cfg(test)]

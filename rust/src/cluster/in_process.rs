@@ -89,12 +89,9 @@ impl Cluster for InProcessCluster<'_> {
             cache.copy_from_slice(gi);
         }
         if let Some(c) = self.ch.as_mut() {
-            c.set_epoch(w_tilde, gnorm);
-            for (i, gi) in node_g.iter().enumerate() {
-                // the exact node gradient was just shared on the raw uplink,
-                // so both ends may center R_{g_ξ,k} on it
-                c.set_g_center(i, gi);
-            }
+            // the exact node gradients were just shared on the raw uplink,
+            // so the replicated grid state may commit to them
+            c.commit_epoch(w_tilde, node_g, gnorm);
         }
         Ok(())
     }
@@ -117,7 +114,7 @@ impl Cluster for InProcessCluster<'_> {
                 // first, then (in the "+" variants) for the current one —
                 // the same order a WorkerNode uses
                 c.send_g_into(xi, &self.g_snap[xi], g_snap_rx)?; // b_g
-                if c.opts().plus {
+                if c.plus() {
                     self.prob.node_grad(xi, w, &mut self.g_scratch);
                     c.send_g_into(xi, &self.g_scratch, g_cur_rx)?; // b_g
                 } else {

@@ -1,7 +1,12 @@
 //! The message-passing master: [`Cluster`] over any [`Duplex`] — in-process
 //! channels ([`ThreadedCluster`](super::ThreadedCluster) wraps this), TCP
-//! sockets across processes, or the latency-model `SimDuplex`. The wire
-//! format is unchanged from the original coordinator.
+//! sockets across processes, or the latency-model `SimDuplex`.
+//!
+//! The master holds one [`QuantState`] replica (grid state machine +
+//! compressor) — the same type every worker holds (see
+//! [`crate::quant::replicated`]) — and advances it from the message stream
+//! alone, so quantization grids and compressor memory replicate bit-for-bit
+//! without grid parameters ever crossing a link.
 //!
 //! Every collective (gradient collection, commit/revert acks, snapshot
 //! choice, loss query) issues its request to **all** links before blocking
@@ -14,56 +19,53 @@ use anyhow::{bail, Context, Result};
 use super::Cluster;
 use crate::algorithms::channel::QuantOpts;
 use crate::metrics::CommLedger;
-use crate::quant::{self, Grid};
+use crate::quant::QuantState;
 use crate::rng::Xoshiro256pp;
 use crate::transport::tcp::TcpDuplex;
-use crate::transport::{Duplex, Message};
+use crate::transport::{Duplex, Message, PROTO_VERSION};
 
 /// Master side of a message-passing deployment (one link per worker).
 pub struct MessageCluster<D: Duplex> {
     links: Vec<D>,
     d: usize,
-    quant: Option<QuantOpts>,
+    /// The master end's replicated grid/compressor state machine.
+    quant: Option<QuantState>,
     /// Downlink URQ rounding stream (the workers never see it — they
     /// reconstruct from the broadcast indices).
     quant_rng: Xoshiro256pp,
     pub ledger: CommLedger,
-    // replicated grid state, mirrored bit-for-bit by every worker:
-    /// Center of `R_{w,k}` (the snapshot under the adaptive policy; the
-    /// initial point under the fixed policy).
-    w_center: Vec<f64>,
-    /// Center of each worker's `R_{g_ξ,k}`.
-    g_centers: Vec<Vec<f64>>,
-    /// `‖g̃_k‖` driving the adaptive radii.
-    gnorm: f64,
-    // per-epoch grid cache (§Perf: one construction per epoch, not per send)
-    w_grid: Option<Grid>,
-    g_grids: Vec<Option<Grid>>,
 }
 
 impl<D: Duplex> MessageCluster<D> {
     /// `root` is the run's root rng (the same one the workers derived their
-    /// streams from).
+    /// streams from). Broadcasts the [`Message::Config`] handshake on every
+    /// link before returning: workers refuse a protocol-version or
+    /// quantization-config mismatch instead of silently mis-decoding.
     pub fn new(
         links: Vec<D>,
         d: usize,
         quant: Option<QuantOpts>,
         root: &Xoshiro256pp,
-    ) -> Self {
+    ) -> Result<Self> {
         assert!(!links.is_empty(), "need at least one worker");
         let n = links.len();
-        Self {
+        let config = Message::Config {
+            version: PROTO_VERSION,
+            compressor: quant.as_ref().map_or(0, |q| q.compressor.wire_id()),
+            bits: quant.as_ref().map_or(0, |q| q.bits),
+            plus: quant.as_ref().map_or(0, |q| q.plus as u8),
+            policy_fp: quant.as_ref().map_or(0, |q| q.policy.fingerprint()),
+        };
+        let mut cluster = Self {
             links,
             d,
-            quant,
+            quant: quant
+                .map(|q| QuantState::new(q.policy.clone(), q.bits, q.compressor, d, n)),
             quant_rng: root.quant_stream(),
             ledger: CommLedger::default(),
-            w_center: vec![0.0; d],
-            g_centers: vec![vec![0.0; d]; n],
-            gnorm: 1.0,
-            w_grid: None,
-            g_grids: vec![None; n],
-        }
+        };
+        cluster.fan_out(&config)?;
+        Ok(cluster)
     }
 
     /// Send `msg` on every link (no blocking receives in between).
@@ -84,8 +86,9 @@ impl<D: Duplex> MessageCluster<D> {
         Ok(())
     }
 
-    /// Receive one gradient message from worker `xi`, reconstruct it on the
-    /// epoch's cached grid into `out`, and meter the uplink.
+    /// Receive one gradient message from worker `xi`, reconstruct it through
+    /// the replicated compressor state into `out`, and meter the uplink
+    /// (payload bits + the worker-observed saturation count).
     fn recv_gradient_into(&mut self, xi: usize, out: &mut [f64]) -> Result<()> {
         match self.links[xi].recv()? {
             Message::GradRaw { g } => {
@@ -95,16 +98,18 @@ impl<D: Duplex> MessageCluster<D> {
                 self.ledger.record_uplink(64 * self.d as u64);
                 out.copy_from_slice(&g);
             }
-            Message::GradQ { payload, bits } => {
-                let grid = self.g_grids[xi]
-                    .as_ref()
+            Message::GradQ {
+                payload,
+                bits,
+                sats,
+            } => {
+                let q = self
+                    .quant
+                    .as_mut()
                     .context("GradQ from worker but master is unquantized")?;
-                let idx = quant::unpack_indices(&payload, grid.bits())?;
-                if idx.len() != self.d {
-                    bail!("worker {xi}: quantized dim {}", idx.len());
-                }
+                q.comp.decode(&mut q.grid, xi, &payload, out)?;
                 self.ledger.record_uplink(bits);
-                quant::dequantize_into(&idx, grid, out);
+                self.ledger.saturations += sats as u64;
             }
             other => bail!("worker {xi}: expected gradient, got {other:?}"),
         }
@@ -127,7 +132,7 @@ impl MessageCluster<TcpDuplex> {
             let (stream, _) = listener.accept().context("accept")?;
             links.push(TcpDuplex::new(stream)?);
         }
-        Ok(Self::new(links, d, quant, root))
+        Self::new(links, d, quant, root)
     }
 }
 
@@ -170,19 +175,11 @@ impl<D: Duplex> Cluster for MessageCluster<D> {
     }
 
     fn commit_epoch(&mut self, w_tilde: &[f64], node_g: &[Vec<f64>], gnorm: f64) -> Result<()> {
-        self.gnorm = gnorm.max(1e-300);
-        if let Some(q) = &self.quant {
-            if q.policy.is_adaptive() {
-                self.w_center.copy_from_slice(w_tilde);
-                for (c, g) in self.g_centers.iter_mut().zip(node_g) {
-                    c.copy_from_slice(g);
-                }
-                // centers (and possibly radii) moved: every cached grid is stale
-                self.w_grid = None;
-                for g in self.g_grids.iter_mut() {
-                    *g = None;
-                }
-            }
+        if let Some(q) = self.quant.as_mut() {
+            // the exact node gradients were just shared on the raw uplink:
+            // commit them (and w̃_k, ‖g̃_k‖) to the replicated grid state —
+            // every worker performs the identical commit on EpochCommit
+            q.commit_epoch(w_tilde, node_g, gnorm);
         }
         self.fan_out(&Message::EpochCommit { gnorm })?;
         self.collect_acks()
@@ -197,33 +194,20 @@ impl<D: Duplex> Cluster for MessageCluster<D> {
         g_cur_rx: &mut [f64],
     ) -> Result<()> {
         self.links[xi].send(Message::InnerRequest)?;
-        if let Some(q) = &self.quant {
-            if self.g_grids[xi].is_none() {
-                self.g_grids[xi] =
-                    Some(q.policy.g_grid(&self.g_centers[xi], self.gnorm, q.bits)?);
-            }
-        }
-        // uplink 1: quantized (or raw) snapshot gradient
+        // uplink 1: compressed (or raw) snapshot gradient
         self.recv_gradient_into(xi, g_snap_rx)?;
         // uplink 2: current-iterate gradient
         self.recv_gradient_into(xi, g_cur_rx)
     }
 
     fn broadcast_params(&mut self, u: &[f64], w_out: &mut [f64]) -> Result<()> {
-        if self.quant.is_some() {
-            if self.w_grid.is_none() {
-                let q = self.quant.as_ref().unwrap();
-                self.w_grid = Some(q.policy.w_grid(&self.w_center, self.gnorm, q.bits)?);
-            }
-            let grid = self.w_grid.as_ref().unwrap();
-            let (idx, stats) = quant::quantize_urq(u, grid, &mut self.quant_rng);
-            let payload = quant::pack_indices(&idx, grid.bits())?;
-            self.ledger.record_downlink(payload.bits); // broadcast: metered once
-            self.ledger.saturations += stats.saturated as u64;
-            quant::dequantize_into(&idx, grid, w_out);
+        if let Some(q) = self.quant.as_mut() {
+            let e = q.grid.encode_w(u, &mut self.quant_rng, w_out)?;
+            self.ledger.record_downlink(e.payload.bits); // broadcast: metered once
+            self.ledger.saturations += e.sats as u64;
             let msg = Message::ParamsQ {
-                payload: payload.bytes,
-                bits: payload.bits,
+                payload: e.payload.bytes,
+                bits: e.payload.bits,
             };
             self.fan_out(&msg)
         } else {

@@ -32,10 +32,15 @@
 //! **Metering convention** (matches §4.1's accounting): each worker's uplink
 //! message is metered individually; a parameter broadcast is metered **once**
 //! per inner iteration (broadcast channel); the final gradient collection
-//! after the last epoch is metered like any other. Uplink URQ *saturation*
-//! events are observable only at the quantizing end, so a message-passing
-//! master's ledger counts downlink saturations only, while the in-process
-//! backend (which owns both ends) counts both.
+//! after the last epoch is metered like any other. URQ *saturation* events
+//! are observable only at the quantizing end, so workers report their uplink
+//! events on each `GradQ` and the master adds them to its ledger — every
+//! backend therefore reports the same both-ends saturation total.
+//!
+//! **Quantization state** lives in one place: the
+//! [`crate::quant::ReplicatedGrid`] state machine plus a pluggable
+//! [`crate::quant::Compressor`] (`--compressor urq|diana`), held identically
+//! by the in-process channel, the message-passing master, and every worker.
 
 pub mod in_process;
 pub mod message;
@@ -81,9 +86,10 @@ pub trait Cluster {
     fn revert_epoch(&mut self) -> Result<()>;
 
     /// Snapshot accepted: commit replicated state and re-center this epoch's
-    /// grids — `R_{w,k}` at `w̃_k`, each `R_{g_ξ,k}` at that worker's
-    /// just-shared node gradient (adaptive policy; the fixed policy keeps its
-    /// initial centers for the whole run).
+    /// grids — `R_{w,k}` at `w̃_k` and, when the active compressor re-centers
+    /// on snapshots (URQ), each `R_{g_ξ,k}` at that worker's just-shared node
+    /// gradient (adaptive policy; the fixed policy keeps its initial centers,
+    /// and DIANA keeps its difference grid pinned at the origin).
     fn commit_epoch(&mut self, w_tilde: &[f64], node_g: &[Vec<f64>], gnorm: f64) -> Result<()>;
 
     /// Inner-loop turn for worker ξ: uplink `q(g_ξ(w̃_k))` (b_g bits) and

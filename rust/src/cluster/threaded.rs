@@ -64,7 +64,7 @@ impl ThreadedCluster {
             }));
         }
         Ok(Self {
-            inner: MessageCluster::new(links, train.d, quant, root),
+            inner: MessageCluster::new(links, train.d, quant, root)?,
             handles,
         })
     }

@@ -9,6 +9,8 @@ pub use toml::{parse, TomlValue};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 
+use crate::quant::CompressorKind;
+
 /// Which [`crate::cluster`] backend a run uses. All three produce
 /// bit-identical traces at a fixed seed.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -57,6 +59,8 @@ pub struct TrainConfig {
     pub fixed_radius: f64,
     /// Adaptive-grid slack multiplier.
     pub grid_slack: f64,
+    /// Uplink gradient-compression scheme for quantized algorithms.
+    pub compressor: CompressorKind,
     /// RNG seed for everything.
     pub seed: u64,
     /// Dataset: "power" | "mnist" | path to a file.
@@ -81,6 +85,7 @@ impl Default for TrainConfig {
             lambda: 0.1,
             fixed_radius: 4.0,
             grid_slack: 1.0,
+            compressor: CompressorKind::Urq,
             seed: 42,
             dataset: "power".into(),
             n_samples: 20_000,
@@ -107,6 +112,7 @@ impl TrainConfig {
                 "lambda" => cfg.lambda = v.as_f64().context("lambda")?,
                 "fixed_radius" => cfg.fixed_radius = v.as_f64().context("fixed_radius")?,
                 "grid_slack" => cfg.grid_slack = v.as_f64().context("grid_slack")?,
+                "compressor" => cfg.compressor = v.as_str().context("compressor")?.parse()?,
                 "seed" => cfg.seed = v.as_usize().context("seed")? as u64,
                 "dataset" => cfg.dataset = v.as_str().context("dataset")?.to_string(),
                 "n_samples" => cfg.n_samples = v.as_usize().context("n_samples")?,
@@ -157,6 +163,7 @@ mod tests {
             step_size = 0.05
             bits_per_coord = 7
             backend = "xla"
+            compressor = "diana"
             "#,
         )
         .unwrap();
@@ -166,6 +173,7 @@ mod tests {
         assert_eq!(cfg.step_size, 0.05);
         assert_eq!(cfg.bits_per_coord, 7);
         assert_eq!(cfg.backend, Backend::Xla);
+        assert_eq!(cfg.compressor, CompressorKind::Diana);
         assert_eq!(cfg.epoch_len, 8); // default survives
     }
 

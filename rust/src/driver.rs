@@ -32,9 +32,35 @@ pub struct RunReport {
     pub w: Vec<f64>,
     /// URQ saturation events observed on the run's ledger (the adaptive-grid
     /// claim is that this stays ≈ 0; a too-narrow fixed grid drives it up).
-    /// On the in-process backend this counts both link ends; on the
-    /// message-passing backends it counts the master side (downlink).
+    /// Uniform across backends: workers report their encode-side (uplink)
+    /// events on each `GradQ`, so message-passing ledgers count both ends,
+    /// exactly like the in-process backend.
     pub saturations: u64,
+}
+
+/// Build the grid policy from the problem geometry + run parameters — the
+/// ONE constructor the driver and `qmsvrg worker` share. The Config
+/// handshake compares exact-bits policy fingerprints across processes, so
+/// this logic must not be duplicated: a drifted second copy would make
+/// master/worker fingerprints mismatch on identical CLI parameters.
+pub fn grid_policy_for(
+    prob: &ShardedObjective,
+    adaptive: bool,
+    step: f64,
+    epoch_len: usize,
+    slack: f64,
+    fixed_radius: f64,
+) -> GridPolicy {
+    if adaptive {
+        let mut pol =
+            AdaptivePolicy::practical(prob.mu(), prob.l_smooth(), prob.dim(), step, epoch_len);
+        pol.slack *= slack;
+        GridPolicy::Adaptive(pol)
+    } else {
+        GridPolicy::Fixed {
+            radius: fixed_radius,
+        }
+    }
 }
 
 /// Build the quantization options for `kind` from the config + geometry.
@@ -42,25 +68,18 @@ pub fn quant_opts_for(kind: SolverKind, cfg: &TrainConfig, prob: &ShardedObjecti
     if !kind.is_quantized() {
         return None;
     }
-    let policy = if kind.is_adaptive() {
-        let mut pol = AdaptivePolicy::practical(
-            prob.mu(),
-            prob.l_smooth(),
-            prob.dim(),
-            cfg.step_size,
-            cfg.epoch_len,
-        );
-        pol.slack *= cfg.grid_slack;
-        GridPolicy::Adaptive(pol)
-    } else {
-        GridPolicy::Fixed {
-            radius: cfg.fixed_radius,
-        }
-    };
     Some(QuantOpts {
         bits: cfg.bits_per_coord,
-        policy,
+        policy: grid_policy_for(
+            prob,
+            kind.is_adaptive(),
+            cfg.step_size,
+            cfg.epoch_len,
+            cfg.grid_slack,
+            cfg.fixed_radius,
+        ),
         plus: kind.is_plus(),
+        compressor: cfg.compressor,
     })
 }
 
@@ -296,6 +315,28 @@ mod tests {
             assert_eq!(a.bits, b.bits);
         }
         assert_eq!(native.w, threaded.w);
+    }
+
+    #[test]
+    fn diana_compressor_threaded_bitwise_matches_native() {
+        // the Compressor seam is a cluster property: selecting DIANA via the
+        // config must flow through every backend and keep them bit-identical
+        let ds = ds();
+        let mut c = cfg("qm-svrg-a+", 12);
+        c.compressor = crate::quant::CompressorKind::Diana;
+        let native = train(&c, &ds).unwrap();
+        let first = native.trace.points[0].loss;
+        let last = native.trace.final_loss();
+        assert!(last < first, "DIANA did not descend: {first} -> {last}");
+        c.backend = Backend::Threaded;
+        let threaded = train(&c, &ds).unwrap();
+        for (a, b) in native.trace.points.iter().zip(&threaded.trace.points) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            assert_eq!(a.grad_norm.to_bits(), b.grad_norm.to_bits());
+            assert_eq!(a.bits, b.bits);
+        }
+        assert_eq!(native.w, threaded.w);
+        assert_eq!(native.saturations, threaded.saturations);
     }
 
     #[test]

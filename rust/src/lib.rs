@@ -60,6 +60,6 @@ pub mod prelude {
     pub use crate::data::Dataset;
     pub use crate::metrics::{RunTrace, TracePoint};
     pub use crate::objective::{LogisticRidge, Objective};
-    pub use crate::quant::{Grid, GridPolicy};
+    pub use crate::quant::{CompressorKind, Grid, GridPolicy};
     pub use crate::rng::Xoshiro256pp;
 }

@@ -72,6 +72,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     args.reject_unknown(&[
         "algorithm", "dataset", "samples", "workers", "epoch-len", "iters", "step", "bits",
         "lambda", "seed", "backend", "out", "digit", "fixed-radius", "slack", "config",
+        "compressor",
     ])?;
     // start from a TOML config file when given, then apply CLI overrides
     let base = match args.get("config") {
@@ -91,6 +92,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         lambda: args.get_f64("lambda", base.lambda)?,
         fixed_radius: args.get_f64("fixed-radius", base.fixed_radius)?,
         grid_slack: args.get_f64("slack", base.grid_slack)?,
+        compressor: match args.get("compressor") {
+            Some(c) => c.parse()?,
+            None => base.compressor,
+        },
         seed: args.get_u64("seed", base.seed)?,
         dataset: args.get_or("dataset", &base.dataset),
         n_samples: args.get_usize("samples", base.n_samples)?,
@@ -110,7 +115,8 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
 
     eprintln!(
-        "# {} on {} (n={}, d={}, N={} workers, T={}, K={}, α={}, b/d={}, backend={:?})",
+        "# {} on {} (n={}, d={}, N={} workers, T={}, K={}, α={}, b/d={}, \
+         compressor={}, backend={:?})",
         cfg.algorithm,
         cfg.dataset,
         train.n,
@@ -120,6 +126,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         cfg.outer_iters,
         cfg.step_size,
         cfg.bits_per_coord,
+        cfg.compressor.name(),
         cfg.backend
     );
     let t0 = std::time::Instant::now();
@@ -309,7 +316,8 @@ fn print_convergence(title: &str, traces: &[qmsvrg::metrics::RunTrace]) {
 fn cmd_worker(args: &Args) -> Result<()> {
     args.reject_unknown(&[
         "connect", "dataset", "samples", "shard", "workers", "lambda", "bits", "seed",
-        "adaptive", "backend",
+        "adaptive", "backend", "compressor", "plus", "step", "epoch-len", "slack",
+        "fixed-radius",
     ])?;
     let addr = args.get("connect").context("--connect HOST:PORT required")?;
     let n_samples = args.get_usize("samples", 20_000)?;
@@ -334,23 +342,26 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let quant = match args.get("bits") {
         Some(b) => {
             let bits: u8 = b.parse()?;
-            let policy = if args.get("adaptive").is_some() {
-                let prob =
-                    qmsvrg::algorithms::ShardedObjective::new(&train, n_workers, lambda);
-                qmsvrg::quant::GridPolicy::Adaptive(qmsvrg::quant::AdaptivePolicy::practical(
-                    prob.mu(),
-                    prob.l_smooth(),
-                    prob.dim(),
-                    0.2,
-                    8,
-                ))
-            } else {
-                qmsvrg::quant::GridPolicy::Fixed { radius: 4.0 }
-            };
+            // the policy parameters feed the Config handshake's exact-bits
+            // fingerprint, so every one the master can set is a flag here
+            // (defaults mirror TrainConfig's) and the construction is the
+            // driver's own — never a second copy that could drift
+            let prob = qmsvrg::algorithms::ShardedObjective::new(&train, n_workers, lambda);
+            let policy = qmsvrg::driver::grid_policy_for(
+                &prob,
+                args.get("adaptive").is_some(),
+                args.get_f64("step", 0.2)?,
+                args.get_usize("epoch-len", 8)?,
+                args.get_f64("slack", 1.0)?,
+                args.get_f64("fixed-radius", 4.0)?,
+            );
             Some(qmsvrg::worker::WorkerQuant {
                 bits,
                 policy,
-                plus: true,
+                // every field below must mirror the master's config — the
+                // Config handshake refuses the link otherwise
+                plus: args.get_or("plus", "true").parse()?,
+                compressor: args.get_or("compressor", "urq").parse()?,
             })
         }
         None => None,

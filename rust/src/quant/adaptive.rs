@@ -158,6 +158,44 @@ impl GridPolicy {
     pub fn is_adaptive(&self) -> bool {
         matches!(self, GridPolicy::Adaptive(_))
     }
+
+    /// Stable FNV-1a fingerprint over the exact parameter bits, carried in
+    /// the [`crate::transport::Message::Config`] handshake. Both link ends
+    /// must build lattices from *identical* parameters (radius, μ, L, slack,
+    /// …) or they decode each other's indices on different grids, so the
+    /// comparison is exact-bits, not approximate.
+    pub fn fingerprint(&self) -> u64 {
+        const OFFSET: u64 = 0xcbf29ce484222325;
+        const PRIME: u64 = 0x100000001b3;
+        let mut h = OFFSET;
+        let mut mix = |x: u64| {
+            h ^= x;
+            h = h.wrapping_mul(PRIME);
+        };
+        match self {
+            GridPolicy::Fixed { radius } => {
+                mix(1);
+                mix(radius.to_bits());
+            }
+            GridPolicy::Adaptive(p) => {
+                mix(2);
+                mix(p.mu.to_bits());
+                mix(p.l_smooth.to_bits());
+                mix(p.dim as u64);
+                match p.mode {
+                    RadiusMode::Theoretical => mix(3),
+                    RadiusMode::Practical { alpha, epoch_len } => {
+                        mix(4);
+                        mix(alpha.to_bits());
+                        mix(epoch_len as u64);
+                    }
+                }
+                mix(p.slack.to_bits());
+                mix(p.min_radius.to_bits());
+            }
+        }
+        h
+    }
 }
 
 #[cfg(test)]
@@ -225,6 +263,29 @@ mod tests {
         assert!((th.r_g(2.0) / th.r_w(2.0) - 7.0).abs() < 1e-12);
         let pr = AdaptivePolicy::practical(0.5, 7.0, 16, 0.1, 10);
         assert!((pr.r_g(2.0) / pr.r_w(2.0) - 7.0 / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fingerprint_separates_parameter_mismatches() {
+        // equal parameters -> equal fingerprint (what the handshake accepts)
+        let a = GridPolicy::Fixed { radius: 4.0 };
+        assert_eq!(a.fingerprint(), GridPolicy::Fixed { radius: 4.0 }.fingerprint());
+        // every parameter the lattice depends on must move the fingerprint
+        assert_ne!(a.fingerprint(), GridPolicy::Fixed { radius: 2.0 }.fingerprint());
+        let base = AdaptivePolicy::practical(0.2, 2.5, 9, 0.2, 8);
+        let fp = |p: &AdaptivePolicy| GridPolicy::Adaptive(p.clone()).fingerprint();
+        assert_eq!(fp(&base), fp(&base.clone()));
+        assert_ne!(a.fingerprint(), fp(&base));
+        let mut m = base.clone();
+        m.slack = 6.0;
+        assert_ne!(fp(&base), fp(&m));
+        let mut m = base.clone();
+        m.mu = 0.3;
+        assert_ne!(fp(&base), fp(&m));
+        assert_ne!(
+            fp(&base),
+            fp(&AdaptivePolicy::theoretical(0.2, 2.5))
+        );
     }
 
     #[test]

@@ -1,0 +1,395 @@
+//! The pluggable gradient-compression seam.
+//!
+//! A [`Compressor`] defines how a gradient vector crosses the uplink: how it
+//! is encoded onto the epoch's [`ReplicatedGrid`] state, how the receiving
+//! end reconstructs it, and what the message costs on the ledger. The
+//! parameter (downlink) channel is URQ-on-`R_{w,k}` for every scheme and
+//! lives on [`ReplicatedGrid`] directly.
+//!
+//! Both ends of a link construct their own compressor of the same
+//! [`CompressorKind`] and drive it with the same message stream, so any
+//! internal compressor state (DIANA's error memory) is *replicated state*
+//! exactly like the grid centers: advanced identically by `encode` on the
+//! sending end and `decode` on the receiving end. The in-process backend
+//! holds a single replica standing in for both ends and therefore calls
+//! only `encode` (which also yields the decoder's reconstruction).
+//!
+//! Two schemes ship:
+//!
+//! * [`UrqCompressor`] — the paper's scheme: URQ on `R_{g_ξ,k}`, re-centered
+//!   each epoch at the link's just-shared snapshot gradient (adaptive
+//!   policy) or pinned at the initial center (fixed policy). Stateless.
+//! * [`DianaCompressor`] — DIANA-style variance-reduced quantization
+//!   (Mishchenko et al., 2019; Horváth et al., arXiv:1904.05115): each link
+//!   keeps an error-memory term `h_i`, the wire carries `q(g_i − h_i)` on a
+//!   grid pinned at the origin, the receiver reconstructs `h_i + q(g_i −
+//!   h_i)`, and both ends advance `h_i ← h_i + α·q(g_i − h_i)`. As `g_i`
+//!   stabilises, the compressed difference — and with it the quantization
+//!   error — shrinks toward zero, which is the "variance-reduced" part.
+//!
+//! Adding a third scheme (e.g. Wangni-style sparsification, arXiv:1710.09854)
+//! means: implement `Compressor`, add a [`CompressorKind`] arm (+ `FromStr`
+//! spelling), and extend the compressor × backend matrix in
+//! `rust/tests/distributed.rs`. Nothing in `run_svrg`, the `Cluster`
+//! backends, or the wire protocol changes — see EXPERIMENTS.md.
+
+use anyhow::{bail, Result};
+
+use super::replicated::{Encoded, ReplicatedGrid};
+use crate::rng::Xoshiro256pp;
+
+/// Which gradient-compression scheme a run uses (config/CLI `--compressor`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CompressorKind {
+    /// URQ on per-epoch re-centered gradient grids (the paper's scheme).
+    #[default]
+    Urq,
+    /// DIANA-style compressed differences with per-link error memory.
+    Diana,
+}
+
+impl CompressorKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CompressorKind::Urq => "urq",
+            CompressorKind::Diana => "diana",
+        }
+    }
+
+    /// Stable id carried in the [`crate::transport::Message::Config`]
+    /// handshake (0 is reserved for "unquantized").
+    pub fn wire_id(&self) -> u8 {
+        match self {
+            CompressorKind::Urq => 1,
+            CompressorKind::Diana => 2,
+        }
+    }
+}
+
+impl std::str::FromStr for CompressorKind {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "urq" => Ok(CompressorKind::Urq),
+            "diana" => Ok(CompressorKind::Diana),
+            other => bail!("unknown compressor {other:?} (urq|diana)"),
+        }
+    }
+}
+
+/// One gradient-compression scheme over the replicated grid state.
+pub trait Compressor: Send {
+    /// Whether [`ReplicatedGrid::commit_epoch`] should re-center the
+    /// gradient grids on the just-shared node gradients (URQ), or keep them
+    /// pinned (DIANA's difference grid stays at the origin).
+    fn recenters_g(&self) -> bool;
+
+    /// Encode `g` for `link`: quantize on the link's grid (saturations are
+    /// counted on `grids`), bit-pack the wire payload, write the
+    /// reconstruction every decoder will produce into `out`, and advance any
+    /// compressor state exactly as [`Compressor::decode`] will on the far
+    /// end.
+    fn encode(
+        &mut self,
+        grids: &mut ReplicatedGrid,
+        link: usize,
+        g: &[f64],
+        rng: &mut Xoshiro256pp,
+        out: &mut [f64],
+    ) -> Result<Encoded>;
+
+    /// Decode a wire payload from `link` into `out`, advancing compressor
+    /// state identically to the encoding end's [`Compressor::encode`].
+    fn decode(
+        &mut self,
+        grids: &mut ReplicatedGrid,
+        link: usize,
+        payload: &[u8],
+        out: &mut [f64],
+    ) -> Result<()>;
+}
+
+/// Build the compressor for `kind` (`d` coordinates, `n_links` links — N on
+/// the master, 1 on a worker).
+pub fn make_compressor(kind: CompressorKind, d: usize, n_links: usize) -> Box<dyn Compressor> {
+    match kind {
+        CompressorKind::Urq => Box::new(UrqCompressor),
+        CompressorKind::Diana => Box::new(DianaCompressor::new(d, n_links)),
+    }
+}
+
+/// One link end's full replicated quantization state: the grid state
+/// machine plus the uplink compression scheme, constructed together so the
+/// in-process channel, the message-passing master, and every worker build
+/// the pair identically (master: `n_links` = N, worker: 1).
+pub struct QuantState {
+    pub grid: ReplicatedGrid,
+    pub comp: Box<dyn Compressor>,
+}
+
+impl QuantState {
+    pub fn new(
+        policy: crate::quant::GridPolicy,
+        bits: u8,
+        kind: CompressorKind,
+        d: usize,
+        n_links: usize,
+    ) -> Self {
+        Self {
+            grid: ReplicatedGrid::new(policy, bits, d, n_links),
+            comp: make_compressor(kind, d, n_links),
+        }
+    }
+
+    /// Epoch boundary with the compressor's recenter policy applied: the
+    /// gradient grids commit to the just-shared `node_g` only for schemes
+    /// that re-center on snapshots (URQ); DIANA keeps its difference grid
+    /// pinned. Every link end performs this identical commit.
+    pub fn commit_epoch(&mut self, w_tilde: &[f64], node_g: &[Vec<f64>], gnorm: f64) {
+        let node_g = self.comp.recenters_g().then_some(node_g);
+        self.grid.commit_epoch(w_tilde, node_g, gnorm);
+    }
+}
+
+/// The paper's scheme: URQ straight onto the (re-centered) gradient grid.
+pub struct UrqCompressor;
+
+impl Compressor for UrqCompressor {
+    fn recenters_g(&self) -> bool {
+        true
+    }
+
+    fn encode(
+        &mut self,
+        grids: &mut ReplicatedGrid,
+        link: usize,
+        g: &[f64],
+        rng: &mut Xoshiro256pp,
+        out: &mut [f64],
+    ) -> Result<Encoded> {
+        grids.encode_g(link, g, rng, out)
+    }
+
+    fn decode(
+        &mut self,
+        grids: &mut ReplicatedGrid,
+        link: usize,
+        payload: &[u8],
+        out: &mut [f64],
+    ) -> Result<()> {
+        let idx = grids.unpack_g(link, payload)?;
+        grids.dequantize_g(link, &idx, out)
+    }
+}
+
+/// DIANA-style variance-reduced quantization (see module docs).
+pub struct DianaCompressor {
+    /// Per-link error memory `h_i` — replicated state: both ends advance it
+    /// from the same shared `q(g_i − h_i)`, so it never travels on the wire.
+    h: Vec<Vec<f64>>,
+    /// Memory step `α` on `h_i ← h_i + α·q(g_i − h_i)`. With URQ's bounded
+    /// absolute error, `α = 1` contracts `‖g_i − h_i‖` to the lattice scale
+    /// in one exchange and keeps `h_i` equal to the last reconstruction.
+    alpha: f64,
+    /// Scratch for the difference `g − h` (no per-send alloc).
+    delta: Vec<f64>,
+    /// Scratch for the shared reconstruction `q(g − h)`.
+    delta_hat: Vec<f64>,
+}
+
+impl DianaCompressor {
+    pub fn new(d: usize, n_links: usize) -> Self {
+        Self {
+            h: vec![vec![0.0; d]; n_links],
+            alpha: 1.0,
+            delta: vec![0.0; d],
+            delta_hat: vec![0.0; d],
+        }
+    }
+
+    /// Shared tail of encode and decode: with `q(g − h)` in `delta_hat`,
+    /// emit `h + q(g − h)` and advance `h`. One function on purpose — both
+    /// ends must run the *identical* float sequence.
+    fn advance(&mut self, link: usize, out: &mut [f64]) {
+        let h = &mut self.h[link];
+        for ((o, hj), dj) in out.iter_mut().zip(h.iter_mut()).zip(&self.delta_hat) {
+            *o = *hj + *dj;
+            *hj += self.alpha * *dj;
+        }
+    }
+}
+
+impl Compressor for DianaCompressor {
+    fn recenters_g(&self) -> bool {
+        false // the difference grid stays pinned at the origin
+    }
+
+    fn encode(
+        &mut self,
+        grids: &mut ReplicatedGrid,
+        link: usize,
+        g: &[f64],
+        rng: &mut Xoshiro256pp,
+        out: &mut [f64],
+    ) -> Result<Encoded> {
+        for ((dj, gj), hj) in self.delta.iter_mut().zip(g).zip(&self.h[link]) {
+            *dj = *gj - *hj;
+        }
+        let e = grids.encode_g(link, &self.delta, rng, &mut self.delta_hat)?;
+        self.advance(link, out);
+        Ok(e)
+    }
+
+    fn decode(
+        &mut self,
+        grids: &mut ReplicatedGrid,
+        link: usize,
+        payload: &[u8],
+        out: &mut [f64],
+    ) -> Result<()> {
+        let idx = grids.unpack_g(link, payload)?;
+        grids.dequantize_g(link, &idx, &mut self.delta_hat)?;
+        self.advance(link, out);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{AdaptivePolicy, GridPolicy};
+    use crate::testkit::{forall, gen_vec};
+
+    fn adaptive(d: usize) -> GridPolicy {
+        GridPolicy::Adaptive(AdaptivePolicy::practical(0.2, 2.5, d, 0.2, 8))
+    }
+
+    #[test]
+    fn kind_parses_and_roundtrips() {
+        for kind in [CompressorKind::Urq, CompressorKind::Diana] {
+            let parsed: CompressorKind = kind.name().parse().unwrap();
+            assert_eq!(parsed, kind);
+        }
+        assert_eq!("DIANA".parse::<CompressorKind>().unwrap(), CompressorKind::Diana);
+        assert!("topk".parse::<CompressorKind>().is_err());
+        assert_eq!(CompressorKind::default(), CompressorKind::Urq);
+    }
+
+    #[test]
+    fn urq_encode_reconstruction_matches_decode() {
+        let d = 5;
+        let mut tx_grid = ReplicatedGrid::new(adaptive(d), 6, d, 1);
+        let mut rx_grid = ReplicatedGrid::new(adaptive(d), 6, d, 1);
+        let mut tx = make_compressor(CompressorKind::Urq, d, 1);
+        let mut rx = make_compressor(CompressorKind::Urq, d, 1);
+        let g0 = vec![0.3, -0.1, 0.2, 0.0, -0.25];
+        tx_grid.commit_epoch(&[0.0; 5], Some(std::slice::from_ref(&g0)), 1.0);
+        rx_grid.commit_epoch(&[0.0; 5], Some(std::slice::from_ref(&g0)), 1.0);
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        let mut a = vec![0.0; d];
+        let mut b = vec![0.0; d];
+        let e = tx.encode(&mut tx_grid, 0, &[0.31, -0.08, 0.2, 0.01, -0.3], &mut rng, &mut a).unwrap();
+        rx.decode(&mut rx_grid, 0, &e.payload.bytes, &mut b).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(e.payload.bits, 6 * 5);
+    }
+
+    #[test]
+    fn diana_memory_contracts_the_difference() {
+        // one exchange pulls the error memory onto the target within a
+        // lattice spacing, so the *next* encoded difference is tiny compared
+        // to the gradient itself — the variance-reduction mechanism
+        let d = 4;
+        let mut grids = ReplicatedGrid::new(adaptive(d), 8, d, 1);
+        grids.commit_epoch(&[0.0; 4], None, 1.0);
+        let mut comp = DianaCompressor::new(d, 1);
+        let g = vec![0.21, -0.4, 0.13, 0.05];
+        let mut rng = Xoshiro256pp::seed_from_u64(11);
+        let mut out = vec![0.0; d];
+        // adaptive(4): r_g = (L/√d)·slack·αT‖g̃‖/√d = (2.5/2)·2·0.2·8/2 = 2.0,
+        // so the 8-bit spacing is 4/255 ≈ 0.0157
+        let spacing = 4.0 / 255.0;
+        comp.encode(&mut grids, 0, &g, &mut rng, &mut out).unwrap();
+        assert!(crate::linalg::linf_dist(&g, &out) <= spacing + 1e-12);
+        assert!(crate::linalg::linf_dist(&comp.h[0], &g) <= spacing + 1e-12);
+        // second send of the same g: still accurate, h still locked on
+        comp.encode(&mut grids, 0, &g, &mut rng, &mut out).unwrap();
+        assert!(crate::linalg::linf_dist(&g, &out) <= spacing + 1e-12);
+        assert_eq!(grids.saturations(), 0, "differences stay deep inside the grid");
+    }
+
+    #[test]
+    fn diana_is_unbiased_within_the_grid() {
+        // E[reconstruction] = g: the URQ unbiasedness survives the h shift
+        let d = 1;
+        let g = [0.2468];
+        let mut rng = Xoshiro256pp::seed_from_u64(13);
+        let n = 60_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            // fresh replicas each trial so h is fixed (= 0) and only the
+            // rounding is random
+            let mut grids = ReplicatedGrid::new(GridPolicy::Fixed { radius: 1.0 }, 2, d, 1);
+            let mut comp = DianaCompressor::new(d, 1);
+            let mut out = [0.0; 1];
+            comp.encode(&mut grids, 0, &g, &mut rng, &mut out).unwrap();
+            sum += out[0];
+        }
+        let mean = sum / n as f64;
+        assert!((mean - g[0]).abs() < 5e-3, "mean={mean}");
+    }
+
+    /// Property: a worker-side compressor replica (encode) and a master-side
+    /// replica (decode) driven by one message stream stay bit-identical —
+    /// reconstructions AND error memory — for arbitrary seeded sequences of
+    /// commits and sends, under both grid policies.
+    fn encoder_decoder_lockstep(kind: CompressorKind, fixed: bool, seed: u64) {
+        forall(40, seed, |rng| {
+            let d = 1 + rng.gen_index(5);
+            let policy = if fixed {
+                GridPolicy::Fixed { radius: 3.0 }
+            } else {
+                adaptive(d)
+            };
+            let bits = 2 + rng.gen_index(8) as u8;
+            let mut wk_grid = ReplicatedGrid::new(policy.clone(), bits, d, 1);
+            let mut ms_grid = ReplicatedGrid::new(policy, bits, d, 1);
+            let mut wk = make_compressor(kind, d, 1);
+            let mut ms = make_compressor(kind, d, 1);
+            let mut enc_rng = rng.split(0xD1A);
+            for _ in 0..1 + rng.gen_index(5) {
+                let w_tilde = gen_vec(rng, d, -2.0, 2.0);
+                let gnorm = rng.gen_uniform(0.0, 2.0);
+                let node = vec![gen_vec(rng, d, -2.0, 2.0)];
+                let recenter = wk.recenters_g().then_some(&node[..]);
+                wk_grid.commit_epoch(&w_tilde, recenter, gnorm);
+                ms_grid.commit_epoch(&w_tilde, recenter, gnorm);
+                for _ in 0..1 + rng.gen_index(4) {
+                    let g = gen_vec(rng, d, -4.0, 4.0);
+                    let mut tx = vec![0.0; d];
+                    let mut rx = vec![0.0; d];
+                    let e = wk.encode(&mut wk_grid, 0, &g, &mut enc_rng, &mut tx).unwrap();
+                    ms.decode(&mut ms_grid, 0, &e.payload.bytes, &mut rx).unwrap();
+                    assert_eq!(
+                        tx.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                        rx.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                        "reconstruction diverged"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_urq_encoder_decoder_lockstep() {
+        encoder_decoder_lockstep(CompressorKind::Urq, false, 0x01);
+        encoder_decoder_lockstep(CompressorKind::Urq, true, 0x02);
+    }
+
+    #[test]
+    fn prop_diana_encoder_decoder_lockstep() {
+        encoder_decoder_lockstep(CompressorKind::Diana, false, 0x03);
+        encoder_decoder_lockstep(CompressorKind::Diana, true, 0x04);
+    }
+}

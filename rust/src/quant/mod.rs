@@ -13,15 +13,24 @@
 //!   the closed-form `b_w + b_g` formulas.
 //! * [`adaptive`] — the QM-SVRG-A grid policy: centers track the shared
 //!   replicated state, radii shrink as `r_wk = 2‖g̃_k‖/μ`, `r_gk = 2L‖g̃_k‖/μ`.
+//! * [`replicated`] — the master↔worker grid **state machine** (centers,
+//!   recenter-or-keep, `‖g̃_k‖` clamp, per-epoch invalidation, saturation
+//!   accounting), written once and held by every link end.
+//! * [`compressor`] — the pluggable gradient-compression seam over that
+//!   state: URQ (the paper's scheme) and DIANA-style compressed differences.
 
 pub mod adaptive;
 pub mod allocation;
 pub mod codec;
+pub mod compressor;
 pub mod grid;
+pub mod replicated;
 pub mod urq;
 
 pub use adaptive::{AdaptivePolicy, GridPolicy, RadiusMode};
 pub use allocation::{allocate_bits, error_proxy};
 pub use codec::{pack_indices, unpack_indices, QuantizedPayload};
+pub use compressor::{make_compressor, Compressor, CompressorKind, QuantState};
 pub use grid::Grid;
+pub use replicated::{Encoded, ReplicatedGrid};
 pub use urq::{dequantize, dequantize_into, quantize_deterministic, quantize_urq, QuantStats};

@@ -1,0 +1,454 @@
+//! The replicated quantization-grid state machine — **the** owner of grid
+//! centers, the per-epoch recenter-or-keep policy, the `‖g̃_k‖` clamp,
+//! per-epoch grid invalidation, and saturation accounting.
+//!
+//! The paper's exact-minimizer/linear-rate guarantee holds only because the
+//! master and every worker construct *identical* lattices each epoch from
+//! replicated state (values that were themselves communicated) — no grid
+//! parameters ever travel on the wire. This struct is that state machine,
+//! written once: [`crate::algorithms::channel::QuantChannel`] (in-process),
+//! [`crate::cluster::MessageCluster`] (threaded/TCP master), and
+//! [`crate::worker::WorkerNode`] all hold a `ReplicatedGrid` instead of
+//! private copies, so the two ends of a link are the *same code* fed the same
+//! message stream. The master instantiates one with `n_links` = N (one
+//! gradient grid per worker); a worker instantiates one with `n_links` = 1
+//! (its own link). Property tests below pin that a master and a worker
+//! replica driven by one update sequence stay bit-identical under both the
+//! adaptive-recenter and fixed-keep policies.
+//!
+//! State-machine rules (unchanged from the hand-mirrored originals):
+//!
+//! * **commit** (epoch boundary, snapshot accepted): the gradient norm is
+//!   clamped to `max(‖g̃_k‖, 1e-300)`; under the *adaptive* policy `R_{w,k}`
+//!   re-centers at the just-shared snapshot `w̃_k` and — when the compressor
+//!   re-centers on snapshots — each `R_{g_i,k}` at that link's just-shared
+//!   node gradient; the *fixed* policy keeps its initial centers for the
+//!   whole run.
+//! * **invalidation**: grids are cached per epoch (§Perf: one construction
+//!   per epoch, not per send) and dropped exactly when their geometry
+//!   changed — center moved, or (adaptive) the radius-driving `‖g̃_k‖`
+//!   changed.
+//! * **saturation accounting**: URQ is unbiased only inside the hull;
+//!   out-of-grid coordinates clamp, and every encode-side clamp is counted
+//!   here (the encoding end is the only place saturation is observable).
+
+use anyhow::Result;
+
+use super::codec::{self, QuantizedPayload};
+use super::grid::Grid;
+use super::urq;
+use crate::quant::GridPolicy;
+use crate::rng::Xoshiro256pp;
+
+/// Floor for the snapshot gradient norm driving adaptive radii (keeps the
+/// lattice construction finite when the run has fully converged).
+pub const GNORM_FLOOR: f64 = 1e-300;
+
+/// One encoded (quantized + bit-packed) vector, plus the encode-side
+/// saturation count that travels with it on the ledger/wire.
+#[derive(Clone, Debug)]
+pub struct Encoded {
+    pub payload: QuantizedPayload,
+    /// URQ saturation events at the encoding end (observable only there).
+    pub sats: u32,
+}
+
+/// The shared master↔worker grid state machine (see module docs).
+pub struct ReplicatedGrid {
+    policy: GridPolicy,
+    bits: u8,
+    d: usize,
+    /// Center of `R_{w,k}`: the snapshot `w̃_k` under the adaptive policy,
+    /// the initial point under the fixed policy.
+    w_center: Vec<f64>,
+    /// Center of each link's `R_{g_i,k}` (the last *shared* gradient value).
+    g_centers: Vec<Vec<f64>>,
+    /// Clamped `‖g̃_k‖` driving the adaptive radii.
+    gnorm: f64,
+    // per-epoch caches
+    w_grid: Option<Grid>,
+    g_grids: Vec<Option<Grid>>,
+    /// Cumulative encode-side URQ saturation events on this replica.
+    saturations: u64,
+}
+
+impl ReplicatedGrid {
+    /// A fresh replica: centers at the origin, `‖g̃‖ = 1`. `n_links` is N on
+    /// the master, 1 on a worker.
+    pub fn new(policy: GridPolicy, bits: u8, d: usize, n_links: usize) -> Self {
+        assert!(n_links > 0, "need at least one link");
+        Self {
+            policy,
+            bits,
+            d,
+            w_center: vec![0.0; d],
+            g_centers: vec![vec![0.0; d]; n_links],
+            gnorm: 1.0,
+            w_grid: None,
+            g_grids: vec![None; n_links],
+            saturations: 0,
+        }
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    #[inline]
+    pub fn n_links(&self) -> usize {
+        self.g_centers.len()
+    }
+
+    #[inline]
+    pub fn bits(&self) -> u8 {
+        self.bits
+    }
+
+    #[inline]
+    pub fn policy(&self) -> &GridPolicy {
+        &self.policy
+    }
+
+    /// The clamped gradient norm currently driving the adaptive radii.
+    #[inline]
+    pub fn gnorm(&self) -> f64 {
+        self.gnorm
+    }
+
+    /// Cumulative encode-side URQ saturation events on this replica.
+    #[inline]
+    pub fn saturations(&self) -> u64 {
+        self.saturations
+    }
+
+    /// Epoch boundary: clamp `gnorm`, apply the recenter-or-keep policy, and
+    /// invalidate exactly the caches whose geometry changed.
+    ///
+    /// `node_g` carries the just-shared node gradient of each link when the
+    /// active compressor re-centers gradient grids on snapshots (URQ);
+    /// compressors with pinned gradient grids (DIANA's zero-centered
+    /// difference grid) and the per-iteration GD/SGD baselines pass `None`.
+    pub fn commit_epoch(&mut self, w_tilde: &[f64], node_g: Option<&[Vec<f64>]>, gnorm: f64) {
+        let gnorm = gnorm.max(GNORM_FLOOR);
+        if self.policy.is_adaptive() {
+            self.w_center.copy_from_slice(w_tilde);
+            self.w_grid = None;
+            if let Some(gs) = node_g {
+                debug_assert_eq!(gs.len(), self.g_centers.len());
+                for (c, g) in self.g_centers.iter_mut().zip(gs) {
+                    c.copy_from_slice(g);
+                }
+                for g in self.g_grids.iter_mut() {
+                    *g = None;
+                }
+            } else if gnorm != self.gnorm {
+                // centers keep, but the radius-driving norm moved
+                for g in self.g_grids.iter_mut() {
+                    *g = None;
+                }
+            }
+        }
+        self.gnorm = gnorm;
+        // the fixed policy keeps its initial centers and radius for the whole
+        // run: nothing to recenter, nothing to invalidate
+    }
+
+    fn ensure_w_grid(&mut self) -> Result<()> {
+        if self.w_grid.is_none() {
+            self.w_grid = Some(self.policy.w_grid(&self.w_center, self.gnorm, self.bits)?);
+        }
+        Ok(())
+    }
+
+    fn ensure_g_grid(&mut self, link: usize) -> Result<()> {
+        if self.g_grids[link].is_none() {
+            self.g_grids[link] =
+                Some(self.policy.g_grid(&self.g_centers[link], self.gnorm, self.bits)?);
+        }
+        Ok(())
+    }
+
+    /// The one quantize → bit-pack → (debug roundtrip) → reconstruct
+    /// sequence, shared by the w channel and every gradient compressor.
+    fn encode_on(
+        grid: &Grid,
+        v: &[f64],
+        rng: &mut Xoshiro256pp,
+        out: &mut [f64],
+    ) -> Result<Encoded> {
+        let (idx, stats) = urq::quantize_urq(v, grid, rng);
+        let payload = codec::pack_indices(&idx, grid.bits())?;
+        #[cfg(debug_assertions)]
+        {
+            let rx = codec::unpack_indices(&payload.bytes, grid.bits())?;
+            debug_assert_eq!(rx, idx, "codec roundtrip");
+        }
+        urq::dequantize_into(&idx, grid, out);
+        Ok(Encoded {
+            payload,
+            sats: stats.saturated,
+        })
+    }
+
+    // ---- downlink (parameter) channel: URQ on `R_{w,k}` for every
+    // ---- compressor; the uplink scheme is the Compressor's business.
+
+    /// Encode `u` on `R_{w,k}`: quantize (counting saturations), bit-pack,
+    /// and write the reconstruction every decoder will produce into `out`.
+    pub fn encode_w(
+        &mut self,
+        u: &[f64],
+        rng: &mut Xoshiro256pp,
+        out: &mut [f64],
+    ) -> Result<Encoded> {
+        self.ensure_w_grid()?;
+        let e = Self::encode_on(self.w_grid.as_ref().unwrap(), u, rng, out)?;
+        self.saturations += e.sats as u64;
+        Ok(e)
+    }
+
+    /// Decode a wire payload on `R_{w,k}` into `out` (the exact value the
+    /// encoder's `out` holds).
+    pub fn decode_w(&mut self, payload: &[u8], out: &mut [f64]) -> Result<()> {
+        self.ensure_w_grid()?;
+        let grid = self.w_grid.as_ref().unwrap();
+        let idx = codec::unpack_indices(payload, grid.bits())?;
+        urq::dequantize_into(&idx, grid, out);
+        Ok(())
+    }
+
+    // ---- gradient-grid primitives the compressors compose. All lazily
+    // ---- build the epoch's grid; the encode entry points own saturation
+    // ---- accounting.
+
+    /// Encode `v` on link `link`'s gradient grid (quantize counting
+    /// saturations, bit-pack, write the shared reconstruction into `out`).
+    pub fn encode_g(
+        &mut self,
+        link: usize,
+        v: &[f64],
+        rng: &mut Xoshiro256pp,
+        out: &mut [f64],
+    ) -> Result<Encoded> {
+        self.ensure_g_grid(link)?;
+        let e = Self::encode_on(self.g_grids[link].as_ref().unwrap(), v, rng, out)?;
+        self.saturations += e.sats as u64;
+        Ok(e)
+    }
+
+    /// URQ-quantize `v` on link `link`'s gradient grid; counts saturations.
+    pub fn quantize_g(
+        &mut self,
+        link: usize,
+        v: &[f64],
+        rng: &mut Xoshiro256pp,
+    ) -> Result<(Vec<u32>, u32)> {
+        self.ensure_g_grid(link)?;
+        let grid = self.g_grids[link].as_ref().unwrap();
+        let (idx, stats) = urq::quantize_urq(v, grid, rng);
+        self.saturations += stats.saturated as u64;
+        Ok((idx, stats.saturated))
+    }
+
+    /// Bit-pack indices with link `link`'s per-coordinate widths.
+    pub fn pack_g(&mut self, link: usize, idx: &[u32]) -> Result<QuantizedPayload> {
+        self.ensure_g_grid(link)?;
+        codec::pack_indices(idx, self.g_grids[link].as_ref().unwrap().bits())
+    }
+
+    /// Unpack a wire payload into lattice indices on link `link`'s grid.
+    pub fn unpack_g(&mut self, link: usize, payload: &[u8]) -> Result<Vec<u32>> {
+        self.ensure_g_grid(link)?;
+        codec::unpack_indices(payload, self.g_grids[link].as_ref().unwrap().bits())
+    }
+
+    /// Reconstruct lattice indices on link `link`'s grid into `out`.
+    pub fn dequantize_g(&mut self, link: usize, idx: &[u32], out: &mut [f64]) -> Result<()> {
+        self.ensure_g_grid(link)?;
+        urq::dequantize_into(idx, self.g_grids[link].as_ref().unwrap(), out);
+        Ok(())
+    }
+
+    /// Payload bits of one quantized vector on this grid (`Σ b_i` — uniform
+    /// allocation, so `bits · d`): the ledger cost both channels meter.
+    pub fn msg_bits(&self) -> u64 {
+        self.bits as u64 * self.d as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::AdaptivePolicy;
+    use crate::testkit::{forall, gen_vec};
+
+    fn adaptive() -> GridPolicy {
+        GridPolicy::Adaptive(AdaptivePolicy::practical(0.2, 2.5, 4, 0.2, 8))
+    }
+
+    #[test]
+    fn fixed_policy_keeps_initial_centers_and_radius() {
+        let mut g = ReplicatedGrid::new(GridPolicy::Fixed { radius: 2.0 }, 5, 4, 2);
+        g.commit_epoch(&[100.0; 4], Some(&vec![vec![50.0; 4]; 2]), 1e-9);
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let w = [1.9, -1.9, 0.0, 0.5];
+        let mut out = [0.0; 4];
+        let e = g.encode_w(&w, &mut rng, &mut out).unwrap();
+        assert_eq!(e.sats, 0, "fixed grid must not recenter or shrink");
+        for (a, b) in w.iter().zip(&out) {
+            assert!((a - b).abs() <= 4.0 / 31.0 + 1e-12);
+        }
+    }
+
+    #[test]
+    fn adaptive_policy_recenters_and_rescales() {
+        let mut g = ReplicatedGrid::new(adaptive(), 8, 4, 1);
+        g.commit_epoch(&[10.0; 4], Some(&vec![vec![7.0; 4]]), 0.5);
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        // values near the new centers quantize finely, no saturation
+        let mut out = [0.0; 4];
+        let e = g.encode_w(&[10.01, 9.99, 10.0, 10.02], &mut rng, &mut out).unwrap();
+        assert_eq!(e.sats, 0);
+        let (_, sats) = g.quantize_g(0, &[7.01, 6.99, 7.0, 7.02], &mut rng).unwrap();
+        assert_eq!(sats, 0);
+        // ... while origin-scale values saturate on the recentered grids
+        let (_, sats) = g.quantize_g(0, &[0.0; 4], &mut rng).unwrap();
+        assert!(sats > 0);
+        assert_eq!(g.saturations(), sats as u64);
+    }
+
+    #[test]
+    fn gnorm_clamp_keeps_grids_constructible() {
+        let mut g = ReplicatedGrid::new(adaptive(), 4, 4, 1);
+        g.commit_epoch(&[0.0; 4], None, 0.0); // fully converged: ‖g̃‖ = 0
+        assert_eq!(g.gnorm(), GNORM_FLOOR);
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let mut out = [0.0; 4];
+        // must not error: the clamp (plus the policy's radius floor) keeps
+        // the lattice positive-finite
+        g.encode_w(&[0.0; 4], &mut rng, &mut out).unwrap();
+    }
+
+    /// Satellite: the clamp/saturation path pinned at the unit level, no
+    /// driver stack involved — a fixed grid far narrower than the data must
+    /// clamp every coordinate and count every clamp.
+    #[test]
+    fn narrow_grid_saturation_counted_at_unit_level() {
+        let mut g = ReplicatedGrid::new(GridPolicy::Fixed { radius: 0.05 }, 3, 4, 2);
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let big = [5.0, -5.0, 3.0, -3.0];
+        let (idx, sats) = g.quantize_g(1, &big, &mut rng).unwrap();
+        assert_eq!(sats, 4, "all 4 out-of-hull coordinates must count");
+        assert_eq!(g.saturations(), 4);
+        // clamped to the hull edges, deterministically
+        assert_eq!(idx, vec![7, 0, 7, 0]);
+        let mut out = [0.0; 4];
+        g.dequantize_g(1, &idx, &mut out).unwrap();
+        assert_eq!(out, [0.05, -0.05, 0.05, -0.05]);
+        // the downlink channel counts on the same tally
+        let mut wout = [0.0; 4];
+        let e = g.encode_w(&big, &mut rng, &mut wout).unwrap();
+        assert_eq!(e.sats, 4);
+        assert_eq!(g.saturations(), 8);
+        // in-hull values add nothing
+        let (_, sats) = g.quantize_g(0, &[0.01, -0.02, 0.0, 0.03], &mut rng).unwrap();
+        assert_eq!(sats, 0);
+        assert_eq!(g.saturations(), 8);
+    }
+
+    #[test]
+    fn epoch_cache_rebuilds_only_when_geometry_moves() {
+        // fixed: same lattice across commits -> identical reconstructions
+        let mut g = ReplicatedGrid::new(GridPolicy::Fixed { radius: 2.0 }, 6, 3, 1);
+        let idx = vec![1u32, 33, 60];
+        let mut a = [0.0; 3];
+        g.dequantize_g(0, &idx, &mut a).unwrap();
+        g.commit_epoch(&[9.0; 3], Some(&vec![vec![9.0; 3]]), 0.123);
+        let mut b = [0.0; 3];
+        g.dequantize_g(0, &idx, &mut b).unwrap();
+        assert_eq!(a, b);
+        // adaptive: radius shrinks with gnorm even without recentering
+        let mut g = ReplicatedGrid::new(adaptive(), 6, 3, 1);
+        g.commit_epoch(&[0.0; 3], None, 1.0);
+        let mut coarse = [0.0; 3];
+        g.dequantize_g(0, &idx, &mut coarse).unwrap();
+        g.commit_epoch(&[0.0; 3], None, 0.01);
+        let mut fine = [0.0; 3];
+        g.dequantize_g(0, &idx, &mut fine).unwrap();
+        assert!(fine[2].abs() < coarse[2].abs());
+    }
+
+    /// Drive a master replica (encoder end) and a worker replica (decoder
+    /// end) with one random commit/exchange stream; every reconstruction
+    /// must match bit for bit. This is the replication guarantee the paper's
+    /// exact-minimizer claim rests on, as a property over arbitrary seeded
+    /// update sequences.
+    fn master_worker_lockstep(policy: GridPolicy, seed: u64) {
+        forall(60, seed, |rng| {
+            let d = 1 + rng.gen_index(6);
+            let bits = 1 + rng.gen_index(10) as u8;
+            let mut master = ReplicatedGrid::new(policy.clone(), bits, d, 1);
+            let mut worker = ReplicatedGrid::new(policy.clone(), bits, d, 1);
+            // the URQ rounding stream is shared state too (the worker owns
+            // the uplink stream; the master owns the downlink one) — each
+            // encoder here draws from its own stream, the decoder sees only
+            // the wire bytes
+            let mut enc_rng = rng.split(0x0e0c);
+            for _ in 0..1 + rng.gen_index(8) {
+                // epoch boundary: random snapshot, gradient, norm; randomly
+                // recenter-on-snapshot (URQ-style) or keep (DIANA-style)
+                let w_tilde = gen_vec(rng, d, -3.0, 3.0);
+                let gnorm = rng.gen_uniform(0.0, 2.0);
+                if rng.gen_bool(0.5) {
+                    let node = vec![gen_vec(rng, d, -3.0, 3.0)];
+                    master.commit_epoch(&w_tilde, Some(&node), gnorm);
+                    worker.commit_epoch(&w_tilde, Some(&node), gnorm);
+                } else {
+                    master.commit_epoch(&w_tilde, None, gnorm);
+                    worker.commit_epoch(&w_tilde, None, gnorm);
+                }
+                assert_eq!(master.gnorm().to_bits(), worker.gnorm().to_bits());
+                for _ in 0..1 + rng.gen_index(4) {
+                    // downlink: master encodes, worker decodes the wire bytes
+                    let u = gen_vec(rng, d, -6.0, 6.0); // sometimes saturates
+                    let mut tx = vec![0.0; d];
+                    let mut rx = vec![0.0; d];
+                    let e = master.encode_w(&u, &mut enc_rng, &mut tx).unwrap();
+                    worker.decode_w(&e.payload.bytes, &mut rx).unwrap();
+                    assert_eq!(
+                        tx.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                        rx.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                        "downlink reconstruction diverged"
+                    );
+                    // uplink: worker quantizes + packs, master unpacks
+                    let g = gen_vec(rng, d, -6.0, 6.0);
+                    let (idx, _) = worker.quantize_g(0, &g, &mut enc_rng).unwrap();
+                    let payload = worker.pack_g(0, &idx).unwrap();
+                    let mut g_tx = vec![0.0; d];
+                    let mut g_rx = vec![0.0; d];
+                    worker.dequantize_g(0, &idx, &mut g_tx).unwrap();
+                    let idx_rx = master.unpack_g(0, &payload.bytes).unwrap();
+                    assert_eq!(idx_rx, idx, "uplink codec roundtrip diverged");
+                    master.dequantize_g(0, &idx_rx, &mut g_rx).unwrap();
+                    assert_eq!(
+                        g_tx.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                        g_rx.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                        "uplink reconstruction diverged"
+                    );
+                    assert_eq!(payload.bits, master.msg_bits());
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn prop_master_worker_lockstep_adaptive() {
+        master_worker_lockstep(adaptive(), 0xAD);
+    }
+
+    #[test]
+    fn prop_master_worker_lockstep_fixed() {
+        master_worker_lockstep(GridPolicy::Fixed { radius: 2.5 }, 0xF1);
+    }
+}

@@ -19,12 +19,38 @@ pub use sim::{LinkModel, SimDuplex};
 
 use anyhow::{bail, Result};
 
+/// Wire-protocol version, carried in [`Message::Config`]. Bump on any
+/// layout change so mixed-version deployments fail fast with a clear error
+/// instead of mis-parsing frames. v2: `GradQ` gained the `sats` field and
+/// the `Config` handshake was introduced.
+pub const PROTO_VERSION: u16 = 2;
+
 /// Protocol messages. Quantized payloads carry packed lattice indices; the
 /// accompanying `bits` is the exact payload size `Σ b_i` (what the ledger
 /// meters — framing overhead is reported separately by the transports).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Message {
     // ---- master -> worker
+    /// Handshake, sent once on every link before any other message (workers
+    /// refuse links whose first message is anything else): the protocol
+    /// version and the master's quantization configuration (`compressor` is
+    /// the [`crate::quant::CompressorKind::wire_id`], 0 = unquantized).
+    /// Workers refuse a mismatch — the wire format of every later message
+    /// is identical across compressors/bit-widths/policies, so a
+    /// disagreement would otherwise corrupt the run silently instead of
+    /// failing here. Not metered (control).
+    Config {
+        version: u16,
+        compressor: u8,
+        bits: u8,
+        /// 1 when the inner-loop current gradient is quantized too ("+").
+        plus: u8,
+        /// Exact-bits fingerprint of the full grid policy
+        /// ([`crate::quant::GridPolicy::fingerprint`]): radius / μ / L /
+        /// slack / radius-mode — both ends must build lattices from
+        /// identical parameters, not just the same policy class.
+        policy_fp: u64,
+    },
     /// Start epoch `epoch`: compute and uplink the node gradient at the
     /// current snapshot.
     EpochBegin { epoch: u32 },
@@ -50,8 +76,12 @@ pub enum Message {
     // ---- worker -> master
     /// Exact node gradient (outer loop; 64d bits on the ledger).
     GradRaw { g: Vec<f64> },
-    /// Quantized gradient (packed URQ indices on `R_{g_ξ,k}`).
-    GradQ { payload: Vec<u8>, bits: u64 },
+    /// Quantized gradient (packed URQ indices on `R_{g_ξ,k}`, or DIANA
+    /// difference indices). `sats` is the encode-side URQ saturation count:
+    /// saturation is observable only at the quantizing end, so the worker
+    /// reports it and the master ledgers it — keeping saturation totals
+    /// identical across the in-process and message-passing backends.
+    GradQ { payload: Vec<u8>, bits: u64, sats: u32 },
     /// Loss over this worker's shard (instrumentation).
     LossValue { loss: f64 },
     /// Generic acknowledgement.
@@ -72,11 +102,26 @@ impl Message {
     const TAG_GRAD_Q: u8 = 11;
     const TAG_LOSS_VALUE: u8 = 12;
     const TAG_ACK: u8 = 13;
+    const TAG_CONFIG: u8 = 14;
 
     /// Serialize to the wire format: `tag` byte + fields in little-endian.
     pub fn encode(&self) -> Vec<u8> {
         let mut b = Vec::with_capacity(16);
         match self {
+            Message::Config {
+                version,
+                compressor,
+                bits,
+                plus,
+                policy_fp,
+            } => {
+                b.push(Self::TAG_CONFIG);
+                b.extend_from_slice(&version.to_le_bytes());
+                b.push(*compressor);
+                b.push(*bits);
+                b.push(*plus);
+                b.extend_from_slice(&policy_fp.to_le_bytes());
+            }
             Message::EpochBegin { epoch } => {
                 b.push(Self::TAG_EPOCH_BEGIN);
                 b.extend_from_slice(&epoch.to_le_bytes());
@@ -107,9 +152,14 @@ impl Message {
                 b.push(Self::TAG_GRAD_RAW);
                 encode_f64s(&mut b, g);
             }
-            Message::GradQ { payload, bits } => {
+            Message::GradQ {
+                payload,
+                bits,
+                sats,
+            } => {
                 b.push(Self::TAG_GRAD_Q);
                 b.extend_from_slice(&bits.to_le_bytes());
+                b.extend_from_slice(&sats.to_le_bytes());
                 b.extend_from_slice(&(payload.len() as u32).to_le_bytes());
                 b.extend_from_slice(payload);
             }
@@ -127,6 +177,13 @@ impl Message {
         let mut r = Reader { buf, pos: 0 };
         let tag = r.u8()?;
         let msg = match tag {
+            Self::TAG_CONFIG => Message::Config {
+                version: r.u16()?,
+                compressor: r.u8()?,
+                bits: r.u8()?,
+                plus: r.u8()?,
+                policy_fp: r.u64()?,
+            },
             Self::TAG_EPOCH_BEGIN => Message::EpochBegin { epoch: r.u32()? },
             Self::TAG_EPOCH_REVERT => Message::EpochRevert,
             Self::TAG_EPOCH_COMMIT => Message::EpochCommit { gnorm: r.f64()? },
@@ -146,10 +203,12 @@ impl Message {
             Self::TAG_GRAD_RAW => Message::GradRaw { g: r.f64s()? },
             Self::TAG_GRAD_Q => {
                 let bits = r.u64()?;
+                let sats = r.u32()?;
                 let len = r.u32()? as usize;
                 Message::GradQ {
                     payload: r.bytes(len)?.to_vec(),
                     bits,
+                    sats,
                 }
             }
             Self::TAG_LOSS_VALUE => Message::LossValue { loss: r.f64()? },
@@ -201,6 +260,10 @@ impl<'a> Reader<'a> {
         Ok(self.bytes(1)?[0])
     }
 
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.bytes(2)?.try_into().unwrap()))
+    }
+
     fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
     }
@@ -235,6 +298,13 @@ mod tests {
 
     fn all_messages() -> Vec<Message> {
         vec![
+            Message::Config {
+                version: PROTO_VERSION,
+                compressor: 2,
+                bits: 5,
+                plus: 1,
+                policy_fp: 0xDEAD_BEEF_1234_5678,
+            },
             Message::EpochBegin { epoch: 7 },
             Message::EpochRevert,
             Message::EpochCommit { gnorm: 0.125 },
@@ -255,6 +325,7 @@ mod tests {
             Message::GradQ {
                 payload: vec![],
                 bits: 0,
+                sats: 7,
             },
             Message::LossValue { loss: 0.693 },
             Message::Ack,
@@ -282,6 +353,7 @@ mod tests {
         // payload length beyond buffer
         let mut b = vec![Message::TAG_GRAD_Q];
         b.extend_from_slice(&5u64.to_le_bytes());
+        b.extend_from_slice(&0u32.to_le_bytes()); // sats
         b.extend_from_slice(&1000u32.to_le_bytes());
         assert!(Message::decode(&b).is_err());
     }
@@ -318,6 +390,7 @@ mod tests {
             let msg = Message::GradQ {
                 payload,
                 bits: rng.next_u64() % 10_000,
+                sats: (rng.next_u64() % 100) as u32,
             };
             assert_eq!(Message::decode(&msg.encode()).unwrap(), msg);
             let w: Vec<f64> = (0..rng.gen_index(20)).map(|_| rng.gen_normal()).collect();

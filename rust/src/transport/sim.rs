@@ -183,6 +183,7 @@ mod tests {
             .send(Message::GradQ {
                 payload: vec![0u8; 4],
                 bits: 27,
+                sats: 0,
             })
             .unwrap();
         let _ = master.recv().unwrap();

@@ -125,6 +125,7 @@ mod tests {
         let msg = Message::GradQ {
             payload: vec![0xDE, 0xAD, 0xBE, 0xEF],
             bits: 27,
+            sats: 2,
         };
         client.send(msg.clone()).unwrap();
         assert_eq!(client.recv().unwrap(), msg);

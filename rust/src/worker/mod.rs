@@ -1,8 +1,10 @@
 //! The worker node: owns one data shard, answers the master's protocol.
 //!
-//! Workers keep replicated state (current iterate, snapshot, grid centers)
-//! that mirrors the master's, so quantization grids are constructed
-//! identically on both ends without shipping grid parameters.
+//! Workers keep replicated state (current iterate, snapshot, quantization
+//! grids) that mirrors the master's; the grid/compressor state machine is
+//! the *same type* the master holds ([`crate::quant::QuantState`],
+//! instantiated here with one link), driven by the same message stream — so
+//! both ends construct identical lattices without shipping grid parameters.
 //!
 //! Gradient computation is pluggable via [`GradientSource`]:
 //! * [`LogisticRidge`] — pure-Rust shard (the default backend);
@@ -15,10 +17,10 @@ use anyhow::{bail, Context, Result};
 
 use crate::algorithms::channel::QuantOpts;
 use crate::objective::{LogisticRidge, Objective};
-use crate::quant::{self, Grid, GridPolicy};
+use crate::quant::{CompressorKind, GridPolicy, QuantState};
 use crate::rng::Xoshiro256pp;
 use crate::runtime::{XlaRuntime, XlaWorkerKernel};
-use crate::transport::{Duplex, Message};
+use crate::transport::{Duplex, Message, PROTO_VERSION};
 
 /// How a worker computes its shard gradients.
 ///
@@ -109,6 +111,8 @@ pub struct WorkerQuant {
     pub policy: GridPolicy,
     /// "+" variants: the current-iterate gradient is quantized too.
     pub plus: bool,
+    /// Uplink compression scheme (must match the master's).
+    pub compressor: CompressorKind,
 }
 
 impl From<&QuantOpts> for WorkerQuant {
@@ -117,6 +121,7 @@ impl From<&QuantOpts> for WorkerQuant {
             bits: q.bits,
             policy: q.policy.clone(),
             plus: q.plus,
+            compressor: q.compressor,
         }
     }
 }
@@ -153,20 +158,69 @@ impl<D: Duplex, B: GradientSource> WorkerNode<D, B> {
         let mut w_snapshot_prev = vec![0.0; d];
         let mut w_hist: Vec<Vec<f64>> = Vec::new(); // w_{k,0..T-1}
         let mut g_snapshot = vec![0.0; d]; // g_i(w̃_k), cached
-        // grid centers are *replicated state*: under the adaptive policy they
-        // track the just-shared snapshot values; under the fixed policy they
-        // stay at the initial point for the whole run (the master's
-        // QuantChannel/MessageCluster mirror exactly this rule)
-        let mut g_center = vec![0.0; d]; // shared center of R_{g_i,k}
-        let mut w_center = vec![0.0; d]; // shared center of R_{w,k}
-        let mut gnorm = 1.0f64; // ‖g̃_k‖ from EpochCommit
         let mut g_cur = vec![0.0; d];
-        // per-epoch grid cache (rebuilt at EpochCommit; §Perf)
-        let mut w_grid: Option<Grid> = None;
-        let mut g_grid: Option<Grid> = None;
+        // the replicated grid/compressor state machine — the same type the
+        // master holds, instantiated with this worker's single link; both
+        // ends advance it from the shared message stream alone
+        let mut quant: Option<QuantState> = self
+            .quant
+            .as_ref()
+            .map(|q| QuantState::new(q.policy.clone(), q.bits, q.compressor, d, 1));
+        let plus = self.quant.as_ref().map(|q| q.plus).unwrap_or(false);
+        // scratch for the encoder's reconstruction (the master's copy; this
+        // end only needs the side effect of advancing the compressor state)
+        let mut g_rx = vec![0.0; d];
+
+        // the Config handshake must be the link's first message: every later
+        // message has an identical wire shape across compressors, bit
+        // widths, and policy parameters, so a config disagreement (or a
+        // pre-handshake master binary) must fail HERE with a clear error,
+        // not decode into a silently wrong run
+        let mut configured = false;
 
         loop {
-            match self.link.recv()? {
+            let msg = self.link.recv()?;
+            if !configured && !matches!(msg, Message::Config { .. }) {
+                bail!(
+                    "expected the Config handshake as the first message, got {msg:?} \
+                     — the master predates protocol v{PROTO_VERSION}; rebuild both ends \
+                     from the same revision"
+                );
+            }
+            match msg {
+                Message::Config {
+                    version,
+                    compressor,
+                    bits,
+                    plus: mplus,
+                    policy_fp,
+                } => {
+                    if version != PROTO_VERSION {
+                        bail!(
+                            "protocol version mismatch: master v{version}, worker v{PROTO_VERSION} \
+                             — rebuild both ends from the same revision"
+                        );
+                    }
+                    let (wc, wb, wp, wfp) = match &self.quant {
+                        Some(q) => (
+                            q.compressor.wire_id(),
+                            q.bits,
+                            q.plus as u8,
+                            q.policy.fingerprint(),
+                        ),
+                        None => (0, 0, 0, 0),
+                    };
+                    if (compressor, bits, mplus, policy_fp) != (wc, wb, wp, wfp) {
+                        bail!(
+                            "quantization config mismatch: master sent (compressor={compressor}, \
+                             bits={bits}, plus={mplus}, policy_fp={policy_fp:#x}), this worker has \
+                             (compressor={wc}, bits={wb}, plus={wp}, policy_fp={wfp:#x}) — start \
+                             both ends with the same --compressor/--bits/--plus and identical grid \
+                             policy parameters (0s = unquantized)"
+                        );
+                    }
+                    configured = true;
+                }
                 Message::EpochBegin { .. } => {
                     // snapshot gradient at the (proposed) new snapshot = w_cur
                     // chosen by SnapshotChoose, already in w_snapshot.
@@ -182,61 +236,39 @@ impl<D: Duplex, B: GradientSource> WorkerNode<D, B> {
                     self.link.send(Message::Ack)?;
                 }
                 Message::EpochCommit { gnorm: gn } => {
-                    gnorm = gn.max(1e-300); // same clamp as the master side
                     w_snapshot_prev.copy_from_slice(&w_snapshot);
                     w_cur.copy_from_slice(&w_snapshot);
                     w_hist.clear();
                     w_hist.push(w_cur.clone());
-                    // rebuild this epoch's grids once
-                    if let Some(q) = &self.quant {
-                        if q.policy.is_adaptive() {
-                            // the exact g_i(w̃_k) was just shared on the raw
-                            // uplink: both ends re-center R_{g_i,k} on it,
-                            // and R_{w,k} on the snapshot
-                            g_center.copy_from_slice(&g_snapshot);
-                            w_center.copy_from_slice(&w_snapshot);
-                            g_grid = Some(q.policy.g_grid(&g_center, gnorm, q.bits)?);
-                            w_grid = Some(q.policy.w_grid(&w_center, gnorm, q.bits)?);
-                        } else {
-                            // fixed policy: same lattice every epoch
-                            if g_grid.is_none() {
-                                g_grid = Some(q.policy.g_grid(&g_center, gnorm, q.bits)?);
-                            }
-                            if w_grid.is_none() {
-                                w_grid = Some(q.policy.w_grid(&w_center, gnorm, q.bits)?);
-                            }
-                        }
+                    if let Some(q) = quant.as_mut() {
+                        // the exact g_i(w̃_k) was just shared on the raw
+                        // uplink: commit it (and w̃_k, the clamped ‖g̃_k‖) to
+                        // the replicated grid state — the identical commit
+                        // the master performs
+                        q.commit_epoch(&w_snapshot, std::slice::from_ref(&g_snapshot), gn);
                     }
                     self.link.send(Message::Ack)?;
                 }
                 Message::InnerRequest => {
                     self.backend.grad(&w_cur, &mut g_cur)?;
-                    match &self.quant {
-                        Some(q) => {
-                            // uplink 1: quantized snapshot gradient
-                            let grid = match &g_grid {
-                                Some(g) => g,
-                                None => {
-                                    g_grid =
-                                        Some(q.policy.g_grid(&g_center, gnorm, q.bits)?);
-                                    g_grid.as_ref().unwrap()
-                                }
-                            };
-                            let (idx, _) =
-                                quant::quantize_urq(&g_snapshot, grid, &mut self.rng);
-                            let payload = quant::pack_indices(&idx, grid.bits())?;
+                    match quant.as_mut() {
+                        Some(QuantState { grid, comp }) => {
+                            // uplink 1: compressed snapshot gradient
+                            let e =
+                                comp.encode(grid, 0, &g_snapshot, &mut self.rng, &mut g_rx)?;
                             self.link.send(Message::GradQ {
-                                bits: payload.bits,
-                                payload: payload.bytes,
+                                bits: e.payload.bits,
+                                payload: e.payload.bytes,
+                                sats: e.sats,
                             })?;
-                            // uplink 2: current gradient (raw or quantized)
-                            if q.plus {
-                                let (idx, _) =
-                                    quant::quantize_urq(&g_cur, grid, &mut self.rng);
-                                let payload = quant::pack_indices(&idx, grid.bits())?;
+                            // uplink 2: current gradient (raw or compressed)
+                            if plus {
+                                let e =
+                                    comp.encode(grid, 0, &g_cur, &mut self.rng, &mut g_rx)?;
                                 self.link.send(Message::GradQ {
-                                    bits: payload.bits,
-                                    payload: payload.bytes,
+                                    bits: e.payload.bits,
+                                    payload: e.payload.bytes,
+                                    sats: e.sats,
                                 })?;
                             } else {
                                 self.link.send(Message::GradRaw { g: g_cur.clone() })?;
@@ -253,19 +285,10 @@ impl<D: Duplex, B: GradientSource> WorkerNode<D, B> {
                 }
                 Message::ParamsQ { payload, .. } => {
                     // reconstruct w_{k,t} from the broadcast lattice indices
-                    let q = self
-                        .quant
-                        .as_ref()
+                    let q = quant
+                        .as_mut()
                         .context("ParamsQ received by unquantized worker")?;
-                    let grid = match &w_grid {
-                        Some(g) => g,
-                        None => {
-                            w_grid = Some(q.policy.w_grid(&w_center, gnorm, q.bits)?);
-                            w_grid.as_ref().unwrap()
-                        }
-                    };
-                    let idx = quant::unpack_indices(&payload, grid.bits())?;
-                    quant::dequantize_into(&idx, grid, &mut w_cur);
+                    q.grid.decode_w(&payload, &mut w_cur)?;
                     w_hist.push(w_cur.clone());
                 }
                 Message::ParamsRaw { w } => {
@@ -306,6 +329,17 @@ mod tests {
         LogisticRidge::new(&ds.x, &ds.y, ds.n, ds.d, 0.1)
     }
 
+    /// The unquantized handshake a `MessageCluster` would open the link with.
+    fn raw_config() -> Message {
+        Message::Config {
+            version: PROTO_VERSION,
+            compressor: 0,
+            bits: 0,
+            plus: 0,
+            policy_fp: 0,
+        }
+    }
+
     #[test]
     fn worker_answers_epoch_begin_with_exact_gradient() {
         let obj = shard();
@@ -318,6 +352,7 @@ mod tests {
             Xoshiro256pp::seed_from_u64(1),
         );
         let t = std::thread::spawn(move || node.run().unwrap());
+        master.send(raw_config()).unwrap();
         master.send(Message::EpochBegin { epoch: 0 }).unwrap();
         match master.recv().unwrap() {
             Message::GradRaw { g } => {
@@ -327,6 +362,76 @@ mod tests {
         }
         master.send(Message::Shutdown).unwrap();
         t.join().unwrap();
+    }
+
+    #[test]
+    fn worker_accepts_matching_config_and_rejects_mismatch() {
+        let wq = || WorkerQuant {
+            bits: 4,
+            policy: GridPolicy::Fixed { radius: 4.0 },
+            plus: true,
+            compressor: CompressorKind::Urq,
+        };
+        let matching = || Message::Config {
+            version: PROTO_VERSION,
+            compressor: CompressorKind::Urq.wire_id(),
+            bits: 4,
+            plus: 1,
+            policy_fp: GridPolicy::Fixed { radius: 4.0 }.fingerprint(),
+        };
+        // matching handshake: worker keeps serving
+        let (mut master, wlink) = pair();
+        let node = WorkerNode::new(shard(), wlink, Some(wq()), Xoshiro256pp::seed_from_u64(5));
+        let t = std::thread::spawn(move || node.run());
+        master.send(matching()).unwrap();
+        master.send(Message::QueryLoss).unwrap();
+        assert!(matches!(master.recv().unwrap(), Message::LossValue { .. }));
+        master.send(Message::Shutdown).unwrap();
+        t.join().unwrap().unwrap();
+        // compressor mismatch: worker refuses instead of mis-decoding later
+        let reject = |cfg: Message| {
+            let (mut master, wlink) = pair();
+            let node =
+                WorkerNode::new(shard(), wlink, Some(wq()), Xoshiro256pp::seed_from_u64(6));
+            let t = std::thread::spawn(move || node.run());
+            master.send(cfg).unwrap();
+            assert!(t.join().unwrap().is_err());
+        };
+        reject(match matching() {
+            Message::Config { version, bits, plus, policy_fp, .. } => Message::Config {
+                version,
+                compressor: CompressorKind::Diana.wire_id(),
+                bits,
+                plus,
+                policy_fp,
+            },
+            _ => unreachable!(),
+        });
+        // same policy class, different parameters: the fingerprint refuses
+        reject(match matching() {
+            Message::Config { version, compressor, bits, plus, .. } => Message::Config {
+                version,
+                compressor,
+                bits,
+                plus,
+                policy_fp: GridPolicy::Fixed { radius: 2.0 }.fingerprint(),
+            },
+            _ => unreachable!(),
+        });
+        // protocol version skew: refused with a clear error
+        let (mut master, wlink) = pair();
+        let node = WorkerNode::new(shard(), wlink, None, Xoshiro256pp::seed_from_u64(7));
+        let t = std::thread::spawn(move || node.run());
+        master
+            .send(Message::Config {
+                version: PROTO_VERSION + 1,
+                compressor: 0,
+                bits: 0,
+                plus: 0,
+                policy_fp: 0,
+            })
+            .unwrap();
+        assert!(t.join().unwrap().is_err());
     }
 
     #[test]
@@ -340,11 +445,23 @@ mod tests {
             Xoshiro256pp::seed_from_u64(2),
         );
         let t = std::thread::spawn(move || node.run());
+        master.send(raw_config()).unwrap();
         master.send(Message::EpochBegin { epoch: 0 }).unwrap();
         let _ = master.recv().unwrap();
         master.send(Message::EpochCommit { gnorm: 1.0 }).unwrap();
         let _ = master.recv().unwrap();
         master.send(Message::SnapshotChoose { zeta: 99 }).unwrap();
+        assert!(t.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn worker_requires_config_as_first_message() {
+        // a pre-handshake master (or wrong first message) must be refused
+        // with a clear error, not served
+        let (mut master, wlink) = pair();
+        let node = WorkerNode::new(shard(), wlink, None, Xoshiro256pp::seed_from_u64(8));
+        let t = std::thread::spawn(move || node.run());
+        master.send(Message::EpochBegin { epoch: 0 }).unwrap();
         assert!(t.join().unwrap().is_err());
     }
 
@@ -360,6 +477,7 @@ mod tests {
             Xoshiro256pp::seed_from_u64(3),
         );
         let t = std::thread::spawn(move || node.run().unwrap());
+        master.send(raw_config()).unwrap();
         master.send(Message::QueryLoss).unwrap();
         match master.recv().unwrap() {
             Message::LossValue { loss } => assert!((loss - expect).abs() < 1e-15),

@@ -2,8 +2,9 @@
 //! Algorithm-1 engine. The old tests asserted that two hand-mirrored
 //! implementations *behaved alike*; these assert something stronger — that
 //! the in-process, threaded, and TCP backends of the single implementation
-//! produce **bit-identical** convergence traces and bit ledgers at a fixed
-//! seed.
+//! produce **bit-identical** convergence traces, bit ledgers, and
+//! saturation totals at a fixed seed — for every gradient compressor
+//! (`{URQ, DIANA} × {InProcess, Threaded, TCP}` is the pinned matrix).
 
 use qmsvrg::algorithms::channel::QuantOpts;
 use qmsvrg::algorithms::svrg::{run_svrg, SvrgOpts};
@@ -13,7 +14,7 @@ use qmsvrg::config::TrainConfig;
 use qmsvrg::data::synthetic::power_like;
 use qmsvrg::data::Dataset;
 use qmsvrg::objective::LogisticRidge;
-use qmsvrg::quant::{AdaptivePolicy, GridPolicy};
+use qmsvrg::quant::{AdaptivePolicy, CompressorKind, GridPolicy};
 use qmsvrg::rng::Xoshiro256pp;
 use qmsvrg::transport::local::pair;
 use qmsvrg::transport::tcp::TcpDuplex;
@@ -26,6 +27,16 @@ fn dataset() -> Dataset {
 }
 
 fn quant_opts(ds: &Dataset, n_workers: usize, bits: u8, plus: bool) -> QuantOpts {
+    quant_opts_with(ds, n_workers, bits, plus, CompressorKind::Urq)
+}
+
+fn quant_opts_with(
+    ds: &Dataset,
+    n_workers: usize,
+    bits: u8,
+    plus: bool,
+    compressor: CompressorKind,
+) -> QuantOpts {
     let prob = ShardedObjective::new(ds, n_workers, 0.1);
     QuantOpts {
         bits,
@@ -37,6 +48,7 @@ fn quant_opts(ds: &Dataset, n_workers: usize, bits: u8, plus: bool) -> QuantOpts
             8,
         )),
         plus,
+        compressor,
     }
 }
 
@@ -61,6 +73,9 @@ struct RunFingerprint {
     uplink_bits: u64,
     downlink_bits: u64,
     messages: u64,
+    /// Encode-side URQ saturation totals: workers report uplink events on
+    /// each GradQ, so every backend's ledger counts both link ends.
+    saturations: u64,
 }
 
 fn run_on<C: Cluster>(
@@ -84,6 +99,7 @@ fn run_on<C: Cluster>(
         uplink_bits: ledger.uplink_bits,
         downlink_bits: ledger.downlink_bits,
         messages: ledger.messages,
+        saturations: ledger.saturations,
     }
 }
 
@@ -127,7 +143,7 @@ fn run_tcp(ds: &Dataset, n: usize, q: Option<QuantOpts>, o: &SvrgOpts, seed: u64
         let (stream, _) = listener.accept().unwrap();
         links.push(TcpDuplex::new(stream).unwrap());
     }
-    let mut cluster = MessageCluster::new(links, ds.d, q, &root);
+    let mut cluster = MessageCluster::new(links, ds.d, q, &root).unwrap();
     let fp = {
         let mut gnorm_bits = Vec::new();
         let mut bits = Vec::new();
@@ -148,6 +164,7 @@ fn run_tcp(ds: &Dataset, n: usize, q: Option<QuantOpts>, o: &SvrgOpts, seed: u64
             uplink_bits: ledger.uplink_bits,
             downlink_bits: ledger.downlink_bits,
             messages: ledger.messages,
+            saturations: ledger.saturations,
         }
     };
     for h in handles {
@@ -159,18 +176,22 @@ fn run_tcp(ds: &Dataset, n: usize, q: Option<QuantOpts>, o: &SvrgOpts, seed: u64
 }
 
 #[test]
-fn three_backends_bit_identical() {
-    // QM-SVRG-A+ at 5 bits: quantized uplink AND downlink, memory unit on —
-    // every protocol verb and every rng stream is exercised
+fn compressor_backend_matrix_bit_identical() {
+    // the pinned matrix: {URQ, DIANA} x {InProcess, Threaded, TCP} at 5
+    // bits, quantized uplink AND downlink ("+"), memory unit on — every
+    // protocol verb, every rng stream, and both compressor state machines
+    // are exercised; ledgers and saturation totals must match exactly
     let ds = dataset();
     let n = 4;
     let o = opts(12, true);
-    let q = quant_opts(&ds, n, 5, true);
-    let a = run_in_process(&ds, n, Some(q.clone()), &o, 33);
-    let b = run_threaded(&ds, n, Some(q.clone()), &o, 33);
-    let c = run_tcp(&ds, n, Some(q), &o, 33);
-    assert_eq!(a, b, "in-process vs threaded");
-    assert_eq!(a, c, "in-process vs tcp");
+    for compressor in [CompressorKind::Urq, CompressorKind::Diana] {
+        let q = quant_opts_with(&ds, n, 5, true, compressor);
+        let a = run_in_process(&ds, n, Some(q.clone()), &o, 33);
+        let b = run_threaded(&ds, n, Some(q.clone()), &o, 33);
+        let c = run_tcp(&ds, n, Some(q), &o, 33);
+        assert_eq!(a, b, "{compressor:?}: in-process vs threaded");
+        assert_eq!(a, c, "{compressor:?}: in-process vs tcp");
+    }
 }
 
 #[test]
@@ -270,12 +291,19 @@ fn worker_crash_surfaces_as_error_not_hang() {
             let _ = WorkerNode::new(obj, w, None, rng).run();
         }));
     }
-    let mut cluster = MessageCluster::new(links, ds.d, None, &root);
-    let result = run_svrg(&mut cluster, &opts(3, false), root.algo_stream(), &mut |_, _, _, _| {});
+    // the dead worker may sever its link before or after the constructor's
+    // Config handshake lands, so either the constructor or the run errors
+    let result = match MessageCluster::new(links, ds.d, None, &root) {
+        Ok(mut cluster) => {
+            let r = run_svrg(&mut cluster, &opts(3, false), root.algo_stream(), &mut |_, _, _, _| {});
+            // drop the cluster first: it holds the channel senders that keep
+            // the surviving worker blocked in recv()
+            drop(cluster);
+            r.map(|_| ())
+        }
+        Err(e) => Err(e),
+    };
     assert!(result.is_err(), "master should observe the dead worker");
-    // drop the cluster first: it holds the channel senders that keep the
-    // surviving worker blocked in recv()
-    drop(cluster);
     for h in handles {
         let _ = h.join();
     }

@@ -253,6 +253,7 @@ fn prop_message_codec_total() {
             1 => Message::GradQ {
                 payload: (0..rng.gen_index(200)).map(|_| rng.next_u64() as u8).collect(),
                 bits: rng.next_u64() % 100_000,
+                sats: (rng.next_u64() % 1000) as u32,
             },
             2 => {
                 let n = rng.gen_index(100);
