@@ -112,8 +112,14 @@ fn main() -> anyhow::Result<()> {
         compressor,
     };
     let root = Xoshiro256pp::seed_from_u64(SEED);
-    let mut cluster =
-        qmsvrg::coordinator::tcp(&listener, N_WORKERS, train.d, Some(quant), &root)?;
+    let mut cluster = qmsvrg::coordinator::tcp(
+        &listener,
+        N_WORKERS,
+        train.d,
+        Some(quant),
+        train.is_sparse(),
+        &root,
+    )?;
     eprintln!("# all {N_WORKERS} workers connected");
 
     let t0 = std::time::Instant::now();

@@ -8,7 +8,7 @@
 
 use qmsvrg::config::TrainConfig;
 use qmsvrg::data::synthetic::mnist_like;
-use qmsvrg::metrics::{f1_binary, ova_accuracy};
+use qmsvrg::metrics::{f1_dataset, ova_accuracy};
 use qmsvrg::telemetry::Table;
 
 fn main() -> anyhow::Result<()> {
@@ -46,11 +46,11 @@ fn main() -> anyhow::Result<()> {
                 ..TrainConfig::default()
             };
             let report = qmsvrg::driver::train_with_test(&cfg, &tr, &te)?;
-            f1_acc += f1_binary(&report.w, &te.x, &te.y, te.n, te.d);
+            f1_acc += f1_dataset(&report.w, &te);
             ws.push(report.w);
         }
         // label = argmax_l w^(l)·x over the 10 classifiers
-        let acc = ova_accuracy(&ws, &test.x, &test.y, test.n, test.d);
+        let acc = ova_accuracy(&ws, test.x(), &test.y, test.n, test.d);
         table.row(&[
             algo.to_string(),
             bits.to_string(),

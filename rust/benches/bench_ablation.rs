@@ -169,7 +169,7 @@ fn main() {
         use qmsvrg::quant::{allocate_bits, error_proxy};
         // per-coordinate gradient scale from a real mnist-like shard
         let ds = mnist_like(2000, 9).one_vs_all(9.0);
-        let obj = LogisticRidge::new(&ds.x, &ds.y, ds.n, ds.d, 0.1);
+        let obj = LogisticRidge::from_dataset(&ds, 0.1);
         let g = obj.grad_vec(&vec![0.0; ds.d]);
         let scales: Vec<f64> = g.iter().map(|x| x.abs().max(1e-6)).collect();
         println!("{:>6} {:>16} {:>16} {:>8}", "b/d", "uniform", "allocated", "gain");

@@ -1,7 +1,11 @@
 //! Regenerates Fig. 3: the full algorithm suite on the power dataset at
 //! b/d = 3 (panel a) and b/d = 10 (panel b); prints the per-iteration series
 //! the paper plots plus the headline checks, then times one full panel.
+//!
+//! The panel timing is the before/after gauge for hot-loop changes
+//! (EXPERIMENTS.md §Perf); results are recorded to `BENCH_fig3.json`.
 
+use std::path::Path;
 use std::time::Duration;
 
 use qmsvrg::benchkit::Bencher;
@@ -55,11 +59,11 @@ fn main() {
     // communication at matched quality: the 95% claim
     let qa_tr = fig_a.traces.iter().find(|t| t.algo == "QM-SVRG-A+").unwrap();
     let ms_tr = fig_a.traces.iter().find(|t| t.algo == "M-SVRG").unwrap();
+    let saved_pct = 100.0 * (1.0 - qa_tr.total_bits() as f64 / ms_tr.total_bits() as f64);
     println!(
-        "\ncompression at matched convergence: {} vs {} bits -> {:.1}% saved",
+        "\ncompression at matched convergence: {} vs {} bits -> {saved_pct:.1}% saved",
         qa_tr.total_bits(),
         ms_tr.total_bits(),
-        100.0 * (1.0 - qa_tr.total_bits() as f64 / ms_tr.total_bits() as f64)
     );
 
     let mut b = Bencher::new(Duration::ZERO, Duration::from_secs(20), 3);
@@ -72,4 +76,13 @@ fn main() {
         fig3::run(&small).unwrap().traces.len()
     });
     b.finish("bench_fig3");
+    let extra = [
+        ("headline_holds_at_3_bits", format!("{ok}")),
+        ("msvrg_final_loss", format!("{msvrg:.6}")),
+        ("qm_svrg_a_plus_final_loss", format!("{qa:.6}")),
+        ("compression_saved_pct", format!("{saved_pct:.1}")),
+    ];
+    if let Err(e) = b.write_json(Path::new("BENCH_fig3.json"), "bench_fig3", &extra) {
+        eprintln!("(could not write BENCH_fig3.json: {e})");
+    }
 }

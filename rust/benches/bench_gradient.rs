@@ -1,7 +1,14 @@
-//! Gradient-computation backends: native Rust vs the AOT JAX/Pallas artifact
-//! through PJRT, at the paper's two workload shapes. This is the worker's
-//! inner-loop cost — the compute half of the compute/communication tradeoff.
+//! Gradient-computation backends: native Rust (dense AND sparse CSR) vs the
+//! AOT JAX/Pallas artifact through PJRT, at the paper's workload shapes.
+//! This is the worker's inner-loop cost — the compute half of the
+//! compute/communication tradeoff.
 //!
+//! The sparse section is the acceptance gauge for the CSR objective core:
+//! full gradient on a d=4096, density-0.02 problem, CSR vs the same data
+//! densified (matched nnz). The printed speedup ratio must be ≥ 5× (the
+//! O(nnz)/O(nd) model predicts ≈ 1/density ≈ 50×).
+//!
+//! Results are recorded to `BENCH_gradient.json` in the working directory.
 //! The XLA rows need a `--features xla` build plus `make artifacts`; in the
 //! default build `XlaRuntime::load` errors and those rows print as skipped.
 
@@ -10,7 +17,7 @@ use std::time::Duration;
 
 use qmsvrg::algorithms::ShardedObjective;
 use qmsvrg::benchkit::Bencher;
-use qmsvrg::data::synthetic::{mnist_like, power_like};
+use qmsvrg::data::synthetic::{mnist_like, power_like, sparse_like};
 use qmsvrg::objective::{LogisticRidge, Objective};
 use qmsvrg::runtime::{XlaRuntime, XlaWorkerKernel};
 
@@ -20,12 +27,13 @@ fn main() {
         Duration::from_secs(1),
         100_000,
     );
-    println!("== bench_gradient: native vs XLA worker kernels ==");
+    let mut extra: Vec<(&str, String)> = Vec::new();
+    println!("== bench_gradient: native (dense + CSR) vs XLA worker kernels ==");
 
     // power-like shard (Fig. 3 geometry): 2000 × 9
     let mut ds = power_like(2000, 1);
     ds.standardize();
-    let obj = LogisticRidge::new(&ds.x, &ds.y, ds.n, ds.d, 0.1);
+    let obj = LogisticRidge::from_dataset(&ds, 0.1);
     let w: Vec<f64> = (0..9).map(|j| 0.1 * j as f64).collect();
     let mut g = vec![0.0; 9];
     b.bench("native full_grad 2000x9", || {
@@ -36,7 +44,7 @@ fn main() {
 
     // mnist-like shard (Fig. 4 geometry): 800 × 784
     let dsm = mnist_like(800, 2).one_vs_all(9.0);
-    let objm = LogisticRidge::new(&dsm.x, &dsm.y, dsm.n, dsm.d, 0.1);
+    let objm = LogisticRidge::from_dataset(&dsm, 0.1);
     let wm: Vec<f64> = (0..784).map(|j| 0.01 * (j % 7) as f64).collect();
     let mut gm = vec![0.0; 784];
     b.bench("native full_grad 800x784", || {
@@ -44,57 +52,94 @@ fn main() {
         gm[0]
     });
 
+    // sparse objective core: CSR vs densified at matched nnz. rcv1-like
+    // shape scaled to bench budget: d=4096, ~2% density (≈ 82 nnz/row).
+    println!("\n-- sparse core: CSR vs densified, 2000 x 4096 @ density 0.02 --");
+    let mut sp = sparse_like(2000, 4096, 0.02, 11);
+    sp.standardize();
+    let obj_csr = LogisticRidge::from_dataset(&sp, 0.1);
+    let dense_twin = sp.to_dense();
+    let obj_dense = LogisticRidge::from_dataset(&dense_twin, 0.1);
+    println!(
+        "   (nnz = {}, density = {:.4})",
+        sp.nnz(),
+        sp.density()
+    );
+    let ws: Vec<f64> = (0..4096).map(|j| 0.01 * ((j % 13) as f64 - 6.0)).collect();
+    let mut gs = vec![0.0; 4096];
+    let csr_ns = b
+        .bench("csr full_grad 2000x4096 d=0.02", || {
+            obj_csr.grad(&ws, &mut gs);
+            gs[0]
+        })
+        .ns_per_iter();
+    let dense_ns = b
+        .bench("densified full_grad 2000x4096", || {
+            obj_dense.grad(&ws, &mut gs);
+            gs[0]
+        })
+        .ns_per_iter();
+    let sparse_speedup = dense_ns / csr_ns;
+    println!(
+        "   -> sparse-vs-densified full-gradient speedup {sparse_speedup:.2}x \
+         (acceptance floor: 5x)"
+    );
+    extra.push(("sparse_vs_densified_fullgrad_speedup", format!("{sparse_speedup:.2}")));
+    extra.push(("sparse_workload", "2000x4096 density 0.02".to_string()));
+    let csr_loss_ns = b.bench("csr loss 2000x4096 d=0.02", || obj_csr.loss(&ws)).ns_per_iter();
+    let dense_loss_ns = b.bench("densified loss 2000x4096", || obj_dense.loss(&ws)).ns_per_iter();
+    extra.push(("sparse_vs_densified_loss_speedup", format!("{:.2}", dense_loss_ns / csr_loss_ns)));
+
     // sharded snapshot fan-out: the outer-loop collection of Algorithm 1 on
     // the in-process cluster — sequential per-shard loop vs the
     // std::thread::scope fan-out (bit-identical results; see EXPERIMENTS.md)
     println!("\n-- snapshot gradient fan-out, N=8 shards --");
-    let fanout_ratio = |b: &mut Bencher, label: &str, prob: &ShardedObjective, w: &[f64]| {
-        let n = prob.n_workers();
-        let d = prob.dim();
-        let mut outs = vec![vec![0.0; d]; n];
-        let seq_ns = b
-            .bench(&format!("{label} sequential"), || {
-                for (i, out) in outs.iter_mut().enumerate() {
-                    prob.node_grad(i, w, out);
-                }
-                outs[0][0]
-            })
-            .ns_per_iter();
-        let par_ns = b
-            .bench(&format!("{label} scoped threads"), || {
-                prob.node_grads_parallel(w, &mut outs);
-                outs[0][0]
-            })
-            .ns_per_iter();
-        println!("   -> {label}: parallel/sequential speedup {:.2}x", seq_ns / par_ns);
-    };
+    let fanout_ratio =
+        |b: &mut Bencher, label: &str, prob: &ShardedObjective, w: &[f64]| -> f64 {
+            let n = prob.n_workers();
+            let d = prob.dim();
+            let mut outs = vec![vec![0.0; d]; n];
+            let seq_ns = b
+                .bench(&format!("{label} sequential"), || {
+                    for (i, out) in outs.iter_mut().enumerate() {
+                        prob.node_grad(i, w, out);
+                    }
+                    outs[0][0]
+                })
+                .ns_per_iter();
+            let par_ns = b
+                .bench(&format!("{label} scoped threads"), || {
+                    prob.node_grads_parallel(w, &mut outs);
+                    outs[0][0]
+                })
+                .ns_per_iter();
+            let ratio = seq_ns / par_ns;
+            println!("   -> {label}: parallel/sequential speedup {ratio:.2}x");
+            ratio
+        };
     // power geometry, 8 × 10000 × 9
     let mut big = power_like(80_000, 5);
     big.standardize();
     let prob8 = ShardedObjective::new(&big, 8, 0.1);
-    fanout_ratio(&mut b, "8x10000x9 (power)", &prob8, &w);
+    let r_power = fanout_ratio(&mut b, "8x10000x9 (power)", &prob8, &w);
+    extra.push(("fanout_n8_power_speedup", format!("{r_power:.2}")));
     // mnist geometry, 8 × 800 × 784
     let big_m = mnist_like(6_400, 7).one_vs_all(9.0);
     let prob8m = ShardedObjective::new(&big_m, 8, 0.1);
-    fanout_ratio(&mut b, "8x800x784 (mnist)", &prob8m, &wm);
+    let r_mnist = fanout_ratio(&mut b, "8x800x784 (mnist)", &prob8m, &wm);
+    extra.push(("fanout_n8_mnist_speedup", format!("{r_mnist:.2}")));
 
     // XLA path (requires artifacts)
     match XlaRuntime::load(Path::new("artifacts")) {
         Ok(rt) => {
-            let mut z = vec![0.0f64; ds.n * ds.d];
-            for i in 0..ds.n {
-                z[i * ds.d..(i + 1) * ds.d].copy_from_slice(obj.margin_row(i));
-            }
+            let z = obj.margins_dense();
             let kernel = XlaWorkerKernel::new(&rt, "full_grad", &z, ds.n, ds.d, 0.1).unwrap();
             b.bench("xla full_grad 2000x9 (resident Z)", || {
                 kernel.grad(&w, &mut g).unwrap();
                 g[0]
             });
 
-            let mut zm = vec![0.0f64; dsm.n * dsm.d];
-            for i in 0..dsm.n {
-                zm[i * dsm.d..(i + 1) * dsm.d].copy_from_slice(objm.margin_row(i));
-            }
+            let zm = objm.margins_dense();
             let kernelm =
                 XlaWorkerKernel::new(&rt, "full_grad", &zm, dsm.n, dsm.d, 0.1).unwrap();
             b.bench("xla full_grad 800x784 (resident Z)", || {
@@ -105,4 +150,7 @@ fn main() {
         Err(e) => println!("(xla benches skipped: {e:#})"),
     }
     b.finish("bench_gradient");
+    if let Err(e) = b.write_json(Path::new("BENCH_gradient.json"), "bench_gradient", &extra) {
+        eprintln!("(could not write BENCH_gradient.json: {e})");
+    }
 }

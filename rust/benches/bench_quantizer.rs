@@ -1,10 +1,20 @@
 //! Microbenchmarks of the quantization hot path: URQ, codec pack/unpack,
-//! and the full channel round-trip at the paper's dimensions (d=9, d=784).
+//! the full channel round-trip, and the `ReplicatedGrid` encode entry
+//! points (allocating wire encode vs the scratch-buffered `*_local` encode
+//! the in-process backend runs) at the paper's dimensions (d=9, d=784).
+//!
+//! Results are recorded to `BENCH_quantizer.json` in the working directory;
+//! the `encode_w wire` vs `encode_w local` rows are the before/after gauge
+//! for the allocation-free hot-loop pass (EXPERIMENTS.md §Perf).
 
+use std::path::Path;
 use std::time::Duration;
 
 use qmsvrg::benchkit::Bencher;
-use qmsvrg::quant::{dequantize, pack_indices, quantize_urq, unpack_indices, Grid};
+use qmsvrg::quant::{
+    dequantize, pack_indices, quantize_urq, quantize_urq_into, unpack_indices, Grid, GridPolicy,
+    ReplicatedGrid,
+};
 use qmsvrg::rng::Xoshiro256pp;
 
 fn main() {
@@ -13,7 +23,8 @@ fn main() {
         Duration::from_millis(800),
         1_000_000,
     );
-    println!("== bench_quantizer: URQ + codec hot path ==");
+    let mut extra: Vec<(&str, String)> = Vec::new();
+    println!("== bench_quantizer: URQ + codec + grid-encode hot path ==");
 
     for (d, bits) in [(9usize, 3u8), (9, 10), (784, 7), (784, 10)] {
         let grid = Grid::uniform(vec![0.0; d], 2.0, bits).unwrap();
@@ -22,6 +33,11 @@ fn main() {
 
         b.bench(&format!("urq_quantize d={d} b/d={bits}"), || {
             quantize_urq(&w, &grid, &mut rng).0
+        });
+
+        let mut scratch = Vec::new();
+        b.bench(&format!("urq_quantize_into d={d} b/d={bits}"), || {
+            quantize_urq_into(&w, &grid, &mut rng, &mut scratch).saturated
         });
 
         let (idx, _) = quantize_urq(&w, &grid, &mut rng);
@@ -45,6 +61,30 @@ fn main() {
             let back = unpack_indices(&p.bytes, grid.bits()).unwrap();
             dequantize(&back, &grid)
         });
+
+        // grid-level encode: the wire path (owned payload) vs the local
+        // path the in-process backend runs (scratch reuse, no packing in
+        // release builds) — same values, same metering
+        let mut replica = ReplicatedGrid::new(GridPolicy::Fixed { radius: 2.0 }, bits, d, 1);
+        let mut out = vec![0.0; d];
+        let wire_ns = b
+            .bench(&format!("encode_w wire d={d} b/d={bits}"), || {
+                replica.encode_w(&w, &mut rng, &mut out).unwrap().payload.bits
+            })
+            .ns_per_iter();
+        let local_ns = b
+            .bench(&format!("encode_w local d={d} b/d={bits}"), || {
+                replica.encode_w_local(&w, &mut rng, &mut out).unwrap().bits
+            })
+            .ns_per_iter();
+        let ratio = wire_ns / local_ns;
+        println!("   -> d={d} b/d={bits}: local encode speedup {ratio:.2}x over wire encode");
+        if d == 784 && bits == 10 {
+            extra.push(("encode_local_speedup_d784_b10", format!("{ratio:.2}")));
+        }
     }
     b.finish("bench_quantizer");
+    if let Err(e) = b.write_json(Path::new("BENCH_quantizer.json"), "bench_quantizer", &extra) {
+        eprintln!("(could not write BENCH_quantizer.json: {e})");
+    }
 }

@@ -85,11 +85,13 @@ impl QuantChannel {
     }
 
     /// Downlink: quantize parameters on `R_{w,k}`; meters `b_w` payload bits.
-    /// Writes the value the workers reconstruct into `out`.
+    /// Writes the value the workers reconstruct into `out`. This channel
+    /// owns both link ends, so it uses the allocation-free `*_local` encode
+    /// (identical values and metering, no wire payload materialized).
     pub fn send_w_into(&mut self, u: &[f64], out: &mut [f64]) -> Result<()> {
-        let e = self.state.grid.encode_w(u, &mut self.w_rng, out)?;
-        self.ledger.record_downlink(e.payload.bits);
-        self.ledger.saturations += e.sats as u64;
+        let s = self.state.grid.encode_w_local(u, &mut self.w_rng, out)?;
+        self.ledger.record_downlink(s.bits);
+        self.ledger.saturations += s.sats as u64;
         Ok(())
     }
 
@@ -102,12 +104,12 @@ impl QuantChannel {
 
     /// Uplink: compress worker `i`'s gradient using worker `i`'s URQ stream;
     /// meters `b_g` payload bits. Writes the value the master reconstructs
-    /// into `out`.
+    /// into `out` (allocation-free — see [`Self::send_w_into`]).
     pub fn send_g_into(&mut self, worker: usize, g: &[f64], out: &mut [f64]) -> Result<()> {
         let QuantState { grid, comp } = &mut self.state;
-        let e = comp.encode(grid, worker, g, &mut self.g_rngs[worker], out)?;
-        self.ledger.record_uplink(e.payload.bits);
-        self.ledger.saturations += e.sats as u64;
+        let s = comp.encode_local(grid, worker, g, &mut self.g_rngs[worker], out)?;
+        self.ledger.record_uplink(s.bits);
+        self.ledger.saturations += s.sats as u64;
         Ok(())
     }
 

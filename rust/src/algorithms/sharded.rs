@@ -15,12 +15,13 @@ pub struct ShardedObjective {
 }
 
 impl ShardedObjective {
-    /// Shard `ds` contiguously over `n_workers` nodes.
+    /// Shard `ds` contiguously over `n_workers` nodes, in the dataset's own
+    /// storage (dense or CSR — `LogisticRidge::from_dataset` dispatches).
     pub fn new(ds: &Dataset, n_workers: usize, lambda: f64) -> Self {
         let shards: Vec<LogisticRidge> = ds
             .shard(n_workers)
             .into_iter()
-            .map(|s| LogisticRidge::new(&s.x, &s.y, s.n, s.d, lambda))
+            .map(|s| LogisticRidge::from_dataset(&s, lambda))
             .collect();
         // Node gradients g_i are L_i-Lipschitz; the worst node bounds the
         // mixture. μ = 2λ from the ridge term, identical on every node.
@@ -172,13 +173,34 @@ mod tests {
     fn equal_shards_match_pooled_objective() {
         // with equal shard sizes, mean-of-node-means == pooled sample mean
         let (ds, p) = problem();
-        let pooled = LogisticRidge::new(&ds.x, &ds.y, ds.n, ds.d, 0.1);
+        let pooled = LogisticRidge::from_dataset(&ds, 0.1);
         let w = vec![0.05; 9];
         assert!((p.loss(&w) - pooled.loss(&w)).abs() < 1e-12);
         let mut g1 = vec![0.0; 9];
         p.full_grad(&w, &mut g1);
         let g2 = pooled.grad_vec(&w);
         assert!(linalg::linf_dist(&g1, &g2) < 1e-12);
+    }
+
+    #[test]
+    fn csr_problem_matches_dense_twin() {
+        // sharding a CSR dataset must build the same mathematical problem as
+        // sharding its densified twin (bitwise: densified data has no zeros)
+        let (ds, dense) = problem();
+        let csr = ds.to_csr();
+        assert_eq!(csr.nnz(), ds.n * ds.d, "standardized data must have no zeros");
+        let sparse = ShardedObjective::new(&csr, 4, 0.1);
+        assert_eq!(dense.l_smooth().to_bits(), sparse.l_smooth().to_bits());
+        let w: Vec<f64> = (0..9).map(|i| 0.2 - 0.05 * i as f64).collect();
+        assert_eq!(dense.loss(&w).to_bits(), sparse.loss(&w).to_bits());
+        let mut gd = vec![0.0; 9];
+        let mut gs = vec![0.0; 9];
+        dense.full_grad(&w, &mut gd);
+        sparse.full_grad(&w, &mut gs);
+        assert_eq!(
+            gd.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            gs.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

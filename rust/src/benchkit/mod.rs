@@ -3,6 +3,7 @@
 //! robust statistics, and a uniform report format that `bench_output.txt`
 //! captures.
 
+use std::path::Path;
 use std::time::{Duration, Instant};
 
 /// Summary statistics of one benchmark.
@@ -140,6 +141,54 @@ impl Bencher {
     pub fn finish(&self, title: &str) {
         println!("\n== {title}: {} benchmarks ==", self.results.len());
     }
+
+    /// Record the collected results as a `BENCH_*.json` report (hand-rolled
+    /// JSON — no serde offline). `extra` entries are free-form string
+    /// key/values (speedup ratios, workload shapes) written verbatim; the
+    /// perf log in EXPERIMENTS.md §Perf quotes these files.
+    pub fn write_json(
+        &self,
+        path: &Path,
+        title: &str,
+        extra: &[(&str, String)],
+    ) -> std::io::Result<()> {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"bench\": \"{}\",\n", esc(title)));
+        s.push_str("  \"results\": [\n");
+        for (i, r) in self.results.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"name\": \"{}\", \"iterations\": {}, \"median_ns\": {}, \
+                 \"mean_ns\": {}, \"p95_ns\": {}, \"min_ns\": {}, \"max_ns\": {}}}{}\n",
+                esc(&r.name),
+                r.iterations,
+                r.median.as_nanos(),
+                r.mean.as_nanos(),
+                r.p95.as_nanos(),
+                r.min.as_nanos(),
+                r.max.as_nanos(),
+                if i + 1 < self.results.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ],\n  \"extra\": {\n");
+        for (i, (k, v)) in extra.iter().enumerate() {
+            s.push_str(&format!(
+                "    \"{}\": \"{}\"{}\n",
+                esc(k),
+                esc(v),
+                if i + 1 < extra.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  }\n}\n");
+        std::fs::write(path, s)?;
+        println!("(results recorded to {})", path.display());
+        Ok(())
+    }
+}
+
+/// Minimal JSON string escaping (the names we emit are ASCII identifiers).
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
 }
 
 #[cfg(test)]
@@ -174,6 +223,26 @@ mod tests {
         let mut b = Bencher::new(Duration::ZERO, Duration::from_secs(5), 3);
         let stats = b.bench("capped", || 1 + 1);
         assert_eq!(stats.iterations, 3);
+    }
+
+    #[test]
+    fn write_json_emits_parseable_report() {
+        let mut b = Bencher::new(Duration::ZERO, Duration::ZERO, 1);
+        b.bench("alpha \"quoted\"", || 1);
+        b.bench("beta", || 2);
+        let dir = std::env::temp_dir().join("qmsvrg_benchkit_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        b.write_json(&path, "unit", &[("ratio", "3.14".to_string())]).unwrap();
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert!(s.contains("\"bench\": \"unit\""));
+        assert!(s.contains("alpha \\\"quoted\\\""));
+        assert!(s.contains("\"ratio\": \"3.14\""));
+        // crude structural sanity: balanced braces/brackets, no trailing comma
+        assert_eq!(s.matches('{').count(), s.matches('}').count());
+        assert_eq!(s.matches('[').count(), s.matches(']').count());
+        assert!(!s.contains(",\n  ]"));
+        assert!(!s.contains(",\n  }"));
     }
 
     #[test]

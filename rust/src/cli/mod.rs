@@ -101,6 +101,7 @@ qmsvrg — communication-efficient variance-reduced SGD (QM-SVRG)
 USAGE:
   qmsvrg train       [--config FILE.toml] [--algorithm A]
                      [--dataset power|mnist|PATH] [--samples N]
+                     [--format auto|dense|sparse]
                      [--workers N] [--epoch-len T] [--iters K] [--step A]
                      [--bits B] [--lambda L] [--seed S]
                      [--compressor urq|diana]
@@ -110,6 +111,7 @@ USAGE:
                      [--iters K] [--seed S] [--out DIR]
   qmsvrg worker      --connect HOST:PORT --shard IDX --workers N
                      [--dataset D] [--samples N] [--seed S] [--lambda L]
+                     [--format auto|dense|sparse]
                      [--bits B] [--adaptive] [--compressor urq|diana]
                      [--plus true|false] [--step A] [--epoch-len T]
                      [--slack S] [--fixed-radius R]
@@ -123,6 +125,11 @@ Compressors (quantized algorithms): urq (per-epoch re-centered grids,
             per-worker error memory). Both ends of a run must agree —
             the master broadcasts its config at connect and workers
             refuse a compressor/bits/policy or protocol-version mismatch.
+Storage:    libsvm files stay sparse (CSR) under --format auto when their
+            density is below the loader threshold; sparse storage
+            standardizes scale-only (no centering). Master and workers
+            must pass the same --format — the Config handshake carries the
+            resolved storage and workers refuse a mismatch at connect.
 ";
 
 #[cfg(test)]

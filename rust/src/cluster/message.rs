@@ -38,13 +38,17 @@ pub struct MessageCluster<D: Duplex> {
 
 impl<D: Duplex> MessageCluster<D> {
     /// `root` is the run's root rng (the same one the workers derived their
-    /// streams from). Broadcasts the [`Message::Config`] handshake on every
-    /// link before returning: workers refuse a protocol-version or
-    /// quantization-config mismatch instead of silently mis-decoding.
+    /// streams from); `sparse` is the master's resolved feature storage
+    /// (`Dataset::is_sparse`) — a data property, since sparse storage
+    /// standardizes scale-only. Broadcasts the [`Message::Config`] handshake
+    /// on every link before returning: workers refuse a protocol-version,
+    /// quantization-config, or storage mismatch instead of silently
+    /// mis-decoding (or training on different data).
     pub fn new(
         links: Vec<D>,
         d: usize,
         quant: Option<QuantOpts>,
+        sparse: bool,
         root: &Xoshiro256pp,
     ) -> Result<Self> {
         assert!(!links.is_empty(), "need at least one worker");
@@ -54,6 +58,7 @@ impl<D: Duplex> MessageCluster<D> {
             compressor: quant.as_ref().map_or(0, |q| q.compressor.wire_id()),
             bits: quant.as_ref().map_or(0, |q| q.bits),
             plus: quant.as_ref().map_or(0, |q| q.plus as u8),
+            sparse: sparse as u8,
             policy_fp: quant.as_ref().map_or(0, |q| q.policy.fingerprint()),
         };
         let mut cluster = Self {
@@ -125,6 +130,7 @@ impl MessageCluster<TcpDuplex> {
         n_workers: usize,
         d: usize,
         quant: Option<QuantOpts>,
+        sparse: bool,
         root: &Xoshiro256pp,
     ) -> Result<Self> {
         let mut links = Vec::with_capacity(n_workers);
@@ -132,7 +138,7 @@ impl MessageCluster<TcpDuplex> {
             let (stream, _) = listener.accept().context("accept")?;
             links.push(TcpDuplex::new(stream)?);
         }
-        Self::new(links, d, quant, root)
+        Self::new(links, d, quant, sparse, root)
     }
 }
 

@@ -30,7 +30,7 @@ impl ThreadedCluster {
         root: &Xoshiro256pp,
     ) -> Result<Self> {
         Self::spawn_with(train, n_workers, quant, root, move |_i, s: Dataset| {
-            Ok(LogisticRidge::new(&s.x, &s.y, s.n, s.d, lambda))
+            Ok(LogisticRidge::from_dataset(&s, lambda))
         })
     }
 
@@ -64,7 +64,7 @@ impl ThreadedCluster {
             }));
         }
         Ok(Self {
-            inner: MessageCluster::new(links, train.d, quant, root)?,
+            inner: MessageCluster::new(links, train.d, quant, train.is_sparse(), root)?,
             handles,
         })
     }

@@ -9,6 +9,7 @@ pub use toml::{parse, TomlValue};
 use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 
+use crate::data::FeatureFormat;
 use crate::quant::CompressorKind;
 
 /// Which [`crate::cluster`] backend a run uses. All three produce
@@ -65,6 +66,9 @@ pub struct TrainConfig {
     pub seed: u64,
     /// Dataset: "power" | "mnist" | path to a file.
     pub dataset: String,
+    /// Feature storage: `auto` keeps libsvm files sparse below the density
+    /// threshold; `dense`/`sparse` force a storage either way.
+    pub format: FeatureFormat,
     /// Synthetic sample count (when the dataset is generated).
     pub n_samples: usize,
     /// Gradient backend.
@@ -88,6 +92,7 @@ impl Default for TrainConfig {
             compressor: CompressorKind::Urq,
             seed: 42,
             dataset: "power".into(),
+            format: FeatureFormat::Auto,
             n_samples: 20_000,
             backend: Backend::Native,
             out_dir: String::new(),
@@ -115,6 +120,7 @@ impl TrainConfig {
                 "compressor" => cfg.compressor = v.as_str().context("compressor")?.parse()?,
                 "seed" => cfg.seed = v.as_usize().context("seed")? as u64,
                 "dataset" => cfg.dataset = v.as_str().context("dataset")?.to_string(),
+                "format" => cfg.format = v.as_str().context("format")?.parse()?,
                 "n_samples" => cfg.n_samples = v.as_usize().context("n_samples")?,
                 "backend" => cfg.backend = v.as_str().context("backend")?.parse()?,
                 "out_dir" => cfg.out_dir = v.as_str().context("out_dir")?.to_string(),
@@ -164,6 +170,7 @@ mod tests {
             bits_per_coord = 7
             backend = "xla"
             compressor = "diana"
+            format = "sparse"
             "#,
         )
         .unwrap();
@@ -174,6 +181,7 @@ mod tests {
         assert_eq!(cfg.bits_per_coord, 7);
         assert_eq!(cfg.backend, Backend::Xla);
         assert_eq!(cfg.compressor, CompressorKind::Diana);
+        assert_eq!(cfg.format, FeatureFormat::Sparse);
         assert_eq!(cfg.epoch_len, 8); // default survives
     }
 

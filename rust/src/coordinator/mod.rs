@@ -32,13 +32,16 @@ pub fn threaded(
 
 /// Accept `n_workers` TCP connections and build the master side of a
 /// multi-process deployment ([`MessageCluster::over_tcp`]); workers are
-/// separate `qmsvrg worker` processes.
+/// separate `qmsvrg worker` processes. `sparse` is the master's resolved
+/// feature storage (`Dataset::is_sparse`) — carried in the Config handshake
+/// so a worker whose `--format` resolved differently is refused at connect.
 pub fn tcp(
     listener: &std::net::TcpListener,
     n_workers: usize,
     d: usize,
     quant: Option<QuantOpts>,
+    sparse: bool,
     root: &Xoshiro256pp,
 ) -> Result<MessageCluster<TcpDuplex>> {
-    MessageCluster::over_tcp(listener, n_workers, d, quant, root)
+    MessageCluster::over_tcp(listener, n_workers, d, quant, sparse, root)
 }

@@ -3,6 +3,12 @@
 //! Used when the real datasets are present on disk (`data/` by convention);
 //! the experiment drivers fall back to [`super::synthetic`] otherwise and
 //! record the substitution in their output.
+//!
+//! libsvm files load into CSR storage and **stay sparse** unless their
+//! density exceeds [`AUTO_DENSIFY_THRESHOLD`] (override with
+//! `--format dense|sparse` / TOML `format`): rcv1/news20-class workloads are
+//! ~0.15% dense, and densifying them costs ~600× the memory and gradient
+//! flops the data warrants.
 
 use std::fs::File;
 use std::io::{BufRead, BufReader, Read};
@@ -10,7 +16,13 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::data::Dataset;
+use crate::data::{Dataset, FeatureFormat};
+use crate::linalg::CsrMatrix;
+
+/// `FeatureFormat::Auto` densifies a loaded libsvm file above this density:
+/// past ~1 stored entry in 4, CSR's index overhead and gather-indirection
+/// cost more than the dense flops they avoid (see EXPERIMENTS.md §Perf).
+pub const AUTO_DENSIFY_THRESHOLD: f64 = 0.25;
 
 /// Load a numeric CSV: one sample per line, label in `label_col`, every other
 /// column a feature. `skip_header` drops the first line. Rows containing
@@ -63,11 +75,26 @@ pub fn load_csv(
     Dataset::new(x, y, n, d)
 }
 
-/// Load libsvm/svmlight format: `label idx:val idx:val ...` (1-based indices).
+/// Load libsvm/svmlight format: `label idx:val idx:val ...` (1-based
+/// indices) with `Auto` storage: CSR, densified above
+/// [`AUTO_DENSIFY_THRESHOLD`].
 pub fn load_libsvm(path: &Path, dim: Option<usize>) -> Result<Dataset> {
+    load_libsvm_format(path, dim, FeatureFormat::Auto)
+}
+
+/// [`load_libsvm`] with an explicit storage choice. Rows with duplicate
+/// feature indices are rejected (the old dense loader silently kept the last
+/// value, which hid corrupt files); unsorted indices are accepted and
+/// sorted.
+pub fn load_libsvm_format(
+    path: &Path,
+    dim: Option<usize>,
+    format: FeatureFormat,
+) -> Result<Dataset> {
     let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
     let reader = BufReader::new(f);
-    let mut rows: Vec<(f64, Vec<(usize, f64)>)> = Vec::new();
+    let mut rows: Vec<Vec<(u32, f64)>> = Vec::new();
+    let mut y = Vec::new();
     let mut max_idx = 0usize;
     for (lineno, line) in reader.lines().enumerate() {
         let line = line?;
@@ -81,7 +108,7 @@ pub fn load_libsvm(path: &Path, dim: Option<usize>) -> Result<Dataset> {
             .context("missing label")?
             .parse()
             .with_context(|| format!("line {}: bad label", lineno + 1))?;
-        let mut feats = Vec::new();
+        let mut feats: Vec<(u32, f64)> = Vec::new();
         for tok in it {
             let (i, v) = tok
                 .split_once(':')
@@ -90,26 +117,46 @@ pub fn load_libsvm(path: &Path, dim: Option<usize>) -> Result<Dataset> {
             if i == 0 {
                 bail!("line {}: libsvm indices are 1-based", lineno + 1);
             }
+            if i > u32::MAX as usize {
+                bail!("line {}: feature index {i} exceeds u32 range", lineno + 1);
+            }
             let v: f64 = v.parse().with_context(|| format!("line {}: bad value", lineno + 1))?;
             max_idx = max_idx.max(i);
-            feats.push((i - 1, v));
+            feats.push(((i - 1) as u32, v));
         }
-        rows.push((label, feats));
+        feats.sort_unstable_by_key(|&(j, _)| j);
+        for pair in feats.windows(2) {
+            if pair[0].0 == pair[1].0 {
+                bail!(
+                    "line {}: duplicate feature index {} (libsvm rows must name \
+                     each feature at most once)",
+                    lineno + 1,
+                    pair[0].0 + 1
+                );
+            }
+        }
+        y.push(label);
+        rows.push(feats);
+    }
+    if rows.is_empty() {
+        bail!("empty libsvm file {}", path.display());
     }
     let d = dim.unwrap_or(max_idx);
     if d < max_idx {
         bail!("declared dim {} < max feature index {}", d, max_idx);
     }
-    let n = rows.len();
-    let mut x = vec![0.0; n * d];
-    let mut y = Vec::with_capacity(n);
-    for (i, (label, feats)) in rows.into_iter().enumerate() {
-        y.push(label);
-        for (j, v) in feats {
-            x[i * d + j] = v;
+    let ds = Dataset::from_csr(CsrMatrix::from_rows(&rows, d)?, y)?;
+    Ok(match format {
+        FeatureFormat::Dense => ds.to_dense(),
+        FeatureFormat::Sparse => ds,
+        FeatureFormat::Auto => {
+            if ds.density() > AUTO_DENSIFY_THRESHOLD {
+                ds.to_dense()
+            } else {
+                ds
+            }
         }
-    }
-    Dataset::new(x, y, n, d)
+    })
 }
 
 /// Load an MNIST IDX image/label pair (the standard `train-images-idx3-ubyte`
@@ -206,8 +253,11 @@ mod tests {
 
     #[test]
     fn libsvm_sparse() {
+        // density 3/6 = 0.5 > threshold: Auto densifies this tiny file, so
+        // the dense row accessor keeps working exactly as before
         let p = tmpfile("c.svm", b"+1 1:0.5 3:2.0\n-1 2:1.5 # comment\n\n");
         let ds = load_libsvm(&p, None).unwrap();
+        assert!(!ds.is_sparse());
         assert_eq!(ds.n, 2);
         assert_eq!(ds.d, 3);
         assert_eq!(ds.row(0), &[0.5, 0.0, 2.0]);
@@ -216,8 +266,58 @@ mod tests {
     }
 
     #[test]
+    fn libsvm_low_density_stays_csr() {
+        // density 4/48 ≈ 0.083 < threshold: Auto keeps CSR
+        let p = tmpfile(
+            "sp.svm",
+            b"+1 1:0.5 16:2.0\n-1 7:1.5\n+1 11:-0.25\n",
+        );
+        let ds = load_libsvm(&p, None).unwrap();
+        assert!(ds.is_sparse());
+        assert_eq!((ds.n, ds.d, ds.nnz()), (3, 16, 4));
+        let dense = ds.to_dense();
+        assert_eq!(dense.row(0)[0], 0.5);
+        assert_eq!(dense.row(0)[15], 2.0);
+        assert_eq!(dense.row(1)[6], 1.5);
+        assert_eq!(dense.row(2)[10], -0.25);
+        // explicit overrides beat Auto in both directions
+        let forced_dense = load_libsvm_format(&p, None, FeatureFormat::Dense).unwrap();
+        assert!(!forced_dense.is_sparse());
+        assert_eq!(forced_dense.x(), dense.x());
+        let p2 = tmpfile("dn.svm", b"+1 1:0.5 2:1.0 3:2.0\n-1 1:1.0 2:1.5 3:0.5\n");
+        let forced_sparse = load_libsvm_format(&p2, None, FeatureFormat::Sparse).unwrap();
+        assert!(forced_sparse.is_sparse());
+    }
+
+    #[test]
+    fn libsvm_accepts_unsorted_indices() {
+        let p = tmpfile("unsorted.svm", b"+1 9:1.0 2:0.5\n-1 4:2.0\n");
+        let ds = load_libsvm(&p, None).unwrap();
+        let dense = ds.to_dense();
+        assert_eq!(dense.row(0)[1], 0.5);
+        assert_eq!(dense.row(0)[8], 1.0);
+    }
+
+    #[test]
+    fn libsvm_rejects_duplicate_indices() {
+        // regression: the dense loader silently kept the last value of a
+        // duplicated index (last-write-wins), hiding corrupt files
+        let p = tmpfile("dup.svm", b"+1 1:0.5 3:2.0\n-1 2:1.5 2:9.0\n");
+        let err = load_libsvm(&p, None).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("duplicate feature index 2"), "{msg}");
+        assert!(msg.contains("line 2"), "{msg}");
+    }
+
+    #[test]
     fn libsvm_rejects_zero_index() {
         let p = tmpfile("d.svm", b"1 0:0.5\n");
+        assert!(load_libsvm(&p, None).is_err());
+    }
+
+    #[test]
+    fn libsvm_rejects_empty_file() {
+        let p = tmpfile("empty.svm", b"# nothing but comments\n\n");
         assert!(load_libsvm(&p, None).is_err());
     }
 

@@ -1,5 +1,5 @@
-//! Datasets: dense storage, preprocessing, sharding, synthetic generators and
-//! file loaders.
+//! Datasets: dense *or* CSR feature storage, preprocessing, sharding,
+//! synthetic generators and file loaders.
 //!
 //! The paper evaluates on the UCI *Individual Household Electric Power
 //! Consumption* dataset (2,075,259 × d=9, binarized by a hard threshold) and
@@ -8,27 +8,84 @@
 //! their dimensions and geometry (see DESIGN.md §2 for the substitution
 //! argument); [`loaders`] reads the real files (CSV / libsvm / MNIST IDX)
 //! when they are present on disk.
+//!
+//! **Storage.** Real libsvm workloads (rcv1, news20-class: d ≈ 47k, ~75
+//! nonzeros per row) are overwhelmingly sparse, so [`Dataset`] holds its
+//! features as a [`Features`] enum: row-major dense, or
+//! [`crate::linalg::CsrMatrix`]. Every preprocessing op dispatches on the
+//! storage; the objective layer ([`crate::objective::LogisticRidge`]) does
+//! the same, so sparse data flows end-to-end without densification. The one
+//! semantic difference: **sparse standardization is scale-only** (unit
+//! second moment, no centering) because subtracting a per-column mean would
+//! destroy sparsity — see [`Dataset::standardize`].
 
 pub mod loaders;
 pub mod synthetic;
 
 use anyhow::{bail, Result};
 
+use crate::linalg::CsrMatrix;
 use crate::rng::Xoshiro256pp;
 
-/// A dense supervised dataset: row-major features + labels.
+/// Feature storage: row-major dense, or CSR sparse.
+#[derive(Clone, Debug)]
+pub enum Features {
+    /// Row-major `n × d` contiguous buffer.
+    Dense(Vec<f64>),
+    /// Compressed sparse rows.
+    Csr(CsrMatrix),
+}
+
+/// Which storage a loader should produce (`--format`, TOML `format`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FeatureFormat {
+    /// Loader's choice: libsvm keeps CSR unless density exceeds
+    /// [`loaders::AUTO_DENSIFY_THRESHOLD`]; every other source is dense.
+    #[default]
+    Auto,
+    /// Force dense storage.
+    Dense,
+    /// Force CSR storage.
+    Sparse,
+}
+
+impl FeatureFormat {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FeatureFormat::Auto => "auto",
+            FeatureFormat::Dense => "dense",
+            FeatureFormat::Sparse => "sparse",
+        }
+    }
+}
+
+impl std::str::FromStr for FeatureFormat {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(FeatureFormat::Auto),
+            "dense" => Ok(FeatureFormat::Dense),
+            "sparse" | "csr" => Ok(FeatureFormat::Sparse),
+            other => bail!("unknown feature format {other:?} (auto|dense|sparse)"),
+        }
+    }
+}
+
+/// A supervised dataset: dense or CSR features + labels.
 ///
 /// Binary tasks use labels in {-1, +1}; multiclass tasks store class ids
 /// 0..k-1 as f64 and are reduced one-vs-all by [`Dataset::one_vs_all`].
 #[derive(Clone, Debug)]
 pub struct Dataset {
-    pub x: Vec<f64>,
+    feats: Features,
     pub y: Vec<f64>,
     pub n: usize,
     pub d: usize,
 }
 
 impl Dataset {
+    /// Dense constructor (row-major `x`).
     pub fn new(x: Vec<f64>, y: Vec<f64>, n: usize, d: usize) -> Result<Self> {
         if x.len() != n * d {
             bail!("x has {} entries, expected {}*{}", x.len(), n, d);
@@ -36,51 +93,217 @@ impl Dataset {
         if y.len() != n {
             bail!("y has {} entries, expected {}", y.len(), n);
         }
-        Ok(Self { x, y, n, d })
+        Ok(Self {
+            feats: Features::Dense(x),
+            y,
+            n,
+            d,
+        })
+    }
+
+    /// Sparse constructor.
+    pub fn from_csr(m: CsrMatrix, y: Vec<f64>) -> Result<Self> {
+        if y.len() != m.n_rows() {
+            bail!("y has {} entries, expected {}", y.len(), m.n_rows());
+        }
+        let (n, d) = (m.n_rows(), m.n_cols());
+        Ok(Self {
+            feats: Features::Csr(m),
+            y,
+            n,
+            d,
+        })
+    }
+
+    /// The feature storage (objectives and metrics dispatch on this).
+    #[inline]
+    pub fn feats(&self) -> &Features {
+        &self.feats
     }
 
     #[inline]
+    pub fn is_sparse(&self) -> bool {
+        matches!(self.feats, Features::Csr(_))
+    }
+
+    /// `"dense"` / `"csr"` — for run headers and logs.
+    pub fn storage_name(&self) -> &'static str {
+        match self.feats {
+            Features::Dense(_) => "dense",
+            Features::Csr(_) => "csr",
+        }
+    }
+
+    /// Stored nonzeros (dense storage counts every entry).
+    pub fn nnz(&self) -> usize {
+        match &self.feats {
+            Features::Dense(x) => x.len(),
+            Features::Csr(m) => m.nnz(),
+        }
+    }
+
+    /// Fraction of *nonzero* entries (dense storage counts them explicitly;
+    /// used by the loaders' auto-densify decision and run headers).
+    pub fn density(&self) -> f64 {
+        if self.n == 0 || self.d == 0 {
+            return 0.0;
+        }
+        let nnz = match &self.feats {
+            Features::Dense(x) => x.iter().filter(|&&v| v != 0.0).count(),
+            Features::Csr(m) => m.nnz(),
+        };
+        nnz as f64 / (self.n as f64 * self.d as f64)
+    }
+
+    /// Dense feature buffer. Panics on CSR storage — legacy/test accessor;
+    /// storage-aware code dispatches on [`Self::feats`] instead.
+    #[inline]
+    pub fn x(&self) -> &[f64] {
+        match &self.feats {
+            Features::Dense(x) => x,
+            Features::Csr(_) => panic!(
+                "Dataset::x(): dense access on CSR storage — dispatch on feats() \
+                 or convert with to_dense()"
+            ),
+        }
+    }
+
+    /// Dense row `i`. Panics on CSR storage (see [`Self::x`]).
+    #[inline]
     pub fn row(&self, i: usize) -> &[f64] {
-        &self.x[i * self.d..(i + 1) * self.d]
+        &self.x()[i * self.d..(i + 1) * self.d]
     }
 
-    /// Standardize features to zero mean / unit variance in place; returns
-    /// the (mean, std) per column so a test set can reuse the transform.
+    /// Copy with dense storage (no-op copy if already dense).
+    pub fn to_dense(&self) -> Dataset {
+        let x = match &self.feats {
+            Features::Dense(x) => x.clone(),
+            Features::Csr(m) => m.to_dense(),
+        };
+        Dataset {
+            feats: Features::Dense(x),
+            y: self.y.clone(),
+            n: self.n,
+            d: self.d,
+        }
+    }
+
+    /// Copy with CSR storage; exact zeros are dropped (no-op copy if already
+    /// sparse).
+    pub fn to_csr(&self) -> Dataset {
+        let m = match &self.feats {
+            Features::Dense(x) => CsrMatrix::from_dense(x, self.n, self.d),
+            Features::Csr(m) => m.clone(),
+        };
+        Dataset {
+            feats: Features::Csr(m),
+            y: self.y.clone(),
+            n: self.n,
+            d: self.d,
+        }
+    }
+
+    /// Force the storage `format` (Auto keeps the current storage).
+    pub fn with_format(self, format: FeatureFormat) -> Dataset {
+        match (format, self.is_sparse()) {
+            (FeatureFormat::Dense, true) => self.to_dense(),
+            (FeatureFormat::Sparse, false) => self.to_csr(),
+            _ => self,
+        }
+    }
+
+    /// Standardize features in place; returns the per-column `(mean, std)`
+    /// so a test set can reuse the transform.
+    ///
+    /// * **Dense**: zero mean / unit variance (unchanged from the original
+    ///   implementation — dense runs stay bit-identical).
+    /// * **CSR**: *scale-only* — each column is divided by its root second
+    ///   moment `sqrt(E[x_j²])` and the returned mean is all zeros.
+    ///   Centering would turn every structural zero into a stored value and
+    ///   destroy sparsity, so we deliberately deviate from the paper's
+    ///   preprocessing on sparse inputs (documented in README/EXPERIMENTS;
+    ///   libsvm-style data is typically already nonnegative and
+    ///   scale-dominated, and the ridge objective only needs bounded
+    ///   feature scales for its geometry constants).
     pub fn standardize(&mut self) -> (Vec<f64>, Vec<f64>) {
-        let mut mean = vec![0.0; self.d];
-        let mut std = vec![0.0; self.d];
-        for i in 0..self.n {
-            for j in 0..self.d {
-                mean[j] += self.x[i * self.d + j];
+        let (n, d) = (self.n, self.d);
+        match &mut self.feats {
+            Features::Dense(x) => {
+                let mut mean = vec![0.0; d];
+                let mut std = vec![0.0; d];
+                for i in 0..n {
+                    for j in 0..d {
+                        mean[j] += x[i * d + j];
+                    }
+                }
+                for m in mean.iter_mut() {
+                    *m /= n as f64;
+                }
+                for i in 0..n {
+                    for j in 0..d {
+                        let c = x[i * d + j] - mean[j];
+                        std[j] += c * c;
+                    }
+                }
+                for s in std.iter_mut() {
+                    *s = (*s / n as f64).sqrt();
+                    if *s < 1e-12 {
+                        *s = 1.0; // constant column: leave centered
+                    }
+                }
+                for i in 0..n {
+                    for j in 0..d {
+                        let v = &mut x[i * d + j];
+                        *v = (*v - mean[j]) / std[j];
+                    }
+                }
+                (mean, std)
+            }
+            Features::Csr(m) => {
+                let mean = vec![0.0; d]; // scale-only: no centering
+                let mut std = vec![0.0; d];
+                for (j, v) in m.iter_entries() {
+                    std[j] += v * v;
+                }
+                for s in std.iter_mut() {
+                    *s = (*s / n as f64).sqrt();
+                    if *s < 1e-12 {
+                        *s = 1.0; // empty/negligible column: leave as is
+                    }
+                }
+                for (j, v) in m.iter_entries_mut() {
+                    *v /= std[j];
+                }
+                (mean, std)
             }
         }
-        for m in mean.iter_mut() {
-            *m /= self.n as f64;
-        }
-        for i in 0..self.n {
-            for j in 0..self.d {
-                let c = self.x[i * self.d + j] - mean[j];
-                std[j] += c * c;
-            }
-        }
-        for s in std.iter_mut() {
-            *s = (*s / self.n as f64).sqrt();
-            if *s < 1e-12 {
-                *s = 1.0; // constant column: leave centered
-            }
-        }
-        self.apply_standardization(&mean, &std);
-        (mean, std)
     }
 
-    /// Apply a precomputed (mean, std) transform (for test splits).
+    /// Apply a precomputed (mean, std) transform (for test splits). On CSR
+    /// storage the mean must be all zeros (scale-only — centering cannot be
+    /// represented sparsely).
     pub fn apply_standardization(&mut self, mean: &[f64], std: &[f64]) {
         assert_eq!(mean.len(), self.d);
         assert_eq!(std.len(), self.d);
-        for i in 0..self.n {
-            for j in 0..self.d {
-                let v = &mut self.x[i * self.d + j];
-                *v = (*v - mean[j]) / std[j];
+        let (n, d) = (self.n, self.d);
+        match &mut self.feats {
+            Features::Dense(x) => {
+                for i in 0..n {
+                    for j in 0..d {
+                        let v = &mut x[i * d + j];
+                        *v = (*v - mean[j]) / std[j];
+                    }
+                }
+            }
+            Features::Csr(m) => {
+                assert!(
+                    mean.iter().all(|&mj| mj == 0.0),
+                    "centering transform cannot be applied to CSR storage \
+                     (sparse standardization is scale-only)"
+                );
+                for (j, v) in m.iter_entries_mut() {
+                    *v /= std[j];
+                }
             }
         }
     }
@@ -88,20 +311,27 @@ impl Dataset {
     /// Append a constant-1 bias column (d -> d+1).
     pub fn with_bias(&self) -> Dataset {
         let d2 = self.d + 1;
-        let mut x = vec![0.0; self.n * d2];
-        for i in 0..self.n {
-            x[i * d2..i * d2 + self.d].copy_from_slice(self.row(i));
-            x[i * d2 + self.d] = 1.0;
-        }
+        let feats = match &self.feats {
+            Features::Dense(x) => {
+                let mut out = vec![0.0; self.n * d2];
+                for i in 0..self.n {
+                    out[i * d2..i * d2 + self.d]
+                        .copy_from_slice(&x[i * self.d..(i + 1) * self.d]);
+                    out[i * d2 + self.d] = 1.0;
+                }
+                Features::Dense(out)
+            }
+            Features::Csr(m) => Features::Csr(m.with_bias_col()),
+        };
         Dataset {
-            x,
+            feats,
             y: self.y.clone(),
             n: self.n,
             d: d2,
         }
     }
 
-    /// Deterministic shuffled train/test split.
+    /// Deterministic shuffled train/test split (storage-preserving).
     pub fn split(&self, train_frac: f64, seed: u64) -> (Dataset, Dataset) {
         assert!((0.0..=1.0).contains(&train_frac));
         let mut idx: Vec<usize> = (0..self.n).collect();
@@ -109,14 +339,19 @@ impl Dataset {
         rng.shuffle(&mut idx);
         let n_train = ((self.n as f64) * train_frac).round() as usize;
         let take = |ids: &[usize]| {
-            let mut x = Vec::with_capacity(ids.len() * self.d);
-            let mut y = Vec::with_capacity(ids.len());
-            for &i in ids {
-                x.extend_from_slice(self.row(i));
-                y.push(self.y[i]);
-            }
+            let feats = match &self.feats {
+                Features::Dense(x) => {
+                    let mut out = Vec::with_capacity(ids.len() * self.d);
+                    for &i in ids {
+                        out.extend_from_slice(&x[i * self.d..(i + 1) * self.d]);
+                    }
+                    Features::Dense(out)
+                }
+                Features::Csr(m) => Features::Csr(m.select_rows(ids)),
+            };
+            let y = ids.iter().map(|&i| self.y[i]).collect();
             Dataset {
-                x,
+                feats,
                 y,
                 n: ids.len(),
                 d: self.d,
@@ -125,7 +360,7 @@ impl Dataset {
         (take(&idx[..n_train]), take(&idx[n_train..]))
     }
 
-    /// Contiguous sharding across `n_workers` (last shard takes the slack);
+    /// Contiguous sharding across `n_workers` (first shards take the slack);
     /// this is the "divide data samples among N workers" of §1.
     pub fn shard(&self, n_workers: usize) -> Vec<Dataset> {
         assert!(n_workers >= 1 && n_workers <= self.n);
@@ -135,9 +370,14 @@ impl Dataset {
         let mut start = 0;
         for w in 0..n_workers {
             let len = base + usize::from(w < rem);
-            let rows = &self.x[start * self.d..(start + len) * self.d];
+            let feats = match &self.feats {
+                Features::Dense(x) => {
+                    Features::Dense(x[start * self.d..(start + len) * self.d].to_vec())
+                }
+                Features::Csr(m) => Features::Csr(m.row_range(start, start + len)),
+            };
             out.push(Dataset {
-                x: rows.to_vec(),
+                feats,
                 y: self.y[start..start + len].to_vec(),
                 n: len,
                 d: self.d,
@@ -155,7 +395,7 @@ impl Dataset {
             .map(|&v| if v == class { 1.0 } else { -1.0 })
             .collect();
         Dataset {
-            x: self.x.clone(),
+            feats: self.feats.clone(),
             y,
             n: self.n,
             d: self.d,
@@ -185,11 +425,26 @@ mod tests {
         .unwrap()
     }
 
+    /// 4×3 sparse toy: [[1,0,2],[0,3,0],[0,0,0],[4,0,5]]
+    fn toy_sparse() -> Dataset {
+        let m = CsrMatrix::new(
+            vec![0, 2, 3, 3, 5],
+            vec![0, 2, 1, 0, 2],
+            vec![1.0, 2.0, 3.0, 4.0, 5.0],
+            3,
+        )
+        .unwrap();
+        Dataset::from_csr(m, vec![1.0, -1.0, 1.0, -1.0]).unwrap()
+    }
+
     #[test]
     fn new_validates_shapes() {
         assert!(Dataset::new(vec![1.0; 6], vec![1.0; 3], 3, 2).is_ok());
         assert!(Dataset::new(vec![1.0; 5], vec![1.0; 3], 3, 2).is_err());
         assert!(Dataset::new(vec![1.0; 6], vec![1.0; 2], 3, 2).is_err());
+        let m = CsrMatrix::new(vec![0, 1], vec![0], vec![1.0], 2).unwrap();
+        assert!(Dataset::from_csr(m.clone(), vec![1.0]).is_ok());
+        assert!(Dataset::from_csr(m, vec![1.0, 2.0]).is_err());
     }
 
     #[test]
@@ -197,9 +452,9 @@ mod tests {
         let mut ds = toy();
         ds.standardize();
         for j in 0..ds.d {
-            let mean: f64 = (0..ds.n).map(|i| ds.x[i * ds.d + j]).sum::<f64>() / ds.n as f64;
+            let mean: f64 = (0..ds.n).map(|i| ds.x()[i * ds.d + j]).sum::<f64>() / ds.n as f64;
             let var: f64 =
-                (0..ds.n).map(|i| ds.x[i * ds.d + j].powi(2)).sum::<f64>() / ds.n as f64;
+                (0..ds.n).map(|i| ds.x()[i * ds.d + j].powi(2)).sum::<f64>() / ds.n as f64;
             assert!(mean.abs() < 1e-12);
             assert!((var - 1.0).abs() < 1e-12);
         }
@@ -210,8 +465,36 @@ mod tests {
         let mut ds = Dataset::new(vec![3.0, 1.0, 3.0, 2.0, 3.0, 3.0], vec![1.0; 3], 3, 2).unwrap();
         ds.standardize();
         for i in 0..3 {
-            assert_eq!(ds.x[i * 2], 0.0); // centered, not divided by 0
+            assert_eq!(ds.x()[i * 2], 0.0); // centered, not divided by 0
         }
+    }
+
+    #[test]
+    fn sparse_standardize_is_scale_only() {
+        let mut ds = toy_sparse();
+        let (mean, std) = ds.standardize();
+        assert!(mean.iter().all(|&m| m == 0.0), "no centering on sparse");
+        // structural zeros untouched: same nnz, unit column second moments
+        assert_eq!(ds.nnz(), 5);
+        let mut ssq = vec![0.0; ds.d];
+        let Features::Csr(m) = ds.feats() else {
+            panic!("storage changed")
+        };
+        for (j, v) in m.iter_entries() {
+            ssq[j] += v * v;
+        }
+        for (j, s) in ssq.iter().enumerate() {
+            if *s > 0.0 {
+                assert!((s / ds.n as f64 - 1.0).abs() < 1e-12, "col {j}: {s}");
+            }
+        }
+        // a test split scales identically through apply_standardization
+        let mut twin = toy_sparse();
+        twin.apply_standardization(&mean, &std);
+        let Features::Csr(t) = twin.feats() else {
+            panic!()
+        };
+        assert_eq!(t.values(), m.values());
     }
 
     #[test]
@@ -221,10 +504,28 @@ mod tests {
         let (tr2, te2) = ds.split(0.6, 42);
         assert_eq!(tr1.n, 3);
         assert_eq!(te1.n, 2);
-        assert_eq!(tr1.x, tr2.x);
+        assert_eq!(tr1.x(), tr2.x());
         assert_eq!(te1.y, te2.y);
         let (tr3, _) = ds.split(0.6, 43);
-        assert!(tr3.x != tr1.x || tr3.y != tr1.y);
+        assert!(tr3.x() != tr1.x() || tr3.y != tr1.y);
+    }
+
+    #[test]
+    fn sparse_split_and_shard_match_dense() {
+        // the CSR path must pick/partition the same rows as the dense path
+        let sp = toy_sparse();
+        let dn = sp.to_dense();
+        let (str_, ste) = sp.split(0.5, 9);
+        let (dtr, dte) = dn.split(0.5, 9);
+        assert_eq!(str_.to_dense().x(), dtr.x());
+        assert_eq!(ste.to_dense().x(), dte.x());
+        assert_eq!(str_.y, dtr.y);
+        let ss = sp.shard(2);
+        let ds_ = dn.shard(2);
+        for (a, b) in ss.iter().zip(&ds_) {
+            assert_eq!(a.to_dense().x(), b.x());
+            assert_eq!(a.y, b.y);
+        }
     }
 
     #[test]
@@ -236,9 +537,9 @@ mod tests {
         assert_eq!(shards[0].n, 3); // remainder goes to the first shards
         let mut all: Vec<f64> = Vec::new();
         for s in &shards {
-            all.extend_from_slice(&s.x);
+            all.extend_from_slice(s.x());
         }
-        assert_eq!(all, ds.x);
+        assert_eq!(all, ds.x());
     }
 
     #[test]
@@ -258,5 +559,45 @@ mod tests {
             assert_eq!(b.row(i)[2], 1.0);
             assert_eq!(&b.row(i)[..2], ds.row(i));
         }
+        // sparse twin
+        let sb = toy_sparse().with_bias();
+        assert_eq!(sb.d, 4);
+        let dense = sb.to_dense();
+        for i in 0..sb.n {
+            assert_eq!(dense.row(i)[3], 1.0);
+        }
+    }
+
+    #[test]
+    fn storage_conversions_roundtrip() {
+        let sp = toy_sparse();
+        assert!(sp.is_sparse());
+        assert_eq!(sp.storage_name(), "csr");
+        assert!((sp.density() - 5.0 / 12.0).abs() < 1e-15);
+        let dn = sp.to_dense();
+        assert!(!dn.is_sparse());
+        assert_eq!(dn.x(), &[1.0, 0.0, 2.0, 0.0, 3.0, 0.0, 0.0, 0.0, 0.0, 4.0, 0.0, 5.0]);
+        let back = dn.to_csr();
+        assert_eq!(back.to_dense().x(), dn.x());
+        // format forcing
+        assert!(!sp.clone().with_format(FeatureFormat::Dense).is_sparse());
+        assert!(dn.clone().with_format(FeatureFormat::Sparse).is_sparse());
+        assert!(sp.clone().with_format(FeatureFormat::Auto).is_sparse());
+    }
+
+    #[test]
+    #[should_panic(expected = "dense access on CSR storage")]
+    fn dense_accessor_panics_on_sparse() {
+        let _ = toy_sparse().x();
+    }
+
+    #[test]
+    fn format_parses() {
+        assert_eq!("auto".parse::<FeatureFormat>().unwrap(), FeatureFormat::Auto);
+        assert_eq!("dense".parse::<FeatureFormat>().unwrap(), FeatureFormat::Dense);
+        assert_eq!("sparse".parse::<FeatureFormat>().unwrap(), FeatureFormat::Sparse);
+        assert_eq!("CSR".parse::<FeatureFormat>().unwrap(), FeatureFormat::Sparse);
+        assert!("packed".parse::<FeatureFormat>().is_err());
+        assert_eq!(FeatureFormat::default(), FeatureFormat::Auto);
     }
 }

@@ -12,6 +12,7 @@
 //!   but imperfect — preserving the paper's Table-1 regime.
 
 use crate::data::Dataset;
+use crate::linalg::sparse::{spdot, CsrMatrix};
 use crate::rng::Xoshiro256pp;
 
 /// d=9 power-consumption-like binary classification.
@@ -138,6 +139,33 @@ pub fn mnist_like_dims(n: usize, side: usize, seed: u64) -> Dataset {
     Dataset::new(x, y, n, d).expect("consistent by construction")
 }
 
+/// Sparse binary classification in CSR storage: each coordinate of each row
+/// is nonzero with probability `density` (value ~ N(0,1)); labels threshold
+/// a sparse ground-truth linear response at zero. Stands in for the
+/// rcv1/news20-class libsvm workloads (d ≫ nnz/row) in benches and tests.
+pub fn sparse_like(n: usize, d: usize, density: f64, seed: u64) -> Dataset {
+    assert!((0.0..=1.0).contains(&density));
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut wrng = rng.split(0x5EED);
+    let w_true: Vec<f64> = (0..d).map(|_| wrng.gen_normal()).collect();
+    let mut rows: Vec<Vec<(u32, f64)>> = Vec::with_capacity(n);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut row: Vec<(u32, f64)> = Vec::new();
+        for j in 0..d {
+            if rng.next_f64() < density {
+                row.push((j as u32, rng.gen_normal()));
+            }
+        }
+        let (idx, vals): (Vec<u32>, Vec<f64>) = row.iter().copied().unzip();
+        let resp = spdot(&idx, &vals, &w_true) + 0.3 * rng.gen_normal();
+        y.push(if resp > 0.0 { 1.0 } else { -1.0 });
+        rows.push(row);
+    }
+    let m = CsrMatrix::from_rows(&rows, d).expect("rows built sorted and unique");
+    Dataset::from_csr(m, y).expect("consistent by construction")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,9 +185,9 @@ mod tests {
         let a = power_like(100, 7);
         let b = power_like(100, 7);
         let c = power_like(100, 8);
-        assert_eq!(a.x, b.x);
+        assert_eq!(a.x(), b.x());
         assert_eq!(a.y, b.y);
-        assert_ne!(a.x, c.x);
+        assert_ne!(a.x(), c.x());
     }
 
     #[test]
@@ -168,7 +196,7 @@ mod tests {
         use crate::objective::{LogisticRidge, Objective};
         let mut ds = power_like(4000, 3);
         ds.standardize();
-        let obj = LogisticRidge::new(&ds.x, &ds.y, ds.n, ds.d, 0.1);
+        let obj = LogisticRidge::new(ds.x(), &ds.y, ds.n, ds.d, 0.1);
         let mut w = vec![0.0; ds.d];
         let mut g = vec![0.0; ds.d];
         for _ in 0..200 {
@@ -187,7 +215,7 @@ mod tests {
         let ds = mnist_like_dims(500, 12, 2);
         assert_eq!(ds.d, 144);
         assert_eq!(ds.classes().len(), 10);
-        assert!(ds.x.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        assert!(ds.x().iter().all(|&v| (0.0..=1.0).contains(&v)));
         // balanced: each class n/10
         for c in 0..10 {
             let cnt = ds.y.iter().filter(|&&v| v == c as f64).count();
@@ -200,6 +228,28 @@ mod tests {
         let ds = mnist_like(50, 4);
         assert_eq!(ds.d, 784);
         assert_eq!(ds.n, 50);
+    }
+
+    #[test]
+    fn sparse_like_shape_density_determinism() {
+        let ds = sparse_like(400, 256, 0.05, 9);
+        assert!(ds.is_sparse());
+        assert_eq!((ds.n, ds.d), (400, 256));
+        // nnz concentrates near n·d·density (Bernoulli per entry)
+        let expect = 400.0 * 256.0 * 0.05;
+        assert!(
+            (ds.nnz() as f64 - expect).abs() < 0.25 * expect,
+            "nnz={} expect≈{expect}",
+            ds.nnz()
+        );
+        assert!(ds.y.iter().all(|&v| v == 1.0 || v == -1.0));
+        // both classes present and not wildly unbalanced
+        let pos = ds.y.iter().filter(|&&v| v == 1.0).count();
+        assert!(pos > 50 && pos < 350, "pos={pos}");
+        let twin = sparse_like(400, 256, 0.05, 9);
+        assert_eq!(ds.to_dense().x(), twin.to_dense().x());
+        let other = sparse_like(400, 256, 0.05, 10);
+        assert_ne!(ds.to_dense().x(), other.to_dense().x());
     }
 
     #[test]

@@ -36,7 +36,7 @@ pub struct Fig2 {
 pub fn power_geometry(n: usize, seed: u64) -> Geometry {
     let mut ds = power_like(n, seed);
     ds.standardize();
-    let obj = LogisticRidge::new(&ds.x, &ds.y, ds.n, ds.d, 0.1);
+    let obj = LogisticRidge::from_dataset(&ds, 0.1);
     Geometry::new(obj.mu(), obj.l_smooth(), ds.d)
 }
 

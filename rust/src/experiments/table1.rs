@@ -12,7 +12,7 @@ use anyhow::Result;
 use crate::config::TrainConfig;
 use crate::data::synthetic::mnist_like;
 use crate::data::Dataset;
-use crate::metrics::f1_binary;
+use crate::metrics::f1_dataset;
 
 /// The Table-1 algorithm columns, in the paper's order.
 pub const TABLE1_ALGOS: [&str; 7] = [
@@ -95,7 +95,7 @@ pub fn run(p: &Table1Params) -> Result<Table1> {
                     ..base.clone()
                 };
                 let report = crate::driver::train_with_test(&cfg, &tr, &te)?;
-                acc += f1_binary(&report.w, &te.x, &te.y, te.n, te.d);
+                acc += f1_dataset(&report.w, &te);
             }
             mean_f1.push(acc / 10.0);
         }

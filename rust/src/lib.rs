@@ -57,7 +57,8 @@ pub mod prelude {
     pub use crate::algorithms::{Algorithm, SolverKind};
     pub use crate::cluster::{Cluster, InProcessCluster, MessageCluster, ThreadedCluster};
     pub use crate::config::{Backend, TrainConfig};
-    pub use crate::data::Dataset;
+    pub use crate::data::{Dataset, FeatureFormat, Features};
+    pub use crate::linalg::CsrMatrix;
     pub use crate::metrics::{RunTrace, TracePoint};
     pub use crate::objective::{LogisticRidge, Objective};
     pub use crate::quant::{CompressorKind, Grid, GridPolicy};

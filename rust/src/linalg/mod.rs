@@ -1,9 +1,14 @@
-//! Dense vector / row-major matrix kernels used on the coordinator hot path.
+//! Dense vector / row-major matrix kernels used on the coordinator hot path,
+//! plus the CSR storage and fused sparse kernels in [`sparse`].
 //!
 //! Everything here is written over contiguous `&[f64]` slices with simple
 //! loop shapes so LLVM autovectorizes them; the perf pass (EXPERIMENTS.md
 //! §Perf) measures these directly. No allocation happens inside any kernel —
 //! callers own the buffers.
+
+pub mod sparse;
+
+pub use sparse::{spaxpy, spdot, CsrMatrix};
 
 /// Dot product.
 #[inline]

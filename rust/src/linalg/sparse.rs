@@ -1,0 +1,504 @@
+//! CSR feature storage and fused sparse kernels.
+//!
+//! The paper's real workloads (rcv1/news20-class libsvm files) are extremely
+//! sparse — d ≈ 47k with ~75 nonzeros per row — so dense `n × d` storage is
+//! ~600× more compute and memory than the data warrants. [`CsrMatrix`] holds
+//! the classic indptr/indices/values triplet and the kernels below run in
+//! O(nnz) per row.
+//!
+//! **Bit-compatibility contract** (pinned by
+//! `driver::tests::csr_backend_bitwise_matches_dense`): [`spdot`] uses the
+//! *same* 4-accumulator reduction shape as the dense [`super::dot`], and
+//! [`spaxpy`] the same `out += c·v` update as [`super::axpy`], in the same
+//! (ascending-index) order — so a CSR matrix that stores every entry of a
+//! dense matrix produces bit-identical dots, gradients, and losses. Skipping
+//! a stored-zero entry only ever drops `acc += v·0.0` / `out += c·0.0` terms,
+//! which cannot change a finite partial sum.
+
+use anyhow::{bail, Result};
+
+/// A sparse row-major matrix in Compressed Sparse Row form.
+///
+/// Invariants (enforced by [`CsrMatrix::new`]):
+/// * `indptr` has `n_rows + 1` monotonically non-decreasing entries with
+///   `indptr[0] == 0` and `indptr[n_rows] == indices.len() == values.len()`;
+/// * within each row, column indices are **strictly increasing** (sorted,
+///   no duplicates) and `< n_cols`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CsrMatrix {
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f64>,
+    n_rows: usize,
+    n_cols: usize,
+}
+
+impl CsrMatrix {
+    /// Build from raw CSR arrays, validating every invariant.
+    pub fn new(
+        indptr: Vec<usize>,
+        indices: Vec<u32>,
+        values: Vec<f64>,
+        n_cols: usize,
+    ) -> Result<Self> {
+        if indptr.is_empty() || indptr[0] != 0 {
+            bail!("indptr must start with 0");
+        }
+        let n_rows = indptr.len() - 1;
+        let nnz = *indptr.last().unwrap();
+        if indices.len() != nnz || values.len() != nnz {
+            bail!(
+                "indptr ends at {nnz} but indices/values hold {}/{}",
+                indices.len(),
+                values.len()
+            );
+        }
+        for i in 0..n_rows {
+            let (lo, hi) = (indptr[i], indptr[i + 1]);
+            if hi < lo {
+                bail!("indptr not monotone at row {i}");
+            }
+            let row = &indices[lo..hi];
+            for (k, &j) in row.iter().enumerate() {
+                if j as usize >= n_cols {
+                    bail!("row {i}: column index {j} >= n_cols {n_cols}");
+                }
+                if k > 0 && row[k - 1] >= j {
+                    bail!("row {i}: column indices not strictly increasing at {j}");
+                }
+            }
+        }
+        Ok(Self {
+            indptr,
+            indices,
+            values,
+            n_rows,
+            n_cols,
+        })
+    }
+
+    /// Build from per-row `(column, value)` pair lists (each row must be
+    /// strictly increasing in column — the loaders sort and de-duplicate
+    /// before calling this).
+    pub fn from_rows(rows: &[Vec<(u32, f64)>], n_cols: usize) -> Result<Self> {
+        let nnz: usize = rows.iter().map(Vec::len).sum();
+        let mut indptr = Vec::with_capacity(rows.len() + 1);
+        let mut indices = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        indptr.push(0);
+        for row in rows {
+            for &(j, v) in row {
+                indices.push(j);
+                values.push(v);
+            }
+            indptr.push(indices.len());
+        }
+        Self::new(indptr, indices, values, n_cols)
+    }
+
+    /// Convert a dense row-major matrix, dropping exact zeros.
+    pub fn from_dense(x: &[f64], n_rows: usize, n_cols: usize) -> Self {
+        assert_eq!(x.len(), n_rows * n_cols, "dense shape mismatch");
+        assert!(n_cols <= u32::MAX as usize, "n_cols exceeds u32 index range");
+        let mut indptr = Vec::with_capacity(n_rows + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for i in 0..n_rows {
+            for j in 0..n_cols {
+                let v = x[i * n_cols + j];
+                if v != 0.0 {
+                    indices.push(j as u32);
+                    values.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        Self {
+            indptr,
+            indices,
+            values,
+            n_rows,
+            n_cols,
+        }
+    }
+
+    /// Expand to a dense row-major buffer (absent entries become 0.0).
+    pub fn to_dense(&self) -> Vec<f64> {
+        let mut x = vec![0.0; self.n_rows * self.n_cols];
+        for i in 0..self.n_rows {
+            let (idx, vals) = self.row(i);
+            let row = &mut x[i * self.n_cols..(i + 1) * self.n_cols];
+            for (&j, &v) in idx.iter().zip(vals) {
+                row[j as usize] = v;
+            }
+        }
+        x
+    }
+
+    #[inline]
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    #[inline]
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Fraction of stored entries: `nnz / (n_rows · n_cols)`.
+    pub fn density(&self) -> f64 {
+        if self.n_rows == 0 || self.n_cols == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / (self.n_rows as f64 * self.n_cols as f64)
+    }
+
+    /// Row `i` as parallel `(indices, values)` slices.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f64]) {
+        let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// All stored values, row-major (the flat-iteration twin of a dense
+    /// buffer; used for `Σ v²`-style reductions).
+    #[inline]
+    pub fn values(&self) -> &[f64] {
+        &self.values
+    }
+
+    /// All stored `(column, value)` pairs, row-major.
+    pub fn iter_entries(&self) -> impl Iterator<Item = (usize, f64)> + '_ {
+        self.indices
+            .iter()
+            .zip(&self.values)
+            .map(|(&j, &v)| (j as usize, v))
+    }
+
+    /// All stored `(column, &mut value)` pairs, row-major (scale-only
+    /// column transforms; the column structure is fixed).
+    pub fn iter_entries_mut(&mut self) -> impl Iterator<Item = (usize, &mut f64)> + '_ {
+        self.indices
+            .iter()
+            .zip(self.values.iter_mut())
+            .map(|(&j, v)| (j as usize, v))
+    }
+
+    /// Copy of the contiguous row block `[lo, hi)` (sharding).
+    pub fn row_range(&self, lo: usize, hi: usize) -> CsrMatrix {
+        assert!(lo <= hi && hi <= self.n_rows);
+        let (a, b) = (self.indptr[lo], self.indptr[hi]);
+        let indptr: Vec<usize> = self.indptr[lo..=hi].iter().map(|p| p - a).collect();
+        CsrMatrix {
+            indptr,
+            indices: self.indices[a..b].to_vec(),
+            values: self.values[a..b].to_vec(),
+            n_rows: hi - lo,
+            n_cols: self.n_cols,
+        }
+    }
+
+    /// Gather the given rows, in order (train/test splits).
+    pub fn select_rows(&self, ids: &[usize]) -> CsrMatrix {
+        let nnz: usize = ids.iter().map(|&i| self.indptr[i + 1] - self.indptr[i]).sum();
+        let mut indptr = Vec::with_capacity(ids.len() + 1);
+        let mut indices = Vec::with_capacity(nnz);
+        let mut values = Vec::with_capacity(nnz);
+        indptr.push(0);
+        for &i in ids {
+            let (idx, vals) = self.row(i);
+            indices.extend_from_slice(idx);
+            values.extend_from_slice(vals);
+            indptr.push(indices.len());
+        }
+        CsrMatrix {
+            indptr,
+            indices,
+            values,
+            n_rows: ids.len(),
+            n_cols: self.n_cols,
+        }
+    }
+
+    /// Append a constant-1 bias column (`n_cols → n_cols + 1`).
+    pub fn with_bias_col(&self) -> CsrMatrix {
+        let mut indptr = Vec::with_capacity(self.n_rows + 1);
+        let mut indices = Vec::with_capacity(self.nnz() + self.n_rows);
+        let mut values = Vec::with_capacity(self.nnz() + self.n_rows);
+        indptr.push(0);
+        for i in 0..self.n_rows {
+            let (idx, vals) = self.row(i);
+            indices.extend_from_slice(idx);
+            values.extend_from_slice(vals);
+            indices.push(self.n_cols as u32);
+            values.push(1.0);
+            indptr.push(indices.len());
+        }
+        CsrMatrix {
+            indptr,
+            indices,
+            values,
+            n_rows: self.n_rows,
+            n_cols: self.n_cols + 1,
+        }
+    }
+
+    /// Scale every row by its own factor: `row_i *= c[i]` (margin
+    /// construction `z_i = y_i x_i`).
+    pub fn scale_rows(&mut self, c: &[f64]) {
+        assert_eq!(c.len(), self.n_rows);
+        for i in 0..self.n_rows {
+            let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+            let ci = c[i];
+            for v in &mut self.values[lo..hi] {
+                *v *= ci;
+            }
+        }
+    }
+
+    /// `out[i] = row_i · x` — the sparse twin of
+    /// [`super::gemv_row_major`]; O(nnz) total.
+    pub fn spmv(&self, x: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.n_cols);
+        debug_assert_eq!(out.len(), self.n_rows);
+        for (i, o) in out.iter_mut().enumerate() {
+            let (idx, vals) = self.row(i);
+            *o = spdot(idx, vals, x);
+        }
+    }
+
+    /// `out[j] += Σ_i coeff[i] · a_ij` — the sparse twin of
+    /// [`super::gemv_t_row_major_acc`]; O(nnz) total. (The logistic
+    /// gradient does NOT route through this: it fuses the coefficient and
+    /// the scatter into one per-row pass over `spdot`/`spaxpy`.)
+    pub fn spmv_t_acc(&self, coeff: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(coeff.len(), self.n_rows);
+        debug_assert_eq!(out.len(), self.n_cols);
+        for (i, &c) in coeff.iter().enumerate() {
+            if c == 0.0 {
+                continue;
+            }
+            let (idx, vals) = self.row(i);
+            spaxpy(c, idx, vals, out);
+        }
+    }
+}
+
+/// Sparse dot product `Σ_k values[k] · w[indices[k]]`.
+///
+/// Same 4-independent-accumulator reduction as the dense [`super::dot`]
+/// (breaks the fp dependency chain for vectorized gathers AND makes a
+/// fully-stored row reduce in the exact dense grouping — the
+/// bit-compatibility contract in the module docs).
+#[inline]
+pub fn spdot(indices: &[u32], values: &[f64], w: &[f64]) -> f64 {
+    debug_assert_eq!(indices.len(), values.len());
+    let mut acc = [0.0f64; 4];
+    let chunks = values.len() / 4;
+    for c in 0..chunks {
+        let k = c * 4;
+        acc[0] += values[k] * w[indices[k] as usize];
+        acc[1] += values[k + 1] * w[indices[k + 1] as usize];
+        acc[2] += values[k + 2] * w[indices[k + 2] as usize];
+        acc[3] += values[k + 3] * w[indices[k + 3] as usize];
+    }
+    let mut tail = 0.0;
+    for k in chunks * 4..values.len() {
+        tail += values[k] * w[indices[k] as usize];
+    }
+    acc[0] + acc[1] + acc[2] + acc[3] + tail
+}
+
+/// Sparse scaled scatter-add: `out[indices[k]] += c · values[k]`.
+#[inline]
+pub fn spaxpy(c: f64, indices: &[u32], values: &[f64], out: &mut [f64]) {
+    debug_assert_eq!(indices.len(), values.len());
+    for (&j, &v) in indices.iter().zip(values) {
+        out[j as usize] += c * v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg;
+    use crate::testkit::{forall, gen_vec};
+
+    /// 3×4: [[1,0,2,0],[0,0,0,3],[4,5,0,0]]
+    fn toy() -> CsrMatrix {
+        CsrMatrix::new(
+            vec![0, 2, 3, 5],
+            vec![0, 2, 3, 0, 1],
+            vec![1.0, 2.0, 3.0, 4.0, 5.0],
+            4,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn new_validates_invariants() {
+        // bad indptr start
+        assert!(CsrMatrix::new(vec![1, 2], vec![0], vec![1.0], 3).is_err());
+        // nnz mismatch
+        assert!(CsrMatrix::new(vec![0, 2], vec![0], vec![1.0], 3).is_err());
+        // non-monotone indptr
+        assert!(CsrMatrix::new(vec![0, 2, 1], vec![0, 1], vec![1.0, 1.0], 3).is_err());
+        // column out of range
+        assert!(CsrMatrix::new(vec![0, 1], vec![3], vec![1.0], 3).is_err());
+        // duplicate column in a row
+        assert!(CsrMatrix::new(vec![0, 2], vec![1, 1], vec![1.0, 2.0], 3).is_err());
+        // unsorted columns in a row
+        assert!(CsrMatrix::new(vec![0, 2], vec![2, 1], vec![1.0, 2.0], 3).is_err());
+        // valid
+        assert!(CsrMatrix::new(vec![0, 2], vec![1, 2], vec![1.0, 2.0], 3).is_ok());
+    }
+
+    #[test]
+    fn shape_and_rows() {
+        let m = toy();
+        assert_eq!((m.n_rows(), m.n_cols(), m.nnz()), (3, 4, 5));
+        assert!((m.density() - 5.0 / 12.0).abs() < 1e-15);
+        let (idx, vals) = m.row(1);
+        assert_eq!(idx, &[3]);
+        assert_eq!(vals, &[3.0]);
+        let (idx, vals) = m.row(2);
+        assert_eq!(idx, &[0, 1]);
+        assert_eq!(vals, &[4.0, 5.0]);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let m = toy();
+        let x = m.to_dense();
+        assert_eq!(
+            x,
+            vec![1.0, 0.0, 2.0, 0.0, 0.0, 0.0, 0.0, 3.0, 4.0, 5.0, 0.0, 0.0]
+        );
+        let back = CsrMatrix::from_dense(&x, 3, 4);
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn spmv_matches_dense_gemv() {
+        let m = toy();
+        let x = [1.0, -1.0, 0.5, 2.0];
+        let mut sparse_out = [0.0; 3];
+        m.spmv(&x, &mut sparse_out);
+        let dense = m.to_dense();
+        let mut dense_out = [0.0; 3];
+        linalg::gemv_row_major(&dense, 3, 4, &x, &mut dense_out);
+        assert_eq!(sparse_out, dense_out);
+    }
+
+    #[test]
+    fn spmv_t_matches_dense_gemv_t() {
+        let m = toy();
+        let c = [2.0, -1.0, 0.5];
+        let mut sparse_out = [0.0; 4];
+        m.spmv_t_acc(&c, &mut sparse_out);
+        let dense = m.to_dense();
+        let mut dense_out = [0.0; 4];
+        linalg::gemv_t_row_major_acc(&dense, 3, 4, &c, &mut dense_out);
+        assert_eq!(sparse_out, dense_out);
+    }
+
+    #[test]
+    fn fully_stored_row_is_bitwise_dense_dot() {
+        // the bit-compatibility contract: CSR holding EVERY entry of a row
+        // reduces in the exact dense accumulator grouping
+        let vals: Vec<f64> = (0..37).map(|i| (i as f64 * 0.7).sin() * 3.0).collect();
+        let idx: Vec<u32> = (0..37).collect();
+        let w: Vec<f64> = (0..37).map(|i| 1.0 - (i as f64) * 0.21).collect();
+        assert_eq!(
+            spdot(&idx, &vals, &w).to_bits(),
+            linalg::dot(&vals, &w).to_bits()
+        );
+        let mut a = vec![0.1; 37];
+        let mut b = a.clone();
+        spaxpy(-1.37, &idx, &vals, &mut a);
+        linalg::axpy(-1.37, &vals, &mut b);
+        assert_eq!(
+            a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn row_range_and_select() {
+        let m = toy();
+        let mid = m.row_range(1, 3);
+        assert_eq!(mid.n_rows(), 2);
+        assert_eq!(mid.row(0), m.row(1));
+        assert_eq!(mid.row(1), m.row(2));
+        let picked = m.select_rows(&[2, 0]);
+        assert_eq!(picked.n_rows(), 2);
+        assert_eq!(picked.row(0), m.row(2));
+        assert_eq!(picked.row(1), m.row(0));
+    }
+
+    #[test]
+    fn bias_column_appends_ones() {
+        let m = toy().with_bias_col();
+        assert_eq!(m.n_cols(), 5);
+        for i in 0..3 {
+            let (idx, vals) = m.row(i);
+            assert_eq!(*idx.last().unwrap(), 4);
+            assert_eq!(*vals.last().unwrap(), 1.0);
+        }
+        // still a valid CSR (strictly increasing indices)
+        CsrMatrix::new(
+            m.indptr.clone(),
+            m.indices.clone(),
+            m.values.clone(),
+            m.n_cols,
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn scale_rows_scales_per_row() {
+        let mut m = toy();
+        m.scale_rows(&[1.0, -1.0, 2.0]);
+        assert_eq!(m.row(0).1, &[1.0, 2.0]);
+        assert_eq!(m.row(1).1, &[-3.0]);
+        assert_eq!(m.row(2).1, &[8.0, 10.0]);
+    }
+
+    #[test]
+    fn prop_sparse_kernels_match_dense_on_random_matrices() {
+        forall(80, 0x5A12, |rng| {
+            let n = 1 + rng.gen_index(12);
+            let d = 1 + rng.gen_index(40);
+            let density = rng.gen_uniform(0.05, 0.6);
+            let mut x = vec![0.0; n * d];
+            for v in x.iter_mut() {
+                if rng.next_f64() < density {
+                    *v = rng.gen_uniform(-2.0, 2.0);
+                }
+            }
+            let m = CsrMatrix::from_dense(&x, n, d);
+            let w = gen_vec(rng, d, -1.5, 1.5);
+            let mut so = vec![0.0; n];
+            let mut go = vec![0.0; n];
+            m.spmv(&w, &mut so);
+            linalg::gemv_row_major(&x, n, d, &w, &mut go);
+            for (a, b) in so.iter().zip(&go) {
+                assert!((a - b).abs() < 1e-12, "spmv {a} vs {b}");
+            }
+            let c = gen_vec(rng, n, -1.0, 1.0);
+            let mut st = vec![0.0; d];
+            let mut gt = vec![0.0; d];
+            m.spmv_t_acc(&c, &mut st);
+            linalg::gemv_t_row_major_acc(&x, n, d, &c, &mut gt);
+            for (a, b) in st.iter().zip(&gt) {
+                assert!((a - b).abs() < 1e-12, "spmv_t {a} vs {b}");
+            }
+        });
+    }
+}

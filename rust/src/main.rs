@@ -34,11 +34,19 @@ fn run(argv: Vec<String>) -> Result<()> {
     }
 }
 
-/// Resolve `--dataset`: synthetic generators or a file on disk.
-fn load_dataset(name: &str, n_samples: usize, seed: u64) -> Result<(Dataset, Dataset)> {
+/// Resolve `--dataset`: synthetic generators or a file on disk. `format`
+/// picks the feature storage: `Auto` keeps libsvm files sparse below the
+/// loader's density threshold, `dense`/`sparse` force a storage. Sparse
+/// storage standardizes scale-only (no centering — see README §Datasets).
+fn load_dataset(
+    name: &str,
+    n_samples: usize,
+    seed: u64,
+    format: qmsvrg::data::FeatureFormat,
+) -> Result<(Dataset, Dataset)> {
     let (mut train, mut test) = match name {
         "power" => {
-            let ds = synthetic::power_like(n_samples, seed);
+            let ds = synthetic::power_like(n_samples, seed).with_format(format);
             ds.split(0.8, seed ^ 0x5117)
         }
         "mnist" => {
@@ -51,14 +59,14 @@ fn load_dataset(name: &str, n_samples: usize, seed: u64) -> Result<(Dataset, Dat
             } else {
                 synthetic::mnist_like(n_samples, seed)
             };
-            ds.split(0.8, seed ^ 0x919)
+            ds.with_format(format).split(0.8, seed ^ 0x919)
         }
         path if path.ends_with(".csv") => {
-            let ds = loaders::load_csv(Path::new(path), ',', 0, true)?;
+            let ds = loaders::load_csv(Path::new(path), ',', 0, true)?.with_format(format);
             ds.split(0.8, seed)
         }
         path if path.ends_with(".svm") || path.ends_with(".libsvm") => {
-            let ds = loaders::load_libsvm(Path::new(path), None)?;
+            let ds = loaders::load_libsvm_format(Path::new(path), None, format)?;
             ds.split(0.8, seed)
         }
         other => bail!("unknown dataset {other:?} (power|mnist|*.csv|*.svm)"),
@@ -72,7 +80,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     args.reject_unknown(&[
         "algorithm", "dataset", "samples", "workers", "epoch-len", "iters", "step", "bits",
         "lambda", "seed", "backend", "out", "digit", "fixed-radius", "slack", "config",
-        "compressor",
+        "compressor", "format",
     ])?;
     // start from a TOML config file when given, then apply CLI overrides
     let base = match args.get("config") {
@@ -98,6 +106,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         },
         seed: args.get_u64("seed", base.seed)?,
         dataset: args.get_or("dataset", &base.dataset),
+        format: match args.get("format") {
+            Some(f) => f.parse()?,
+            None => base.format,
+        },
         n_samples: args.get_usize("samples", base.n_samples)?,
         backend: match args.get("backend") {
             Some(b) => b.parse()?,
@@ -107,7 +119,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     cfg.validate()?;
 
-    let (mut train, mut test) = load_dataset(&cfg.dataset, cfg.n_samples, cfg.seed)?;
+    let (mut train, mut test) = load_dataset(&cfg.dataset, cfg.n_samples, cfg.seed, cfg.format)?;
     if cfg.dataset == "mnist" {
         let digit = args.get_f64("digit", 9.0)?;
         train = train.one_vs_all(digit);
@@ -115,10 +127,12 @@ fn cmd_train(args: &Args) -> Result<()> {
     }
 
     eprintln!(
-        "# {} on {} (n={}, d={}, N={} workers, T={}, K={}, α={}, b/d={}, \
-         compressor={}, backend={:?})",
+        "# {} on {} [{} storage, density {:.4}] (n={}, d={}, N={} workers, T={}, K={}, \
+         α={}, b/d={}, compressor={}, backend={:?})",
         cfg.algorithm,
         cfg.dataset,
+        train.storage_name(),
+        train.density(),
         train.n,
         train.d,
         cfg.n_workers,
@@ -317,7 +331,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
     args.reject_unknown(&[
         "connect", "dataset", "samples", "shard", "workers", "lambda", "bits", "seed",
         "adaptive", "backend", "compressor", "plus", "step", "epoch-len", "slack",
-        "fixed-radius",
+        "fixed-radius", "format",
     ])?;
     let addr = args.get("connect").context("--connect HOST:PORT required")?;
     let n_samples = args.get_usize("samples", 20_000)?;
@@ -325,18 +339,25 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let shard_idx = args.get_usize("shard", 0)?;
     let n_workers = args.get_usize("workers", 4)?;
     let lambda = args.get_f64("lambda", 0.1)?;
+    // storage must match the master's: scale-only (sparse) vs centering
+    // (dense) standardization produce different data. The Config handshake
+    // carries the master's resolved storage and this worker refuses a
+    // mismatch at connect instead of silently training on different data.
+    let format: qmsvrg::data::FeatureFormat = args.get_or("format", "auto").parse()?;
 
     // workers regenerate the whole dataset deterministically from the shared
     // seed: their own shard for gradients, and (for adaptive grids) the
     // *global* problem geometry (μ, L, d) so the quantization grids
     // replicate the master's bit-for-bit
-    let (train, _) = load_dataset(&args.get_or("dataset", "power"), n_samples, seed)?;
+    let (train, _) = load_dataset(&args.get_or("dataset", "power"), n_samples, seed, format)?;
     let shards = train.shard(n_workers);
     let shard = &shards[shard_idx];
-    let obj = qmsvrg::objective::LogisticRidge::new(&shard.x, &shard.y, shard.n, shard.d, lambda);
+    let obj = qmsvrg::objective::LogisticRidge::from_dataset(shard, lambda);
     eprintln!(
-        "# worker {shard_idx}/{n_workers}: shard n={} d={}, connecting to {addr}",
-        shard.n, shard.d
+        "# worker {shard_idx}/{n_workers}: shard n={} d={} [{}], connecting to {addr}",
+        shard.n,
+        shard.d,
+        shard.storage_name()
     );
 
     let quant = match args.get("bits") {

@@ -52,6 +52,18 @@ impl Confusion {
             (self.tp + self.tn) as f64 / total as f64
         }
     }
+
+    /// Tally one sample from its margin `s = w·x` and ±1 label — the one
+    /// decision rule (`s > 0.0` predicts positive) both storages share.
+    #[inline]
+    pub fn record(&mut self, s: f64, y: f64) {
+        match (s > 0.0, y > 0.0) {
+            (true, true) => self.tp += 1,
+            (true, false) => self.fp += 1,
+            (false, false) => self.tn += 1,
+            (false, true) => self.fn_ += 1,
+        }
+    }
 }
 
 /// Score a linear classifier `sign(w·x)` against ±1 labels.
@@ -60,15 +72,7 @@ pub fn confusion_binary(w: &[f64], x: &[f64], y: &[f64], n: usize, d: usize) -> 
     debug_assert_eq!(y.len(), n);
     let mut c = Confusion::default();
     for i in 0..n {
-        let s = linalg::dot(&x[i * d..(i + 1) * d], w);
-        let pred_pos = s > 0.0;
-        let actual_pos = y[i] > 0.0;
-        match (pred_pos, actual_pos) {
-            (true, true) => c.tp += 1,
-            (true, false) => c.fp += 1,
-            (false, false) => c.tn += 1,
-            (false, true) => c.fn_ += 1,
-        }
+        c.record(linalg::dot(&x[i * d..(i + 1) * d], w), y[i]);
     }
     c
 }
@@ -76,6 +80,28 @@ pub fn confusion_binary(w: &[f64], x: &[f64], y: &[f64], n: usize, d: usize) -> 
 /// F1 of `sign(w·x)` on a ±1-labeled set.
 pub fn f1_binary(w: &[f64], x: &[f64], y: &[f64], n: usize, d: usize) -> f64 {
     confusion_binary(w, x, y, n, d).f1()
+}
+
+/// Score a linear classifier against a [`Dataset`] in its own storage:
+/// dense rows use [`confusion_binary`] unchanged; CSR rows score each
+/// margin in O(nnz) via [`crate::linalg::spdot`].
+pub fn confusion_dataset(w: &[f64], ds: &crate::data::Dataset) -> Confusion {
+    match ds.feats() {
+        crate::data::Features::Dense(x) => confusion_binary(w, x, &ds.y, ds.n, ds.d),
+        crate::data::Features::Csr(m) => {
+            let mut c = Confusion::default();
+            for i in 0..ds.n {
+                let (idx, vals) = m.row(i);
+                c.record(crate::linalg::spdot(idx, vals, w), ds.y[i]);
+            }
+            c
+        }
+    }
+}
+
+/// F1 of `sign(w·x)` on a ±1-labeled [`Dataset`] (either storage).
+pub fn f1_dataset(w: &[f64], ds: &crate::data::Dataset) -> f64 {
+    confusion_dataset(w, ds).f1()
 }
 
 /// Multiclass accuracy of one-vs-all classifiers: predict
@@ -163,6 +189,18 @@ mod tests {
         let winv = vec![-1.0, 0.0];
         let c2 = confusion_binary(&winv, &x, &y, 4, 2);
         assert_eq!(c2.f1(), 0.0);
+    }
+
+    #[test]
+    fn dataset_confusion_matches_dense_on_both_storages() {
+        let x = vec![1.0, 0.0, -1.0, 0.0, 2.0, 0.0, -2.0, 0.0];
+        let y = vec![1.0, -1.0, 1.0, -1.0];
+        let w = vec![1.0, 0.0];
+        let ds = crate::data::Dataset::new(x.clone(), y.clone(), 4, 2).unwrap();
+        let expect = confusion_binary(&w, &x, &y, 4, 2);
+        assert_eq!(confusion_dataset(&w, &ds), expect);
+        assert_eq!(confusion_dataset(&w, &ds.to_csr()), expect);
+        assert_eq!(f1_dataset(&w, &ds.to_csr()), 1.0);
     }
 
     #[test]

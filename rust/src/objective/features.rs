@@ -1,0 +1,73 @@
+//! Margin construction `z_i = y_i x_i` for either feature storage.
+//!
+//! Every dense row-major indexing of a *raw feature buffer* inside
+//! `objective/` lives in this file — CI greps the module tree for stray
+//! `x[i * d` patterns to keep the storage-polymorphic objectives honest
+//! (sparse data must never be silently densified on a compute path).
+
+use crate::data::{Dataset, Features};
+
+/// Dense margins from raw features + ±1 labels (row-major `n × d`).
+pub fn dense_margins(x: &[f64], y: &[f64], n: usize, d: usize) -> Vec<f64> {
+    assert_eq!(x.len(), n * d);
+    assert_eq!(y.len(), n);
+    let mut z = vec![0.0; n * d];
+    for i in 0..n {
+        debug_assert!(y[i] == 1.0 || y[i] == -1.0, "labels must be ±1");
+        for j in 0..d {
+            z[i * d + j] = x[i * d + j] * y[i];
+        }
+    }
+    z
+}
+
+/// Margins in the dataset's own storage: dense stays dense, CSR stays CSR
+/// (each stored value is scaled by its row's label — structural zeros are
+/// untouched, so margins inherit the features' sparsity exactly).
+pub fn margins_from_dataset(ds: &Dataset) -> Features {
+    match ds.feats() {
+        Features::Dense(x) => Features::Dense(dense_margins(x, &ds.y, ds.n, ds.d)),
+        Features::Csr(m) => {
+            debug_assert!(
+                ds.y.iter().all(|&v| v == 1.0 || v == -1.0),
+                "labels must be ±1"
+            );
+            let mut z = m.clone();
+            z.scale_rows(&ds.y);
+            Features::Csr(z)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Dataset;
+    use crate::linalg::CsrMatrix;
+
+    #[test]
+    fn dense_margins_flip_negative_rows() {
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        let z = dense_margins(&x, &[1.0, -1.0], 2, 2);
+        assert_eq!(z, vec![1.0, 2.0, -3.0, -4.0]);
+    }
+
+    #[test]
+    fn csr_margins_match_densified() {
+        let m = CsrMatrix::new(
+            vec![0, 2, 3],
+            vec![0, 2, 1],
+            vec![1.5, -2.0, 0.5],
+            3,
+        )
+        .unwrap();
+        let ds = Dataset::from_csr(m, vec![-1.0, 1.0]).unwrap();
+        let sparse = margins_from_dataset(&ds);
+        let dense = margins_from_dataset(&ds.to_dense());
+        let (Features::Csr(zs), Features::Dense(zd)) = (&sparse, &dense) else {
+            panic!("storage not preserved");
+        };
+        assert_eq!(zs.to_dense(), *zd);
+        assert_eq!(zs.nnz(), 3, "margins inherit sparsity");
+    }
+}

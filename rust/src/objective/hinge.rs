@@ -182,7 +182,7 @@ mod tests {
         use crate::data::synthetic::power_like;
         let mut ds = power_like(500, 3);
         ds.standardize();
-        let obj = SmoothedHingeRidge::new(&ds.x, &ds.y, ds.n, ds.d, 0.1);
+        let obj = SmoothedHingeRidge::new(ds.x(), &ds.y, ds.n, ds.d, 0.1);
         let mut w = vec![0.0; ds.d];
         let mut g = vec![0.0; ds.d];
         let step = 1.0 / obj.l_smooth();

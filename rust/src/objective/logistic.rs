@@ -3,17 +3,29 @@
 //! `f(w) = (1/n) Σ ln(1 + e^{-z_i·w}) + λ‖w‖²`
 //! `∇f(w) = -(1/n) Σ σ(-z_i·w) z_i + 2λw`
 //!
+//! **Storage-polymorphic**: the margin matrix lives in a
+//! [`Features`] enum — row-major dense, or CSR — and `loss` / `grad` /
+//! `sample_grad` dispatch *once per call*, then run a monomorphic loop:
+//! O(nd) on dense rows, O(nnz) on sparse ones. The CSR kernels
+//! ([`crate::linalg::sparse`]) use the dense kernels' accumulation shape,
+//! so a CSR objective holding every entry of a dense matrix is
+//! bit-identical to its dense twin (pinned by
+//! `driver::tests::csr_backend_bitwise_matches_dense`), and a genuinely
+//! sparse one agrees to fp-roundoff (`tests/properties.rs`).
+//!
 //! This is the native (pure-Rust) twin of the JAX/Pallas artifact — the
 //! integration tests assert both backends produce the same numbers.
 
+use super::features;
 use super::Objective;
-use crate::linalg::{self, sigmoid, softplus};
+use crate::data::{Dataset, Features};
+use crate::linalg::{self, sigmoid, softplus, sparse, CsrMatrix};
 
-/// Dense logistic-ridge objective. Stores the margin matrix row-major.
+/// Logistic-ridge objective over dense or CSR margin storage.
 #[derive(Clone, Debug)]
 pub struct LogisticRidge {
-    /// Margin rows `z_i = y_i x_i`, row-major `n × d`.
-    z: Vec<f64>,
+    /// Margin rows `z_i = y_i x_i` (dense: row-major `n × d`).
+    z: Features,
     n: usize,
     d: usize,
     /// Ridge coefficient λ.
@@ -22,26 +34,39 @@ pub struct LogisticRidge {
 }
 
 impl LogisticRidge {
-    /// Build from raw features + ±1 labels.
+    /// Build from raw dense features + ±1 labels.
     pub fn new(x: &[f64], y: &[f64], n: usize, d: usize, lambda: f64) -> Self {
-        assert_eq!(x.len(), n * d);
-        assert_eq!(y.len(), n);
-        let mut z = vec![0.0; n * d];
-        for i in 0..n {
-            debug_assert!(y[i] == 1.0 || y[i] == -1.0, "labels must be ±1");
-            for j in 0..d {
-                z[i * d + j] = x[i * d + j] * y[i];
-            }
-        }
-        Self::from_margins(z, n, d, lambda)
+        Self::from_margins(features::dense_margins(x, y, n, d), n, d, lambda)
     }
 
-    /// Build directly from precomputed margins `z_i = y_i x_i`.
+    /// Build directly from precomputed dense margins `z_i = y_i x_i`.
     pub fn from_margins(z: Vec<f64>, n: usize, d: usize, lambda: f64) -> Self {
         assert_eq!(z.len(), n * d);
+        Self::from_margin_features(Features::Dense(z), n, d, lambda)
+    }
+
+    /// Build from precomputed CSR margins.
+    pub fn from_margins_csr(z: CsrMatrix, lambda: f64) -> Self {
+        let (n, d) = (z.n_rows(), z.n_cols());
+        Self::from_margin_features(Features::Csr(z), n, d, lambda)
+    }
+
+    /// Build from a dataset in **its own storage** — the one constructor the
+    /// sharded objective, the cluster backends, the driver, and `qmsvrg
+    /// worker` all share, so every layer accepts dense and CSR data alike.
+    pub fn from_dataset(ds: &Dataset, lambda: f64) -> Self {
+        Self::from_margin_features(features::margins_from_dataset(ds), ds.n, ds.d, lambda)
+    }
+
+    fn from_margin_features(z: Features, n: usize, d: usize, lambda: f64) -> Self {
         assert!(n > 0 && d > 0);
-        // L = (1/4n) Σ ‖z_i‖² + 2λ  (§4.1 Hessian max-eig bound)
-        let sum_sq: f64 = z.iter().map(|v| v * v).sum();
+        // L = (1/4n) Σ ‖z_i‖² + 2λ  (§4.1 Hessian max-eig bound). The CSR
+        // sum skips only exact zeros, in the same row-major order, so it
+        // reproduces the dense reduction bit-for-bit on fully-stored data.
+        let sum_sq: f64 = match &z {
+            Features::Dense(z) => z.iter().map(|v| v * v).sum(),
+            Features::Csr(m) => m.values().iter().map(|v| v * v).sum(),
+        };
         let l_smooth = sum_sq / (4.0 * n as f64) + 2.0 * lambda;
         Self {
             z,
@@ -53,13 +78,45 @@ impl LogisticRidge {
     }
 
     #[inline]
+    pub fn is_sparse(&self) -> bool {
+        matches!(self.z, Features::Csr(_))
+    }
+
+    /// Stored margin entries (dense storage counts all `n·d`).
+    pub fn nnz(&self) -> usize {
+        match &self.z {
+            Features::Dense(z) => z.len(),
+            Features::Csr(m) => m.nnz(),
+        }
+    }
+
+    /// Dense margin row. Panics on CSR storage — callers that need a dense
+    /// view of sparse margins use [`Self::margins_dense`].
+    #[inline]
     pub fn margin_row(&self, i: usize) -> &[f64] {
-        &self.z[i * self.d..(i + 1) * self.d]
+        match &self.z {
+            Features::Dense(z) => &z[i * self.d..(i + 1) * self.d],
+            Features::Csr(_) => panic!(
+                "margin_row: dense access on CSR margins — use margins_dense()"
+            ),
+        }
+    }
+
+    /// The whole margin matrix densified (XLA upload path; works for either
+    /// storage).
+    pub fn margins_dense(&self) -> Vec<f64> {
+        match &self.z {
+            Features::Dense(z) => z.clone(),
+            Features::Csr(m) => m.to_dense(),
+        }
     }
 
     /// All margins in one pass: out[i] = z_i · w.
     pub fn margins(&self, w: &[f64], out: &mut [f64]) {
-        linalg::gemv_row_major(&self.z, self.n, self.d, w, out);
+        match &self.z {
+            Features::Dense(z) => linalg::gemv_row_major(z, self.n, self.d, w, out),
+            Features::Csr(m) => m.spmv(w, out),
+        }
     }
 }
 
@@ -75,9 +132,19 @@ impl Objective for LogisticRidge {
     fn loss(&self, w: &[f64]) -> f64 {
         debug_assert_eq!(w.len(), self.d);
         let mut acc = 0.0;
-        for i in 0..self.n {
-            let s = linalg::dot(self.margin_row(i), w);
-            acc += softplus(-s);
+        match &self.z {
+            Features::Dense(z) => {
+                for i in 0..self.n {
+                    let s = linalg::dot(&z[i * self.d..(i + 1) * self.d], w);
+                    acc += softplus(-s);
+                }
+            }
+            Features::Csr(m) => {
+                for i in 0..self.n {
+                    let (idx, vals) = m.row(i);
+                    acc += softplus(-sparse::spdot(idx, vals, w));
+                }
+            }
         }
         acc / self.n as f64 + self.lambda * linalg::nrm2_sq(w)
     }
@@ -90,22 +157,47 @@ impl Objective for LogisticRidge {
         }
         // single pass: coeff_i = -σ(-z_i·w)/n, out += Σ coeff_i z_i
         let inv_n = 1.0 / self.n as f64;
-        for i in 0..self.n {
-            let row = self.margin_row(i);
-            let s = linalg::dot(row, w);
-            let c = -sigmoid(-s) * inv_n;
-            linalg::axpy(c, row, out);
+        match &self.z {
+            Features::Dense(z) => {
+                for i in 0..self.n {
+                    let row = &z[i * self.d..(i + 1) * self.d];
+                    let s = linalg::dot(row, w);
+                    let c = -sigmoid(-s) * inv_n;
+                    linalg::axpy(c, row, out);
+                }
+            }
+            Features::Csr(m) => {
+                for i in 0..self.n {
+                    let (idx, vals) = m.row(i);
+                    let s = sparse::spdot(idx, vals, w);
+                    let c = -sigmoid(-s) * inv_n;
+                    sparse::spaxpy(c, idx, vals, out);
+                }
+            }
         }
         linalg::axpy(2.0 * self.lambda, w, out);
     }
 
     fn sample_grad(&self, i: usize, w: &[f64], out: &mut [f64]) {
         debug_assert!(i < self.n);
-        let row = self.margin_row(i);
-        let s = linalg::dot(row, w);
-        let c = -sigmoid(-s);
-        for (o, &r) in out.iter_mut().zip(row) {
-            *o = c * r;
+        match &self.z {
+            Features::Dense(z) => {
+                let row = &z[i * self.d..(i + 1) * self.d];
+                let s = linalg::dot(row, w);
+                let c = -sigmoid(-s);
+                for (o, &r) in out.iter_mut().zip(row) {
+                    *o = c * r;
+                }
+            }
+            Features::Csr(m) => {
+                let (idx, vals) = m.row(i);
+                let s = sparse::spdot(idx, vals, w);
+                let c = -sigmoid(-s);
+                for o in out.iter_mut() {
+                    *o = 0.0;
+                }
+                sparse::spaxpy(c, idx, vals, out);
+            }
         }
         linalg::axpy(2.0 * self.lambda, w, out);
     }
@@ -136,6 +228,25 @@ mod tests {
         LogisticRidge::new(&x, &y, 5, 3, 0.1)
     }
 
+    /// The toy problem with a few entries zeroed, in CSR storage, plus its
+    /// dense twin.
+    fn toy_sparse_pair() -> (LogisticRidge, LogisticRidge) {
+        let x = vec![
+            1.0, 0.0, -0.3, //
+            0.0, 1.1, 0.0, //
+            0.4, 0.0, 0.2, //
+            0.0, 0.0, 0.8, //
+            0.6, 0.6, 0.0,
+        ];
+        let y = vec![1.0, -1.0, 1.0, 1.0, -1.0];
+        let dense = crate::data::Dataset::new(x, y, 5, 3).unwrap();
+        let csr = dense.to_csr();
+        (
+            LogisticRidge::from_dataset(&csr, 0.1),
+            LogisticRidge::from_dataset(&dense, 0.1),
+        )
+    }
+
     #[test]
     fn loss_at_zero_is_ln2() {
         let obj = toy();
@@ -149,6 +260,77 @@ mod tests {
         check_grad_fd(&obj, &[0.3, -0.7, 0.2], 1e-4);
         check_grad_fd(&obj, &[0.0, 0.0, 0.0], 1e-4);
         check_grad_fd(&obj, &[2.0, -3.0, 1.5], 1e-4);
+    }
+
+    #[test]
+    fn sparse_gradient_matches_finite_difference() {
+        let (sp, _) = toy_sparse_pair();
+        assert!(sp.is_sparse());
+        check_grad_fd(&sp, &[0.3, -0.7, 0.2], 1e-4);
+        check_grad_fd(&sp, &[0.0, 0.0, 0.0], 1e-4);
+    }
+
+    #[test]
+    fn sparse_agrees_with_dense_twin() {
+        let (sp, dn) = toy_sparse_pair();
+        assert_eq!(sp.nnz(), 8);
+        assert!((sp.l_smooth() - dn.l_smooth()).abs() < 1e-15);
+        let w = [0.2, -0.5, 0.9];
+        assert!((sp.loss(&w) - dn.loss(&w)).abs() < 1e-14);
+        let mut gs = vec![0.0; 3];
+        let mut gd = vec![0.0; 3];
+        sp.grad(&w, &mut gs);
+        dn.grad(&w, &mut gd);
+        assert!(crate::linalg::linf_dist(&gs, &gd) < 1e-14);
+        let mut ss = vec![0.0; 3];
+        let mut sd = vec![0.0; 3];
+        for i in 0..sp.num_samples() {
+            sp.sample_grad(i, &w, &mut ss);
+            dn.sample_grad(i, &w, &mut sd);
+            assert!(crate::linalg::linf_dist(&ss, &sd) < 1e-14, "sample {i}");
+        }
+        let mut ms = vec![0.0; 5];
+        let mut md = vec![0.0; 5];
+        sp.margins(&w, &mut ms);
+        dn.margins(&w, &mut md);
+        assert!(crate::linalg::linf_dist(&ms, &md) < 1e-14);
+    }
+
+    #[test]
+    fn fully_stored_csr_is_bitwise_dense() {
+        // no zero entries: CSR stores every value, so every reduction runs
+        // the dense accumulator grouping — the driver-level fingerprint
+        // guarantee, pinned at the objective level
+        let ds = {
+            let mut ds = crate::data::synthetic::power_like(60, 3);
+            ds.standardize();
+            ds
+        };
+        let csr = ds.to_csr();
+        assert_eq!(csr.nnz(), ds.n * ds.d, "densified data must have no zeros");
+        let a = LogisticRidge::from_dataset(&ds, 0.1);
+        let b = LogisticRidge::from_dataset(&csr, 0.1);
+        assert_eq!(a.l_smooth().to_bits(), b.l_smooth().to_bits());
+        let w: Vec<f64> = (0..ds.d).map(|j| 0.3 - 0.07 * j as f64).collect();
+        assert_eq!(a.loss(&w).to_bits(), b.loss(&w).to_bits());
+        let mut ga = vec![0.0; ds.d];
+        let mut gb = vec![0.0; ds.d];
+        a.grad(&w, &mut ga);
+        b.grad(&w, &mut gb);
+        assert_eq!(
+            ga.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            gb.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        let mut sa = vec![0.0; ds.d];
+        let mut sb = vec![0.0; ds.d];
+        for i in [0, 7, 59] {
+            a.sample_grad(i, &w, &mut sa);
+            b.sample_grad(i, &w, &mut sb);
+            assert_eq!(
+                sa.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                sb.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+            );
+        }
     }
 
     #[test]

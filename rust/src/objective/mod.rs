@@ -9,6 +9,7 @@
 //! * `L  = (1/4N) Σ ‖z_i‖² + 2λ` (logistic; Hessian max-eig bound of §4.1)
 //! * `μ  = 2λ` (ridge term's strong convexity)
 
+pub mod features;
 pub mod hinge;
 pub mod least_squares;
 pub mod logistic;
@@ -17,7 +18,9 @@ pub use hinge::SmoothedHingeRidge;
 pub use least_squares::LeastSquaresRidge;
 pub use logistic::LogisticRidge;
 
-/// A finite-sum objective `f(w) = (1/n) Σ f_i(w) + reg(w)` over dense rows.
+/// A finite-sum objective `f(w) = (1/n) Σ f_i(w) + reg(w)`. Implementations
+/// own their feature storage — [`LogisticRidge`] dispatches between dense
+/// rows and CSR sparse rows (O(nnz) kernels) behind this same trait.
 pub trait Objective: Send + Sync {
     /// Problem dimension `d`.
     fn dim(&self) -> usize;

@@ -63,6 +63,14 @@ pub fn pack_indices(idx: &[u32], bits: &[u8]) -> Result<QuantizedPayload> {
 /// Unpack `bits.len()` indices from an MSB-first bitstream (word-wise twin
 /// of [`pack_indices`]).
 pub fn unpack_indices(payload: &[u8], bits: &[u8]) -> Result<Vec<u32>> {
+    let mut out = Vec::new();
+    unpack_indices_into(payload, bits, &mut out)?;
+    Ok(out)
+}
+
+/// [`unpack_indices`] into a caller-owned buffer (cleared and refilled — the
+/// hot-path variant the decode side of `ReplicatedGrid` reuses per replica).
+pub fn unpack_indices_into(payload: &[u8], bits: &[u8], out: &mut Vec<u32>) -> Result<()> {
     let total_bits: u64 = bits.iter().map(|&b| b as u64).sum();
     if (payload.len() as u64) < total_bits.div_ceil(8) {
         bail!(
@@ -71,7 +79,8 @@ pub fn unpack_indices(payload: &[u8], bits: &[u8]) -> Result<Vec<u32>> {
             total_bits
         );
     }
-    let mut out = Vec::with_capacity(bits.len());
+    out.clear();
+    out.reserve(bits.len());
     let mut acc: u64 = 0; // MSB-aligned
     let mut filled: u32 = 0;
     let mut next_byte = 0usize;
@@ -90,7 +99,7 @@ pub fn unpack_indices(payload: &[u8], bits: &[u8]) -> Result<Vec<u32>> {
         acc <<= b as u32;
         filled -= b as u32;
     }
-    Ok(out)
+    Ok(())
 }
 
 #[cfg(test)]

@@ -35,7 +35,7 @@
 
 use anyhow::{bail, Result};
 
-use super::replicated::{Encoded, ReplicatedGrid};
+use super::replicated::{EncodeStats, Encoded, ReplicatedGrid};
 use crate::rng::Xoshiro256pp;
 
 /// Which gradient-compression scheme a run uses (config/CLI `--compressor`).
@@ -98,6 +98,20 @@ pub trait Compressor: Send {
         rng: &mut Xoshiro256pp,
         out: &mut [f64],
     ) -> Result<Encoded>;
+
+    /// [`Compressor::encode`] without materializing the wire payload: the
+    /// in-process backend owns both link ends, so its hot loop needs only
+    /// the shared reconstruction and the ledger stats (§Perf: zero
+    /// allocation per message). Must run the *identical* value/rng sequence
+    /// as `encode` — the cross-backend fingerprint tests depend on it.
+    fn encode_local(
+        &mut self,
+        grids: &mut ReplicatedGrid,
+        link: usize,
+        g: &[f64],
+        rng: &mut Xoshiro256pp,
+        out: &mut [f64],
+    ) -> Result<EncodeStats>;
 
     /// Decode a wire payload from `link` into `out`, advancing compressor
     /// state identically to the encoding end's [`Compressor::encode`].
@@ -171,6 +185,17 @@ impl Compressor for UrqCompressor {
         grids.encode_g(link, g, rng, out)
     }
 
+    fn encode_local(
+        &mut self,
+        grids: &mut ReplicatedGrid,
+        link: usize,
+        g: &[f64],
+        rng: &mut Xoshiro256pp,
+        out: &mut [f64],
+    ) -> Result<EncodeStats> {
+        grids.encode_g_local(link, g, rng, out)
+    }
+
     fn decode(
         &mut self,
         grids: &mut ReplicatedGrid,
@@ -178,8 +203,7 @@ impl Compressor for UrqCompressor {
         payload: &[u8],
         out: &mut [f64],
     ) -> Result<()> {
-        let idx = grids.unpack_g(link, payload)?;
-        grids.dequantize_g(link, &idx, out)
+        grids.decode_g(link, payload, out)
     }
 }
 
@@ -241,6 +265,22 @@ impl Compressor for DianaCompressor {
         Ok(e)
     }
 
+    fn encode_local(
+        &mut self,
+        grids: &mut ReplicatedGrid,
+        link: usize,
+        g: &[f64],
+        rng: &mut Xoshiro256pp,
+        out: &mut [f64],
+    ) -> Result<EncodeStats> {
+        for ((dj, gj), hj) in self.delta.iter_mut().zip(g).zip(&self.h[link]) {
+            *dj = *gj - *hj;
+        }
+        let s = grids.encode_g_local(link, &self.delta, rng, &mut self.delta_hat)?;
+        self.advance(link, out);
+        Ok(s)
+    }
+
     fn decode(
         &mut self,
         grids: &mut ReplicatedGrid,
@@ -248,8 +288,7 @@ impl Compressor for DianaCompressor {
         payload: &[u8],
         out: &mut [f64],
     ) -> Result<()> {
-        let idx = grids.unpack_g(link, payload)?;
-        grids.dequantize_g(link, &idx, &mut self.delta_hat)?;
+        grids.decode_g(link, payload, &mut self.delta_hat)?;
         self.advance(link, out);
         Ok(())
     }
@@ -379,6 +418,52 @@ mod tests {
                 }
             }
         });
+    }
+
+    /// `encode_local` must be `encode` minus the payload for BOTH schemes:
+    /// identical reconstruction bits, metering, saturations, and (DIANA)
+    /// error-memory evolution.
+    fn local_matches_wire(kind: CompressorKind, seed: u64) {
+        forall(40, seed, |rng| {
+            let d = 1 + rng.gen_index(5);
+            let bits = 2 + rng.gen_index(8) as u8;
+            let mut wire_grid = ReplicatedGrid::new(adaptive(d), bits, d, 1);
+            let mut local_grid = ReplicatedGrid::new(adaptive(d), bits, d, 1);
+            let mut wire = make_compressor(kind, d, 1);
+            let mut local = make_compressor(kind, d, 1);
+            let mut rng_a = rng.split(7);
+            let mut rng_b = rng.split(7);
+            let node = vec![gen_vec(rng, d, -2.0, 2.0)];
+            let w_tilde = gen_vec(rng, d, -2.0, 2.0);
+            let recenter = wire.recenters_g().then_some(&node[..]);
+            wire_grid.commit_epoch(&w_tilde, recenter, 1.0);
+            local_grid.commit_epoch(&w_tilde, recenter, 1.0);
+            for _ in 0..1 + rng.gen_index(5) {
+                let g = gen_vec(rng, d, -3.0, 3.0);
+                let mut a = vec![0.0; d];
+                let mut b = vec![0.0; d];
+                let e = wire.encode(&mut wire_grid, 0, &g, &mut rng_a, &mut a).unwrap();
+                let s = local
+                    .encode_local(&mut local_grid, 0, &g, &mut rng_b, &mut b)
+                    .unwrap();
+                assert_eq!(e.payload.bits, s.bits);
+                assert_eq!(e.sats, s.sats);
+                assert_eq!(
+                    a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn prop_urq_local_encode_matches_wire() {
+        local_matches_wire(CompressorKind::Urq, 0x0C);
+    }
+
+    #[test]
+    fn prop_diana_local_encode_matches_wire() {
+        local_matches_wire(CompressorKind::Diana, 0x0D);
     }
 
     #[test]

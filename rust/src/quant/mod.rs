@@ -29,8 +29,11 @@ pub mod urq;
 
 pub use adaptive::{AdaptivePolicy, GridPolicy, RadiusMode};
 pub use allocation::{allocate_bits, error_proxy};
-pub use codec::{pack_indices, unpack_indices, QuantizedPayload};
+pub use codec::{pack_indices, unpack_indices, unpack_indices_into, QuantizedPayload};
 pub use compressor::{make_compressor, Compressor, CompressorKind, QuantState};
 pub use grid::Grid;
-pub use replicated::{Encoded, ReplicatedGrid};
-pub use urq::{dequantize, dequantize_into, quantize_deterministic, quantize_urq, QuantStats};
+pub use replicated::{EncodeStats, Encoded, ReplicatedGrid};
+pub use urq::{
+    dequantize, dequantize_into, quantize_deterministic, quantize_urq, quantize_urq_into,
+    QuantStats,
+};

@@ -53,6 +53,84 @@ pub struct Encoded {
     pub sats: u32,
 }
 
+/// Ledger stats of one encode whose payload bytes are never needed — the
+/// in-process backend's links are function calls, so its hot loop uses the
+/// `*_local` entry points, which reconstruct the identical value and meter
+/// the identical `Σ b_i` without materializing (or allocating) a wire
+/// payload.
+#[derive(Clone, Copy, Debug)]
+pub struct EncodeStats {
+    /// Exact payload bits the message would cost on the wire (`Σ b_i`).
+    pub bits: u64,
+    /// URQ saturation events at the encoding end.
+    pub sats: u32,
+}
+
+/// The shared quantize → reconstruct core: every encode path (wire or
+/// local) runs exactly this value sequence, so local and wire encodes are
+/// bit-identical by construction. `idx` is the replica's reusable scratch.
+fn quantize_reconstruct(
+    grid: &Grid,
+    v: &[f64],
+    rng: &mut Xoshiro256pp,
+    idx: &mut Vec<u32>,
+    out: &mut [f64],
+) -> u32 {
+    let stats = urq::quantize_urq_into(v, grid, rng, idx);
+    urq::dequantize_into(idx, grid, out);
+    stats.saturated
+}
+
+/// The one WIRE encode sequence (quantize → pack → debug roundtrip →
+/// reconstruct), written once for the w and g paths — a free function over
+/// disjoint field borrows, so the grid cache and the index scratch can come
+/// from the same replica.
+fn encode_wire(
+    grid: &Grid,
+    v: &[f64],
+    rng: &mut Xoshiro256pp,
+    idx: &mut Vec<u32>,
+    out: &mut [f64],
+) -> Result<Encoded> {
+    let sats = quantize_reconstruct(grid, v, rng, idx, out);
+    let payload = codec::pack_indices(idx, grid.bits())?;
+    #[cfg(debug_assertions)]
+    debug_roundtrip_payload(grid, idx, &payload.bytes);
+    Ok(Encoded { payload, sats })
+}
+
+/// The LOCAL twin of [`encode_wire`]: identical value/rng sequence and
+/// `Σ b_i` metering, no payload materialized (release builds skip packing
+/// entirely; debug builds still roundtrip the codec).
+fn encode_local_on(
+    grid: &Grid,
+    v: &[f64],
+    rng: &mut Xoshiro256pp,
+    idx: &mut Vec<u32>,
+    out: &mut [f64],
+) -> Result<EncodeStats> {
+    let sats = quantize_reconstruct(grid, v, rng, idx, out);
+    #[cfg(debug_assertions)]
+    debug_roundtrip(grid, idx);
+    let bits = grid.bits().iter().map(|&b| b as u64).sum();
+    Ok(EncodeStats { bits, sats })
+}
+
+/// Debug builds verify the codec roundtrip on every encode (release builds
+/// skip it — §Perf: the pack/unpack pair is pure overhead off the wire).
+/// Wire paths pass the payload they already built; local paths pack here.
+#[cfg(debug_assertions)]
+fn debug_roundtrip_payload(grid: &Grid, idx: &[u32], payload: &[u8]) {
+    let rx = codec::unpack_indices(payload, grid.bits()).expect("debug unpack");
+    debug_assert_eq!(rx, idx, "codec roundtrip");
+}
+
+#[cfg(debug_assertions)]
+fn debug_roundtrip(grid: &Grid, idx: &[u32]) {
+    let payload = codec::pack_indices(idx, grid.bits()).expect("debug pack");
+    debug_roundtrip_payload(grid, idx, &payload.bytes);
+}
+
 /// The shared master↔worker grid state machine (see module docs).
 pub struct ReplicatedGrid {
     policy: GridPolicy,
@@ -70,6 +148,9 @@ pub struct ReplicatedGrid {
     g_grids: Vec<Option<Grid>>,
     /// Cumulative encode-side URQ saturation events on this replica.
     saturations: u64,
+    /// Reusable lattice-index scratch (§Perf: one buffer per replica, no
+    /// `Vec<u32>` allocation per encoded/decoded message).
+    idx_scratch: Vec<u32>,
 }
 
 impl ReplicatedGrid {
@@ -87,6 +168,7 @@ impl ReplicatedGrid {
             w_grid: None,
             g_grids: vec![None; n_links],
             saturations: 0,
+            idx_scratch: Vec::with_capacity(d),
         }
     }
 
@@ -169,28 +251,6 @@ impl ReplicatedGrid {
         Ok(())
     }
 
-    /// The one quantize → bit-pack → (debug roundtrip) → reconstruct
-    /// sequence, shared by the w channel and every gradient compressor.
-    fn encode_on(
-        grid: &Grid,
-        v: &[f64],
-        rng: &mut Xoshiro256pp,
-        out: &mut [f64],
-    ) -> Result<Encoded> {
-        let (idx, stats) = urq::quantize_urq(v, grid, rng);
-        let payload = codec::pack_indices(&idx, grid.bits())?;
-        #[cfg(debug_assertions)]
-        {
-            let rx = codec::unpack_indices(&payload.bytes, grid.bits())?;
-            debug_assert_eq!(rx, idx, "codec roundtrip");
-        }
-        urq::dequantize_into(&idx, grid, out);
-        Ok(Encoded {
-            payload,
-            sats: stats.saturated,
-        })
-    }
-
     // ---- downlink (parameter) channel: URQ on `R_{w,k}` for every
     // ---- compressor; the uplink scheme is the Compressor's business.
 
@@ -203,9 +263,25 @@ impl ReplicatedGrid {
         out: &mut [f64],
     ) -> Result<Encoded> {
         self.ensure_w_grid()?;
-        let e = Self::encode_on(self.w_grid.as_ref().unwrap(), u, rng, out)?;
+        let grid = self.w_grid.as_ref().unwrap();
+        let e = encode_wire(grid, u, rng, &mut self.idx_scratch, out)?;
         self.saturations += e.sats as u64;
         Ok(e)
+    }
+
+    /// [`Self::encode_w`] without materializing the wire payload (in-process
+    /// links): identical reconstruction and metering, zero allocation.
+    pub fn encode_w_local(
+        &mut self,
+        u: &[f64],
+        rng: &mut Xoshiro256pp,
+        out: &mut [f64],
+    ) -> Result<EncodeStats> {
+        self.ensure_w_grid()?;
+        let grid = self.w_grid.as_ref().unwrap();
+        let s = encode_local_on(grid, u, rng, &mut self.idx_scratch, out)?;
+        self.saturations += s.sats as u64;
+        Ok(s)
     }
 
     /// Decode a wire payload on `R_{w,k}` into `out` (the exact value the
@@ -213,8 +289,8 @@ impl ReplicatedGrid {
     pub fn decode_w(&mut self, payload: &[u8], out: &mut [f64]) -> Result<()> {
         self.ensure_w_grid()?;
         let grid = self.w_grid.as_ref().unwrap();
-        let idx = codec::unpack_indices(payload, grid.bits())?;
-        urq::dequantize_into(&idx, grid, out);
+        codec::unpack_indices_into(payload, grid.bits(), &mut self.idx_scratch)?;
+        urq::dequantize_into(&self.idx_scratch, grid, out);
         Ok(())
     }
 
@@ -232,9 +308,37 @@ impl ReplicatedGrid {
         out: &mut [f64],
     ) -> Result<Encoded> {
         self.ensure_g_grid(link)?;
-        let e = Self::encode_on(self.g_grids[link].as_ref().unwrap(), v, rng, out)?;
+        let grid = self.g_grids[link].as_ref().unwrap();
+        let e = encode_wire(grid, v, rng, &mut self.idx_scratch, out)?;
         self.saturations += e.sats as u64;
         Ok(e)
+    }
+
+    /// [`Self::encode_g`] without materializing the wire payload (in-process
+    /// links): identical reconstruction and metering, zero allocation.
+    pub fn encode_g_local(
+        &mut self,
+        link: usize,
+        v: &[f64],
+        rng: &mut Xoshiro256pp,
+        out: &mut [f64],
+    ) -> Result<EncodeStats> {
+        self.ensure_g_grid(link)?;
+        let grid = self.g_grids[link].as_ref().unwrap();
+        let s = encode_local_on(grid, v, rng, &mut self.idx_scratch, out)?;
+        self.saturations += s.sats as u64;
+        Ok(s)
+    }
+
+    /// Decode a wire payload on link `link`'s gradient grid into `out`
+    /// (scratch-buffered — no per-message index allocation on the master's
+    /// receive path).
+    pub fn decode_g(&mut self, link: usize, payload: &[u8], out: &mut [f64]) -> Result<()> {
+        self.ensure_g_grid(link)?;
+        let grid = self.g_grids[link].as_ref().unwrap();
+        codec::unpack_indices_into(payload, grid.bits(), &mut self.idx_scratch)?;
+        urq::dequantize_into(&self.idx_scratch, grid, out);
+        Ok(())
     }
 
     /// URQ-quantize `v` on link `link`'s gradient grid; counts saturations.
@@ -439,6 +543,61 @@ mod tests {
                     assert_eq!(payload.bits, master.msg_bits());
                 }
             }
+        });
+    }
+
+    /// The `*_local` entry points must be the wire encodes minus the
+    /// payload: same rng draws, same reconstruction bits, same `Σ b_i`,
+    /// same saturation tally — this is what lets the in-process backend skip
+    /// packing without perturbing the cross-backend fingerprints.
+    #[test]
+    fn prop_local_encode_matches_wire_encode() {
+        forall(60, 0x10CA1, |rng| {
+            let d = 1 + rng.gen_index(8);
+            let bits = 1 + rng.gen_index(10) as u8;
+            let mut wire = ReplicatedGrid::new(adaptive(), bits, d, 2);
+            let mut local = ReplicatedGrid::new(adaptive(), bits, d, 2);
+            let w_tilde = gen_vec(rng, d, -2.0, 2.0);
+            let node = vec![gen_vec(rng, d, -2.0, 2.0); 2];
+            let gnorm = rng.gen_uniform(0.0, 2.0);
+            wire.commit_epoch(&w_tilde, Some(&node), gnorm);
+            local.commit_epoch(&w_tilde, Some(&node), gnorm);
+            let mut rng_a = rng.split(1);
+            let mut rng_b = rng.split(1);
+            for _ in 0..1 + rng.gen_index(4) {
+                let u = gen_vec(rng, d, -5.0, 5.0);
+                let mut out_a = vec![0.0; d];
+                let mut out_b = vec![0.0; d];
+                let e = wire.encode_w(&u, &mut rng_a, &mut out_a).unwrap();
+                let s = local.encode_w_local(&u, &mut rng_b, &mut out_b).unwrap();
+                assert_eq!(e.payload.bits, s.bits);
+                assert_eq!(e.sats, s.sats);
+                assert_eq!(
+                    out_a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    out_b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+                );
+                let g = gen_vec(rng, d, -5.0, 5.0);
+                let link = rng.gen_index(2);
+                let e = wire.encode_g(link, &g, &mut rng_a, &mut out_a).unwrap();
+                let s = local.encode_g_local(link, &g, &mut rng_b, &mut out_b).unwrap();
+                assert_eq!(e.payload.bits, s.bits);
+                assert_eq!(e.sats, s.sats);
+                assert_eq!(
+                    out_a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    out_b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+                );
+                // decode_g reproduces the encoder's reconstruction from the
+                // wire bytes through the scratch-buffered unpack
+                let mut rx = vec![0.0; d];
+                let mut third = ReplicatedGrid::new(adaptive(), bits, d, 2);
+                third.commit_epoch(&w_tilde, Some(&node), gnorm);
+                third.decode_g(link, &e.payload.bytes, &mut rx).unwrap();
+                assert_eq!(
+                    rx.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    out_a.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+                );
+            }
+            assert_eq!(wire.saturations(), local.saturations());
         });
     }
 

@@ -43,13 +43,28 @@ fn edge_tol(x: f64, lo: f64, inv_spacing: f64, max_k: f64) -> f64 {
 /// URQ: map `w` to per-coordinate lattice indices using `rng` for the
 /// randomized rounding. Returns the index vector and saturation stats.
 pub fn quantize_urq(w: &[f64], grid: &Grid, rng: &mut Xoshiro256pp) -> (Vec<u32>, QuantStats) {
+    let mut idx = Vec::new();
+    let stats = quantize_urq_into(w, grid, rng, &mut idx);
+    (idx, stats)
+}
+
+/// [`quantize_urq`] into a caller-owned index buffer (cleared and refilled —
+/// the hot-path variant: `ReplicatedGrid` reuses one scratch vector per
+/// replica instead of allocating per message).
+pub fn quantize_urq_into(
+    w: &[f64],
+    grid: &Grid,
+    rng: &mut Xoshiro256pp,
+    idx: &mut Vec<u32>,
+) -> QuantStats {
     assert_eq!(w.len(), grid.dim(), "dim mismatch");
-    let mut idx = Vec::with_capacity(w.len());
+    idx.clear();
+    idx.reserve(w.len());
     let mut stats = QuantStats::default();
     for (i, &x) in w.iter().enumerate() {
         idx.push(quantize_coord_urq(x, grid, i, rng, &mut stats));
     }
-    (idx, stats)
+    stats
 }
 
 #[inline]

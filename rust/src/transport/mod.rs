@@ -22,8 +22,10 @@ use anyhow::{bail, Result};
 /// Wire-protocol version, carried in [`Message::Config`]. Bump on any
 /// layout change so mixed-version deployments fail fast with a clear error
 /// instead of mis-parsing frames. v2: `GradQ` gained the `sats` field and
-/// the `Config` handshake was introduced.
-pub const PROTO_VERSION: u16 = 2;
+/// the `Config` handshake was introduced. v3: `Config` gained the `sparse`
+/// storage flag (a master/worker `--format` disagreement changes the data
+/// itself — scale-only vs centered standardization — and must be refused).
+pub const PROTO_VERSION: u16 = 3;
 
 /// Protocol messages. Quantized payloads carry packed lattice indices; the
 /// accompanying `bits` is the exact payload size `Σ b_i` (what the ledger
@@ -45,6 +47,11 @@ pub enum Message {
         bits: u8,
         /// 1 when the inner-loop current gradient is quantized too ("+").
         plus: u8,
+        /// 1 when the master's training data is CSR sparse. Storage is a
+        /// *data* property (sparse standardization is scale-only), so a
+        /// `--format` disagreement means the two ends hold different
+        /// feature matrices even though nothing else on the wire differs.
+        sparse: u8,
         /// Exact-bits fingerprint of the full grid policy
         /// ([`crate::quant::GridPolicy::fingerprint`]): radius / μ / L /
         /// slack / radius-mode — both ends must build lattices from
@@ -113,6 +120,7 @@ impl Message {
                 compressor,
                 bits,
                 plus,
+                sparse,
                 policy_fp,
             } => {
                 b.push(Self::TAG_CONFIG);
@@ -120,6 +128,7 @@ impl Message {
                 b.push(*compressor);
                 b.push(*bits);
                 b.push(*plus);
+                b.push(*sparse);
                 b.extend_from_slice(&policy_fp.to_le_bytes());
             }
             Message::EpochBegin { epoch } => {
@@ -182,6 +191,7 @@ impl Message {
                 compressor: r.u8()?,
                 bits: r.u8()?,
                 plus: r.u8()?,
+                sparse: r.u8()?,
                 policy_fp: r.u64()?,
             },
             Self::TAG_EPOCH_BEGIN => Message::EpochBegin { epoch: r.u32()? },
@@ -303,6 +313,7 @@ mod tests {
                 compressor: 2,
                 bits: 5,
                 plus: 1,
+                sparse: 1,
                 policy_fp: 0xDEAD_BEEF_1234_5678,
             },
             Message::EpochBegin { epoch: 7 },

@@ -32,6 +32,13 @@ pub trait GradientSource {
     fn dim(&self) -> usize;
     fn grad(&self, w: &[f64], out: &mut [f64]) -> Result<()>;
     fn loss(&self, w: &[f64]) -> f64;
+    /// Whether this shard's feature storage is CSR sparse — a *data*
+    /// property (sparse standardization is scale-only), checked against the
+    /// master's [`Message::Config`] so a `--format` disagreement is refused
+    /// at connect instead of silently training on different data.
+    fn is_sparse(&self) -> bool {
+        false
+    }
 }
 
 impl<B: GradientSource + ?Sized> GradientSource for Box<B> {
@@ -45,6 +52,10 @@ impl<B: GradientSource + ?Sized> GradientSource for Box<B> {
 
     fn loss(&self, w: &[f64]) -> f64 {
         (**self).loss(w)
+    }
+
+    fn is_sparse(&self) -> bool {
+        (**self).is_sparse()
     }
 }
 
@@ -61,6 +72,10 @@ impl GradientSource for LogisticRidge {
     fn loss(&self, w: &[f64]) -> f64 {
         Objective::loss(self, w)
     }
+
+    fn is_sparse(&self) -> bool {
+        LogisticRidge::is_sparse(self)
+    }
 }
 
 /// Shard gradients through the compiled JAX/Pallas artifact (PJRT); keeps
@@ -73,14 +88,11 @@ pub struct XlaShard {
 impl XlaShard {
     /// Upload the shard to the device and bind the `full_grad` executable.
     pub fn new(rt: &XlaRuntime, shard: LogisticRidge) -> Result<Self> {
-        // margins z_i = y_i x_i are what LogisticRidge stores; rebuild the
-        // row-major buffer for upload
+        // margins z_i = y_i x_i are what LogisticRidge stores; the artifact
+        // wants a dense row-major buffer, whatever the shard's storage
         let n = shard.num_samples();
         let d = Objective::dim(&shard);
-        let mut z = vec![0.0f64; n * d];
-        for i in 0..n {
-            z[i * d..(i + 1) * d].copy_from_slice(shard.margin_row(i));
-        }
+        let z = shard.margins_dense();
         let kernel = XlaWorkerKernel::new(rt, "full_grad", &z, n, d, shard.lambda)
             .context("build XlaWorkerKernel")?;
         Ok(XlaShard {
@@ -101,6 +113,11 @@ impl GradientSource for XlaShard {
 
     fn loss(&self, w: &[f64]) -> f64 {
         Objective::loss(&self.oracle, w)
+    }
+
+    fn is_sparse(&self) -> bool {
+        // storage of the DATA (the device buffer is always dense)
+        self.oracle.is_sparse()
     }
 }
 
@@ -193,12 +210,24 @@ impl<D: Duplex, B: GradientSource> WorkerNode<D, B> {
                     compressor,
                     bits,
                     plus: mplus,
+                    sparse: msparse,
                     policy_fp,
                 } => {
                     if version != PROTO_VERSION {
                         bail!(
                             "protocol version mismatch: master v{version}, worker v{PROTO_VERSION} \
                              — rebuild both ends from the same revision"
+                        );
+                    }
+                    let wsparse = self.backend.is_sparse() as u8;
+                    if msparse != wsparse {
+                        bail!(
+                            "feature-storage mismatch: master data is {}, this worker's shard is \
+                             {} — sparse storage standardizes scale-only, so the two ends would \
+                             train on DIFFERENT data; start both with the same --format (and the \
+                             same dataset/samples/seed)",
+                            if msparse == 1 { "csr" } else { "dense" },
+                            if wsparse == 1 { "csr" } else { "dense" },
                         );
                     }
                     let (wc, wb, wp, wfp) = match &self.quant {
@@ -326,16 +355,18 @@ mod tests {
     fn shard() -> LogisticRidge {
         let mut ds = power_like(100, 3);
         ds.standardize();
-        LogisticRidge::new(&ds.x, &ds.y, ds.n, ds.d, 0.1)
+        LogisticRidge::from_dataset(&ds, 0.1)
     }
 
-    /// The unquantized handshake a `MessageCluster` would open the link with.
+    /// The unquantized handshake a `MessageCluster` over a dense dataset
+    /// would open the link with.
     fn raw_config() -> Message {
         Message::Config {
             version: PROTO_VERSION,
             compressor: 0,
             bits: 0,
             plus: 0,
+            sparse: 0,
             policy_fp: 0,
         }
     }
@@ -377,6 +408,7 @@ mod tests {
             compressor: CompressorKind::Urq.wire_id(),
             bits: 4,
             plus: 1,
+            sparse: 0,
             policy_fp: GridPolicy::Fixed { radius: 4.0 }.fingerprint(),
         };
         // matching handshake: worker keeps serving
@@ -398,24 +430,41 @@ mod tests {
             assert!(t.join().unwrap().is_err());
         };
         reject(match matching() {
-            Message::Config { version, bits, plus, policy_fp, .. } => Message::Config {
+            Message::Config { version, bits, plus, sparse, policy_fp, .. } => Message::Config {
                 version,
                 compressor: CompressorKind::Diana.wire_id(),
                 bits,
                 plus,
+                sparse,
                 policy_fp,
             },
             _ => unreachable!(),
         });
         // same policy class, different parameters: the fingerprint refuses
         reject(match matching() {
-            Message::Config { version, compressor, bits, plus, .. } => Message::Config {
+            Message::Config { version, compressor, bits, plus, sparse, .. } => Message::Config {
                 version,
                 compressor,
                 bits,
                 plus,
+                sparse,
                 policy_fp: GridPolicy::Fixed { radius: 2.0 }.fingerprint(),
             },
+            _ => unreachable!(),
+        });
+        // storage mismatch: a master over CSR data must be refused by a
+        // worker holding a dense shard (different data, not just config)
+        reject(match matching() {
+            Message::Config { version, compressor, bits, plus, policy_fp, .. } => {
+                Message::Config {
+                    version,
+                    compressor,
+                    bits,
+                    plus,
+                    sparse: 1,
+                    policy_fp,
+                }
+            }
             _ => unreachable!(),
         });
         // protocol version skew: refused with a clear error
@@ -428,6 +477,7 @@ mod tests {
                 compressor: 0,
                 bits: 0,
                 plus: 0,
+                sparse: 0,
                 policy_fp: 0,
             })
             .unwrap();

@@ -137,13 +137,13 @@ fn run_tcp(ds: &Dataset, n: usize, q: Option<QuantOpts>, o: &SvrgOpts, seed: u64
         let addr = addr.clone();
         handles.push(std::thread::spawn(move || {
             let link = TcpDuplex::connect(&addr).unwrap();
-            let obj = LogisticRidge::new(&s.x, &s.y, s.n, s.d, 0.1);
+            let obj = LogisticRidge::from_dataset(&s, 0.1);
             WorkerNode::new(obj, link, wq, rng).run().unwrap();
         }));
         let (stream, _) = listener.accept().unwrap();
         links.push(TcpDuplex::new(stream).unwrap());
     }
-    let mut cluster = MessageCluster::new(links, ds.d, q, &root).unwrap();
+    let mut cluster = MessageCluster::new(links, ds.d, q, ds.is_sparse(), &root).unwrap();
     let fp = {
         let mut gnorm_bits = Vec::new();
         let mut bits = Vec::new();
@@ -286,14 +286,14 @@ fn worker_crash_surfaces_as_error_not_hang() {
                 drop(w);
                 return;
             }
-            let obj = LogisticRidge::new(&s.x, &s.y, s.n, s.d, 0.1);
+            let obj = LogisticRidge::from_dataset(&s, 0.1);
             // run() will itself error once the master gives up; ignore
             let _ = WorkerNode::new(obj, w, None, rng).run();
         }));
     }
     // the dead worker may sever its link before or after the constructor's
     // Config handshake lands, so either the constructor or the run errors
-    let result = match MessageCluster::new(links, ds.d, None, &root) {
+    let result = match MessageCluster::new(links, ds.d, None, ds.is_sparse(), &root) {
         Ok(mut cluster) => {
             let r = run_svrg(&mut cluster, &opts(3, false), root.algo_stream(), &mut |_, _, _, _| {});
             // drop the cluster first: it holds the channel senders that keep

@@ -274,3 +274,90 @@ fn prop_message_codec_total() {
         assert_eq!(Message::decode(&msg.encode()).unwrap(), msg);
     });
 }
+
+/// Satellite (sparse objective core): on random low-density matrices, the
+/// CSR and dense twins of one logistic-ridge problem agree to 1e-12 on
+/// `loss`, `grad`, and `sample_grad` — the O(nnz) kernels change the
+/// summation support (skipping exact zeros) but not the mathematics.
+#[test]
+fn prop_sparse_and_dense_objectives_agree() {
+    use qmsvrg::data::Dataset;
+    use qmsvrg::objective::{LogisticRidge, Objective};
+
+    forall(60, 0x5DA, |rng| {
+        let n = 2 + rng.gen_index(24);
+        let d = 4 + rng.gen_index(96);
+        let density = rng.gen_uniform(0.02, 0.3);
+        let mut x = vec![0.0; n * d];
+        for v in x.iter_mut() {
+            if rng.next_f64() < density {
+                *v = rng.gen_uniform(-2.0, 2.0);
+            }
+        }
+        let y: Vec<f64> = (0..n)
+            .map(|_| if rng.gen_bool(0.5) { 1.0 } else { -1.0 })
+            .collect();
+        let dense_ds = Dataset::new(x, y, n, d).unwrap();
+        let sparse_ds = dense_ds.to_csr();
+        let lambda = rng.gen_uniform(0.01, 0.5);
+        let dense = LogisticRidge::from_dataset(&dense_ds, lambda);
+        let sparse = LogisticRidge::from_dataset(&sparse_ds, lambda);
+        assert!((dense.l_smooth() - sparse.l_smooth()).abs() < 1e-12);
+
+        let w = gen_vec(rng, d, -1.5, 1.5);
+        assert!(
+            (dense.loss(&w) - sparse.loss(&w)).abs() < 1e-12,
+            "loss: {} vs {}",
+            dense.loss(&w),
+            sparse.loss(&w)
+        );
+        let mut gd = vec![0.0; d];
+        let mut gs = vec![0.0; d];
+        dense.grad(&w, &mut gd);
+        sparse.grad(&w, &mut gs);
+        assert!(
+            linalg::linf_dist(&gd, &gs) < 1e-12,
+            "grad diverged: {}",
+            linalg::linf_dist(&gd, &gs)
+        );
+        let i = rng.gen_index(n);
+        dense.sample_grad(i, &w, &mut gd);
+        sparse.sample_grad(i, &w, &mut gs);
+        assert!(
+            linalg::linf_dist(&gd, &gs) < 1e-12,
+            "sample_grad {i} diverged: {}",
+            linalg::linf_dist(&gd, &gs)
+        );
+    });
+}
+
+/// Satellite (CI fixture): the tiny sparse libsvm file loads as CSR, trains
+/// end-to-end through the public driver, and rejects its corrupted twin.
+#[test]
+fn tiny_sparse_fixture_loads_and_trains() {
+    use qmsvrg::config::TrainConfig;
+    use qmsvrg::data::loaders::load_libsvm;
+    use std::path::Path;
+
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/data/tiny_sparse.svm");
+    let ds = load_libsvm(&path, None).unwrap();
+    assert!(ds.is_sparse(), "fixture must stay CSR under Auto");
+    assert_eq!((ds.n, ds.d, ds.nnz()), (10, 32, 23));
+
+    let (mut train, mut test) = ds.split(0.8, 7);
+    let (mean, std) = train.standardize();
+    assert!(mean.iter().all(|&m| m == 0.0), "sparse standardize is scale-only");
+    test.apply_standardization(&mean, &std);
+    let cfg = TrainConfig {
+        algorithm: "qm-svrg-a+".into(),
+        n_workers: 2,
+        epoch_len: 2,
+        outer_iters: 3,
+        bits_per_coord: 8,
+        ..TrainConfig::default()
+    };
+    let report = qmsvrg::driver::train_with_test(&cfg, &train, &test).unwrap();
+    assert_eq!(report.trace.points.len(), 4);
+    assert!(report.trace.final_loss().is_finite());
+    assert!(report.trace.total_bits() > 0);
+}

@@ -31,7 +31,7 @@ fn padded_case(
     let mut ds = power_like(n, seed);
     ds.standardize();
     assert_eq!(ds.d, d);
-    let obj = LogisticRidge::new(&ds.x, &ds.y, ds.n, ds.d, 0.1);
+    let obj = LogisticRidge::from_dataset(&ds, 0.1);
     let mut z64 = vec![0.0f64; n * d];
     for i in 0..n {
         z64[i * d..(i + 1) * d].copy_from_slice(obj.margin_row(i));
@@ -72,7 +72,7 @@ fn xla_full_grad_matches_native() {
 
     let mut ds = power_like(n, 3);
     ds.standardize();
-    let obj = LogisticRidge::new(&ds.x, &ds.y, ds.n, ds.d, 0.1);
+    let obj = LogisticRidge::from_dataset(&ds, 0.1);
     let g_native = obj.grad_vec(&w64);
 
     for j in 0..d {
@@ -109,7 +109,7 @@ fn xla_loss_and_fused_agree() {
     // against native
     let mut ds = power_like(n, 7);
     ds.standardize();
-    let obj = LogisticRidge::new(&ds.x, &ds.y, ds.n, ds.d, 0.1);
+    let obj = LogisticRidge::from_dataset(&ds, 0.1);
     assert!((loss as f64 - Objective::loss(&obj, &w64)).abs() < 1e-4);
 }
 
@@ -119,7 +119,7 @@ fn worker_kernel_resident_buffer_path() {
     let (n, d) = (700usize, 9usize);
     let mut ds = power_like(n, 11);
     ds.standardize();
-    let obj = LogisticRidge::new(&ds.x, &ds.y, ds.n, ds.d, 0.1);
+    let obj = LogisticRidge::from_dataset(&ds, 0.1);
     let mut z = vec![0.0f64; n * d];
     for i in 0..n {
         z[i * d..(i + 1) * d].copy_from_slice(obj.margin_row(i));
@@ -147,7 +147,7 @@ fn xla_shard_gradient_source_equivalence() {
     let Some(rt) = runtime() else { return };
     let mut ds = power_like(800, 13);
     ds.standardize();
-    let obj = LogisticRidge::new(&ds.x, &ds.y, ds.n, ds.d, 0.1);
+    let obj = LogisticRidge::from_dataset(&ds, 0.1);
     let native_g = obj.grad_vec(&[0.2; 9]);
     let native_loss = Objective::loss(&obj, &[0.2; 9]);
     let shard = XlaShard::new(&rt, obj).unwrap();
