@@ -112,12 +112,14 @@ fn main() -> anyhow::Result<()> {
         compressor,
     };
     let root = Xoshiro256pp::seed_from_u64(SEED);
+    // the full data fingerprint (n, d, λ, content hash) rides the Config
+    // handshake: a worker started with different --samples/--seed/--lambda
+    // is refused at connect instead of silently diverging the run
     let mut cluster = qmsvrg::coordinator::tcp(
         &listener,
         N_WORKERS,
-        train.d,
         Some(quant),
-        train.is_sparse(),
+        train.fingerprint(0.1),
         &root,
     )?;
     eprintln!("# all {N_WORKERS} workers connected");

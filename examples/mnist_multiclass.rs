@@ -8,7 +8,7 @@
 
 use qmsvrg::config::TrainConfig;
 use qmsvrg::data::synthetic::mnist_like;
-use qmsvrg::metrics::{f1_dataset, ova_accuracy};
+use qmsvrg::metrics::{f1_dataset, ova_accuracy_dataset};
 use qmsvrg::telemetry::Table;
 
 fn main() -> anyhow::Result<()> {
@@ -49,8 +49,9 @@ fn main() -> anyhow::Result<()> {
             f1_acc += f1_dataset(&report.w, &te);
             ws.push(report.w);
         }
-        // label = argmax_l w^(l)·x over the 10 classifiers
-        let acc = ova_accuracy(&ws, test.x(), &test.y, test.n, test.d);
+        // label = argmax_l w^(l)·x over the 10 classifiers, in the test
+        // set's own storage (CSR margins score in O(nnz))
+        let acc = ova_accuracy_dataset(&ws, &test);
         table.row(&[
             algo.to_string(),
             bits.to_string(),

@@ -15,9 +15,10 @@
 use std::path::Path;
 use std::time::Duration;
 
-use qmsvrg::algorithms::ShardedObjective;
+use qmsvrg::algorithms::{LazyIterate, ShardedObjective};
 use qmsvrg::benchkit::Bencher;
 use qmsvrg::data::synthetic::{mnist_like, power_like, sparse_like};
+use qmsvrg::linalg::SparseVec;
 use qmsvrg::objective::{LogisticRidge, Objective};
 use qmsvrg::runtime::{XlaRuntime, XlaWorkerKernel};
 
@@ -89,6 +90,93 @@ fn main() {
     let csr_loss_ns = b.bench("csr loss 2000x4096 d=0.02", || obj_csr.loss(&ws)).ns_per_iter();
     let dense_loss_ns = b.bench("densified loss 2000x4096", || obj_dense.loss(&ws)).ns_per_iter();
     extra.push(("sparse_vs_densified_loss_speedup", format!("{:.2}", dense_loss_ns / csr_loss_ns)));
+
+    // O(nnz) inner loop: per-inner-iteration cost of the unquantized SVRG
+    // update, lazy sparse-delta path (fused two-margin kernel + affine
+    // replay + delta log) vs the dense reference semantics kept in
+    // `testkit::dense_svrg_reference` (two dense d-vectors + a dense
+    // u-sweep + a dense history row per iteration). Same data, same
+    // N=8 sharding; each bench call runs one full T-iteration epoch and the
+    // per-iteration figure is epoch/T — this is the amortized price, since
+    // the lazy path pays O(d) once per epoch at the ζ-materialization.
+    println!("\n-- inner loop: lazy sparse-delta vs dense reference, 2000x4096 @ 0.02, N=8, T=64 --");
+    let (n_workers, t_len, step) = (8usize, 64usize, 0.2);
+    let lambda = 0.1;
+    let d = 4096usize;
+    let prob_csr = ShardedObjective::new(&sp, n_workers, lambda);
+    let prob_dense = ShardedObjective::new(&dense_twin, n_workers, lambda);
+    // epoch-fixed state: snapshot w̃ = ws, its node gradients, their mean
+    let w0 = ws.clone();
+    let mut node_g = vec![vec![0.0; d]; n_workers];
+    prob_dense.node_grads_parallel(&w0, &mut node_g);
+    let mut g_tilde = vec![0.0; d];
+    for gi in &node_g {
+        qmsvrg::linalg::axpy(1.0 / n_workers as f64, gi, &mut g_tilde);
+    }
+    // dense reference epoch: node_grad + dense u-sweep + history row, ×T
+    let mut w = vec![0.0; d];
+    let mut g_cur = vec![0.0; d];
+    let mut hist = vec![0.0; t_len * d];
+    let mut dense_epoch = |prob: &ShardedObjective| {
+        w.copy_from_slice(&w0);
+        for t in 0..t_len {
+            let xi = t % n_workers;
+            prob.node_grad(xi, &w, &mut g_cur);
+            let g_snap = &node_g[xi];
+            for j in 0..d {
+                w[j] -= step * (g_cur[j] - g_snap[j] + g_tilde[j]);
+            }
+            hist[t * d..(t + 1) * d].copy_from_slice(&w);
+        }
+        w[0]
+    };
+    let dense_ref_ns = b
+        .bench("dense-ref inner epoch T=64 (densified)", || {
+            dense_epoch(&prob_dense)
+        })
+        .ns_per_iter();
+    let dense_csr_ns = b
+        .bench("dense-ref inner epoch T=64 (csr grads)", || {
+            dense_epoch(&prob_csr)
+        })
+        .ns_per_iter();
+    // lazy epoch: refresh(support) + fused grad_delta + apply, ×T, then the
+    // ζ-materialization that closes the epoch
+    let mut lazy = LazyIterate::new(d);
+    let mut delta = SparseVec::new();
+    let mut scratch = vec![0.0; d];
+    let mut w_zeta = vec![0.0; d];
+    let lazy_ns = b
+        .bench("lazy inner epoch T=64 (sparse delta)", || {
+            lazy.begin_epoch(&w0, &g_tilde, step, lambda);
+            for t in 0..t_len {
+                let shard = prob_csr.shard(t % n_workers);
+                lazy.refresh(shard.support());
+                shard.grad_delta(lazy.values(), &w0, &mut scratch, &mut delta);
+                lazy.apply(&delta);
+            }
+            lazy.materialize(t_len - 1, &mut w_zeta);
+            w_zeta[0]
+        })
+        .ns_per_iter();
+    let t = t_len as f64;
+    let lazy_speedup = dense_ref_ns / lazy_ns;
+    println!(
+        "   per inner iteration: dense-ref {:.0}ns | dense-ref-on-csr {:.0}ns | lazy {:.0}ns",
+        dense_ref_ns / t,
+        dense_csr_ns / t,
+        lazy_ns / t
+    );
+    println!(
+        "   -> lazy-vs-dense-reference per-inner-iteration speedup {lazy_speedup:.2}x \
+         (acceptance floor: 10x)"
+    );
+    extra.push(("lazy_vs_dense_inner_iter_speedup", format!("{lazy_speedup:.2}")));
+    extra.push((
+        "lazy_vs_dense_csr_inner_iter_speedup",
+        format!("{:.2}", dense_csr_ns / lazy_ns),
+    ));
+    extra.push(("lazy_inner_workload", "2000x4096 density 0.02, N=8, T=64".to_string()));
 
     // sharded snapshot fan-out: the outer-loop collection of Algorithm 1 on
     // the in-process cluster — sequential per-shard loop vs the

@@ -95,6 +95,23 @@ impl QuantChannel {
         Ok(())
     }
 
+    /// The fused downlink of the quantized inner loop: compute `u_j` per
+    /// coordinate inside the quantize sweep (the SVRG step), reconstruct
+    /// into `out`, and meter — ONE pass over `d` instead of the old
+    /// step-loop + quantize-loop + reconstruct-loop (§Perf). Identical
+    /// values, rng draws, and metering to [`Self::send_w_into`] on a
+    /// materialized `u`.
+    pub fn send_w_fused_into(
+        &mut self,
+        u: impl Fn(usize) -> f64,
+        out: &mut [f64],
+    ) -> Result<()> {
+        let s = self.state.grid.encode_w_fused_local(u, &mut self.w_rng, out)?;
+        self.ledger.record_downlink(s.bits);
+        self.ledger.saturations += s.sats as u64;
+        Ok(())
+    }
+
     /// Allocating convenience wrapper over [`Self::send_w_into`].
     pub fn send_w(&mut self, u: &[f64]) -> Result<Vec<f64>> {
         let mut out = vec![0.0; u.len()];

@@ -1,0 +1,399 @@
+//! Lazy affine representation of the unquantized inner-loop iterate.
+//!
+//! The exact (unquantized) SVRG/M-SVRG update at inner time `t` is
+//!
+//! `w_{t+1} = w_t − α (g_ξ(w_t) − g_ξ(w̃) + g̃)`
+//!
+//! whose dense form sweeps all `d` coordinates every iteration. Splitting the
+//! sampled-worker delta into its sparse logistic part `Δ_t` (support =
+//! worker ξ's column support) and the analytic ridge part `2λ(w_t − w̃)`
+//! turns the recurrence into a per-coordinate *affine* map plus a sparse
+//! scatter:
+//!
+//! `w_{t+1,j} = β·w_{t,j} + c_j − α·Δ_{t,j}`, with `β = 1 − 2αλ` and
+//! `c_j = α(2λ·w̃_j − g̃_j)` constant over the epoch, and `Δ_{t,j} = 0`
+//! outside `supp(Δ_t)`.
+//!
+//! Coordinates outside the support therefore evolve in closed form and need
+//! no work at all: with `P[e] = β^e` and the geometric prefix sum
+//! `G[e] = Σ_{s<e} β^s`, a coordinate last materialized at time `τ_j` with
+//! value `v_j` replays to any later time `t` as
+//!
+//! `w_{t,j} = P[t−τ_j]·v_j + G[t−τ_j]·c_j`.
+//!
+//! [`LazyIterate`] holds `(v, τ)` per coordinate plus the shared coefficient
+//! prefix arrays, so one inner iteration costs a sparse gather/scatter over
+//! `supp(Δ_t)` and O(1) scalar bookkeeping — O(nnz(x_ξ)) amortized instead
+//! of O(d) (EXPERIMENTS.md §Perf prices the replay). A per-iteration delta
+//! log (flat arrays, O(Σ nnz) memory — replacing the dense `T×d` history)
+//! lets the epoch-end snapshot choice [`LazyIterate::materialize`] any
+//! ζ-eligible iterate `w_{k,ζ}` from `w_0` in O(d + Σ nnz).
+//!
+//! **Replication.** The engine (master) and every message-passing worker
+//! hold one `LazyIterate` each and advance it from the same broadcast deltas
+//! through the same code, so all replicas — and therefore all three cluster
+//! backends — stay **bit-identical** (`tests/distributed.rs`). A dense O(d)
+//! reference implementation lives in [`crate::testkit::dense_svrg_reference`]
+//! and a lockstep property pins ≤1e-10 agreement (`tests/properties.rs`).
+
+use crate::linalg::SparseVec;
+
+/// The lazily-evaluated inner-loop iterate of one epoch (see module docs).
+#[derive(Clone, Debug)]
+pub struct LazyIterate {
+    d: usize,
+    /// Step size α of the running epoch.
+    step: f64,
+    /// Per-step affine contraction `β = 1 − 2αλ`.
+    beta: f64,
+    /// Current inner time t (number of deltas applied this epoch).
+    t: usize,
+    /// Coordinate value at its last materialization time `tau[j]`.
+    v: Vec<f64>,
+    /// Last-touched timestamp per coordinate.
+    tau: Vec<u32>,
+    /// Epoch-constant affine offset `c_j = α(2λ·w̃_j − g̃_j)`.
+    c: Vec<f64>,
+    /// Epoch start `w_{k,0} = w̃_k` (materialize replays from here).
+    w0: Vec<f64>,
+    /// `pow[e] = β^e`, grown on demand up to the elapsed time.
+    pow: Vec<f64>,
+    /// Geometric prefix `geo[e] = Σ_{s<e} β^s` (so `geo[0] = 0`).
+    geo: Vec<f64>,
+    /// Delta log: iteration s's sparse delta is
+    /// `log_idx/log_val[log_ptr[s]..log_ptr[s+1]]`.
+    log_ptr: Vec<usize>,
+    log_idx: Vec<u32>,
+    log_val: Vec<f64>,
+}
+
+impl LazyIterate {
+    pub fn new(d: usize) -> Self {
+        Self {
+            d,
+            step: 0.0,
+            beta: 1.0,
+            t: 0,
+            v: vec![0.0; d],
+            tau: vec![0; d],
+            c: vec![0.0; d],
+            w0: vec![0.0; d],
+            pow: vec![1.0],
+            geo: vec![0.0],
+            log_ptr: vec![0],
+            log_idx: Vec::new(),
+            log_val: Vec::new(),
+        }
+    }
+
+    #[inline]
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Inner time of the epoch so far (deltas applied).
+    #[inline]
+    pub fn t(&self) -> usize {
+        self.t
+    }
+
+    /// Reset for a new epoch starting at `w̃` with snapshot mean gradient
+    /// `g̃`, step α and ridge λ. Every replica (engine and workers) runs this
+    /// exact expression sequence, so the affine coefficients are
+    /// bit-identical across backends.
+    pub fn begin_epoch(&mut self, w_tilde: &[f64], g_tilde: &[f64], step: f64, lambda: f64) {
+        assert_eq!(w_tilde.len(), self.d);
+        assert_eq!(g_tilde.len(), self.d);
+        self.step = step;
+        self.beta = 1.0 - step * (2.0 * lambda);
+        self.t = 0;
+        self.v.copy_from_slice(w_tilde);
+        self.w0.copy_from_slice(w_tilde);
+        for tau in self.tau.iter_mut() {
+            *tau = 0;
+        }
+        for (cj, (&gj, &wj)) in self.c.iter_mut().zip(g_tilde.iter().zip(w_tilde)) {
+            *cj = step * (2.0 * lambda * wj - gj);
+        }
+        self.pow.clear();
+        self.pow.push(1.0);
+        self.geo.clear();
+        self.geo.push(0.0);
+        self.log_ptr.clear();
+        self.log_ptr.push(0);
+        self.log_idx.clear();
+        self.log_val.clear();
+    }
+
+    /// Extend the coefficient prefix arrays to cover elapsed time `e`.
+    fn ensure_coeffs(&mut self, e: usize) {
+        while self.pow.len() <= e {
+            let last = *self.pow.last().unwrap();
+            self.geo.push(self.geo.last().unwrap() + last);
+            self.pow.push(last * self.beta);
+        }
+    }
+
+    /// Materialize the listed coordinates at the current time `t` (just-in-
+    /// time replay): after this, [`Self::values`] is exact at every `j` in
+    /// `idx`. O(|idx|); coordinates already current cost one branch.
+    pub fn refresh(&mut self, idx: &[u32]) {
+        for &j in idx {
+            let j = j as usize;
+            let e = self.t - self.tau[j] as usize;
+            if e > 0 {
+                self.v[j] = self.pow[e] * self.v[j] + self.geo[e] * self.c[j];
+                self.tau[j] = self.t as u32;
+            }
+        }
+    }
+
+    /// The coordinate buffer. Entries are exact only where the timestamp is
+    /// current — call [`Self::refresh`] on the support you are about to read.
+    #[inline]
+    pub fn values(&self) -> &[f64] {
+        &self.v
+    }
+
+    /// Apply iteration `t`'s sparse logistic delta: replay each supported
+    /// coordinate to time `t`, take the affine step with the `−α·Δ` scatter,
+    /// log the delta for [`Self::materialize`], and advance to `t+1`. The
+    /// inline replay is the same expression [`Self::refresh`] uses, so
+    /// refresh-then-apply and direct apply produce identical bits —
+    /// the engine (which refreshed to compute the delta) and a non-sampled
+    /// worker (which did not) stay in lockstep.
+    pub fn apply(&mut self, delta: &SparseVec) {
+        debug_assert_eq!(delta.idx.len(), delta.val.len());
+        self.ensure_coeffs(self.t + 1);
+        for (&j, &dv) in delta.idx.iter().zip(&delta.val) {
+            let j = j as usize;
+            let e = self.t - self.tau[j] as usize;
+            let w_now = if e > 0 {
+                self.pow[e] * self.v[j] + self.geo[e] * self.c[j]
+            } else {
+                self.v[j]
+            };
+            self.v[j] = self.beta * w_now + self.c[j] - self.step * dv;
+            self.tau[j] = (self.t + 1) as u32;
+        }
+        self.log_idx.extend_from_slice(&delta.idx);
+        self.log_val.extend_from_slice(&delta.val);
+        self.log_ptr.push(self.log_idx.len());
+        self.t += 1;
+    }
+
+    /// Materialize `w_{k,s}` for any `0 ≤ s ≤ t` into `out` — the ζ-choice
+    /// at the epoch end. Replays from `w_0` through the delta log (not from
+    /// the live `(v, τ)` state, which has advanced past `s`):
+    ///
+    /// `w_{s,j} = P[s]·w_{0,j} + G[s]·c_j − α Σ_{u<s} P[s−1−u]·Δ_{u,j}`
+    ///
+    /// O(d) for the affine part plus O(Σ nnz) over the logged deltas —
+    /// amortized O(d/T + nnz) per inner iteration.
+    pub fn materialize(&self, s: usize, out: &mut [f64]) {
+        assert!(s <= self.t, "materialize({s}) but only {} deltas applied", self.t);
+        assert_eq!(out.len(), self.d);
+        for (o, (&w0j, &cj)) in out.iter_mut().zip(self.w0.iter().zip(&self.c)) {
+            *o = self.pow[s] * w0j + self.geo[s] * cj;
+        }
+        for u in 0..s {
+            let (lo, hi) = (self.log_ptr[u], self.log_ptr[u + 1]);
+            let coef = -self.step * self.pow[s - 1 - u];
+            for (&j, &dv) in self.log_idx[lo..hi].iter().zip(&self.log_val[lo..hi]) {
+                out[j as usize] += coef * dv;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Brute-force dense twin of the recurrence: w ← β·w + c − α·Δ.
+    struct DenseTwin {
+        w: Vec<f64>,
+        c: Vec<f64>,
+        beta: f64,
+        step: f64,
+        hist: Vec<Vec<f64>>,
+    }
+
+    impl DenseTwin {
+        fn begin(w_tilde: &[f64], g_tilde: &[f64], step: f64, lambda: f64) -> Self {
+            let c: Vec<f64> = g_tilde
+                .iter()
+                .zip(w_tilde)
+                .map(|(&g, &w)| step * (2.0 * lambda * w - g))
+                .collect();
+            Self {
+                w: w_tilde.to_vec(),
+                c,
+                beta: 1.0 - step * (2.0 * lambda),
+                step,
+                hist: vec![w_tilde.to_vec()],
+            }
+        }
+
+        fn apply(&mut self, delta: &SparseVec) {
+            let mut dense = vec![0.0; self.w.len()];
+            delta.scatter_into(&mut dense);
+            for j in 0..self.w.len() {
+                self.w[j] = self.beta * self.w[j] + self.c[j] - self.step * dense[j];
+            }
+            self.hist.push(self.w.clone());
+        }
+    }
+
+    fn delta(pairs: &[(u32, f64)]) -> SparseVec {
+        let mut s = SparseVec::new();
+        for &(j, v) in pairs {
+            s.push(j, v);
+        }
+        s
+    }
+
+    fn assert_close(a: &[f64], b: &[f64], tol: f64, ctx: &str) {
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() <= tol, "{ctx}: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn lazy_matches_dense_recurrence_on_sparse_deltas() {
+        let d = 6;
+        let w_tilde = vec![0.5, -0.25, 1.0, 0.0, -1.5, 0.75];
+        let g_tilde = vec![0.1, -0.2, 0.05, 0.3, 0.0, -0.4];
+        let (step, lambda) = (0.2, 0.1);
+        let mut lazy = LazyIterate::new(d);
+        lazy.begin_epoch(&w_tilde, &g_tilde, step, lambda);
+        let mut dense = DenseTwin::begin(&w_tilde, &g_tilde, step, lambda);
+        let deltas = [
+            delta(&[(0, 0.3), (2, -0.1)]),
+            delta(&[(1, 0.2)]),
+            delta(&[(0, -0.05), (4, 0.4), (5, 0.1)]),
+            delta(&[]), // empty support: pure affine step
+            delta(&[(2, 0.25), (3, -0.3)]),
+        ];
+        for dl in &deltas {
+            lazy.apply(dl);
+            dense.apply(dl);
+        }
+        // every coordinate replays to the current time
+        let all: Vec<u32> = (0..d as u32).collect();
+        lazy.refresh(&all);
+        assert_close(lazy.values(), &dense.w, 1e-13, "final");
+        // every ζ-eligible prefix materializes correctly
+        let mut out = vec![0.0; d];
+        for s in 0..=deltas.len() {
+            lazy.materialize(s, &mut out);
+            assert_close(&out, &dense.hist[s], 1e-13, &format!("s={s}"));
+        }
+    }
+
+    #[test]
+    fn fully_dense_delta_rows_take_the_overhead_path() {
+        // nnz = d every iteration: the lazy scheme degrades gracefully to
+        // the dense recurrence (every coordinate touched every step)
+        let d = 5;
+        let w_tilde = vec![1.0, -1.0, 0.5, 0.25, -0.75];
+        let g_tilde = vec![0.2; 5];
+        let mut lazy = LazyIterate::new(d);
+        lazy.begin_epoch(&w_tilde, &g_tilde, 0.1, 0.05);
+        let mut dense = DenseTwin::begin(&w_tilde, &g_tilde, 0.1, 0.05);
+        for t in 0..8 {
+            let full = delta(
+                &(0..d as u32)
+                    .map(|j| (j, ((t + j as usize) as f64 * 0.37).sin()))
+                    .collect::<Vec<_>>(),
+            );
+            lazy.apply(&full);
+            dense.apply(&full);
+        }
+        // all timestamps current — values() is exact without a refresh
+        assert_close(lazy.values(), &dense.w, 1e-13, "dense-rows");
+        assert_eq!(lazy.t(), 8);
+    }
+
+    #[test]
+    fn coordinate_untouched_for_a_whole_epoch_replays_at_the_boundary() {
+        // coordinate 3 never appears in any delta: its timestamp stays 0 for
+        // the entire epoch and the replay must cross the full T in one jump,
+        // both mid-epoch (refresh) and at the boundary (materialize) — and a
+        // second epoch must start from clean timestamps
+        let d = 4;
+        let t_len = 16;
+        let w_tilde = vec![0.8, -0.6, 0.4, 1.2];
+        let g_tilde = vec![-0.1, 0.2, 0.3, -0.25];
+        let (step, lambda) = (0.15, 0.2);
+        let mut lazy = LazyIterate::new(d);
+        lazy.begin_epoch(&w_tilde, &g_tilde, step, lambda);
+        let mut dense = DenseTwin::begin(&w_tilde, &g_tilde, step, lambda);
+        for t in 0..t_len {
+            let dl = delta(&[(0, 0.1 * t as f64), (2, -0.05)]);
+            lazy.apply(&dl);
+            dense.apply(&dl);
+        }
+        lazy.refresh(&[3]);
+        assert!(
+            (lazy.values()[3] - dense.w[3]).abs() < 1e-13,
+            "epoch-long replay: {} vs {}",
+            lazy.values()[3],
+            dense.w[3]
+        );
+        // ζ at the epoch end sees the untouched coordinate too
+        let mut w_zeta = vec![0.0; d];
+        lazy.materialize(t_len - 1, &mut w_zeta);
+        assert_close(&w_zeta, &dense.hist[t_len - 1], 1e-13, "zeta");
+        // epoch boundary: restart from the chosen snapshot; the stale
+        // timestamp from epoch 1 must not leak into epoch 2
+        lazy.begin_epoch(&w_zeta, &g_tilde, step, lambda);
+        let mut dense2 = DenseTwin::begin(&w_zeta, &g_tilde, step, lambda);
+        let dl = delta(&[(1, 0.5)]);
+        lazy.apply(&dl);
+        dense2.apply(&dl);
+        let all: Vec<u32> = (0..d as u32).collect();
+        lazy.refresh(&all);
+        assert_close(lazy.values(), &dense2.w, 1e-13, "second epoch");
+    }
+
+    #[test]
+    fn lambda_zero_degenerates_to_plain_drift() {
+        // λ = 0: β = 1, P ≡ 1, G[e] = e — the affine map is pure
+        // accumulation of c = −α·g̃
+        let d = 3;
+        let w_tilde = vec![0.2, -0.4, 0.6];
+        let g_tilde = vec![0.5, -0.25, 0.0];
+        let step = 0.3;
+        let mut lazy = LazyIterate::new(d);
+        lazy.begin_epoch(&w_tilde, &g_tilde, step, 0.0);
+        let mut dense = DenseTwin::begin(&w_tilde, &g_tilde, step, 0.0);
+        for _ in 0..10 {
+            let dl = delta(&[(1, 0.2)]);
+            lazy.apply(&dl);
+            dense.apply(&dl);
+        }
+        let all: Vec<u32> = (0..d as u32).collect();
+        lazy.refresh(&all);
+        assert_close(lazy.values(), &dense.w, 1e-13, "lambda=0");
+        // untouched coordinate 0 after 10 steps: w0 − 10·α·g̃_0 exactly
+        let expect = w_tilde[0] - 10.0 * step * g_tilde[0];
+        assert!((lazy.values()[0] - expect).abs() < 1e-13);
+        let mut w5 = vec![0.0; d];
+        lazy.materialize(5, &mut w5);
+        assert_close(&w5, &dense.hist[5], 1e-13, "lambda=0 materialize");
+    }
+
+    #[test]
+    fn materialize_zero_is_the_epoch_start() {
+        let d = 4;
+        let w_tilde = vec![1.0, 2.0, -3.0, 0.5];
+        let mut lazy = LazyIterate::new(d);
+        lazy.begin_epoch(&w_tilde, &[0.3; 4], 0.2, 0.1);
+        lazy.apply(&delta(&[(0, 1.0)]));
+        lazy.apply(&delta(&[(2, -1.0)]));
+        let mut out = vec![0.0; d];
+        lazy.materialize(0, &mut out);
+        assert_eq!(out, w_tilde, "ζ=0 must reproduce w̃ exactly");
+    }
+}

@@ -24,11 +24,13 @@
 
 pub mod channel;
 pub mod full_gradient;
+pub mod lazy;
 pub mod sharded;
 pub mod stochastic;
 pub mod svrg;
 
 pub use channel::{QuantChannel, QuantOpts};
+pub use lazy::LazyIterate;
 pub use sharded::ShardedObjective;
 
 use anyhow::{bail, Result};

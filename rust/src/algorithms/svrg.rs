@@ -25,10 +25,31 @@
 //!    `w_{k,t} = q(u; R_{w,k})` (b_w bits);
 //! 5. `w̃_{k+1} = w_{k,ζ}` for ζ uniform on {0..T−1}.
 //!
+//! **Two inner-loop protocols** (the cluster picks via
+//! [`Cluster::lazy_lambda`]):
+//!
+//! * *quantized* — dense iterates; step 4 above runs as ONE fused
+//!   reconstruct-and-update sweep per iteration ([`Cluster::inner_step`]:
+//!   the `u` step, the URQ quantization, and the broadcast reconstruction
+//!   collapse into a single O(d) pass that writes straight into the
+//!   ζ-history row — identical values, rng draws, and wire bytes to the old
+//!   three-loop sequence, as the fingerprint matrix pins);
+//! * *unquantized (lazy)* — worker ξ ships the fused **sparse delta**
+//!   `g_ξ(w) − g_ξ(w̃)` (logistic part over ξ's column support; the ridge
+//!   part is analytic) and every replica advances a [`LazyIterate`] affine
+//!   recurrence: O(nnz(x_ξ)) amortized per iteration instead of O(d), and
+//!   the dense `T×d` history is replaced by an O(Σ nnz) delta log that
+//!   materializes `w_{k,ζ}` at the epoch end. A dense O(d) reference stays
+//!   in [`crate::testkit::dense_svrg_reference`]; a lockstep property pins
+//!   ≤1e-10 agreement.
+//!
 //! Every exchange — including the raw 64-bit ones and the final gradient
-//! collection after the last epoch — is metered on the cluster's ledger, so
-//! unquantized runs measure exactly the §4.1 closed form `64dN + 192dT` per
-//! epoch (plus the final `64dN` report).
+//! collection after the last epoch — is metered on the cluster's ledger.
+//! Unquantized runs measure `64dN + 64d + 2·96·Σnnz` per epoch (snapshot
+//! collection + the g̃ broadcast + the delta uplink/broadcast pairs; on
+//! fully-dense data Σnnz = dT) plus the final `64dN` report — see
+//! EXPERIMENTS.md §Bit accounting for how this relates to the paper's
+//! `64dN + 192dT` closed form.
 //!
 //! NOTE on "+" accounting: §4.1 prices QM-SVRG-F+/A+ at `64dN + (b_w+b_g)T`
 //! although the text has the worker quantize *two* gradient vectors per inner
@@ -39,8 +60,9 @@
 use anyhow::Result;
 
 use super::full_gradient::EvalFn;
+use super::lazy::LazyIterate;
 use crate::cluster::Cluster;
-use crate::linalg;
+use crate::linalg::{self, SparseVec};
 use crate::rng::Xoshiro256pp;
 
 /// Options for the SVRG family. Quantization is a property of the *cluster*
@@ -66,8 +88,10 @@ pub struct SvrgOpts {
 /// memory-unit check, i.e. on the snapshot the epoch actually starts from —
 /// and once more after the final epoch: `(k, w̃_k, ‖g̃_k‖, cumulative_bits)`.
 ///
-/// The inner loop allocates nothing: gradients land in scratch buffers and
-/// the ζ-eligible history is a flat T×d matrix (§Perf, EXPERIMENTS.md).
+/// The inner loop allocates nothing: on the quantized path the fused sweep
+/// writes reconstructions straight into the flat T×d ζ-history; on the lazy
+/// path the sparse deltas land in one reusable buffer and the history is a
+/// flat delta log (§Perf, EXPERIMENTS.md).
 pub fn run_svrg<C: Cluster>(
     cluster: &mut C,
     opts: &SvrgOpts,
@@ -77,6 +101,7 @@ pub fn run_svrg<C: Cluster>(
     let d = cluster.dim();
     let n = cluster.n_workers();
     let t_len = opts.epoch_len;
+    let lazy_lambda = cluster.lazy_lambda();
 
     // snapshot state
     let mut w_tilde = vec![0.0; d];
@@ -89,13 +114,16 @@ pub fn run_svrg<C: Cluster>(
     let mut node_g = vec![vec![0.0; d]; n];
     let mut prev_node_g = vec![vec![0.0; d]; n];
 
-    // scratch — reused across all inner iterations
-    let mut g_cur_rx = vec![0.0; d];
-    let mut g_snap_rx = vec![0.0; d];
-    let mut u = vec![0.0; d];
-    let mut w = vec![0.0; d];
-    // ζ-eligible iterates w_{k,0..T−1}, flat T×d
-    let mut w_hist = vec![0.0; t_len * d];
+    // per-protocol state, allocated only for the path this run takes: the
+    // quantized path keeps the ζ-eligible iterates w_{k,0..T−1} (flat T×d)
+    // plus the final, non-eligible w_{k,T}; the lazy path replaces that
+    // dense history with the master's affine-iterate replica (whose delta
+    // log is O(Σ nnz)) and one reusable delta buffer
+    let quantized = lazy_lambda.is_none();
+    let mut w_hist = vec![0.0; if quantized { t_len * d } else { 0 }];
+    let mut w_last = vec![0.0; if quantized { d } else { 0 }];
+    let mut lazy = LazyIterate::new(if quantized { 0 } else { d });
+    let mut delta = SparseVec::new();
 
     for k in 0..opts.outer_iters {
         // ---- outer: collect exact node gradients (64dN bits, all variants)
@@ -125,30 +153,44 @@ pub fn run_svrg<C: Cluster>(
         cluster.commit_epoch(&w_tilde, &node_g, gnorm)?;
         eval(k, &w_tilde, gnorm, cluster.total_bits());
 
-        // ---- inner loop
-        w.copy_from_slice(&w_tilde);
-        w_hist[..d].copy_from_slice(&w); // w_{k,0} = w̃_k
-        let mut hist_len = 1;
-        for _t in 1..=t_len {
-            let xi = rng.gen_index(n);
-            cluster.inner_grads(xi, &w, &w_tilde, &mut g_snap_rx, &mut g_cur_rx)?;
-
-            // u = w − α (g_ξ(w) − q(g_ξ(w̃)) + g̃)
-            for (j, uj) in u.iter_mut().enumerate() {
-                *uj = w[j] - opts.step * (g_cur_rx[j] - g_snap_rx[j] + g_tilde[j]);
+        // ---- inner loop + ζ-choice, per protocol
+        if let Some(lambda) = lazy_lambda {
+            // lazy sparse-delta path: O(nnz(x_ξ)) per iteration. Every
+            // worker replica runs the identical begin_epoch/apply sequence
+            // from the broadcast stream.
+            cluster.begin_inner_lazy(&g_tilde, opts.step)?;
+            lazy.begin_epoch(&w_tilde, &g_tilde, opts.step, lambda);
+            for _t in 1..=t_len {
+                let xi = rng.gen_index(n);
+                cluster.inner_delta(xi, &w_tilde, &mut lazy, &mut delta)?;
+                lazy.apply(&delta);
             }
-            cluster.broadcast_params(&u, &mut w)?; // w_{k,t} = q(u; R_{w,k})
-            if hist_len < t_len {
-                // only w_{k,0..T−1} are ζ-eligible
-                w_hist[hist_len * d..(hist_len + 1) * d].copy_from_slice(&w);
-                hist_len += 1;
+            // w̃_{k+1} = w_{k,ζ}, ζ uniform on {0..T−1}, from the delta log
+            let zeta = rng.gen_index(t_len);
+            cluster.choose_snapshot(zeta)?;
+            lazy.materialize(zeta, &mut w_tilde);
+        } else {
+            // quantized path: dense iterates; each turn is ONE fused
+            // receive→step→quantize→reconstruct sweep that writes directly
+            // into the next history row (w_{k,T} is not ζ-eligible and
+            // lands in the side buffer)
+            w_hist[..d].copy_from_slice(&w_tilde); // w_{k,0} = w̃_k
+            for t in 1..=t_len {
+                let xi = rng.gen_index(n);
+                if t < t_len {
+                    let (head, tail) = w_hist.split_at_mut(t * d);
+                    let w = &head[(t - 1) * d..];
+                    cluster.inner_step(xi, w, &w_tilde, &g_tilde, opts.step, &mut tail[..d])?;
+                } else {
+                    let w = &w_hist[(t_len - 1) * d..t_len * d];
+                    cluster.inner_step(xi, w, &w_tilde, &g_tilde, opts.step, &mut w_last)?;
+                }
             }
+            // w̃_{k+1} = w_{k,ζ}, ζ uniform on {0..T−1}
+            let zeta = rng.gen_index(t_len);
+            cluster.choose_snapshot(zeta)?;
+            w_tilde.copy_from_slice(&w_hist[zeta * d..(zeta + 1) * d]);
         }
-
-        // ---- w̃_{k+1} = w_{k,ζ}, ζ uniform on {0..T−1}
-        let zeta = rng.gen_index(hist_len);
-        cluster.choose_snapshot(zeta)?;
-        w_tilde.copy_from_slice(&w_hist[zeta * d..(zeta + 1) * d]);
     }
 
     // final report on the last snapshot (metered like any collection)
@@ -366,15 +408,24 @@ mod tests {
     }
 
     #[test]
-    fn unquantized_bits_match_paper_formula() {
+    fn unquantized_bits_match_lazy_protocol_formula() {
+        // the lazy sparse-delta protocol on fully-dense data: per epoch,
+        // the snapshot collection (64dN) + the g̃ broadcast (64d) + T
+        // delta uplink/broadcast pairs at 96 bits/coordinate with full
+        // support (Σnnz = dT), plus the metered final gradient report
         let p = prob();
         let mut opts = base_opts();
         opts.outer_iters = 4;
         let mut bits = 0;
         run(&p, &opts, None, 6, &mut |_, _, _, b| bits = b);
-        // (64·9·8 + 192·9·8) per epoch · 4 epochs, plus the metered final
-        // gradient report (64·9·8)
-        assert_eq!(bits, (64 * 9 * 8 + 192 * 9 * 8) * 4 + 64 * 9 * 8);
+        let (d, n, t, k) = (9u64, 8u64, 8u64, 4u64);
+        let per_epoch = 64 * d * n + 64 * d + 2 * 96 * d * t;
+        assert_eq!(bits, per_epoch * k + 64 * d * n);
+        // fully-dense support prices the inner loop at 2·96·dT = 192·dT —
+        // exactly the paper's dense closed form; the g̃ broadcast is the
+        // only overhead, and genuinely sparse data pays 96 bits *per
+        // stored coordinate* instead of per dimension
+        assert_eq!(2 * 96 * d * t, 192 * d * t);
     }
 
     #[test]

@@ -127,9 +127,12 @@ Compressors (quantized algorithms): urq (per-epoch re-centered grids,
             refuse a compressor/bits/policy or protocol-version mismatch.
 Storage:    libsvm files stay sparse (CSR) under --format auto when their
             density is below the loader threshold; sparse storage
-            standardizes scale-only (no centering). Master and workers
-            must pass the same --format — the Config handshake carries the
-            resolved storage and workers refuse a mismatch at connect.
+            standardizes scale-only (no centering).
+Data:       master and workers must resolve IDENTICAL training data — the
+            Config handshake carries the full fingerprint (n, d, lambda,
+            storage, content hash of the standardized features), so a
+            --dataset/--samples/--seed/--lambda/--format disagreement is
+            refused at connect with a field-specific error.
 ";
 
 #[cfg(test)]

@@ -3,14 +3,23 @@
 //! (via [`QuantChannel`]) so bit counts are payload-exact and reconstructed
 //! values are identical to what a remote end would see. Replaces the old
 //! centralized simulator loop in `algorithms::svrg`.
+//!
+//! Unquantized runs take the sparse-delta path: [`Cluster::inner_delta`]
+//! replays the engine's [`LazyIterate`] at shard ξ's column support and runs
+//! the fused O(nnz) two-margin kernel — the very same
+//! `LogisticRidge::grad_delta` a threaded/TCP worker runs on its replica, so
+//! the backends stay bit-identical.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use super::{active_ledger, Cluster};
 use crate::algorithms::channel::{QuantChannel, QuantOpts};
 use crate::algorithms::sharded::ShardedObjective;
+use crate::algorithms::LazyIterate;
+use crate::linalg::SparseVec;
 use crate::metrics::CommLedger;
 use crate::rng::Xoshiro256pp;
+use crate::transport::Message;
 
 /// [`Cluster`] over a [`ShardedObjective`] held in this process.
 pub struct InProcessCluster<'a> {
@@ -20,6 +29,12 @@ pub struct InProcessCluster<'a> {
     raw_ledger: CommLedger,
     /// Scratch for the exact gradient that feeds the uplink quantizer.
     g_scratch: Vec<f64>,
+    /// Master-side reconstructions of worker ξ's two inner-loop uplinks
+    /// (quantized path).
+    g_snap_rx: Vec<f64>,
+    g_cur_rx: Vec<f64>,
+    /// Dense accumulator for the fused delta kernel (lazy path).
+    delta_scratch: Vec<f64>,
     /// This epoch's exact snapshot gradients `g_i(w̃_k)`, cached at
     /// [`Cluster::commit_epoch`] — the same per-epoch cache a `WorkerNode`
     /// keeps, so the inner loop never recomputes them.
@@ -41,6 +56,9 @@ impl<'a> InProcessCluster<'a> {
             ch: quant.map(|q| QuantChannel::new(q, d, n, root.clone())),
             raw_ledger: CommLedger::default(),
             g_scratch: vec![0.0; d],
+            g_snap_rx: vec![0.0; d],
+            g_cur_rx: vec![0.0; d],
+            delta_scratch: vec![0.0; d],
             g_snap: vec![vec![0.0; d]; n],
         }
     }
@@ -96,52 +114,86 @@ impl Cluster for InProcessCluster<'_> {
         Ok(())
     }
 
-    fn inner_grads(
+    fn lazy_lambda(&self) -> Option<f64> {
+        match self.ch {
+            Some(_) => None,
+            None => Some(self.prob.lambda()),
+        }
+    }
+
+    fn begin_inner_lazy(&mut self, g_tilde: &[f64], _step: f64) -> Result<()> {
+        if self.ch.is_some() {
+            bail!("begin_inner_lazy on a quantized cluster");
+        }
+        // the g̃ broadcast every worker needs for its affine coefficients:
+        // metered once, like any broadcast (the step scalar rides free)
+        self.raw_ledger.record_downlink(64 * g_tilde.len() as u64);
+        Ok(())
+    }
+
+    fn inner_delta(
+        &mut self,
+        xi: usize,
+        w_tilde: &[f64],
+        lazy: &mut LazyIterate,
+        delta: &mut SparseVec,
+    ) -> Result<()> {
+        if self.ch.is_some() {
+            bail!("inner_delta on a quantized cluster");
+        }
+        let shard = self.prob.shard(xi);
+        // just-in-time replay of exactly the coordinates shard ξ reads,
+        // then the fused two-margin O(nnz) kernel — the identical call
+        // sequence a WorkerNode runs on its own replica
+        lazy.refresh(shard.support());
+        shard.grad_delta(lazy.values(), w_tilde, &mut self.delta_scratch, delta);
+        let bits = Message::delta_bits(delta.len());
+        self.raw_ledger.record_uplink(bits); // ξ's GradDelta
+        self.raw_ledger.record_downlink(bits); // DeltaApply broadcast, once
+        Ok(())
+    }
+
+    fn inner_step(
         &mut self,
         xi: usize,
         w: &[f64],
         w_tilde: &[f64],
-        g_snap_rx: &mut [f64],
-        g_cur_rx: &mut [f64],
+        g_tilde: &[f64],
+        step: f64,
+        w_out: &mut [f64],
     ) -> Result<()> {
+        debug_assert_eq!(w_tilde.len(), w.len());
+        let Self {
+            prob,
+            ch,
+            g_scratch,
+            g_snap_rx,
+            g_cur_rx,
+            g_snap,
+            ..
+        } = self;
+        let Some(c) = ch.as_mut() else {
+            bail!("inner_step on an unquantized cluster (lazy runs use inner_delta)");
+        };
         // `g_snap` was cached at commit (g_i at the committed w̃_k, which is
-        // exactly `w_tilde` here), so no recomputation — same per-epoch cache
-        // a WorkerNode keeps
-        debug_assert_eq!(w_tilde.len(), g_snap_rx.len());
-        match self.ch.as_mut() {
-            Some(c) => {
-                // worker ξ's URQ stream draws for the snapshot gradient
-                // first, then (in the "+" variants) for the current one —
-                // the same order a WorkerNode uses
-                c.send_g_into(xi, &self.g_snap[xi], g_snap_rx)?; // b_g
-                if c.plus() {
-                    self.prob.node_grad(xi, w, &mut self.g_scratch);
-                    c.send_g_into(xi, &self.g_scratch, g_cur_rx)?; // b_g
-                } else {
-                    c.send_raw_up(self.prob.dim()); // 64d exact
-                    self.prob.node_grad(xi, w, g_cur_rx);
-                }
-            }
-            None => {
-                g_snap_rx.copy_from_slice(&self.g_snap[xi]);
-                self.prob.node_grad(xi, w, g_cur_rx);
-                let d = self.prob.dim() as u64;
-                self.raw_ledger.record_uplink(64 * d);
-                self.raw_ledger.record_uplink(64 * d);
-            }
+        // exactly `w_tilde` here), so no recomputation — same per-epoch
+        // cache a WorkerNode keeps. Worker ξ's URQ stream draws for the
+        // snapshot gradient first, then (in the "+" variants) for the
+        // current one — the same order a WorkerNode uses.
+        c.send_g_into(xi, &g_snap[xi], g_snap_rx)?; // b_g
+        if c.plus() {
+            prob.node_grad(xi, w, g_scratch);
+            c.send_g_into(xi, g_scratch, g_cur_rx)?; // b_g
+        } else {
+            c.send_raw_up(prob.dim()); // 64d exact
+            prob.node_grad(xi, w, g_cur_rx);
         }
-        Ok(())
-    }
-
-    fn broadcast_params(&mut self, u: &[f64], w_out: &mut [f64]) -> Result<()> {
-        match self.ch.as_mut() {
-            Some(c) => c.send_w_into(u, w_out), // b_w, metered once
-            None => {
-                w_out.copy_from_slice(u);
-                self.raw_ledger.record_downlink(64 * u.len() as u64);
-                Ok(())
-            }
-        }
+        // the fused reconstruct-and-update sweep: u_j, quantize, and the
+        // broadcast reconstruction in ONE pass (b_w, metered once)
+        c.send_w_fused_into(
+            |j| w[j] - step * (g_cur_rx[j] - g_snap_rx[j] + g_tilde[j]),
+            w_out,
+        )
     }
 
     fn choose_snapshot(&mut self, _zeta: usize) -> Result<()> {

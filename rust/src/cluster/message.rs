@@ -6,7 +6,10 @@
 //! compressor) — the same type every worker holds (see
 //! [`crate::quant::replicated`]) — and advances it from the message stream
 //! alone, so quantization grids and compressor memory replicate bit-for-bit
-//! without grid parameters ever crossing a link.
+//! without grid parameters ever crossing a link. Unquantized runs hold no
+//! grids at all: the engine's [`crate::algorithms::LazyIterate`] replica and
+//! every worker's advance from the same broadcast sparse deltas
+//! (`InnerSetup`/`InnerDeltaRequest`/`GradDelta`/`DeltaApply`).
 //!
 //! Every collective (gradient collection, commit/revert acks, snapshot
 //! choice, loss query) issues its request to **all** links before blocking
@@ -18,6 +21,9 @@ use anyhow::{bail, Context, Result};
 
 use super::Cluster;
 use crate::algorithms::channel::QuantOpts;
+use crate::algorithms::LazyIterate;
+use crate::data::DataFingerprint;
+use crate::linalg::SparseVec;
 use crate::metrics::CommLedger;
 use crate::quant::QuantState;
 use crate::rng::Xoshiro256pp;
@@ -28,45 +34,59 @@ use crate::transport::{Duplex, Message, PROTO_VERSION};
 pub struct MessageCluster<D: Duplex> {
     links: Vec<D>,
     d: usize,
+    /// Ridge λ of the resolved training data (from the fingerprint): the
+    /// analytic part of the lazy affine recurrence on unquantized runs.
+    lambda: f64,
     /// The master end's replicated grid/compressor state machine.
     quant: Option<QuantState>,
     /// Downlink URQ rounding stream (the workers never see it — they
     /// reconstruct from the broadcast indices).
     quant_rng: Xoshiro256pp,
+    /// Master-side reconstructions of worker ξ's two inner-loop uplinks
+    /// (quantized path).
+    g_snap_rx: Vec<f64>,
+    g_cur_rx: Vec<f64>,
     pub ledger: CommLedger,
 }
 
 impl<D: Duplex> MessageCluster<D> {
     /// `root` is the run's root rng (the same one the workers derived their
-    /// streams from); `sparse` is the master's resolved feature storage
-    /// (`Dataset::is_sparse`) — a data property, since sparse storage
-    /// standardizes scale-only. Broadcasts the [`Message::Config`] handshake
-    /// on every link before returning: workers refuse a protocol-version,
-    /// quantization-config, or storage mismatch instead of silently
+    /// streams from); `fp` is the master's resolved-data fingerprint
+    /// ([`crate::data::Dataset::fingerprint`] over the data this run trains
+    /// on, plus λ). Broadcasts the [`Message::Config`] handshake on every
+    /// link before returning: workers refuse a protocol-version,
+    /// quantization-config, or data-fingerprint mismatch instead of silently
     /// mis-decoding (or training on different data).
     pub fn new(
         links: Vec<D>,
-        d: usize,
         quant: Option<QuantOpts>,
-        sparse: bool,
+        fp: DataFingerprint,
         root: &Xoshiro256pp,
     ) -> Result<Self> {
         assert!(!links.is_empty(), "need at least one worker");
         let n = links.len();
+        let d = fp.d as usize;
         let config = Message::Config {
             version: PROTO_VERSION,
             compressor: quant.as_ref().map_or(0, |q| q.compressor.wire_id()),
             bits: quant.as_ref().map_or(0, |q| q.bits),
             plus: quant.as_ref().map_or(0, |q| q.plus as u8),
-            sparse: sparse as u8,
+            sparse: fp.sparse as u8,
+            n: fp.n,
+            d: fp.d,
+            lambda_bits: fp.lambda_bits,
+            data_hash: fp.content_hash,
             policy_fp: quant.as_ref().map_or(0, |q| q.policy.fingerprint()),
         };
         let mut cluster = Self {
             links,
             d,
+            lambda: fp.lambda(),
             quant: quant
                 .map(|q| QuantState::new(q.policy.clone(), q.bits, q.compressor, d, n)),
             quant_rng: root.quant_stream(),
+            g_snap_rx: vec![0.0; d],
+            g_cur_rx: vec![0.0; d],
             ledger: CommLedger::default(),
         };
         cluster.fan_out(&config)?;
@@ -93,14 +113,23 @@ impl<D: Duplex> MessageCluster<D> {
 
     /// Receive one gradient message from worker `xi`, reconstruct it through
     /// the replicated compressor state into `out`, and meter the uplink
-    /// (payload bits + the worker-observed saturation count).
-    fn recv_gradient_into(&mut self, xi: usize, out: &mut [f64]) -> Result<()> {
-        match self.links[xi].recv()? {
+    /// (payload bits + the worker-observed saturation count). A free
+    /// function over disjoint field borrows so the reconstruction can land
+    /// in this struct's own scratch buffers.
+    fn recv_gradient(
+        link: &mut D,
+        quant: &mut Option<QuantState>,
+        ledger: &mut CommLedger,
+        d: usize,
+        xi: usize,
+        out: &mut [f64],
+    ) -> Result<()> {
+        match link.recv()? {
             Message::GradRaw { g } => {
-                if g.len() != self.d {
+                if g.len() != d {
                     bail!("worker {xi}: gradient dim {}", g.len());
                 }
-                self.ledger.record_uplink(64 * self.d as u64);
+                ledger.record_uplink(64 * d as u64);
                 out.copy_from_slice(&g);
             }
             Message::GradQ {
@@ -108,13 +137,12 @@ impl<D: Duplex> MessageCluster<D> {
                 bits,
                 sats,
             } => {
-                let q = self
-                    .quant
+                let q = quant
                     .as_mut()
                     .context("GradQ from worker but master is unquantized")?;
                 q.comp.decode(&mut q.grid, xi, &payload, out)?;
-                self.ledger.record_uplink(bits);
-                self.ledger.saturations += sats as u64;
+                ledger.record_uplink(bits);
+                ledger.saturations += sats as u64;
             }
             other => bail!("worker {xi}: expected gradient, got {other:?}"),
         }
@@ -128,9 +156,8 @@ impl MessageCluster<TcpDuplex> {
     pub fn over_tcp(
         listener: &std::net::TcpListener,
         n_workers: usize,
-        d: usize,
         quant: Option<QuantOpts>,
-        sparse: bool,
+        fp: DataFingerprint,
         root: &Xoshiro256pp,
     ) -> Result<Self> {
         let mut links = Vec::with_capacity(n_workers);
@@ -138,7 +165,7 @@ impl MessageCluster<TcpDuplex> {
             let (stream, _) = listener.accept().context("accept")?;
             links.push(TcpDuplex::new(stream)?);
         }
-        Self::new(links, d, quant, sparse, root)
+        Self::new(links, quant, fp, root)
     }
 }
 
@@ -191,36 +218,110 @@ impl<D: Duplex> Cluster for MessageCluster<D> {
         self.collect_acks()
     }
 
-    fn inner_grads(
-        &mut self,
-        xi: usize,
-        _w: &[f64],
-        _w_tilde: &[f64],
-        g_snap_rx: &mut [f64],
-        g_cur_rx: &mut [f64],
-    ) -> Result<()> {
-        self.links[xi].send(Message::InnerRequest)?;
-        // uplink 1: compressed (or raw) snapshot gradient
-        self.recv_gradient_into(xi, g_snap_rx)?;
-        // uplink 2: current-iterate gradient
-        self.recv_gradient_into(xi, g_cur_rx)
+    fn lazy_lambda(&self) -> Option<f64> {
+        match self.quant {
+            Some(_) => None,
+            None => Some(self.lambda),
+        }
     }
 
-    fn broadcast_params(&mut self, u: &[f64], w_out: &mut [f64]) -> Result<()> {
-        if let Some(q) = self.quant.as_mut() {
-            let e = q.grid.encode_w(u, &mut self.quant_rng, w_out)?;
-            self.ledger.record_downlink(e.payload.bits); // broadcast: metered once
-            self.ledger.saturations += e.sats as u64;
-            let msg = Message::ParamsQ {
-                payload: e.payload.bytes,
-                bits: e.payload.bits,
-            };
-            self.fan_out(&msg)
-        } else {
-            self.ledger.record_downlink(64 * self.d as u64);
-            w_out.copy_from_slice(u);
-            self.fan_out(&Message::ParamsRaw { w: u.to_vec() })
+    fn begin_inner_lazy(&mut self, g_tilde: &[f64], step: f64) -> Result<()> {
+        if self.quant.is_some() {
+            bail!("begin_inner_lazy on a quantized cluster");
         }
+        // broadcast: metered once (64·d for g̃; the step scalar rides free)
+        self.ledger.record_downlink(64 * g_tilde.len() as u64);
+        self.fan_out(&Message::InnerSetup {
+            step,
+            g_tilde: g_tilde.to_vec(),
+        })
+    }
+
+    fn inner_delta(
+        &mut self,
+        xi: usize,
+        _w_tilde: &[f64],
+        _lazy: &mut LazyIterate,
+        delta: &mut SparseVec,
+    ) -> Result<()> {
+        if self.quant.is_some() {
+            bail!("inner_delta on a quantized cluster");
+        }
+        self.links[xi].send(Message::InnerDeltaRequest)?;
+        match self.links[xi].recv()? {
+            Message::GradDelta { idx, val } => {
+                Message::validate_delta(&idx, &val, self.d)
+                    .with_context(|| format!("worker {xi}: malformed GradDelta"))?;
+                self.ledger.record_uplink(Message::delta_bits(idx.len()));
+                delta.idx = idx;
+                delta.val = val;
+            }
+            other => bail!("worker {xi}: expected GradDelta, got {other:?}"),
+        }
+        // broadcast the delta so every worker (ξ included) advances its
+        // replica identically; metered once
+        self.ledger.record_downlink(Message::delta_bits(delta.len()));
+        self.fan_out(&Message::DeltaApply {
+            idx: delta.idx.clone(),
+            val: delta.val.clone(),
+        })
+    }
+
+    fn inner_step(
+        &mut self,
+        xi: usize,
+        w: &[f64],
+        _w_tilde: &[f64],
+        g_tilde: &[f64],
+        step: f64,
+        w_out: &mut [f64],
+    ) -> Result<()> {
+        self.links[xi].send(Message::InnerRequest)?;
+        {
+            let Self {
+                links,
+                quant,
+                ledger,
+                g_snap_rx,
+                g_cur_rx,
+                d,
+                ..
+            } = self;
+            // uplink 1: compressed snapshot gradient; uplink 2: current one
+            Self::recv_gradient(&mut links[xi], quant, ledger, *d, xi, g_snap_rx)?;
+            Self::recv_gradient(&mut links[xi], quant, ledger, *d, xi, g_cur_rx)?;
+        }
+        let Self {
+            links,
+            quant,
+            quant_rng,
+            ledger,
+            g_snap_rx,
+            g_cur_rx,
+            ..
+        } = self;
+        let q = quant
+            .as_mut()
+            .context("inner_step on an unquantized cluster (lazy runs use inner_delta)")?;
+        // the fused reconstruct-and-update sweep: the SVRG step, the URQ
+        // quantization, and the reconstruction write in ONE O(d) pass —
+        // values, rng draws, and the ParamsQ wire bytes are identical to
+        // materializing u first
+        let e = q.grid.encode_w_fused(
+            |j| w[j] - step * (g_cur_rx[j] - g_snap_rx[j] + g_tilde[j]),
+            quant_rng,
+            w_out,
+        )?;
+        ledger.record_downlink(e.payload.bits); // broadcast: metered once
+        ledger.saturations += e.sats as u64;
+        let msg = Message::ParamsQ {
+            payload: e.payload.bytes,
+            bits: e.payload.bits,
+        };
+        for link in links.iter_mut() {
+            link.send(msg.clone())?;
+        }
+        Ok(())
     }
 
     fn choose_snapshot(&mut self, zeta: usize) -> Result<()> {

@@ -5,6 +5,15 @@
 //! implementation in this repo; it is generic over [`Cluster`] and never
 //! touches a socket, a channel, or a shard directly. Three backends:
 //!
+//! Two inner-loop protocols, selected by [`Cluster::lazy_lambda`]:
+//! **quantized** runs exchange whole vectors through the grids
+//! ([`Cluster::inner_step`], one fused O(d) master sweep, wire format
+//! unchanged), while **unquantized** runs use the sparse-delta protocol
+//! ([`Cluster::inner_delta`]): worker ξ ships the fused logistic delta over
+//! its column support and every replica advances a
+//! [`crate::algorithms::LazyIterate`] — O(nnz(x_ξ)) per iteration instead
+//! of O(d).
+//!
 //! * [`InProcessCluster`] — the shards live in this process
 //!   ([`crate::algorithms::ShardedObjective`]); quantized exchanges run
 //!   through the real quantizer + wire codec ([`QuantChannel`]) so bits are
@@ -53,6 +62,8 @@ pub use threaded::ThreadedCluster;
 use anyhow::Result;
 
 use crate::algorithms::channel::QuantChannel;
+use crate::algorithms::LazyIterate;
+use crate::linalg::SparseVec;
 use crate::metrics::CommLedger;
 
 /// Master-side protocol verbs of Algorithm 1.
@@ -92,21 +103,52 @@ pub trait Cluster {
     /// and DIANA keeps its difference grid pinned at the origin).
     fn commit_epoch(&mut self, w_tilde: &[f64], node_g: &[Vec<f64>], gnorm: f64) -> Result<()>;
 
-    /// Inner-loop turn for worker ξ: uplink `q(g_ξ(w̃_k))` (b_g bits) and
-    /// `g_ξ(w_{k,t−1})` (exact 64d, or b_g in the "+" variants). Writes the
-    /// master-side reconstructions into the scratch buffers.
-    fn inner_grads(
+    /// `Some(λ)` when this backend runs the **unquantized sparse-delta
+    /// ("lazy") inner protocol** — worker ξ ships one fused sparse gradient
+    /// delta per iteration and every replica advances a
+    /// [`LazyIterate`] affine recurrence built from λ. `None` for quantized
+    /// backends, which keep the dense [`Cluster::inner_step`] protocol
+    /// (grids quantize whole vectors; the wire format is unchanged).
+    fn lazy_lambda(&self) -> Option<f64>;
+
+    /// Lazy path, once per epoch after [`Cluster::commit_epoch`]: broadcast
+    /// the snapshot mean gradient `g̃_k` and the step α so every worker can
+    /// derive the same affine replay coefficients the engine holds. Metered
+    /// 64·d once (broadcast convention).
+    fn begin_inner_lazy(&mut self, g_tilde: &[f64], step: f64) -> Result<()>;
+
+    /// Lazy path, inner-loop turn for worker ξ: obtain the fused sparse
+    /// logistic delta `g_ξ(w_t) − g_ξ(w̃_k) − 2λ(w_t − w̃_k)` over ξ's
+    /// column support, computed at the lazily-replayed current iterate, and
+    /// broadcast it to every worker. Uplink and (once) downlink are each
+    /// metered 96 bits per stored coordinate. The engine applies the
+    /// returned delta to `lazy` afterwards; in-process backends use `lazy`
+    /// (the master replica) to replay ξ's support before computing.
+    fn inner_delta(
+        &mut self,
+        xi: usize,
+        w_tilde: &[f64],
+        lazy: &mut LazyIterate,
+        delta: &mut SparseVec,
+    ) -> Result<()>;
+
+    /// Quantized path, inner-loop turn for worker ξ — the FUSED master
+    /// sweep: uplink `q(g_ξ(w̃_k))` (b_g bits) and `g_ξ(w_{k,t−1})` (exact
+    /// 64d, or b_g in the "+" variants), then compute
+    /// `u_j = w_j − α(g_cur_j − g_snap_j + g̃_j)`, quantize it on `R_{w,k}`
+    /// and write the broadcast reconstruction into `w_out` — step, quantize
+    /// and reconstruct collapse into ONE O(d) sweep (§Perf), with values,
+    /// rng draws and wire bytes identical to the old three-loop sequence.
+    /// `w_out` is typically the next ζ-history row, so no extra copy runs.
+    fn inner_step(
         &mut self,
         xi: usize,
         w: &[f64],
         w_tilde: &[f64],
-        g_snap_rx: &mut [f64],
-        g_cur_rx: &mut [f64],
+        g_tilde: &[f64],
+        step: f64,
+        w_out: &mut [f64],
     ) -> Result<()>;
-
-    /// Broadcast `w_{k,t} = q(u; R_{w,k})` (b_w bits, metered once); writes
-    /// the reconstruction every worker ends up with into `w_out`.
-    fn broadcast_params(&mut self, u: &[f64], w_out: &mut [f64]) -> Result<()>;
 
     /// End of epoch: every worker sets its snapshot to the stored iterate
     /// `w_{k,ζ}`.

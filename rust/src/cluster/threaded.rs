@@ -29,7 +29,7 @@ impl ThreadedCluster {
         quant: Option<QuantOpts>,
         root: &Xoshiro256pp,
     ) -> Result<Self> {
-        Self::spawn_with(train, n_workers, quant, root, move |_i, s: Dataset| {
+        Self::spawn_with(train, n_workers, lambda, quant, root, move |_i, s: Dataset| {
             Ok(LogisticRidge::from_dataset(&s, lambda))
         })
     }
@@ -37,10 +37,14 @@ impl ThreadedCluster {
     /// Spawn workers with a custom gradient backend. `make_backend` runs on
     /// the worker's own thread (PJRT handles are not `Send`, so an XLA
     /// backend must be constructed where it runs — see
-    /// [`crate::driver::run_distributed`]).
+    /// [`crate::driver::run_distributed`]). `lambda` is the run's ridge
+    /// coefficient — part of the data fingerprint both link ends compare at
+    /// connect (here trivially equal, since master and workers share one
+    /// dataset; TCP deployments compute it independently).
     pub fn spawn_with<B, F>(
         train: &Dataset,
         n_workers: usize,
+        lambda: f64,
         quant: Option<QuantOpts>,
         root: &Xoshiro256pp,
         make_backend: F,
@@ -49,6 +53,14 @@ impl ThreadedCluster {
         B: GradientSource + 'static,
         F: Fn(usize, Dataset) -> Result<B> + Send + Clone + 'static,
     {
+        // one O(nnz) fingerprint pass per cluster construction. For this
+        // backend the comparison is trivially equal (master and workers
+        // share one dataset), but running the REAL handshake keeps the
+        // threaded backend a faithful stand-in for TCP deployments — where
+        // each end resolves the data independently and the hash is the
+        // thing that catches a --seed/--samples drift. Cost is one pass
+        // over data that standardize() already swept at load.
+        let fp = train.fingerprint(lambda);
         let shards = train.shard(n_workers);
         let mut links = Vec::with_capacity(n_workers);
         let mut handles = Vec::with_capacity(n_workers);
@@ -60,11 +72,11 @@ impl ThreadedCluster {
             let make = make_backend.clone();
             handles.push(std::thread::spawn(move || -> Result<()> {
                 let backend = make(i, shard)?;
-                WorkerNode::new(backend, worker_end, wq, rng).run()
+                WorkerNode::new(backend, worker_end, wq, fp, rng).run()
             }));
         }
         Ok(Self {
-            inner: MessageCluster::new(links, train.d, quant, train.is_sparse(), root)?,
+            inner: MessageCluster::new(links, quant, fp, root)?,
             handles,
         })
     }
@@ -116,19 +128,34 @@ impl Cluster for ThreadedCluster {
         self.inner.commit_epoch(w_tilde, node_g, gnorm)
     }
 
-    fn inner_grads(
+    fn lazy_lambda(&self) -> Option<f64> {
+        self.inner.lazy_lambda()
+    }
+
+    fn begin_inner_lazy(&mut self, g_tilde: &[f64], step: f64) -> Result<()> {
+        self.inner.begin_inner_lazy(g_tilde, step)
+    }
+
+    fn inner_delta(
+        &mut self,
+        xi: usize,
+        w_tilde: &[f64],
+        lazy: &mut crate::algorithms::LazyIterate,
+        delta: &mut crate::linalg::SparseVec,
+    ) -> Result<()> {
+        self.inner.inner_delta(xi, w_tilde, lazy, delta)
+    }
+
+    fn inner_step(
         &mut self,
         xi: usize,
         w: &[f64],
         w_tilde: &[f64],
-        g_snap_rx: &mut [f64],
-        g_cur_rx: &mut [f64],
+        g_tilde: &[f64],
+        step: f64,
+        w_out: &mut [f64],
     ) -> Result<()> {
-        self.inner.inner_grads(xi, w, w_tilde, g_snap_rx, g_cur_rx)
-    }
-
-    fn broadcast_params(&mut self, u: &[f64], w_out: &mut [f64]) -> Result<()> {
-        self.inner.broadcast_params(u, w_out)
+        self.inner.inner_step(xi, w, w_tilde, g_tilde, step, w_out)
     }
 
     fn choose_snapshot(&mut self, zeta: usize) -> Result<()> {

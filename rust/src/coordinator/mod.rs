@@ -14,7 +14,7 @@ pub use crate::cluster::{MessageCluster, ThreadedCluster};
 use anyhow::Result;
 
 use crate::algorithms::channel::QuantOpts;
-use crate::data::Dataset;
+use crate::data::{DataFingerprint, Dataset};
 use crate::rng::Xoshiro256pp;
 use crate::transport::tcp::TcpDuplex;
 
@@ -32,16 +32,17 @@ pub fn threaded(
 
 /// Accept `n_workers` TCP connections and build the master side of a
 /// multi-process deployment ([`MessageCluster::over_tcp`]); workers are
-/// separate `qmsvrg worker` processes. `sparse` is the master's resolved
-/// feature storage (`Dataset::is_sparse`) — carried in the Config handshake
-/// so a worker whose `--format` resolved differently is refused at connect.
+/// separate `qmsvrg worker` processes. `fp` is the master's resolved-data
+/// fingerprint ([`Dataset::fingerprint`] of the training data + λ) —
+/// carried in the Config handshake so a worker whose
+/// `--dataset/--samples/--seed/--lambda/--format` resolved differently is
+/// refused at connect.
 pub fn tcp(
     listener: &std::net::TcpListener,
     n_workers: usize,
-    d: usize,
     quant: Option<QuantOpts>,
-    sparse: bool,
+    fp: DataFingerprint,
     root: &Xoshiro256pp,
 ) -> Result<MessageCluster<TcpDuplex>> {
-    MessageCluster::over_tcp(listener, n_workers, d, quant, sparse, root)
+    MessageCluster::over_tcp(listener, n_workers, quant, fp, root)
 }

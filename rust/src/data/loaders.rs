@@ -86,6 +86,12 @@ pub fn load_libsvm(path: &Path, dim: Option<usize>) -> Result<Dataset> {
 /// feature indices are rejected (the old dense loader silently kept the last
 /// value, which hid corrupt files); unsorted indices are accepted and
 /// sorted.
+///
+/// Streams line-by-line **directly into the flat CSR arrays**
+/// (indptr/indices/values), with one small reusable per-row sort buffer —
+/// no intermediate `Vec<Vec<(idx, val)>>` of all rows, so loading an
+/// rcv1-sized file peaks at ~the CSR size itself instead of roughly double
+/// (per-row Vec headers + a second copy of every pair).
 pub fn load_libsvm_format(
     path: &Path,
     dim: Option<usize>,
@@ -93,8 +99,11 @@ pub fn load_libsvm_format(
 ) -> Result<Dataset> {
     let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
     let reader = BufReader::new(f);
-    let mut rows: Vec<Vec<(u32, f64)>> = Vec::new();
+    let mut indptr: Vec<usize> = vec![0];
+    let mut indices: Vec<u32> = Vec::new();
+    let mut values: Vec<f64> = Vec::new();
     let mut y = Vec::new();
+    let mut row: Vec<(u32, f64)> = Vec::new(); // reused per line
     let mut max_idx = 0usize;
     for (lineno, line) in reader.lines().enumerate() {
         let line = line?;
@@ -108,7 +117,7 @@ pub fn load_libsvm_format(
             .context("missing label")?
             .parse()
             .with_context(|| format!("line {}: bad label", lineno + 1))?;
-        let mut feats: Vec<(u32, f64)> = Vec::new();
+        row.clear();
         for tok in it {
             let (i, v) = tok
                 .split_once(':')
@@ -122,10 +131,10 @@ pub fn load_libsvm_format(
             }
             let v: f64 = v.parse().with_context(|| format!("line {}: bad value", lineno + 1))?;
             max_idx = max_idx.max(i);
-            feats.push(((i - 1) as u32, v));
+            row.push(((i - 1) as u32, v));
         }
-        feats.sort_unstable_by_key(|&(j, _)| j);
-        for pair in feats.windows(2) {
+        row.sort_unstable_by_key(|&(j, _)| j);
+        for pair in row.windows(2) {
             if pair[0].0 == pair[1].0 {
                 bail!(
                     "line {}: duplicate feature index {} (libsvm rows must name \
@@ -136,16 +145,20 @@ pub fn load_libsvm_format(
             }
         }
         y.push(label);
-        rows.push(feats);
+        for &(j, v) in &row {
+            indices.push(j);
+            values.push(v);
+        }
+        indptr.push(indices.len());
     }
-    if rows.is_empty() {
+    if y.is_empty() {
         bail!("empty libsvm file {}", path.display());
     }
     let d = dim.unwrap_or(max_idx);
     if d < max_idx {
         bail!("declared dim {} < max feature index {}", d, max_idx);
     }
-    let ds = Dataset::from_csr(CsrMatrix::from_rows(&rows, d)?, y)?;
+    let ds = Dataset::from_csr(CsrMatrix::new(indptr, indices, values, d)?, y)?;
     Ok(match format {
         FeatureFormat::Dense => ds.to_dense(),
         FeatureFormat::Sparse => ds,

@@ -72,6 +72,56 @@ impl std::str::FromStr for FeatureFormat {
     }
 }
 
+/// Exact identity of a resolved training set (plus the ridge λ, which is a
+/// data-defining knob: it drives μ, L and every adaptive grid). Carried in
+/// the [`crate::transport::Message::Config`] handshake so a master/worker
+/// disagreement on ANY of `--dataset/--samples/--seed/--lambda/--format` is
+/// refused at connect — the two ends would otherwise train on different
+/// data while every later wire message still parses, silently diverging a
+/// fixed-radius distributed run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct DataFingerprint {
+    /// Global sample count n.
+    pub n: u64,
+    /// Problem dimension d.
+    pub d: u32,
+    /// CSR storage flag (scale-only standardization — different data).
+    pub sparse: bool,
+    /// Exact bits of the ridge coefficient λ.
+    pub lambda_bits: u64,
+    /// FNV-1a 64 over the exact bits of the standardized features (storage
+    /// layout included) and labels. Cheap: one O(nnz + n) pass at startup.
+    pub content_hash: u64,
+}
+
+impl DataFingerprint {
+    #[inline]
+    pub fn lambda(&self) -> f64 {
+        f64::from_bits(self.lambda_bits)
+    }
+}
+
+/// FNV-1a 64 over a stream of u64 words (each hashed as 8 LE bytes).
+#[derive(Clone, Copy)]
+struct Fnv64(u64);
+
+impl Fnv64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    fn new() -> Self {
+        Fnv64(Self::OFFSET)
+    }
+
+    #[inline]
+    fn word(&mut self, x: u64) {
+        for b in x.to_le_bytes() {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(Self::PRIME);
+        }
+    }
+}
+
 /// A supervised dataset: dense or CSR features + labels.
 ///
 /// Binary tasks use labels in {-1, +1}; multiclass tasks store class ids
@@ -387,6 +437,46 @@ impl Dataset {
         out
     }
 
+    /// Fingerprint this resolved dataset + the ridge λ for the Config
+    /// handshake (see [`DataFingerprint`]). Hash the TRAINING data the run
+    /// will actually see — i.e. after split/standardize — so both ends of a
+    /// TCP deployment compute it over identical bytes iff their loaders
+    /// agreed on every data-defining knob.
+    pub fn fingerprint(&self, lambda: f64) -> DataFingerprint {
+        let mut h = Fnv64::new();
+        h.word(self.n as u64);
+        h.word(self.d as u64);
+        match &self.feats {
+            Features::Dense(x) => {
+                h.word(0); // storage tag
+                for v in x {
+                    h.word(v.to_bits());
+                }
+            }
+            Features::Csr(m) => {
+                h.word(1);
+                for i in 0..self.n {
+                    let (idx, vals) = m.row(i);
+                    h.word(idx.len() as u64);
+                    for (&j, &v) in idx.iter().zip(vals) {
+                        h.word(j as u64);
+                        h.word(v.to_bits());
+                    }
+                }
+            }
+        }
+        for y in &self.y {
+            h.word(y.to_bits());
+        }
+        DataFingerprint {
+            n: self.n as u64,
+            d: self.d as u32,
+            sparse: self.is_sparse(),
+            lambda_bits: lambda.to_bits(),
+            content_hash: h.0,
+        }
+    }
+
     /// One-vs-all reduction: labels become +1 where `y == class`, else -1.
     pub fn one_vs_all(&self, class: f64) -> Dataset {
         let y = self
@@ -589,6 +679,48 @@ mod tests {
     #[should_panic(expected = "dense access on CSR storage")]
     fn dense_accessor_panics_on_sparse() {
         let _ = toy_sparse().x();
+    }
+
+    #[test]
+    fn fingerprint_separates_every_data_knob() {
+        let base = toy();
+        let fp = base.fingerprint(0.1);
+        assert_eq!((fp.n, fp.d, fp.sparse), (5, 2, false));
+        assert_eq!(fp.lambda(), 0.1);
+        // deterministic
+        assert_eq!(base.fingerprint(0.1), toy().fingerprint(0.1));
+        // λ is part of the identity
+        assert_ne!(fp, base.fingerprint(0.2));
+        // a single feature bit moves the content hash
+        let mut tweaked = toy();
+        if let Features::Dense(x) = &mut tweaked.feats {
+            x[3] += 1e-12;
+        }
+        assert_ne!(fp.content_hash, tweaked.fingerprint(0.1).content_hash);
+        // a label flip moves it too
+        let mut flipped = toy();
+        flipped.y[0] = -1.0;
+        assert_ne!(fp.content_hash, flipped.fingerprint(0.1).content_hash);
+        // storage is identity: the same values in CSR hash differently AND
+        // set the sparse flag (scale-only standardization = different data)
+        let csr = base.to_csr();
+        let fps = csr.fingerprint(0.1);
+        assert!(fps.sparse);
+        assert_ne!(fps.content_hash, fp.content_hash);
+        // sparse fingerprints see structural zeros' positions
+        let sp = toy_sparse();
+        let mut moved = toy_sparse();
+        if let Features::Csr(m) = &mut moved.feats {
+            // same values, different column for one entry
+            let dense = m.to_dense();
+            let mut d2 = dense.clone();
+            d2.swap(0, 1); // move row 0's first value to column 1
+            *m = CsrMatrix::from_dense(&d2, 4, 3);
+        }
+        assert_ne!(
+            sp.fingerprint(0.1).content_hash,
+            moved.fingerprint(0.1).content_hash
+        );
     }
 
     #[test]

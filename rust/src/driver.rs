@@ -219,6 +219,7 @@ pub fn run_distributed(
     let mut cluster = ThreadedCluster::spawn_with(
         train,
         cfg.n_workers,
+        lambda,
         quant,
         root,
         move |_i, shard: Dataset| -> Result<Box<dyn GradientSource>> {

@@ -54,11 +54,11 @@ pub mod worker;
 
 /// Convenience re-exports for downstream users.
 pub mod prelude {
-    pub use crate::algorithms::{Algorithm, SolverKind};
+    pub use crate::algorithms::{Algorithm, LazyIterate, SolverKind};
     pub use crate::cluster::{Cluster, InProcessCluster, MessageCluster, ThreadedCluster};
     pub use crate::config::{Backend, TrainConfig};
-    pub use crate::data::{Dataset, FeatureFormat, Features};
-    pub use crate::linalg::CsrMatrix;
+    pub use crate::data::{DataFingerprint, Dataset, FeatureFormat, Features};
+    pub use crate::linalg::{CsrMatrix, SparseVec};
     pub use crate::metrics::{RunTrace, TracePoint};
     pub use crate::objective::{LogisticRidge, Objective};
     pub use crate::quant::{CompressorKind, Grid, GridPolicy};

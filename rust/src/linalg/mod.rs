@@ -8,7 +8,7 @@
 
 pub mod sparse;
 
-pub use sparse::{spaxpy, spdot, CsrMatrix};
+pub use sparse::{spaxpy, spdot, spdot2, CsrMatrix, SparseVec};
 
 /// Dot product.
 #[inline]
@@ -30,6 +30,43 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
         tail += a[j] * b[j];
     }
     acc[0] + acc[1] + acc[2] + acc[3] + tail
+}
+
+/// Fused two-vector dot: `(v·a, v·b)` in ONE pass over `v`.
+///
+/// The inner-loop delta kernel needs the margin of a row against the current
+/// iterate *and* the snapshot; reading the row once and carrying both
+/// reductions halves the memory traffic vs two [`dot`] calls. Each reduction
+/// keeps the same 4-independent-accumulator shape as [`dot`], so
+/// `dot2(v, a, b).0 == dot(v, a)` bit-for-bit.
+#[inline]
+pub fn dot2(v: &[f64], a: &[f64], b: &[f64]) -> (f64, f64) {
+    debug_assert_eq!(v.len(), a.len());
+    debug_assert_eq!(v.len(), b.len());
+    let mut acc_a = [0.0f64; 4];
+    let mut acc_b = [0.0f64; 4];
+    let chunks = v.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc_a[0] += v[j] * a[j];
+        acc_a[1] += v[j + 1] * a[j + 1];
+        acc_a[2] += v[j + 2] * a[j + 2];
+        acc_a[3] += v[j + 3] * a[j + 3];
+        acc_b[0] += v[j] * b[j];
+        acc_b[1] += v[j + 1] * b[j + 1];
+        acc_b[2] += v[j + 2] * b[j + 2];
+        acc_b[3] += v[j + 3] * b[j + 3];
+    }
+    let mut tail_a = 0.0;
+    let mut tail_b = 0.0;
+    for j in chunks * 4..v.len() {
+        tail_a += v[j] * a[j];
+        tail_b += v[j] * b[j];
+    }
+    (
+        acc_a[0] + acc_a[1] + acc_a[2] + acc_a[3] + tail_a,
+        acc_b[0] + acc_b[1] + acc_b[2] + acc_b[3] + tail_b,
+    )
 }
 
 /// Squared l2 norm.
@@ -162,6 +199,18 @@ mod tests {
         let b: Vec<f64> = (0..37).map(|i| 1.0 - i as f64 * 0.25).collect();
         let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
         assert!((dot(&a, &b) - naive).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dot2_components_match_dot_bitwise() {
+        for len in [0usize, 1, 3, 4, 7, 16, 37] {
+            let v: Vec<f64> = (0..len).map(|i| (i as f64 * 0.7).sin() * 2.0).collect();
+            let a: Vec<f64> = (0..len).map(|i| 1.0 - i as f64 * 0.21).collect();
+            let b: Vec<f64> = (0..len).map(|i| 0.3 * i as f64 - 1.5).collect();
+            let (sa, sb) = dot2(&v, &a, &b);
+            assert_eq!(sa.to_bits(), dot(&v, &a).to_bits(), "len={len}");
+            assert_eq!(sb.to_bits(), dot(&v, &b).to_bits(), "len={len}");
+        }
     }
 
     #[test]

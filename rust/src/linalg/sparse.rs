@@ -290,6 +290,65 @@ impl CsrMatrix {
     }
 }
 
+/// A sparse vector as parallel `(indices, values)` arrays — the explicit
+/// form the O(nnz) inner loop ships: worker ξ's fused gradient delta
+/// `g_ξ(w) − g_ξ(w̃)` (logistic part; the ridge part is carried analytically
+/// by the lazy iterate, never materialized). Indices are strictly
+/// increasing; the buffers are caller-owned and reused across iterations.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SparseVec {
+    pub idx: Vec<u32>,
+    pub val: Vec<f64>,
+}
+
+impl SparseVec {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Self {
+            idx: Vec::with_capacity(cap),
+            val: Vec::with_capacity(cap),
+        }
+    }
+
+    #[inline]
+    pub fn clear(&mut self) {
+        self.idx.clear();
+        self.val.clear();
+    }
+
+    #[inline]
+    pub fn push(&mut self, j: u32, v: f64) {
+        self.idx.push(j);
+        self.val.push(v);
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.idx.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.idx.is_empty()
+    }
+
+    /// Stored `(index, value)` pairs in order.
+    pub fn iter(&self) -> impl Iterator<Item = (u32, f64)> + '_ {
+        self.idx.iter().zip(&self.val).map(|(&j, &v)| (j, v))
+    }
+
+    /// Scatter into a dense buffer: `out[idx[k]] = val[k]` (other
+    /// coordinates untouched).
+    pub fn scatter_into(&self, out: &mut [f64]) {
+        for (&j, &v) in self.idx.iter().zip(&self.val) {
+            out[j as usize] = v;
+        }
+    }
+}
+
 /// Sparse dot product `Σ_k values[k] · w[indices[k]]`.
 ///
 /// Same 4-independent-accumulator reduction as the dense [`super::dot`]
@@ -313,6 +372,47 @@ pub fn spdot(indices: &[u32], values: &[f64], w: &[f64]) -> f64 {
         tail += values[k] * w[indices[k] as usize];
     }
     acc[0] + acc[1] + acc[2] + acc[3] + tail
+}
+
+/// Fused two-vector sparse dot: `(row·a, row·b)` in ONE pass over the row's
+/// nonzeros — the sparse twin of [`super::dot2`], and the margin kernel of
+/// the O(nnz) inner loop (current-iterate and snapshot margins of row ξ from
+/// one gather). Each reduction keeps [`spdot`]'s 4-accumulator shape, so
+/// `spdot2(i, v, a, b).0 == spdot(i, v, a)` bit-for-bit.
+#[inline]
+pub fn spdot2(indices: &[u32], values: &[f64], a: &[f64], b: &[f64]) -> (f64, f64) {
+    debug_assert_eq!(indices.len(), values.len());
+    let mut acc_a = [0.0f64; 4];
+    let mut acc_b = [0.0f64; 4];
+    let chunks = values.len() / 4;
+    for c in 0..chunks {
+        let k = c * 4;
+        let (j0, j1, j2, j3) = (
+            indices[k] as usize,
+            indices[k + 1] as usize,
+            indices[k + 2] as usize,
+            indices[k + 3] as usize,
+        );
+        acc_a[0] += values[k] * a[j0];
+        acc_a[1] += values[k + 1] * a[j1];
+        acc_a[2] += values[k + 2] * a[j2];
+        acc_a[3] += values[k + 3] * a[j3];
+        acc_b[0] += values[k] * b[j0];
+        acc_b[1] += values[k + 1] * b[j1];
+        acc_b[2] += values[k + 2] * b[j2];
+        acc_b[3] += values[k + 3] * b[j3];
+    }
+    let mut tail_a = 0.0;
+    let mut tail_b = 0.0;
+    for k in chunks * 4..values.len() {
+        let j = indices[k] as usize;
+        tail_a += values[k] * a[j];
+        tail_b += values[k] * b[j];
+    }
+    (
+        acc_a[0] + acc_a[1] + acc_a[2] + acc_a[3] + tail_a,
+        acc_b[0] + acc_b[1] + acc_b[2] + acc_b[3] + tail_b,
+    )
 }
 
 /// Sparse scaled scatter-add: `out[indices[k]] += c · values[k]`.
@@ -427,6 +527,42 @@ mod tests {
             a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
             b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn spdot2_components_match_spdot_bitwise() {
+        let m = toy();
+        let a = [1.0, -1.0, 0.5, 2.0];
+        let b = [0.25, 3.0, -0.5, 1.5];
+        for i in 0..3 {
+            let (idx, vals) = m.row(i);
+            let (sa, sb) = spdot2(idx, vals, &a, &b);
+            assert_eq!(sa.to_bits(), spdot(idx, vals, &a).to_bits(), "row {i}");
+            assert_eq!(sb.to_bits(), spdot(idx, vals, &b).to_bits(), "row {i}");
+        }
+        // long row exercising the chunked gather
+        let idx: Vec<u32> = (0..23).map(|k| k * 2).collect();
+        let vals: Vec<f64> = (0..23).map(|k| (k as f64 * 0.3).cos()).collect();
+        let a: Vec<f64> = (0..46).map(|k| 0.1 * k as f64 - 2.0).collect();
+        let b: Vec<f64> = (0..46).map(|k| (k as f64).sin()).collect();
+        let (sa, sb) = spdot2(&idx, &vals, &a, &b);
+        assert_eq!(sa.to_bits(), spdot(&idx, &vals, &a).to_bits());
+        assert_eq!(sb.to_bits(), spdot(&idx, &vals, &b).to_bits());
+    }
+
+    #[test]
+    fn sparse_vec_basics() {
+        let mut s = SparseVec::with_capacity(4);
+        assert!(s.is_empty());
+        s.push(1, 2.0);
+        s.push(5, -0.5);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec![(1, 2.0), (5, -0.5)]);
+        let mut dense = vec![9.0; 7];
+        s.scatter_into(&mut dense);
+        assert_eq!(dense, vec![9.0, 2.0, 9.0, 9.0, 9.0, -0.5, 9.0]);
+        s.clear();
+        assert!(s.is_empty());
     }
 
     #[test]

@@ -346,10 +346,14 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let format: qmsvrg::data::FeatureFormat = args.get_or("format", "auto").parse()?;
 
     // workers regenerate the whole dataset deterministically from the shared
-    // seed: their own shard for gradients, and (for adaptive grids) the
-    // *global* problem geometry (μ, L, d) so the quantization grids
-    // replicate the master's bit-for-bit
+    // seed: their own shard for gradients, (for adaptive grids) the *global*
+    // problem geometry (μ, L, d) so the quantization grids replicate the
+    // master's bit-for-bit, and the full data fingerprint (n, d, λ, content
+    // hash of the standardized features) the Config handshake compares — any
+    // --dataset/--samples/--seed/--lambda/--format disagreement with the
+    // master is refused at connect
     let (train, _) = load_dataset(&args.get_or("dataset", "power"), n_samples, seed, format)?;
+    let fp = train.fingerprint(lambda);
     let shards = train.shard(n_workers);
     let shard = &shards[shard_idx];
     let obj = qmsvrg::objective::LogisticRidge::from_dataset(shard, lambda);
@@ -390,7 +394,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let link = qmsvrg::transport::tcp::TcpDuplex::connect(addr)?;
     // the same stream an in-process worker i would draw from
     let rng = qmsvrg::rng::Xoshiro256pp::seed_from_u64(seed).worker_stream(shard_idx);
-    qmsvrg::worker::WorkerNode::new(obj, link, quant, rng).run()?;
+    qmsvrg::worker::WorkerNode::new(obj, link, quant, fp, rng).run()?;
     eprintln!("# worker {shard_idx} done");
     Ok(())
 }

@@ -105,26 +105,68 @@ pub fn f1_dataset(w: &[f64], ds: &crate::data::Dataset) -> f64 {
 }
 
 /// Multiclass accuracy of one-vs-all classifiers: predict
-/// `argmax_l w^(l)·x` (§4.1's MNIST protocol).
+/// `argmax_l w^(l)·x` (§4.1's MNIST protocol). Dense rows; CSR datasets
+/// route through [`ova_accuracy_dataset`].
 pub fn ova_accuracy(ws: &[Vec<f64>], x: &[f64], y: &[f64], n: usize, d: usize) -> f64 {
     debug_assert!(!ws.is_empty());
     let mut correct = 0usize;
     for i in 0..n {
         let xi = &x[i * d..(i + 1) * d];
-        let mut best = 0usize;
-        let mut best_s = f64::NEG_INFINITY;
+        let mut correct_i = OvaArgmax::default();
         for (l, w) in ws.iter().enumerate() {
-            let s = linalg::dot(w, xi);
-            if s > best_s {
-                best_s = s;
-                best = l;
-            }
+            correct_i.score(l, linalg::dot(w, xi));
         }
-        if y[i] as usize == best {
-            correct += 1;
-        }
+        correct += correct_i.hit(y[i]) as usize;
     }
     correct as f64 / n as f64
+}
+
+/// The one argmax rule both storages share: highest margin wins, first
+/// class on ties (the iteration order is ascending `l` in both paths).
+#[derive(Default)]
+struct OvaArgmax {
+    best: usize,
+    best_s: f64,
+    seen: bool,
+}
+
+impl OvaArgmax {
+    #[inline]
+    fn score(&mut self, l: usize, s: f64) {
+        if !self.seen || s > self.best_s {
+            self.best = l;
+            self.best_s = s;
+            self.seen = true;
+        }
+    }
+
+    #[inline]
+    fn hit(&self, y: f64) -> bool {
+        self.seen && y as usize == self.best
+    }
+}
+
+/// [`ova_accuracy`] against a [`Dataset`](crate::data::Dataset) in its own
+/// storage: dense rows score exactly as before; CSR rows score every class
+/// margin in O(nnz) via [`crate::linalg::spdot`] — the one-vs-all scorer
+/// `examples/mnist_multiclass.rs` uses, now open to sparse workloads.
+pub fn ova_accuracy_dataset(ws: &[Vec<f64>], ds: &crate::data::Dataset) -> f64 {
+    debug_assert!(!ws.is_empty());
+    match ds.feats() {
+        crate::data::Features::Dense(x) => ova_accuracy(ws, x, &ds.y, ds.n, ds.d),
+        crate::data::Features::Csr(m) => {
+            let mut correct = 0usize;
+            for i in 0..ds.n {
+                let (idx, vals) = m.row(i);
+                let mut correct_i = OvaArgmax::default();
+                for (l, w) in ws.iter().enumerate() {
+                    correct_i.score(l, crate::linalg::spdot(idx, vals, w));
+                }
+                correct += correct_i.hit(ds.y[i]) as usize;
+            }
+            correct as f64 / ds.n as f64
+        }
+    }
 }
 
 /// One optimization-trace point (one outer iteration of Fig. 3/4).
@@ -232,6 +274,46 @@ mod tests {
         assert_eq!(ova_accuracy(&ws, &x, &y, 2, 2), 1.0);
         let ybad = vec![1.0, 0.0];
         assert_eq!(ova_accuracy(&ws, &x, &ybad, 2, 2), 0.0);
+    }
+
+    #[test]
+    fn ova_dataset_matches_dense_on_both_storages() {
+        // a 3-class toy where sparsity matters: zero entries must not
+        // contribute to any class margin
+        let x = vec![
+            3.0, 0.0, 0.0, //
+            0.0, 2.0, 0.0, //
+            0.0, 0.0, 4.0, //
+            1.0, 0.0, 2.0,
+        ];
+        let y = vec![0.0, 1.0, 2.0, 2.0];
+        let ws = vec![
+            vec![1.0, 0.0, 0.0],
+            vec![0.0, 1.0, 0.0],
+            vec![0.0, 0.0, 1.0],
+        ];
+        let ds = crate::data::Dataset::new(x.clone(), y.clone(), 4, 3).unwrap();
+        let expect = ova_accuracy(&ws, &x, &y, 4, 3);
+        assert_eq!(expect, 1.0);
+        assert_eq!(ova_accuracy_dataset(&ws, &ds), expect);
+        assert_eq!(ova_accuracy_dataset(&ws, &ds.to_csr()), expect);
+        // and a wrong labeling scores identically low on both storages
+        let bad = crate::data::Dataset::new(x, vec![1.0, 2.0, 0.0, 0.0], 4, 3).unwrap();
+        assert_eq!(
+            ova_accuracy_dataset(&ws, &bad),
+            ova_accuracy_dataset(&ws, &bad.to_csr())
+        );
+        assert_eq!(ova_accuracy_dataset(&ws, &bad), 0.0);
+    }
+
+    #[test]
+    fn ova_tie_breaks_to_the_first_class_on_both_storages() {
+        // equal margins: the lowest class id wins in both code paths
+        let x = vec![1.0, 1.0];
+        let ds = crate::data::Dataset::new(x, vec![0.0], 1, 2).unwrap();
+        let ws = vec![vec![1.0, 0.0], vec![0.0, 1.0]];
+        assert_eq!(ova_accuracy_dataset(&ws, &ds), 1.0);
+        assert_eq!(ova_accuracy_dataset(&ws, &ds.to_csr()), 1.0);
     }
 
     #[test]

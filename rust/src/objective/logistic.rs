@@ -19,7 +19,7 @@
 use super::features;
 use super::Objective;
 use crate::data::{Dataset, Features};
-use crate::linalg::{self, sigmoid, softplus, sparse, CsrMatrix};
+use crate::linalg::{self, sigmoid, softplus, sparse, CsrMatrix, SparseVec};
 
 /// Logistic-ridge objective over dense or CSR margin storage.
 #[derive(Clone, Debug)]
@@ -31,6 +31,11 @@ pub struct LogisticRidge {
     /// Ridge coefficient λ.
     pub lambda: f64,
     l_smooth: f64,
+    /// Sorted union of the stored column indices (dense: `0..d`) — the
+    /// support of every logistic-part gradient (and gradient *delta*) this
+    /// objective can produce. Precomputed once; the O(nnz) inner loop
+    /// refreshes/ships exactly these coordinates.
+    support: Vec<u32>,
 }
 
 impl LogisticRidge {
@@ -68,13 +73,33 @@ impl LogisticRidge {
             Features::Csr(m) => m.values().iter().map(|v| v * v).sum(),
         };
         let l_smooth = sum_sq / (4.0 * n as f64) + 2.0 * lambda;
+        // column support: every coordinate any sample's logistic gradient
+        // can touch. O(nnz + d) once, at construction.
+        let support: Vec<u32> = match &z {
+            Features::Dense(_) => (0..d as u32).collect(),
+            Features::Csr(m) => {
+                let mut seen = vec![false; d];
+                for (j, _) in m.iter_entries() {
+                    seen[j] = true;
+                }
+                (0..d as u32).filter(|&j| seen[j as usize]).collect()
+            }
+        };
         Self {
             z,
             n,
             d,
             lambda,
             l_smooth,
+            support,
         }
+    }
+
+    /// Sorted union of the stored column indices — the support of every
+    /// logistic-part gradient delta (dense storage: all of `0..d`).
+    #[inline]
+    pub fn support(&self) -> &[u32] {
+        &self.support
     }
 
     #[inline]
@@ -116,6 +141,84 @@ impl LogisticRidge {
         match &self.z {
             Features::Dense(z) => linalg::gemv_row_major(z, self.n, self.d, w, out),
             Features::Csr(m) => m.spmv(w, out),
+        }
+    }
+
+    /// Fused per-sample gradient delta: both margins of row `i` — `z_i·w`
+    /// and `z_i·w̃` — in **one** pass over the row's nonzeros, returning the
+    /// logistic part of `∇f_i(w) − ∇f_i(w̃)` as an explicit sparse
+    /// `(indices, values)` pair:
+    ///
+    /// `Δ_i = (σ(−z_i·w̃) − σ(−z_i·w)) · z_i`
+    ///
+    /// The ridge part `2λ(w − w̃)` is dense and analytic; callers carry it as
+    /// scalar coefficients ([`crate::algorithms::LazyIterate`]) — it is
+    /// never materialized here. O(nnz(z_i)).
+    pub fn sample_grad_delta(&self, i: usize, w: &[f64], w_tilde: &[f64], out: &mut SparseVec) {
+        debug_assert!(i < self.n);
+        debug_assert_eq!(w.len(), self.d);
+        debug_assert_eq!(w_tilde.len(), self.d);
+        out.clear();
+        match &self.z {
+            Features::Dense(z) => {
+                let row = &z[i * self.d..(i + 1) * self.d];
+                let (s, st) = linalg::dot2(row, w, w_tilde);
+                let coeff = sigmoid(-st) - sigmoid(-s);
+                for (j, &v) in row.iter().enumerate() {
+                    out.push(j as u32, coeff * v);
+                }
+            }
+            Features::Csr(m) => {
+                let (idx, vals) = m.row(i);
+                let (s, st) = sparse::spdot2(idx, vals, w, w_tilde);
+                let coeff = sigmoid(-st) - sigmoid(-s);
+                for (&j, &v) in idx.iter().zip(vals) {
+                    out.push(j, coeff * v);
+                }
+            }
+        }
+    }
+
+    /// Fused whole-objective gradient delta — the logistic part of
+    /// `∇f(w) − ∇f(w̃)` as a sparse vector over [`Self::support`]:
+    ///
+    /// `Δ = (1/n) Σ_i (σ(−z_i·w̃) − σ(−z_i·w)) · z_i`
+    ///
+    /// Each row is read **once** (both margins from one gather, see
+    /// [`Self::sample_grad_delta`]) and scattered into `scratch`, a caller-
+    /// owned dense accumulator (length `d`) that is zeroed and read only at
+    /// the support — O(nnz + |support|) total, never O(d)·rows. `w` and `w̃`
+    /// need only be valid at the support coordinates (the lazy iterate
+    /// refreshes exactly those). The ridge part is analytic, as above.
+    pub fn grad_delta(&self, w: &[f64], w_tilde: &[f64], scratch: &mut [f64], out: &mut SparseVec) {
+        debug_assert_eq!(w.len(), self.d);
+        debug_assert_eq!(w_tilde.len(), self.d);
+        debug_assert_eq!(scratch.len(), self.d);
+        for &j in &self.support {
+            scratch[j as usize] = 0.0;
+        }
+        let inv_n = 1.0 / self.n as f64;
+        match &self.z {
+            Features::Dense(z) => {
+                for i in 0..self.n {
+                    let row = &z[i * self.d..(i + 1) * self.d];
+                    let (s, st) = linalg::dot2(row, w, w_tilde);
+                    let coeff = (sigmoid(-st) - sigmoid(-s)) * inv_n;
+                    linalg::axpy(coeff, row, scratch);
+                }
+            }
+            Features::Csr(m) => {
+                for i in 0..self.n {
+                    let (idx, vals) = m.row(i);
+                    let (s, st) = sparse::spdot2(idx, vals, w, w_tilde);
+                    let coeff = (sigmoid(-st) - sigmoid(-s)) * inv_n;
+                    sparse::spaxpy(coeff, idx, vals, scratch);
+                }
+            }
+        }
+        out.clear();
+        for &j in &self.support {
+            out.push(j, scratch[j as usize]);
         }
     }
 }
@@ -331,6 +434,99 @@ mod tests {
                 sb.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
             );
         }
+    }
+
+    /// Brute-force logistic delta: grad(w) − grad(w̃) − 2λ(w − w̃), dense.
+    fn brute_delta(obj: &LogisticRidge, w: &[f64], wt: &[f64]) -> Vec<f64> {
+        let d = Objective::dim(obj);
+        let mut gw = vec![0.0; d];
+        let mut gt = vec![0.0; d];
+        obj.grad(w, &mut gw);
+        obj.grad(wt, &mut gt);
+        (0..d)
+            .map(|j| gw[j] - gt[j] - 2.0 * obj.lambda * (w[j] - wt[j]))
+            .collect()
+    }
+
+    #[test]
+    fn support_covers_stored_columns() {
+        let (sp, dn) = toy_sparse_pair();
+        assert_eq!(dn.support(), &[0, 1, 2]);
+        assert_eq!(sp.support(), &[0, 1, 2]); // every column stored somewhere
+        // a column nobody stores is absent from the support
+        let m = CsrMatrix::new(vec![0, 1, 2], vec![0, 3], vec![1.0, -2.0], 5).unwrap();
+        let obj = LogisticRidge::from_margins_csr(m, 0.1);
+        assert_eq!(obj.support(), &[0, 3]);
+    }
+
+    #[test]
+    fn grad_delta_matches_gradient_difference() {
+        let (sp, dn) = toy_sparse_pair();
+        let w = [0.3, -0.6, 0.9];
+        let wt = [-0.2, 0.4, 0.1];
+        for obj in [&sp, &dn] {
+            let expect = brute_delta(obj, &w, &wt);
+            let mut scratch = vec![0.0; 3];
+            let mut out = SparseVec::new();
+            obj.grad_delta(&w, &wt, &mut scratch, &mut out);
+            let mut dense = vec![0.0; 3];
+            out.scatter_into(&mut dense);
+            assert!(
+                crate::linalg::linf_dist(&dense, &expect) < 1e-14,
+                "storage {}: {dense:?} vs {expect:?}",
+                if obj.is_sparse() { "csr" } else { "dense" }
+            );
+            // the support list is exactly the objective's support
+            assert_eq!(out.idx, obj.support());
+        }
+        // a dirty scratch buffer must not leak into the result
+        let mut scratch = vec![7.7; 3];
+        let mut out = SparseVec::new();
+        sp.grad_delta(&w, &wt, &mut scratch, &mut out);
+        let expect = brute_delta(&sp, &w, &wt);
+        let mut dense = vec![0.0; 3];
+        out.scatter_into(&mut dense);
+        assert!(crate::linalg::linf_dist(&dense, &expect) < 1e-14);
+    }
+
+    #[test]
+    fn sample_grad_delta_matches_sample_grad_difference() {
+        let (sp, dn) = toy_sparse_pair();
+        let w = [0.25, -0.5, 0.75];
+        let wt = [0.0, 0.6, -0.3];
+        for obj in [&sp, &dn] {
+            let mut gw = vec![0.0; 3];
+            let mut gt = vec![0.0; 3];
+            let mut out = SparseVec::new();
+            for i in 0..obj.num_samples() {
+                obj.sample_grad(i, &w, &mut gw);
+                obj.sample_grad(i, &wt, &mut gt);
+                let expect: Vec<f64> = (0..3)
+                    .map(|j| gw[j] - gt[j] - 2.0 * obj.lambda * (w[j] - wt[j]))
+                    .collect();
+                obj.sample_grad_delta(i, &w, &wt, &mut out);
+                let mut dense = vec![0.0; 3];
+                out.scatter_into(&mut dense);
+                assert!(
+                    crate::linalg::linf_dist(&dense, &expect) < 1e-14,
+                    "sample {i}"
+                );
+            }
+        }
+        // sparse rows ship only their own nonzeros
+        let mut out = SparseVec::new();
+        sp.sample_grad_delta(1, &w, &wt, &mut out); // row 1 stores column 1 only
+        assert_eq!(out.idx, vec![1]);
+    }
+
+    #[test]
+    fn grad_delta_at_equal_points_is_zero() {
+        let (sp, _) = toy_sparse_pair();
+        let w = [0.4, -0.8, 0.2];
+        let mut scratch = vec![0.0; 3];
+        let mut out = SparseVec::new();
+        sp.grad_delta(&w, &w, &mut scratch, &mut out);
+        assert!(out.val.iter().all(|&v| v == 0.0), "{:?}", out.val);
     }
 
     #[test]

@@ -66,33 +66,34 @@ pub struct EncodeStats {
     pub sats: u32,
 }
 
-/// The shared quantize → reconstruct core: every encode path (wire or
-/// local) runs exactly this value sequence, so local and wire encodes are
-/// bit-identical by construction. `idx` is the replica's reusable scratch.
+/// The shared quantize → reconstruct core — ONE fused sweep per coordinate
+/// (compute the input via `u`, quantize, write the reconstruction; §Perf).
+/// Every encode path (wire or local, slice or fused-update input) runs
+/// exactly this value/rng sequence, so all of them are bit-identical by
+/// construction. `idx` is the replica's reusable scratch.
 fn quantize_reconstruct(
     grid: &Grid,
-    v: &[f64],
+    u: impl Fn(usize) -> f64,
     rng: &mut Xoshiro256pp,
     idx: &mut Vec<u32>,
     out: &mut [f64],
 ) -> u32 {
-    let stats = urq::quantize_urq_into(v, grid, rng, idx);
-    urq::dequantize_into(idx, grid, out);
-    stats.saturated
+    urq::quantize_dequantize_map_into(u, grid, rng, idx, out).saturated
 }
 
-/// The one WIRE encode sequence (quantize → pack → debug roundtrip →
-/// reconstruct), written once for the w and g paths — a free function over
-/// disjoint field borrows, so the grid cache and the index scratch can come
-/// from the same replica.
+/// The one WIRE encode sequence (fused quantize/reconstruct sweep → pack →
+/// debug roundtrip), written once for the w and g paths — a free function
+/// over disjoint field borrows, so the grid cache and the index scratch can
+/// come from the same replica. `u` maps a coordinate to the value being
+/// encoded (a plain slice read, or the master's fused SVRG step).
 fn encode_wire(
     grid: &Grid,
-    v: &[f64],
+    u: impl Fn(usize) -> f64,
     rng: &mut Xoshiro256pp,
     idx: &mut Vec<u32>,
     out: &mut [f64],
 ) -> Result<Encoded> {
-    let sats = quantize_reconstruct(grid, v, rng, idx, out);
+    let sats = quantize_reconstruct(grid, u, rng, idx, out);
     let payload = codec::pack_indices(idx, grid.bits())?;
     #[cfg(debug_assertions)]
     debug_roundtrip_payload(grid, idx, &payload.bytes);
@@ -104,12 +105,12 @@ fn encode_wire(
 /// entirely; debug builds still roundtrip the codec).
 fn encode_local_on(
     grid: &Grid,
-    v: &[f64],
+    u: impl Fn(usize) -> f64,
     rng: &mut Xoshiro256pp,
     idx: &mut Vec<u32>,
     out: &mut [f64],
 ) -> Result<EncodeStats> {
-    let sats = quantize_reconstruct(grid, v, rng, idx, out);
+    let sats = quantize_reconstruct(grid, u, rng, idx, out);
     #[cfg(debug_assertions)]
     debug_roundtrip(grid, idx);
     let bits = grid.bits().iter().map(|&b| b as u64).sum();
@@ -262,6 +263,22 @@ impl ReplicatedGrid {
         rng: &mut Xoshiro256pp,
         out: &mut [f64],
     ) -> Result<Encoded> {
+        debug_assert_eq!(u.len(), self.d);
+        self.encode_w_fused(|i| u[i], rng, out)
+    }
+
+    /// [`Self::encode_w`] with the input computed per coordinate inside the
+    /// quantize sweep — the master's fused reconstruct-and-update: the SVRG
+    /// step `u_j = w_j − α(...)`, the quantization, and the reconstruction
+    /// write collapse into ONE pass over `d` (§Perf). Values and rng draws
+    /// are identical to materializing `u` first, so quantized traces are
+    /// unchanged.
+    pub fn encode_w_fused(
+        &mut self,
+        u: impl Fn(usize) -> f64,
+        rng: &mut Xoshiro256pp,
+        out: &mut [f64],
+    ) -> Result<Encoded> {
         self.ensure_w_grid()?;
         let grid = self.w_grid.as_ref().unwrap();
         let e = encode_wire(grid, u, rng, &mut self.idx_scratch, out)?;
@@ -274,6 +291,18 @@ impl ReplicatedGrid {
     pub fn encode_w_local(
         &mut self,
         u: &[f64],
+        rng: &mut Xoshiro256pp,
+        out: &mut [f64],
+    ) -> Result<EncodeStats> {
+        debug_assert_eq!(u.len(), self.d);
+        self.encode_w_fused_local(|i| u[i], rng, out)
+    }
+
+    /// The local twin of [`Self::encode_w_fused`]: fused step + quantize +
+    /// reconstruct, no wire payload (in-process links).
+    pub fn encode_w_fused_local(
+        &mut self,
+        u: impl Fn(usize) -> f64,
         rng: &mut Xoshiro256pp,
         out: &mut [f64],
     ) -> Result<EncodeStats> {
@@ -307,9 +336,10 @@ impl ReplicatedGrid {
         rng: &mut Xoshiro256pp,
         out: &mut [f64],
     ) -> Result<Encoded> {
+        debug_assert_eq!(v.len(), self.d);
         self.ensure_g_grid(link)?;
         let grid = self.g_grids[link].as_ref().unwrap();
-        let e = encode_wire(grid, v, rng, &mut self.idx_scratch, out)?;
+        let e = encode_wire(grid, |i| v[i], rng, &mut self.idx_scratch, out)?;
         self.saturations += e.sats as u64;
         Ok(e)
     }
@@ -323,9 +353,10 @@ impl ReplicatedGrid {
         rng: &mut Xoshiro256pp,
         out: &mut [f64],
     ) -> Result<EncodeStats> {
+        debug_assert_eq!(v.len(), self.d);
         self.ensure_g_grid(link)?;
         let grid = self.g_grids[link].as_ref().unwrap();
-        let s = encode_local_on(grid, v, rng, &mut self.idx_scratch, out)?;
+        let s = encode_local_on(grid, |i| v[i], rng, &mut self.idx_scratch, out)?;
         self.saturations += s.sats as u64;
         Ok(s)
     }
@@ -598,6 +629,51 @@ mod tests {
                 );
             }
             assert_eq!(wire.saturations(), local.saturations());
+        });
+    }
+
+    /// The fused reconstruct-and-update entry point must be the plain
+    /// encode of a pre-materialized `u` — identical payload, bits, sats and
+    /// reconstruction — since the master's inner_step relies on this to keep
+    /// quantized traces bitwise stable across the loop fusion.
+    #[test]
+    fn prop_fused_update_encode_matches_materialized() {
+        forall(60, 0xF05E, |rng| {
+            let d = 1 + rng.gen_index(9);
+            let bits = 1 + rng.gen_index(10) as u8;
+            let mut a = ReplicatedGrid::new(adaptive(), bits, d, 1);
+            let mut b = ReplicatedGrid::new(adaptive(), bits, d, 1);
+            let w_tilde = gen_vec(rng, d, -2.0, 2.0);
+            let gnorm = rng.gen_uniform(0.0, 2.0);
+            a.commit_epoch(&w_tilde, None, gnorm);
+            b.commit_epoch(&w_tilde, None, gnorm);
+            let w = gen_vec(rng, d, -3.0, 3.0);
+            let g_cur = gen_vec(rng, d, -1.0, 1.0);
+            let g_snap = gen_vec(rng, d, -1.0, 1.0);
+            let g_tilde = gen_vec(rng, d, -1.0, 1.0);
+            let step = rng.gen_uniform(0.01, 0.5);
+            let u: Vec<f64> = (0..d)
+                .map(|j| w[j] - step * (g_cur[j] - g_snap[j] + g_tilde[j]))
+                .collect();
+            let mut rng_a = rng.split(1);
+            let mut rng_b = rng.split(1);
+            let mut out_a = vec![0.0; d];
+            let mut out_b = vec![0.0; d];
+            let ea = a.encode_w(&u, &mut rng_a, &mut out_a).unwrap();
+            let eb = b
+                .encode_w_fused(
+                    |j| w[j] - step * (g_cur[j] - g_snap[j] + g_tilde[j]),
+                    &mut rng_b,
+                    &mut out_b,
+                )
+                .unwrap();
+            assert_eq!(ea.payload.bytes, eb.payload.bytes);
+            assert_eq!(ea.payload.bits, eb.payload.bits);
+            assert_eq!(ea.sats, eb.sats);
+            assert_eq!(
+                out_a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                out_b.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            );
         });
     }
 

@@ -67,6 +67,35 @@ pub fn quantize_urq_into(
     stats
 }
 
+/// Fused quantize → reconstruct in **one** sweep: per coordinate, read the
+/// input from `u(i)`, quantize (drawing the URQ rounding), and immediately
+/// write the lattice reconstruction into `out[i]` (§Perf: collapses the old
+/// quantize-all-then-dequantize-all loop pair; the master's fused
+/// reconstruct-and-update additionally computes the SVRG step inside `u`).
+///
+/// Bit-compatibility: the rng draw order (one optional draw per interior
+/// coordinate, ascending) and each coordinate's index/reconstruction are
+/// exactly those of [`quantize_urq_into`] + [`dequantize_into`] run back to
+/// back, so fusing cannot perturb any quantized trace.
+pub fn quantize_dequantize_map_into(
+    u: impl Fn(usize) -> f64,
+    grid: &Grid,
+    rng: &mut Xoshiro256pp,
+    idx: &mut Vec<u32>,
+    out: &mut [f64],
+) -> QuantStats {
+    assert_eq!(out.len(), grid.dim(), "dim mismatch");
+    idx.clear();
+    idx.reserve(out.len());
+    let mut stats = QuantStats::default();
+    for (i, o) in out.iter_mut().enumerate() {
+        let k = quantize_coord_urq(u(i), grid, i, rng, &mut stats);
+        idx.push(k);
+        *o = grid.value_of(i, k);
+    }
+    stats
+}
+
 #[inline]
 fn quantize_coord_urq(
     x: f64,
@@ -274,6 +303,32 @@ mod tests {
         for (a, b) in w.iter().zip(&wq) {
             assert!((a - b).abs() <= grid.spacing(0) / 2.0 + 1e-12);
         }
+    }
+
+    #[test]
+    fn fused_map_matches_two_pass_bitwise() {
+        // the fused sweep must reproduce quantize_urq_into + dequantize_into
+        // exactly: same indices, same reconstruction bits, same rng stream
+        // consumption, same saturation count
+        let grid = Grid::uniform(vec![0.1, -0.4, 0.0, 2.0, -1.0], 1.5, 5).unwrap();
+        let w = [0.3, -1.7, 0.0, 9.0, -2.4999]; // interior, edge, out-of-hull
+        let mut r1 = rng();
+        let mut r2 = rng();
+        let mut idx1 = Vec::new();
+        let s1 = quantize_urq_into(&w, &grid, &mut r1, &mut idx1);
+        let mut out1 = vec![0.0; 5];
+        dequantize_into(&idx1, &grid, &mut out1);
+        let mut idx2 = Vec::new();
+        let mut out2 = vec![0.0; 5];
+        let s2 = quantize_dequantize_map_into(|i| w[i], &grid, &mut r2, &mut idx2, &mut out2);
+        assert_eq!(idx1, idx2);
+        assert_eq!(s1, s2);
+        assert_eq!(
+            out1.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            out2.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        );
+        // identical residual rng state: both consumed the same draws
+        assert_eq!(r1.next_u64(), r2.next_u64());
     }
 
     #[test]

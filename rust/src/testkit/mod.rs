@@ -14,6 +14,9 @@
 //! index and per-case seed are printed so the failure replays exactly with
 //! [`replay`].
 
+use crate::algorithms::sharded::ShardedObjective;
+use crate::algorithms::svrg::SvrgOpts;
+use crate::linalg;
 use crate::rng::Xoshiro256pp;
 
 /// Run `prop` on `cases` independently-seeded rngs derived from `seed`.
@@ -44,6 +47,99 @@ pub fn forall(cases: u64, seed: u64, prop: impl Fn(&mut Xoshiro256pp)) {
 pub fn replay(seed: u64, case: u64, mut prop: impl FnMut(&mut Xoshiro256pp)) {
     let mut rng = Xoshiro256pp::seed_from_u64(seed).split(case);
     prop(&mut rng);
+}
+
+/// The dense O(d)-per-iteration reference implementation of **unquantized**
+/// SVRG / M-SVRG — the pre-lazy inner-loop semantics, kept verbatim so the
+/// sparse-delta path in [`crate::algorithms::svrg::run_svrg`] has an
+/// independent oracle: two dense gradients and a dense `u`-sweep per inner
+/// iteration, a dense `T×d` ζ-history, direct shard calls, no cluster and
+/// no metering. Consumes `rng` in exactly the engine's order (T ξ-draws
+/// then one ζ-draw per epoch), so a lockstep run at the same seed samples
+/// the same workers — `tests/properties.rs` pins ≤1e-10 agreement.
+///
+/// `eval` receives `(k, w̃_k, ‖g̃_k‖)` once per epoch (after the
+/// memory-unit decision) and once after the final epoch.
+pub fn dense_svrg_reference(
+    prob: &ShardedObjective,
+    opts: &SvrgOpts,
+    mut rng: Xoshiro256pp,
+    eval: &mut dyn FnMut(usize, &[f64], f64),
+) -> Vec<f64> {
+    let d = prob.dim();
+    let n = prob.n_workers();
+    let t_len = opts.epoch_len;
+    let mean_into = |node_g: &[Vec<f64>], out: &mut [f64]| {
+        for o in out.iter_mut() {
+            *o = 0.0;
+        }
+        let inv_n = 1.0 / node_g.len() as f64;
+        for gi in node_g {
+            linalg::axpy(inv_n, gi, out);
+        }
+    };
+
+    let mut w_tilde = vec![0.0; d];
+    let mut g_tilde = vec![0.0; d];
+    let mut prev_w = vec![0.0; d];
+    let mut prev_g = vec![0.0; d];
+    let mut prev_gnorm = f64::INFINITY;
+    let mut node_g = vec![vec![0.0; d]; n];
+    let mut prev_node_g = vec![vec![0.0; d]; n];
+    let mut g_cur = vec![0.0; d];
+    let mut w = vec![0.0; d];
+    let mut w_hist = vec![0.0; t_len * d];
+
+    for k in 0..opts.outer_iters {
+        for (i, gi) in node_g.iter_mut().enumerate() {
+            prob.node_grad(i, &w_tilde, gi);
+        }
+        mean_into(&node_g, &mut g_tilde);
+        let mut gnorm = linalg::nrm2(&g_tilde);
+        if opts.memory_unit && gnorm > prev_gnorm {
+            w_tilde.copy_from_slice(&prev_w);
+            g_tilde.copy_from_slice(&prev_g);
+            gnorm = prev_gnorm;
+            for (gi, pgi) in node_g.iter_mut().zip(&prev_node_g) {
+                gi.copy_from_slice(pgi);
+            }
+        } else {
+            prev_w.copy_from_slice(&w_tilde);
+            prev_g.copy_from_slice(&g_tilde);
+            prev_gnorm = gnorm;
+            for (pgi, gi) in prev_node_g.iter_mut().zip(&node_g) {
+                pgi.copy_from_slice(gi);
+            }
+        }
+        eval(k, &w_tilde, gnorm);
+
+        w.copy_from_slice(&w_tilde);
+        w_hist[..d].copy_from_slice(&w);
+        let mut hist_len = 1;
+        for _t in 1..=t_len {
+            let xi = rng.gen_index(n);
+            prob.node_grad(xi, &w, &mut g_cur);
+            let g_snap = &node_g[xi];
+            // dense reference update: materialize u = w − α(g_ξ(w) −
+            // g_ξ(w̃) + g̃) over all d coordinates, every iteration
+            for j in 0..d {
+                w[j] -= opts.step * (g_cur[j] - g_snap[j] + g_tilde[j]);
+            }
+            if hist_len < t_len {
+                w_hist[hist_len * d..(hist_len + 1) * d].copy_from_slice(&w);
+                hist_len += 1;
+            }
+        }
+        let zeta = rng.gen_index(hist_len);
+        w_tilde.copy_from_slice(&w_hist[zeta * d..(zeta + 1) * d]);
+    }
+
+    for (i, gi) in node_g.iter_mut().enumerate() {
+        prob.node_grad(i, &w_tilde, gi);
+    }
+    mean_into(&node_g, &mut g_tilde);
+    eval(opts.outer_iters, &w_tilde, linalg::nrm2(&g_tilde));
+    w_tilde
 }
 
 /// Generate a random vector with entries uniform in [lo, hi).

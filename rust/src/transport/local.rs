@@ -49,8 +49,8 @@ mod tests {
             // worker echoes gradients until shutdown
             loop {
                 match worker.recv().unwrap() {
-                    Message::ParamsRaw { w } => {
-                        worker.send(Message::GradRaw { g: w }).unwrap();
+                    Message::InnerSetup { g_tilde, .. } => {
+                        worker.send(Message::GradRaw { g: g_tilde }).unwrap();
                     }
                     Message::Shutdown => break,
                     other => panic!("unexpected {other:?}"),
@@ -58,8 +58,9 @@ mod tests {
             }
         });
         master
-            .send(Message::ParamsRaw {
-                w: vec![1.0, 2.0, 3.0],
+            .send(Message::InnerSetup {
+                step: 0.5,
+                g_tilde: vec![1.0, 2.0, 3.0],
             })
             .unwrap();
         match master.recv().unwrap() {

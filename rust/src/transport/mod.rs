@@ -25,7 +25,18 @@ use anyhow::{bail, Result};
 /// the `Config` handshake was introduced. v3: `Config` gained the `sparse`
 /// storage flag (a master/worker `--format` disagreement changes the data
 /// itself — scale-only vs centered standardization — and must be refused).
-pub const PROTO_VERSION: u16 = 3;
+/// v4: the unquantized inner loop moved to the sparse-delta ("lazy")
+/// protocol (`InnerSetup` / `InnerDeltaRequest` / `GradDelta` /
+/// `DeltaApply`), and `Config` grew the full data fingerprint (n, d, λ,
+/// content hash of the standardized features) so *any* master/worker
+/// `--dataset/--samples/--seed/--lambda/--format` mismatch is refused at
+/// connect instead of silently diverging the run.
+pub const PROTO_VERSION: u16 = 4;
+
+/// Ledger bits of one sparse-delta coordinate on the wire: a 32-bit column
+/// index plus a 64-bit value (`GradDelta`/`DeltaApply` carry
+/// `96 · nnz` payload bits — the honest price of the O(nnz) inner loop).
+pub const DELTA_COORD_BITS: u64 = 96;
 
 /// Protocol messages. Quantized payloads carry packed lattice indices; the
 /// accompanying `bits` is the exact payload size `Σ b_i` (what the ledger
@@ -35,12 +46,15 @@ pub enum Message {
     // ---- master -> worker
     /// Handshake, sent once on every link before any other message (workers
     /// refuse links whose first message is anything else): the protocol
-    /// version and the master's quantization configuration (`compressor` is
-    /// the [`crate::quant::CompressorKind::wire_id`], 0 = unquantized).
-    /// Workers refuse a mismatch — the wire format of every later message
-    /// is identical across compressors/bit-widths/policies, so a
-    /// disagreement would otherwise corrupt the run silently instead of
-    /// failing here. Not metered (control).
+    /// version, the master's quantization configuration (`compressor` is
+    /// the [`crate::quant::CompressorKind::wire_id`], 0 = unquantized), and
+    /// the master's resolved **data fingerprint**
+    /// ([`crate::data::DataFingerprint`]). Workers refuse any mismatch —
+    /// the wire format of every later message is identical across
+    /// compressors/bit-widths/policies, and the data-defining knobs
+    /// (`--dataset/--samples/--seed/--lambda/--format`) never appear on the
+    /// wire again, so a disagreement would otherwise corrupt the run
+    /// silently instead of failing here. Not metered (control).
     Config {
         version: u16,
         compressor: u8,
@@ -52,6 +66,17 @@ pub enum Message {
         /// `--format` disagreement means the two ends hold different
         /// feature matrices even though nothing else on the wire differs.
         sparse: u8,
+        /// Global sample count n of the resolved training set.
+        n: u64,
+        /// Problem dimension d of the resolved training set.
+        d: u32,
+        /// Exact bits of the ridge coefficient λ (a data-defining knob: it
+        /// also drives μ, L and the adaptive grid geometry).
+        lambda_bits: u64,
+        /// Cheap content hash (FNV-1a over the exact bits) of the
+        /// standardized features and labels — a `--dataset/--samples/--seed`
+        /// disagreement that survives the (n, d) check lands here.
+        data_hash: u64,
         /// Exact-bits fingerprint of the full grid policy
         /// ([`crate::quant::GridPolicy::fingerprint`]): radius / μ / L /
         /// slack / radius-mode — both ends must build lattices from
@@ -66,13 +91,28 @@ pub enum Message {
     EpochRevert,
     /// Snapshot accepted; `gnorm` = ‖g̃_k‖ drives this epoch's grid radii.
     EpochCommit { gnorm: f64 },
-    /// Inner-loop turn: uplink the snapshot gradient (quantized) and the
-    /// current-iterate gradient (raw or quantized per variant).
+    /// Inner-loop turn (quantized runs): uplink the snapshot gradient
+    /// (quantized) and the current-iterate gradient (raw or quantized per
+    /// variant).
     InnerRequest,
+    /// Epoch setup for the unquantized sparse-delta ("lazy") inner loop:
+    /// the snapshot mean gradient `g̃_k` and the step size α, from which
+    /// every worker derives the affine replay coefficients
+    /// (`β = 1 − 2αλ`, `c = α(2λw̃ − g̃)`) of its
+    /// [`crate::algorithms::LazyIterate`] replica. Broadcast once per epoch;
+    /// metered 64·d (the g̃ payload) once, like any broadcast.
+    InnerSetup { step: f64, g_tilde: Vec<f64> },
+    /// Inner-loop turn (unquantized runs): worker ξ computes its fused
+    /// sparse gradient delta at the lazily-replayed current iterate and
+    /// uplinks it as a `GradDelta`. Not metered (control).
+    InnerDeltaRequest,
+    /// Broadcast of iteration t's sparse delta: every worker applies the
+    /// same `−α·Δ` scatter + affine step to its lazy replica (the O(nnz)
+    /// replacement for the retired dense raw-parameter broadcast, wire tag
+    /// 6 in protocols ≤ v3). Metered once, 96 bits per coordinate.
+    DeltaApply { idx: Vec<u32>, val: Vec<f64> },
     /// Quantized broadcast of `w_{k,t}` (packed URQ indices on `R_{w,k}`).
     ParamsQ { payload: Vec<u8>, bits: u64 },
-    /// Unquantized broadcast (exact SVRG/M-SVRG).
-    ParamsRaw { w: Vec<f64> },
     /// End of epoch: set the snapshot to the stored iterate `w_{k,ζ}`.
     SnapshotChoose { zeta: u32 },
     /// Instrumentation (not metered): report local loss at the snapshot.
@@ -89,6 +129,11 @@ pub enum Message {
     /// reports it and the master ledgers it — keeping saturation totals
     /// identical across the in-process and message-passing backends.
     GradQ { payload: Vec<u8>, bits: u64, sats: u32 },
+    /// Worker ξ's fused sparse gradient delta (logistic part of
+    /// `g_ξ(w_t) − g_ξ(w̃_k)` over the shard's column support; the ridge
+    /// part is analytic and never shipped). 96 bits per coordinate on the
+    /// ledger.
+    GradDelta { idx: Vec<u32>, val: Vec<f64> },
     /// Loss over this worker's shard (instrumentation).
     LossValue { loss: f64 },
     /// Generic acknowledgement.
@@ -101,7 +146,8 @@ impl Message {
     const TAG_EPOCH_COMMIT: u8 = 3;
     const TAG_INNER_REQUEST: u8 = 4;
     const TAG_PARAMS_Q: u8 = 5;
-    const TAG_PARAMS_RAW: u8 = 6;
+    // tag 6 (raw parameter broadcast) retired in v4: the lazy sparse-delta
+    // protocol replaced it; decode rejects it like any unknown tag
     const TAG_SNAPSHOT_CHOOSE: u8 = 7;
     const TAG_QUERY_LOSS: u8 = 8;
     const TAG_SHUTDOWN: u8 = 9;
@@ -110,6 +156,37 @@ impl Message {
     const TAG_LOSS_VALUE: u8 = 12;
     const TAG_ACK: u8 = 13;
     const TAG_CONFIG: u8 = 14;
+    const TAG_INNER_SETUP: u8 = 15;
+    const TAG_INNER_DELTA_REQUEST: u8 = 16;
+    const TAG_GRAD_DELTA: u8 = 17;
+    const TAG_DELTA_APPLY: u8 = 18;
+
+    /// Ledger bits of a sparse delta with `nnz` stored coordinates.
+    #[inline]
+    pub fn delta_bits(nnz: usize) -> u64 {
+        DELTA_COORD_BITS * nnz as u64
+    }
+
+    /// Validate a received sparse-delta payload against dimension `d`:
+    /// index/value parity, strictly increasing indices (sorted, no
+    /// duplicates — a duplicate would double-apply), all `< d`. Both
+    /// receive sites (the master's `GradDelta`, a worker's `DeltaApply`)
+    /// run this so a corrupted frame or buggy peer surfaces as a clean
+    /// `Err`, never an out-of-bounds panic inside the lazy replay.
+    pub fn validate_delta(idx: &[u32], val: &[f64], d: usize) -> Result<()> {
+        if idx.len() != val.len() {
+            bail!("sparse delta: {} indices vs {} values", idx.len(), val.len());
+        }
+        for (k, &j) in idx.iter().enumerate() {
+            if j as usize >= d {
+                bail!("sparse delta: index {j} >= dimension {d}");
+            }
+            if k > 0 && idx[k - 1] >= j {
+                bail!("sparse delta: indices not strictly increasing at {j}");
+            }
+        }
+        Ok(())
+    }
 
     /// Serialize to the wire format: `tag` byte + fields in little-endian.
     pub fn encode(&self) -> Vec<u8> {
@@ -121,6 +198,10 @@ impl Message {
                 bits,
                 plus,
                 sparse,
+                n,
+                d,
+                lambda_bits,
+                data_hash,
                 policy_fp,
             } => {
                 b.push(Self::TAG_CONFIG);
@@ -129,6 +210,10 @@ impl Message {
                 b.push(*bits);
                 b.push(*plus);
                 b.push(*sparse);
+                b.extend_from_slice(&n.to_le_bytes());
+                b.extend_from_slice(&d.to_le_bytes());
+                b.extend_from_slice(&lambda_bits.to_le_bytes());
+                b.extend_from_slice(&data_hash.to_le_bytes());
                 b.extend_from_slice(&policy_fp.to_le_bytes());
             }
             Message::EpochBegin { epoch } => {
@@ -141,15 +226,25 @@ impl Message {
                 b.extend_from_slice(&gnorm.to_le_bytes());
             }
             Message::InnerRequest => b.push(Self::TAG_INNER_REQUEST),
+            Message::InnerSetup { step, g_tilde } => {
+                b.push(Self::TAG_INNER_SETUP);
+                b.extend_from_slice(&step.to_le_bytes());
+                encode_f64s(&mut b, g_tilde);
+            }
+            Message::InnerDeltaRequest => b.push(Self::TAG_INNER_DELTA_REQUEST),
+            Message::GradDelta { idx, val } => {
+                b.push(Self::TAG_GRAD_DELTA);
+                encode_delta(&mut b, idx, val);
+            }
+            Message::DeltaApply { idx, val } => {
+                b.push(Self::TAG_DELTA_APPLY);
+                encode_delta(&mut b, idx, val);
+            }
             Message::ParamsQ { payload, bits } => {
                 b.push(Self::TAG_PARAMS_Q);
                 b.extend_from_slice(&bits.to_le_bytes());
                 b.extend_from_slice(&(payload.len() as u32).to_le_bytes());
                 b.extend_from_slice(payload);
-            }
-            Message::ParamsRaw { w } => {
-                b.push(Self::TAG_PARAMS_RAW);
-                encode_f64s(&mut b, w);
             }
             Message::SnapshotChoose { zeta } => {
                 b.push(Self::TAG_SNAPSHOT_CHOOSE);
@@ -192,12 +287,29 @@ impl Message {
                 bits: r.u8()?,
                 plus: r.u8()?,
                 sparse: r.u8()?,
+                n: r.u64()?,
+                d: r.u32()?,
+                lambda_bits: r.u64()?,
+                data_hash: r.u64()?,
                 policy_fp: r.u64()?,
             },
             Self::TAG_EPOCH_BEGIN => Message::EpochBegin { epoch: r.u32()? },
             Self::TAG_EPOCH_REVERT => Message::EpochRevert,
             Self::TAG_EPOCH_COMMIT => Message::EpochCommit { gnorm: r.f64()? },
             Self::TAG_INNER_REQUEST => Message::InnerRequest,
+            Self::TAG_INNER_SETUP => Message::InnerSetup {
+                step: r.f64()?,
+                g_tilde: r.f64s()?,
+            },
+            Self::TAG_INNER_DELTA_REQUEST => Message::InnerDeltaRequest,
+            Self::TAG_GRAD_DELTA => {
+                let (idx, val) = r.delta()?;
+                Message::GradDelta { idx, val }
+            }
+            Self::TAG_DELTA_APPLY => {
+                let (idx, val) = r.delta()?;
+                Message::DeltaApply { idx, val }
+            }
             Self::TAG_PARAMS_Q => {
                 let bits = r.u64()?;
                 let len = r.u32()? as usize;
@@ -206,7 +318,6 @@ impl Message {
                     bits,
                 }
             }
-            Self::TAG_PARAMS_RAW => Message::ParamsRaw { w: r.f64s()? },
             Self::TAG_SNAPSHOT_CHOOSE => Message::SnapshotChoose { zeta: r.u32()? },
             Self::TAG_QUERY_LOSS => Message::QueryLoss,
             Self::TAG_SHUTDOWN => Message::Shutdown,
@@ -237,8 +348,13 @@ impl Message {
     pub fn ledger_bits(&self) -> u64 {
         match self {
             Message::ParamsQ { bits, .. } | Message::GradQ { bits, .. } => *bits,
-            Message::ParamsRaw { w } => 64 * w.len() as u64,
             Message::GradRaw { g } => 64 * g.len() as u64,
+            // the per-epoch g̃ broadcast is real data (the step scalar rides
+            // free, like EpochCommit's gnorm)
+            Message::InnerSetup { g_tilde, .. } => 64 * g_tilde.len() as u64,
+            Message::GradDelta { idx, .. } | Message::DeltaApply { idx, .. } => {
+                Self::delta_bits(idx.len())
+            }
             _ => 0,
         }
     }
@@ -248,6 +364,19 @@ fn encode_f64s(b: &mut Vec<u8>, xs: &[f64]) {
     b.extend_from_slice(&(xs.len() as u32).to_le_bytes());
     for x in xs {
         b.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Sparse delta wire layout: u32 count, the u32 indices, then the f64
+/// values (shared by `GradDelta` and `DeltaApply`).
+fn encode_delta(b: &mut Vec<u8>, idx: &[u32], val: &[f64]) {
+    debug_assert_eq!(idx.len(), val.len());
+    b.extend_from_slice(&(idx.len() as u32).to_le_bytes());
+    for j in idx {
+        b.extend_from_slice(&j.to_le_bytes());
+    }
+    for v in val {
+        b.extend_from_slice(&v.to_le_bytes());
     }
 }
 
@@ -286,13 +415,42 @@ impl<'a> Reader<'a> {
         Ok(f64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
     }
 
-    fn f64s(&mut self) -> Result<Vec<f64>> {
+    /// Read a wire-declared element count, refusing one the remaining
+    /// buffer cannot possibly hold (`elem_bytes` per element) — a corrupt
+    /// frame must surface as a clean `Err`, not a multi-GiB
+    /// `Vec::with_capacity` allocation abort.
+    fn count(&mut self, elem_bytes: usize) -> Result<usize> {
         let n = self.u32()? as usize;
+        let remaining = self.buf.len() - self.pos;
+        if n.saturating_mul(elem_bytes) > remaining {
+            bail!(
+                "declared count {n} needs {} bytes but only {remaining} remain",
+                n.saturating_mul(elem_bytes)
+            );
+        }
+        Ok(n)
+    }
+
+    fn f64s(&mut self) -> Result<Vec<f64>> {
+        let n = self.count(8)?;
         let mut v = Vec::with_capacity(n);
         for _ in 0..n {
             v.push(self.f64()?);
         }
         Ok(v)
+    }
+
+    fn delta(&mut self) -> Result<(Vec<u32>, Vec<f64>)> {
+        let n = self.count(12)?; // u32 index + f64 value per coordinate
+        let mut idx = Vec::with_capacity(n);
+        for _ in 0..n {
+            idx.push(self.u32()?);
+        }
+        let mut val = Vec::with_capacity(n);
+        for _ in 0..n {
+            val.push(self.f64()?);
+        }
+        Ok((idx, val))
     }
 }
 
@@ -314,18 +472,32 @@ mod tests {
                 bits: 5,
                 plus: 1,
                 sparse: 1,
+                n: 20_000,
+                d: 47_236,
+                lambda_bits: 0.1f64.to_bits(),
+                data_hash: 0x0123_4567_89AB_CDEF,
                 policy_fp: 0xDEAD_BEEF_1234_5678,
             },
             Message::EpochBegin { epoch: 7 },
             Message::EpochRevert,
             Message::EpochCommit { gnorm: 0.125 },
             Message::InnerRequest,
+            Message::InnerSetup {
+                step: 0.2,
+                g_tilde: vec![0.5, -0.25, 1.0],
+            },
+            Message::InnerDeltaRequest,
+            Message::GradDelta {
+                idx: vec![0, 7, 4095],
+                val: vec![0.5, -1.25, 1e-9],
+            },
+            Message::DeltaApply {
+                idx: vec![],
+                val: vec![],
+            },
             Message::ParamsQ {
                 payload: vec![0xAB, 0xCD, 0x01],
                 bits: 21,
-            },
-            Message::ParamsRaw {
-                w: vec![1.5, -2.25, 0.0],
             },
             Message::SnapshotChoose { zeta: 3 },
             Message::QueryLoss,
@@ -356,6 +528,7 @@ mod tests {
     fn decode_rejects_garbage() {
         assert!(Message::decode(&[]).is_err());
         assert!(Message::decode(&[99]).is_err()); // unknown tag
+        assert!(Message::decode(&[6]).is_err()); // retired raw-params tag
         assert!(Message::decode(&[Message::TAG_EPOCH_BEGIN, 1]).is_err()); // truncated
         // trailing bytes
         let mut b = Message::Ack.encode();
@@ -367,6 +540,14 @@ mod tests {
         b.extend_from_slice(&0u32.to_le_bytes()); // sats
         b.extend_from_slice(&1000u32.to_le_bytes());
         assert!(Message::decode(&b).is_err());
+        // a corrupt count far beyond the frame must error BEFORE allocating
+        // (u32::MAX coordinates would be a ~48 GiB reservation)
+        for tag in [Message::TAG_GRAD_DELTA, Message::TAG_DELTA_APPLY, Message::TAG_GRAD_RAW] {
+            let mut b = vec![tag];
+            b.extend_from_slice(&u32::MAX.to_le_bytes());
+            b.extend_from_slice(&[0u8; 16]);
+            assert!(Message::decode(&b).is_err(), "tag {tag}");
+        }
     }
 
     #[test]
@@ -389,6 +570,49 @@ mod tests {
         assert_eq!(Message::Ack.ledger_bits(), 0);
         assert_eq!(Message::QueryLoss.ledger_bits(), 0);
         assert_eq!(Message::LossValue { loss: 1.0 }.ledger_bits(), 0);
+        // lazy-path messages: 96 bits per stored delta coordinate, 64 per
+        // g̃ coordinate; the request is control
+        assert_eq!(
+            Message::GradDelta {
+                idx: vec![1, 5, 9],
+                val: vec![0.0; 3]
+            }
+            .ledger_bits(),
+            3 * 96
+        );
+        assert_eq!(
+            Message::DeltaApply {
+                idx: vec![2],
+                val: vec![1.5]
+            }
+            .ledger_bits(),
+            96
+        );
+        assert_eq!(
+            Message::InnerSetup {
+                step: 0.2,
+                g_tilde: vec![0.0; 9]
+            }
+            .ledger_bits(),
+            576
+        );
+        assert_eq!(Message::InnerDeltaRequest.ledger_bits(), 0);
+        assert_eq!(Message::delta_bits(7), 7 * 96);
+    }
+
+    #[test]
+    fn delta_validation_rejects_malformed_payloads() {
+        // valid: sorted, unique, in-range
+        Message::validate_delta(&[0, 3, 9], &[1.0, 2.0, 3.0], 10).unwrap();
+        Message::validate_delta(&[], &[], 10).unwrap();
+        // parity mismatch
+        assert!(Message::validate_delta(&[0, 1], &[1.0], 10).is_err());
+        // out of range (would otherwise panic inside the lazy replay)
+        assert!(Message::validate_delta(&[10], &[1.0], 10).is_err());
+        // duplicate (would double-apply)
+        assert!(Message::validate_delta(&[2, 2], &[1.0, 1.0], 10).is_err());
+        // unsorted
+        assert!(Message::validate_delta(&[5, 3], &[1.0, 1.0], 10).is_err());
     }
 
     #[test]
@@ -404,8 +628,14 @@ mod tests {
                 sats: (rng.next_u64() % 100) as u32,
             };
             assert_eq!(Message::decode(&msg.encode()).unwrap(), msg);
-            let w: Vec<f64> = (0..rng.gen_index(20)).map(|_| rng.gen_normal()).collect();
-            let msg = Message::ParamsRaw { w };
+            let g: Vec<f64> = (0..rng.gen_index(20)).map(|_| rng.gen_normal()).collect();
+            let msg = Message::GradRaw { g };
+            assert_eq!(Message::decode(&msg.encode()).unwrap(), msg);
+            let nnz = rng.gen_index(30);
+            let msg = Message::GradDelta {
+                idx: (0..nnz).map(|_| rng.next_u64() as u32).collect(),
+                val: (0..nnz).map(|_| rng.gen_normal()).collect(),
+            };
             assert_eq!(Message::decode(&msg.encode()).unwrap(), msg);
         }
     }

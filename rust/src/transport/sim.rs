@@ -134,9 +134,12 @@ mod tests {
             downlink_bps: 2.0,
         };
         let mut master = SimDuplex::new(m_end, model, true);
-        // 2 coords raw = 128 bits on the downlink at 2 bps -> 64 s
+        // 2 coords of g̃ = 128 bits on the downlink at 2 bps -> 64 s
         master
-            .send(Message::ParamsRaw { w: vec![0.0, 1.0] })
+            .send(Message::InnerSetup {
+                step: 0.2,
+                g_tilde: vec![0.0, 1.0],
+            })
             .unwrap();
         assert_eq!(master.downlink_bits, 128);
         assert_eq!(master.uplink_bits, 0);

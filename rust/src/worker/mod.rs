@@ -5,17 +5,27 @@
 //! the *same type* the master holds ([`crate::quant::QuantState`],
 //! instantiated here with one link), driven by the same message stream — so
 //! both ends construct identical lattices without shipping grid parameters.
+//! Unquantized runs replicate the **lazy iterate** instead
+//! ([`crate::algorithms::LazyIterate`]): the master broadcasts one sparse
+//! delta per inner iteration and every worker advances the same affine
+//! recurrence, so the inner loop costs O(nnz) a turn at both ends.
 //!
 //! Gradient computation is pluggable via [`GradientSource`]:
-//! * [`LogisticRidge`] — pure-Rust shard (the default backend);
+//! * [`LogisticRidge`] — pure-Rust shard (the default backend); its
+//!   [`GradientSource::grad_delta`] is the fused O(nnz) two-margin kernel;
 //! * [`XlaShard`] — the AOT JAX/Pallas artifact through PJRT
-//!   ([`crate::runtime::XlaWorkerKernel`]), shard resident on device.
-//!   Usable only in `--features xla` builds; in default builds its
-//!   constructor reports the runtime module's clear unavailability error.
+//!   ([`crate::runtime::XlaWorkerKernel`]), shard resident on device; it
+//!   keeps the default dense-difference `grad_delta` (full support — the
+//!   documented overhead path). Usable only in `--features xla` builds; in
+//!   default builds its constructor reports the runtime module's clear
+//!   unavailability error.
 
 use anyhow::{bail, Context, Result};
 
 use crate::algorithms::channel::QuantOpts;
+use crate::algorithms::LazyIterate;
+use crate::data::DataFingerprint;
+use crate::linalg::SparseVec;
 use crate::objective::{LogisticRidge, Objective};
 use crate::quant::{CompressorKind, GridPolicy, QuantState};
 use crate::rng::Xoshiro256pp;
@@ -32,12 +42,48 @@ pub trait GradientSource {
     fn dim(&self) -> usize;
     fn grad(&self, w: &[f64], out: &mut [f64]) -> Result<()>;
     fn loss(&self, w: &[f64]) -> f64;
-    /// Whether this shard's feature storage is CSR sparse — a *data*
-    /// property (sparse standardization is scale-only), checked against the
-    /// master's [`Message::Config`] so a `--format` disagreement is refused
-    /// at connect instead of silently training on different data.
-    fn is_sparse(&self) -> bool {
-        false
+
+    /// Ridge coefficient λ of this shard's objective — the analytic part of
+    /// every gradient delta, and the contraction of the lazy replay.
+    fn ridge_lambda(&self) -> f64;
+
+    /// Sorted column support of this backend's non-ridge gradient part: the
+    /// coordinates [`Self::grad_delta`] can ship, and the ones the lazy
+    /// iterate must refresh before this backend reads `w`. Dense backends
+    /// return all of `0..d`.
+    fn support(&self) -> &[u32];
+
+    /// The fused inner-loop kernel: write the **non-ridge** part of
+    /// `grad(w) − grad(w̃)` into `out` as a sparse vector over
+    /// [`Self::support`] (the ridge part `2λ(w−w̃)` is carried analytically
+    /// by the lazy iterate and must NOT be included). `w` is guaranteed
+    /// valid at the support coordinates only.
+    ///
+    /// The default is the dense-difference fallback — O(d), the documented
+    /// overhead path for backends without a sparse kernel (XLA): it needs
+    /// `w` valid everywhere, which holds because such backends report full
+    /// support. `g_snap` is the cached exact `grad(w̃)` and `scratch` a
+    /// caller-owned dense buffer of length `d`.
+    fn grad_delta(
+        &self,
+        w: &[f64],
+        w_tilde: &[f64],
+        g_snap: &[f64],
+        scratch: &mut [f64],
+        out: &mut SparseVec,
+    ) -> Result<()> {
+        self.grad(w, scratch)?;
+        let lam2 = 2.0 * self.ridge_lambda();
+        out.clear();
+        for (j, ((&gw, &gs), (&wj, &wtj))) in scratch
+            .iter()
+            .zip(g_snap)
+            .zip(w.iter().zip(w_tilde))
+            .enumerate()
+        {
+            out.push(j as u32, gw - gs - lam2 * (wj - wtj));
+        }
+        Ok(())
     }
 }
 
@@ -54,8 +100,23 @@ impl<B: GradientSource + ?Sized> GradientSource for Box<B> {
         (**self).loss(w)
     }
 
-    fn is_sparse(&self) -> bool {
-        (**self).is_sparse()
+    fn ridge_lambda(&self) -> f64 {
+        (**self).ridge_lambda()
+    }
+
+    fn support(&self) -> &[u32] {
+        (**self).support()
+    }
+
+    fn grad_delta(
+        &self,
+        w: &[f64],
+        w_tilde: &[f64],
+        g_snap: &[f64],
+        scratch: &mut [f64],
+        out: &mut SparseVec,
+    ) -> Result<()> {
+        (**self).grad_delta(w, w_tilde, g_snap, scratch, out)
     }
 }
 
@@ -73,8 +134,26 @@ impl GradientSource for LogisticRidge {
         Objective::loss(self, w)
     }
 
-    fn is_sparse(&self) -> bool {
-        LogisticRidge::is_sparse(self)
+    fn ridge_lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    fn support(&self) -> &[u32] {
+        LogisticRidge::support(self)
+    }
+
+    fn grad_delta(
+        &self,
+        w: &[f64],
+        w_tilde: &[f64],
+        _g_snap: &[f64],
+        scratch: &mut [f64],
+        out: &mut SparseVec,
+    ) -> Result<()> {
+        // the fused O(nnz) kernel: both margins of every row from one pass,
+        // sparse scatter over the shard's column support
+        LogisticRidge::grad_delta(self, w, w_tilde, scratch, out);
+        Ok(())
     }
 }
 
@@ -83,6 +162,10 @@ impl GradientSource for LogisticRidge {
 pub struct XlaShard {
     kernel: XlaWorkerKernel,
     oracle: LogisticRidge,
+    /// The device buffer is dense whatever the data storage, so the default
+    /// dense-difference `grad_delta` applies and needs `w` valid at every
+    /// coordinate: full support.
+    full_support: Vec<u32>,
 }
 
 impl XlaShard {
@@ -98,6 +181,7 @@ impl XlaShard {
         Ok(XlaShard {
             kernel,
             oracle: shard,
+            full_support: (0..d as u32).collect(),
         })
     }
 }
@@ -115,9 +199,12 @@ impl GradientSource for XlaShard {
         Objective::loss(&self.oracle, w)
     }
 
-    fn is_sparse(&self) -> bool {
-        // storage of the DATA (the device buffer is always dense)
-        self.oracle.is_sparse()
+    fn ridge_lambda(&self) -> f64 {
+        self.oracle.lambda
+    }
+
+    fn support(&self) -> &[u32] {
+        &self.full_support
     }
 }
 
@@ -148,6 +235,9 @@ pub struct WorkerNode<D: Duplex, B: GradientSource> {
     backend: B,
     link: D,
     quant: Option<WorkerQuant>,
+    /// This worker's resolved-data identity, compared against the master's
+    /// in the Config handshake (see [`DataFingerprint`]).
+    fp: DataFingerprint,
     rng: Xoshiro256pp,
 }
 
@@ -156,12 +246,14 @@ impl<D: Duplex, B: GradientSource> WorkerNode<D, B> {
         backend: B,
         link: D,
         quant: Option<WorkerQuant>,
+        fp: DataFingerprint,
         rng: Xoshiro256pp,
     ) -> Self {
         Self {
             backend,
             link,
             quant,
+            fp,
             rng,
         }
     }
@@ -170,10 +262,10 @@ impl<D: Duplex, B: GradientSource> WorkerNode<D, B> {
     pub fn run(mut self) -> Result<()> {
         let d = self.backend.dim();
         // replicated state
-        let mut w_cur = vec![0.0; d]; // w_{k,t}
+        let mut w_cur = vec![0.0; d]; // w_{k,t} (quantized runs)
         let mut w_snapshot = vec![0.0; d]; // w̃_k
         let mut w_snapshot_prev = vec![0.0; d];
-        let mut w_hist: Vec<Vec<f64>> = Vec::new(); // w_{k,0..T-1}
+        let mut w_hist: Vec<Vec<f64>> = Vec::new(); // w_{k,0..T-1} (quantized)
         let mut g_snapshot = vec![0.0; d]; // g_i(w̃_k), cached
         let mut g_cur = vec![0.0; d];
         // the replicated grid/compressor state machine — the same type the
@@ -187,12 +279,19 @@ impl<D: Duplex, B: GradientSource> WorkerNode<D, B> {
         // scratch for the encoder's reconstruction (the master's copy; this
         // end only needs the side effect of advancing the compressor state)
         let mut g_rx = vec![0.0; d];
+        // unquantized runs: this worker's replica of the lazy iterate, the
+        // fused-delta output buffer, and its dense accumulator scratch —
+        // live between InnerSetup and SnapshotChoose
+        let mut lazy = LazyIterate::new(d);
+        let mut lazy_live = false;
+        let mut delta = SparseVec::new();
+        let mut delta_scratch = vec![0.0; d];
 
         // the Config handshake must be the link's first message: every later
         // message has an identical wire shape across compressors, bit
-        // widths, and policy parameters, so a config disagreement (or a
-        // pre-handshake master binary) must fail HERE with a clear error,
-        // not decode into a silently wrong run
+        // widths, policy parameters, and datasets, so a config disagreement
+        // (or a pre-handshake master binary) must fail HERE with a clear
+        // error, not decode into a silently wrong run
         let mut configured = false;
 
         loop {
@@ -211,6 +310,10 @@ impl<D: Duplex, B: GradientSource> WorkerNode<D, B> {
                     bits,
                     plus: mplus,
                     sparse: msparse,
+                    n: mn,
+                    d: md,
+                    lambda_bits: mlambda,
+                    data_hash: mhash,
                     policy_fp,
                 } => {
                     if version != PROTO_VERSION {
@@ -219,15 +322,34 @@ impl<D: Duplex, B: GradientSource> WorkerNode<D, B> {
                              — rebuild both ends from the same revision"
                         );
                     }
-                    let wsparse = self.backend.is_sparse() as u8;
-                    if msparse != wsparse {
+                    let fp = &self.fp;
+                    if (mn, md, msparse) != (fp.n, fp.d, fp.sparse as u8) {
                         bail!(
-                            "feature-storage mismatch: master data is {}, this worker's shard is \
-                             {} — sparse storage standardizes scale-only, so the two ends would \
-                             train on DIFFERENT data; start both with the same --format (and the \
-                             same dataset/samples/seed)",
+                            "training-data mismatch: master resolved n={mn}, d={md}, \
+                             storage={}, this worker resolved n={}, d={}, storage={} — \
+                             start both ends with the same --dataset/--samples/--seed/--format",
                             if msparse == 1 { "csr" } else { "dense" },
-                            if wsparse == 1 { "csr" } else { "dense" },
+                            fp.n,
+                            fp.d,
+                            if fp.sparse { "csr" } else { "dense" },
+                        );
+                    }
+                    if mlambda != fp.lambda_bits {
+                        bail!(
+                            "lambda mismatch: master λ={}, worker λ={} — λ shapes the \
+                             objective and every adaptive grid; start both ends with \
+                             the same --lambda",
+                            f64::from_bits(mlambda),
+                            fp.lambda(),
+                        );
+                    }
+                    if mhash != fp.content_hash {
+                        bail!(
+                            "training-data content mismatch: master hash {mhash:#018x}, worker \
+                             hash {:#018x} despite matching (n, d, λ, storage) — the two ends \
+                             loaded different data; start both with the same \
+                             --dataset/--samples/--seed (and identical dataset files)",
+                            fp.content_hash,
                         );
                     }
                     let (wc, wb, wp, wfp) = match &self.quant {
@@ -278,39 +400,73 @@ impl<D: Duplex, B: GradientSource> WorkerNode<D, B> {
                     }
                     self.link.send(Message::Ack)?;
                 }
-                Message::InnerRequest => {
-                    self.backend.grad(&w_cur, &mut g_cur)?;
-                    match quant.as_mut() {
-                        Some(QuantState { grid, comp }) => {
-                            // uplink 1: compressed snapshot gradient
-                            let e =
-                                comp.encode(grid, 0, &g_snapshot, &mut self.rng, &mut g_rx)?;
-                            self.link.send(Message::GradQ {
-                                bits: e.payload.bits,
-                                payload: e.payload.bytes,
-                                sats: e.sats,
-                            })?;
-                            // uplink 2: current gradient (raw or compressed)
-                            if plus {
-                                let e =
-                                    comp.encode(grid, 0, &g_cur, &mut self.rng, &mut g_rx)?;
-                                self.link.send(Message::GradQ {
-                                    bits: e.payload.bits,
-                                    payload: e.payload.bytes,
-                                    sats: e.sats,
-                                })?;
-                            } else {
-                                self.link.send(Message::GradRaw { g: g_cur.clone() })?;
-                            }
-                        }
-                        None => {
-                            // exact SVRG: both gradients raw
-                            self.link.send(Message::GradRaw {
-                                g: g_snapshot.clone(),
-                            })?;
-                            self.link.send(Message::GradRaw { g: g_cur.clone() })?;
-                        }
+                Message::InnerSetup { step, g_tilde } => {
+                    // unquantized lazy epoch: derive the affine replay
+                    // coefficients from the replicated snapshot + broadcast
+                    // g̃ — the identical begin_epoch the engine runs, so the
+                    // two replicas are bit-identical
+                    if quant.is_some() {
+                        bail!("InnerSetup on a quantized link");
                     }
+                    if g_tilde.len() != d {
+                        bail!("InnerSetup dim {} != {}", g_tilde.len(), d);
+                    }
+                    lazy.begin_epoch(&w_snapshot, &g_tilde, step, self.backend.ridge_lambda());
+                    lazy_live = true;
+                }
+                Message::InnerRequest => {
+                    let QuantState { grid, comp } = quant
+                        .as_mut()
+                        .context("InnerRequest on an unquantized link (lazy runs use InnerDeltaRequest)")?;
+                    self.backend.grad(&w_cur, &mut g_cur)?;
+                    // uplink 1: compressed snapshot gradient
+                    let e = comp.encode(grid, 0, &g_snapshot, &mut self.rng, &mut g_rx)?;
+                    self.link.send(Message::GradQ {
+                        bits: e.payload.bits,
+                        payload: e.payload.bytes,
+                        sats: e.sats,
+                    })?;
+                    // uplink 2: current gradient (raw or compressed)
+                    if plus {
+                        let e = comp.encode(grid, 0, &g_cur, &mut self.rng, &mut g_rx)?;
+                        self.link.send(Message::GradQ {
+                            bits: e.payload.bits,
+                            payload: e.payload.bytes,
+                            sats: e.sats,
+                        })?;
+                    } else {
+                        self.link.send(Message::GradRaw { g: g_cur.clone() })?;
+                    }
+                }
+                Message::InnerDeltaRequest => {
+                    // this worker is ξ: replay its support to the current
+                    // inner time and answer with the fused sparse delta. Its
+                    // own replica advances only on the DeltaApply broadcast,
+                    // exactly like every other worker.
+                    if !lazy_live {
+                        bail!("InnerDeltaRequest before InnerSetup");
+                    }
+                    lazy.refresh(self.backend.support());
+                    self.backend.grad_delta(
+                        lazy.values(),
+                        &w_snapshot,
+                        &g_snapshot,
+                        &mut delta_scratch,
+                        &mut delta,
+                    )?;
+                    self.link.send(Message::GradDelta {
+                        idx: delta.idx.clone(),
+                        val: delta.val.clone(),
+                    })?;
+                }
+                Message::DeltaApply { idx, val } => {
+                    if !lazy_live {
+                        bail!("DeltaApply before InnerSetup");
+                    }
+                    Message::validate_delta(&idx, &val, d)?;
+                    delta.idx = idx;
+                    delta.val = val;
+                    lazy.apply(&delta);
                 }
                 Message::ParamsQ { payload, .. } => {
                     // reconstruct w_{k,t} from the broadcast lattice indices
@@ -320,19 +476,22 @@ impl<D: Duplex, B: GradientSource> WorkerNode<D, B> {
                     q.grid.decode_w(&payload, &mut w_cur)?;
                     w_hist.push(w_cur.clone());
                 }
-                Message::ParamsRaw { w } => {
-                    if w.len() != d {
-                        bail!("ParamsRaw dim {} != {}", w.len(), d);
-                    }
-                    w_cur.copy_from_slice(&w);
-                    w_hist.push(w_cur.clone());
-                }
                 Message::SnapshotChoose { zeta } => {
                     let zeta = zeta as usize;
-                    if zeta >= w_hist.len() {
-                        bail!("zeta {} out of range ({})", zeta, w_hist.len());
+                    if lazy_live {
+                        // ζ-materialize from the delta log — identical code
+                        // and log to the engine's, hence identical bits
+                        if zeta >= lazy.t().max(1) {
+                            bail!("zeta {} out of range ({})", zeta, lazy.t());
+                        }
+                        lazy.materialize(zeta, &mut w_snapshot);
+                        lazy_live = false;
+                    } else {
+                        if zeta >= w_hist.len() {
+                            bail!("zeta {} out of range ({})", zeta, w_hist.len());
+                        }
+                        w_snapshot.copy_from_slice(&w_hist[zeta]);
                     }
-                    w_snapshot.copy_from_slice(&w_hist[zeta]);
                     self.link.send(Message::Ack)?;
                 }
                 Message::QueryLoss => {
@@ -350,23 +509,37 @@ impl<D: Duplex, B: GradientSource> WorkerNode<D, B> {
 mod tests {
     use super::*;
     use crate::data::synthetic::power_like;
+    use crate::data::Dataset;
     use crate::transport::local::pair;
 
-    fn shard() -> LogisticRidge {
+    fn train_ds() -> Dataset {
         let mut ds = power_like(100, 3);
         ds.standardize();
-        LogisticRidge::from_dataset(&ds, 0.1)
+        ds
     }
 
-    /// The unquantized handshake a `MessageCluster` over a dense dataset
-    /// would open the link with.
+    fn shard() -> LogisticRidge {
+        LogisticRidge::from_dataset(&train_ds(), 0.1)
+    }
+
+    fn fp() -> DataFingerprint {
+        train_ds().fingerprint(0.1)
+    }
+
+    /// The unquantized handshake a `MessageCluster` over this dataset would
+    /// open the link with.
     fn raw_config() -> Message {
+        let fp = fp();
         Message::Config {
             version: PROTO_VERSION,
             compressor: 0,
             bits: 0,
             plus: 0,
-            sparse: 0,
+            sparse: fp.sparse as u8,
+            n: fp.n,
+            d: fp.d,
+            lambda_bits: fp.lambda_bits,
+            data_hash: fp.content_hash,
             policy_fp: 0,
         }
     }
@@ -376,18 +549,79 @@ mod tests {
         let obj = shard();
         let expect = Objective::grad_vec(&obj, &[0.0; 9]);
         let (mut master, wlink) = pair();
-        let node = WorkerNode::new(
-            obj,
-            wlink,
-            None,
-            Xoshiro256pp::seed_from_u64(1),
-        );
+        let node = WorkerNode::new(obj, wlink, None, fp(), Xoshiro256pp::seed_from_u64(1));
         let t = std::thread::spawn(move || node.run().unwrap());
         master.send(raw_config()).unwrap();
         master.send(Message::EpochBegin { epoch: 0 }).unwrap();
         match master.recv().unwrap() {
             Message::GradRaw { g } => {
                 assert!(crate::linalg::linf_dist(&g, &expect) < 1e-15)
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        master.send(Message::Shutdown).unwrap();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn worker_serves_the_lazy_inner_protocol() {
+        // setup → delta request → broadcast apply → ζ-materialize: the
+        // worker's replica must land exactly where a LazyIterate replaying
+        // the same stream lands
+        let obj = shard();
+        let lambda = obj.ridge_lambda();
+        let (mut master, wlink) = pair();
+        let node = WorkerNode::new(obj, wlink, None, fp(), Xoshiro256pp::seed_from_u64(9));
+        let t = std::thread::spawn(move || node.run().unwrap());
+        master.send(raw_config()).unwrap();
+        // epoch 0: collect the snapshot gradient, commit
+        master.send(Message::EpochBegin { epoch: 0 }).unwrap();
+        let g0 = match master.recv().unwrap() {
+            Message::GradRaw { g } => g,
+            other => panic!("unexpected {other:?}"),
+        };
+        master.send(Message::EpochCommit { gnorm: 1.0 }).unwrap();
+        let _ = master.recv().unwrap();
+        let step = 0.2;
+        master
+            .send(Message::InnerSetup {
+                step,
+                g_tilde: g0.clone(),
+            })
+            .unwrap();
+        // twin replica on this side (w̃_0 = 0)
+        let mut twin = LazyIterate::new(9);
+        twin.begin_epoch(&[0.0; 9], &g0, step, lambda);
+        let mut deltas = Vec::new();
+        for _ in 0..3 {
+            master.send(Message::InnerDeltaRequest).unwrap();
+            let (idx, val) = match master.recv().unwrap() {
+                Message::GradDelta { idx, val } => (idx, val),
+                other => panic!("unexpected {other:?}"),
+            };
+            master
+                .send(Message::DeltaApply {
+                    idx: idx.clone(),
+                    val: val.clone(),
+                })
+                .unwrap();
+            deltas.push((idx, val));
+        }
+        for (idx, val) in deltas {
+            let sv = SparseVec { idx, val };
+            twin.apply(&sv);
+        }
+        master.send(Message::SnapshotChoose { zeta: 2 }).unwrap();
+        let _ = master.recv().unwrap();
+        // the worker's loss at its materialized w̃ must equal the loss at
+        // OUR materialization of the same log
+        let mut w_zeta = vec![0.0; 9];
+        twin.materialize(2, &mut w_zeta);
+        let expect = Objective::loss(&shard(), &w_zeta);
+        master.send(Message::QueryLoss).unwrap();
+        match master.recv().unwrap() {
+            Message::LossValue { loss } => {
+                assert_eq!(loss.to_bits(), expect.to_bits(), "replicas diverged")
             }
             other => panic!("unexpected {other:?}"),
         }
@@ -403,84 +637,77 @@ mod tests {
             plus: true,
             compressor: CompressorKind::Urq,
         };
-        let matching = || Message::Config {
-            version: PROTO_VERSION,
-            compressor: CompressorKind::Urq.wire_id(),
-            bits: 4,
-            plus: 1,
-            sparse: 0,
-            policy_fp: GridPolicy::Fixed { radius: 4.0 }.fingerprint(),
+        let matching = || {
+            let fp = fp();
+            Message::Config {
+                version: PROTO_VERSION,
+                compressor: CompressorKind::Urq.wire_id(),
+                bits: 4,
+                plus: 1,
+                sparse: fp.sparse as u8,
+                n: fp.n,
+                d: fp.d,
+                lambda_bits: fp.lambda_bits,
+                data_hash: fp.content_hash,
+                policy_fp: GridPolicy::Fixed { radius: 4.0 }.fingerprint(),
+            }
         };
         // matching handshake: worker keeps serving
         let (mut master, wlink) = pair();
-        let node = WorkerNode::new(shard(), wlink, Some(wq()), Xoshiro256pp::seed_from_u64(5));
+        let node = WorkerNode::new(shard(), wlink, Some(wq()), fp(), Xoshiro256pp::seed_from_u64(5));
         let t = std::thread::spawn(move || node.run());
         master.send(matching()).unwrap();
         master.send(Message::QueryLoss).unwrap();
         assert!(matches!(master.recv().unwrap(), Message::LossValue { .. }));
         master.send(Message::Shutdown).unwrap();
         t.join().unwrap().unwrap();
-        // compressor mismatch: worker refuses instead of mis-decoding later
+        // any single-field mutation of the handshake: worker refuses instead
+        // of serving. `mutated` flips exactly one knob of the matching
+        // Config so the cases below stay one line each (and don't need
+        // editing when Config grows a field).
+        let mutated = |f: &dyn Fn(&mut Message)| {
+            let mut m = matching();
+            f(&mut m);
+            m
+        };
         let reject = |cfg: Message| {
             let (mut master, wlink) = pair();
             let node =
-                WorkerNode::new(shard(), wlink, Some(wq()), Xoshiro256pp::seed_from_u64(6));
+                WorkerNode::new(shard(), wlink, Some(wq()), fp(), Xoshiro256pp::seed_from_u64(6));
             let t = std::thread::spawn(move || node.run());
             master.send(cfg).unwrap();
             assert!(t.join().unwrap().is_err());
         };
-        reject(match matching() {
-            Message::Config { version, bits, plus, sparse, policy_fp, .. } => Message::Config {
-                version,
-                compressor: CompressorKind::Diana.wire_id(),
-                bits,
-                plus,
-                sparse,
-                policy_fp,
-            },
-            _ => unreachable!(),
-        });
+        macro_rules! field {
+            ($m:expr, $field:ident) => {{
+                let Message::Config { $field, .. } = $m else {
+                    unreachable!()
+                };
+                $field
+            }};
+        }
+        // compressor mismatch
+        reject(mutated(&|m| *field!(m, compressor) = CompressorKind::Diana.wire_id()));
         // same policy class, different parameters: the fingerprint refuses
-        reject(match matching() {
-            Message::Config { version, compressor, bits, plus, sparse, .. } => Message::Config {
-                version,
-                compressor,
-                bits,
-                plus,
-                sparse,
-                policy_fp: GridPolicy::Fixed { radius: 2.0 }.fingerprint(),
-            },
-            _ => unreachable!(),
-        });
-        // storage mismatch: a master over CSR data must be refused by a
-        // worker holding a dense shard (different data, not just config)
-        reject(match matching() {
-            Message::Config { version, compressor, bits, plus, policy_fp, .. } => {
-                Message::Config {
-                    version,
-                    compressor,
-                    bits,
-                    plus,
-                    sparse: 1,
-                    policy_fp,
-                }
-            }
-            _ => unreachable!(),
-        });
+        reject(mutated(&|m| {
+            *field!(m, policy_fp) = GridPolicy::Fixed { radius: 2.0 }.fingerprint()
+        }));
+        // storage mismatch (a master over CSR data vs a dense worker shard)
+        reject(mutated(&|m| *field!(m, sparse) = 1));
+        // sample-count mismatch (--samples disagreement)
+        reject(mutated(&|m| *field!(m, n) = 101));
+        // λ mismatch (--lambda disagreement)
+        reject(mutated(&|m| *field!(m, lambda_bits) = 0.2f64.to_bits()));
+        // content mismatch with matching shape (--seed disagreement: same
+        // n/d/λ/storage, different values)
+        reject(mutated(&|m| *field!(m, data_hash) ^= 1));
         // protocol version skew: refused with a clear error
         let (mut master, wlink) = pair();
-        let node = WorkerNode::new(shard(), wlink, None, Xoshiro256pp::seed_from_u64(7));
+        let node = WorkerNode::new(shard(), wlink, None, fp(), Xoshiro256pp::seed_from_u64(7));
         let t = std::thread::spawn(move || node.run());
-        master
-            .send(Message::Config {
-                version: PROTO_VERSION + 1,
-                compressor: 0,
-                bits: 0,
-                plus: 0,
-                sparse: 0,
-                policy_fp: 0,
-            })
-            .unwrap();
+        let mut skewed = raw_config();
+        *field!(&mut skewed, version) += 1;
+        master.send(skewed).unwrap();
         assert!(t.join().unwrap().is_err());
     }
 
@@ -488,12 +715,7 @@ mod tests {
     fn worker_rejects_out_of_range_zeta() {
         let obj = shard();
         let (mut master, wlink) = pair();
-        let node = WorkerNode::new(
-            obj,
-            wlink,
-            None,
-            Xoshiro256pp::seed_from_u64(2),
-        );
+        let node = WorkerNode::new(obj, wlink, None, fp(), Xoshiro256pp::seed_from_u64(2));
         let t = std::thread::spawn(move || node.run());
         master.send(raw_config()).unwrap();
         master.send(Message::EpochBegin { epoch: 0 }).unwrap();
@@ -509,7 +731,7 @@ mod tests {
         // a pre-handshake master (or wrong first message) must be refused
         // with a clear error, not served
         let (mut master, wlink) = pair();
-        let node = WorkerNode::new(shard(), wlink, None, Xoshiro256pp::seed_from_u64(8));
+        let node = WorkerNode::new(shard(), wlink, None, fp(), Xoshiro256pp::seed_from_u64(8));
         let t = std::thread::spawn(move || node.run());
         master.send(Message::EpochBegin { epoch: 0 }).unwrap();
         assert!(t.join().unwrap().is_err());
@@ -520,12 +742,7 @@ mod tests {
         let obj = shard();
         let expect = Objective::loss(&obj, &[0.0; 9]);
         let (mut master, wlink) = pair();
-        let node = WorkerNode::new(
-            obj,
-            wlink,
-            None,
-            Xoshiro256pp::seed_from_u64(3),
-        );
+        let node = WorkerNode::new(obj, wlink, None, fp(), Xoshiro256pp::seed_from_u64(3));
         let t = std::thread::spawn(move || node.run().unwrap());
         master.send(raw_config()).unwrap();
         master.send(Message::QueryLoss).unwrap();
@@ -535,5 +752,51 @@ mod tests {
         }
         master.send(Message::Shutdown).unwrap();
         t.join().unwrap();
+    }
+
+    #[test]
+    fn default_grad_delta_matches_logistic_fused_kernel() {
+        // the dense-difference fallback (what an XlaShard runs) must agree
+        // with the fused O(nnz) kernel to fp-roundoff — it is the same
+        // mathematical object computed the O(d) way
+        struct DenseOracle(LogisticRidge);
+        impl GradientSource for DenseOracle {
+            fn dim(&self) -> usize {
+                Objective::dim(&self.0)
+            }
+            fn grad(&self, w: &[f64], out: &mut [f64]) -> Result<()> {
+                Objective::grad(&self.0, w, out);
+                Ok(())
+            }
+            fn loss(&self, w: &[f64]) -> f64 {
+                Objective::loss(&self.0, w)
+            }
+            fn ridge_lambda(&self) -> f64 {
+                self.0.lambda
+            }
+            fn support(&self) -> &[u32] {
+                LogisticRidge::support(&self.0)
+            }
+            // keeps the default grad_delta
+        }
+        let fused = shard();
+        let fallback = DenseOracle(shard());
+        let d = 9;
+        let w: Vec<f64> = (0..d).map(|j| 0.1 * j as f64 - 0.3).collect();
+        let wt: Vec<f64> = (0..d).map(|j| 0.05 * j as f64).collect();
+        let mut g_snap = vec![0.0; d];
+        GradientSource::grad(&fused, &wt, &mut g_snap).unwrap();
+        let mut scratch = vec![0.0; d];
+        let mut a = SparseVec::new();
+        let mut b = SparseVec::new();
+        GradientSource::grad_delta(&fused, &w, &wt, &g_snap, &mut scratch, &mut a).unwrap();
+        fallback
+            .grad_delta(&w, &wt, &g_snap, &mut scratch, &mut b)
+            .unwrap();
+        let mut da = vec![0.0; d];
+        let mut db = vec![0.0; d];
+        a.scatter_into(&mut da);
+        b.scatter_into(&mut db);
+        assert!(crate::linalg::linf_dist(&da, &db) < 1e-13, "{da:?} vs {db:?}");
     }
 }

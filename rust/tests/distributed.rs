@@ -128,6 +128,7 @@ fn run_tcp(ds: &Dataset, n: usize, q: Option<QuantOpts>, o: &SvrgOpts, seed: u64
     // order == worker order, so the TCP run is bit-comparable to the other
     // backends (a real deployment doesn't need this — each link is
     // self-consistent — but the fingerprint comparison does)
+    let fp = ds.fingerprint(0.1);
     let shards = ds.shard(n);
     let mut handles = Vec::new();
     let mut links = Vec::new();
@@ -138,12 +139,12 @@ fn run_tcp(ds: &Dataset, n: usize, q: Option<QuantOpts>, o: &SvrgOpts, seed: u64
         handles.push(std::thread::spawn(move || {
             let link = TcpDuplex::connect(&addr).unwrap();
             let obj = LogisticRidge::from_dataset(&s, 0.1);
-            WorkerNode::new(obj, link, wq, rng).run().unwrap();
+            WorkerNode::new(obj, link, wq, fp, rng).run().unwrap();
         }));
         let (stream, _) = listener.accept().unwrap();
         links.push(TcpDuplex::new(stream).unwrap());
     }
-    let mut cluster = MessageCluster::new(links, ds.d, q, ds.is_sparse(), &root).unwrap();
+    let mut cluster = MessageCluster::new(links, q, fp, &root).unwrap();
     let fp = {
         let mut gnorm_bits = Vec::new();
         let mut bits = Vec::new();
@@ -196,8 +197,11 @@ fn compressor_backend_matrix_bit_identical() {
 
 #[test]
 fn three_backends_bit_identical_unquantized() {
-    // M-SVRG (no quantization): raw vectors cross the links; the ledgers
-    // must still agree exactly with the in-process metering
+    // M-SVRG (no quantization) on the lazy sparse-delta protocol: worker
+    // ξ's fused delta, the DeltaApply broadcast, and the ζ-materialization
+    // from the delta log replicate bit-for-bit, so the engine's LazyIterate
+    // (in-process) and every worker's replica (threaded/TCP) must produce
+    // identical traces AND identical 96-bits-per-coordinate ledgers
     let ds = dataset();
     let n = 3;
     let o = opts(10, true);
@@ -206,6 +210,36 @@ fn three_backends_bit_identical_unquantized() {
     let c = run_tcp(&ds, n, None, &o, 44);
     assert_eq!(a, b);
     assert_eq!(a, c);
+}
+
+#[test]
+fn three_backends_bit_identical_unquantized_sparse() {
+    // the O(nnz) case the lazy protocol exists for: genuinely sparse CSR
+    // data, where each inner delta carries only shard ξ's column support.
+    // Shard supports differ, so per-iteration delta sizes differ — the
+    // fingerprint equality pins that all three backends ship the same
+    // supports, the same values, and the same ledgers, bit for bit
+    let mut ds = qmsvrg::data::synthetic::sparse_like(600, 2048, 0.004, 7);
+    ds.standardize();
+    assert!(ds.is_sparse());
+    let n = 3;
+    let o = opts(8, true);
+    let a = run_in_process(&ds, n, None, &o, 45);
+    let b = run_threaded(&ds, n, None, &o, 45);
+    let c = run_tcp(&ds, n, None, &o, 45);
+    assert_eq!(a, b);
+    assert_eq!(a, c);
+    // shard column supports are genuinely smaller than d here, so the
+    // metered inner-loop deltas must price STRICTLY below the full-support
+    // (dense-data) ledger: 64·d·N per collection (K+1 of them) plus
+    // 96·d·T per epoch
+    let (d, t, k) = (2048u64, 8u64, 8u64);
+    let dense_bound = 64 * d * n as u64 * (k + 1) + 96 * d * t * k;
+    assert!(
+        a.uplink_bits < dense_bound,
+        "uplink {} not below the full-support bound {dense_bound}",
+        a.uplink_bits
+    );
 }
 
 #[test]
@@ -273,6 +307,7 @@ fn worker_crash_surfaces_as_error_not_hang() {
     // a worker that dies mid-protocol must turn into an Err at the master
     let ds = dataset();
     let root = Xoshiro256pp::seed_from_u64(1);
+    let fp = ds.fingerprint(0.1);
     let shards = ds.shard(2);
     let mut links = Vec::new();
     let mut handles = Vec::new();
@@ -288,12 +323,12 @@ fn worker_crash_surfaces_as_error_not_hang() {
             }
             let obj = LogisticRidge::from_dataset(&s, 0.1);
             // run() will itself error once the master gives up; ignore
-            let _ = WorkerNode::new(obj, w, None, rng).run();
+            let _ = WorkerNode::new(obj, w, None, fp, rng).run();
         }));
     }
     // the dead worker may sever its link before or after the constructor's
     // Config handshake lands, so either the constructor or the run errors
-    let result = match MessageCluster::new(links, ds.d, None, ds.is_sparse(), &root) {
+    let result = match MessageCluster::new(links, None, fp, &root) {
         Ok(mut cluster) => {
             let r = run_svrg(&mut cluster, &opts(3, false), root.algo_stream(), &mut |_, _, _, _| {});
             // drop the cluster first: it holds the channel senders that keep

@@ -8,7 +8,80 @@ use qmsvrg::quant::{
     AdaptivePolicy, Grid, GridPolicy,
 };
 use qmsvrg::rng::Xoshiro256pp;
-use qmsvrg::testkit::{forall, gen_vec};
+use qmsvrg::testkit::{dense_svrg_reference, forall, gen_vec};
+
+/// The lazy sparse-delta engine vs the retained dense O(d) reference
+/// (`testkit::dense_svrg_reference`): one seed drives both, so they sample
+/// the same workers every inner iteration, and the affine-replay
+/// representation must agree with the dense recurrence to ≤1e-10 — per-epoch
+/// snapshots, gradient norms, and the final iterate — across random
+/// problem shapes, storages (dense AND genuinely sparse CSR), epoch
+/// lengths, memory-unit settings, and λ (including λ = 0, where the affine
+/// map degenerates to pure drift).
+#[test]
+fn prop_lazy_inner_loop_lockstep_with_dense_reference() {
+    use qmsvrg::algorithms::svrg::{run_svrg, SvrgOpts};
+    use qmsvrg::algorithms::ShardedObjective;
+    use qmsvrg::cluster::InProcessCluster;
+
+    forall(25, 0x1A2, |rng| {
+        let n_samples = 60 + rng.gen_index(120);
+        let sparse = rng.gen_bool(0.5);
+        let mut ds = if sparse {
+            qmsvrg::data::synthetic::sparse_like(n_samples, 24 + rng.gen_index(40), 0.15, rng.next_u64())
+        } else {
+            qmsvrg::data::synthetic::power_like(n_samples, rng.next_u64())
+        };
+        ds.standardize();
+        // λ = 0 is a legal edge for the lazy algebra (β = 1) even though
+        // the CLI requires λ > 0 for strong convexity
+        let lambda = if rng.gen_bool(0.2) {
+            0.0
+        } else {
+            rng.gen_uniform(0.01, 0.3)
+        };
+        let n_workers = 1 + rng.gen_index(4);
+        let prob = ShardedObjective::new(&ds, n_workers, lambda);
+        let opts = SvrgOpts {
+            step: rng.gen_uniform(0.02, 0.25),
+            epoch_len: 1 + rng.gen_index(12),
+            outer_iters: 1 + rng.gen_index(5),
+            memory_unit: rng.gen_bool(0.5),
+        };
+        let seed = rng.next_u64();
+
+        // lazy engine on the in-process cluster
+        let root = Xoshiro256pp::seed_from_u64(seed);
+        let mut cluster = InProcessCluster::new(&prob, None, &root);
+        let mut lazy_trace: Vec<(Vec<f64>, f64)> = Vec::new();
+        let w_lazy = run_svrg(&mut cluster, &opts, root.algo_stream(), &mut |_, w, gn, _| {
+            lazy_trace.push((w.to_vec(), gn))
+        })
+        .unwrap();
+
+        // dense reference, same algo stream
+        let root = Xoshiro256pp::seed_from_u64(seed);
+        let mut ref_trace: Vec<(Vec<f64>, f64)> = Vec::new();
+        let w_ref = dense_svrg_reference(&prob, &opts, root.algo_stream(), &mut |_, w, gn| {
+            ref_trace.push((w.to_vec(), gn))
+        });
+
+        assert_eq!(lazy_trace.len(), ref_trace.len());
+        for (k, ((wl, gl), (wr, gr))) in lazy_trace.iter().zip(&ref_trace).enumerate() {
+            assert!(
+                linalg::linf_dist(wl, wr) <= 1e-10,
+                "epoch {k}: snapshots diverged by {}",
+                linalg::linf_dist(wl, wr)
+            );
+            assert!((gl - gr).abs() <= 1e-10 * (1.0 + gr.abs()), "epoch {k}: gnorm {gl} vs {gr}");
+        }
+        assert!(
+            linalg::linf_dist(&w_lazy, &w_ref) <= 1e-10,
+            "final iterates diverged by {}",
+            linalg::linf_dist(&w_lazy, &w_ref)
+        );
+    });
+}
 
 #[test]
 fn prop_urq_error_bounded_by_one_spacing() {
@@ -257,8 +330,9 @@ fn prop_message_codec_total() {
             },
             2 => {
                 let n = rng.gen_index(100);
-                Message::ParamsRaw {
-                    w: gen_vec(rng, n, -1e6, 1e6),
+                Message::DeltaApply {
+                    idx: (0..n).map(|k| k as u32 * 3).collect(),
+                    val: gen_vec(rng, n, -1e6, 1e6),
                 }
             }
             3 => {
