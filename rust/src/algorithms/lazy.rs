@@ -38,6 +38,23 @@
 
 use crate::linalg::SparseVec;
 
+/// Outcome of a basis-versioned delta application ([`LazyIterate::apply_versioned`]).
+///
+/// The async driver tags every `GradDelta` with the inner time (`basis`) its
+/// worker computed against; a delta whose basis has fallen more than the
+/// staleness window behind the master's applied count is **rejected** — it
+/// was computed against an iterate too old for the bounded-staleness
+/// contract, and applying it would silently turn "s-stale SVRG" into
+/// "arbitrarily-stale SVRG".
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum VersionedApply {
+    /// The delta was applied; the iterate advanced one inner step.
+    Applied,
+    /// Rejected: the delta's basis was `age` steps behind the current inner
+    /// time, which exceeds the staleness window. State is unchanged.
+    RejectedStale { age: usize },
+}
+
 /// The lazily-evaluated inner-loop iterate of one epoch (see module docs).
 #[derive(Clone, Debug)]
 pub struct LazyIterate {
@@ -180,6 +197,31 @@ impl LazyIterate {
         self.log_val.extend_from_slice(&delta.val);
         self.log_ptr.push(self.log_idx.len());
         self.t += 1;
+    }
+
+    /// Gate a delta through the bounded-staleness window before applying:
+    /// `basis` is the inner time the sender computed the delta against, and
+    /// the delta is admitted iff `t − basis ≤ window` (a delta from the
+    /// future — `basis > t` — is a protocol violation and also rejected,
+    /// reported with `age = 0`). On admission this is exactly [`Self::apply`];
+    /// on rejection nothing changes and the caller decides what to do with
+    /// the turn (the async driver counts it and re-requests).
+    pub fn apply_versioned(
+        &mut self,
+        delta: &SparseVec,
+        basis: u32,
+        window: usize,
+    ) -> VersionedApply {
+        let basis = basis as usize;
+        if basis > self.t {
+            return VersionedApply::RejectedStale { age: 0 };
+        }
+        let age = self.t - basis;
+        if age > window {
+            return VersionedApply::RejectedStale { age };
+        }
+        self.apply(delta);
+        VersionedApply::Applied
     }
 
     /// Materialize `w_{k,s}` for any `0 ≤ s ≤ t` into `out` — the ζ-choice
@@ -382,6 +424,64 @@ mod tests {
         let mut w5 = vec![0.0; d];
         lazy.materialize(5, &mut w5);
         assert_close(&w5, &dense.hist[5], 1e-13, "lambda=0 materialize");
+    }
+
+    #[test]
+    fn versioned_apply_enforces_the_staleness_window() {
+        let d = 3;
+        let mut lazy = LazyIterate::new(d);
+        lazy.begin_epoch(&[0.5, -0.5, 1.0], &[0.1, 0.0, -0.2], 0.2, 0.1);
+        // advance to t = 3 with plain applies
+        for _ in 0..3 {
+            lazy.apply(&delta(&[(0, 0.1)]));
+        }
+        // basis == t: age 0, always admitted
+        assert_eq!(
+            lazy.apply_versioned(&delta(&[(1, 0.2)]), 3, 0),
+            VersionedApply::Applied
+        );
+        assert_eq!(lazy.t(), 4);
+        // age exactly == window: admitted (boundary is inclusive)
+        assert_eq!(
+            lazy.apply_versioned(&delta(&[(1, 0.2)]), 2, 2),
+            VersionedApply::Applied
+        );
+        assert_eq!(lazy.t(), 5);
+        // age > window: rejected, and the state must not advance
+        let before = lazy.t();
+        assert_eq!(
+            lazy.apply_versioned(&delta(&[(2, 1.0)]), 1, 2),
+            VersionedApply::RejectedStale { age: 4 }
+        );
+        assert_eq!(lazy.t(), before, "rejected delta must not advance t");
+        // a basis from the future is a protocol violation, not an apply
+        assert_eq!(
+            lazy.apply_versioned(&delta(&[(2, 1.0)]), 99, 1000),
+            VersionedApply::RejectedStale { age: 0 }
+        );
+        assert_eq!(lazy.t(), before);
+    }
+
+    #[test]
+    fn versioned_apply_at_window_zero_is_bitwise_plain_apply() {
+        // staleness 0 (the degenerate async mode): apply_versioned with
+        // basis == t must produce bit-identical state to plain apply
+        let d = 4;
+        let w_tilde = vec![0.8, -0.6, 0.4, 1.2];
+        let g_tilde = vec![-0.1, 0.2, 0.3, -0.25];
+        let mut a = LazyIterate::new(d);
+        let mut b = LazyIterate::new(d);
+        a.begin_epoch(&w_tilde, &g_tilde, 0.15, 0.2);
+        b.begin_epoch(&w_tilde, &g_tilde, 0.15, 0.2);
+        for t in 0..10u32 {
+            let dl = delta(&[(0, 0.1 * t as f64), (2, -0.05)]);
+            a.apply(&dl);
+            assert_eq!(b.apply_versioned(&dl, t, 0), VersionedApply::Applied);
+        }
+        let all: Vec<u32> = (0..d as u32).collect();
+        a.refresh(&all);
+        b.refresh(&all);
+        assert_eq!(a.values(), b.values(), "bitwise degenerate equality");
     }
 
     #[test]

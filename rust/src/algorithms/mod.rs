@@ -30,7 +30,7 @@ pub mod stochastic;
 pub mod svrg;
 
 pub use channel::{QuantChannel, QuantOpts};
-pub use lazy::LazyIterate;
+pub use lazy::{LazyIterate, VersionedApply};
 pub use sharded::ShardedObjective;
 
 use anyhow::{bail, Result};

@@ -106,6 +106,7 @@ USAGE:
                      [--bits B] [--lambda L] [--seed S]
                      [--compressor urq|diana]
                      [--backend native|threaded|xla]
+                     [--mode sync|async] [--quorum K] [--staleness S]
                      [--out DIR]
   qmsvrg experiment  fig2|fig3|fig4|table1|bounds [--bits B] [--samples N]
                      [--iters K] [--seed S] [--out DIR]
@@ -128,6 +129,13 @@ Compressors (quantized algorithms): urq (per-epoch re-centered grids,
 Storage:    libsvm files stay sparse (CSR) under --format auto when their
             density is below the loader threshold; sparse storage
             standardizes scale-only (no centering).
+Modes:      sync (default) runs the lockstep schedule — every worker every
+            turn, bit-identical across backends. async runs the elastic
+            schedule on backend=threaded with unquantized SVRG: --quorum K
+            asks only K of N workers for fresh snapshot gradients per epoch
+            (0 = all), --staleness S pipelines up to S+1 inner-loop deltas
+            and applies nothing older than S steps. --quorum 0 --staleness 0
+            reproduces the sync run bit-for-bit.
 Data:       master and workers must resolve IDENTICAL training data — the
             Config handshake carries the full fingerprint (n, d, lambda,
             storage, content hash of the standardized features), so a

@@ -1,0 +1,777 @@
+//! The **elastic async driver**: bounded-staleness delta pipelining, K-of-N
+//! partial participation, and churn-tolerant links — the second scheduler
+//! over the [`super::protocol`] verbs (the first is the lockstep
+//! [`super::MessageCluster`], which stays the bit-exact verification oracle).
+//!
+//! Three relaxations of lockstep, each individually degenerate back to it:
+//!
+//! * **Bounded staleness** (`--staleness s`): the inner loop keeps up to
+//!   `s + 1` delta requests in flight instead of one. A worker serving a
+//!   request computes against its replica as of the broadcasts it has drained
+//!   — at most `s` applies behind the master (FIFO links guarantee the
+//!   bound on the happy path). Every [`Message::GradDelta`] carries the
+//!   worker's basis version; the master gates it through
+//!   [`LazyIterate::apply_versioned`] and drops (but still meters) anything
+//!   older than `s` — which only arises when a timed-out turn's reply
+//!   finally lands. At `s = 0` the pipeline is one deep and the message
+//!   schedule is exactly lockstep's.
+//! * **Partial participation** (`--quorum K`, after arXiv:1904.05115): each
+//!   epoch asks only a K-subset for fresh snapshot gradients and estimates
+//!   `g̃ = (1/|live|) Σ h_i + (1/K) Σ_{i∈Q} (g_i − h_i)` from per-worker
+//!   cached gradients `h_i` — unbiased over the quorum draw for *any* cache
+//!   contents, with variance that vanishes as the caches converge (this is
+//!   what keeps the 1e-6 minimizer reachable; a naive K-subset mean has
+//!   non-vanishing noise at the optimum). Non-quorum workers still receive
+//!   `EpochBegin { reply: 0 }` so their local `g_snapshot` replica stays
+//!   current. When the quorum covers every live worker the estimator
+//!   collapses to the plain mean, summed in slot order — bitwise lockstep.
+//! * **Churn**: every receive has a deadline; consecutive timeouts strike a
+//!   link out ([`AsyncOpts::max_retries`]), send/receive errors kill it
+//!   immediately, and a dead worker just shrinks the live set (reweighting
+//!   the objective) instead of aborting the run. A departed worker rejoins
+//!   at the next epoch boundary via the same `Config` fingerprint handshake
+//!   as initial connect plus a [`Message::SnapshotSet`] that restores both
+//!   snapshots (current and memory-unit fallback), so the rejoiner is
+//!   replica-consistent before its first `EpochBegin`.
+//!
+//! Async mode speaks only the unquantized sparse-delta protocol: partial
+//! participation would desynchronize the replicated quantization grids
+//! (grid commits depend on every node gradient), so quantized runs stay on
+//! the lockstep driver.
+
+use std::collections::VecDeque;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use super::protocol;
+use crate::algorithms::full_gradient::EvalFn;
+use crate::algorithms::svrg::SvrgOpts;
+use crate::algorithms::{LazyIterate, VersionedApply};
+use crate::data::{DataFingerprint, Dataset};
+use crate::linalg;
+use crate::metrics::CommLedger;
+use crate::objective::LogisticRidge;
+use crate::rng::Xoshiro256pp;
+use crate::transport::local::{pair, LocalDuplex};
+use crate::transport::{Duplex, Message};
+use crate::worker::WorkerNode;
+
+/// How the per-epoch gradient quorum is chosen.
+#[derive(Clone, Debug)]
+pub enum QuorumSelect {
+    /// Uniform K-subset of the live workers from the run's dedicated
+    /// `quorum_stream` (keeps the ξ/ζ stream untouched, so `K = N` draws
+    /// nothing and stays bitwise lockstep).
+    Random,
+    /// The K cheapest live workers under a fixed per-slot cost (ties broken
+    /// by slot index; no rng draws). This is the straggler-avoidance policy
+    /// the SimDuplex tests pin: the expensive link is simply never asked.
+    ByCost(Vec<f64>),
+}
+
+/// Elasticity knobs. `Default` is the degenerate configuration — full
+/// participation, zero staleness, patient timeouts — under which the driver
+/// reproduces lockstep bit-for-bit.
+#[derive(Clone, Debug)]
+pub struct AsyncOpts {
+    /// Workers asked for a fresh snapshot gradient per epoch; `0` means all
+    /// live workers (full participation).
+    pub quorum: usize,
+    /// Maximum inner-step age `s` of an applied delta; the pipeline keeps
+    /// `s + 1` requests in flight.
+    pub staleness: usize,
+    /// Per-receive deadline.
+    pub recv_timeout: Duration,
+    /// Consecutive timeouts on one link before it is declared dead.
+    pub max_retries: usize,
+    pub select: QuorumSelect,
+}
+
+impl Default for AsyncOpts {
+    fn default() -> Self {
+        Self {
+            quorum: 0,
+            staleness: 0,
+            recv_timeout: Duration::from_secs(10),
+            max_retries: 3,
+            select: QuorumSelect::Random,
+        }
+    }
+}
+
+/// Observable elasticity events of one run.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AsyncStats {
+    /// Individual receive deadlines that expired (not necessarily fatal).
+    pub timeouts: u64,
+    /// Deltas refused by the staleness gate (metered, not applied).
+    pub stale_rejected: u64,
+    /// Late inner-loop replies drained at the epoch barrier (metered, not
+    /// applied).
+    pub dropped_after_epoch: u64,
+    /// Links declared dead (strikes, wire errors, or an explicit kick).
+    pub deaths: u64,
+    /// Workers re-admitted mid-run.
+    pub rejoins: u64,
+    /// Epochs that ran with a strict sub-live quorum.
+    pub quorum_rounds: u64,
+}
+
+struct Slot<D> {
+    /// `None` = dead (or kicked); the slot keeps its index so a rejoiner
+    /// returns to the same shard identity.
+    link: Option<D>,
+    /// Consecutive receive timeouts.
+    strikes: usize,
+    /// Cached node gradient `h_i` — the control variate of the
+    /// partial-participation estimator. Survives death (stale caches only
+    /// cost variance, never bias).
+    h: Vec<f64>,
+}
+
+/// One poll of a link, distinguishing "nothing yet" from "gone".
+enum Poll {
+    Msg(Message),
+    Timeout,
+    Dead,
+}
+
+/// Master side of an elastic deployment: one slot per worker, any of which
+/// may be dead at any moment. Unquantized only.
+pub struct AsyncCluster<D: Duplex> {
+    slots: Vec<Slot<D>>,
+    d: usize,
+    lambda: f64,
+    config: Message,
+    opts: AsyncOpts,
+    quorum_rng: Xoshiro256pp,
+    pub ledger: CommLedger,
+    pub stats: AsyncStats,
+    pending_joins: Vec<(usize, D)>,
+}
+
+impl<D: Duplex> AsyncCluster<D> {
+    /// Build the master over `links` and broadcast the `Config` handshake.
+    /// `fp` is the resolved-data fingerprint (same contract as
+    /// [`super::MessageCluster::new`]); `root` seeds the quorum stream.
+    pub fn new(
+        links: Vec<D>,
+        fp: DataFingerprint,
+        root: &Xoshiro256pp,
+        opts: AsyncOpts,
+    ) -> Result<Self> {
+        assert!(!links.is_empty(), "need at least one worker");
+        let d = fp.d as usize;
+        let config = protocol::config_message(None, &fp);
+        let mut cluster = Self {
+            slots: links
+                .into_iter()
+                .map(|l| Slot {
+                    link: Some(l),
+                    strikes: 0,
+                    h: vec![0.0; d],
+                })
+                .collect(),
+            d,
+            lambda: fp.lambda(),
+            config: config.clone(),
+            opts,
+            quorum_rng: root.quorum_stream(),
+            ledger: CommLedger::default(),
+            stats: AsyncStats::default(),
+            pending_joins: Vec::new(),
+        };
+        // initial connect is not elastic: a worker that cannot even take the
+        // handshake is a deployment error, not churn
+        for slot in cluster.slots.iter_mut() {
+            if let Some(link) = slot.link.as_mut() {
+                link.send(config.clone())?;
+            }
+        }
+        Ok(cluster)
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    pub fn n_slots(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// The lazy affine λ (async is always unquantized).
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    pub fn is_live(&self, i: usize) -> bool {
+        self.slots[i].link.is_some()
+    }
+
+    /// Slot indices with a live link, ascending.
+    pub fn live_indices(&self) -> Vec<usize> {
+        (0..self.slots.len()).filter(|&i| self.is_live(i)).collect()
+    }
+
+    pub fn total_bits(&self) -> u64 {
+        self.ledger.total_bits()
+    }
+
+    pub fn ledger(&self) -> &CommLedger {
+        &self.ledger
+    }
+
+    /// Read access to slot `i`'s link (`None` when dead). The SimDuplex
+    /// tests use this to inspect per-link virtual time and bit counters.
+    pub fn link(&self, i: usize) -> Option<&D> {
+        self.slots[i].link.as_ref()
+    }
+
+    // ---- link health ----------------------------------------------------
+
+    fn kill(&mut self, i: usize) {
+        if self.slots[i].link.take().is_some() {
+            self.stats.deaths += 1;
+        }
+    }
+
+    /// Test/ops injection of a departure: politely tell the worker to exit,
+    /// then treat the link as dead.
+    pub fn kick(&mut self, i: usize) {
+        if let Some(link) = self.slots[i].link.as_mut() {
+            let _ = link.send(Message::Shutdown);
+            self.kill(i);
+        }
+    }
+
+    /// `true` if the message went out; a send error kills the link.
+    fn send_or_kill(&mut self, i: usize, msg: Message) -> bool {
+        match self.slots[i].link.as_mut() {
+            Some(link) => {
+                if link.send(msg).is_err() {
+                    self.kill(i);
+                    false
+                } else {
+                    true
+                }
+            }
+            None => false,
+        }
+    }
+
+    /// Broadcast to every live slot, in slot order (lockstep's fan order).
+    fn fan_live(&mut self, msg: &Message) {
+        for i in 0..self.slots.len() {
+            if self.is_live(i) {
+                self.send_or_kill(i, msg.clone());
+            }
+        }
+    }
+
+    /// One deadline-bounded receive on slot `i`, with strike accounting.
+    fn poll_reply(&mut self, i: usize) -> Poll {
+        let timeout = self.opts.recv_timeout;
+        let max_retries = self.opts.max_retries;
+        let Some(link) = self.slots[i].link.as_mut() else {
+            return Poll::Dead;
+        };
+        match link.recv_deadline(timeout) {
+            Ok(Some(msg)) => {
+                self.slots[i].strikes = 0;
+                Poll::Msg(msg)
+            }
+            Ok(None) => {
+                self.stats.timeouts += 1;
+                self.slots[i].strikes += 1;
+                if self.slots[i].strikes >= max_retries {
+                    self.kill(i);
+                    Poll::Dead
+                } else {
+                    Poll::Timeout
+                }
+            }
+            Err(_) => {
+                self.kill(i);
+                Poll::Dead
+            }
+        }
+    }
+
+    /// Receive with the full retry budget (barrier rounds, where the slot
+    /// has nothing better to do than wait). `None` = the link died.
+    fn recv_with_retries(&mut self, i: usize) -> Option<Message> {
+        loop {
+            match self.poll_reply(i) {
+                Poll::Msg(msg) => return Some(msg),
+                Poll::Timeout => continue,
+                Poll::Dead => return None,
+            }
+        }
+    }
+
+    // ---- churn ----------------------------------------------------------
+
+    /// Stage a replacement worker for dead slot `i`; it is admitted at the
+    /// next epoch boundary ([`Self::process_joins`]).
+    pub fn enqueue_rejoin(&mut self, i: usize, link: D) -> Result<()> {
+        if self.is_live(i) {
+            bail!("slot {i} is live; kick it before rejoining");
+        }
+        self.pending_joins.push((i, link));
+        Ok(())
+    }
+
+    /// Admit staged rejoiners: the `Config` fingerprint handshake (identical
+    /// to initial connect — wrong-data workers are refused, not averaged
+    /// in), then [`Message::SnapshotSet`] carrying BOTH snapshots so a
+    /// memory-unit revert in the rejoiner's first epoch lands on the same
+    /// state every incumbent holds. Metered 2·64·d downlink on admission.
+    pub fn process_joins(&mut self, w_tilde: &[f64], prev_w: &[f64]) {
+        let joins = std::mem::take(&mut self.pending_joins);
+        for (i, mut link) in joins {
+            if self.is_live(i) {
+                continue;
+            }
+            if link.send(self.config.clone()).is_err() {
+                continue;
+            }
+            if link
+                .send(Message::SnapshotSet {
+                    w: w_tilde.to_vec(),
+                    prev: prev_w.to_vec(),
+                })
+                .is_err()
+            {
+                continue;
+            }
+            let mut admitted = false;
+            for _ in 0..self.opts.max_retries {
+                match link.recv_deadline(self.opts.recv_timeout) {
+                    Ok(Some(Message::Ack)) => {
+                        admitted = true;
+                        break;
+                    }
+                    Ok(Some(_)) | Err(_) => break,
+                    Ok(None) => self.stats.timeouts += 1,
+                }
+            }
+            if admitted {
+                self.ledger.record_downlink(2 * 64 * self.d as u64);
+                let slot = &mut self.slots[i];
+                slot.link = Some(link);
+                slot.strikes = 0; // h_i cache kept: staleness costs variance, not bias
+                self.stats.rejoins += 1;
+            }
+        }
+    }
+
+    // ---- epoch top: quorum + gradient estimate --------------------------
+
+    fn select_quorum(&mut self, live: &[usize]) -> Vec<usize> {
+        let k = match self.opts.quorum {
+            0 => live.len(),
+            k => k.min(live.len()),
+        };
+        if k >= live.len() {
+            // full participation: no draws, bitwise degenerate
+            return live.to_vec();
+        }
+        self.stats.quorum_rounds += 1;
+        match &self.opts.select {
+            QuorumSelect::Random => {
+                let mut picks = self.quorum_rng.sample_indices(live.len(), k);
+                picks.sort_unstable();
+                picks.into_iter().map(|p| live[p]).collect()
+            }
+            QuorumSelect::ByCost(costs) => {
+                let mut order = live.to_vec();
+                order.sort_by(|&a, &b| {
+                    costs[a]
+                        .partial_cmp(&costs[b])
+                        .unwrap_or(std::cmp::Ordering::Equal)
+                        .then(a.cmp(&b))
+                });
+                order.truncate(k);
+                order.sort_unstable();
+                order
+            }
+        }
+    }
+
+    /// Epoch-top collection: ask `quorum` (chosen per [`QuorumSelect`]) for
+    /// fresh node gradients, tell every other live worker to refresh its
+    /// snapshot gradient silently (`reply: 0`), and estimate `g̃` via the
+    /// cached-gradient control variates. Falls back to the plain slot-order
+    /// mean — lockstep's exact float sequence — whenever every live worker
+    /// responded.
+    pub fn snapshot_grads(&mut self, epoch: usize, g_tilde: &mut [f64]) -> Result<()> {
+        let live = self.live_indices();
+        if live.is_empty() {
+            bail!("no live workers at epoch {epoch}");
+        }
+        let quorum = self.select_quorum(&live);
+        let mut qi = 0;
+        for &i in &live {
+            let reply = if qi < quorum.len() && quorum[qi] == i {
+                qi += 1;
+                1
+            } else {
+                0
+            };
+            self.send_or_kill(
+                i,
+                Message::EpochBegin {
+                    epoch: epoch as u32,
+                    reply,
+                },
+            );
+        }
+        // drain fresh gradients in slot order
+        let mut fresh: Vec<(usize, Vec<f64>)> = Vec::with_capacity(quorum.len());
+        for &i in &quorum {
+            let Some(msg) = self.recv_with_retries(i) else {
+                continue;
+            };
+            match protocol::parse_grad_raw(msg, self.d, i) {
+                Ok(g) => {
+                    self.ledger.record_uplink(64 * self.d as u64);
+                    fresh.push((i, g));
+                }
+                Err(_) => self.kill(i), // protocol desync: quarantine, don't abort
+            }
+        }
+        let live_now = self.live_indices();
+        if live_now.is_empty() {
+            bail!("every worker died during epoch {epoch} collection");
+        }
+        for g in g_tilde.iter_mut() {
+            *g = 0.0;
+        }
+        let full = fresh.len() == live_now.len()
+            && fresh.iter().map(|(i, _)| *i).eq(live_now.iter().copied());
+        if full {
+            // everyone answered: lockstep's mean, same op order
+            let inv_n = 1.0 / fresh.len() as f64;
+            for (_, g) in &fresh {
+                linalg::axpy(inv_n, g, g_tilde);
+            }
+        } else {
+            // g̃ = (1/|live|) Σ h_i  +  (1/K) Σ_{i∈Q} (g_i − h_i)
+            let inv_live = 1.0 / live_now.len() as f64;
+            for &i in &live_now {
+                linalg::axpy(inv_live, &self.slots[i].h, g_tilde);
+            }
+            if !fresh.is_empty() {
+                let inv_k = 1.0 / fresh.len() as f64;
+                for (i, g) in &fresh {
+                    linalg::axpy(inv_k, g, g_tilde);
+                    linalg::axpy(-inv_k, &self.slots[*i].h, g_tilde);
+                }
+            }
+        }
+        for (i, g) in fresh {
+            self.slots[i].h.copy_from_slice(&g);
+        }
+        Ok(())
+    }
+
+    /// Post-run report: full participation over whoever is still alive.
+    pub fn final_grads(&mut self, epoch: usize, g_tilde: &mut [f64]) -> Result<()> {
+        let saved = self.opts.quorum;
+        self.opts.quorum = 0;
+        let r = self.snapshot_grads(epoch, g_tilde);
+        self.opts.quorum = saved;
+        r
+    }
+
+    // ---- epoch barriers -------------------------------------------------
+
+    /// Fan `msg` to every live slot and drain one `Ack` each (deadline +
+    /// strikes; a slot that cannot ack is dead, never fatal to the run).
+    fn barrier(&mut self, msg: &Message) {
+        self.fan_live(msg);
+        for i in 0..self.slots.len() {
+            if !self.is_live(i) {
+                continue;
+            }
+            if let Some(reply) = self.recv_with_retries(i) {
+                if protocol::expect_ack(reply, i).is_err() {
+                    self.kill(i);
+                }
+            }
+        }
+    }
+
+    /// Memory-unit rejection (not metered).
+    pub fn revert_epoch(&mut self) {
+        self.barrier(&Message::EpochRevert);
+    }
+
+    /// Snapshot accepted (not metered; async holds no grids to re-center).
+    pub fn commit_epoch(&mut self, gnorm: f64) {
+        self.barrier(&Message::EpochCommit { gnorm });
+    }
+
+    /// Broadcast `g̃` + α; metered 64·d once (broadcast convention).
+    pub fn begin_inner_lazy(&mut self, g_tilde: &[f64], step: f64) {
+        self.ledger.record_downlink(64 * g_tilde.len() as u64);
+        self.fan_live(&Message::InnerSetup {
+            step,
+            g_tilde: g_tilde.to_vec(),
+        });
+    }
+
+    /// End of epoch: every live replica adopts `w_{k,ζ}`.
+    pub fn choose_snapshot(&mut self, zeta: usize) {
+        self.barrier(&Message::SnapshotChoose {
+            zeta: zeta as u32,
+        });
+    }
+
+    /// Mean of live workers' local losses (instrumentation; not metered).
+    pub fn query_losses(&mut self) -> Result<f64> {
+        self.fan_live(&Message::QueryLoss);
+        let mut acc = 0.0;
+        let mut count = 0usize;
+        for i in 0..self.slots.len() {
+            if !self.is_live(i) {
+                continue;
+            }
+            if let Some(msg) = self.recv_with_retries(i) {
+                match protocol::parse_loss(msg, i) {
+                    Ok(l) => {
+                        acc += l;
+                        count += 1;
+                    }
+                    Err(_) => self.kill(i),
+                }
+            }
+        }
+        if count == 0 {
+            bail!("no live workers answered the loss query");
+        }
+        Ok(acc / count as f64)
+    }
+
+    /// Tell every live worker to exit (worker thread lifecycles belong to
+    /// the spawner).
+    pub fn shutdown(&mut self) {
+        self.fan_live(&Message::Shutdown);
+        for slot in &mut self.slots {
+            slot.link = None;
+        }
+    }
+
+    // ---- the pipelined inner loop ---------------------------------------
+
+    /// Run one epoch's inner loop to `t_len` applied steps with up to
+    /// `staleness + 1` delta requests in flight.
+    ///
+    /// `inflight` holds one token per reply a worker still owes; links are
+    /// FIFO, so tokens for the same slot are interchangeable — a token's
+    /// receive returns that slot's *oldest* outstanding reply, whichever
+    /// turn produced it, and the basis tag (not the token) decides whether
+    /// it is applied. A timed-out token is pushed to the back (the straggler
+    /// gets more wall-clock while other turns proceed); its reply, when it
+    /// finally lands, is usually over-stale and is metered-then-dropped by
+    /// the gate. Rejected turns are re-issued, so the epoch always reaches
+    /// exactly `t_len` applies. The trailing drain brings every link back to
+    /// quiet before the `SnapshotChoose` barrier.
+    pub fn run_inner_lazy(
+        &mut self,
+        lazy: &mut LazyIterate,
+        t_len: usize,
+        rng: &mut Xoshiro256pp,
+    ) -> Result<()> {
+        let window = self.opts.staleness + 1;
+        let mut inflight: VecDeque<usize> = VecDeque::new();
+        let mut applied = 0usize;
+        while applied < t_len {
+            while inflight.len() < window && applied + inflight.len() < t_len {
+                let live = self.live_indices();
+                if live.is_empty() {
+                    bail!("no live workers in the inner loop");
+                }
+                // over all-live slots this is lockstep's ξ draw verbatim
+                let xi = live[rng.gen_index(live.len())];
+                if self.send_or_kill(xi, Message::InnerDeltaRequest) {
+                    inflight.push_back(xi);
+                }
+            }
+            let Some(i) = inflight.pop_front() else {
+                bail!("no live workers in the inner loop");
+            };
+            if !self.is_live(i) {
+                continue; // died after the token was issued; reply never comes
+            }
+            match self.poll_reply(i) {
+                Poll::Msg(msg) => match protocol::parse_grad_delta(msg, self.d, i) {
+                    Ok((basis, sv)) => {
+                        // the bits crossed the wire whether or not we keep them
+                        self.ledger.record_uplink(Message::delta_bits(sv.idx.len()));
+                        match lazy.apply_versioned(&sv, basis, self.opts.staleness) {
+                            VersionedApply::Applied => {
+                                self.ledger
+                                    .record_downlink(Message::delta_bits(sv.idx.len()));
+                                self.fan_live(&Message::DeltaApply {
+                                    idx: sv.idx,
+                                    val: sv.val,
+                                });
+                                applied += 1;
+                            }
+                            VersionedApply::RejectedStale { .. } => {
+                                self.stats.stale_rejected += 1;
+                            }
+                        }
+                    }
+                    Err(_) => self.kill(i),
+                },
+                Poll::Timeout => inflight.push_back(i),
+                Poll::Dead => {}
+            }
+        }
+        // quiescence drain: late replies are metered and dropped
+        while let Some(i) = inflight.pop_front() {
+            if !self.is_live(i) {
+                continue;
+            }
+            match self.poll_reply(i) {
+                Poll::Msg(msg) => match protocol::parse_grad_delta(msg, self.d, i) {
+                    Ok((_basis, sv)) => {
+                        self.ledger.record_uplink(Message::delta_bits(sv.idx.len()));
+                        self.stats.dropped_after_epoch += 1;
+                    }
+                    Err(_) => self.kill(i),
+                },
+                Poll::Timeout => inflight.push_back(i),
+                Poll::Dead => {}
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Run Algorithm 1 on the elastic driver; returns the final snapshot `w̃`.
+///
+/// The statement order mirrors [`crate::algorithms::svrg::run_svrg`] exactly
+/// — same rng draw sequence, same float op order, same metering calls — so
+/// at `quorum = N`, `staleness = 0`, full health the trace, final iterate
+/// and bit ledger are **bitwise identical** to the lockstep engine on the
+/// same seed (`rust/tests/async_cluster.rs` pins this). `on_epoch` runs at
+/// the top of each epoch, before rejoin admission — the churn tests use it
+/// to kick and re-admit workers at chosen epochs.
+pub fn run_svrg_async<D: Duplex>(
+    cluster: &mut AsyncCluster<D>,
+    opts: &SvrgOpts,
+    mut rng: Xoshiro256pp,
+    eval: EvalFn,
+    mut on_epoch: Option<&mut dyn FnMut(usize, &mut AsyncCluster<D>) -> Result<()>>,
+) -> Result<Vec<f64>> {
+    let d = cluster.dim();
+    let t_len = opts.epoch_len;
+    let lambda = cluster.lambda();
+
+    let mut w_tilde = vec![0.0; d];
+    let mut g_tilde = vec![0.0; d];
+    let mut prev_w = vec![0.0; d];
+    let mut prev_g = vec![0.0; d];
+    let mut prev_gnorm = f64::INFINITY;
+    let mut lazy = LazyIterate::new(d);
+
+    for k in 0..opts.outer_iters {
+        if let Some(hook) = on_epoch.as_mut() {
+            hook(k, cluster)?;
+        }
+        cluster.process_joins(&w_tilde, &prev_w);
+
+        // ---- outer: estimate g̃ from the quorum round
+        cluster.snapshot_grads(k, &mut g_tilde)?;
+        let mut gnorm = linalg::nrm2(&g_tilde);
+
+        // ---- memory unit, on the estimated norm
+        if opts.memory_unit && gnorm > prev_gnorm {
+            cluster.revert_epoch();
+            w_tilde.copy_from_slice(&prev_w);
+            g_tilde.copy_from_slice(&prev_g);
+            gnorm = prev_gnorm;
+        } else {
+            prev_w.copy_from_slice(&w_tilde);
+            prev_g.copy_from_slice(&g_tilde);
+            prev_gnorm = gnorm;
+        }
+
+        cluster.commit_epoch(gnorm);
+        eval(k, &w_tilde, gnorm, cluster.total_bits());
+
+        // ---- pipelined inner loop + ζ-choice (lazy protocol only)
+        cluster.begin_inner_lazy(&g_tilde, opts.step);
+        lazy.begin_epoch(&w_tilde, &g_tilde, opts.step, lambda);
+        cluster.run_inner_lazy(&mut lazy, t_len, &mut rng)?;
+        let zeta = rng.gen_index(t_len);
+        cluster.choose_snapshot(zeta);
+        lazy.materialize(zeta, &mut w_tilde);
+    }
+
+    // final report: full participation over the survivors
+    cluster.final_grads(opts.outer_iters, &mut g_tilde)?;
+    eval(
+        opts.outer_iters,
+        &w_tilde,
+        linalg::nrm2(&g_tilde),
+        cluster.total_bits(),
+    );
+    Ok(w_tilde)
+}
+
+/// Spawn one native worker thread for shard `slot` of `train` (sharded
+/// `n_workers` ways) and return the master end of its link plus the join
+/// handle. Used for the initial fleet and for mid-run rejoiners — both go
+/// through the identical `Config` handshake.
+pub fn spawn_native_worker(
+    train: &Dataset,
+    n_workers: usize,
+    slot: usize,
+    lambda: f64,
+    root: &Xoshiro256pp,
+) -> (LocalDuplex, std::thread::JoinHandle<Result<()>>) {
+    let fp = train.fingerprint(lambda);
+    let shard = train.shard(n_workers).swap_remove(slot);
+    let (master_end, worker_end) = pair();
+    let rng = root.worker_stream(slot);
+    let handle = std::thread::spawn(move || -> Result<()> {
+        let backend = LogisticRidge::from_dataset(&shard, lambda);
+        WorkerNode::new(backend, worker_end, None, fp, rng).run()
+    });
+    (master_end, handle)
+}
+
+/// Spawn the full native fleet (mirror of
+/// [`super::ThreadedCluster::spawn`], minus quantization) and build the
+/// elastic master over it. The spawner keeps the join handles: kicked
+/// workers exit `Ok`, and [`AsyncCluster::shutdown`] releases the rest.
+pub fn spawn_async_native(
+    train: &Dataset,
+    n_workers: usize,
+    lambda: f64,
+    root: &Xoshiro256pp,
+    opts: AsyncOpts,
+) -> Result<(
+    AsyncCluster<LocalDuplex>,
+    Vec<std::thread::JoinHandle<Result<()>>>,
+)> {
+    let fp = train.fingerprint(lambda);
+    let shards = train.shard(n_workers);
+    let mut links = Vec::with_capacity(n_workers);
+    let mut handles = Vec::with_capacity(n_workers);
+    for (i, shard) in shards.into_iter().enumerate() {
+        let (master_end, worker_end) = pair();
+        let rng = root.worker_stream(i);
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            let backend = LogisticRidge::from_dataset(&shard, lambda);
+            WorkerNode::new(backend, worker_end, None, fp, rng).run()
+        }));
+        links.push(master_end);
+    }
+    Ok((AsyncCluster::new(links, fp, root, opts)?, handles))
+}

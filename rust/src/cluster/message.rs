@@ -19,7 +19,7 @@
 
 use anyhow::{bail, Context, Result};
 
-use super::Cluster;
+use super::{protocol, Cluster};
 use crate::algorithms::channel::QuantOpts;
 use crate::algorithms::LazyIterate;
 use crate::data::DataFingerprint;
@@ -28,7 +28,7 @@ use crate::metrics::CommLedger;
 use crate::quant::QuantState;
 use crate::rng::Xoshiro256pp;
 use crate::transport::tcp::TcpDuplex;
-use crate::transport::{Duplex, Message, PROTO_VERSION};
+use crate::transport::{Duplex, Message};
 
 /// Master side of a message-passing deployment (one link per worker).
 pub struct MessageCluster<D: Duplex> {
@@ -66,18 +66,7 @@ impl<D: Duplex> MessageCluster<D> {
         assert!(!links.is_empty(), "need at least one worker");
         let n = links.len();
         let d = fp.d as usize;
-        let config = Message::Config {
-            version: PROTO_VERSION,
-            compressor: quant.as_ref().map_or(0, |q| q.compressor.wire_id()),
-            bits: quant.as_ref().map_or(0, |q| q.bits),
-            plus: quant.as_ref().map_or(0, |q| q.plus as u8),
-            sparse: fp.sparse as u8,
-            n: fp.n,
-            d: fp.d,
-            lambda_bits: fp.lambda_bits,
-            data_hash: fp.content_hash,
-            policy_fp: quant.as_ref().map_or(0, |q| q.policy.fingerprint()),
-        };
+        let config = protocol::config_message(quant.as_ref(), &fp);
         let mut cluster = Self {
             links,
             d,
@@ -95,20 +84,11 @@ impl<D: Duplex> MessageCluster<D> {
 
     /// Send `msg` on every link (no blocking receives in between).
     fn fan_out(&mut self, msg: &Message) -> Result<()> {
-        for link in &mut self.links {
-            link.send(msg.clone())?;
-        }
-        Ok(())
+        protocol::fan_out(&mut self.links, msg)
     }
 
     fn collect_acks(&mut self) -> Result<()> {
-        for (i, link) in self.links.iter_mut().enumerate() {
-            match link.recv()? {
-                Message::Ack => {}
-                other => bail!("worker {i}: expected Ack, got {other:?}"),
-            }
-        }
-        Ok(())
+        protocol::collect_acks(&mut self.links)
     }
 
     /// Receive one gradient message from worker `xi`, reconstruct it through
@@ -186,18 +166,12 @@ impl<D: Duplex> Cluster for MessageCluster<D> {
     ) -> Result<()> {
         self.fan_out(&Message::EpochBegin {
             epoch: epoch as u32,
+            reply: 1, // lockstep: everyone uplinks every epoch
         })?;
         for (i, link) in self.links.iter_mut().enumerate() {
-            match link.recv()? {
-                Message::GradRaw { g } => {
-                    if g.len() != self.d {
-                        bail!("worker {i}: gradient dim {}", g.len());
-                    }
-                    self.ledger.record_uplink(64 * self.d as u64);
-                    node_g[i].copy_from_slice(&g);
-                }
-                other => bail!("worker {i}: expected GradRaw, got {other:?}"),
-            }
+            let g = protocol::parse_grad_raw(link.recv()?, self.d, i)?;
+            self.ledger.record_uplink(64 * self.d as u64);
+            node_g[i].copy_from_slice(&g);
         }
         Ok(())
     }
@@ -248,16 +222,12 @@ impl<D: Duplex> Cluster for MessageCluster<D> {
             bail!("inner_delta on a quantized cluster");
         }
         self.links[xi].send(Message::InnerDeltaRequest)?;
-        match self.links[xi].recv()? {
-            Message::GradDelta { idx, val } => {
-                Message::validate_delta(&idx, &val, self.d)
-                    .with_context(|| format!("worker {xi}: malformed GradDelta"))?;
-                self.ledger.record_uplink(Message::delta_bits(idx.len()));
-                delta.idx = idx;
-                delta.val = val;
-            }
-            other => bail!("worker {xi}: expected GradDelta, got {other:?}"),
-        }
+        // lockstep ignores the basis tag: the strict request/reply schedule
+        // guarantees basis == applied count, so there is nothing to gate
+        let (_basis, sv) = protocol::parse_grad_delta(self.links[xi].recv()?, self.d, xi)?;
+        self.ledger.record_uplink(Message::delta_bits(sv.idx.len()));
+        delta.idx = sv.idx;
+        delta.val = sv.val;
         // broadcast the delta so every worker (ξ included) advances its
         // replica identically; metered once
         self.ledger.record_downlink(Message::delta_bits(delta.len()));
@@ -335,10 +305,7 @@ impl<D: Duplex> Cluster for MessageCluster<D> {
         self.fan_out(&Message::QueryLoss)?;
         let mut acc = 0.0;
         for (i, link) in self.links.iter_mut().enumerate() {
-            match link.recv()? {
-                Message::LossValue { loss } => acc += loss,
-                other => bail!("worker {i}: expected LossValue, got {other:?}"),
-            }
+            acc += protocol::parse_loss(link.recv()?, i)?;
         }
         Ok(acc / self.links.len() as f64)
     }

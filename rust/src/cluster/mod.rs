@@ -29,6 +29,19 @@
 //!   Every collective issues its send to **all** links before blocking on
 //!   any receive, so workers compute concurrently.
 //!
+//! **Two drivers, one protocol.** The message-passing masters share the
+//! verb layer in [`protocol`] (handshake construction, fan-out, reply
+//! parsing) and differ only in *scheduling*: [`MessageCluster`] is the
+//! **lockstep** driver — every worker, every turn, replies awaited in link
+//! order, bit-identical across backends — while [`AsyncCluster`] is the
+//! **elastic** driver (`--mode async`): bounded-staleness delta pipelining,
+//! K-of-N partial participation with an unbiased cached-gradient estimator,
+//! and churn (deadline receives, dead-link reweighting, epoch-boundary
+//! rejoin). At `quorum = N`, `staleness = 0` the elastic driver degenerates
+//! to the lockstep schedule bit-for-bit, which is how it is verified
+//! (`rust/tests/async_cluster.rs`); away from that corner it is pinned by
+//! tolerance suites on strongly-convex problems.
+//!
 //! **Determinism.** All three backends derive their randomness from one root
 //! rng through the fixed streams in [`crate::rng`] (`algo_stream` for the
 //! master's ξ/ζ draws, `quant_stream` for downlink URQ rounding,
@@ -51,10 +64,16 @@
 //! [`crate::quant::Compressor`] (`--compressor urq|diana`), held identically
 //! by the in-process channel, the message-passing master, and every worker.
 
+pub mod async_driver;
 pub mod in_process;
 pub mod message;
+pub mod protocol;
 pub mod threaded;
 
+pub use async_driver::{
+    run_svrg_async, spawn_async_native, spawn_native_worker, AsyncCluster, AsyncOpts, AsyncStats,
+    QuorumSelect,
+};
 pub use in_process::InProcessCluster;
 pub use message::MessageCluster;
 pub use threaded::ThreadedCluster;

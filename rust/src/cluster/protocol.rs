@@ -1,0 +1,184 @@
+//! The master-side **protocol core**: the verbs both drivers speak, with no
+//! schedule attached.
+//!
+//! PR 6 split the cluster layer in two. This module owns what is common to
+//! every master — building the `Config` handshake from the run's resolved
+//! identity, fanning a broadcast across links, and parsing/validating each
+//! reply kind — while the *schedule* (who is asked, in what order, and what
+//! happens when someone is slow or gone) lives in the drivers:
+//!
+//! * [`super::MessageCluster`] — the **lockstep** driver: every worker is
+//!   asked every turn and every reply is awaited in link order. Bit-identical
+//!   across backends; the verification oracle.
+//! * [`super::async_driver::AsyncCluster`] — the **elastic** driver:
+//!   bounded-staleness pipelining, K-of-N quorum rounds, and churn
+//!   (timeouts / dead links / rejoin) on the *same* verbs.
+//!
+//! Keeping the verbs here means a wire-format or handshake change lands in
+//! one place and both drivers inherit it — they can disagree about time, not
+//! about meaning.
+
+use anyhow::{bail, Context, Result};
+
+use crate::algorithms::channel::QuantOpts;
+use crate::data::DataFingerprint;
+use crate::linalg::SparseVec;
+use crate::transport::{Duplex, Message, PROTO_VERSION};
+
+/// Build the `Config` handshake for a run: protocol version, quantization
+/// identity (0s = unquantized) and the resolved data fingerprint. Every
+/// master sends exactly this as a link's first message — at connect for the
+/// initial fleet, and again at re-admission when a worker rejoins mid-run
+/// (the fingerprint check is what makes churn *safe*: a rejoiner with
+/// different data is refused, not averaged in).
+pub fn config_message(quant: Option<&QuantOpts>, fp: &DataFingerprint) -> Message {
+    Message::Config {
+        version: PROTO_VERSION,
+        compressor: quant.map_or(0, |q| q.compressor.wire_id()),
+        bits: quant.map_or(0, |q| q.bits),
+        plus: quant.map_or(0, |q| q.plus as u8),
+        sparse: fp.sparse as u8,
+        n: fp.n,
+        d: fp.d,
+        lambda_bits: fp.lambda_bits,
+        data_hash: fp.content_hash,
+        policy_fp: quant.map_or(0, |q| q.policy.fingerprint()),
+    }
+}
+
+/// Send `msg` on every link, blocking on no receive in between (all workers
+/// compute concurrently).
+pub fn fan_out<D: Duplex>(links: &mut [D], msg: &Message) -> Result<()> {
+    for link in links.iter_mut() {
+        link.send(msg.clone())?;
+    }
+    Ok(())
+}
+
+/// Drain one `Ack` per link, in link order.
+pub fn collect_acks<D: Duplex>(links: &mut [D]) -> Result<()> {
+    for (i, link) in links.iter_mut().enumerate() {
+        expect_ack(link.recv()?, i)?;
+    }
+    Ok(())
+}
+
+/// Parse an expected `Ack` from worker `who`.
+pub fn expect_ack(msg: Message, who: usize) -> Result<()> {
+    match msg {
+        Message::Ack => Ok(()),
+        other => bail!("worker {who}: expected Ack, got {other:?}"),
+    }
+}
+
+/// Parse an expected `GradRaw` of dimension `d` from worker `who`.
+pub fn parse_grad_raw(msg: Message, d: usize, who: usize) -> Result<Vec<f64>> {
+    match msg {
+        Message::GradRaw { g } => {
+            if g.len() != d {
+                bail!("worker {who}: gradient dim {}", g.len());
+            }
+            Ok(g)
+        }
+        other => bail!("worker {who}: expected GradRaw, got {other:?}"),
+    }
+}
+
+/// Parse an expected `GradDelta` from worker `who`, validating the sparse
+/// payload against dimension `d` (parity, strictly-increasing in-range
+/// indices). Returns the basis version tag and the delta.
+pub fn parse_grad_delta(msg: Message, d: usize, who: usize) -> Result<(u32, SparseVec)> {
+    match msg {
+        Message::GradDelta { basis, idx, val } => {
+            Message::validate_delta(&idx, &val, d)
+                .with_context(|| format!("worker {who}: malformed GradDelta"))?;
+            Ok((basis, SparseVec { idx, val }))
+        }
+        other => bail!("worker {who}: expected GradDelta, got {other:?}"),
+    }
+}
+
+/// Parse an expected `LossValue` from worker `who`.
+pub fn parse_loss(msg: Message, who: usize) -> Result<f64> {
+    match msg {
+        Message::LossValue { loss } => Ok(loss),
+        other => bail!("worker {who}: expected LossValue, got {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reply_parsers_accept_expected_and_reject_others() {
+        assert!(expect_ack(Message::Ack, 0).is_ok());
+        assert!(expect_ack(Message::QueryLoss, 0).is_err());
+
+        let g = parse_grad_raw(Message::GradRaw { g: vec![1.0, 2.0] }, 2, 0).unwrap();
+        assert_eq!(g, vec![1.0, 2.0]);
+        // wrong dimension and wrong kind both refuse
+        assert!(parse_grad_raw(Message::GradRaw { g: vec![1.0] }, 2, 0).is_err());
+        assert!(parse_grad_raw(Message::Ack, 2, 0).is_err());
+
+        let (basis, sv) = parse_grad_delta(
+            Message::GradDelta {
+                basis: 3,
+                idx: vec![0, 4],
+                val: vec![0.5, -0.5],
+            },
+            5,
+            1,
+        )
+        .unwrap();
+        assert_eq!(basis, 3);
+        assert_eq!(sv.idx, vec![0, 4]);
+        // out-of-range index refused by the shared validator
+        assert!(parse_grad_delta(
+            Message::GradDelta {
+                basis: 0,
+                idx: vec![9],
+                val: vec![1.0],
+            },
+            5,
+            1,
+        )
+        .is_err());
+
+        assert!((parse_loss(Message::LossValue { loss: 0.25 }, 2).unwrap() - 0.25).abs() < 1e-15);
+        assert!(parse_loss(Message::Ack, 2).is_err());
+    }
+
+    #[test]
+    fn config_message_mirrors_fingerprint_and_quant() {
+        let fp = DataFingerprint {
+            n: 100,
+            d: 9,
+            sparse: false,
+            lambda_bits: 0.1f64.to_bits(),
+            content_hash: 0xABCD,
+        };
+        // unquantized: all quant fields zero
+        match config_message(None, &fp) {
+            Message::Config {
+                version,
+                compressor,
+                bits,
+                plus,
+                sparse,
+                n,
+                d,
+                lambda_bits,
+                data_hash,
+                policy_fp,
+            } => {
+                assert_eq!(version, PROTO_VERSION);
+                assert_eq!((compressor, bits, plus, policy_fp), (0, 0, 0, 0));
+                assert_eq!((sparse, n, d), (0, 100, 9));
+                assert_eq!(lambda_bits, 0.1f64.to_bits());
+                assert_eq!(data_hash, 0xABCD);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}

@@ -39,6 +39,32 @@ impl std::str::FromStr for Backend {
     }
 }
 
+/// Cluster scheduling discipline for distributed runs
+/// (`--mode sync|async`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunMode {
+    /// Lockstep: every worker is asked every turn and every reply is awaited
+    /// in link order. Bit-identical across backends; the verification
+    /// oracle.
+    Sync,
+    /// Elastic ([`crate::cluster::AsyncCluster`]): bounded-staleness delta
+    /// pipelining (`--staleness`), K-of-N partial participation
+    /// (`--quorum`), and churn-tolerant links. Unquantized SVRG family on
+    /// the threaded backend only.
+    Async,
+}
+
+impl std::str::FromStr for RunMode {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "sync" => Ok(RunMode::Sync),
+            "async" => Ok(RunMode::Async),
+            other => bail!("unknown mode {other:?} (sync|async)"),
+        }
+    }
+}
+
 /// Full training configuration (CLI flags and TOML files both land here).
 #[derive(Clone, Debug)]
 pub struct TrainConfig {
@@ -73,6 +99,14 @@ pub struct TrainConfig {
     pub n_samples: usize,
     /// Gradient backend.
     pub backend: Backend,
+    /// Scheduling discipline: lockstep (`sync`) or elastic (`async`).
+    pub mode: RunMode,
+    /// Async mode: workers asked for fresh snapshot gradients per epoch
+    /// (0 = all of them, i.e. full participation).
+    pub quorum: usize,
+    /// Async mode: maximum inner-step staleness `s` of an applied delta
+    /// (0 = lockstep schedule).
+    pub staleness: usize,
     /// Where to write traces (empty = stdout summary only).
     pub out_dir: String,
 }
@@ -95,6 +129,9 @@ impl Default for TrainConfig {
             format: FeatureFormat::Auto,
             n_samples: 20_000,
             backend: Backend::Native,
+            mode: RunMode::Sync,
+            quorum: 0,
+            staleness: 0,
             out_dir: String::new(),
         }
     }
@@ -123,6 +160,9 @@ impl TrainConfig {
                 "format" => cfg.format = v.as_str().context("format")?.parse()?,
                 "n_samples" => cfg.n_samples = v.as_usize().context("n_samples")?,
                 "backend" => cfg.backend = v.as_str().context("backend")?.parse()?,
+                "mode" => cfg.mode = v.as_str().context("mode")?.parse()?,
+                "quorum" => cfg.quorum = v.as_usize().context("quorum")?,
+                "staleness" => cfg.staleness = v.as_usize().context("staleness")?,
                 "out_dir" => cfg.out_dir = v.as_str().context("out_dir")?.to_string(),
                 other => bail!("unknown config key {other:?}"),
             }
@@ -146,6 +186,16 @@ impl TrainConfig {
         }
         if !(self.lambda > 0.0) {
             bail!("lambda must be positive (strong convexity needs the ridge)");
+        }
+        if self.quorum > self.n_workers {
+            bail!(
+                "quorum {} exceeds n_workers {} (0 means full participation)",
+                self.quorum,
+                self.n_workers
+            );
+        }
+        if self.mode == RunMode::Sync && (self.quorum != 0 || self.staleness != 0) {
+            bail!("quorum/staleness require --mode async (sync is lockstep by definition)");
         }
         Ok(())
     }
@@ -214,6 +264,41 @@ mod tests {
         for c in cases {
             assert!(c.validate().is_err(), "{c:?} should be rejected");
         }
+    }
+
+    #[test]
+    fn mode_parse_and_elastic_knobs() {
+        assert_eq!("sync".parse::<RunMode>().unwrap(), RunMode::Sync);
+        assert_eq!("async".parse::<RunMode>().unwrap(), RunMode::Async);
+        assert!("lockstep".parse::<RunMode>().is_err());
+
+        let t = parse(
+            r#"
+            mode = "async"
+            quorum = 2
+            staleness = 4
+            "#,
+        )
+        .unwrap();
+        let cfg = TrainConfig::from_toml(&t).unwrap();
+        assert_eq!(cfg.mode, RunMode::Async);
+        assert_eq!(cfg.quorum, 2);
+        assert_eq!(cfg.staleness, 4);
+
+        // the elastic knobs are async-only, and a quorum cannot exceed the
+        // fleet
+        let sync_with_quorum = TrainConfig {
+            quorum: 2,
+            ..TrainConfig::default()
+        };
+        assert!(sync_with_quorum.validate().is_err());
+        let oversize = TrainConfig {
+            mode: RunMode::Async,
+            quorum: 9,
+            n_workers: 4,
+            ..TrainConfig::default()
+        };
+        assert!(oversize.validate().is_err());
     }
 
     #[test]

@@ -212,8 +212,8 @@ impl Dataset {
         match &self.feats {
             Features::Dense(x) => x,
             Features::Csr(_) => panic!(
-                "Dataset::x(): dense access on CSR storage — dispatch on feats() \
-                 or convert with to_dense()"
+                "Dataset::x(): dense access on CSR storage (this Dataset holds \
+                 Features::Csr) — dispatch on feats() or convert with to_dense()"
             ),
         }
     }
@@ -221,7 +221,13 @@ impl Dataset {
     /// Dense row `i`. Panics on CSR storage (see [`Self::x`]).
     #[inline]
     pub fn row(&self, i: usize) -> &[f64] {
-        &self.x()[i * self.d..(i + 1) * self.d]
+        match &self.feats {
+            Features::Dense(x) => &x[i * self.d..(i + 1) * self.d],
+            Features::Csr(_) => panic!(
+                "Dataset::row({i}): dense access on CSR storage (this Dataset holds \
+                 Features::Csr) — dispatch on feats() or convert with to_dense()"
+            ),
+        }
     }
 
     /// Copy with dense storage (no-op copy if already dense).
@@ -679,6 +685,12 @@ mod tests {
     #[should_panic(expected = "dense access on CSR storage")]
     fn dense_accessor_panics_on_sparse() {
         let _ = toy_sparse().x();
+    }
+
+    #[test]
+    #[should_panic(expected = "Features::Csr")]
+    fn dense_row_accessor_panics_on_sparse_and_names_the_storage() {
+        let _ = toy_sparse().row(0);
     }
 
     #[test]

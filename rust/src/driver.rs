@@ -17,8 +17,11 @@ use crate::algorithms::full_gradient::{run_gd, GdOpts};
 use crate::algorithms::stochastic::{run_sag, run_sgd, StochasticOpts};
 use crate::algorithms::svrg::{run_svrg, SvrgOpts};
 use crate::algorithms::{QuantOpts, ShardedObjective, SolverKind};
-use crate::cluster::{Cluster, InProcessCluster, ThreadedCluster};
-use crate::config::{Backend, TrainConfig};
+use crate::cluster::{
+    run_svrg_async, spawn_async_native, AsyncOpts, AsyncStats, Cluster, InProcessCluster,
+    ThreadedCluster,
+};
+use crate::config::{Backend, RunMode, TrainConfig};
 use crate::data::Dataset;
 use crate::metrics::{f1_dataset, CommLedger, RunTrace, TracePoint};
 use crate::quant::{AdaptivePolicy, GridPolicy};
@@ -107,7 +110,12 @@ pub fn train_with_test(
     };
 
     let (w, saturations) = match cfg.backend {
-        Backend::Native => run_centralized(kind, cfg, &prob, quant, &root, &mut eval)?,
+        Backend::Native => {
+            if cfg.mode == RunMode::Async {
+                bail!("--mode async needs real links to be elastic over (use backend=threaded)");
+            }
+            run_centralized(kind, cfg, &prob, quant, &root, &mut eval)?
+        }
         Backend::Threaded | Backend::Xla => {
             if !kind.is_svrg_family() {
                 bail!(
@@ -117,9 +125,26 @@ pub fn train_with_test(
                     kind.name()
                 );
             }
-            let use_xla = cfg.backend == Backend::Xla;
-            let (w, ledger) = run_distributed(kind, cfg, train, quant, &root, &mut eval, use_xla)?;
-            (w, ledger.saturations)
+            if cfg.mode == RunMode::Async {
+                if kind.is_quantized() {
+                    bail!(
+                        "--mode async speaks the unquantized sparse-delta protocol \
+                         (partial participation would desynchronize replicated grids); \
+                         {} is quantized — use svrg or m-svrg",
+                        kind.name()
+                    );
+                }
+                if cfg.backend == Backend::Xla {
+                    bail!("--mode async drives native workers only (use backend=threaded)");
+                }
+                let (w, ledger, _stats) = run_distributed_async(kind, cfg, train, &root, &mut eval)?;
+                (w, ledger.saturations)
+            } else {
+                let use_xla = cfg.backend == Backend::Xla;
+                let (w, ledger) =
+                    run_distributed(kind, cfg, train, quant, &root, &mut eval, use_xla)?;
+                (w, ledger.saturations)
+            }
         }
     };
     drop(eval);
@@ -249,6 +274,49 @@ pub fn run_distributed(
     let ledger = cluster.ledger().clone();
     cluster.shutdown()?;
     Ok((w, ledger))
+}
+
+/// Run the elastic async runtime (`--mode async`): native worker threads
+/// over local duplex links under the [`crate::cluster::AsyncCluster`]
+/// scheduler. Returns the final snapshot, the master-side ledger, and the
+/// run's elasticity counters. At `quorum = 0` (full participation) and
+/// `staleness = 0` this produces the lockstep run bit-for-bit.
+pub fn run_distributed_async(
+    kind: SolverKind,
+    cfg: &TrainConfig,
+    train: &Dataset,
+    root: &Xoshiro256pp,
+    eval: &mut dyn FnMut(usize, &[f64], f64, u64),
+) -> Result<(Vec<f64>, CommLedger, AsyncStats)> {
+    let aopts = AsyncOpts {
+        quorum: cfg.quorum,
+        staleness: cfg.staleness,
+        ..AsyncOpts::default()
+    };
+    let (mut cluster, handles) =
+        spawn_async_native(train, cfg.n_workers, cfg.lambda, root, aopts)?;
+    let w = run_svrg_async(
+        &mut cluster,
+        &SvrgOpts {
+            step: cfg.step_size,
+            epoch_len: cfg.epoch_len,
+            outer_iters: cfg.outer_iters,
+            memory_unit: kind.has_memory_unit(),
+        },
+        root.algo_stream(),
+        eval,
+        None,
+    )?;
+    let ledger = cluster.ledger().clone();
+    let stats = cluster.stats;
+    cluster.shutdown();
+    // elastic semantics: a worker that died mid-run already shrank the live
+    // set by design, so joins only wait for termination — they don't fail
+    // the run
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok((w, ledger, stats))
 }
 
 #[cfg(test)]
@@ -404,6 +472,58 @@ mod tests {
             "adaptive {} vs narrow-fixed {}",
             wide.saturations,
             report.saturations
+        );
+    }
+
+    #[test]
+    fn async_degenerate_bitwise_matches_sync() {
+        // --mode async --quorum 0 --staleness 0 is the lockstep schedule:
+        // same seed, same trace, same iterate, same measured bits
+        let ds = ds();
+        let mut c = cfg("m-svrg", 12);
+        c.backend = Backend::Threaded;
+        let sync = train(&c, &ds).unwrap();
+        c.mode = crate::config::RunMode::Async;
+        let asynch = train(&c, &ds).unwrap();
+        assert_eq!(sync.trace.points.len(), asynch.trace.points.len());
+        for (a, b) in sync.trace.points.iter().zip(&asynch.trace.points) {
+            assert_eq!(a.loss.to_bits(), b.loss.to_bits());
+            assert_eq!(a.grad_norm.to_bits(), b.grad_norm.to_bits());
+            assert_eq!(a.bits, b.bits);
+        }
+        assert_eq!(sync.w, asynch.w);
+    }
+
+    #[test]
+    fn async_mode_rejects_unsupported_combinations() {
+        let ds = ds();
+        // quantized algorithms stay on the lockstep driver
+        let mut c = cfg("qm-svrg-a+", 3);
+        c.backend = Backend::Threaded;
+        c.mode = crate::config::RunMode::Async;
+        assert!(train(&c, &ds).is_err());
+        // the native backend has no links to be elastic over
+        let mut c = cfg("svrg", 3);
+        c.mode = crate::config::RunMode::Async;
+        assert!(train(&c, &ds).is_err());
+    }
+
+    #[test]
+    fn async_partial_participation_still_descends() {
+        // a strict sub-live quorum with staleness through the full driver:
+        // not bitwise anything, but it must run and contract
+        let ds = ds();
+        let mut c = cfg("svrg", 25);
+        c.backend = Backend::Threaded;
+        c.mode = crate::config::RunMode::Async;
+        c.quorum = 2; // of 4
+        c.staleness = 2;
+        let report = train(&c, &ds).unwrap();
+        let first = report.trace.points[0].grad_norm;
+        let last = report.trace.points.last().unwrap().grad_norm;
+        assert!(
+            last < first * 1e-2,
+            "async K-of-N stalled: {first} -> {last}"
         );
     }
 

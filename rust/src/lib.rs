@@ -55,8 +55,10 @@ pub mod worker;
 /// Convenience re-exports for downstream users.
 pub mod prelude {
     pub use crate::algorithms::{Algorithm, LazyIterate, SolverKind};
-    pub use crate::cluster::{Cluster, InProcessCluster, MessageCluster, ThreadedCluster};
-    pub use crate::config::{Backend, TrainConfig};
+    pub use crate::cluster::{
+        AsyncCluster, AsyncOpts, Cluster, InProcessCluster, MessageCluster, ThreadedCluster,
+    };
+    pub use crate::config::{Backend, RunMode, TrainConfig};
     pub use crate::data::{DataFingerprint, Dataset, FeatureFormat, Features};
     pub use crate::linalg::{CsrMatrix, SparseVec};
     pub use crate::metrics::{RunTrace, TracePoint};

@@ -80,7 +80,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     args.reject_unknown(&[
         "algorithm", "dataset", "samples", "workers", "epoch-len", "iters", "step", "bits",
         "lambda", "seed", "backend", "out", "digit", "fixed-radius", "slack", "config",
-        "compressor", "format",
+        "compressor", "format", "mode", "quorum", "staleness",
     ])?;
     // start from a TOML config file when given, then apply CLI overrides
     let base = match args.get("config") {
@@ -115,6 +115,12 @@ fn cmd_train(args: &Args) -> Result<()> {
             Some(b) => b.parse()?,
             None => base.backend,
         },
+        mode: match args.get("mode") {
+            Some(m) => m.parse()?,
+            None => base.mode,
+        },
+        quorum: args.get_usize("quorum", base.quorum)?,
+        staleness: args.get_usize("staleness", base.staleness)?,
         out_dir: args.get_or("out", &base.out_dir),
     };
     cfg.validate()?;

@@ -12,6 +12,7 @@
 //! `‖z_i‖²`, so `L = (1/n)Σ‖z_i‖² + 2λ` bounds the Hessian and `μ = 2λ`.
 
 use super::Objective;
+use crate::data::{Dataset, Features};
 use crate::linalg;
 
 #[derive(Clone, Debug)]
@@ -42,6 +43,17 @@ impl SmoothedHingeRidge {
             d,
             lambda,
             l_smooth,
+        }
+    }
+
+    /// Storage-agnostic constructor: works for both `Features::Dense` and
+    /// `Features::Csr` datasets (the margin table is dense either way, so
+    /// sparse features are densified here rather than via `Dataset::x()`,
+    /// which panics on CSR storage).
+    pub fn from_dataset(ds: &Dataset, lambda: f64) -> Self {
+        match ds.feats() {
+            Features::Dense(x) => Self::new(x, &ds.y, ds.n, ds.d, lambda),
+            Features::Csr(m) => Self::new(&m.to_dense(), &ds.y, ds.n, ds.d, lambda),
         }
     }
 
@@ -176,13 +188,43 @@ mod tests {
     }
 
     #[test]
+    fn from_dataset_is_storage_agnostic() {
+        use crate::data::Dataset;
+        use crate::linalg::CsrMatrix;
+        let x = vec![
+            1.0, 0.0, 0.5, //
+            0.0, -1.2, 0.0, //
+            0.3, 0.0, 0.0, //
+            0.0, 0.7, -0.4,
+        ];
+        let y = vec![1.0, -1.0, 1.0, -1.0];
+        let dense = Dataset::new(x.clone(), y.clone(), 4, 3).unwrap();
+        let sparse = Dataset::from_csr(CsrMatrix::from_dense(&x, 4, 3), y).unwrap();
+        let a = SmoothedHingeRidge::from_dataset(&dense, 0.1);
+        let b = SmoothedHingeRidge::from_dataset(&sparse, 0.1);
+        let w = [0.2, -0.3, 0.15];
+        assert_eq!(a.loss(&w).to_bits(), b.loss(&w).to_bits());
+        assert_eq!(
+            a.grad_vec(&w)
+                .iter()
+                .map(|v| v.to_bits())
+                .collect::<Vec<_>>(),
+            b.grad_vec(&w)
+                .iter()
+                .map(|v| v.to_bits())
+                .collect::<Vec<_>>()
+        );
+        assert_eq!(a.l_smooth().to_bits(), b.l_smooth().to_bits());
+    }
+
+    #[test]
     fn svrg_trains_hinge_objective() {
         // end-to-end: the GD baseline drives the hinge loss to stationarity,
         // demonstrating the Objective API is not logistic-specific
         use crate::data::synthetic::power_like;
         let mut ds = power_like(500, 3);
         ds.standardize();
-        let obj = SmoothedHingeRidge::new(ds.x(), &ds.y, ds.n, ds.d, 0.1);
+        let obj = SmoothedHingeRidge::from_dataset(&ds, 0.1);
         let mut w = vec![0.0; ds.d];
         let mut g = vec![0.0; ds.d];
         let step = 1.0 / obj.l_smooth();

@@ -15,6 +15,7 @@
 /// sequences and produce bit-identical traces from the same seed.
 const STREAM_ALGO: u64 = 0xA160_0001;
 const STREAM_MASTER_QUANT: u64 = 0xA160_0002;
+const STREAM_QUORUM: u64 = 0xA160_0003;
 const STREAM_WORKER_BASE: u64 = 0x574B_0000_0000;
 
 /// splitmix64 — used to expand seeds and to derive split streams.
@@ -72,6 +73,14 @@ impl Xoshiro256pp {
     /// The master's downlink URQ rounding stream.
     pub fn quant_stream(&self) -> Self {
         self.split(STREAM_MASTER_QUANT)
+    }
+
+    /// The async driver's K-of-N quorum sampling stream. A stream of its own
+    /// so partial participation never perturbs the ξ/ζ draws of
+    /// `algo_stream` — at K = N (no quorum draws at all) the algo stream is
+    /// untouched and the async schedule degenerates bitwise to lockstep.
+    pub fn quorum_stream(&self) -> Self {
+        self.split(STREAM_QUORUM)
     }
 
     /// Worker `i`'s uplink URQ rounding stream. One stream per worker, so

@@ -2,7 +2,8 @@
 //! `std::sync::mpsc` channels. This is what the single-process coordinator
 //! uses (one worker thread per shard).
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::Duration;
 
 use anyhow::{anyhow, Result};
 
@@ -35,6 +36,14 @@ impl Duplex for LocalDuplex {
         self.rx
             .recv()
             .map_err(|_| anyhow!("peer disconnected (recv)"))
+    }
+
+    fn recv_deadline(&mut self, timeout: Duration) -> Result<Option<Message>> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(msg) => Ok(Some(msg)),
+            Err(RecvTimeoutError::Timeout) => Ok(None),
+            Err(RecvTimeoutError::Disconnected) => Err(anyhow!("peer disconnected (recv)")),
+        }
     }
 }
 
@@ -83,10 +92,29 @@ mod tests {
     fn messages_preserve_order() {
         let (mut a, mut b) = pair();
         for i in 0..100u32 {
-            a.send(Message::EpochBegin { epoch: i }).unwrap();
+            a.send(Message::EpochBegin { epoch: i, reply: 1 }).unwrap();
         }
         for i in 0..100u32 {
-            assert_eq!(b.recv().unwrap(), Message::EpochBegin { epoch: i });
+            assert_eq!(b.recv().unwrap(), Message::EpochBegin { epoch: i, reply: 1 });
         }
+    }
+
+    #[test]
+    fn recv_deadline_times_out_cleanly_then_delivers() {
+        let (mut master, mut worker) = pair();
+        // nothing queued: a short deadline returns Ok(None), not an error
+        assert!(master
+            .recv_deadline(Duration::from_millis(5))
+            .unwrap()
+            .is_none());
+        // the link is still usable afterwards
+        worker.send(Message::Ack).unwrap();
+        assert_eq!(
+            master.recv_deadline(Duration::from_secs(5)).unwrap(),
+            Some(Message::Ack)
+        );
+        // disconnect is an error, not a timeout
+        drop(worker);
+        assert!(master.recv_deadline(Duration::from_millis(5)).is_err());
     }
 }

@@ -31,7 +31,15 @@ use anyhow::{bail, Result};
 /// content hash of the standardized features) so *any* master/worker
 /// `--dataset/--samples/--seed/--lambda/--format` mismatch is refused at
 /// connect instead of silently diverging the run.
-pub const PROTO_VERSION: u16 = 4;
+/// v5: the elastic async driver landed — `EpochBegin` gained the `reply`
+/// flag (partial-participation rounds broadcast the epoch to every live
+/// replica but only ask the sampled quorum to uplink), `GradDelta` gained
+/// the `basis` version tag (the inner-step count the delta was computed
+/// against, so the master can reject over-stale contributions), and
+/// `SnapshotSet` was added (master → rejoining worker state sync: the
+/// current and previous snapshots, so a post-rejoin `EpochRevert` restores
+/// the same iterate the engine does).
+pub const PROTO_VERSION: u16 = 5;
 
 /// Ledger bits of one sparse-delta coordinate on the wire: a 32-bit column
 /// index plus a 64-bit value (`GradDelta`/`DeltaApply` carry
@@ -83,9 +91,13 @@ pub enum Message {
         /// identical parameters, not just the same policy class.
         policy_fp: u64,
     },
-    /// Start epoch `epoch`: compute and uplink the node gradient at the
-    /// current snapshot.
-    EpochBegin { epoch: u32 },
+    /// Start epoch `epoch`: compute the node gradient at the current
+    /// snapshot. `reply = 1` asks the worker to uplink it as a `GradRaw`
+    /// (the lockstep driver always does); `reply = 0` (async
+    /// partial-participation rounds) refreshes the worker's local
+    /// `g_snapshot` replica without paying the 64·d uplink — the sampled
+    /// quorum uplinks, everyone else only keeps their replica consistent.
+    EpochBegin { epoch: u32, reply: u8 },
     /// Memory unit rejected the new snapshot: restore the previous one and
     /// re-cache its node gradient.
     EpochRevert,
@@ -119,6 +131,13 @@ pub enum Message {
     QueryLoss,
     /// Terminate the worker loop.
     Shutdown,
+    /// Churn re-admission state sync (master → rejoining worker, after the
+    /// `Config` handshake re-validates the data fingerprint): the engine's
+    /// current snapshot `w` and the previous accepted snapshot `prev`.
+    /// Both are needed — a memory-unit `EpochRevert` in the worker's first
+    /// post-rejoin epoch must restore the same iterate the engine restores.
+    /// Metered 64·(|w| + |prev|) bits (real downlink payload).
+    SnapshotSet { w: Vec<f64>, prev: Vec<f64> },
 
     // ---- worker -> master
     /// Exact node gradient (outer loop; 64d bits on the ledger).
@@ -131,9 +150,18 @@ pub enum Message {
     GradQ { payload: Vec<u8>, bits: u64, sats: u32 },
     /// Worker ξ's fused sparse gradient delta (logistic part of
     /// `g_ξ(w_t) − g_ξ(w̃_k)` over the shard's column support; the ridge
-    /// part is analytic and never shipped). 96 bits per coordinate on the
-    /// ledger.
-    GradDelta { idx: Vec<u32>, val: Vec<f64> },
+    /// part is analytic and never shipped). `basis` is the worker's lazy
+    /// replay position (`LazyIterate::t`) when the delta was computed — the
+    /// async master rejects a delta whose basis is more than the staleness
+    /// window behind its own applied count; the lockstep driver ignores it
+    /// (its request/reply schedule makes basis == applied count always).
+    /// 96 bits per coordinate on the ledger; the basis tag rides free like
+    /// every other scalar header field.
+    GradDelta {
+        basis: u32,
+        idx: Vec<u32>,
+        val: Vec<f64>,
+    },
     /// Loss over this worker's shard (instrumentation).
     LossValue { loss: f64 },
     /// Generic acknowledgement.
@@ -160,6 +188,7 @@ impl Message {
     const TAG_INNER_DELTA_REQUEST: u8 = 16;
     const TAG_GRAD_DELTA: u8 = 17;
     const TAG_DELTA_APPLY: u8 = 18;
+    const TAG_SNAPSHOT_SET: u8 = 19;
 
     /// Ledger bits of a sparse delta with `nnz` stored coordinates.
     #[inline]
@@ -216,9 +245,10 @@ impl Message {
                 b.extend_from_slice(&data_hash.to_le_bytes());
                 b.extend_from_slice(&policy_fp.to_le_bytes());
             }
-            Message::EpochBegin { epoch } => {
+            Message::EpochBegin { epoch, reply } => {
                 b.push(Self::TAG_EPOCH_BEGIN);
                 b.extend_from_slice(&epoch.to_le_bytes());
+                b.push(*reply);
             }
             Message::EpochRevert => b.push(Self::TAG_EPOCH_REVERT),
             Message::EpochCommit { gnorm } => {
@@ -232,8 +262,9 @@ impl Message {
                 encode_f64s(&mut b, g_tilde);
             }
             Message::InnerDeltaRequest => b.push(Self::TAG_INNER_DELTA_REQUEST),
-            Message::GradDelta { idx, val } => {
+            Message::GradDelta { basis, idx, val } => {
                 b.push(Self::TAG_GRAD_DELTA);
+                b.extend_from_slice(&basis.to_le_bytes());
                 encode_delta(&mut b, idx, val);
             }
             Message::DeltaApply { idx, val } => {
@@ -252,6 +283,11 @@ impl Message {
             }
             Message::QueryLoss => b.push(Self::TAG_QUERY_LOSS),
             Message::Shutdown => b.push(Self::TAG_SHUTDOWN),
+            Message::SnapshotSet { w, prev } => {
+                b.push(Self::TAG_SNAPSHOT_SET);
+                encode_f64s(&mut b, w);
+                encode_f64s(&mut b, prev);
+            }
             Message::GradRaw { g } => {
                 b.push(Self::TAG_GRAD_RAW);
                 encode_f64s(&mut b, g);
@@ -293,7 +329,10 @@ impl Message {
                 data_hash: r.u64()?,
                 policy_fp: r.u64()?,
             },
-            Self::TAG_EPOCH_BEGIN => Message::EpochBegin { epoch: r.u32()? },
+            Self::TAG_EPOCH_BEGIN => Message::EpochBegin {
+                epoch: r.u32()?,
+                reply: r.u8()?,
+            },
             Self::TAG_EPOCH_REVERT => Message::EpochRevert,
             Self::TAG_EPOCH_COMMIT => Message::EpochCommit { gnorm: r.f64()? },
             Self::TAG_INNER_REQUEST => Message::InnerRequest,
@@ -303,8 +342,9 @@ impl Message {
             },
             Self::TAG_INNER_DELTA_REQUEST => Message::InnerDeltaRequest,
             Self::TAG_GRAD_DELTA => {
+                let basis = r.u32()?;
                 let (idx, val) = r.delta()?;
-                Message::GradDelta { idx, val }
+                Message::GradDelta { basis, idx, val }
             }
             Self::TAG_DELTA_APPLY => {
                 let (idx, val) = r.delta()?;
@@ -321,6 +361,10 @@ impl Message {
             Self::TAG_SNAPSHOT_CHOOSE => Message::SnapshotChoose { zeta: r.u32()? },
             Self::TAG_QUERY_LOSS => Message::QueryLoss,
             Self::TAG_SHUTDOWN => Message::Shutdown,
+            Self::TAG_SNAPSHOT_SET => Message::SnapshotSet {
+                w: r.f64s()?,
+                prev: r.f64s()?,
+            },
             Self::TAG_GRAD_RAW => Message::GradRaw { g: r.f64s()? },
             Self::TAG_GRAD_Q => {
                 let bits = r.u64()?;
@@ -355,6 +399,8 @@ impl Message {
             Message::GradDelta { idx, .. } | Message::DeltaApply { idx, .. } => {
                 Self::delta_bits(idx.len())
             }
+            // churn state sync ships two raw snapshots to the rejoiner
+            Message::SnapshotSet { w, prev } => 64 * (w.len() + prev.len()) as u64,
             _ => 0,
         }
     }
@@ -458,6 +504,16 @@ impl<'a> Reader<'a> {
 pub trait Duplex: Send {
     fn send(&mut self, msg: Message) -> Result<()>;
     fn recv(&mut self) -> Result<Message>;
+
+    /// Receive with a deadline: `Ok(Some(msg))` on arrival, `Ok(None)` on a
+    /// clean timeout (no frame bytes consumed — the link is still usable),
+    /// `Err` on disconnect or a timeout that left a frame half-read. The
+    /// async driver's straggler detection is built on this; the default
+    /// blocks forever, which is exactly the lockstep behaviour.
+    fn recv_deadline(&mut self, timeout: std::time::Duration) -> Result<Option<Message>> {
+        let _ = timeout;
+        self.recv().map(Some)
+    }
 }
 
 #[cfg(test)]
@@ -478,7 +534,7 @@ mod tests {
                 data_hash: 0x0123_4567_89AB_CDEF,
                 policy_fp: 0xDEAD_BEEF_1234_5678,
             },
-            Message::EpochBegin { epoch: 7 },
+            Message::EpochBegin { epoch: 7, reply: 1 },
             Message::EpochRevert,
             Message::EpochCommit { gnorm: 0.125 },
             Message::InnerRequest,
@@ -488,6 +544,7 @@ mod tests {
             },
             Message::InnerDeltaRequest,
             Message::GradDelta {
+                basis: 12,
                 idx: vec![0, 7, 4095],
                 val: vec![0.5, -1.25, 1e-9],
             },
@@ -512,6 +569,10 @@ mod tests {
             },
             Message::LossValue { loss: 0.693 },
             Message::Ack,
+            Message::SnapshotSet {
+                w: vec![1.0, -2.5],
+                prev: vec![0.0, 0.5, 3.25],
+            },
         ]
     }
 
@@ -574,6 +635,7 @@ mod tests {
         // g̃ coordinate; the request is control
         assert_eq!(
             Message::GradDelta {
+                basis: 4,
                 idx: vec![1, 5, 9],
                 val: vec![0.0; 3]
             }
@@ -598,6 +660,15 @@ mod tests {
         );
         assert_eq!(Message::InnerDeltaRequest.ledger_bits(), 0);
         assert_eq!(Message::delta_bits(7), 7 * 96);
+        // churn state sync: two raw f64 vectors, 64 bits per coordinate
+        assert_eq!(
+            Message::SnapshotSet {
+                w: vec![0.0; 5],
+                prev: vec![0.0; 5]
+            }
+            .ledger_bits(),
+            640
+        );
     }
 
     #[test]
@@ -633,6 +704,7 @@ mod tests {
             assert_eq!(Message::decode(&msg.encode()).unwrap(), msg);
             let nnz = rng.gen_index(30);
             let msg = Message::GradDelta {
+                basis: rng.next_u64() as u32,
                 idx: (0..nnz).map(|_| rng.next_u64() as u32).collect(),
                 val: (0..nnz).map(|_| rng.gen_normal()).collect(),
             };

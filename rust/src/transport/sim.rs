@@ -79,6 +79,12 @@ impl<D: Duplex> SimDuplex<D> {
         }
     }
 
+    /// The link model this end charges against (read-only; tests and the
+    /// async driver's cost-ranked quorum selection use it).
+    pub fn model(&self) -> &LinkModel {
+        &self.model
+    }
+
     fn charge(&mut self, msg: &Message, sending: bool) {
         let bits = msg.ledger_bits();
         if bits == 0 {
@@ -106,6 +112,19 @@ impl<D: Duplex> Duplex for SimDuplex<D> {
         let msg = self.inner.recv()?;
         self.charge(&msg, false);
         Ok(msg)
+    }
+
+    fn recv_deadline(&mut self, timeout: std::time::Duration) -> Result<Option<Message>> {
+        // virtual time is charged only for messages that actually arrive; a
+        // timeout costs nothing on the model (the master was idle-waiting,
+        // not moving bits)
+        match self.inner.recv_deadline(timeout)? {
+            Some(msg) => {
+                self.charge(&msg, false);
+                Ok(Some(msg))
+            }
+            None => Ok(None),
+        }
     }
 }
 
@@ -153,6 +172,77 @@ mod tests {
         let _ = master.recv().unwrap();
         assert_eq!(master.uplink_bits, 128);
         assert!((master.virtual_time_s - 192.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn asymmetric_profile_costs_uplink_heavier_than_downlink() {
+        // the paper's §1 regime: the same payload is 10× slower up than down
+        let m = LinkModel::asymmetric_lte();
+        let bits = 64 * 1000; // a d=1000 raw gradient
+        let up = m.cost_s(bits, true);
+        let down = m.cost_s(bits, false);
+        assert!((up - (0.010 + 64_000.0 / 5e6)).abs() < 1e-12);
+        assert!((down - (0.010 + 64_000.0 / 50e6)).abs() < 1e-12);
+        assert!(up > down);
+        // symmetric profile: identical per direction
+        let s = LinkModel::symmetric_fast();
+        assert!((s.cost_s(bits, true) - s.cost_s(bits, false)).abs() < 1e-15);
+        assert!((s.cost_s(bits, true) - (0.0001 + 64_000.0 / 1e9)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn worker_end_meters_directions_mirrored() {
+        // the same traffic viewed from the worker end: a worker SEND is an
+        // uplink, a worker RECV is a downlink (mirror of the master end)
+        let (mut m_end, w_end) = pair();
+        let model = LinkModel {
+            latency_s: 0.0,
+            uplink_bps: 1.0,
+            downlink_bps: 2.0,
+        };
+        let mut worker = SimDuplex::new(w_end, model, false);
+        worker
+            .send(Message::GradRaw { g: vec![0.0, 1.0] })
+            .unwrap();
+        assert_eq!(worker.uplink_bits, 128);
+        assert_eq!(worker.downlink_bits, 0);
+        assert!((worker.virtual_time_s - 128.0).abs() < 1e-9);
+        let _ = m_end.recv().unwrap();
+        m_end
+            .send(Message::InnerSetup {
+                step: 0.2,
+                g_tilde: vec![0.0, 1.0],
+            })
+            .unwrap();
+        let _ = worker.recv().unwrap();
+        assert_eq!(worker.downlink_bits, 128);
+        assert!((worker.virtual_time_s - 192.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn recv_deadline_charges_only_on_arrival() {
+        let (m_end, mut w_end) = pair();
+        let model = LinkModel {
+            latency_s: 0.25,
+            uplink_bps: 1.0,
+            downlink_bps: 1.0,
+        };
+        let mut master = SimDuplex::new(m_end, model, true);
+        // timeout: no virtual time accrues
+        assert!(master
+            .recv_deadline(std::time::Duration::from_millis(5))
+            .unwrap()
+            .is_none());
+        assert_eq!(master.virtual_time_s, 0.0);
+        // arrival through the deadline path charges like a plain recv
+        w_end.send(Message::Ack).unwrap();
+        assert_eq!(
+            master
+                .recv_deadline(std::time::Duration::from_secs(5))
+                .unwrap(),
+            Some(Message::Ack)
+        );
+        assert_eq!(master.virtual_time_s, 0.25);
     }
 
     #[test]

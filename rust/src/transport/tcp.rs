@@ -4,8 +4,9 @@
 //! Frame format: `u32 little-endian length` + encoded message. Frames are
 //! capped to guard against corrupt peers.
 
-use std::io::{Read, Write};
+use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -73,6 +74,60 @@ impl Duplex for TcpDuplex {
         self.stream.read_exact(&mut body).context("read frame body")?;
         Message::decode(&body)
     }
+
+    fn recv_deadline(&mut self, timeout: Duration) -> Result<Option<Message>> {
+        // set_read_timeout(0) would mean "no timeout"; clamp up instead
+        let timeout = timeout.max(Duration::from_millis(1));
+        self.stream
+            .set_read_timeout(Some(timeout))
+            .context("set_read_timeout")?;
+        // read the 4-byte header one byte at a time so a clean timeout (no
+        // bytes consumed yet) is distinguishable from one that interrupted a
+        // frame mid-flight: the former leaves the stream aligned and returns
+        // Ok(None); the latter would desynchronize framing and is a hard
+        // error. TCP never splits our 4-byte header in practice (both frame
+        // parts are written with write_all on a nodelay stream), so a
+        // partial-header timeout only happens with a truly broken peer.
+        let mut hdr = [0u8; 4];
+        let mut got = 0usize;
+        let res = loop {
+            match self.stream.read(&mut hdr[got..]) {
+                Ok(0) => break Err(anyhow::anyhow!("peer closed connection")),
+                Ok(n) => {
+                    got += n;
+                    if got == 4 {
+                        break Ok(Some(()));
+                    }
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                    if got == 0 {
+                        break Ok(None); // clean timeout, stream still aligned
+                    }
+                    break Err(anyhow::anyhow!(
+                        "recv deadline expired mid-frame ({got}/4 header bytes) — link desynchronized"
+                    ));
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => break Err(e).context("read frame header"),
+            }
+        };
+        // restore blocking mode before the body read / the next plain recv
+        self.stream
+            .set_read_timeout(None)
+            .context("clear read_timeout")?;
+        match res? {
+            None => Ok(None),
+            Some(()) => {
+                let len = u32::from_le_bytes(hdr);
+                if len > MAX_FRAME {
+                    bail!("peer sent oversized frame: {len} bytes");
+                }
+                let mut body = vec![0u8; len as usize];
+                self.stream.read_exact(&mut body).context("read frame body")?;
+                Message::decode(&body).map(Some)
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -129,6 +184,34 @@ mod tests {
         };
         client.send(msg.clone()).unwrap();
         assert_eq!(client.recv().unwrap(), msg);
+        server.join().unwrap();
+    }
+
+    #[test]
+    fn recv_deadline_times_out_then_still_delivers() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let server = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut d = TcpDuplex::new(stream).unwrap();
+            rx.recv().unwrap(); // hold the reply until the client timed out once
+            d.send(Message::Ack).unwrap();
+            let _ = d.recv(); // wait for the client's shutdown before closing
+        });
+        let mut client = TcpDuplex::connect(&addr.to_string()).unwrap();
+        // nothing sent yet: clean timeout, link stays aligned
+        assert!(client
+            .recv_deadline(Duration::from_millis(20))
+            .unwrap()
+            .is_none());
+        tx.send(()).unwrap();
+        // the same link then delivers normally (blocking mode restored too)
+        assert_eq!(
+            client.recv_deadline(Duration::from_secs(10)).unwrap(),
+            Some(Message::Ack)
+        );
+        client.send(Message::Shutdown).unwrap();
         server.join().unwrap();
     }
 

@@ -372,13 +372,19 @@ impl<D: Duplex, B: GradientSource> WorkerNode<D, B> {
                     }
                     configured = true;
                 }
-                Message::EpochBegin { .. } => {
+                Message::EpochBegin { reply, .. } => {
                     // snapshot gradient at the (proposed) new snapshot = w_cur
-                    // chosen by SnapshotChoose, already in w_snapshot.
+                    // chosen by SnapshotChoose, already in w_snapshot. The
+                    // local g_snapshot cache always refreshes (grad_delta
+                    // computes against it next epoch); `reply = 0` (an async
+                    // partial-participation round where this worker is
+                    // outside the quorum) skips the 64·d uplink.
                     self.backend.grad(&w_snapshot, &mut g_snapshot)?;
-                    self.link.send(Message::GradRaw {
-                        g: g_snapshot.clone(),
-                    })?;
+                    if reply == 1 {
+                        self.link.send(Message::GradRaw {
+                            g: g_snapshot.clone(),
+                        })?;
+                    }
                 }
                 Message::EpochRevert => {
                     // memory unit rejected: restore previous snapshot
@@ -455,6 +461,10 @@ impl<D: Duplex, B: GradientSource> WorkerNode<D, B> {
                         &mut delta,
                     )?;
                     self.link.send(Message::GradDelta {
+                        // the inner time this delta was computed against —
+                        // the async master gates it through the staleness
+                        // window; lockstep always sees basis == applied count
+                        basis: lazy.t() as u32,
                         idx: delta.idx.clone(),
                         val: delta.val.clone(),
                     })?;
@@ -492,6 +502,26 @@ impl<D: Duplex, B: GradientSource> WorkerNode<D, B> {
                         }
                         w_snapshot.copy_from_slice(&w_hist[zeta]);
                     }
+                    self.link.send(Message::Ack)?;
+                }
+                Message::SnapshotSet { w, prev } => {
+                    // churn re-admission state sync: adopt the engine's
+                    // current and previous snapshots wholesale. Both matter —
+                    // a memory-unit EpochRevert in this worker's first
+                    // post-rejoin epoch restores `prev`, which must be the
+                    // same iterate the engine restores.
+                    if w.len() != d || prev.len() != d {
+                        bail!(
+                            "SnapshotSet dims {}/{} != {}",
+                            w.len(),
+                            prev.len(),
+                            d
+                        );
+                    }
+                    w_snapshot.copy_from_slice(&w);
+                    w_snapshot_prev.copy_from_slice(&prev);
+                    w_cur.copy_from_slice(&w);
+                    lazy_live = false;
                     self.link.send(Message::Ack)?;
                 }
                 Message::QueryLoss => {
@@ -552,11 +582,72 @@ mod tests {
         let node = WorkerNode::new(obj, wlink, None, fp(), Xoshiro256pp::seed_from_u64(1));
         let t = std::thread::spawn(move || node.run().unwrap());
         master.send(raw_config()).unwrap();
-        master.send(Message::EpochBegin { epoch: 0 }).unwrap();
+        master
+            .send(Message::EpochBegin { epoch: 0, reply: 1 })
+            .unwrap();
         match master.recv().unwrap() {
             Message::GradRaw { g } => {
                 assert!(crate::linalg::linf_dist(&g, &expect) < 1e-15)
             }
+            other => panic!("unexpected {other:?}"),
+        }
+        master.send(Message::Shutdown).unwrap();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn epoch_begin_without_reply_refreshes_silently() {
+        // reply = 0 (async non-quorum round): the worker refreshes its local
+        // g_snapshot cache but sends NOTHING — the next protocol reply must
+        // be the answer to the next request, not a stray GradRaw
+        let obj = shard();
+        let (mut master, wlink) = pair();
+        let node = WorkerNode::new(obj, wlink, None, fp(), Xoshiro256pp::seed_from_u64(11));
+        let t = std::thread::spawn(move || node.run().unwrap());
+        master.send(raw_config()).unwrap();
+        master
+            .send(Message::EpochBegin { epoch: 0, reply: 0 })
+            .unwrap();
+        master.send(Message::QueryLoss).unwrap();
+        // first (and only) reply is the loss — no GradRaw preceded it
+        assert!(matches!(master.recv().unwrap(), Message::LossValue { .. }));
+        master.send(Message::Shutdown).unwrap();
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn snapshot_set_adopts_both_snapshots() {
+        // churn re-admission: SnapshotSet must overwrite the current AND
+        // previous snapshots, so a first-epoch EpochRevert restores the
+        // master's prev, not this worker's stale history
+        let obj = shard();
+        let (mut master, wlink) = pair();
+        let node = WorkerNode::new(obj, wlink, None, fp(), Xoshiro256pp::seed_from_u64(12));
+        let t = std::thread::spawn(move || node.run().unwrap());
+        master.send(raw_config()).unwrap();
+        let w = vec![0.25; 9];
+        let prev = vec![-0.5; 9];
+        master
+            .send(Message::SnapshotSet {
+                w: w.clone(),
+                prev: prev.clone(),
+            })
+            .unwrap();
+        assert!(matches!(master.recv().unwrap(), Message::Ack));
+        // loss is now reported at the adopted w…
+        let expect_w = Objective::loss(&shard(), &w);
+        master.send(Message::QueryLoss).unwrap();
+        match master.recv().unwrap() {
+            Message::LossValue { loss } => assert_eq!(loss.to_bits(), expect_w.to_bits()),
+            other => panic!("unexpected {other:?}"),
+        }
+        // …and a revert lands on the adopted prev
+        master.send(Message::EpochRevert).unwrap();
+        assert!(matches!(master.recv().unwrap(), Message::Ack));
+        let expect_prev = Objective::loss(&shard(), &prev);
+        master.send(Message::QueryLoss).unwrap();
+        match master.recv().unwrap() {
+            Message::LossValue { loss } => assert_eq!(loss.to_bits(), expect_prev.to_bits()),
             other => panic!("unexpected {other:?}"),
         }
         master.send(Message::Shutdown).unwrap();
@@ -575,7 +666,9 @@ mod tests {
         let t = std::thread::spawn(move || node.run().unwrap());
         master.send(raw_config()).unwrap();
         // epoch 0: collect the snapshot gradient, commit
-        master.send(Message::EpochBegin { epoch: 0 }).unwrap();
+        master
+            .send(Message::EpochBegin { epoch: 0, reply: 1 })
+            .unwrap();
         let g0 = match master.recv().unwrap() {
             Message::GradRaw { g } => g,
             other => panic!("unexpected {other:?}"),
@@ -593,10 +686,14 @@ mod tests {
         let mut twin = LazyIterate::new(9);
         twin.begin_epoch(&[0.0; 9], &g0, step, lambda);
         let mut deltas = Vec::new();
-        for _ in 0..3 {
+        for turn in 0..3u32 {
             master.send(Message::InnerDeltaRequest).unwrap();
             let (idx, val) = match master.recv().unwrap() {
-                Message::GradDelta { idx, val } => (idx, val),
+                Message::GradDelta { basis, idx, val } => {
+                    // lockstep: the basis tag is exactly the applied count
+                    assert_eq!(basis, turn, "lockstep basis must track inner time");
+                    (idx, val)
+                }
                 other => panic!("unexpected {other:?}"),
             };
             master
@@ -718,7 +815,9 @@ mod tests {
         let node = WorkerNode::new(obj, wlink, None, fp(), Xoshiro256pp::seed_from_u64(2));
         let t = std::thread::spawn(move || node.run());
         master.send(raw_config()).unwrap();
-        master.send(Message::EpochBegin { epoch: 0 }).unwrap();
+        master
+            .send(Message::EpochBegin { epoch: 0, reply: 1 })
+            .unwrap();
         let _ = master.recv().unwrap();
         master.send(Message::EpochCommit { gnorm: 1.0 }).unwrap();
         let _ = master.recv().unwrap();
@@ -733,7 +832,9 @@ mod tests {
         let (mut master, wlink) = pair();
         let node = WorkerNode::new(shard(), wlink, None, fp(), Xoshiro256pp::seed_from_u64(8));
         let t = std::thread::spawn(move || node.run());
-        master.send(Message::EpochBegin { epoch: 0 }).unwrap();
+        master
+            .send(Message::EpochBegin { epoch: 0, reply: 1 })
+            .unwrap();
         assert!(t.join().unwrap().is_err());
     }
 

@@ -1,0 +1,319 @@
+//! Integration: the elastic async driver ([`qmsvrg::cluster::AsyncCluster`])
+//! against its lockstep oracle.
+//!
+//! Verification strategy, per the cluster-layer split:
+//!
+//! 1. **Degeneracy is bitwise.** At `quorum = N`, `staleness = 0`, full
+//!    health, the async driver must reproduce the lockstep run exactly —
+//!    trace, final iterate, and every ledger counter. Anything async-specific
+//!    that leaks into the degenerate schedule (an extra rng draw, a reordered
+//!    float sum, a stray metering call) fails this test.
+//! 2. **Elastic runs are tolerance-pinned.** With real staleness, a strict
+//!    quorum, and a kill + rejoin mid-run, the iterates are no longer
+//!    bit-comparable to anything — but λ-strong convexity still pins the
+//!    answer: the run must land within 1e-6 of the lockstep minimizer.
+//! 3. **Stragglers are scheduled around, not waited on.** Over SimDuplex
+//!    links, a cost-ranked quorum never asks the slow worker for a snapshot
+//!    gradient, so the collection's virtual makespan is bounded by the K-th
+//!    fastest link instead of the slowest.
+
+use std::time::Duration;
+
+use qmsvrg::algorithms::svrg::{run_svrg, SvrgOpts};
+use qmsvrg::cluster::{
+    run_svrg_async, spawn_async_native, spawn_native_worker, AsyncCluster, AsyncOpts, Cluster,
+    QuorumSelect, ThreadedCluster,
+};
+use qmsvrg::data::synthetic::power_like;
+use qmsvrg::data::Dataset;
+use qmsvrg::linalg::linf_dist;
+use qmsvrg::objective::LogisticRidge;
+use qmsvrg::rng::Xoshiro256pp;
+use qmsvrg::transport::local::pair;
+use qmsvrg::transport::sim::{LinkModel, SimDuplex};
+use qmsvrg::worker::WorkerNode;
+
+const LAMBDA: f64 = 0.1;
+
+fn dataset() -> Dataset {
+    // 400 rows shard evenly 8 ways, so the sharded mean-of-means objective
+    // equals the full-data objective and both drivers optimize the same w*
+    let mut ds = power_like(400, 11);
+    ds.standardize();
+    ds
+}
+
+fn opts(outer_iters: usize, memory_unit: bool) -> SvrgOpts {
+    SvrgOpts {
+        step: 0.15,
+        epoch_len: 8,
+        outer_iters,
+        memory_unit,
+    }
+}
+
+/// Everything one run pins down, bit for bit.
+#[derive(Debug, PartialEq)]
+struct RunFingerprint {
+    gnorm_bits: Vec<u64>,
+    bits: Vec<u64>,
+    w_bits: Vec<u64>,
+    uplink_bits: u64,
+    downlink_bits: u64,
+    messages: u64,
+}
+
+#[test]
+fn async_degenerate_is_bitwise_lockstep() {
+    // quorum = N (no draws), staleness = 0 (one-deep pipeline), nobody dies:
+    // the elastic driver IS the lockstep driver. Memory unit on, so the
+    // EpochRevert path is part of the pinned schedule.
+    let ds = dataset();
+    let o = opts(15, true);
+    let seed = 11;
+
+    let root = Xoshiro256pp::seed_from_u64(seed);
+    let mut sync_cluster = ThreadedCluster::spawn(&ds, 8, LAMBDA, None, &root).unwrap();
+    let mut gnorms = Vec::new();
+    let mut bits = Vec::new();
+    let w = run_svrg(&mut sync_cluster, &o, root.algo_stream(), &mut |_, _, gn, b| {
+        gnorms.push(gn.to_bits());
+        bits.push(b);
+    })
+    .unwrap();
+    let ledger = sync_cluster.ledger().clone();
+    sync_cluster.shutdown().unwrap();
+    let sync_fp = RunFingerprint {
+        gnorm_bits: gnorms,
+        bits,
+        w_bits: w.iter().map(|x| x.to_bits()).collect(),
+        uplink_bits: ledger.uplink_bits,
+        downlink_bits: ledger.downlink_bits,
+        messages: ledger.messages,
+    };
+
+    let root = Xoshiro256pp::seed_from_u64(seed);
+    let (mut cluster, handles) =
+        spawn_async_native(&ds, 8, LAMBDA, &root, AsyncOpts::default()).unwrap();
+    let mut gnorms = Vec::new();
+    let mut bits = Vec::new();
+    let w = run_svrg_async(
+        &mut cluster,
+        &o,
+        root.algo_stream(),
+        &mut |_, _, gn, b| {
+            gnorms.push(gn.to_bits());
+            bits.push(b);
+        },
+        None,
+    )
+    .unwrap();
+    let async_fp = RunFingerprint {
+        gnorm_bits: gnorms,
+        bits,
+        w_bits: w.iter().map(|x| x.to_bits()).collect(),
+        uplink_bits: cluster.ledger().uplink_bits,
+        downlink_bits: cluster.ledger().downlink_bits,
+        messages: cluster.ledger().messages,
+    };
+    // a healthy degenerate run records zero elasticity events
+    assert_eq!(cluster.stats.deaths, 0);
+    assert_eq!(cluster.stats.timeouts, 0);
+    assert_eq!(cluster.stats.stale_rejected, 0);
+    assert_eq!(cluster.stats.quorum_rounds, 0);
+    cluster.shutdown();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+
+    assert_eq!(sync_fp, async_fp);
+}
+
+#[test]
+fn staleness_quorum_and_churn_reach_the_lockstep_minimizer() {
+    // the full elastic configuration: 4-deep pipeline, 4-of-8 quorum, one
+    // worker killed at epoch 5 and re-admitted at epoch 8. λ-strong
+    // convexity pins the answer: within 1e-6 of the lockstep minimizer.
+    let ds = dataset();
+    let o = opts(150, false);
+    let seed = 13;
+
+    // lockstep reference minimizer (full participation, same problem)
+    let root = Xoshiro256pp::seed_from_u64(seed);
+    let mut sync_cluster = ThreadedCluster::spawn(&ds, 8, LAMBDA, None, &root).unwrap();
+    let w_ref = run_svrg(&mut sync_cluster, &o, root.algo_stream(), &mut |_, _, _, _| {}).unwrap();
+    sync_cluster.shutdown().unwrap();
+
+    let root = Xoshiro256pp::seed_from_u64(seed);
+    let aopts = AsyncOpts {
+        quorum: 4,
+        staleness: 4,
+        ..AsyncOpts::default()
+    };
+    let (mut cluster, handles) = spawn_async_native(&ds, 8, LAMBDA, &root, aopts).unwrap();
+    let mut late_handles = Vec::new();
+    let ds_ref = &ds;
+    let root_ref = &root;
+    let mut hook = |k: usize, c: &mut AsyncCluster<_>| -> anyhow::Result<()> {
+        if k == 5 {
+            c.kick(2);
+        }
+        if k == 8 {
+            let (link, h) = spawn_native_worker(ds_ref, 8, 2, LAMBDA, root_ref);
+            late_handles.push(h);
+            c.enqueue_rejoin(2, link)?;
+        }
+        Ok(())
+    };
+    let mut final_gnorm = f64::NAN;
+    let w = run_svrg_async(
+        &mut cluster,
+        &o,
+        root.algo_stream(),
+        &mut |_, _, gn, _| final_gnorm = gn,
+        Some(&mut hook),
+    )
+    .unwrap();
+
+    assert_eq!(cluster.stats.deaths, 1, "exactly the injected kick");
+    assert_eq!(cluster.stats.rejoins, 1, "the worker came back");
+    assert!(
+        cluster.stats.quorum_rounds > 100,
+        "4-of-8 should run strict quorums nearly every epoch, got {}",
+        cluster.stats.quorum_rounds
+    );
+    assert_eq!(cluster.live_indices(), vec![0, 1, 2, 3, 4, 5, 6, 7]);
+
+    // the final report is a full-participation exact gradient: near-zero at
+    // the minimizer of the (fully re-joined) objective
+    assert!(
+        final_gnorm < 1e-6,
+        "elastic run did not converge: final ‖g̃‖ = {final_gnorm:e}"
+    );
+    let dist = linf_dist(&w, &w_ref);
+    assert!(
+        dist < 1e-6,
+        "elastic minimizer drifted {dist:e} from the lockstep one"
+    );
+
+    cluster.shutdown();
+    for h in handles.into_iter().chain(late_handles) {
+        // the kicked worker's first thread exits Ok on Shutdown, like the rest
+        h.join().unwrap().unwrap();
+    }
+}
+
+#[test]
+fn unresponsive_worker_is_struck_out_and_reweighted() {
+    // slot 3's link is never serviced: the master must strike it out after
+    // max_retries deadline misses and finish the round on the survivors —
+    // reweighting, not panicking.
+    let ds = dataset();
+    let root = Xoshiro256pp::seed_from_u64(17);
+    let fp = ds.fingerprint(LAMBDA);
+    let mut links = Vec::new();
+    let mut handles = Vec::new();
+    for slot in 0..3 {
+        let (link, h) = spawn_native_worker(&ds, 4, slot, LAMBDA, &root);
+        links.push(link);
+        handles.push(h);
+    }
+    let (dead_master_end, _held_worker_end) = pair(); // never serviced
+    links.push(dead_master_end);
+
+    let aopts = AsyncOpts {
+        recv_timeout: Duration::from_millis(50),
+        max_retries: 2,
+        ..AsyncOpts::default()
+    };
+    let mut cluster = AsyncCluster::new(links, fp, &root, aopts).unwrap();
+    let mut g = vec![0.0; cluster.dim()];
+    cluster.snapshot_grads(0, &mut g).unwrap();
+
+    assert_eq!(cluster.live_indices(), vec![0, 1, 2]);
+    assert_eq!(cluster.stats.deaths, 1);
+    assert_eq!(cluster.stats.timeouts, 2, "struck out after max_retries");
+    assert!(g.iter().all(|x| x.is_finite()));
+    assert!(qmsvrg::linalg::nrm2(&g) > 0.0, "survivors' mean, not zeros");
+
+    cluster.shutdown();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+}
+
+#[test]
+fn cost_ranked_quorum_never_waits_on_the_straggler() {
+    // N = 4 over SimDuplex links; slot 3 is catastrophically slow on the
+    // uplink. A 3-of-4 cost-ranked quorum must never ask it for a snapshot
+    // gradient, so the collection's virtual makespan is bounded by the cost
+    // of the K-th *fastest* worker's uplink — not the straggler's.
+    let ds = dataset();
+    let d = ds.d;
+    let root = Xoshiro256pp::seed_from_u64(19);
+    let fp = ds.fingerprint(LAMBDA);
+    let fast = LinkModel::symmetric_fast();
+    let slow = LinkModel {
+        latency_s: 1000.0, // one message = forever
+        uplink_bps: 1.0,
+        downlink_bps: 50e6,
+    };
+    let shards = ds.shard(4);
+    let mut links = Vec::new();
+    let mut handles = Vec::new();
+    for (i, shard) in shards.into_iter().enumerate() {
+        let (master_end, worker_end) = pair();
+        let model = if i == 3 { slow } else { fast };
+        links.push(SimDuplex::new(master_end, model, true));
+        let rng = root.worker_stream(i);
+        handles.push(std::thread::spawn(move || {
+            let backend = LogisticRidge::from_dataset(&shard, LAMBDA);
+            WorkerNode::new(backend, worker_end, None, fp, rng).run()
+        }));
+    }
+    let costs = vec![
+        fast.cost_s(64 * d as u64, true),
+        fast.cost_s(64 * d as u64, true),
+        fast.cost_s(64 * d as u64, true),
+        slow.cost_s(64 * d as u64, true),
+    ];
+    let aopts = AsyncOpts {
+        quorum: 3,
+        select: QuorumSelect::ByCost(costs),
+        ..AsyncOpts::default()
+    };
+    let mut cluster = AsyncCluster::new(links, fp, &root, aopts).unwrap();
+
+    // three quorum rounds (an epoch's snapshot collection each)
+    let mut g = vec![0.0; d];
+    for epoch in 0..3 {
+        cluster.snapshot_grads(epoch, &mut g).unwrap();
+    }
+    assert_eq!(cluster.stats.quorum_rounds, 3);
+
+    // the straggler carried control traffic only — zero uplink payload bits
+    let slow_link = cluster.link(3).unwrap();
+    assert_eq!(
+        slow_link.uplink_bits, 0,
+        "cost-ranked quorum asked the straggler for a gradient"
+    );
+    // virtual makespan of the collections = the busiest link consulted; it
+    // must sit at fast-uplink scale, far below ONE slow-model gradient
+    let makespan = (0..3)
+        .map(|i| cluster.link(i).unwrap().virtual_time_s)
+        .fold(0.0f64, f64::max);
+    let one_slow_grad = slow.cost_s(64 * d as u64, true);
+    assert!(
+        makespan < one_slow_grad,
+        "makespan {makespan} not bounded by the K-th fastest (slow grad = {one_slow_grad})"
+    );
+    // each quorum member uplinked exactly one 64d gradient per round
+    for i in 0..3 {
+        assert_eq!(cluster.link(i).unwrap().uplink_bits, 3 * 64 * d as u64);
+    }
+
+    cluster.shutdown();
+    for h in handles {
+        h.join().unwrap().unwrap();
+    }
+}
