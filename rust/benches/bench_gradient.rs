@@ -217,6 +217,48 @@ fn main() {
     let r_mnist = fanout_ratio(&mut b, "8x800x784 (mnist)", &prob8m, &wm);
     extra.push(("fanout_n8_mnist_speedup", format!("{r_mnist:.2}")));
 
+    // intra-shard full gradient: chunked-serial `grad` vs the scoped-thread
+    // `grad_parallel` a distributed worker runs at every epoch boundary
+    // (GradientSource::snapshot_grad). Bit-identical by construction —
+    // fixed chunk geometry, ascending fold — so this measures pure
+    // wall-clock, and the lockstep property test pins the equality.
+    println!("\n-- intra-shard full gradient: chunked-serial vs scoped threads --");
+    let intra_ratio =
+        |b: &mut Bencher, label: &str, obj: &LogisticRidge, w: &[f64]| -> f64 {
+            let mut out = vec![0.0; w.len()];
+            let serial_ns = b
+                .bench(&format!("{label} chunked-serial grad"), || {
+                    obj.grad(w, &mut out);
+                    out[0]
+                })
+                .ns_per_iter();
+            let par_ns = b
+                .bench(&format!("{label} grad_parallel"), || {
+                    obj.grad_parallel(w, &mut out);
+                    out[0]
+                })
+                .ns_per_iter();
+            let ratio = serial_ns / par_ns;
+            println!("   -> {label}: parallel/serial speedup {ratio:.2}x");
+            ratio
+        };
+    let obj_big = LogisticRidge::from_dataset(&big, 0.1);
+    let r_intra_power = intra_ratio(&mut b, "80000x9 (power, dense)", &obj_big, &w);
+    extra.push(("intra_shard_parallel_fullgrad_speedup", format!("{r_intra_power:.2}")));
+    let obj_big_m = LogisticRidge::from_dataset(&big_m, 0.1);
+    let r_intra_mnist = intra_ratio(&mut b, "6400x784 (mnist, dense)", &obj_big_m, &wm);
+    extra.push((
+        "intra_shard_parallel_fullgrad_mnist_speedup",
+        format!("{r_intra_mnist:.2}"),
+    ));
+    let big_csr = big.to_csr();
+    let obj_big_csr = LogisticRidge::from_dataset(&big_csr, 0.1);
+    let r_intra_csr = intra_ratio(&mut b, "80000x9 (power, csr)", &obj_big_csr, &w);
+    extra.push((
+        "intra_shard_parallel_fullgrad_csr_speedup",
+        format!("{r_intra_csr:.2}"),
+    ));
+
     // XLA path (requires artifacts)
     match XlaRuntime::load(Path::new("artifacts")) {
         Ok(rt) => {

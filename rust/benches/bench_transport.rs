@@ -4,17 +4,22 @@
 //!
 //! Also reconciles the §4.1 closed-form bit formulas against the measured
 //! ledger for every algorithm, as a printed table.
+//!
+//! Results are recorded to `BENCH_transport.json` in the working directory
+//! (codec + wire-path rows; the end-to-end distributed row prints only).
 
+use std::path::Path;
 use std::time::Duration;
 
 use qmsvrg::algorithms::ShardedObjective;
 use qmsvrg::benchkit::Bencher;
+use qmsvrg::cluster::protocol;
 use qmsvrg::config::TrainConfig;
 use qmsvrg::data::synthetic::power_like;
 use qmsvrg::metrics::AlgoBits;
 use qmsvrg::transport::local::pair;
 use qmsvrg::transport::tcp::TcpDuplex;
-use qmsvrg::transport::{Duplex, Message};
+use qmsvrg::transport::{Duplex, FrameRef, Message};
 
 fn main() {
     let mut b = Bencher::new(
@@ -22,6 +27,7 @@ fn main() {
         Duration::from_millis(800),
         1_000_000,
     );
+    let mut extra: Vec<(&str, String)> = Vec::new();
     println!("== bench_transport ==");
 
     // message codec
@@ -30,13 +36,25 @@ fn main() {
         bits: 27,
         sats: 0,
     };
-    let msg_raw = Message::GradRaw {
-        g: (0..784).map(|i| i as f64 * 0.001).collect(),
-    };
+    let g784: Vec<f64> = (0..784).map(|i| i as f64 * 0.001).collect();
+    let msg_raw = Message::GradRaw { g: g784.clone() };
     b.bench("encode GradQ (packed 27b)", || msg_q.encode());
     let enc_q = msg_q.encode();
     b.bench("decode GradQ", || Message::decode(&enc_q).unwrap());
-    b.bench("encode GradRaw d=784", || msg_raw.encode());
+    let encode_ns = b
+        .bench("encode GradRaw d=784", || msg_raw.encode())
+        .ns_per_iter();
+    let mut enc_scratch = Vec::new();
+    let encode_into_ns = b
+        .bench("encode_into GradRaw d=784 (scratch reuse)", || {
+            msg_raw.encode_into(&mut enc_scratch);
+            enc_scratch.len()
+        })
+        .ns_per_iter();
+    extra.push((
+        "encode_into_vs_encode_gradraw_speedup",
+        format!("{:.2}", encode_ns / encode_into_ns),
+    ));
     let enc_raw = msg_raw.encode();
     b.bench("decode GradRaw d=784", || Message::decode(&enc_raw).unwrap());
 
@@ -84,8 +102,90 @@ fn main() {
         c.send(gq.clone()).unwrap();
         c.recv().unwrap()
     });
+    // zero-copy wire path: the owned entry point clones the d=784 payload
+    // every turn; the borrowed frame encodes straight from the caller's
+    // buffer into the link's reusable scratch (one write_all, no per-frame
+    // heap traffic on either side once warm)
+    let owned_raw_ns = b
+        .bench("tcp echo GradRaw d=784 (owned send)", || {
+            c.send(msg_raw.clone()).unwrap();
+            c.recv().unwrap()
+        })
+        .ns_per_iter();
+    let frame_raw_ns = b
+        .bench("tcp echo GradRaw d=784 (borrowed frame)", || {
+            c.send_frame(FrameRef::GradRaw { g: &g784 }).unwrap();
+            c.recv().unwrap()
+        })
+        .ns_per_iter();
+    extra.push((
+        "tcp_frame_vs_owned_echo_speedup",
+        format!("{:.2}", owned_raw_ns / frame_raw_ns),
+    ));
     c.send(Message::Shutdown).unwrap();
     t.join().unwrap();
+
+    // broadcast fan-out, N=8 loopback links: per-link owned sends (encode
+    // ×8, clone ×8) vs protocol::broadcast (encode once into the master's
+    // scratch, 8 verbatim write_alls) — the exact path MessageCluster and
+    // AsyncCluster take for InnerSetup / DeltaApply / ParamsQ
+    let n_links = 8;
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let acceptor = std::thread::spawn(move || {
+        (0..n_links)
+            .map(|_| {
+                let (s, _) = listener.accept().unwrap();
+                let mut d = TcpDuplex::new(s).unwrap();
+                std::thread::spawn(move || {
+                    while !matches!(d.recv().unwrap(), Message::Shutdown) {}
+                })
+            })
+            .collect::<Vec<_>>()
+    });
+    let mut links: Vec<_> = (0..n_links)
+        .map(|_| TcpDuplex::connect(&addr.to_string()).unwrap())
+        .collect();
+    let drainers = acceptor.join().unwrap();
+    let owned_setup = Message::InnerSetup {
+        step: 0.125,
+        g_tilde: g784.clone(),
+    };
+    let per_link_ns = b
+        .bench("fan-out N=8 owned sends (InnerSetup d=784)", || {
+            for l in links.iter_mut() {
+                l.send(owned_setup.clone()).unwrap();
+            }
+        })
+        .ns_per_iter();
+    let mut bcast_scratch = Vec::new();
+    let bcast_ns = b
+        .bench("fan-out N=8 pre-encoded broadcast (InnerSetup d=784)", || {
+            protocol::broadcast(
+                &mut links,
+                FrameRef::InnerSetup {
+                    step: 0.125,
+                    g_tilde: &g784,
+                },
+                &mut bcast_scratch,
+            )
+            .unwrap();
+        })
+        .ns_per_iter();
+    extra.push((
+        "broadcast_preencoded_vs_owned_n8_speedup",
+        format!("{:.2}", per_link_ns / bcast_ns),
+    ));
+    extra.push((
+        "fanout_workload",
+        "InnerSetup d=784, N=8 loopback TCP links".to_string(),
+    ));
+    for l in links.iter_mut() {
+        l.send(Message::Shutdown).unwrap();
+    }
+    for h in drainers {
+        h.join().unwrap();
+    }
 
     // closed-form vs measured bits, per algorithm
     println!("\n-- §4.1 closed-form vs measured payload bits (one outer iteration) --");
@@ -166,4 +266,9 @@ fn main() {
         .len()
     });
     b2.finish("bench_transport");
+    // json carries b's codec + wire-path rows; the coarse distributed row
+    // above is print-only (10 iterations, not a stable ratio source)
+    if let Err(e) = b.write_json(Path::new("BENCH_transport.json"), "bench_transport", &extra) {
+        eprintln!("(could not write BENCH_transport.json: {e})");
+    }
 }

@@ -79,6 +79,14 @@ impl ShardedObjective {
     /// buffer, and `grad` is deterministic — so the result is bit-identical
     /// to calling [`Self::node_grad`] per shard, just wall-clock-parallel
     /// (see EXPERIMENTS.md §Perf and `bench_gradient`).
+    ///
+    /// Parallelism is one level deep on purpose: each shard runs the
+    /// *chunked-serial* `Objective::grad` here, NOT
+    /// `LogisticRidge::grad_parallel`. Nesting shard threads × chunk
+    /// threads would oversubscribe the machine for zero extra coverage —
+    /// intra-shard threading belongs to the distributed worker process
+    /// ([`crate::worker::GradientSource::snapshot_grad`]), where each
+    /// shard is the whole process and the cores are otherwise idle.
     pub fn node_grads_parallel(&self, w: &[f64], outs: &mut [Vec<f64>]) {
         debug_assert_eq!(outs.len(), self.shards.len());
         if self.shards.len() <= 1 {
@@ -95,6 +103,14 @@ impl ShardedObjective {
     }
 
     /// Global gradient `g(w) = (1/N) Σ g_i(w)` into `out`.
+    ///
+    /// Deliberately serial (and so is [`Self::solve_reference`] on top of
+    /// it): this is the *oracle* path that fixed-seed experiments and the
+    /// reference solve iterate tens of thousands of times on tiny
+    /// problems, where per-call thread fan-out would cost more than the
+    /// arithmetic it hides. The measured parallel paths are
+    /// [`Self::node_grads_parallel`] (one thread per shard) and the
+    /// worker-side intra-shard `grad_parallel`.
     pub fn full_grad(&self, w: &[f64], out: &mut [f64]) {
         let mut tmp = vec![0.0; self.d];
         for o in out.iter_mut() {

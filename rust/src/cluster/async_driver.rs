@@ -54,7 +54,7 @@ use crate::metrics::CommLedger;
 use crate::objective::LogisticRidge;
 use crate::rng::Xoshiro256pp;
 use crate::transport::local::{pair, LocalDuplex};
-use crate::transport::{Duplex, Message};
+use crate::transport::{Duplex, FrameRef, Message};
 use crate::worker::WorkerNode;
 
 /// How the per-epoch gradient quorum is chosen.
@@ -149,6 +149,9 @@ pub struct AsyncCluster<D: Duplex> {
     pub ledger: CommLedger,
     pub stats: AsyncStats,
     pending_joins: Vec<(usize, D)>,
+    /// Reusable broadcast frame — on a pre-encoding transport each live
+    /// fan-out serializes once here and every slot writes the same bytes.
+    bcast_scratch: Vec<u8>,
 }
 
 impl<D: Duplex> AsyncCluster<D> {
@@ -181,6 +184,7 @@ impl<D: Duplex> AsyncCluster<D> {
             ledger: CommLedger::default(),
             stats: AsyncStats::default(),
             pending_joins: Vec::new(),
+            bcast_scratch: Vec::new(),
         };
         // initial connect is not elastic: a worker that cannot even take the
         // handshake is a deployment error, not churn
@@ -260,13 +264,49 @@ impl<D: Duplex> AsyncCluster<D> {
         }
     }
 
+    /// Borrowed-frame send to one slot — `pre` carries the broadcast's
+    /// pre-encoded bytes when the transport pre-encodes.
+    fn send_frame_or_kill(&mut self, i: usize, frame: FrameRef<'_>, pre: Option<&[u8]>) -> bool {
+        match self.slots[i].link.as_mut() {
+            Some(link) => {
+                let sent = match pre {
+                    Some(bytes) => link.send_preencoded(frame, bytes),
+                    None => link.send_frame(frame),
+                };
+                if sent.is_err() {
+                    self.kill(i);
+                    false
+                } else {
+                    true
+                }
+            }
+            None => false,
+        }
+    }
+
     /// Broadcast to every live slot, in slot order (lockstep's fan order).
     fn fan_live(&mut self, msg: &Message) {
+        self.fan_live_frame(FrameRef::Msg(msg));
+    }
+
+    /// Batched live broadcast: on a pre-encoding transport the frame is
+    /// serialized once into the reusable scratch and every live slot writes
+    /// those bytes; channel transports send per-slot owned twins directly.
+    fn fan_live_frame(&mut self, frame: FrameRef<'_>) {
+        // take the scratch so its borrow doesn't pin `self` across the sends
+        let mut scratch = std::mem::take(&mut self.bcast_scratch);
+        let pre = if D::PREENCODES {
+            frame.encode_framed_into(&mut scratch);
+            Some(())
+        } else {
+            None
+        };
         for i in 0..self.slots.len() {
             if self.is_live(i) {
-                self.send_or_kill(i, msg.clone());
+                self.send_frame_or_kill(i, frame, pre.map(|()| scratch.as_slice()));
             }
         }
+        self.bcast_scratch = scratch;
     }
 
     /// One deadline-bounded receive on slot `i`, with strike accounting.
@@ -516,10 +556,7 @@ impl<D: Duplex> AsyncCluster<D> {
     /// Broadcast `g̃` + α; metered 64·d once (broadcast convention).
     pub fn begin_inner_lazy(&mut self, g_tilde: &[f64], step: f64) {
         self.ledger.record_downlink(64 * g_tilde.len() as u64);
-        self.fan_live(&Message::InnerSetup {
-            step,
-            g_tilde: g_tilde.to_vec(),
-        });
+        self.fan_live_frame(FrameRef::InnerSetup { step, g_tilde });
     }
 
     /// End of epoch: every live replica adopts `w_{k,ζ}`.
@@ -614,9 +651,9 @@ impl<D: Duplex> AsyncCluster<D> {
                             VersionedApply::Applied => {
                                 self.ledger
                                     .record_downlink(Message::delta_bits(sv.idx.len()));
-                                self.fan_live(&Message::DeltaApply {
-                                    idx: sv.idx,
-                                    val: sv.val,
+                                self.fan_live_frame(FrameRef::DeltaApply {
+                                    idx: &sv.idx,
+                                    val: &sv.val,
                                 });
                                 applied += 1;
                             }

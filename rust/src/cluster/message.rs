@@ -28,7 +28,7 @@ use crate::metrics::CommLedger;
 use crate::quant::QuantState;
 use crate::rng::Xoshiro256pp;
 use crate::transport::tcp::TcpDuplex;
-use crate::transport::{Duplex, Message};
+use crate::transport::{Duplex, FrameRef, Message};
 
 /// Master side of a message-passing deployment (one link per worker).
 pub struct MessageCluster<D: Duplex> {
@@ -46,6 +46,9 @@ pub struct MessageCluster<D: Duplex> {
     /// (quantized path).
     g_snap_rx: Vec<f64>,
     g_cur_rx: Vec<f64>,
+    /// Reusable broadcast frame for [`protocol::broadcast`] — on a
+    /// pre-encoding transport each fan-out serializes once into this.
+    bcast_scratch: Vec<u8>,
     pub ledger: CommLedger,
 }
 
@@ -76,6 +79,7 @@ impl<D: Duplex> MessageCluster<D> {
             quant_rng: root.quant_stream(),
             g_snap_rx: vec![0.0; d],
             g_cur_rx: vec![0.0; d],
+            bcast_scratch: Vec::new(),
             ledger: CommLedger::default(),
         };
         cluster.fan_out(&config)?;
@@ -84,7 +88,13 @@ impl<D: Duplex> MessageCluster<D> {
 
     /// Send `msg` on every link (no blocking receives in between).
     fn fan_out(&mut self, msg: &Message) -> Result<()> {
-        protocol::fan_out(&mut self.links, msg)
+        protocol::broadcast(&mut self.links, FrameRef::Msg(msg), &mut self.bcast_scratch)
+    }
+
+    /// Borrowed-frame fan-out: the hot broadcasts (g̃ setup, delta apply,
+    /// quantized params) go through here without building an owned message.
+    fn fan_out_frame(&mut self, frame: FrameRef<'_>) -> Result<()> {
+        protocol::broadcast(&mut self.links, frame, &mut self.bcast_scratch)
     }
 
     fn collect_acks(&mut self) -> Result<()> {
@@ -205,10 +215,7 @@ impl<D: Duplex> Cluster for MessageCluster<D> {
         }
         // broadcast: metered once (64·d for g̃; the step scalar rides free)
         self.ledger.record_downlink(64 * g_tilde.len() as u64);
-        self.fan_out(&Message::InnerSetup {
-            step,
-            g_tilde: g_tilde.to_vec(),
-        })
+        self.fan_out_frame(FrameRef::InnerSetup { step, g_tilde })
     }
 
     fn inner_delta(
@@ -231,10 +238,14 @@ impl<D: Duplex> Cluster for MessageCluster<D> {
         // broadcast the delta so every worker (ξ included) advances its
         // replica identically; metered once
         self.ledger.record_downlink(Message::delta_bits(delta.len()));
-        self.fan_out(&Message::DeltaApply {
-            idx: delta.idx.clone(),
-            val: delta.val.clone(),
-        })
+        protocol::broadcast(
+            &mut self.links,
+            FrameRef::DeltaApply {
+                idx: &delta.idx,
+                val: &delta.val,
+            },
+            &mut self.bcast_scratch,
+        )
     }
 
     fn inner_step(
@@ -268,6 +279,7 @@ impl<D: Duplex> Cluster for MessageCluster<D> {
             ledger,
             g_snap_rx,
             g_cur_rx,
+            bcast_scratch,
             ..
         } = self;
         let q = quant
@@ -284,14 +296,17 @@ impl<D: Duplex> Cluster for MessageCluster<D> {
         )?;
         ledger.record_downlink(e.payload.bits); // broadcast: metered once
         ledger.saturations += e.sats as u64;
-        let msg = Message::ParamsQ {
-            payload: e.payload.bytes,
-            bits: e.payload.bits,
-        };
-        for link in links.iter_mut() {
-            link.send(msg.clone())?;
-        }
-        Ok(())
+        // borrowed broadcast: the packed payload is encoded (or cloned into
+        // an owned frame on channel links) straight from the encoder's
+        // buffer — never one owned ParamsQ per link
+        protocol::broadcast(
+            links,
+            FrameRef::ParamsQ {
+                payload: &e.payload.bytes,
+                bits: e.payload.bits,
+            },
+            bcast_scratch,
+        )
     }
 
     fn choose_snapshot(&mut self, zeta: usize) -> Result<()> {

@@ -23,7 +23,7 @@ use anyhow::{bail, Context, Result};
 use crate::algorithms::channel::QuantOpts;
 use crate::data::DataFingerprint;
 use crate::linalg::SparseVec;
-use crate::transport::{Duplex, Message, PROTO_VERSION};
+use crate::transport::{Duplex, FrameRef, Message, PROTO_VERSION};
 
 /// Build the `Config` handshake for a run: protocol version, quantization
 /// identity (0s = unquantized) and the resolved data fingerprint. Every
@@ -46,11 +46,27 @@ pub fn config_message(quant: Option<&QuantOpts>, fp: &DataFingerprint) -> Messag
     }
 }
 
-/// Send `msg` on every link, blocking on no receive in between (all workers
-/// compute concurrently).
-pub fn fan_out<D: Duplex>(links: &mut [D], msg: &Message) -> Result<()> {
-    for link in links.iter_mut() {
-        link.send(msg.clone())?;
+/// Send one borrowed frame on every link — the batched fan-out both
+/// drivers' broadcast sites go through. On a pre-encoding transport
+/// ([`Duplex::PREENCODES`], e.g. TCP) the frame is serialized **once** into
+/// the caller's reusable scratch and every link writes those same bytes
+/// verbatim: N links cost one encode + N writes instead of N encodes + 2N
+/// writes. Channel transports skip the scratch entirely (each link needs
+/// its own owned `Message` anyway, so pre-encoding would be pure waste).
+pub fn broadcast<D: Duplex>(
+    links: &mut [D],
+    frame: FrameRef<'_>,
+    scratch: &mut Vec<u8>,
+) -> Result<()> {
+    if D::PREENCODES && links.len() > 1 {
+        frame.encode_framed_into(scratch);
+        for link in links.iter_mut() {
+            link.send_preencoded(frame, scratch)?;
+        }
+    } else {
+        for link in links.iter_mut() {
+            link.send_frame(frame)?;
+        }
     }
     Ok(())
 }
@@ -147,6 +163,70 @@ mod tests {
 
         assert!((parse_loss(Message::LossValue { loss: 0.25 }, 2).unwrap() - 0.25).abs() < 1e-15);
         assert!(parse_loss(Message::Ack, 2).is_err());
+    }
+
+    #[test]
+    fn broadcast_delivers_identically_on_channel_and_wire_links() {
+        // channel links (PREENCODES = false): per-link send_frame path
+        let (mut masters, mut workers): (Vec<_>, Vec<_>) =
+            (0..3).map(|_| crate::transport::pair()).unzip();
+        let g = vec![1.0, -2.5, 0.5];
+        let mut scratch = Vec::new();
+        broadcast(
+            &mut masters,
+            FrameRef::InnerSetup {
+                step: 0.1,
+                g_tilde: &g,
+            },
+            &mut scratch,
+        )
+        .unwrap();
+        for w in workers.iter_mut() {
+            assert_eq!(
+                w.recv().unwrap(),
+                Message::InnerSetup {
+                    step: 0.1,
+                    g_tilde: g.clone(),
+                }
+            );
+        }
+        assert!(scratch.is_empty(), "channel broadcast must skip pre-encoding");
+
+        // TCP links (PREENCODES = true): one encode into the scratch, every
+        // link writes the same bytes
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let accept = std::thread::spawn(move || {
+            (0..3)
+                .map(|_| {
+                    let (s, _) = listener.accept().unwrap();
+                    crate::transport::tcp::TcpDuplex::new(s).unwrap()
+                })
+                .collect::<Vec<_>>()
+        });
+        let mut tcp_masters: Vec<_> = (0..3)
+            .map(|_| crate::transport::tcp::TcpDuplex::connect(&addr.to_string()).unwrap())
+            .collect();
+        let mut tcp_workers = accept.join().unwrap();
+        let idx = vec![0u32, 2];
+        let val = vec![0.25, -0.75];
+        broadcast(
+            &mut tcp_masters,
+            FrameRef::DeltaApply {
+                idx: &idx,
+                val: &val,
+            },
+            &mut scratch,
+        )
+        .unwrap();
+        let expect = Message::DeltaApply {
+            idx: idx.clone(),
+            val: val.clone(),
+        };
+        assert_eq!(scratch.len(), 4 + expect.encoded_len(), "frame pre-encoded once");
+        for w in tcp_workers.iter_mut() {
+            assert_eq!(w.recv().unwrap(), expect);
+        }
     }
 
     #[test]

@@ -277,6 +277,14 @@ impl CsrMatrix {
     /// [`super::gemv_t_row_major_acc`]; O(nnz) total. (The logistic
     /// gradient does NOT route through this: it fuses the coefficient and
     /// the scatter into one per-row pass over `spdot`/`spaxpy`.)
+    ///
+    /// Stays serial by choice. Its callers are per-turn paths — minibatch
+    /// deltas and small scatter-accumulates touching O(b·d̄) entries, not
+    /// O(nnz of the shard) — so the fixed-chunk-order treatment the full
+    /// gradient got (`LogisticRidge::grad_parallel`) would spend more on
+    /// thread fan-out than the loop body costs. If a future caller feeds
+    /// it full-dataset-sized `coeff` vectors, give it the same chunked,
+    /// ascending-fold reduction so results stay bit-stable.
     pub fn spmv_t_acc(&self, coeff: &[f64], out: &mut [f64]) {
         debug_assert_eq!(coeff.len(), self.n_rows);
         debug_assert_eq!(out.len(), self.n_cols);

@@ -21,6 +21,25 @@ use super::Objective;
 use crate::data::{Dataset, Features};
 use crate::linalg::{self, sigmoid, softplus, sparse, CsrMatrix, SparseVec};
 
+/// Rows per full-gradient chunk — the granularity of the fixed-order
+/// partial-sum reduction both [`Objective::grad`] and
+/// [`LogisticRidge::grad_parallel`] run.
+const GRAD_CHUNK_ROWS: usize = 256;
+
+/// Upper bound on the chunk count (bounds the parallel path's partial
+/// buffers to ≤ `64·d` floats however large the shard grows).
+const GRAD_MAX_CHUNKS: usize = 64;
+
+/// Deterministic chunk geometry for an `n`-row full gradient:
+/// `(rows_per_chunk, chunks)`. Derived from `n` and fixed constants only —
+/// never from the thread count or any machine state — so the reduction tree
+/// (and therefore every bit of the result) is identical on every machine
+/// and at every parallelism level.
+fn grad_chunks(n: usize) -> (usize, usize) {
+    let rows = GRAD_CHUNK_ROWS.max(n.div_ceil(GRAD_MAX_CHUNKS));
+    (rows, n.div_ceil(rows))
+}
+
 /// Logistic-ridge objective over dense or CSR margin storage.
 #[derive(Clone, Debug)]
 pub struct LogisticRidge {
@@ -221,6 +240,101 @@ impl LogisticRidge {
             out.push(j, scratch[j as usize]);
         }
     }
+
+    /// The shared inner kernel of [`Objective::grad`] and
+    /// [`Self::grad_parallel`]: accumulate the logistic part of rows
+    /// `lo..hi` into `acc` (no zeroing, no ridge), in ascending row order —
+    /// `acc += Σ_{i ∈ lo..hi} −(σ(−z_i·w)/n)·z_i`.
+    fn grad_accum_rows(&self, lo: usize, hi: usize, w: &[f64], acc: &mut [f64]) {
+        let inv_n = 1.0 / self.n as f64;
+        match &self.z {
+            Features::Dense(z) => {
+                for i in lo..hi {
+                    let row = &z[i * self.d..(i + 1) * self.d];
+                    let s = linalg::dot(row, w);
+                    let c = -sigmoid(-s) * inv_n;
+                    linalg::axpy(c, row, acc);
+                }
+            }
+            Features::Csr(m) => {
+                for i in lo..hi {
+                    let (idx, vals) = m.row(i);
+                    let s = sparse::spdot(idx, vals, w);
+                    let c = -sigmoid(-s) * inv_n;
+                    sparse::spaxpy(c, idx, vals, acc);
+                }
+            }
+        }
+    }
+
+    /// Chunk-parallel full gradient — **bit-identical** to
+    /// [`Objective::grad`] at every `n`, every machine, and every thread
+    /// count (pinned by `grad_parallel_bit_identical_to_serial` here and the
+    /// lockstep property test in `tests/properties.rs`). Three invariants
+    /// make that hold:
+    ///
+    /// 1. chunk boundaries come from [`grad_chunks`] — `n` and fixed
+    ///    constants only;
+    /// 2. each chunk's partial sum is computed row-ascending into its own
+    ///    zeroed buffer, exactly as the serial path computes it;
+    /// 3. partials are reduced serially in ascending chunk order (no
+    ///    atomics, no FMA, no arrival-order folding).
+    ///
+    /// Threads only decide *when* a partial is computed, never *what* is
+    /// summed with what. This is the per-epoch snapshot/full-gradient path
+    /// (`GradientSource::snapshot_grad`, `InProcessCluster`); per-turn
+    /// kernels (`grad_delta`, `spmv_t_acc`) stay serial — their O(nnz)
+    /// work per call is far below the cost of a thread fan-out.
+    pub fn grad_parallel(&self, w: &[f64], out: &mut [f64]) {
+        debug_assert_eq!(w.len(), self.d);
+        debug_assert_eq!(out.len(), self.d);
+        let (rows, chunks) = grad_chunks(self.n);
+        if chunks <= 1 {
+            Objective::grad(self, w, out);
+            return;
+        }
+        let d = self.d;
+        let mut partials = vec![0.0; chunks * d];
+        let workers = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .min(chunks);
+        if workers <= 1 {
+            for (c, part) in partials.chunks_mut(d).enumerate() {
+                let lo = c * rows;
+                self.grad_accum_rows(lo, (lo + rows).min(self.n), w, part);
+            }
+        } else {
+            // round-robin chunk → lane assignment: each partial is written
+            // by exactly one thread and reduced below in fixed ascending
+            // chunk order, so the worker count never touches the float
+            // schedule
+            let mut lanes: Vec<Vec<(usize, &mut [f64])>> =
+                (0..workers).map(|_| Vec::new()).collect();
+            for (c, part) in partials.chunks_mut(d).enumerate() {
+                lanes[c % workers].push((c, part));
+            }
+            std::thread::scope(|scope| {
+                for lane in lanes {
+                    scope.spawn(move || {
+                        for (c, part) in lane {
+                            let lo = c * rows;
+                            self.grad_accum_rows(lo, (lo + rows).min(self.n), w, part);
+                        }
+                    });
+                }
+            });
+        }
+        for o in out.iter_mut() {
+            *o = 0.0;
+        }
+        for part in partials.chunks(d) {
+            for (o, &p) in out.iter_mut().zip(part) {
+                *o += p;
+            }
+        }
+        linalg::axpy(2.0 * self.lambda, w, out);
+    }
 }
 
 impl Objective for LogisticRidge {
@@ -258,23 +372,24 @@ impl Objective for LogisticRidge {
         for o in out.iter_mut() {
             *o = 0.0;
         }
-        // single pass: coeff_i = -σ(-z_i·w)/n, out += Σ coeff_i z_i
-        let inv_n = 1.0 / self.n as f64;
-        match &self.z {
-            Features::Dense(z) => {
-                for i in 0..self.n {
-                    let row = &z[i * self.d..(i + 1) * self.d];
-                    let s = linalg::dot(row, w);
-                    let c = -sigmoid(-s) * inv_n;
-                    linalg::axpy(c, row, out);
+        // coeff_i = -σ(-z_i·w)/n, out = Σ coeff_i z_i + 2λw, summed in the
+        // canonical fixed-chunk-order shape (see `grad_chunks`): that shape
+        // is what makes `grad_parallel` bit-identical to this path
+        let (rows, chunks) = grad_chunks(self.n);
+        if chunks <= 1 {
+            // single chunk (n ≤ GRAD_CHUNK_ROWS): accumulate straight into
+            // `out` — the historical single-accumulator float sequence
+            self.grad_accum_rows(0, self.n, w, out);
+        } else {
+            let mut tmp = vec![0.0; self.d];
+            for c in 0..chunks {
+                let lo = c * rows;
+                for t in tmp.iter_mut() {
+                    *t = 0.0;
                 }
-            }
-            Features::Csr(m) => {
-                for i in 0..self.n {
-                    let (idx, vals) = m.row(i);
-                    let s = sparse::spdot(idx, vals, w);
-                    let c = -sigmoid(-s) * inv_n;
-                    sparse::spaxpy(c, idx, vals, out);
+                self.grad_accum_rows(lo, (lo + rows).min(self.n), w, &mut tmp);
+                for (o, &t) in out.iter_mut().zip(&tmp) {
+                    *o += t;
                 }
             }
         }
@@ -527,6 +642,53 @@ mod tests {
         let mut out = SparseVec::new();
         sp.grad_delta(&w, &w, &mut scratch, &mut out);
         assert!(out.val.iter().all(|&v| v == 0.0), "{:?}", out.val);
+    }
+
+    #[test]
+    fn grad_chunk_geometry_is_fixed_by_n_alone() {
+        // single chunk up to the chunk size…
+        assert_eq!(grad_chunks(1), (256, 1));
+        assert_eq!(grad_chunks(256), (256, 1));
+        // …then 256-row chunks…
+        assert_eq!(grad_chunks(257), (256, 2));
+        assert_eq!(grad_chunks(1000), (256, 4));
+        // …until the chunk-count cap widens the chunks instead
+        let (rows, chunks) = grad_chunks(1_000_000);
+        assert_eq!(rows, 15_625); // ceil(1e6 / 64)
+        assert_eq!(chunks, 64);
+        // the cap holds everywhere
+        for n in [1usize, 300, 16_384, 999_999, 12_345_678] {
+            let (rows, chunks) = grad_chunks(n);
+            assert!(chunks <= GRAD_MAX_CHUNKS);
+            assert!(rows * chunks >= n);
+            assert!(rows * (chunks - 1) < n || chunks == 1);
+        }
+    }
+
+    #[test]
+    fn grad_parallel_bit_identical_to_serial() {
+        // multi-chunk sizes on both storages, including a ragged final
+        // chunk (n % 256 != 0) and an n below the chunk size (fast path)
+        for n in [5usize, 100, 300, 700] {
+            let mut ds = crate::data::synthetic::power_like(n, 4);
+            ds.standardize();
+            for obj in [
+                LogisticRidge::from_dataset(&ds, 0.1),
+                LogisticRidge::from_dataset(&ds.to_csr(), 0.1),
+            ] {
+                let w: Vec<f64> = (0..ds.d).map(|j| 0.4 - 0.09 * j as f64).collect();
+                let mut serial = vec![0.0; ds.d];
+                let mut par = vec![0.0; ds.d];
+                obj.grad(&w, &mut serial);
+                obj.grad_parallel(&w, &mut par);
+                assert_eq!(
+                    serial.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    par.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "n={n} sparse={}",
+                    obj.is_sparse()
+                );
+            }
+        }
     }
 
     #[test]

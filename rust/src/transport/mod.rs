@@ -217,9 +217,56 @@ impl Message {
         Ok(())
     }
 
+    /// Exact encoded size in bytes — the capacity [`Self::encode`] reserves
+    /// up front (one allocation, no growth reallocs; pinned by
+    /// `encode_reserves_exact_capacity_per_variant`). Kept in lockstep with
+    /// [`Self::write_to`] by the same test.
+    pub fn encoded_len(&self) -> usize {
+        1 + match self {
+            Message::Config { .. } => 2 + 4 * 1 + 8 + 4 + 8 + 8 + 8,
+            Message::EpochBegin { .. } => 4 + 1,
+            Message::EpochRevert
+            | Message::InnerRequest
+            | Message::InnerDeltaRequest
+            | Message::QueryLoss
+            | Message::Shutdown
+            | Message::Ack => 0,
+            Message::EpochCommit { .. } | Message::LossValue { .. } => 8,
+            Message::InnerSetup { g_tilde, .. } => 8 + 4 + 8 * g_tilde.len(),
+            Message::GradDelta { idx, .. } => 4 + 4 + 12 * idx.len(),
+            Message::DeltaApply { idx, .. } => 4 + 12 * idx.len(),
+            Message::ParamsQ { payload, .. } => 8 + 4 + payload.len(),
+            Message::SnapshotChoose { .. } => 4,
+            Message::SnapshotSet { w, prev } => 4 + 8 * w.len() + 4 + 8 * prev.len(),
+            Message::GradRaw { g } => 4 + 8 * g.len(),
+            Message::GradQ { payload, .. } => 8 + 4 + 4 + payload.len(),
+        }
+    }
+
     /// Serialize to the wire format: `tag` byte + fields in little-endian.
+    /// Reserves exactly [`Self::encoded_len`] up front (the old flat
+    /// `with_capacity(16)` under-reserved every payload-carrying variant —
+    /// e.g. `SnapshotSet` at `2·8·d` bytes — forcing growth reallocs + copies
+    /// on the hot path).
     pub fn encode(&self) -> Vec<u8> {
-        let mut b = Vec::with_capacity(16);
+        let mut b = Vec::with_capacity(self.encoded_len());
+        self.write_to(&mut b);
+        b
+    }
+
+    /// Serialize into a reusable buffer: clear, reserve exactly what this
+    /// message needs, write. Steady-state (a warm buffer at least this
+    /// large) performs zero allocations — the per-link scratch the
+    /// transports reuse across frames.
+    pub fn encode_into(&self, buf: &mut Vec<u8>) {
+        buf.clear();
+        buf.reserve(self.encoded_len());
+        self.write_to(buf);
+    }
+
+    /// Append this message's wire bytes to `b` (the one per-variant writer;
+    /// `encode`/`encode_into` wrap it with capacity management).
+    fn write_to(&self, b: &mut Vec<u8>) {
         match self {
             Message::Config {
                 version,
@@ -309,7 +356,6 @@ impl Message {
             }
             Message::Ack => b.push(Self::TAG_ACK),
         }
-        b
     }
 
     /// Decode from the wire format.
@@ -402,6 +448,164 @@ impl Message {
             // churn state sync ships two raw snapshots to the rejoiner
             Message::SnapshotSet { w, prev } => 64 * (w.len() + prev.len()) as u64,
             _ => 0,
+        }
+    }
+}
+
+/// A message to send, by reference: the borrowed-payload twin of
+/// [`Message`] for the hot wire variants, so a send site with the payload
+/// already in hand (the quantizer's packed bytes, a delta's idx/val slices,
+/// a cached gradient) can frame it **without materializing an owned
+/// `Message`** — no payload clone, no `to_vec`, per turn or per link.
+///
+/// Wire bytes are identical to encoding the owned twin
+/// ([`Self::to_message`]), pinned by `frame_ref_encodes_identically`.
+/// Cold/control messages ride through [`FrameRef::Msg`].
+///
+/// `Copy` (shared slices + scalars only), so one frame value fans out
+/// across N links without cloning anything.
+#[derive(Debug, Clone, Copy)]
+pub enum FrameRef<'a> {
+    /// Borrowed [`Message::GradRaw`].
+    GradRaw { g: &'a [f64] },
+    /// Borrowed [`Message::GradQ`] (the quantized uplink hot variant).
+    GradQ {
+        payload: &'a [u8],
+        bits: u64,
+        sats: u32,
+    },
+    /// Borrowed [`Message::GradDelta`] (the lazy-protocol uplink).
+    GradDelta {
+        basis: u32,
+        idx: &'a [u32],
+        val: &'a [f64],
+    },
+    /// Borrowed [`Message::DeltaApply`] (the lazy-protocol broadcast).
+    DeltaApply { idx: &'a [u32], val: &'a [f64] },
+    /// Borrowed [`Message::InnerSetup`] (the per-epoch g̃ broadcast).
+    InnerSetup { step: f64, g_tilde: &'a [f64] },
+    /// Borrowed [`Message::ParamsQ`] (the quantized parameter broadcast).
+    ParamsQ { payload: &'a [u8], bits: u64 },
+    /// Any other (control/cold) message, by reference.
+    Msg(&'a Message),
+}
+
+impl FrameRef<'_> {
+    /// Exact encoded size in bytes (see [`Message::encoded_len`]).
+    pub fn encoded_len(&self) -> usize {
+        match self {
+            FrameRef::GradRaw { g } => 1 + 4 + 8 * g.len(),
+            FrameRef::GradQ { payload, .. } => 1 + 8 + 4 + 4 + payload.len(),
+            FrameRef::GradDelta { idx, .. } => 1 + 4 + 4 + 12 * idx.len(),
+            FrameRef::DeltaApply { idx, .. } => 1 + 4 + 12 * idx.len(),
+            FrameRef::InnerSetup { g_tilde, .. } => 1 + 8 + 4 + 8 * g_tilde.len(),
+            FrameRef::ParamsQ { payload, .. } => 1 + 8 + 4 + payload.len(),
+            FrameRef::Msg(m) => m.encoded_len(),
+        }
+    }
+
+    /// Append this frame's wire bytes to `b` — byte-for-byte what encoding
+    /// [`Self::to_message`] would produce.
+    pub fn write_to(&self, b: &mut Vec<u8>) {
+        match self {
+            FrameRef::GradRaw { g } => {
+                b.push(Message::TAG_GRAD_RAW);
+                encode_f64s(b, g);
+            }
+            FrameRef::GradQ {
+                payload,
+                bits,
+                sats,
+            } => {
+                b.push(Message::TAG_GRAD_Q);
+                b.extend_from_slice(&bits.to_le_bytes());
+                b.extend_from_slice(&sats.to_le_bytes());
+                b.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+                b.extend_from_slice(payload);
+            }
+            FrameRef::GradDelta { basis, idx, val } => {
+                b.push(Message::TAG_GRAD_DELTA);
+                b.extend_from_slice(&basis.to_le_bytes());
+                encode_delta(b, idx, val);
+            }
+            FrameRef::DeltaApply { idx, val } => {
+                b.push(Message::TAG_DELTA_APPLY);
+                encode_delta(b, idx, val);
+            }
+            FrameRef::InnerSetup { step, g_tilde } => {
+                b.push(Message::TAG_INNER_SETUP);
+                b.extend_from_slice(&step.to_le_bytes());
+                encode_f64s(b, g_tilde);
+            }
+            FrameRef::ParamsQ { payload, bits } => {
+                b.push(Message::TAG_PARAMS_Q);
+                b.extend_from_slice(&bits.to_le_bytes());
+                b.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+                b.extend_from_slice(payload);
+            }
+            FrameRef::Msg(m) => m.write_to(b),
+        }
+    }
+
+    /// Encode the **full length-prefixed wire frame** (u32 LE body length +
+    /// body) into a reusable scratch buffer — what a broadcast pre-encodes
+    /// once and every pre-encoding link ([`Duplex::PREENCODES`]) writes
+    /// verbatim. Steady-state (warm scratch) allocates nothing.
+    pub fn encode_framed_into(&self, buf: &mut Vec<u8>) {
+        let len = self.encoded_len();
+        buf.clear();
+        buf.reserve(4 + len);
+        buf.extend_from_slice(&(len as u32).to_le_bytes());
+        self.write_to(buf);
+        debug_assert_eq!(buf.len(), 4 + len);
+    }
+
+    /// Materialize the owned twin (what non-wire transports pass through
+    /// their channels).
+    pub fn to_message(&self) -> Message {
+        match self {
+            FrameRef::GradRaw { g } => Message::GradRaw { g: g.to_vec() },
+            FrameRef::GradQ {
+                payload,
+                bits,
+                sats,
+            } => Message::GradQ {
+                payload: payload.to_vec(),
+                bits: *bits,
+                sats: *sats,
+            },
+            FrameRef::GradDelta { basis, idx, val } => Message::GradDelta {
+                basis: *basis,
+                idx: idx.to_vec(),
+                val: val.to_vec(),
+            },
+            FrameRef::DeltaApply { idx, val } => Message::DeltaApply {
+                idx: idx.to_vec(),
+                val: val.to_vec(),
+            },
+            FrameRef::InnerSetup { step, g_tilde } => Message::InnerSetup {
+                step: *step,
+                g_tilde: g_tilde.to_vec(),
+            },
+            FrameRef::ParamsQ { payload, bits } => Message::ParamsQ {
+                payload: payload.to_vec(),
+                bits: *bits,
+            },
+            FrameRef::Msg(m) => (*m).clone(),
+        }
+    }
+
+    /// Ledger bits — same rule as [`Message::ledger_bits`] on the owned
+    /// twin (the `SimDuplex` charge and every broadcast metering site).
+    pub fn ledger_bits(&self) -> u64 {
+        match self {
+            FrameRef::GradRaw { g } => 64 * g.len() as u64,
+            FrameRef::GradQ { bits, .. } | FrameRef::ParamsQ { bits, .. } => *bits,
+            FrameRef::GradDelta { idx, .. } | FrameRef::DeltaApply { idx, .. } => {
+                Message::delta_bits(idx.len())
+            }
+            FrameRef::InnerSetup { g_tilde, .. } => 64 * g_tilde.len() as u64,
+            FrameRef::Msg(m) => m.ledger_bits(),
         }
     }
 }
@@ -502,14 +706,44 @@ impl<'a> Reader<'a> {
 
 /// A bidirectional, blocking message link (one end of a master↔worker pair).
 pub trait Duplex: Send {
+    /// True when this transport serializes messages to wire bytes on send,
+    /// so a broadcast can pre-encode the frame **once** and hand every link
+    /// the same bytes via [`Self::send_preencoded`]. False for transports
+    /// that pass `Message` objects through channels (local, in-process),
+    /// where pre-encoding would be pure waste.
+    const PREENCODES: bool = false;
+
     fn send(&mut self, msg: Message) -> Result<()>;
+
+    /// Send a borrowed frame. Wire transports override this to encode the
+    /// payload straight out of the caller's slices into per-link scratch —
+    /// zero owned `Message`, zero per-frame allocation at steady state. The
+    /// default materializes the owned twin, which is the right call for
+    /// channel transports (they need an owned object anyway).
+    fn send_frame(&mut self, frame: FrameRef<'_>) -> Result<()> {
+        self.send(frame.to_message())
+    }
+
+    /// Send a frame whose **full prefixed wire bytes** were already encoded
+    /// (by [`FrameRef::encode_framed_into`]) — the broadcast fast path when
+    /// [`Self::PREENCODES`] is true: one encode, N verbatim writes. The
+    /// default ignores the bytes and re-dispatches through `send_frame`,
+    /// which keeps non-wire transports correct if called anyway.
+    fn send_preencoded(&mut self, frame: FrameRef<'_>, encoded: &[u8]) -> Result<()> {
+        let _ = encoded;
+        self.send_frame(frame)
+    }
+
     fn recv(&mut self) -> Result<Message>;
 
     /// Receive with a deadline: `Ok(Some(msg))` on arrival, `Ok(None)` on a
-    /// clean timeout (no frame bytes consumed — the link is still usable),
-    /// `Err` on disconnect or a timeout that left a frame half-read. The
-    /// async driver's straggler detection is built on this; the default
-    /// blocks forever, which is exactly the lockstep behaviour.
+    /// clean timeout, `Err` on disconnect. The TCP impl keeps partial-frame
+    /// state (header and body bytes read so far) across calls, so a timeout
+    /// mid-frame — a peer that sent a length prefix then stalled — returns
+    /// `Ok(None)` and the next call resumes the same frame where it left
+    /// off; the link stays usable either way. The async driver's straggler
+    /// detection is built on this; the default blocks forever, which is
+    /// exactly the lockstep behaviour.
     fn recv_deadline(&mut self, timeout: std::time::Duration) -> Result<Option<Message>> {
         let _ = timeout;
         self.recv().map(Some)
@@ -582,6 +816,100 @@ mod tests {
             let bytes = msg.encode();
             let back = Message::decode(&bytes).unwrap();
             assert_eq!(back, msg, "roundtrip {msg:?}");
+        }
+    }
+
+    /// `encode` must reserve exactly once, at exactly the final size, for
+    /// every variant — the fix for the old flat `with_capacity(16)` that
+    /// under-reserved every payload-carrying frame (`SnapshotSet` alone is
+    /// `2·8·d` bytes) and forced reallocation-by-doubling on the hot path.
+    #[test]
+    fn encode_reserves_exact_capacity_per_variant() {
+        for msg in all_messages() {
+            let b = msg.encode();
+            assert_eq!(b.len(), msg.encoded_len(), "encoded_len wrong for {msg:?}");
+            assert_eq!(
+                b.capacity(),
+                b.len(),
+                "encode over- or re-allocated for {msg:?}"
+            );
+        }
+    }
+
+    /// `encode_into` a warm scratch buffer: same bytes, no growth once the
+    /// buffer has seen the largest frame (the steady-state send contract).
+    #[test]
+    fn encode_into_reuses_scratch_without_growth() {
+        let mut scratch = Vec::new();
+        for msg in all_messages() {
+            msg.encode_into(&mut scratch);
+            assert_eq!(scratch, msg.encode(), "encode_into differs for {msg:?}");
+        }
+        let cap = scratch.capacity();
+        for msg in all_messages() {
+            msg.encode_into(&mut scratch);
+        }
+        assert_eq!(scratch.capacity(), cap, "second pass grew the scratch");
+    }
+
+    fn frame_refs(msgs: &[Message]) -> Vec<FrameRef<'_>> {
+        msgs.iter()
+            .map(|m| match m {
+                Message::GradRaw { g } => FrameRef::GradRaw { g },
+                Message::GradQ {
+                    payload,
+                    bits,
+                    sats,
+                } => FrameRef::GradQ {
+                    payload,
+                    bits: *bits,
+                    sats: *sats,
+                },
+                Message::GradDelta { basis, idx, val } => FrameRef::GradDelta {
+                    basis: *basis,
+                    idx,
+                    val,
+                },
+                Message::DeltaApply { idx, val } => FrameRef::DeltaApply { idx, val },
+                Message::InnerSetup { step, g_tilde } => FrameRef::InnerSetup {
+                    step: *step,
+                    g_tilde,
+                },
+                Message::ParamsQ { payload, bits } => FrameRef::ParamsQ {
+                    payload,
+                    bits: *bits,
+                },
+                other => FrameRef::Msg(other),
+            })
+            .collect()
+    }
+
+    /// The borrowed frame and its owned twin must agree on everything the
+    /// wire or the ledger can observe: bytes, declared length, cost.
+    #[test]
+    fn frame_ref_encodes_identically() {
+        let msgs = all_messages();
+        for (msg, frame) in msgs.iter().zip(frame_refs(&msgs)) {
+            let mut via_frame = Vec::new();
+            frame.write_to(&mut via_frame);
+            assert_eq!(via_frame, msg.encode(), "byte mismatch for {msg:?}");
+            assert_eq!(frame.encoded_len(), msg.encoded_len(), "len for {msg:?}");
+            assert_eq!(frame.ledger_bits(), msg.ledger_bits(), "bits for {msg:?}");
+            assert_eq!(&frame.to_message(), msg, "owned twin for {msg:?}");
+        }
+    }
+
+    /// `encode_framed_into` emits the exact TCP frame: u32-LE body length,
+    /// then the body `decode` accepts back to the original message.
+    #[test]
+    fn frame_ref_framed_encoding_roundtrips() {
+        let msgs = all_messages();
+        let mut scratch = Vec::new();
+        for (msg, frame) in msgs.iter().zip(frame_refs(&msgs)) {
+            frame.encode_framed_into(&mut scratch);
+            let len = u32::from_le_bytes(scratch[..4].try_into().unwrap()) as usize;
+            assert_eq!(len, msg.encoded_len());
+            assert_eq!(&Message::decode(&scratch[4..]).unwrap(), msg);
         }
     }
 

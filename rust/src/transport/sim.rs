@@ -86,7 +86,10 @@ impl<D: Duplex> SimDuplex<D> {
     }
 
     fn charge(&mut self, msg: &Message, sending: bool) {
-        let bits = msg.ledger_bits();
+        self.charge_bits(msg.ledger_bits(), sending);
+    }
+
+    fn charge_bits(&mut self, bits: u64, sending: bool) {
         if bits == 0 {
             // control messages still pay latency
             self.virtual_time_s += self.model.latency_s;
@@ -103,9 +106,22 @@ impl<D: Duplex> SimDuplex<D> {
 }
 
 impl<D: Duplex> Duplex for SimDuplex<D> {
+    // pre-encoding is a property of the wrapped wire, not the meter
+    const PREENCODES: bool = D::PREENCODES;
+
     fn send(&mut self, msg: Message) -> Result<()> {
         self.charge(&msg, true);
         self.inner.send(msg)
+    }
+
+    fn send_frame(&mut self, frame: super::FrameRef<'_>) -> Result<()> {
+        self.charge_bits(frame.ledger_bits(), true);
+        self.inner.send_frame(frame)
+    }
+
+    fn send_preencoded(&mut self, frame: super::FrameRef<'_>, encoded: &[u8]) -> Result<()> {
+        self.charge_bits(frame.ledger_bits(), true);
+        self.inner.send_preencoded(frame, encoded)
     }
 
     fn recv(&mut self) -> Result<Message> {
@@ -257,6 +273,41 @@ mod tests {
         master.send(Message::InnerRequest).unwrap();
         assert_eq!(master.virtual_time_s, 0.5);
         assert_eq!(master.downlink_bits, 0);
+        let _ = w_end.recv().unwrap();
+    }
+
+    #[test]
+    fn borrowed_frames_charge_like_owned_messages() {
+        use crate::transport::FrameRef;
+        let (m_end, mut w_end) = pair();
+        let model = LinkModel {
+            latency_s: 0.0,
+            uplink_bps: 1.0,
+            downlink_bps: 2.0,
+        };
+        let mut master = SimDuplex::new(m_end, model, true);
+        let g = vec![0.0, 1.0];
+        // borrowed g̃ broadcast meters the same 128 downlink bits / 64 s the
+        // owned send in `master_send_charges_downlink` does
+        master
+            .send_frame(FrameRef::InnerSetup {
+                step: 0.2,
+                g_tilde: &g,
+            })
+            .unwrap();
+        assert_eq!(master.downlink_bits, 128);
+        assert!((master.virtual_time_s - 64.0).abs() < 1e-9);
+        assert_eq!(w_end.recv().unwrap().ledger_bits(), 128);
+        // the pre-encoded path meters identically too
+        let frame = FrameRef::InnerSetup {
+            step: 0.2,
+            g_tilde: &g,
+        };
+        let mut pre = Vec::new();
+        frame.encode_framed_into(&mut pre);
+        master.send_preencoded(frame, &pre).unwrap();
+        assert_eq!(master.downlink_bits, 256);
+        assert!((master.virtual_time_s - 128.0).abs() < 1e-9);
         let _ = w_end.recv().unwrap();
     }
 

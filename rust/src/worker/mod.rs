@@ -30,7 +30,7 @@ use crate::objective::{LogisticRidge, Objective};
 use crate::quant::{CompressorKind, GridPolicy, QuantState};
 use crate::rng::Xoshiro256pp;
 use crate::runtime::{XlaRuntime, XlaWorkerKernel};
-use crate::transport::{Duplex, Message, PROTO_VERSION};
+use crate::transport::{Duplex, FrameRef, Message, PROTO_VERSION};
 
 /// How a worker computes its shard gradients.
 ///
@@ -41,6 +41,19 @@ use crate::transport::{Duplex, Message, PROTO_VERSION};
 pub trait GradientSource {
     fn dim(&self) -> usize;
     fn grad(&self, w: &[f64], out: &mut [f64]) -> Result<()>;
+
+    /// Full-gradient refresh at an epoch boundary (`EpochBegin` /
+    /// `EpochRevert`) — the per-epoch Θ(shard nnz) computation Algorithm 1
+    /// charges every round for, and the one place intra-shard parallelism
+    /// pays. Defaults to [`Self::grad`]; `LogisticRidge` overrides with the
+    /// chunk-parallel [`LogisticRidge::grad_parallel`], which is
+    /// bit-identical to `grad` by the fixed-chunk-order reduction (see
+    /// `objective/logistic.rs`). Inner-loop gradients stay on `grad` — per
+    /// turn the work is too small to amortize a thread fan-out.
+    fn snapshot_grad(&self, w: &[f64], out: &mut [f64]) -> Result<()> {
+        self.grad(w, out)
+    }
+
     fn loss(&self, w: &[f64]) -> f64;
 
     /// Ridge coefficient λ of this shard's objective — the analytic part of
@@ -96,6 +109,10 @@ impl<B: GradientSource + ?Sized> GradientSource for Box<B> {
         (**self).grad(w, out)
     }
 
+    fn snapshot_grad(&self, w: &[f64], out: &mut [f64]) -> Result<()> {
+        (**self).snapshot_grad(w, out)
+    }
+
     fn loss(&self, w: &[f64]) -> f64 {
         (**self).loss(w)
     }
@@ -127,6 +144,12 @@ impl GradientSource for LogisticRidge {
 
     fn grad(&self, w: &[f64], out: &mut [f64]) -> Result<()> {
         Objective::grad(self, w, out);
+        Ok(())
+    }
+
+    fn snapshot_grad(&self, w: &[f64], out: &mut [f64]) -> Result<()> {
+        // epoch-boundary refresh: chunk-parallel, bit-identical to `grad`
+        LogisticRidge::grad_parallel(self, w, out);
         Ok(())
     }
 
@@ -379,17 +402,17 @@ impl<D: Duplex, B: GradientSource> WorkerNode<D, B> {
                     // computes against it next epoch); `reply = 0` (an async
                     // partial-participation round where this worker is
                     // outside the quorum) skips the 64·d uplink.
-                    self.backend.grad(&w_snapshot, &mut g_snapshot)?;
+                    self.backend.snapshot_grad(&w_snapshot, &mut g_snapshot)?;
                     if reply == 1 {
-                        self.link.send(Message::GradRaw {
-                            g: g_snapshot.clone(),
-                        })?;
+                        // borrowed uplink: the cached gradient is framed
+                        // straight from its buffer, no owned clone
+                        self.link.send_frame(FrameRef::GradRaw { g: &g_snapshot })?;
                     }
                 }
                 Message::EpochRevert => {
                     // memory unit rejected: restore previous snapshot
                     w_snapshot.copy_from_slice(&w_snapshot_prev);
-                    self.backend.grad(&w_snapshot, &mut g_snapshot)?;
+                    self.backend.snapshot_grad(&w_snapshot, &mut g_snapshot)?;
                     self.link.send(Message::Ack)?;
                 }
                 Message::EpochCommit { gnorm: gn } => {
@@ -425,23 +448,24 @@ impl<D: Duplex, B: GradientSource> WorkerNode<D, B> {
                         .as_mut()
                         .context("InnerRequest on an unquantized link (lazy runs use InnerDeltaRequest)")?;
                     self.backend.grad(&w_cur, &mut g_cur)?;
-                    // uplink 1: compressed snapshot gradient
+                    // uplink 1: compressed snapshot gradient — the packed
+                    // bytes are framed straight out of the encoder's buffer
                     let e = comp.encode(grid, 0, &g_snapshot, &mut self.rng, &mut g_rx)?;
-                    self.link.send(Message::GradQ {
+                    self.link.send_frame(FrameRef::GradQ {
+                        payload: &e.payload.bytes,
                         bits: e.payload.bits,
-                        payload: e.payload.bytes,
                         sats: e.sats,
                     })?;
                     // uplink 2: current gradient (raw or compressed)
                     if plus {
                         let e = comp.encode(grid, 0, &g_cur, &mut self.rng, &mut g_rx)?;
-                        self.link.send(Message::GradQ {
+                        self.link.send_frame(FrameRef::GradQ {
+                            payload: &e.payload.bytes,
                             bits: e.payload.bits,
-                            payload: e.payload.bytes,
                             sats: e.sats,
                         })?;
                     } else {
-                        self.link.send(Message::GradRaw { g: g_cur.clone() })?;
+                        self.link.send_frame(FrameRef::GradRaw { g: &g_cur })?;
                     }
                 }
                 Message::InnerDeltaRequest => {
@@ -460,13 +484,13 @@ impl<D: Duplex, B: GradientSource> WorkerNode<D, B> {
                         &mut delta_scratch,
                         &mut delta,
                     )?;
-                    self.link.send(Message::GradDelta {
+                    self.link.send_frame(FrameRef::GradDelta {
                         // the inner time this delta was computed against —
                         // the async master gates it through the staleness
                         // window; lockstep always sees basis == applied count
                         basis: lazy.t() as u32,
-                        idx: delta.idx.clone(),
-                        val: delta.val.clone(),
+                        idx: &delta.idx,
+                        val: &delta.val,
                     })?;
                 }
                 Message::DeltaApply { idx, val } => {

@@ -405,6 +405,54 @@ fn prop_sparse_and_dense_objectives_agree() {
     });
 }
 
+/// The chunk-parallel full gradient vs the serial path, in lockstep:
+/// **bit-identical** (`to_bits` equality, not a tolerance) across random
+/// problem shapes spanning both sides of the chunking threshold, both
+/// storages, random λ (including 0), and random iterates. The fixed-order
+/// partial reduction (`objective/logistic.rs::grad_chunks`) is what makes
+/// threads unable to touch the float schedule; this test is the pin.
+#[test]
+fn prop_parallel_full_gradient_bitwise_lockstep_with_serial() {
+    use qmsvrg::data::Dataset;
+    use qmsvrg::objective::{LogisticRidge, Objective};
+
+    forall(20, 0x9A7, |rng| {
+        // n spans 1 chunk (≤256), a ragged tail, and several chunks
+        let n = 16 + rng.gen_index(900);
+        let d = 3 + rng.gen_index(12);
+        let density = rng.gen_uniform(0.1, 1.0);
+        let mut x = vec![0.0; n * d];
+        for v in x.iter_mut() {
+            if rng.next_f64() < density {
+                *v = rng.gen_uniform(-2.0, 2.0);
+            }
+        }
+        let y: Vec<f64> = (0..n)
+            .map(|_| if rng.gen_bool(0.5) { 1.0 } else { -1.0 })
+            .collect();
+        let dense_ds = Dataset::new(x, y, n, d).unwrap();
+        let lambda = if rng.gen_bool(0.2) {
+            0.0
+        } else {
+            rng.gen_uniform(0.01, 0.5)
+        };
+        let w = gen_vec(rng, d, -1.5, 1.5);
+        for ds in [dense_ds.clone(), dense_ds.to_csr()] {
+            let obj = LogisticRidge::from_dataset(&ds, lambda);
+            let mut serial = vec![0.0; d];
+            let mut par = vec![0.0; d];
+            obj.grad(&w, &mut serial);
+            obj.grad_parallel(&w, &mut par);
+            assert_eq!(
+                serial.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                par.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "n={n} d={d} sparse={} lambda={lambda}",
+                obj.is_sparse()
+            );
+        }
+    });
+}
+
 /// Satellite (CI fixture): the tiny sparse libsvm file loads as CSR, trains
 /// end-to-end through the public driver, and rejects its corrupted twin.
 #[test]

@@ -1,0 +1,97 @@
+#!/usr/bin/env bash
+# Perf regression gate: re-run every bench that has a committed
+# BENCH_*.json baseline and compare the numeric `extra` ratios (the
+# speedup figures the perf log in EXPERIMENTS.md quotes) against the
+# committed values. Higher is better for every ratio we record, so the
+# gate fails when a fresh ratio drops below (1 - TOLERANCE) x baseline.
+#
+# No committed baseline -> clean skip (exit 0): the gate only starts
+# biting once a BENCH_*.json has been recorded and checked in. Run in CI
+# as an *advisory* step (continue-on-error) — shared-runner noise must
+# not block a merge, but the delta is on the record.
+#
+# Usage: scripts/bench_gate.sh [tolerance]
+#   tolerance: allowed fractional regression, default 0.25 (25%).
+
+set -euo pipefail
+
+TOLERANCE="${1:-0.25}"
+repo_root="$(cd "$(dirname "$0")/.." && pwd)"
+cd "$repo_root/rust"
+
+mapfile -t committed < <(git ls-files 'BENCH_*.json')
+if [ "${#committed[@]}" -eq 0 ]; then
+  echo "bench_gate: no committed BENCH_*.json baselines — skipping (record one first)"
+  exit 0
+fi
+
+baseline_dir="$(mktemp -d)"
+trap 'rm -rf "$baseline_dir"' EXIT
+
+status=0
+for f in "${committed[@]}"; do
+  # baseline = the committed bytes, not the working tree (which the fresh
+  # run is about to overwrite)
+  git show "HEAD:rust/$f" > "$baseline_dir/$f"
+
+  bench="bench_${f#BENCH_}"
+  bench="${bench%.json}"
+  echo "== bench_gate: $bench (baseline $f, tolerance ${TOLERANCE}) =="
+  if ! cargo bench --bench "$bench"; then
+    echo "bench_gate: $bench failed to run"
+    status=1
+    continue
+  fi
+
+  python3 - "$baseline_dir/$f" "$f" "$TOLERANCE" <<'PY' || status=1
+import json, sys
+
+base_path, fresh_path, tol = sys.argv[1], sys.argv[2], float(sys.argv[3])
+base = json.load(open(base_path))
+fresh = json.load(open(fresh_path))
+
+def numeric(extras):
+    out = {}
+    for k, v in extras.items():
+        try:
+            out[k] = float(v)
+        except (TypeError, ValueError):
+            pass  # workload-shape strings etc.
+    return out
+
+b, f = numeric(base.get("extra", {})), numeric(fresh.get("extra", {}))
+shared = sorted(set(b) & set(f))
+if not shared:
+    print("  (no shared numeric extras — nothing to gate)")
+    sys.exit(0)
+
+failed = []
+for k in shared:
+    ratio = f[k] / b[k] if b[k] else float("inf")
+    verdict = "ok"
+    if ratio < 1.0 - tol:
+        verdict = "REGRESSION"
+        failed.append(k)
+    print(f"  {k:<48} baseline {b[k]:>8.2f}  fresh {f[k]:>8.2f}  ({ratio:>5.2f}x)  {verdict}")
+
+dropped = sorted(set(b) - set(f))
+if dropped:
+    print(f"  WARNING: baseline extras missing from fresh run: {', '.join(dropped)}")
+    failed.extend(dropped)
+
+if failed:
+    print(f"bench_gate: {len(failed)} regression(s) beyond {tol:.0%}: {', '.join(failed)}")
+    sys.exit(1)
+PY
+done
+
+if [ "$status" -ne 0 ]; then
+  echo "bench_gate: FAILED"
+else
+  echo "bench_gate: all ratios within tolerance"
+fi
+# leave the tree as the commit had it — the fresh jsons were scratch
+for f in "${committed[@]}"; do
+  cp "$baseline_dir/$f" "$f"
+done
+exit "$status"
