@@ -9,6 +9,10 @@
 //! # same demo on the DIANA compressed-difference uplink:
 //! cargo run --release --example distributed_tcp -- --spawn --compressor diana
 //!
+//! # sparsified uplink, or non-uniform per-coordinate bit widths:
+//! cargo run --release --example distributed_tcp -- --spawn --compressor wangni
+//! cargo run --release --example distributed_tcp -- --spawn --bit-alloc nonuniform
+//!
 //! # manual: start the master, then start each worker in its own shell
 //! # (worker flags must mirror the master's — the Config handshake refuses
 //! # a mismatch):
@@ -21,7 +25,7 @@ use qmsvrg::algorithms::svrg::{run_svrg, SvrgOpts};
 use qmsvrg::algorithms::ShardedObjective;
 use qmsvrg::cluster::Cluster;
 use qmsvrg::data::synthetic::power_like;
-use qmsvrg::quant::CompressorKind;
+use qmsvrg::quant::{BitAlloc, CompressorKind};
 use qmsvrg::rng::Xoshiro256pp;
 
 const N_WORKERS: usize = 4;
@@ -35,17 +39,31 @@ fn main() -> anyhow::Result<()> {
     let compressor: CompressorKind = match args.iter().position(|a| a == "--compressor") {
         Some(i) => args
             .get(i + 1)
-            .ok_or_else(|| anyhow::anyhow!("--compressor needs a value (urq|diana)"))?
+            .ok_or_else(|| {
+                anyhow::anyhow!("--compressor needs a value (urq|diana|wangni|vbsparse|qsd)")
+            })?
             .parse()?,
         None => CompressorKind::Urq,
+    };
+    let bit_alloc: BitAlloc = match args.iter().position(|a| a == "--bit-alloc") {
+        Some(i) => args
+            .get(i + 1)
+            .ok_or_else(|| anyhow::anyhow!("--bit-alloc needs a value (uniform|nonuniform)"))?
+            .parse()?,
+        None => BitAlloc::Uniform,
     };
     let mut k = 0;
     while k < args.len() {
         match args[k].as_str() {
             "--spawn" => {}
-            "--compressor" => k += 1, // skip the value token (parsed above)
+            // skip the value tokens (parsed above)
+            "--compressor" | "--bit-alloc" => k += 1,
             other if other.starts_with("--") => {
-                anyhow::bail!("unknown flag {other} (known: --spawn, --compressor urq|diana)")
+                anyhow::bail!(
+                    "unknown flag {other} (known: --spawn, \
+                     --compressor urq|diana|wangni|vbsparse|qsd, \
+                     --bit-alloc uniform|nonuniform)"
+                )
             }
             _ => {}
         }
@@ -94,6 +112,8 @@ fn main() -> anyhow::Result<()> {
                         "--adaptive",
                         "--compressor",
                         compressor.name(),
+                        "--bit-alloc",
+                        bit_alloc.name(),
                     ])
                     .spawn()?,
             );
@@ -110,6 +130,7 @@ fn main() -> anyhow::Result<()> {
         policy: qmsvrg::driver::grid_policy_for(&prob, true, 0.2, 8, 1.0, 4.0),
         plus: true,
         compressor,
+        bit_alloc,
     };
     let root = Xoshiro256pp::seed_from_u64(SEED);
     // the full data fingerprint (n, d, λ, content hash) rides the Config

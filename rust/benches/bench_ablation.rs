@@ -8,14 +8,23 @@
 //!    variance-reduced direction;
 //! 4. **Grid slack** — sensitivity to the practical radius multiplier;
 //! 5. **Bit allocation** — uniform vs variance-weighted `{b_i}`;
-//! 6. **Uplink compressor** — URQ re-centered grids vs DIANA error memory.
+//! 6. **Uplink compressor** — the full zoo (URQ re-centered grids, DIANA
+//!    error memory, Wangni sparsification, variance-based sparse deltas,
+//!    quantized sparse deltas) at matched bit budgets;
+//! 7. **Bits to target loss** — cumulative uplink bits each compressor
+//!    spends to reach a fixed loss gap (recorded to `BENCH_ablation.json`
+//!    as higher-is-better targets-per-gigabit for `scripts/bench_gate.sh`).
+
+use std::path::Path;
+use std::time::Duration;
 
 use qmsvrg::algorithms::channel::QuantOpts;
 use qmsvrg::algorithms::svrg::{run_svrg, SvrgOpts};
 use qmsvrg::algorithms::ShardedObjective;
+use qmsvrg::benchkit::Bencher;
 use qmsvrg::cluster::InProcessCluster;
 use qmsvrg::data::synthetic::power_like;
-use qmsvrg::quant::{AdaptivePolicy, CompressorKind, GridPolicy};
+use qmsvrg::quant::{AdaptivePolicy, BitAlloc, CompressorKind, GridPolicy};
 use qmsvrg::rng::Xoshiro256pp;
 
 fn problem() -> ShardedObjective {
@@ -68,6 +77,7 @@ fn main() {
             )),
             plus: true,
             compressor: CompressorKind::Urq,
+            bit_alloc: BitAlloc::Uniform,
         };
         let theoretical = QuantOpts {
             bits,
@@ -77,6 +87,7 @@ fn main() {
             )),
             plus: true,
             compressor: CompressorKind::Urq,
+            bit_alloc: BitAlloc::Uniform,
         };
         let (_, gp) = run(&prob, Some(practical), true, 1);
         let (_, gt) = run(&prob, Some(theoretical), true, 1);
@@ -98,6 +109,7 @@ fn main() {
             policy: GridPolicy::Adaptive(pol),
             plus: true,
             compressor: CompressorKind::Urq,
+            bit_alloc: BitAlloc::Uniform,
         };
         let (g0, gk) = run(&prob, Some(q), memory, 2);
         println!("{label:<20} |g|: {g0:.3e} -> {gk:.3e} (contraction {:.1e})", gk / g0);
@@ -115,6 +127,7 @@ fn main() {
             policy: GridPolicy::Adaptive(pol),
             plus: true,
             compressor: CompressorKind::Urq,
+            bit_alloc: BitAlloc::Uniform,
         };
         let (_, gk) = run(&prob, Some(q), true, 3);
         println!("{slack:>7.1} {gk:>14.3e}");
@@ -137,6 +150,7 @@ fn main() {
             )),
             plus: true,
             compressor: CompressorKind::Urq,
+            bit_alloc: BitAlloc::Uniform,
         };
         let mut last = f64::NAN;
         let mut bits = 0;
@@ -186,9 +200,19 @@ fn main() {
         println!(" paper's experiments use the uniform special case)");
     }
 
-    // 6. compressor seam: URQ (re-centered grids) vs DIANA (error memory)
-    println!("\n-- ablation 6: uplink compressor (QM-SVRG-A+, memory unit) --");
-    println!("{:>5} {:>16} {:>16}", "b/d", "urq final |g|", "diana final |g|");
+    // 6. compressor seam: the full uplink zoo at matched grid settings
+    println!("\n-- ablation 6: uplink compressor zoo (QM-SVRG-A+, memory unit) --");
+    const ZOO: [CompressorKind; 5] = [
+        CompressorKind::Urq,
+        CompressorKind::Diana,
+        CompressorKind::Wangni,
+        CompressorKind::VbSparse,
+        CompressorKind::Qsd,
+    ];
+    println!(
+        "{:>5} {:>14} {:>14} {:>14} {:>14} {:>14}",
+        "b/d", "urq |g|", "diana |g|", "wangni |g|", "vbsparse |g|", "qsd |g|"
+    );
     for bits in [3u8, 5, 8] {
         let mk = |compressor| QuantOpts {
             bits,
@@ -201,13 +225,90 @@ fn main() {
             )),
             plus: true,
             compressor,
+            bit_alloc: BitAlloc::Uniform,
         };
-        let (_, gu) = run(&prob, Some(mk(CompressorKind::Urq)), true, 6);
-        let (_, gd) = run(&prob, Some(mk(CompressorKind::Diana)), true, 6);
-        println!("{bits:>5} {gu:>16.3e} {gd:>16.3e}");
+        let finals: Vec<f64> = ZOO
+            .iter()
+            .map(|&kind| run(&prob, Some(mk(kind)), true, 6).1)
+            .collect();
+        print!("{bits:>5}");
+        for g in &finals {
+            print!(" {g:>14.3e}");
+        }
+        println!();
     }
-    println!("(same Σ b_i on the wire; DIANA compresses g − h against a");
-    println!(" per-worker error memory instead of re-centering the lattice)");
+    println!("(DIANA compresses g − h against per-worker error memory; the");
+    println!(" sparsifiers ship only high-signal coordinates, so their wire");
+    println!(" cost shrinks with the gradient while the grids' stays bits·d)");
+
+    // 7. communication efficiency: cumulative uplink bits to a fixed loss
+    //    gap, the headline the compressor zoo competes on. Recorded as
+    //    targets-per-gigabit (higher is better) so scripts/bench_gate.sh can
+    //    compare runs.
+    println!("\n-- ablation 7: uplink bits to target loss, per compressor --");
+    {
+        let exact = {
+            let root = Xoshiro256pp::seed_from_u64(7);
+            let mut cluster = InProcessCluster::new(&prob, None, &root);
+            run_svrg(
+                &mut cluster,
+                &SvrgOpts { step: 0.2, epoch_len: 8, outer_iters: 50, memory_unit: true },
+                root.algo_stream(),
+                &mut |_, _, _, _| {},
+            )
+            .unwrap()
+        };
+        let target = prob.loss(&exact) + 1e-4;
+        let mut keyed: Vec<(String, String)> = Vec::new();
+        println!("{:>9} {:>18} {:>16}", "scheme", "uplink bits", "targets/Gbit");
+        for kind in ZOO {
+            let q = QuantOpts {
+                bits: 5,
+                policy: GridPolicy::Adaptive(AdaptivePolicy::practical(
+                    prob.mu(),
+                    prob.l_smooth(),
+                    prob.dim(),
+                    0.2,
+                    8,
+                )),
+                plus: true,
+                compressor: kind,
+                bit_alloc: BitAlloc::Uniform,
+            };
+            let root = Xoshiro256pp::seed_from_u64(7);
+            let mut cluster = InProcessCluster::new(&prob, Some(q), &root);
+            let mut hit: Option<u64> = None;
+            run_svrg(
+                &mut cluster,
+                &SvrgOpts { step: 0.2, epoch_len: 8, outer_iters: 50, memory_unit: true },
+                root.algo_stream(),
+                &mut |_, w, _, b| {
+                    if hit.is_none() && prob.loss(w) <= target {
+                        hit = Some(b);
+                    }
+                },
+            )
+            .unwrap();
+            match hit {
+                Some(bits) if bits > 0 => {
+                    let per_gbit = 1e9 / bits as f64;
+                    println!("{:>9} {bits:>18} {per_gbit:>16.2}", kind.name());
+                    keyed.push((
+                        format!("targets_per_gbit_{}", kind.name()),
+                        format!("{per_gbit:.3}"),
+                    ));
+                }
+                _ => println!("{:>9} {:>18} {:>16}", kind.name(), "not reached", "-"),
+            }
+        }
+        let extra: Vec<(&str, String)> =
+            keyed.iter().map(|(k, v)| (k.as_str(), v.clone())).collect();
+        // no timed sections here — the Bencher only carries the JSON writer
+        let b = Bencher::new(Duration::ZERO, Duration::ZERO, 1);
+        if let Err(e) = b.write_json(Path::new("BENCH_ablation.json"), "bench_ablation", &extra) {
+            eprintln!("(could not write BENCH_ablation.json: {e})");
+        }
+    }
 
     println!("\n== bench_ablation done ==");
 }

@@ -15,20 +15,24 @@
 use anyhow::Result;
 
 use crate::metrics::CommLedger;
-use crate::quant::{CompressorKind, GridPolicy, QuantState};
+use crate::quant::{BitAlloc, CompressorKind, GridPolicy, QuantState};
 use crate::rng::Xoshiro256pp;
 
 /// Quantization options for a run.
 #[derive(Clone, Debug)]
 pub struct QuantOpts {
-    /// Bits per coordinate (b/d, uniform allocation as in §4).
+    /// Bits per coordinate — the per-message budget is always `bits·d`; how
+    /// it is split across coordinates is `bit_alloc`'s business.
     pub bits: u8,
     /// Fixed or adaptive grid policy.
     pub policy: GridPolicy,
     /// Quantize the inner-loop stochastic gradient too ("+" variants).
     pub plus: bool,
-    /// Gradient-compression scheme on the uplink (`--compressor urq|diana`).
+    /// Gradient-compression scheme on the uplink
+    /// (`--compressor urq|diana|wangni|vbsparse|qsd`).
     pub compressor: CompressorKind,
+    /// Per-coordinate width policy (`--bit-alloc uniform|nonuniform`).
+    pub bit_alloc: BitAlloc,
 }
 
 /// All master↔worker links of one run, with bit metering.
@@ -56,7 +60,14 @@ pub struct QuantChannel {
 impl QuantChannel {
     pub fn new(opts: QuantOpts, d: usize, n_workers: usize, root: Xoshiro256pp) -> Self {
         Self {
-            state: QuantState::new(opts.policy, opts.bits, opts.compressor, d, n_workers),
+            state: QuantState::new(
+                opts.policy,
+                opts.bits,
+                opts.compressor,
+                opts.bit_alloc,
+                d,
+                n_workers,
+            ),
             plus: opts.plus,
             d,
             w_rng: root.quant_stream(),
@@ -165,6 +176,7 @@ mod tests {
                 policy,
                 plus: false,
                 compressor: CompressorKind::Urq,
+                bit_alloc: BitAlloc::Uniform,
             },
             4,
             2,
@@ -250,6 +262,7 @@ mod tests {
                 policy: GridPolicy::Fixed { radius: 4.0 },
                 plus: false,
                 compressor: CompressorKind::Diana,
+                bit_alloc: BitAlloc::Uniform,
             },
             4,
             2,

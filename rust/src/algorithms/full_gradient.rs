@@ -91,7 +91,7 @@ pub fn run_gd(
 mod tests {
     use super::*;
     use crate::data::synthetic::power_like;
-    use crate::quant::{CompressorKind, GridPolicy};
+    use crate::quant::{BitAlloc, CompressorKind, GridPolicy};
 
     fn prob() -> ShardedObjective {
         let mut ds = power_like(400, 21);
@@ -165,6 +165,7 @@ mod tests {
                 policy: GridPolicy::Fixed { radius: 8.0 },
                 plus: false,
                 compressor: CompressorKind::Urq,
+                bit_alloc: BitAlloc::Uniform,
             }),
         };
         let mut final_bits = 0;
@@ -196,6 +197,7 @@ mod tests {
             policy: GridPolicy::Fixed { radius: 16.0 },
             plus: false,
             compressor: CompressorKind::Urq,
+            bit_alloc: BitAlloc::Uniform,
         }));
         let dist = crate::linalg::linf_dist(&w_exact, &w_q);
         assert!(dist < 1e-2, "dist={dist}");

@@ -145,7 +145,7 @@ fn measured_or_formula(
 mod tests {
     use super::*;
     use crate::data::synthetic::power_like;
-    use crate::quant::{CompressorKind, GridPolicy};
+    use crate::quant::{BitAlloc, CompressorKind, GridPolicy};
 
     fn prob() -> ShardedObjective {
         let mut ds = power_like(400, 31);
@@ -233,6 +233,7 @@ mod tests {
             policy: GridPolicy::Fixed { radius: 6.0 },
             plus: false,
             compressor: CompressorKind::Urq,
+            bit_alloc: BitAlloc::Uniform,
         };
         let mut bits = 0;
         run_sgd(
@@ -270,6 +271,7 @@ mod tests {
             policy: GridPolicy::Fixed { radius: 6.0 },
             plus: false,
             compressor: CompressorKind::Urq,
+            bit_alloc: BitAlloc::Uniform,
         };
         let mut gn_q = f64::NAN;
         let mut gn_x = f64::NAN;

@@ -223,7 +223,7 @@ mod tests {
     use crate::algorithms::sharded::ShardedObjective;
     use crate::cluster::{Cluster, InProcessCluster};
     use crate::data::synthetic::power_like;
-    use crate::quant::{AdaptivePolicy, CompressorKind, GridPolicy};
+    use crate::quant::{AdaptivePolicy, BitAlloc, CompressorKind, GridPolicy};
 
     fn prob() -> ShardedObjective {
         let mut ds = power_like(800, 41);
@@ -252,6 +252,7 @@ mod tests {
             )),
             plus,
             compressor: CompressorKind::Urq,
+            bit_alloc: BitAlloc::Uniform,
         }
     }
 
@@ -373,6 +374,7 @@ mod tests {
             policy: GridPolicy::Fixed { radius: 4.0 },
             plus: false,
             compressor: CompressorKind::Urq,
+            bit_alloc: BitAlloc::Uniform,
         };
         let mut gns = Vec::new();
         run(&p, &opts, Some(q), 4, &mut |_, _, gn, _| gns.push(gn));
@@ -395,6 +397,7 @@ mod tests {
                 policy: GridPolicy::Fixed { radius: 4.0 },
                 plus: false,
                 compressor: CompressorKind::Urq,
+                bit_alloc: BitAlloc::Uniform,
             };
             run(&p, &o, Some(fixed), 5, &mut |_, _, gn, _| fixed_final = gn);
             run(&p, &o, Some(adaptive_quant(bits, &p, false)), 5, &mut |_, _, gn, _| {

@@ -104,7 +104,8 @@ USAGE:
                      [--format auto|dense|sparse]
                      [--workers N] [--epoch-len T] [--iters K] [--step A]
                      [--bits B] [--lambda L] [--seed S]
-                     [--compressor urq|diana]
+                     [--compressor urq|diana|wangni|vbsparse|qsd]
+                     [--bit-alloc uniform|nonuniform]
                      [--backend native|threaded|xla]
                      [--mode sync|async] [--quorum K] [--staleness S]
                      [--out DIR]
@@ -113,7 +114,9 @@ USAGE:
   qmsvrg worker      --connect HOST:PORT --shard IDX --workers N
                      [--dataset D] [--samples N] [--seed S] [--lambda L]
                      [--format auto|dense|sparse]
-                     [--bits B] [--adaptive] [--compressor urq|diana]
+                     [--bits B] [--adaptive]
+                     [--compressor urq|diana|wangni|vbsparse|qsd]
+                     [--bit-alloc uniform|nonuniform]
                      [--plus true|false] [--step A] [--epoch-len T]
                      [--slack S] [--fixed-radius R]
   qmsvrg info        [--artifacts DIR]
@@ -123,9 +126,15 @@ Algorithms: gd sgd sag svrg m-svrg q-gd q-sgd q-sag
             qm-svrg-f qm-svrg-a qm-svrg-f+ qm-svrg-a+
 Compressors (quantized algorithms): urq (per-epoch re-centered grids,
             the paper's scheme) | diana (compressed differences with
-            per-worker error memory). Both ends of a run must agree —
-            the master broadcasts its config at connect and workers
-            refuse a compressor/bits/policy or protocol-version mismatch.
+            per-worker error memory) | wangni (unbiased magnitude-
+            proportional sparsification) | vbsparse (variance-based
+            skip/delay with carried error state) | qsd (quantized sparse
+            deltas over the error memory). --bit-alloc nonuniform splits
+            the same bits·d budget by coordinate scale at each epoch
+            (grid compressors only). Both ends of a run must agree — the
+            master broadcasts its config at connect and workers refuse a
+            compressor/bits/bit-alloc/policy or protocol-version
+            mismatch.
 Storage:    libsvm files stay sparse (CSR) under --format auto when their
             density is below the loader threshold; sparse storage
             standardizes scale-only (no centering).

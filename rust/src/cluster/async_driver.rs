@@ -451,6 +451,7 @@ impl<D: Duplex> AsyncCluster<D> {
             bail!("no live workers at epoch {epoch}");
         }
         let quorum = self.select_quorum(&live);
+        let epoch_wire = protocol::wire_epoch(epoch)?;
         let mut qi = 0;
         for &i in &live {
             let reply = if qi < quorum.len() && quorum[qi] == i {
@@ -462,7 +463,7 @@ impl<D: Duplex> AsyncCluster<D> {
             self.send_or_kill(
                 i,
                 Message::EpochBegin {
-                    epoch: epoch as u32,
+                    epoch: epoch_wire,
                     reply,
                 },
             );
@@ -560,10 +561,11 @@ impl<D: Duplex> AsyncCluster<D> {
     }
 
     /// End of epoch: every live replica adopts `w_{k,ζ}`.
-    pub fn choose_snapshot(&mut self, zeta: usize) {
+    pub fn choose_snapshot(&mut self, zeta: usize) -> Result<()> {
         self.barrier(&Message::SnapshotChoose {
-            zeta: zeta as u32,
+            zeta: protocol::wire_zeta(zeta)?,
         });
+        Ok(())
     }
 
     /// Mean of live workers' local losses (instrumentation; not metered).
@@ -746,7 +748,7 @@ pub fn run_svrg_async<D: Duplex>(
         lazy.begin_epoch(&w_tilde, &g_tilde, opts.step, lambda);
         cluster.run_inner_lazy(&mut lazy, t_len, &mut rng)?;
         let zeta = rng.gen_index(t_len);
-        cluster.choose_snapshot(zeta);
+        cluster.choose_snapshot(zeta)?;
         lazy.materialize(zeta, &mut w_tilde);
     }
 

@@ -75,7 +75,7 @@ impl<D: Duplex> MessageCluster<D> {
             d,
             lambda: fp.lambda(),
             quant: quant
-                .map(|q| QuantState::new(q.policy.clone(), q.bits, q.compressor, d, n)),
+                .map(|q| QuantState::new(q.policy.clone(), q.bits, q.compressor, q.bit_alloc, d, n)),
             quant_rng: root.quant_stream(),
             g_snap_rx: vec![0.0; d],
             g_cur_rx: vec![0.0; d],
@@ -175,7 +175,7 @@ impl<D: Duplex> Cluster for MessageCluster<D> {
         node_g: &mut [Vec<f64>],
     ) -> Result<()> {
         self.fan_out(&Message::EpochBegin {
-            epoch: epoch as u32,
+            epoch: protocol::wire_epoch(epoch)?,
             reply: 1, // lockstep: everyone uplinks every epoch
         })?;
         for (i, link) in self.links.iter_mut().enumerate() {
@@ -311,7 +311,7 @@ impl<D: Duplex> Cluster for MessageCluster<D> {
 
     fn choose_snapshot(&mut self, zeta: usize) -> Result<()> {
         self.fan_out(&Message::SnapshotChoose {
-            zeta: zeta as u32,
+            zeta: protocol::wire_zeta(zeta)?,
         })?;
         self.collect_acks()
     }

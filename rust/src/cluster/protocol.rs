@@ -18,7 +18,7 @@
 //! one place and both drivers inherit it — they can disagree about time, not
 //! about meaning.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::algorithms::channel::QuantOpts;
 use crate::data::DataFingerprint;
@@ -37,6 +37,7 @@ pub fn config_message(quant: Option<&QuantOpts>, fp: &DataFingerprint) -> Messag
         compressor: quant.map_or(0, |q| q.compressor.wire_id()),
         bits: quant.map_or(0, |q| q.bits),
         plus: quant.map_or(0, |q| q.plus as u8),
+        bit_alloc: quant.map_or(0, |q| q.bit_alloc.wire_id()),
         sparse: fp.sparse as u8,
         n: fp.n,
         d: fp.d,
@@ -44,6 +45,25 @@ pub fn config_message(quant: Option<&QuantOpts>, fp: &DataFingerprint) -> Messag
         data_hash: fp.content_hash,
         policy_fp: quant.map_or(0, |q| q.policy.fingerprint()),
     }
+}
+
+/// Checked narrowing onto the wire's u32 counters. `EpochBegin.epoch` and
+/// `SnapshotChoose.zeta` are u32 on the wire (so the decode side is capped
+/// by the field type itself); a run long enough to overflow must be refused
+/// at the encode site with the offending value named — a bare `as u32` would
+/// silently alias epoch `2^32` with epoch 0 and desync every replicated
+/// state machine that keys off the counter.
+pub fn wire_epoch(epoch: usize) -> Result<u32> {
+    u32::try_from(epoch).map_err(|_| {
+        anyhow!("epoch {epoch} exceeds the wire's u32 EpochBegin counter; refusing to truncate")
+    })
+}
+
+/// See [`wire_epoch`]; the same rule for the snapshot choice ζ.
+pub fn wire_zeta(zeta: usize) -> Result<u32> {
+    u32::try_from(zeta).map_err(|_| {
+        anyhow!("snapshot choice zeta {zeta} exceeds the wire's u32 SnapshotChoose field; refusing to truncate")
+    })
 }
 
 /// Send one borrowed frame on every link — the batched fan-out both
@@ -230,6 +250,26 @@ mod tests {
     }
 
     #[test]
+    fn wire_counters_refuse_values_beyond_u32() {
+        // in-range values pass through unchanged
+        assert_eq!(wire_epoch(0).unwrap(), 0);
+        assert_eq!(wire_epoch(u32::MAX as usize).unwrap(), u32::MAX);
+        assert_eq!(wire_zeta(41).unwrap(), 41);
+        // one past the wire field's range: refused with the value named,
+        // never silently truncated (the old `as u32` aliased 2^32 with 0)
+        let err = wire_epoch(u32::MAX as usize + 1).unwrap_err().to_string();
+        assert!(
+            err.contains("epoch 4294967296 exceeds the wire's u32"),
+            "{err}"
+        );
+        let err = wire_zeta(1usize << 40).unwrap_err().to_string();
+        assert!(
+            err.contains("zeta 1099511627776 exceeds the wire's u32"),
+            "{err}"
+        );
+    }
+
+    #[test]
     fn config_message_mirrors_fingerprint_and_quant() {
         let fp = DataFingerprint {
             n: 100,
@@ -245,6 +285,7 @@ mod tests {
                 compressor,
                 bits,
                 plus,
+                bit_alloc,
                 sparse,
                 n,
                 d,
@@ -253,7 +294,7 @@ mod tests {
                 policy_fp,
             } => {
                 assert_eq!(version, PROTO_VERSION);
-                assert_eq!((compressor, bits, plus, policy_fp), (0, 0, 0, 0));
+                assert_eq!((compressor, bits, plus, bit_alloc, policy_fp), (0, 0, 0, 0, 0));
                 assert_eq!((sparse, n, d), (0, 100, 9));
                 assert_eq!(lambda_bits, 0.1f64.to_bits());
                 assert_eq!(data_hash, 0xABCD);

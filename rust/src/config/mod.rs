@@ -10,7 +10,7 @@ use anyhow::{bail, Context, Result};
 use std::collections::BTreeMap;
 
 use crate::data::FeatureFormat;
-use crate::quant::CompressorKind;
+use crate::quant::{BitAlloc, CompressorKind};
 
 /// Which [`crate::cluster`] backend a run uses. All three produce
 /// bit-identical traces at a fixed seed.
@@ -88,6 +88,10 @@ pub struct TrainConfig {
     pub grid_slack: f64,
     /// Uplink gradient-compression scheme for quantized algorithms.
     pub compressor: CompressorKind,
+    /// Per-coordinate bit-width policy for quantized algorithms: `uniform`
+    /// gives every coordinate `bits_per_coord`; `nonuniform` splits the same
+    /// `bits_per_coord · d` budget by coordinate scale at each epoch.
+    pub bit_alloc: BitAlloc,
     /// RNG seed for everything.
     pub seed: u64,
     /// Dataset: "power" | "mnist" | path to a file.
@@ -124,6 +128,7 @@ impl Default for TrainConfig {
             fixed_radius: 4.0,
             grid_slack: 1.0,
             compressor: CompressorKind::Urq,
+            bit_alloc: BitAlloc::Uniform,
             seed: 42,
             dataset: "power".into(),
             format: FeatureFormat::Auto,
@@ -155,6 +160,7 @@ impl TrainConfig {
                 "fixed_radius" => cfg.fixed_radius = v.as_f64().context("fixed_radius")?,
                 "grid_slack" => cfg.grid_slack = v.as_f64().context("grid_slack")?,
                 "compressor" => cfg.compressor = v.as_str().context("compressor")?.parse()?,
+                "bit_alloc" => cfg.bit_alloc = v.as_str().context("bit_alloc")?.parse()?,
                 "seed" => cfg.seed = v.as_usize().context("seed")? as u64,
                 "dataset" => cfg.dataset = v.as_str().context("dataset")?.to_string(),
                 "format" => cfg.format = v.as_str().context("format")?.parse()?,
@@ -220,6 +226,7 @@ mod tests {
             bits_per_coord = 7
             backend = "xla"
             compressor = "diana"
+            bit_alloc = "nonuniform"
             format = "sparse"
             "#,
         )
@@ -231,6 +238,7 @@ mod tests {
         assert_eq!(cfg.bits_per_coord, 7);
         assert_eq!(cfg.backend, Backend::Xla);
         assert_eq!(cfg.compressor, CompressorKind::Diana);
+        assert_eq!(cfg.bit_alloc, BitAlloc::NonUniform);
         assert_eq!(cfg.format, FeatureFormat::Sparse);
         assert_eq!(cfg.epoch_len, 8); // default survives
     }

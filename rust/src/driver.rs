@@ -83,6 +83,7 @@ pub fn quant_opts_for(kind: SolverKind, cfg: &TrainConfig, prob: &ShardedObjecti
         ),
         plus: kind.is_plus(),
         compressor: cfg.compressor,
+        bit_alloc: cfg.bit_alloc,
     })
 }
 

@@ -15,7 +15,7 @@ use crate::algorithms::svrg::{run_svrg, SvrgOpts};
 use crate::algorithms::ShardedObjective;
 use crate::cluster::InProcessCluster;
 use crate::data::synthetic::power_like;
-use crate::quant::{CompressorKind, Grid, GridPolicy};
+use crate::quant::{BitAlloc, CompressorKind, Grid, GridPolicy};
 use crate::rng::Xoshiro256pp;
 use crate::theory::{self, empirical};
 
@@ -102,6 +102,7 @@ pub fn run(p: &BoundsParams) -> Result<BoundsReport> {
         },
         plus: false,
         compressor: CompressorKind::Urq,
+        bit_alloc: BitAlloc::Uniform,
     };
     let root = Xoshiro256pp::seed_from_u64(p.seed);
     let mut cluster = InProcessCluster::new(&prob, Some(quant), &root);

@@ -63,6 +63,6 @@ pub mod prelude {
     pub use crate::linalg::{CsrMatrix, SparseVec};
     pub use crate::metrics::{RunTrace, TracePoint};
     pub use crate::objective::{LogisticRidge, Objective};
-    pub use crate::quant::{CompressorKind, Grid, GridPolicy};
+    pub use crate::quant::{BitAlloc, CompressorKind, Grid, GridPolicy};
     pub use crate::rng::Xoshiro256pp;
 }

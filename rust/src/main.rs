@@ -80,7 +80,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     args.reject_unknown(&[
         "algorithm", "dataset", "samples", "workers", "epoch-len", "iters", "step", "bits",
         "lambda", "seed", "backend", "out", "digit", "fixed-radius", "slack", "config",
-        "compressor", "format", "mode", "quorum", "staleness",
+        "compressor", "bit-alloc", "format", "mode", "quorum", "staleness",
     ])?;
     // start from a TOML config file when given, then apply CLI overrides
     let base = match args.get("config") {
@@ -103,6 +103,10 @@ fn cmd_train(args: &Args) -> Result<()> {
         compressor: match args.get("compressor") {
             Some(c) => c.parse()?,
             None => base.compressor,
+        },
+        bit_alloc: match args.get("bit-alloc") {
+            Some(a) => a.parse()?,
+            None => base.bit_alloc,
         },
         seed: args.get_u64("seed", base.seed)?,
         dataset: args.get_or("dataset", &base.dataset),
@@ -336,8 +340,8 @@ fn print_convergence(title: &str, traces: &[qmsvrg::metrics::RunTrace]) {
 fn cmd_worker(args: &Args) -> Result<()> {
     args.reject_unknown(&[
         "connect", "dataset", "samples", "shard", "workers", "lambda", "bits", "seed",
-        "adaptive", "backend", "compressor", "plus", "step", "epoch-len", "slack",
-        "fixed-radius", "format",
+        "adaptive", "backend", "compressor", "bit-alloc", "plus", "step", "epoch-len",
+        "slack", "fixed-radius", "format",
     ])?;
     let addr = args.get("connect").context("--connect HOST:PORT required")?;
     let n_samples = args.get_usize("samples", 20_000)?;
@@ -393,6 +397,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
                 // Config handshake refuses the link otherwise
                 plus: args.get_or("plus", "true").parse()?,
                 compressor: args.get_or("compressor", "urq").parse()?,
+                bit_alloc: args.get_or("bit-alloc", "uniform").parse()?,
             })
         }
         None => None,

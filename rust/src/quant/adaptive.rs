@@ -155,6 +155,24 @@ impl GridPolicy {
         }
     }
 
+    /// The scalar radius a [`GridPolicy::w_grid`] call would use — exposed
+    /// so a non-uniform allocation can derive per-coordinate scales from the
+    /// same replicated inputs the uniform grid builds from.
+    pub fn w_radius(&self, snapshot_grad_norm: f64) -> f64 {
+        match self {
+            GridPolicy::Fixed { radius } => *radius,
+            GridPolicy::Adaptive(p) => p.r_w(snapshot_grad_norm),
+        }
+    }
+
+    /// See [`GridPolicy::w_radius`]; the uplink (gradient) radius.
+    pub fn g_radius(&self, snapshot_grad_norm: f64) -> f64 {
+        match self {
+            GridPolicy::Fixed { radius } => *radius,
+            GridPolicy::Adaptive(p) => p.r_g(snapshot_grad_norm),
+        }
+    }
+
     pub fn is_adaptive(&self) -> bool {
         matches!(self, GridPolicy::Adaptive(_))
     }

@@ -57,7 +57,12 @@ pub fn allocate_bits(scales: &[f64], total_bits: u64, max_bits: u8) -> Vec<u8> {
         .collect();
     let mut used: u64 = bits.iter().map(|&b| b as u64).sum();
 
-    // greedy corrections to hit the exact budget
+    // greedy corrections to hit the exact budget. Candidates exist by the
+    // entry asserts: below budget, not every coordinate can already sit at
+    // max_bits (that would mean used = d·max_bits ≥ total_bits); above
+    // budget, not every coordinate can sit at 1 (used = d ≤ total_bits). If
+    // either ever fires, the rounding invariant broke — report the full
+    // state so the failing (scales, budget, max_bits) triple is actionable.
     while used < total_bits {
         // give a bit to the coordinate with the largest (ideal - assigned)
         let j = (0..d)
@@ -67,7 +72,15 @@ pub fn allocate_bits(scales: &[f64], total_bits: u64, max_bits: u8) -> Vec<u8> {
                 let db = ideal[b] - bits[b] as f64;
                 da.partial_cmp(&db).unwrap()
             })
-            .expect("budget <= d*max_bits guarantees a candidate");
+            .unwrap_or_else(|| {
+                panic!(
+                    "allocate_bits: no coordinate below max_bits while under \
+                     budget (used {used} < total {total_bits}, d={d}, \
+                     max_bits={max_bits}) — rounding left every b_i clamped \
+                     at max_bits, which contradicts total_bits <= d*max_bits; \
+                     check the scales for values the sanitizer missed"
+                )
+            });
         bits[j] += 1;
         used += 1;
     }
@@ -80,7 +93,15 @@ pub fn allocate_bits(scales: &[f64], total_bits: u64, max_bits: u8) -> Vec<u8> {
                 let db = ideal[b] - bits[b] as f64;
                 da.partial_cmp(&db).unwrap()
             })
-            .expect("budget >= d guarantees a candidate");
+            .unwrap_or_else(|| {
+                panic!(
+                    "allocate_bits: no coordinate above 1 bit while over \
+                     budget (used {used} > total {total_bits}, d={d}, \
+                     max_bits={max_bits}) — rounding left every b_i clamped \
+                     at 1, which contradicts total_bits >= d; check the \
+                     scales for values the sanitizer missed"
+                )
+            });
         bits[j] -= 1;
         used -= 1;
     }
@@ -157,6 +178,47 @@ mod tests {
     #[should_panic(expected = "budget")]
     fn rejects_budget_below_one_bit_each() {
         allocate_bits(&[1.0; 10], 5, 8);
+    }
+
+    #[test]
+    fn prop_boundary_budgets_preserved_under_degenerate_scales() {
+        // the clamp-heavy regimes: at budget = d every coordinate must land
+        // on exactly 1 bit, at budget = d*max_bits on exactly max_bits, and
+        // every in-between boundary-adjacent budget must still sum exactly —
+        // under scales that stress the sanitizer (zeros, NaN, ±inf, huge
+        // spreads that push `ideal` far outside [1, max_bits])
+        crate::testkit::forall(200, 0xB17_A110C, |rng| {
+            let d = 1 + rng.gen_index(24);
+            let max_bits = 1 + rng.gen_index(32) as u8;
+            let scales: Vec<f64> = (0..d)
+                .map(|_| match rng.gen_index(6) {
+                    0 => 0.0,
+                    1 => f64::NAN,
+                    2 => f64::INFINITY,
+                    3 => -rng.gen_uniform(0.0, 1.0),
+                    4 => 10f64.powi(rng.gen_index(600) as i32 - 300),
+                    _ => rng.gen_uniform(1e-9, 1e9),
+                })
+                .collect();
+            let lo = d as u64;
+            let hi = max_bits as u64 * d as u64;
+            let budgets = [lo, hi, lo + (hi - lo) / 2, (lo + 1).min(hi), hi.saturating_sub(1).max(lo)];
+            for &budget in &budgets {
+                let bits = allocate_bits(&scales, budget, max_bits);
+                assert_eq!(
+                    bits.iter().map(|&b| b as u64).sum::<u64>(),
+                    budget,
+                    "d={d} max_bits={max_bits} budget={budget} scales={scales:?}"
+                );
+                assert!(bits.iter().all(|&b| b >= 1 && b <= max_bits));
+                if budget == lo {
+                    assert!(bits.iter().all(|&b| b == 1), "{bits:?}");
+                }
+                if budget == hi {
+                    assert!(bits.iter().all(|&b| b == max_bits), "{bits:?}");
+                }
+            }
+        });
     }
 
     #[test]

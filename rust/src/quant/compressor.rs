@@ -14,7 +14,7 @@
 //! holds a single replica standing in for both ends and therefore calls
 //! only `encode` (which also yields the decoder's reconstruction).
 //!
-//! Two schemes ship:
+//! Five schemes ship:
 //!
 //! * [`UrqCompressor`] — the paper's scheme: URQ on `R_{g_ξ,k}`, re-centered
 //!   each epoch at the link's just-shared snapshot gradient (adaptive
@@ -26,12 +26,18 @@
 //!   h_i)`, and both ends advance `h_i ← h_i + α·q(g_i − h_i)`. As `g_i`
 //!   stabilises, the compressed difference — and with it the quantization
 //!   error — shrinks toward zero, which is the "variance-reduced" part.
+//! * The zoo ([`super::zoo`]): [`super::zoo::WangniCompressor`] (unbiased
+//!   magnitude-proportional sparsification, arXiv:1710.09854),
+//!   [`super::zoo::VbSparseCompressor`] (variance-based skip/delay of
+//!   low-signal coordinates, arXiv:1802.06058), and
+//!   [`super::zoo::QsdCompressor`] (quantized sparse deltas: the support of
+//!   the pending difference plus b-bit codes on a per-message grid).
 //!
-//! Adding a third scheme (e.g. Wangni-style sparsification, arXiv:1710.09854)
-//! means: implement `Compressor`, add a [`CompressorKind`] arm (+ `FromStr`
-//! spelling), and extend the compressor × backend matrix in
-//! `rust/tests/distributed.rs`. Nothing in `run_svrg`, the `Cluster`
-//! backends, or the wire protocol changes — see EXPERIMENTS.md.
+//! Adding a scheme means: implement `Compressor`, add a [`CompressorKind`]
+//! arm (+ `FromStr` spelling + `wire_id`), and extend the compressor ×
+//! backend matrix in `rust/tests/distributed.rs`. Nothing in `run_svrg`,
+//! the `Cluster` backends, or the wire protocol changes — see
+//! EXPERIMENTS.md.
 
 use anyhow::{bail, Result};
 
@@ -46,6 +52,12 @@ pub enum CompressorKind {
     Urq,
     /// DIANA-style compressed differences with per-link error memory.
     Diana,
+    /// Wangni-style unbiased magnitude-proportional sparsification.
+    Wangni,
+    /// Variance-based skip/delay sparsification with carry-over memory.
+    VbSparse,
+    /// Quantized sparse deltas: support + b-bit codes on a per-message grid.
+    Qsd,
 }
 
 impl CompressorKind {
@@ -53,6 +65,9 @@ impl CompressorKind {
         match self {
             CompressorKind::Urq => "urq",
             CompressorKind::Diana => "diana",
+            CompressorKind::Wangni => "wangni",
+            CompressorKind::VbSparse => "vbsparse",
+            CompressorKind::Qsd => "qsd",
         }
     }
 
@@ -62,6 +77,9 @@ impl CompressorKind {
         match self {
             CompressorKind::Urq => 1,
             CompressorKind::Diana => 2,
+            CompressorKind::Wangni => 3,
+            CompressorKind::VbSparse => 4,
+            CompressorKind::Qsd => 5,
         }
     }
 }
@@ -73,7 +91,56 @@ impl std::str::FromStr for CompressorKind {
         match s.to_ascii_lowercase().as_str() {
             "urq" => Ok(CompressorKind::Urq),
             "diana" => Ok(CompressorKind::Diana),
-            other => bail!("unknown compressor {other:?} (urq|diana)"),
+            "wangni" => Ok(CompressorKind::Wangni),
+            "vbsparse" => Ok(CompressorKind::VbSparse),
+            "qsd" => Ok(CompressorKind::Qsd),
+            other => bail!("unknown compressor {other:?} (urq|diana|wangni|vbsparse|qsd)"),
+        }
+    }
+}
+
+/// How the per-coordinate bit widths `{b_i}` of a grid are chosen
+/// (config/CLI `--bit-alloc`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum BitAlloc {
+    /// Every coordinate gets the run's `--bits` (the paper's baseline).
+    #[default]
+    Uniform,
+    /// The same total budget `bits·d`, redistributed per coordinate by
+    /// [`super::allocation::allocate_bits`] over the grid's per-coordinate
+    /// scales — coordinates with larger dynamic range get more bits, the
+    /// exact `Σ b_i` is preserved. Re-derived at every epoch boundary from
+    /// the committed centers and the adaptive radius, identically on both
+    /// link ends (the grid state machine replicates the inputs).
+    NonUniform,
+}
+
+impl BitAlloc {
+    pub fn name(&self) -> &'static str {
+        match self {
+            BitAlloc::Uniform => "uniform",
+            BitAlloc::NonUniform => "nonuniform",
+        }
+    }
+
+    /// Stable id carried in the [`crate::transport::Message::Config`]
+    /// handshake (uniform doubles as the unquantized 0).
+    pub fn wire_id(&self) -> u8 {
+        match self {
+            BitAlloc::Uniform => 0,
+            BitAlloc::NonUniform => 1,
+        }
+    }
+}
+
+impl std::str::FromStr for BitAlloc {
+    type Err = anyhow::Error;
+
+    fn from_str(s: &str) -> Result<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "uniform" => Ok(BitAlloc::Uniform),
+            "nonuniform" => Ok(BitAlloc::NonUniform),
+            other => bail!("unknown bit allocation {other:?} (uniform|nonuniform)"),
         }
     }
 }
@@ -130,6 +197,9 @@ pub fn make_compressor(kind: CompressorKind, d: usize, n_links: usize) -> Box<dy
     match kind {
         CompressorKind::Urq => Box::new(UrqCompressor),
         CompressorKind::Diana => Box::new(DianaCompressor::new(d, n_links)),
+        CompressorKind::Wangni => Box::new(super::zoo::WangniCompressor::new(d, n_links)),
+        CompressorKind::VbSparse => Box::new(super::zoo::VbSparseCompressor::new(d, n_links)),
+        CompressorKind::Qsd => Box::new(super::zoo::QsdCompressor::new(d, n_links)),
     }
 }
 
@@ -147,11 +217,12 @@ impl QuantState {
         policy: crate::quant::GridPolicy,
         bits: u8,
         kind: CompressorKind,
+        alloc: BitAlloc,
         d: usize,
         n_links: usize,
     ) -> Self {
         Self {
-            grid: ReplicatedGrid::new(policy, bits, d, n_links),
+            grid: ReplicatedGrid::with_alloc(policy, bits, alloc, d, n_links),
             comp: make_compressor(kind, d, n_links),
         }
     }
@@ -306,13 +377,46 @@ mod tests {
 
     #[test]
     fn kind_parses_and_roundtrips() {
-        for kind in [CompressorKind::Urq, CompressorKind::Diana] {
+        for kind in [
+            CompressorKind::Urq,
+            CompressorKind::Diana,
+            CompressorKind::Wangni,
+            CompressorKind::VbSparse,
+            CompressorKind::Qsd,
+        ] {
             let parsed: CompressorKind = kind.name().parse().unwrap();
             assert_eq!(parsed, kind);
         }
         assert_eq!("DIANA".parse::<CompressorKind>().unwrap(), CompressorKind::Diana);
+        assert_eq!("Wangni".parse::<CompressorKind>().unwrap(), CompressorKind::Wangni);
         assert!("topk".parse::<CompressorKind>().is_err());
         assert_eq!(CompressorKind::default(), CompressorKind::Urq);
+        // wire ids are distinct and never the reserved unquantized 0
+        let kinds = [
+            CompressorKind::Urq,
+            CompressorKind::Diana,
+            CompressorKind::Wangni,
+            CompressorKind::VbSparse,
+            CompressorKind::Qsd,
+        ];
+        let mut ids: Vec<u8> = kinds.iter().map(|k| k.wire_id()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), kinds.len());
+        assert!(!ids.contains(&0));
+    }
+
+    #[test]
+    fn bit_alloc_parses_and_roundtrips() {
+        for alloc in [BitAlloc::Uniform, BitAlloc::NonUniform] {
+            let parsed: BitAlloc = alloc.name().parse().unwrap();
+            assert_eq!(parsed, alloc);
+        }
+        assert_eq!("NonUniform".parse::<BitAlloc>().unwrap(), BitAlloc::NonUniform);
+        assert!("adaptive".parse::<BitAlloc>().is_err());
+        assert_eq!(BitAlloc::default(), BitAlloc::Uniform);
+        assert_eq!(BitAlloc::Uniform.wire_id(), 0);
+        assert_eq!(BitAlloc::NonUniform.wire_id(), 1);
     }
 
     #[test]
@@ -476,5 +580,38 @@ mod tests {
     fn prop_diana_encoder_decoder_lockstep() {
         encoder_decoder_lockstep(CompressorKind::Diana, false, 0x03);
         encoder_decoder_lockstep(CompressorKind::Diana, true, 0x04);
+    }
+
+    #[test]
+    fn prop_wangni_local_encode_matches_wire() {
+        local_matches_wire(CompressorKind::Wangni, 0x0E);
+    }
+
+    #[test]
+    fn prop_vbsparse_local_encode_matches_wire() {
+        local_matches_wire(CompressorKind::VbSparse, 0x0F);
+    }
+
+    #[test]
+    fn prop_qsd_local_encode_matches_wire() {
+        local_matches_wire(CompressorKind::Qsd, 0x10);
+    }
+
+    #[test]
+    fn prop_wangni_encoder_decoder_lockstep() {
+        encoder_decoder_lockstep(CompressorKind::Wangni, false, 0x05);
+        encoder_decoder_lockstep(CompressorKind::Wangni, true, 0x06);
+    }
+
+    #[test]
+    fn prop_vbsparse_encoder_decoder_lockstep() {
+        encoder_decoder_lockstep(CompressorKind::VbSparse, false, 0x07);
+        encoder_decoder_lockstep(CompressorKind::VbSparse, true, 0x08);
+    }
+
+    #[test]
+    fn prop_qsd_encoder_decoder_lockstep() {
+        encoder_decoder_lockstep(CompressorKind::Qsd, false, 0x09);
+        encoder_decoder_lockstep(CompressorKind::Qsd, true, 0x0A);
     }
 }

@@ -18,6 +18,12 @@
 //!   accounting), written once and held by every link end.
 //! * [`compressor`] — the pluggable gradient-compression seam over that
 //!   state: URQ (the paper's scheme) and DIANA-style compressed differences.
+//! * [`zoo`] — further `Compressor` impls on the same seam: Wangni-style
+//!   unbiased sparsification, variance-based skip/delay, and quantized
+//!   sparse deltas.
+//! * [`allocation`] — non-uniform per-coordinate bit budgets `{b_i}`
+//!   (`--bit-alloc nonuniform` rebuilds grids through it each epoch,
+//!   preserving the exact total `Σ b_i = bits·d`).
 
 pub mod adaptive;
 pub mod allocation;
@@ -26,11 +32,13 @@ pub mod compressor;
 pub mod grid;
 pub mod replicated;
 pub mod urq;
+pub mod zoo;
 
 pub use adaptive::{AdaptivePolicy, GridPolicy, RadiusMode};
 pub use allocation::{allocate_bits, error_proxy};
 pub use codec::{pack_indices, unpack_indices, unpack_indices_into, QuantizedPayload};
-pub use compressor::{make_compressor, Compressor, CompressorKind, QuantState};
+pub use compressor::{make_compressor, BitAlloc, Compressor, CompressorKind, QuantState};
+pub use zoo::{QsdCompressor, VbSparseCompressor, WangniCompressor};
 pub use grid::Grid;
 pub use replicated::{EncodeStats, Encoded, ReplicatedGrid};
 pub use urq::{

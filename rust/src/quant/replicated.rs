@@ -34,7 +34,9 @@
 
 use anyhow::Result;
 
+use super::allocation::allocate_bits;
 use super::codec::{self, QuantizedPayload};
+use super::compressor::BitAlloc;
 use super::grid::Grid;
 use super::urq;
 use crate::quant::GridPolicy;
@@ -132,10 +134,26 @@ fn debug_roundtrip(grid: &Grid, idx: &[u32]) {
     debug_roundtrip_payload(grid, idx, &payload.bytes);
 }
 
+/// Build a non-uniform grid over `center` with scalar radius `r`: the total
+/// budget `bits·d` is redistributed by [`allocate_bits`] over per-coordinate
+/// scales `|c_j| + r` (a coordinate's dynamic range on this lattice), capped
+/// at `min(32, 2·bits)` per coordinate. Every input is replicated state, so
+/// both link ends derive the identical `{b_i}` — the allocation never
+/// travels on the wire, exactly like the radii.
+fn nonuniform_grid(center: &[f64], r: f64, bits: u8) -> Result<Grid> {
+    let d = center.len();
+    let scales: Vec<f64> = center.iter().map(|c| c.abs() + r).collect();
+    let max_bits = (2 * bits as u32).min(32) as u8;
+    let widths = allocate_bits(&scales, bits as u64 * d as u64, max_bits);
+    Grid::new(center.to_vec(), vec![r; d], widths)
+}
+
 /// The shared master↔worker grid state machine (see module docs).
 pub struct ReplicatedGrid {
     policy: GridPolicy,
     bits: u8,
+    /// How per-coordinate widths are chosen when grids are (re)built.
+    alloc: BitAlloc,
     d: usize,
     /// Center of `R_{w,k}`: the snapshot `w̃_k` under the adaptive policy,
     /// the initial point under the fixed policy.
@@ -155,13 +173,28 @@ pub struct ReplicatedGrid {
 }
 
 impl ReplicatedGrid {
-    /// A fresh replica: centers at the origin, `‖g̃‖ = 1`. `n_links` is N on
-    /// the master, 1 on a worker.
+    /// A fresh replica: centers at the origin, `‖g̃‖ = 1`, uniform widths.
+    /// `n_links` is N on the master, 1 on a worker.
     pub fn new(policy: GridPolicy, bits: u8, d: usize, n_links: usize) -> Self {
+        Self::with_alloc(policy, bits, BitAlloc::Uniform, d, n_links)
+    }
+
+    /// [`Self::new`] with an explicit bit-allocation mode (`--bit-alloc`).
+    /// Non-uniform replicas re-derive per-coordinate widths from the
+    /// committed centers and the adaptive radius at every epoch-boundary
+    /// grid rebuild.
+    pub fn with_alloc(
+        policy: GridPolicy,
+        bits: u8,
+        alloc: BitAlloc,
+        d: usize,
+        n_links: usize,
+    ) -> Self {
         assert!(n_links > 0, "need at least one link");
         Self {
             policy,
             bits,
+            alloc,
             d,
             w_center: vec![0.0; d],
             g_centers: vec![vec![0.0; d]; n_links],
@@ -239,15 +272,30 @@ impl ReplicatedGrid {
 
     fn ensure_w_grid(&mut self) -> Result<()> {
         if self.w_grid.is_none() {
-            self.w_grid = Some(self.policy.w_grid(&self.w_center, self.gnorm, self.bits)?);
+            self.w_grid = Some(match self.alloc {
+                BitAlloc::Uniform => self.policy.w_grid(&self.w_center, self.gnorm, self.bits)?,
+                BitAlloc::NonUniform => nonuniform_grid(
+                    &self.w_center,
+                    self.policy.w_radius(self.gnorm),
+                    self.bits,
+                )?,
+            });
         }
         Ok(())
     }
 
     fn ensure_g_grid(&mut self, link: usize) -> Result<()> {
         if self.g_grids[link].is_none() {
-            self.g_grids[link] =
-                Some(self.policy.g_grid(&self.g_centers[link], self.gnorm, self.bits)?);
+            self.g_grids[link] = Some(match self.alloc {
+                BitAlloc::Uniform => {
+                    self.policy.g_grid(&self.g_centers[link], self.gnorm, self.bits)?
+                }
+                BitAlloc::NonUniform => nonuniform_grid(
+                    &self.g_centers[link],
+                    self.policy.g_radius(self.gnorm),
+                    self.bits,
+                )?,
+            });
         }
         Ok(())
     }
@@ -405,8 +453,10 @@ impl ReplicatedGrid {
         Ok(())
     }
 
-    /// Payload bits of one quantized vector on this grid (`Σ b_i` — uniform
-    /// allocation, so `bits · d`): the ledger cost both channels meter.
+    /// Payload bits of one quantized vector on this grid (`Σ b_i`): the
+    /// ledger cost both channels meter. `bits · d` exactly under BOTH
+    /// allocation modes — uniform trivially, non-uniform because
+    /// [`allocate_bits`] preserves the total budget to the bit.
     pub fn msg_bits(&self) -> u64 {
         self.bits as u64 * self.d as u64
     }
@@ -685,5 +735,72 @@ mod tests {
     #[test]
     fn prop_master_worker_lockstep_fixed() {
         master_worker_lockstep(GridPolicy::Fixed { radius: 2.5 }, 0xF1);
+    }
+
+    /// Non-uniform allocation: both link ends re-derive the same `{b_i}`
+    /// from replicated state at every rebuild, the wire roundtrips on those
+    /// widths, and the exact-budget preservation keeps every message at the
+    /// same `Σ b_i = bits·d` the uniform path meters.
+    #[test]
+    fn prop_master_worker_lockstep_nonuniform() {
+        forall(60, 0xA110C, |rng| {
+            let d = 1 + rng.gen_index(6);
+            let bits = 1 + rng.gen_index(10) as u8;
+            let mut master =
+                ReplicatedGrid::with_alloc(adaptive(), bits, BitAlloc::NonUniform, d, 1);
+            let mut worker =
+                ReplicatedGrid::with_alloc(adaptive(), bits, BitAlloc::NonUniform, d, 1);
+            let mut enc_rng = rng.split(0x0e0c);
+            for _ in 0..1 + rng.gen_index(6) {
+                let w_tilde = gen_vec(rng, d, -3.0, 3.0);
+                let gnorm = rng.gen_uniform(0.0, 2.0);
+                let node = vec![gen_vec(rng, d, -3.0, 3.0)];
+                master.commit_epoch(&w_tilde, Some(&node), gnorm);
+                worker.commit_epoch(&w_tilde, Some(&node), gnorm);
+                for _ in 0..1 + rng.gen_index(4) {
+                    let u = gen_vec(rng, d, -6.0, 6.0);
+                    let mut tx = vec![0.0; d];
+                    let mut rx = vec![0.0; d];
+                    let e = master.encode_w(&u, &mut enc_rng, &mut tx).unwrap();
+                    worker.decode_w(&e.payload.bytes, &mut rx).unwrap();
+                    assert_eq!(
+                        tx.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                        rx.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                        "nonuniform downlink reconstruction diverged"
+                    );
+                    // exact-budget preservation: the ledger price is the
+                    // uniform one, bit for bit
+                    assert_eq!(e.payload.bits, master.msg_bits());
+                    let g = gen_vec(rng, d, -6.0, 6.0);
+                    let mut g_tx = vec![0.0; d];
+                    let mut g_rx = vec![0.0; d];
+                    let e = worker.encode_g(0, &g, &mut enc_rng, &mut g_tx).unwrap();
+                    master.decode_g(0, &e.payload.bytes, &mut g_rx).unwrap();
+                    assert_eq!(
+                        g_tx.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                        g_rx.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                        "nonuniform uplink reconstruction diverged"
+                    );
+                    assert_eq!(e.payload.bits, worker.msg_bits());
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn nonuniform_allocation_favors_large_scale_coordinates() {
+        // an off-center lattice: the large-|center| coordinate has the
+        // larger dynamic range |c_j| + r and must win bits from the small one
+        let g = nonuniform_grid(&[100.0, 0.0, 0.0, 0.0], 1.0, 4).unwrap();
+        assert_eq!(g.bits().iter().map(|&b| b as u64).sum::<u64>(), 16);
+        assert!(
+            g.bits()[0] > g.bits()[1],
+            "allocation {:?} should favor coordinate 0",
+            g.bits()
+        );
+        assert!(g.bits().iter().all(|&b| (1..=8).contains(&b)));
+        // a symmetric center degenerates to the uniform split
+        let g = nonuniform_grid(&[0.5; 4], 1.0, 4).unwrap();
+        assert_eq!(g.bits(), &[4, 4, 4, 4]);
     }
 }

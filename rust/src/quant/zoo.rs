@@ -1,0 +1,740 @@
+//! The compressor zoo: three more [`Compressor`] impls on the live uplink
+//! path, closing the ROADMAP "compressor zoo" item.
+//!
+//! * [`WangniCompressor`] — unbiased magnitude-proportional sparsification
+//!   (Wangni et al., arXiv:1710.09854): coordinate `i` survives with
+//!   probability `p_i = min(1, s·|g_i|/‖g‖₁)` and ships `g_i/p_i`, so
+//!   `E[ĝ] = g` — the unbiasedness condition is exactly `p_i > 0` wherever
+//!   `g_i ≠ 0`, which magnitude-proportional probabilities satisfy by
+//!   construction. The wire reuses the `GradDelta` index+value idiom
+//!   (u32 index + f64 value per surviving coordinate) with the same
+//!   96-bits/coordinate ledger rule. The twist that makes it *exact* under
+//!   SVRG: the two uplinks of one inner step (snapshot gradient, current
+//!   gradient) share one block of uniform draws — common random numbers —
+//!   so as `w → w̃` the two sparsifications become literally identical and
+//!   their difference vanishes, the same mechanism that lets the paper's
+//!   shrinking grids reach the exact minimizer.
+//! * [`VbSparseCompressor`] — variance-based skipping (Tsuzuku et al.,
+//!   arXiv:1802.06058, adapted to this repo's replicated-state discipline):
+//!   each link keeps a carry-over memory `h` on BOTH ends (DIANA-style);
+//!   only coordinates whose pending difference `g_i − h_i` rises above the
+//!   RMS of the whole difference vector are shipped (exact f64), the rest
+//!   are *delayed* — their signal accumulates in `g − h` until it is no
+//!   longer low-signal. Deterministic (no rng), 96 bits per shipped
+//!   coordinate.
+//! * [`QsdCompressor`] — quantized sparse deltas: the pending difference
+//!   `g − h` is shipped as its support plus values quantized by unbiased
+//!   randomized rounding on a per-message uniform grid over
+//!   `[−r, r]`, `r = max_i |g_i − h_i|`, `2^b` levels (`b` = the run's
+//!   `--bits`). Closes the gap between the 96-bit raw delta coordinates and
+//!   the b-bit dense path: 64 bits of grid scale + `(32 + b)` per
+//!   coordinate. Both ends advance `h += q(g − h)`, so the error memory
+//!   contracts like DIANA's (for `b ≥ 2` the rounding error is strictly
+//!   smaller than the radius) and the estimator is exact at convergence.
+//!
+//! All three speak through the existing `GradQ` wire envelope — the payload
+//! layout is the compressor's business, the `bits` field is its ledger rule
+//! — and none of them builds gradient lattices on the [`ReplicatedGrid`]
+//! (`recenters_g() = false`); the downlink stays URQ-on-`R_{w,k}` as for
+//! every scheme. Replication invariant: whatever state a variant keeps
+//! (Wangni's draw block, VbSparse/Qsd's `h`) is advanced identically by
+//! `encode` on the sending end and `decode` on the receiving end, so the
+//! cross-backend fingerprint matrix holds bit-for-bit.
+
+use anyhow::{bail, Result};
+
+use super::codec::{self, QuantizedPayload};
+use super::compressor::Compressor;
+use super::replicated::{EncodeStats, Encoded, ReplicatedGrid};
+use crate::rng::Xoshiro256pp;
+
+/// Ledger bits of one index+value wire coordinate (u32 + f64) — the same
+/// rule as [`crate::transport::DELTA_COORD_BITS`], restated here so the
+/// quant layer does not depend on the transport layer.
+pub const SPARSE_COORD_BITS: u64 = 96;
+
+/// Serialize one (index, value) pair onto a sparse index+value payload.
+#[inline]
+fn push_coord(bytes: &mut Vec<u8>, j: u32, v: f64) {
+    bytes.extend_from_slice(&j.to_le_bytes());
+    bytes.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Parse a sparse index+value payload (`12·nnz` bytes), validating strictly
+/// increasing in-range indices, and hand each pair to `apply`.
+fn parse_coords(payload: &[u8], d: usize, mut apply: impl FnMut(usize, f64)) -> Result<()> {
+    if payload.len() % 12 != 0 {
+        bail!(
+            "sparse payload length {} is not a whole number of 12-byte coordinates",
+            payload.len()
+        );
+    }
+    let mut prev: i64 = -1;
+    for chunk in payload.chunks_exact(12) {
+        let j = u32::from_le_bytes(chunk[0..4].try_into().unwrap());
+        let v = f64::from_le_bytes(chunk[4..12].try_into().unwrap());
+        if j as usize >= d {
+            bail!("sparse payload: index {j} >= dimension {d}");
+        }
+        if (j as i64) <= prev {
+            bail!("sparse payload: indices not strictly increasing at {j}");
+        }
+        prev = j as i64;
+        apply(j as usize, v);
+    }
+    Ok(())
+}
+
+/// Wangni-style unbiased sparsification (see module docs).
+pub struct WangniCompressor {
+    /// Expected-support budget `s = max(1, ⌈d/4⌉)` — replicated (a pure
+    /// function of `d`), so both ends price the same sampler.
+    s: f64,
+    /// Per-link block of `d` uniform draws shared by the two uplinks of one
+    /// inner step (common random numbers).
+    draws: Vec<Vec<f64>>,
+    /// Per-link phase flag: `true` = the next encode refreshes the block.
+    refresh: Vec<bool>,
+}
+
+impl WangniCompressor {
+    pub fn new(d: usize, n_links: usize) -> Self {
+        Self {
+            s: ((d as f64) / 4.0).ceil().max(1.0),
+            draws: vec![vec![0.0; d]; n_links],
+            refresh: vec![true; n_links],
+        }
+    }
+
+    /// The one sampling sequence both encode entry points run: refresh the
+    /// draw block on every other call (rng is consumed only then), select
+    /// coordinates against `p_i = min(1, s|g_i|/‖g‖₁)`, write the shared
+    /// reconstruction (`g_i/p_i` on survivors, 0 elsewhere), and hand each
+    /// survivor to `emit`. Returns nnz.
+    fn sparsify(
+        &mut self,
+        link: usize,
+        g: &[f64],
+        rng: &mut Xoshiro256pp,
+        out: &mut [f64],
+        mut emit: impl FnMut(u32, f64),
+    ) -> u64 {
+        if self.refresh[link] {
+            for u in self.draws[link].iter_mut() {
+                *u = rng.next_f64();
+            }
+        }
+        self.refresh[link] = !self.refresh[link];
+        let l1: f64 = g.iter().map(|x| x.abs()).sum();
+        let mut nnz = 0u64;
+        if l1 > 0.0 && l1.is_finite() {
+            for (j, (&gj, &uj)) in g.iter().zip(&self.draws[link]).enumerate() {
+                let p = (self.s * gj.abs() / l1).min(1.0);
+                if uj < p {
+                    let v = gj / p;
+                    out[j] = v;
+                    emit(j as u32, v);
+                    nnz += 1;
+                } else {
+                    out[j] = 0.0;
+                }
+            }
+        } else {
+            // all-zero gradient: the empty estimate is exact
+            out.fill(0.0);
+        }
+        nnz
+    }
+}
+
+impl Compressor for WangniCompressor {
+    fn recenters_g(&self) -> bool {
+        false // no gradient lattices: values travel raw, scaled by 1/p
+    }
+
+    fn encode(
+        &mut self,
+        _grids: &mut ReplicatedGrid,
+        link: usize,
+        g: &[f64],
+        rng: &mut Xoshiro256pp,
+        out: &mut [f64],
+    ) -> Result<Encoded> {
+        let mut bytes = Vec::new();
+        let nnz = self.sparsify(link, g, rng, out, |j, v| push_coord(&mut bytes, j, v));
+        Ok(Encoded {
+            payload: QuantizedPayload {
+                bytes,
+                bits: SPARSE_COORD_BITS * nnz,
+            },
+            sats: 0,
+        })
+    }
+
+    fn encode_local(
+        &mut self,
+        _grids: &mut ReplicatedGrid,
+        link: usize,
+        g: &[f64],
+        rng: &mut Xoshiro256pp,
+        out: &mut [f64],
+    ) -> Result<EncodeStats> {
+        let nnz = self.sparsify(link, g, rng, out, |_, _| {});
+        Ok(EncodeStats {
+            bits: SPARSE_COORD_BITS * nnz,
+            sats: 0,
+        })
+    }
+
+    fn decode(
+        &mut self,
+        _grids: &mut ReplicatedGrid,
+        _link: usize,
+        payload: &[u8],
+        out: &mut [f64],
+    ) -> Result<()> {
+        out.fill(0.0);
+        parse_coords(payload, out.len(), |j, v| out[j] = v)
+    }
+}
+
+/// Variance-based skip/delay sparsification (see module docs).
+pub struct VbSparseCompressor {
+    /// Per-link carry-over memory — replicated state, advanced identically
+    /// by encode (sender) and decode (receiver).
+    h: Vec<Vec<f64>>,
+}
+
+impl VbSparseCompressor {
+    pub fn new(d: usize, n_links: usize) -> Self {
+        Self {
+            h: vec![vec![0.0; d]; n_links],
+        }
+    }
+
+    /// Shared encode core: threshold the pending difference `g − h` at its
+    /// own RMS, ship the high-signal coordinates, delay the rest. The
+    /// maximum coordinate always clears the RMS, so a nonzero difference
+    /// ships at least one coordinate — the delay is never a deadlock.
+    fn skim(&mut self, link: usize, g: &[f64], out: &mut [f64], mut emit: impl FnMut(u32, f64)) -> u64 {
+        let h = &mut self.h[link];
+        let mut sum2 = 0.0;
+        for (gj, hj) in g.iter().zip(h.iter()) {
+            let dj = gj - hj;
+            sum2 += dj * dj;
+        }
+        let tau = (sum2 / g.len() as f64).sqrt();
+        let mut nnz = 0u64;
+        for (j, (&gj, hj)) in g.iter().zip(h.iter_mut()).enumerate() {
+            let dj = gj - *hj;
+            if dj != 0.0 && dj.abs() >= tau {
+                emit(j as u32, dj);
+                // the decoder only has dj: both ends must advance h with the
+                // identical `h += dj` (not `h = g`, which can differ in the
+                // last bit and desync the replicas)
+                *hj += dj;
+                nnz += 1;
+            }
+            out[j] = *hj;
+        }
+        nnz
+    }
+}
+
+impl Compressor for VbSparseCompressor {
+    fn recenters_g(&self) -> bool {
+        false
+    }
+
+    fn encode(
+        &mut self,
+        _grids: &mut ReplicatedGrid,
+        link: usize,
+        g: &[f64],
+        _rng: &mut Xoshiro256pp,
+        out: &mut [f64],
+    ) -> Result<Encoded> {
+        let mut bytes = Vec::new();
+        let nnz = self.skim(link, g, out, |j, v| push_coord(&mut bytes, j, v));
+        Ok(Encoded {
+            payload: QuantizedPayload {
+                bytes,
+                bits: SPARSE_COORD_BITS * nnz,
+            },
+            sats: 0,
+        })
+    }
+
+    fn encode_local(
+        &mut self,
+        _grids: &mut ReplicatedGrid,
+        link: usize,
+        g: &[f64],
+        _rng: &mut Xoshiro256pp,
+        out: &mut [f64],
+    ) -> Result<EncodeStats> {
+        let nnz = self.skim(link, g, out, |_, _| {});
+        Ok(EncodeStats {
+            bits: SPARSE_COORD_BITS * nnz,
+            sats: 0,
+        })
+    }
+
+    fn decode(
+        &mut self,
+        _grids: &mut ReplicatedGrid,
+        link: usize,
+        payload: &[u8],
+        out: &mut [f64],
+    ) -> Result<()> {
+        let h = &mut self.h[link];
+        parse_coords(payload, h.len(), |j, v| h[j] += v)?;
+        out.copy_from_slice(h);
+        Ok(())
+    }
+}
+
+/// Quantized sparse deltas (see module docs). Wire layout of one message:
+/// `nnz: u32 | radius: f64 | idx[nnz]: u32 | codes: ⌈nnz·b/8⌉ bytes`;
+/// metered `64 + nnz·(32 + b)` bits (the nnz count is framing and rides
+/// free, like every length prefix on this wire).
+pub struct QsdCompressor {
+    h: Vec<Vec<f64>>,
+    /// Reusable support / code / width scratch (no per-message allocation
+    /// on the local path).
+    idx: Vec<u32>,
+    codes: Vec<u32>,
+    widths: Vec<u8>,
+}
+
+impl QsdCompressor {
+    pub fn new(d: usize, n_links: usize) -> Self {
+        Self {
+            h: vec![vec![0.0; d]; n_links],
+            idx: Vec::with_capacity(d),
+            codes: Vec::with_capacity(d),
+            widths: Vec::with_capacity(d),
+        }
+    }
+
+    /// Shared encode core: collect the support of `g − h`, quantize each
+    /// pending value by unbiased randomized rounding on the per-message grid
+    /// (one rng draw per support coordinate, unconditionally — both encode
+    /// entry points consume the identical stream), advance `h` with the
+    /// reconstruction, and leave `(idx, codes, radius)` for the wire path to
+    /// serialize. `out` receives the updated `h`.
+    fn quantize_delta(
+        &mut self,
+        grids: &ReplicatedGrid,
+        link: usize,
+        g: &[f64],
+        rng: &mut Xoshiro256pp,
+        out: &mut [f64],
+    ) -> Result<(u64, f64)> {
+        let b = grids.bits();
+        let h = &mut self.h[link];
+        self.idx.clear();
+        self.codes.clear();
+        let mut radius = 0.0f64;
+        for (j, (&gj, hj)) in g.iter().zip(h.iter()).enumerate() {
+            let dj = gj - *hj;
+            if dj != 0.0 {
+                self.idx.push(j as u32);
+                radius = radius.max(dj.abs());
+            }
+        }
+        if !self.idx.is_empty() {
+            if !radius.is_finite() || radius == 0.0 {
+                bail!("qsd: non-finite gradient delta on link {link}");
+            }
+            // the decoder recomputes spacing from the shipped radius with
+            // this exact expression — identical f64 ops, identical bits
+            let levels_m1 = ((1u64 << b) - 1) as f64;
+            let spacing = 2.0 * radius / levels_m1;
+            let inv_spacing = levels_m1 / (2.0 * radius);
+            let max_k = (1u64 << b) - 1;
+            for i in 0..self.idx.len() {
+                let j = self.idx[i] as usize;
+                let dj = g[j] - h[j];
+                let t = (dj + radius) * inv_spacing;
+                let k0 = t.floor();
+                let u = rng.next_f64();
+                let k = ((k0 as i64) + (u < t - k0) as i64).clamp(0, max_k as i64) as u32;
+                self.codes.push(k);
+                h[j] += spacing * k as f64 - radius;
+            }
+        }
+        out.copy_from_slice(h);
+        Ok((self.idx.len() as u64, radius))
+    }
+
+    #[inline]
+    fn msg_bits(nnz: u64, b: u8) -> u64 {
+        64 + nnz * (32 + b as u64)
+    }
+}
+
+impl Compressor for QsdCompressor {
+    fn recenters_g(&self) -> bool {
+        false // the per-message grid is derived from the delta, not R_{g,k}
+    }
+
+    fn encode(
+        &mut self,
+        grids: &mut ReplicatedGrid,
+        link: usize,
+        g: &[f64],
+        rng: &mut Xoshiro256pp,
+        out: &mut [f64],
+    ) -> Result<Encoded> {
+        let b = grids.bits();
+        let (nnz, radius) = self.quantize_delta(grids, link, g, rng, out)?;
+        let mut bytes = Vec::with_capacity(12 + self.idx.len() * 4 + (self.idx.len() * b as usize).div_ceil(8));
+        bytes.extend_from_slice(&(nnz as u32).to_le_bytes());
+        bytes.extend_from_slice(&radius.to_le_bytes());
+        for &j in &self.idx {
+            bytes.extend_from_slice(&j.to_le_bytes());
+        }
+        self.widths.clear();
+        self.widths.resize(self.codes.len(), b);
+        let packed = codec::pack_indices(&self.codes, &self.widths)?;
+        bytes.extend_from_slice(&packed.bytes);
+        Ok(Encoded {
+            payload: QuantizedPayload {
+                bytes,
+                bits: Self::msg_bits(nnz, b),
+            },
+            sats: 0,
+        })
+    }
+
+    fn encode_local(
+        &mut self,
+        grids: &mut ReplicatedGrid,
+        link: usize,
+        g: &[f64],
+        rng: &mut Xoshiro256pp,
+        out: &mut [f64],
+    ) -> Result<EncodeStats> {
+        let b = grids.bits();
+        let (nnz, _) = self.quantize_delta(grids, link, g, rng, out)?;
+        Ok(EncodeStats {
+            bits: Self::msg_bits(nnz, b),
+            sats: 0,
+        })
+    }
+
+    fn decode(
+        &mut self,
+        grids: &mut ReplicatedGrid,
+        link: usize,
+        payload: &[u8],
+        out: &mut [f64],
+    ) -> Result<()> {
+        let b = grids.bits();
+        let h = &mut self.h[link];
+        let d = h.len();
+        if payload.len() < 12 {
+            bail!("qsd payload: {} bytes, need at least the 12-byte header", payload.len());
+        }
+        let nnz = u32::from_le_bytes(payload[0..4].try_into().unwrap()) as usize;
+        let radius = f64::from_le_bytes(payload[4..12].try_into().unwrap());
+        if nnz > d {
+            bail!("qsd payload: {nnz} coordinates > dimension {d}");
+        }
+        let idx_end = 12 + 4 * nnz;
+        let code_bytes = (nnz * b as usize).div_ceil(8);
+        if payload.len() != idx_end + code_bytes {
+            bail!(
+                "qsd payload: {} bytes, expected {} for nnz={nnz} at {b} bits",
+                payload.len(),
+                idx_end + code_bytes
+            );
+        }
+        if nnz > 0 {
+            if !radius.is_finite() || radius <= 0.0 {
+                bail!("qsd payload: bad grid radius {radius}");
+            }
+            self.idx.clear();
+            let mut prev: i64 = -1;
+            for chunk in payload[12..idx_end].chunks_exact(4) {
+                let j = u32::from_le_bytes(chunk.try_into().unwrap());
+                if j as usize >= d {
+                    bail!("qsd payload: index {j} >= dimension {d}");
+                }
+                if (j as i64) <= prev {
+                    bail!("qsd payload: indices not strictly increasing at {j}");
+                }
+                prev = j as i64;
+                self.idx.push(j);
+            }
+            self.widths.clear();
+            self.widths.resize(nnz, b);
+            codec::unpack_indices_into(&payload[idx_end..], &self.widths, &mut self.codes)?;
+            let levels_m1 = ((1u64 << b) - 1) as f64;
+            let spacing = 2.0 * radius / levels_m1;
+            for (&j, &k) in self.idx.iter().zip(&self.codes) {
+                h[j as usize] += spacing * k as f64 - radius;
+            }
+        }
+        out.copy_from_slice(h);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{make_compressor, AdaptivePolicy, CompressorKind, GridPolicy};
+    use crate::testkit::{forall, gen_vec};
+
+    fn grid(d: usize, bits: u8) -> ReplicatedGrid {
+        ReplicatedGrid::new(
+            GridPolicy::Adaptive(AdaptivePolicy::practical(0.2, 2.5, d, 0.2, 8)),
+            bits,
+            d,
+            1,
+        )
+    }
+
+    #[test]
+    fn wangni_is_unbiased_and_exact_on_zero() {
+        // E[ĝ] = g coordinate-wise: magnitude-proportional probabilities are
+        // positive wherever g_i ≠ 0 (the unbiasedness condition), and the
+        // inverse-probability scaling cancels the selection in expectation
+        let d = 5;
+        let g = [0.8, -0.2, 0.0, 0.05, -0.4];
+        let mut rng = Xoshiro256pp::seed_from_u64(17);
+        let n = 60_000;
+        let mut sums = [0.0; 5];
+        let mut grids = grid(d, 4);
+        let mut comp = WangniCompressor::new(d, 1);
+        let mut out = [0.0; 5];
+        for _ in 0..n {
+            comp.encode(&mut grids, 0, &g, &mut rng, &mut out).unwrap();
+            for (s, o) in sums.iter_mut().zip(&out) {
+                *s += o;
+            }
+        }
+        for (j, (&s, &gj)) in sums.iter().zip(&g).enumerate() {
+            let mean = s / n as f64;
+            assert!((mean - gj).abs() < 8e-3, "coord {j}: mean={mean} g={gj}");
+        }
+        // the zero coordinate is never shipped, so the estimate is exact
+        let zero = [0.0; 5];
+        let e = comp.encode(&mut grids, 0, &zero, &mut rng, &mut out).unwrap();
+        assert_eq!(e.payload.bits, 0);
+        assert!(e.payload.bytes.is_empty());
+        assert_eq!(out, [0.0; 5]);
+    }
+
+    #[test]
+    fn wangni_pairs_uplinks_on_shared_draws() {
+        // the two uplinks of one inner step reuse one draw block, so equal
+        // inputs produce bit-identical payloads — the difference the SVRG
+        // update consumes is exactly zero at convergence
+        let d = 6;
+        let mut grids = grid(d, 4);
+        let mut comp = WangniCompressor::new(d, 1);
+        let mut rng = Xoshiro256pp::seed_from_u64(23);
+        let g = gen_vec(&mut rng, d, -1.0, 1.0);
+        let mut a = vec![0.0; d];
+        let mut b = vec![0.0; d];
+        let e1 = comp.encode(&mut grids, 0, &g, &mut rng, &mut a).unwrap();
+        let e2 = comp.encode(&mut grids, 0, &g, &mut rng, &mut b).unwrap();
+        assert_eq!(e1.payload.bytes, e2.payload.bytes);
+        assert_eq!(a, b);
+        // the third call starts a new pair: fresh draws, independent support
+        let e3 = comp.encode(&mut grids, 0, &g, &mut rng, &mut b).unwrap();
+        // (not asserting inequality of bytes — a collision is possible, the
+        // draw refresh is what's pinned)
+        assert_eq!(e3.payload.bits % SPARSE_COORD_BITS, 0);
+    }
+
+    #[test]
+    fn wangni_expected_support_stays_under_budget() {
+        let d = 64;
+        let mut grids = grid(d, 4);
+        let mut comp = WangniCompressor::new(d, 1);
+        let mut rng = Xoshiro256pp::seed_from_u64(31);
+        let g = gen_vec(&mut rng, d, -1.0, 1.0);
+        let mut out = vec![0.0; d];
+        let mut total = 0u64;
+        let rounds = 2000;
+        for _ in 0..rounds {
+            total += comp
+                .encode(&mut grids, 0, &g, &mut rng, &mut out)
+                .unwrap()
+                .payload
+                .bits;
+        }
+        // E[nnz] = Σ p_i ≤ s = d/4, so 96·nnz ≤ 24·d ≪ 64·d: the uplink
+        // ledger beats the raw path by construction
+        let mean_bits = total as f64 / rounds as f64;
+        assert!(
+            mean_bits < 0.5 * (64 * d) as f64,
+            "mean {mean_bits} vs raw {}",
+            64 * d
+        );
+    }
+
+    #[test]
+    fn vbsparse_ships_high_signal_and_drains_the_rest() {
+        let d = 4;
+        let mut grids = grid(d, 4);
+        let mut comp = VbSparseCompressor::new(d, 1);
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let g = [1.0, 0.01, -0.02, 0.015];
+        let mut out = [0.0; 4];
+        // first exchange: the dominant coordinate clears the RMS, the tiny
+        // ones are delayed
+        let e = comp.encode(&mut grids, 0, &g, &mut rng, &mut out).unwrap();
+        assert_eq!(e.payload.bits, SPARSE_COORD_BITS);
+        assert_eq!(out[0], 1.0);
+        assert_eq!(out[1], 0.0, "low-signal coordinate delayed");
+        // with g held fixed, repeated exchanges drain every pending
+        // coordinate (each round ships at least the max remaining)
+        for _ in 0..d {
+            comp.encode(&mut grids, 0, &g, &mut rng, &mut out).unwrap();
+        }
+        assert_eq!(out, g, "carry-over state converges to the input");
+        // fully drained: the next message is empty
+        let e = comp.encode(&mut grids, 0, &g, &mut rng, &mut out).unwrap();
+        assert_eq!(e.payload.bits, 0);
+    }
+
+    #[test]
+    fn qsd_contracts_error_memory_and_prices_the_wire_exactly() {
+        let d = 5;
+        let bits = 6u8;
+        let mut grids = grid(d, bits);
+        let mut comp = QsdCompressor::new(d, 1);
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let g = [0.9, -0.4, 0.2, 0.0, -0.7];
+        let mut out = [0.0; 5];
+        let e = comp.encode(&mut grids, 0, &g, &mut rng, &mut out).unwrap();
+        // support excludes the zero coordinate; the scale header is 64 bits
+        let nnz = 4u64;
+        assert_eq!(e.payload.bits, 64 + nnz * (32 + bits as u64));
+        assert_eq!(
+            e.payload.bytes.len(),
+            12 + 4 * nnz as usize + (nnz as usize * bits as usize).div_ceil(8)
+        );
+        // one exchange pulls h within a spacing of g (radius = max|delta|)
+        let spacing = 2.0 * 0.9 / 63.0;
+        for (hj, gj) in comp.h[0].iter().zip(&g) {
+            assert!((hj - gj).abs() <= spacing + 1e-12);
+        }
+        // second exchange contracts further — the DIANA-style mechanism
+        comp.encode(&mut grids, 0, &g, &mut rng, &mut out).unwrap();
+        let spacing2 = 2.0 * spacing / 63.0;
+        for (oj, gj) in out.iter().zip(&g) {
+            assert!((oj - gj).abs() <= spacing2 + spacing * 1e-9, "{oj} vs {gj}");
+        }
+    }
+
+    #[test]
+    fn qsd_is_unbiased_within_the_span() {
+        // E[reconstruction] = g: randomized rounding on the per-message grid
+        let g = [0.33];
+        let mut rng = Xoshiro256pp::seed_from_u64(29);
+        let n = 60_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let mut grids = grid(1, 3);
+            let mut comp = QsdCompressor::new(1, 1);
+            let mut out = [0.0; 1];
+            comp.encode(&mut grids, 0, &g, &mut rng, &mut out).unwrap();
+            sum += out[0];
+        }
+        let mean = sum / n as f64;
+        assert!((mean - g[0]).abs() < 5e-3, "mean={mean}");
+    }
+
+    #[test]
+    fn decoders_reject_malformed_payloads() {
+        let d = 4;
+        let mut grids = grid(d, 5);
+        let mut out = vec![0.0; d];
+        for kind in [CompressorKind::Wangni, CompressorKind::VbSparse] {
+            let mut c = make_compressor(kind, d, 1);
+            // truncated coordinate
+            assert!(c.decode(&mut grids, 0, &[0u8; 7], &mut out).is_err());
+            // out-of-range index
+            let mut bytes = Vec::new();
+            push_coord(&mut bytes, 9, 1.0);
+            assert!(c.decode(&mut grids, 0, &bytes, &mut out).is_err());
+            // non-increasing indices
+            let mut bytes = Vec::new();
+            push_coord(&mut bytes, 2, 1.0);
+            push_coord(&mut bytes, 2, 1.0);
+            assert!(c.decode(&mut grids, 0, &bytes, &mut out).is_err());
+        }
+        let mut q = make_compressor(CompressorKind::Qsd, d, 1);
+        // short header
+        assert!(q.decode(&mut grids, 0, &[0u8; 11], &mut out).is_err());
+        // nnz beyond the dimension
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&9u32.to_le_bytes());
+        bytes.extend_from_slice(&1.0f64.to_le_bytes());
+        assert!(q.decode(&mut grids, 0, &bytes, &mut out).is_err());
+        // non-finite radius with a nonempty support
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&f64::NAN.to_le_bytes());
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        bytes.push(0);
+        assert!(q.decode(&mut grids, 0, &bytes, &mut out).is_err());
+        // length that disagrees with nnz·b
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&1.0f64.to_le_bytes());
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        assert!(q.decode(&mut grids, 0, &bytes, &mut out).is_err());
+    }
+
+    /// The zoo's lockstep/local-vs-wire guarantees ride the generic
+    /// property harnesses in `compressor.rs`; this pins the one statement
+    /// those don't cover — every variant's ledger rule prices the *actual*
+    /// payload bytes it shipped.
+    #[test]
+    fn prop_ledger_rule_matches_payload_bytes() {
+        forall(60, 0x200, |rng| {
+            let d = 1 + rng.gen_index(8);
+            let bits = 2 + rng.gen_index(8) as u8;
+            for kind in [
+                CompressorKind::Wangni,
+                CompressorKind::VbSparse,
+                CompressorKind::Qsd,
+            ] {
+                let mut grids = grid(d, bits);
+                let mut comp = make_compressor(kind, d, 1);
+                let mut enc_rng = rng.split(0x99);
+                let mut out = vec![0.0; d];
+                for _ in 0..3 {
+                    let g = gen_vec(rng, d, -2.0, 2.0);
+                    let e = comp.encode(&mut grids, 0, &g, &mut enc_rng, &mut out).unwrap();
+                    match kind {
+                        CompressorKind::Wangni | CompressorKind::VbSparse => {
+                            let nnz = (e.payload.bytes.len() / 12) as u64;
+                            assert_eq!(e.payload.bytes.len() % 12, 0);
+                            assert_eq!(e.payload.bits, SPARSE_COORD_BITS * nnz);
+                        }
+                        CompressorKind::Qsd => {
+                            let nnz = u32::from_le_bytes(
+                                e.payload.bytes[0..4].try_into().unwrap(),
+                            ) as u64;
+                            assert_eq!(e.payload.bits, 64 + nnz * (32 + bits as u64));
+                            assert_eq!(
+                                e.payload.bytes.len(),
+                                12 + 4 * nnz as usize
+                                    + (nnz as usize * bits as usize).div_ceil(8)
+                            );
+                        }
+                        _ => unreachable!(),
+                    }
+                }
+            }
+        });
+    }
+}

@@ -39,7 +39,14 @@ use anyhow::{bail, Result};
 /// `SnapshotSet` was added (master → rejoining worker state sync: the
 /// current and previous snapshots, so a post-rejoin `EpochRevert` restores
 /// the same iterate the engine does).
-pub const PROTO_VERSION: u16 = 5;
+/// v6: the compressor zoo landed (`wangni`/`vbsparse`/`qsd` compressor ids
+/// 3–5 flow through the existing `GradQ` envelope with their own payload
+/// layouts and ledger rules) and `Config` gained the `bit_alloc` byte
+/// (`--bit-alloc uniform|nonuniform`): non-uniform runs rebuild grids with
+/// per-coordinate widths each epoch, so a master/worker disagreement on the
+/// allocation mode — or on a compressor with link-local replicated state —
+/// must be refused at connect like any other lattice-geometry mismatch.
+pub const PROTO_VERSION: u16 = 6;
 
 /// Ledger bits of one sparse-delta coordinate on the wire: a 32-bit column
 /// index plus a 64-bit value (`GradDelta`/`DeltaApply` carry
@@ -69,6 +76,11 @@ pub enum Message {
         bits: u8,
         /// 1 when the inner-loop current gradient is quantized too ("+").
         plus: u8,
+        /// The bit-allocation mode
+        /// ([`crate::quant::BitAlloc::wire_id`]: 0 = uniform, 1 =
+        /// non-uniform). Both ends must redistribute (or not) the same
+        /// per-coordinate widths or every packed payload mis-decodes.
+        bit_alloc: u8,
         /// 1 when the master's training data is CSR sparse. Storage is a
         /// *data* property (sparse standardization is scale-only), so a
         /// `--format` disagreement means the two ends hold different
@@ -223,7 +235,7 @@ impl Message {
     /// [`Self::write_to`] by the same test.
     pub fn encoded_len(&self) -> usize {
         1 + match self {
-            Message::Config { .. } => 2 + 4 * 1 + 8 + 4 + 8 + 8 + 8,
+            Message::Config { .. } => 2 + 5 * 1 + 8 + 4 + 8 + 8 + 8,
             Message::EpochBegin { .. } => 4 + 1,
             Message::EpochRevert
             | Message::InnerRequest
@@ -273,6 +285,7 @@ impl Message {
                 compressor,
                 bits,
                 plus,
+                bit_alloc,
                 sparse,
                 n,
                 d,
@@ -285,6 +298,7 @@ impl Message {
                 b.push(*compressor);
                 b.push(*bits);
                 b.push(*plus);
+                b.push(*bit_alloc);
                 b.push(*sparse);
                 b.extend_from_slice(&n.to_le_bytes());
                 b.extend_from_slice(&d.to_le_bytes());
@@ -368,6 +382,7 @@ impl Message {
                 compressor: r.u8()?,
                 bits: r.u8()?,
                 plus: r.u8()?,
+                bit_alloc: r.u8()?,
                 sparse: r.u8()?,
                 n: r.u64()?,
                 d: r.u32()?,
@@ -761,6 +776,7 @@ mod tests {
                 compressor: 2,
                 bits: 5,
                 plus: 1,
+                bit_alloc: 1,
                 sparse: 1,
                 n: 20_000,
                 d: 47_236,

@@ -114,7 +114,19 @@ impl TcpDuplex {
                 Err(e) => return Err(e).context("read frame header"),
             }
         }
-        let len = self.body_len.unwrap();
+        // the header loop above only exits with a validated length; if that
+        // invariant ever breaks (a refactor reordering the state machine, a
+        // torn peer driving it into an unforeseen state), fail the link with
+        // the full recv state instead of panicking the worker
+        let Some(len) = self.body_len else {
+            bail!(
+                "tcp recv state machine desync: no validated body length after \
+                 the header phase (hdr_got={}/4, body_got={}) — torn or \
+                 hostile peer mid-header; dropping the link",
+                self.hdr_got,
+                self.body_got
+            );
+        };
         while self.body_got < len {
             match self.stream.read(&mut self.recv_buf[self.body_got..len]) {
                 Ok(0) => bail!("peer closed connection mid-frame"),
@@ -371,6 +383,61 @@ mod tests {
             client.recv_deadline(Duration::from_secs(10)).unwrap(),
             Some(Message::GradRaw {
                 g: vec![1.5, -2.25, 0.125],
+            })
+        );
+        tx.send(()).unwrap();
+        server.join().unwrap();
+    }
+
+    /// A peer that stalls **inside the 4-byte length prefix itself** — the
+    /// state the old `body_len.unwrap()` sat downstream of — must behave
+    /// exactly like a mid-body stall: clean, repeatable `recv_deadline`
+    /// timeouts with the partial header retained, then a full decode once
+    /// the remaining header and body bytes arrive.
+    #[test]
+    fn truncated_header_stall_times_out_cleanly_then_resumes() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let (tx, rx) = std::sync::mpsc::channel::<()>();
+        let server = std::thread::spawn(move || {
+            let (mut stream, _) = listener.accept().unwrap();
+            stream.set_nodelay(true).unwrap();
+            let body = Message::GradRaw {
+                g: vec![0.75, -4.5],
+            }
+            .encode();
+            let prefix = (body.len() as u32).to_le_bytes();
+            // two bytes of the four-byte prefix, then stall
+            stream.write_all(&prefix[..2]).unwrap();
+            rx.recv().unwrap();
+            // one more header byte — still truncated — then stall again
+            stream.write_all(&prefix[2..3]).unwrap();
+            rx.recv().unwrap();
+            // the last header byte and the whole body
+            stream.write_all(&prefix[3..]).unwrap();
+            stream.write_all(&body).unwrap();
+            rx.recv().unwrap(); // hold the socket open until the client is done
+        });
+        let mut client = TcpDuplex::connect(&addr.to_string()).unwrap();
+        // half a header: timeout, not a desync error or a panic
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(client
+            .recv_deadline(Duration::from_millis(30))
+            .unwrap()
+            .is_none());
+        tx.send(()).unwrap();
+        // three of four header bytes: still a clean timeout, state retained
+        std::thread::sleep(Duration::from_millis(20));
+        assert!(client
+            .recv_deadline(Duration::from_millis(30))
+            .unwrap()
+            .is_none());
+        tx.send(()).unwrap();
+        // completion: the header finishes and the frame decodes intact
+        assert_eq!(
+            client.recv_deadline(Duration::from_secs(10)).unwrap(),
+            Some(Message::GradRaw {
+                g: vec![0.75, -4.5],
             })
         );
         tx.send(()).unwrap();

@@ -27,7 +27,7 @@ use crate::algorithms::LazyIterate;
 use crate::data::DataFingerprint;
 use crate::linalg::SparseVec;
 use crate::objective::{LogisticRidge, Objective};
-use crate::quant::{CompressorKind, GridPolicy, QuantState};
+use crate::quant::{BitAlloc, CompressorKind, GridPolicy, QuantState};
 use crate::rng::Xoshiro256pp;
 use crate::runtime::{XlaRuntime, XlaWorkerKernel};
 use crate::transport::{Duplex, FrameRef, Message, PROTO_VERSION};
@@ -240,6 +240,8 @@ pub struct WorkerQuant {
     pub plus: bool,
     /// Uplink compression scheme (must match the master's).
     pub compressor: CompressorKind,
+    /// Per-coordinate bit-width policy (must match the master's).
+    pub bit_alloc: BitAlloc,
 }
 
 impl From<&QuantOpts> for WorkerQuant {
@@ -249,6 +251,7 @@ impl From<&QuantOpts> for WorkerQuant {
             policy: q.policy.clone(),
             plus: q.plus,
             compressor: q.compressor,
+            bit_alloc: q.bit_alloc,
         }
     }
 }
@@ -297,7 +300,7 @@ impl<D: Duplex, B: GradientSource> WorkerNode<D, B> {
         let mut quant: Option<QuantState> = self
             .quant
             .as_ref()
-            .map(|q| QuantState::new(q.policy.clone(), q.bits, q.compressor, d, 1));
+            .map(|q| QuantState::new(q.policy.clone(), q.bits, q.compressor, q.bit_alloc, d, 1));
         let plus = self.quant.as_ref().map(|q| q.plus).unwrap_or(false);
         // scratch for the encoder's reconstruction (the master's copy; this
         // end only needs the side effect of advancing the compressor state)
@@ -332,6 +335,7 @@ impl<D: Duplex, B: GradientSource> WorkerNode<D, B> {
                     compressor,
                     bits,
                     plus: mplus,
+                    bit_alloc: mbit_alloc,
                     sparse: msparse,
                     n: mn,
                     d: md,
@@ -375,22 +379,40 @@ impl<D: Duplex, B: GradientSource> WorkerNode<D, B> {
                             fp.content_hash,
                         );
                     }
-                    let (wc, wb, wp, wfp) = match &self.quant {
+                    let (wc, wb, wp, wa, wfp) = match &self.quant {
                         Some(q) => (
                             q.compressor.wire_id(),
                             q.bits,
                             q.plus as u8,
+                            q.bit_alloc.wire_id(),
                             q.policy.fingerprint(),
                         ),
-                        None => (0, 0, 0, 0),
+                        None => (0, 0, 0, 0, 0),
                     };
-                    if (compressor, bits, mplus, policy_fp) != (wc, wb, wp, wfp) {
+                    // field-specific refusals: a compressor or bit-allocation
+                    // skew desynchronizes the replicated state machines from
+                    // the very first GradQ, so name the offending flag
+                    if compressor != wc {
                         bail!(
-                            "quantization config mismatch: master sent (compressor={compressor}, \
-                             bits={bits}, plus={mplus}, policy_fp={policy_fp:#x}), this worker has \
-                             (compressor={wc}, bits={wb}, plus={wp}, policy_fp={wfp:#x}) — start \
-                             both ends with the same --compressor/--bits/--plus and identical grid \
-                             policy parameters (0s = unquantized)"
+                            "compressor mismatch: master sent wire id {compressor}, this worker \
+                             has {wc} — start both ends with the same \
+                             --compressor urq|diana|wangni|vbsparse|qsd (0 = unquantized)"
+                        );
+                    }
+                    if mbit_alloc != wa {
+                        bail!(
+                            "bit-allocation mismatch: master sent wire id {mbit_alloc}, this \
+                             worker has {wa} — start both ends with the same \
+                             --bit-alloc uniform|nonuniform"
+                        );
+                    }
+                    if (bits, mplus, policy_fp) != (wb, wp, wfp) {
+                        bail!(
+                            "quantization config mismatch: master sent (bits={bits}, \
+                             plus={mplus}, policy_fp={policy_fp:#x}), this worker has \
+                             (bits={wb}, plus={wp}, policy_fp={wfp:#x}) — start both ends \
+                             with the same --bits/--plus and identical grid policy \
+                             parameters (0s = unquantized)"
                         );
                     }
                     configured = true;
@@ -589,6 +611,7 @@ mod tests {
             compressor: 0,
             bits: 0,
             plus: 0,
+            bit_alloc: 0,
             sparse: fp.sparse as u8,
             n: fp.n,
             d: fp.d,
@@ -757,6 +780,7 @@ mod tests {
             policy: GridPolicy::Fixed { radius: 4.0 },
             plus: true,
             compressor: CompressorKind::Urq,
+            bit_alloc: BitAlloc::Uniform,
         };
         let matching = || {
             let fp = fp();
@@ -765,6 +789,7 @@ mod tests {
                 compressor: CompressorKind::Urq.wire_id(),
                 bits: 4,
                 plus: 1,
+                bit_alloc: BitAlloc::Uniform.wire_id(),
                 sparse: fp.sparse as u8,
                 n: fp.n,
                 d: fp.d,
@@ -807,8 +832,17 @@ mod tests {
                 $field
             }};
         }
-        // compressor mismatch
-        reject(mutated(&|m| *field!(m, compressor) = CompressorKind::Diana.wire_id()));
+        // compressor mismatch — every scheme id, not just the neighbor's
+        for kind in [
+            CompressorKind::Diana,
+            CompressorKind::Wangni,
+            CompressorKind::VbSparse,
+            CompressorKind::Qsd,
+        ] {
+            reject(mutated(&|m| *field!(m, compressor) = kind.wire_id()));
+        }
+        // bit-allocation mismatch (--bit-alloc disagreement)
+        reject(mutated(&|m| *field!(m, bit_alloc) = BitAlloc::NonUniform.wire_id()));
         // same policy class, different parameters: the fingerprint refuses
         reject(mutated(&|m| {
             *field!(m, policy_fp) = GridPolicy::Fixed { radius: 2.0 }.fingerprint()
@@ -830,6 +864,59 @@ mod tests {
         *field!(&mut skewed, version) += 1;
         master.send(skewed).unwrap();
         assert!(t.join().unwrap().is_err());
+    }
+
+    #[test]
+    fn handshake_refusals_name_the_offending_flag() {
+        // driver-level S4 guarantee: a --compressor or --bit-alloc skew is
+        // refused at connect with the flag named, not a generic config error
+        let wq = WorkerQuant {
+            bits: 4,
+            policy: GridPolicy::Fixed { radius: 4.0 },
+            plus: true,
+            compressor: CompressorKind::Wangni,
+            bit_alloc: BitAlloc::NonUniform,
+        };
+        let err_for = |cfg: Message| {
+            let (mut master, wlink) = pair();
+            let node = WorkerNode::new(
+                shard(),
+                wlink,
+                Some(wq.clone()),
+                fp(),
+                Xoshiro256pp::seed_from_u64(13),
+            );
+            let t = std::thread::spawn(move || node.run());
+            master.send(cfg).unwrap();
+            t.join().unwrap().unwrap_err().to_string()
+        };
+        let fpv = fp();
+        let cfg_with = |compressor: u8, bit_alloc: u8| Message::Config {
+            version: PROTO_VERSION,
+            compressor,
+            bits: 4,
+            plus: 1,
+            bit_alloc,
+            sparse: fpv.sparse as u8,
+            n: fpv.n,
+            d: fpv.d,
+            lambda_bits: fpv.lambda_bits,
+            data_hash: fpv.content_hash,
+            policy_fp: GridPolicy::Fixed { radius: 4.0 }.fingerprint(),
+        };
+        // master runs qsd, this worker wangni: names --compressor
+        let e = err_for(cfg_with(
+            CompressorKind::Qsd.wire_id(),
+            BitAlloc::NonUniform.wire_id(),
+        ));
+        assert!(e.contains("compressor mismatch"), "{e}");
+        // master splits bits uniformly, this worker nonuniformly: names
+        // --bit-alloc (compressor matches, so the check is really separate)
+        let e = err_for(cfg_with(
+            CompressorKind::Wangni.wire_id(),
+            BitAlloc::Uniform.wire_id(),
+        ));
+        assert!(e.contains("bit-allocation mismatch"), "{e}");
     }
 
     #[test]

@@ -4,7 +4,8 @@
 //! the in-process, threaded, and TCP backends of the single implementation
 //! produce **bit-identical** convergence traces, bit ledgers, and
 //! saturation totals at a fixed seed — for every gradient compressor
-//! (`{URQ, DIANA} × {InProcess, Threaded, TCP}` is the pinned matrix).
+//! (`{URQ, DIANA, WANGNI, VBSPARSE, QSD} × {InProcess, Threaded, TCP}` is
+//! the pinned matrix, plus the nonuniform bit-allocation variant).
 
 use qmsvrg::algorithms::channel::QuantOpts;
 use qmsvrg::algorithms::svrg::{run_svrg, SvrgOpts};
@@ -14,7 +15,7 @@ use qmsvrg::config::TrainConfig;
 use qmsvrg::data::synthetic::power_like;
 use qmsvrg::data::Dataset;
 use qmsvrg::objective::LogisticRidge;
-use qmsvrg::quant::{AdaptivePolicy, CompressorKind, GridPolicy};
+use qmsvrg::quant::{AdaptivePolicy, BitAlloc, CompressorKind, GridPolicy};
 use qmsvrg::rng::Xoshiro256pp;
 use qmsvrg::transport::local::pair;
 use qmsvrg::transport::tcp::TcpDuplex;
@@ -49,6 +50,7 @@ fn quant_opts_with(
         )),
         plus,
         compressor,
+        bit_alloc: BitAlloc::Uniform,
     }
 }
 
@@ -178,20 +180,78 @@ fn run_tcp(ds: &Dataset, n: usize, q: Option<QuantOpts>, o: &SvrgOpts, seed: u64
 
 #[test]
 fn compressor_backend_matrix_bit_identical() {
-    // the pinned matrix: {URQ, DIANA} x {InProcess, Threaded, TCP} at 5
-    // bits, quantized uplink AND downlink ("+"), memory unit on — every
-    // protocol verb, every rng stream, and both compressor state machines
-    // are exercised; ledgers and saturation totals must match exactly
+    // the pinned matrix: {URQ, DIANA, WANGNI, VBSPARSE, QSD} x {InProcess,
+    // Threaded, TCP} at 5 bits, quantized uplink AND downlink ("+"), memory
+    // unit on — every protocol verb, every rng stream, and every compressor
+    // state machine are exercised; ledgers and saturation totals must match
+    // exactly
     let ds = dataset();
     let n = 4;
     let o = opts(12, true);
-    for compressor in [CompressorKind::Urq, CompressorKind::Diana] {
+    for compressor in [
+        CompressorKind::Urq,
+        CompressorKind::Diana,
+        CompressorKind::Wangni,
+        CompressorKind::VbSparse,
+        CompressorKind::Qsd,
+    ] {
         let q = quant_opts_with(&ds, n, 5, true, compressor);
         let a = run_in_process(&ds, n, Some(q.clone()), &o, 33);
         let b = run_threaded(&ds, n, Some(q.clone()), &o, 33);
         let c = run_tcp(&ds, n, Some(q), &o, 33);
         assert_eq!(a, b, "{compressor:?}: in-process vs threaded");
         assert_eq!(a, c, "{compressor:?}: in-process vs tcp");
+    }
+    // nonuniform bit allocation is replicated state too: the per-coordinate
+    // {b_i} split is re-derived at each epoch boundary on both link ends, so
+    // the matrix must stay bit-identical when the budget is scale-split
+    let mut q = quant_opts_with(&ds, n, 5, true, CompressorKind::Urq);
+    q.bit_alloc = BitAlloc::NonUniform;
+    let a = run_in_process(&ds, n, Some(q.clone()), &o, 33);
+    let b = run_threaded(&ds, n, Some(q.clone()), &o, 33);
+    let c = run_tcp(&ds, n, Some(q), &o, 33);
+    assert_eq!(a, b, "nonuniform: in-process vs threaded");
+    assert_eq!(a, c, "nonuniform: in-process vs tcp");
+}
+
+#[test]
+fn sparsifiers_reach_unquantized_minimizer_with_fewer_uplink_bits() {
+    // tentpole acceptance: wangni and qsd are variance-reduced *estimators*,
+    // not lossy maps — wangni's paired draws cancel and qsd's error memory
+    // converges, so the run lands on the unquantized minimizer (within 1e-6)
+    // while the uplink ledger prices strictly below the raw 64-bit path
+    let mut ds = power_like(200, 9);
+    ds.standardize();
+    let n = 2;
+    let o = SvrgOpts {
+        step: 0.2,
+        epoch_len: 8,
+        outer_iters: 120,
+        memory_unit: true,
+    };
+    let prob = ShardedObjective::new(&ds, n, 0.1);
+
+    // reference: exact M-SVRG on raw links, same seed and streams
+    let root = Xoshiro256pp::seed_from_u64(77);
+    let mut exact = InProcessCluster::new(&prob, None, &root);
+    let w_ref = run_svrg(&mut exact, &o, root.algo_stream(), &mut |_, _, _, _| {}).unwrap();
+    let raw_uplink = exact.ledger().uplink_bits;
+
+    for kind in [CompressorKind::Wangni, CompressorKind::Qsd] {
+        let q = quant_opts_with(&ds, n, 5, true, kind);
+        let root = Xoshiro256pp::seed_from_u64(77);
+        let mut cluster = InProcessCluster::new(&prob, Some(q), &root);
+        let w = run_svrg(&mut cluster, &o, root.algo_stream(), &mut |_, _, _, _| {}).unwrap();
+        let dist = qmsvrg::linalg::linf_dist(&w, &w_ref);
+        assert!(
+            dist < 1e-6,
+            "{kind:?} ended {dist} away from the exact minimizer"
+        );
+        let uplink = cluster.ledger().uplink_bits;
+        assert!(
+            uplink < raw_uplink,
+            "{kind:?} uplink {uplink} not below the raw path's {raw_uplink}"
+        );
     }
 }
 
