@@ -18,7 +18,7 @@ use std::time::Duration;
 use qmsvrg::algorithms::{LazyIterate, ShardedObjective};
 use qmsvrg::benchkit::Bencher;
 use qmsvrg::data::synthetic::{mnist_like, power_like, sparse_like};
-use qmsvrg::linalg::SparseVec;
+use qmsvrg::linalg::{simd, SparseVec};
 use qmsvrg::objective::{LogisticRidge, Objective};
 use qmsvrg::runtime::{XlaRuntime, XlaWorkerKernel};
 
@@ -258,6 +258,47 @@ fn main() {
         "intra_shard_parallel_fullgrad_csr_speedup",
         format!("{r_intra_csr:.2}"),
     ));
+
+    // explicit SIMD layer: the dispatched tier vs the scalar reference table,
+    // on the two kernel shapes the hot paths hammer — a d=4096 dense dot
+    // (full-gradient row reduction) and an ~82-nnz spdot gather (one CSR row
+    // of the 2%-density workload above). Both tiers produce bit-identical
+    // results (property-pinned), so this is pure wall-clock.
+    println!("\n-- SIMD kernels: dispatched tier vs forced scalar --");
+    let kern = simd::kernels();
+    let scalar = simd::table_for(simd::Tier::Scalar).expect("scalar table always exists");
+    println!(
+        "   (dispatched tier: {}, available: {:?})",
+        kern.tier,
+        simd::available_tiers()
+    );
+    let ys: Vec<f64> = (0..4096).map(|j| 0.5 - 0.001 * (j % 100) as f64).collect();
+    let scalar_dot_ns = b
+        .bench("dot d=4096 scalar", || (scalar.dot)(&ws, &ys))
+        .ns_per_iter();
+    let simd_dot_ns = b
+        .bench(&format!("dot d=4096 {}", kern.tier), || (kern.dot)(&ws, &ys))
+        .ns_per_iter();
+    let simd_dot_speedup = scalar_dot_ns / simd_dot_ns;
+    println!("   -> dot d=4096: {} vs scalar speedup {simd_dot_speedup:.2}x", kern.tier);
+    let sp_idx: Vec<u32> = (0..82).map(|k| (k * 49) as u32).collect();
+    let sp_vals: Vec<f64> = (0..82).map(|k| 0.7 - 0.017 * k as f64).collect();
+    let scalar_spdot_ns = b
+        .bench("spdot nnz=82 scalar", || (scalar.spdot)(&sp_idx, &sp_vals, &ws))
+        .ns_per_iter();
+    let simd_spdot_ns = b
+        .bench(&format!("spdot nnz=82 {}", kern.tier), || {
+            (kern.spdot)(&sp_idx, &sp_vals, &ws)
+        })
+        .ns_per_iter();
+    let simd_spdot_speedup = scalar_spdot_ns / simd_spdot_ns;
+    println!(
+        "   -> spdot nnz=82: {} vs scalar speedup {simd_spdot_speedup:.2}x",
+        kern.tier
+    );
+    extra.push(("simd_tier", kern.tier.to_string()));
+    extra.push(("simd_dot_speedup", format!("{simd_dot_speedup:.2}")));
+    extra.push(("simd_spdot_speedup", format!("{simd_spdot_speedup:.2}")));
 
     // XLA path (requires artifacts)
     match XlaRuntime::load(Path::new("artifacts")) {

@@ -11,9 +11,10 @@ use std::path::Path;
 use std::time::Duration;
 
 use qmsvrg::benchkit::Bencher;
+use qmsvrg::linalg::simd;
 use qmsvrg::quant::{
-    dequantize, pack_indices, quantize_urq, quantize_urq_into, unpack_indices, Grid, GridPolicy,
-    ReplicatedGrid,
+    dequantize, pack_indices, quantize_dequantize_map_into_with, quantize_urq, quantize_urq_into,
+    unpack_indices, Grid, GridPolicy, ReplicatedGrid,
 };
 use qmsvrg::rng::Xoshiro256pp;
 
@@ -83,6 +84,37 @@ fn main() {
             extra.push(("encode_local_speedup_d784_b10", format!("{ratio:.2}")));
         }
     }
+
+    // SIMD tiers on the fused encode sweep: the master's one-pass
+    // quantize+reconstruct at the mnist dimension, forced-scalar lattice
+    // sweeps vs the dispatched tier. Same indices, same bits, same rng
+    // stream on every tier (property-pinned) — pure wall-clock.
+    println!("\n-- SIMD: fused quantize sweep, scalar vs dispatched tier --");
+    let kern = simd::kernels();
+    let scalar = simd::table_for(simd::Tier::Scalar).expect("scalar table always exists");
+    let (d, bits) = (784usize, 10u8);
+    let grid = Grid::uniform(vec![0.0; d], 2.0, bits).unwrap();
+    let w: Vec<f64> = (0..d).map(|i| (i as f64 * 0.37).sin() * 1.8).collect();
+    let mut rng = Xoshiro256pp::seed_from_u64(2);
+    let mut idx = Vec::new();
+    let mut out = vec![0.0; d];
+    let scalar_ns = b
+        .bench("fused sweep d=784 b/d=10 scalar", || {
+            quantize_dequantize_map_into_with(scalar, |i| w[i], &grid, &mut rng, &mut idx, &mut out)
+                .saturated
+        })
+        .ns_per_iter();
+    let simd_ns = b
+        .bench(&format!("fused sweep d=784 b/d=10 {}", kern.tier), || {
+            quantize_dequantize_map_into_with(kern, |i| w[i], &grid, &mut rng, &mut idx, &mut out)
+                .saturated
+        })
+        .ns_per_iter();
+    let sweep_speedup = scalar_ns / simd_ns;
+    println!("   -> fused sweep: {} vs scalar speedup {sweep_speedup:.2}x", kern.tier);
+    extra.push(("simd_tier", kern.tier.to_string()));
+    extra.push(("simd_quantize_sweep_speedup", format!("{sweep_speedup:.2}")));
+
     b.finish("bench_quantizer");
     if let Err(e) = b.write_json(Path::new("BENCH_quantizer.json"), "bench_quantizer", &extra) {
         eprintln!("(could not write BENCH_quantizer.json: {e})");

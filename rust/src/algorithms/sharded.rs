@@ -108,7 +108,7 @@ impl ShardedObjective {
     /// it): this is the *oracle* path that fixed-seed experiments and the
     /// reference solve iterate tens of thousands of times on tiny
     /// problems, where per-call thread fan-out would cost more than the
-    /// arithmetic it hides. The measured parallel paths are
+    /// arithmetic it hides. The benchmarked parallel paths are
     /// [`Self::node_grads_parallel`] (one thread per shard) and the
     /// worker-side intra-shard `grad_parallel`.
     pub fn full_grad(&self, w: &[f64], out: &mut [f64]) {

@@ -1,35 +1,31 @@
 //! Dense vector / row-major matrix kernels used on the coordinator hot path,
-//! plus the CSR storage and fused sparse kernels in [`sparse`].
+//! plus the CSR storage and fused sparse kernels in [`sparse`], all dispatched
+//! through the explicit SIMD layer in [`simd`].
 //!
-//! Everything here is written over contiguous `&[f64]` slices with simple
-//! loop shapes so LLVM autovectorizes them; the perf pass (EXPERIMENTS.md
-//! §Perf) measures these directly. No allocation happens inside any kernel —
-//! callers own the buffers.
+//! Everything here is written over contiguous `&[f64]` slices. Every
+//! reduction keeps the 4-independent-accumulator shape with the fixed fold
+//! `acc[0]+acc[1]+acc[2]+acc[3]+tail`: that shape is the **lane contract** —
+//! each SIMD lane of the AVX2/SSE2 kernels in [`simd`] maps 1:1 onto one
+//! accumulator and the fold is replayed in the same order, so every tier
+//! (and the portable scalar reference) produces bit-identical results. The
+//! public functions below are thin wrappers over the once-resolved dispatch
+//! table ([`simd::kernels`]); `QMSVRG_SIMD=scalar|sse2|avx2` forces a tier.
+//! No allocation happens inside any kernel — callers own the buffers.
 
+pub mod simd;
 pub mod sparse;
 
 pub use sparse::{spaxpy, spdot, spdot2, CsrMatrix, SparseVec};
 
 /// Dot product.
+///
+/// 4 independent accumulators over chunks of 4, folded in a fixed order —
+/// the lane↔accumulator contract every [`simd`] tier reproduces bit-for-bit
+/// (no FMA: fused rounding would change the low bits).
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    // 4 independent accumulators: breaks the fp dependency chain so LLVM can
-    // vectorize the reduction (measured ~3.8x vs naive on d=896).
-    let mut acc = [0.0f64; 4];
-    let chunks = a.len() / 4;
-    for i in 0..chunks {
-        let j = i * 4;
-        acc[0] += a[j] * b[j];
-        acc[1] += a[j + 1] * b[j + 1];
-        acc[2] += a[j + 2] * b[j + 2];
-        acc[3] += a[j + 3] * b[j + 3];
-    }
-    let mut tail = 0.0;
-    for j in chunks * 4..a.len() {
-        tail += a[j] * b[j];
-    }
-    acc[0] + acc[1] + acc[2] + acc[3] + tail
+    (simd::kernels().dot)(a, b)
 }
 
 /// Fused two-vector dot: `(v·a, v·b)` in ONE pass over `v`.
@@ -43,36 +39,13 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
 pub fn dot2(v: &[f64], a: &[f64], b: &[f64]) -> (f64, f64) {
     debug_assert_eq!(v.len(), a.len());
     debug_assert_eq!(v.len(), b.len());
-    let mut acc_a = [0.0f64; 4];
-    let mut acc_b = [0.0f64; 4];
-    let chunks = v.len() / 4;
-    for i in 0..chunks {
-        let j = i * 4;
-        acc_a[0] += v[j] * a[j];
-        acc_a[1] += v[j + 1] * a[j + 1];
-        acc_a[2] += v[j + 2] * a[j + 2];
-        acc_a[3] += v[j + 3] * a[j + 3];
-        acc_b[0] += v[j] * b[j];
-        acc_b[1] += v[j + 1] * b[j + 1];
-        acc_b[2] += v[j + 2] * b[j + 2];
-        acc_b[3] += v[j + 3] * b[j + 3];
-    }
-    let mut tail_a = 0.0;
-    let mut tail_b = 0.0;
-    for j in chunks * 4..v.len() {
-        tail_a += v[j] * a[j];
-        tail_b += v[j] * b[j];
-    }
-    (
-        acc_a[0] + acc_a[1] + acc_a[2] + acc_a[3] + tail_a,
-        acc_b[0] + acc_b[1] + acc_b[2] + acc_b[3] + tail_b,
-    )
+    (simd::kernels().dot2)(v, a, b)
 }
 
-/// Squared l2 norm.
+/// Squared l2 norm (the dispatched tier's `dot(a, a)`).
 #[inline]
 pub fn nrm2_sq(a: &[f64]) -> f64 {
-    dot(a, a)
+    (simd::kernels().nrm2_sq)(a)
 }
 
 /// l2 norm.
@@ -85,9 +58,7 @@ pub fn nrm2(a: &[f64]) -> f64 {
 #[inline]
 pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
+    (simd::kernels().axpy)(alpha, x, y)
 }
 
 /// y = x
@@ -99,9 +70,7 @@ pub fn copy(x: &[f64], y: &mut [f64]) {
 /// x *= alpha
 #[inline]
 pub fn scal(alpha: f64, x: &mut [f64]) {
-    for xi in x.iter_mut() {
-        *xi *= alpha;
-    }
+    (simd::kernels().scal)(alpha, x)
 }
 
 /// out = a - b
@@ -109,9 +78,7 @@ pub fn scal(alpha: f64, x: &mut [f64]) {
 pub fn sub(a: &[f64], b: &[f64], out: &mut [f64]) {
     debug_assert_eq!(a.len(), b.len());
     debug_assert_eq!(a.len(), out.len());
-    for i in 0..a.len() {
-        out[i] = a[i] - b[i];
-    }
+    (simd::kernels().sub)(a, b, out)
 }
 
 /// out = a + b
@@ -129,8 +96,9 @@ pub fn gemv_row_major(mat: &[f64], n_rows: usize, n_cols: usize, x: &[f64], out:
     debug_assert_eq!(mat.len(), n_rows * n_cols);
     debug_assert_eq!(x.len(), n_cols);
     debug_assert_eq!(out.len(), n_rows);
+    let k = simd::kernels();
     for (i, o) in out.iter_mut().enumerate() {
-        *o = dot(&mat[i * n_cols..(i + 1) * n_cols], x);
+        *o = (k.dot)(&mat[i * n_cols..(i + 1) * n_cols], x);
     }
 }
 
@@ -146,15 +114,14 @@ pub fn gemv_t_row_major_acc(
     debug_assert_eq!(mat.len(), n_rows * n_cols);
     debug_assert_eq!(coeff.len(), n_rows);
     debug_assert_eq!(out.len(), n_cols);
+    let k = simd::kernels();
     for i in 0..n_rows {
         let c = coeff[i];
         if c == 0.0 {
             continue;
         }
-        let row = &mat[i * n_cols..(i + 1) * n_cols];
-        for (o, &m) in out.iter_mut().zip(row) {
-            *o += c * m;
-        }
+        // each row contributes exactly axpy(c, row, out)
+        (k.axpy)(c, &mat[i * n_cols..(i + 1) * n_cols], out);
     }
 }
 

@@ -1,0 +1,1450 @@
+//! Explicit SIMD kernel layer with runtime dispatch — the bit-identical
+//! twins of the scalar `dot`/`spdot`/`axpy` family.
+//!
+//! Every reduction kernel in this crate is written in the 4-independent-
+//! accumulator shape (`acc[0..4]` over chunks of 4, then the fixed fold
+//! `acc[0] + acc[1] + acc[2] + acc[3] + tail`). That shape is not an
+//! autovectorization hint — it is a **lane contract**: each SIMD lane maps
+//! 1:1 onto one of the four scalar accumulators (AVX2: one 4×f64 register,
+//! lane `l` = `acc[l]`; SSE2: two 2×f64 registers, `(acc[0], acc[1])` and
+//! `(acc[2], acc[3])`), every per-lane operation is the exact scalar
+//! operation of that accumulator (multiply then add — **no FMA**: fused
+//! rounding would change the low bits and break the contract), and the
+//! horizontal fold replays the exact scalar order. Elementwise kernels
+//! (`axpy`, `scal`, `sub`, the lattice maps) are per-lane copies of the
+//! scalar expression, so they are bit-identical by construction. The one
+//! caveat: the `diff_max_abs` fold relies on `max` being order-independent,
+//! which holds for the finite inputs every caller feeds it (non-finite
+//! gradients are rejected upstream); all other kernels are bit-identical on
+//! any input.
+//!
+//! Consequently **every tier produces bit-for-bit identical results**, which
+//! is what lets the whole fingerprint/lockstep test surface (the
+//! `{urq,diana,wangni,vbsparse,qsd} × {native,threaded,tcp}` matrix, the
+//! lazy/parallel lockstep properties) pass unchanged whichever tier the host
+//! dispatches to. The `prop_*_bit_identical_across_tiers` properties below
+//! pin scalar ≡ SSE2 ≡ AVX2 per kernel over random lengths (including `< 4`
+//! tails and empty slices), alignments, and sparse index patterns.
+//!
+//! Dispatch: [`kernels`] resolves a [`KernelTable`] exactly once per process
+//! (a `OnceLock`): `QMSVRG_SIMD=scalar|sse2|avx2` forces a tier (unknown
+//! values are an error; a *known but unsupported* tier falls back to scalar
+//! with a warning on stderr), otherwise the best tier
+//! `std::is_x86_feature_detected!` reports is used. Non-x86_64 targets
+//! compile only the scalar table and dispatch to it with zero behavior
+//! change. Benches and the tier-equivalence properties reach specific tiers
+//! through [`table_for`] — the per-process env override cannot switch tiers
+//! mid-run, a table reference can.
+//!
+//! This is the only module in the crate allowed to contain `unsafe` (the
+//! `core::arch` intrinsics and the raw-pointer lane loads around them).
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::OnceLock;
+
+use anyhow::{bail, Result};
+
+/// A SIMD tier the dispatcher can select.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// Portable scalar kernels — the reference semantics, always available.
+    Scalar,
+    /// SSE2: the four accumulator lanes as two 2×f64 registers.
+    Sse2,
+    /// AVX2: the four accumulator lanes as one 4×f64 register.
+    Avx2,
+}
+
+impl Tier {
+    /// All tiers, best first (dispatch preference order).
+    pub const PREFERENCE: [Tier; 3] = [Tier::Avx2, Tier::Sse2, Tier::Scalar];
+
+    /// Parse a `QMSVRG_SIMD` value. Unknown values are an error — a typo
+    /// must never silently run a different tier than the one asked for.
+    pub fn parse(s: &str) -> Result<Tier> {
+        match s {
+            "scalar" => Ok(Tier::Scalar),
+            "sse2" => Ok(Tier::Sse2),
+            "avx2" => Ok(Tier::Avx2),
+            other => bail!("QMSVRG_SIMD={other:?} is not a SIMD tier (expected scalar|sse2|avx2)"),
+        }
+    }
+}
+
+impl std::fmt::Display for Tier {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Tier::Scalar => "scalar",
+            Tier::Sse2 => "sse2",
+            Tier::Avx2 => "avx2",
+        })
+    }
+}
+
+/// The dispatched kernel family. One static table per tier; every entry of a
+/// non-scalar table is bit-identical to its scalar twin (see module docs).
+///
+/// `spmv`/`spmv_t_acc` ([`crate::linalg::sparse::CsrMatrix`]) are members of
+/// the family by composition: they hoist one table lookup and run `spdot` /
+/// `spaxpy` per row.
+pub struct KernelTable {
+    /// Which tier this table implements.
+    pub tier: Tier,
+    /// `Σ a_i·b_i` — 4-accumulator reduction.
+    pub dot: fn(&[f64], &[f64]) -> f64,
+    /// `(Σ v_i·a_i, Σ v_i·b_i)` in one pass over `v`; each reduction is
+    /// exactly `dot`'s shape, so `dot2(v,a,b).0 == dot(v,a)` bit-for-bit.
+    pub dot2: fn(&[f64], &[f64], &[f64]) -> (f64, f64),
+    /// `Σ a_i²` — the tier's `dot(a, a)`.
+    pub nrm2_sq: fn(&[f64]) -> f64,
+    /// `y_i += α·x_i` (elementwise).
+    pub axpy: fn(f64, &[f64], &mut [f64]),
+    /// `x_i *= α` (elementwise).
+    pub scal: fn(f64, &mut [f64]),
+    /// `out_i = a_i − b_i` (elementwise).
+    pub sub: fn(&[f64], &[f64], &mut [f64]),
+    /// `Σ v_k·w[idx_k]` — the gathered twin of `dot`, same lane contract.
+    pub spdot: fn(&[u32], &[f64], &[f64]) -> f64,
+    /// `(Σ v_k·a[idx_k], Σ v_k·b[idx_k])` — the gathered twin of `dot2`.
+    pub spdot2: fn(&[u32], &[f64], &[f64], &[f64]) -> (f64, f64),
+    /// `out[idx_k] += c·v_k` — products vectorized, scatter in ascending
+    /// `k` order (the exact scalar update sequence).
+    pub spaxpy: fn(f64, &[u32], &[f64], &mut [f64]),
+    /// `Σ |a_i|` — 4-accumulator reduction (the Wangni ‖g‖₁ scan).
+    pub asum: fn(&[f64]) -> f64,
+    /// `Σ (a_i − b_i)²` — 4-accumulator reduction (the VbSparse RMS scan).
+    pub diff_nrm2_sq: fn(&[f64], &[f64]) -> f64,
+    /// `max_i |a_i − b_i|` — 4-lane max, folded in the fixed scalar order
+    /// (the QSD radius scan). Assumes finite inputs (see module docs).
+    pub diff_max_abs: fn(&[f64], &[f64]) -> f64,
+    /// `out_i = lo_i + spacing_i · (idx_i as f64)` — the lattice
+    /// reconstruction sweep of `dequantize_into` and the fused URQ encode.
+    pub lattice_recon: fn(&[f64], &[f64], &[u32], &mut [f64]),
+    /// `out_i = (w_i − lo_i) · inv_spacing_i` — the fractional-lattice-
+    /// coordinate sweep of the URQ quantizer.
+    pub frac_lattice: fn(&[f64], &[f64], &[f64], &mut [f64]),
+}
+
+static TABLE: OnceLock<&'static KernelTable> = OnceLock::new();
+/// How many times the `OnceLock` init closure ran — pinned to 1 by a test.
+static RESOLVE_CALLS: AtomicU32 = AtomicU32::new(0);
+
+/// The process-wide kernel table, resolved exactly once on first use.
+///
+/// Panics on an unparseable `QMSVRG_SIMD` value (a typo must not silently
+/// select a different tier); a parseable-but-unsupported tier falls back to
+/// scalar with a warning instead.
+pub fn kernels() -> &'static KernelTable {
+    TABLE.get_or_init(|| {
+        RESOLVE_CALLS.fetch_add(1, Ordering::Relaxed);
+        let requested = std::env::var("QMSVRG_SIMD").ok();
+        match resolve(requested.as_deref(), runtime_supports) {
+            Ok((tier, warning)) => {
+                if let Some(w) = warning {
+                    eprintln!("qmsvrg: warning: {w}");
+                }
+                table_for(tier).unwrap_or(&SCALAR_TABLE)
+            }
+            Err(e) => panic!("{e:#}"),
+        }
+    })
+}
+
+/// Times the dispatch table has been resolved (0 before first use, then 1
+/// forever — the `OnceLock` discipline, pinned by a unit test).
+pub fn resolve_count() -> u32 {
+    RESOLVE_CALLS.load(Ordering::Relaxed)
+}
+
+/// The pure tier-selection rule behind [`kernels`], with the support oracle
+/// injected so the fallback paths are unit-testable on any host:
+/// * `None` → the best supported tier in [`Tier::PREFERENCE`] order;
+/// * `Some(valid)` supported → that tier, no warning;
+/// * `Some(valid)` unsupported → `Scalar` plus a warning to surface;
+/// * `Some(garbage)` → `Err` (never a silent guess).
+fn resolve(
+    requested: Option<&str>,
+    supports: impl Fn(Tier) -> bool,
+) -> Result<(Tier, Option<String>)> {
+    match requested {
+        None => {
+            let tier = *Tier::PREFERENCE
+                .iter()
+                .find(|&&t| supports(t))
+                .unwrap_or(&Tier::Scalar);
+            Ok((tier, None))
+        }
+        Some(s) => {
+            let tier = Tier::parse(s)?;
+            if supports(tier) {
+                Ok((tier, None))
+            } else {
+                Ok((
+                    Tier::Scalar,
+                    Some(format!(
+                        "QMSVRG_SIMD={s} requested but the {tier} tier is not supported on \
+                         this host/target; falling back to scalar kernels"
+                    )),
+                ))
+            }
+        }
+    }
+}
+
+/// Whether this process can run `tier` (compile-target AND cpu features).
+pub fn runtime_supports(tier: Tier) -> bool {
+    match tier {
+        Tier::Scalar => true,
+        #[cfg(target_arch = "x86_64")]
+        Tier::Sse2 => std::arch::is_x86_feature_detected!("sse2"),
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => false,
+    }
+}
+
+/// Every tier this process can run, preference order (scalar always last).
+pub fn available_tiers() -> Vec<Tier> {
+    Tier::PREFERENCE
+        .into_iter()
+        .filter(|&t| runtime_supports(t))
+        .collect()
+}
+
+/// The static table for a specific tier, or `None` when the tier is not
+/// supported here — the bench/test entry point that sidesteps the
+/// once-per-process env dispatch. Handing out a table only after the
+/// runtime-support check is what keeps the SIMD wrappers sound.
+pub fn table_for(tier: Tier) -> Option<&'static KernelTable> {
+    match tier {
+        Tier::Scalar => Some(&SCALAR_TABLE),
+        #[cfg(target_arch = "x86_64")]
+        Tier::Sse2 => runtime_supports(Tier::Sse2).then_some(&SSE2_TABLE),
+        #[cfg(target_arch = "x86_64")]
+        Tier::Avx2 => runtime_supports(Tier::Avx2).then_some(&AVX2_TABLE),
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => None,
+    }
+}
+
+static SCALAR_TABLE: KernelTable = KernelTable {
+    tier: Tier::Scalar,
+    dot: scalar::dot,
+    dot2: scalar::dot2,
+    nrm2_sq: scalar::nrm2_sq,
+    axpy: scalar::axpy,
+    scal: scalar::scal,
+    sub: scalar::sub,
+    spdot: scalar::spdot,
+    spdot2: scalar::spdot2,
+    spaxpy: scalar::spaxpy,
+    asum: scalar::asum,
+    diff_nrm2_sq: scalar::diff_nrm2_sq,
+    diff_max_abs: scalar::diff_max_abs,
+    lattice_recon: scalar::lattice_recon,
+    frac_lattice: scalar::frac_lattice,
+};
+
+#[cfg(target_arch = "x86_64")]
+static SSE2_TABLE: KernelTable = KernelTable {
+    tier: Tier::Sse2,
+    dot: sse2::dot,
+    dot2: sse2::dot2,
+    nrm2_sq: sse2::nrm2_sq,
+    axpy: sse2::axpy,
+    scal: sse2::scal,
+    sub: sse2::sub,
+    spdot: sse2::spdot,
+    spdot2: sse2::spdot2,
+    spaxpy: sse2::spaxpy,
+    asum: sse2::asum,
+    diff_nrm2_sq: sse2::diff_nrm2_sq,
+    diff_max_abs: sse2::diff_max_abs,
+    lattice_recon: sse2::lattice_recon,
+    frac_lattice: sse2::frac_lattice,
+};
+
+#[cfg(target_arch = "x86_64")]
+static AVX2_TABLE: KernelTable = KernelTable {
+    tier: Tier::Avx2,
+    dot: avx2::dot,
+    dot2: avx2::dot2,
+    nrm2_sq: avx2::nrm2_sq,
+    axpy: avx2::axpy,
+    scal: avx2::scal,
+    sub: avx2::sub,
+    spdot: avx2::spdot,
+    spdot2: avx2::spdot2,
+    spaxpy: avx2::spaxpy,
+    asum: avx2::asum,
+    diff_nrm2_sq: avx2::diff_nrm2_sq,
+    diff_max_abs: avx2::diff_max_abs,
+    lattice_recon: avx2::lattice_recon,
+    frac_lattice: avx2::frac_lattice,
+};
+
+/// The reference kernels: the exact accumulator shapes every SIMD tier must
+/// reproduce bit-for-bit. These bodies ARE the semantics — the public
+/// `linalg::{dot, spdot, …}` wrappers dispatch here on non-x86 targets and
+/// under `QMSVRG_SIMD=scalar`.
+pub(crate) mod scalar {
+    pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+        let mut acc = [0.0f64; 4];
+        let chunks = a.len() / 4;
+        for i in 0..chunks {
+            let j = i * 4;
+            acc[0] += a[j] * b[j];
+            acc[1] += a[j + 1] * b[j + 1];
+            acc[2] += a[j + 2] * b[j + 2];
+            acc[3] += a[j + 3] * b[j + 3];
+        }
+        let mut tail = 0.0;
+        for j in chunks * 4..a.len() {
+            tail += a[j] * b[j];
+        }
+        acc[0] + acc[1] + acc[2] + acc[3] + tail
+    }
+
+    pub fn dot2(v: &[f64], a: &[f64], b: &[f64]) -> (f64, f64) {
+        let mut acc_a = [0.0f64; 4];
+        let mut acc_b = [0.0f64; 4];
+        let chunks = v.len() / 4;
+        for i in 0..chunks {
+            let j = i * 4;
+            acc_a[0] += v[j] * a[j];
+            acc_a[1] += v[j + 1] * a[j + 1];
+            acc_a[2] += v[j + 2] * a[j + 2];
+            acc_a[3] += v[j + 3] * a[j + 3];
+            acc_b[0] += v[j] * b[j];
+            acc_b[1] += v[j + 1] * b[j + 1];
+            acc_b[2] += v[j + 2] * b[j + 2];
+            acc_b[3] += v[j + 3] * b[j + 3];
+        }
+        let mut tail_a = 0.0;
+        let mut tail_b = 0.0;
+        for j in chunks * 4..v.len() {
+            tail_a += v[j] * a[j];
+            tail_b += v[j] * b[j];
+        }
+        (
+            acc_a[0] + acc_a[1] + acc_a[2] + acc_a[3] + tail_a,
+            acc_b[0] + acc_b[1] + acc_b[2] + acc_b[3] + tail_b,
+        )
+    }
+
+    pub fn nrm2_sq(a: &[f64]) -> f64 {
+        dot(a, a)
+    }
+
+    pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += alpha * xi;
+        }
+    }
+
+    pub fn scal(alpha: f64, x: &mut [f64]) {
+        for xi in x.iter_mut() {
+            *xi *= alpha;
+        }
+    }
+
+    pub fn sub(a: &[f64], b: &[f64], out: &mut [f64]) {
+        for i in 0..a.len() {
+            out[i] = a[i] - b[i];
+        }
+    }
+
+    pub fn spdot(indices: &[u32], values: &[f64], w: &[f64]) -> f64 {
+        let mut acc = [0.0f64; 4];
+        let chunks = values.len() / 4;
+        for c in 0..chunks {
+            let k = c * 4;
+            acc[0] += values[k] * w[indices[k] as usize];
+            acc[1] += values[k + 1] * w[indices[k + 1] as usize];
+            acc[2] += values[k + 2] * w[indices[k + 2] as usize];
+            acc[3] += values[k + 3] * w[indices[k + 3] as usize];
+        }
+        let mut tail = 0.0;
+        for k in chunks * 4..values.len() {
+            tail += values[k] * w[indices[k] as usize];
+        }
+        acc[0] + acc[1] + acc[2] + acc[3] + tail
+    }
+
+    pub fn spdot2(indices: &[u32], values: &[f64], a: &[f64], b: &[f64]) -> (f64, f64) {
+        let mut acc_a = [0.0f64; 4];
+        let mut acc_b = [0.0f64; 4];
+        let chunks = values.len() / 4;
+        for c in 0..chunks {
+            let k = c * 4;
+            let (j0, j1, j2, j3) = (
+                indices[k] as usize,
+                indices[k + 1] as usize,
+                indices[k + 2] as usize,
+                indices[k + 3] as usize,
+            );
+            acc_a[0] += values[k] * a[j0];
+            acc_a[1] += values[k + 1] * a[j1];
+            acc_a[2] += values[k + 2] * a[j2];
+            acc_a[3] += values[k + 3] * a[j3];
+            acc_b[0] += values[k] * b[j0];
+            acc_b[1] += values[k + 1] * b[j1];
+            acc_b[2] += values[k + 2] * b[j2];
+            acc_b[3] += values[k + 3] * b[j3];
+        }
+        let mut tail_a = 0.0;
+        let mut tail_b = 0.0;
+        for k in chunks * 4..values.len() {
+            let j = indices[k] as usize;
+            tail_a += values[k] * a[j];
+            tail_b += values[k] * b[j];
+        }
+        (
+            acc_a[0] + acc_a[1] + acc_a[2] + acc_a[3] + tail_a,
+            acc_b[0] + acc_b[1] + acc_b[2] + acc_b[3] + tail_b,
+        )
+    }
+
+    pub fn spaxpy(c: f64, indices: &[u32], values: &[f64], out: &mut [f64]) {
+        for (&j, &v) in indices.iter().zip(values) {
+            out[j as usize] += c * v;
+        }
+    }
+
+    pub fn asum(a: &[f64]) -> f64 {
+        let mut acc = [0.0f64; 4];
+        let chunks = a.len() / 4;
+        for i in 0..chunks {
+            let j = i * 4;
+            acc[0] += a[j].abs();
+            acc[1] += a[j + 1].abs();
+            acc[2] += a[j + 2].abs();
+            acc[3] += a[j + 3].abs();
+        }
+        let mut tail = 0.0;
+        for j in chunks * 4..a.len() {
+            tail += a[j].abs();
+        }
+        acc[0] + acc[1] + acc[2] + acc[3] + tail
+    }
+
+    pub fn diff_nrm2_sq(a: &[f64], b: &[f64]) -> f64 {
+        let mut acc = [0.0f64; 4];
+        let chunks = a.len() / 4;
+        for i in 0..chunks {
+            let j = i * 4;
+            let (d0, d1, d2, d3) = (
+                a[j] - b[j],
+                a[j + 1] - b[j + 1],
+                a[j + 2] - b[j + 2],
+                a[j + 3] - b[j + 3],
+            );
+            acc[0] += d0 * d0;
+            acc[1] += d1 * d1;
+            acc[2] += d2 * d2;
+            acc[3] += d3 * d3;
+        }
+        let mut tail = 0.0;
+        for j in chunks * 4..a.len() {
+            let d = a[j] - b[j];
+            tail += d * d;
+        }
+        acc[0] + acc[1] + acc[2] + acc[3] + tail
+    }
+
+    pub fn diff_max_abs(a: &[f64], b: &[f64]) -> f64 {
+        let mut m = [0.0f64; 4];
+        let chunks = a.len() / 4;
+        for i in 0..chunks {
+            let j = i * 4;
+            m[0] = m[0].max((a[j] - b[j]).abs());
+            m[1] = m[1].max((a[j + 1] - b[j + 1]).abs());
+            m[2] = m[2].max((a[j + 2] - b[j + 2]).abs());
+            m[3] = m[3].max((a[j + 3] - b[j + 3]).abs());
+        }
+        let mut tail = 0.0f64;
+        for j in chunks * 4..a.len() {
+            tail = tail.max((a[j] - b[j]).abs());
+        }
+        m[0].max(m[1]).max(m[2]).max(m[3]).max(tail)
+    }
+
+    pub fn lattice_recon(lo: &[f64], spacing: &[f64], idx: &[u32], out: &mut [f64]) {
+        for i in 0..out.len() {
+            out[i] = lo[i] + spacing[i] * idx[i] as f64;
+        }
+    }
+
+    pub fn frac_lattice(w: &[f64], lo: &[f64], inv_spacing: &[f64], out: &mut [f64]) {
+        for i in 0..out.len() {
+            out[i] = (w[i] - lo[i]) * inv_spacing[i];
+        }
+    }
+}
+
+/// SSE2 kernels: the four accumulator lanes live in TWO `__m128d` registers
+/// — `(acc[0], acc[1])` and `(acc[2], acc[3])` — advanced per chunk of 4
+/// exactly like the scalar twins, folded in the fixed scalar order.
+///
+/// Safety discipline: the inner `*_impl` functions are `unsafe fn` carrying
+/// `#[target_feature(enable = "sse2")]`; the safe wrappers may only be
+/// reached through [`table_for`]/[`kernels`], which verify the feature at
+/// runtime before handing out the table (on x86_64 SSE2 is also part of the
+/// baseline target, so the wrappers are unconditionally sound there). The
+/// wrappers also assert the operand-length preconditions the raw-pointer
+/// loads rely on, so a length-mismatched call panics like its scalar twin
+/// instead of reading out of bounds.
+#[cfg(target_arch = "x86_64")]
+mod sse2 {
+    use core::arch::x86_64::*;
+
+    /// Fold two 2-lane accumulators + tail in the scalar order
+    /// `((acc0 + acc1) + acc2) + acc3 + tail`.
+    #[inline]
+    unsafe fn fold4(acc01: __m128d, acc23: __m128d, tail: f64) -> f64 {
+        let mut l01 = [0.0f64; 2];
+        let mut l23 = [0.0f64; 2];
+        _mm_storeu_pd(l01.as_mut_ptr(), acc01);
+        _mm_storeu_pd(l23.as_mut_ptr(), acc23);
+        l01[0] + l01[1] + l23[0] + l23[1] + tail
+    }
+
+    pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+        assert!(b.len() >= a.len());
+        unsafe { dot_impl(a, b) }
+    }
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn dot_impl(a: &[f64], b: &[f64]) -> f64 {
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let chunks = a.len() / 4;
+        let mut acc01 = _mm_setzero_pd();
+        let mut acc23 = _mm_setzero_pd();
+        for i in 0..chunks {
+            let j = i * 4;
+            acc01 = _mm_add_pd(
+                acc01,
+                _mm_mul_pd(_mm_loadu_pd(pa.add(j)), _mm_loadu_pd(pb.add(j))),
+            );
+            acc23 = _mm_add_pd(
+                acc23,
+                _mm_mul_pd(_mm_loadu_pd(pa.add(j + 2)), _mm_loadu_pd(pb.add(j + 2))),
+            );
+        }
+        let mut tail = 0.0;
+        for j in chunks * 4..a.len() {
+            tail += a[j] * b[j];
+        }
+        fold4(acc01, acc23, tail)
+    }
+
+    pub fn dot2(v: &[f64], a: &[f64], b: &[f64]) -> (f64, f64) {
+        assert!(a.len() >= v.len() && b.len() >= v.len());
+        unsafe { dot2_impl(v, a, b) }
+    }
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn dot2_impl(v: &[f64], a: &[f64], b: &[f64]) -> (f64, f64) {
+        let (pv, pa, pb) = (v.as_ptr(), a.as_ptr(), b.as_ptr());
+        let chunks = v.len() / 4;
+        let mut aa01 = _mm_setzero_pd();
+        let mut aa23 = _mm_setzero_pd();
+        let mut ab01 = _mm_setzero_pd();
+        let mut ab23 = _mm_setzero_pd();
+        for i in 0..chunks {
+            let j = i * 4;
+            let v01 = _mm_loadu_pd(pv.add(j));
+            let v23 = _mm_loadu_pd(pv.add(j + 2));
+            aa01 = _mm_add_pd(aa01, _mm_mul_pd(v01, _mm_loadu_pd(pa.add(j))));
+            aa23 = _mm_add_pd(aa23, _mm_mul_pd(v23, _mm_loadu_pd(pa.add(j + 2))));
+            ab01 = _mm_add_pd(ab01, _mm_mul_pd(v01, _mm_loadu_pd(pb.add(j))));
+            ab23 = _mm_add_pd(ab23, _mm_mul_pd(v23, _mm_loadu_pd(pb.add(j + 2))));
+        }
+        let mut tail_a = 0.0;
+        let mut tail_b = 0.0;
+        for j in chunks * 4..v.len() {
+            tail_a += v[j] * a[j];
+            tail_b += v[j] * b[j];
+        }
+        (fold4(aa01, aa23, tail_a), fold4(ab01, ab23, tail_b))
+    }
+
+    pub fn nrm2_sq(a: &[f64]) -> f64 {
+        unsafe { dot_impl(a, a) }
+    }
+
+    pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+        assert!(x.len() >= y.len());
+        unsafe { axpy_impl(alpha, x, y) }
+    }
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn axpy_impl(alpha: f64, x: &[f64], y: &mut [f64]) {
+        let va = _mm_set1_pd(alpha);
+        let px = x.as_ptr();
+        let py = y.as_mut_ptr();
+        let chunks = y.len() / 4;
+        for i in 0..chunks {
+            let j = i * 4;
+            let y01 = _mm_add_pd(
+                _mm_loadu_pd(py.add(j)),
+                _mm_mul_pd(va, _mm_loadu_pd(px.add(j))),
+            );
+            let y23 = _mm_add_pd(
+                _mm_loadu_pd(py.add(j + 2)),
+                _mm_mul_pd(va, _mm_loadu_pd(px.add(j + 2))),
+            );
+            _mm_storeu_pd(py.add(j), y01);
+            _mm_storeu_pd(py.add(j + 2), y23);
+        }
+        for j in chunks * 4..y.len() {
+            y[j] += alpha * x[j];
+        }
+    }
+
+    pub fn scal(alpha: f64, x: &mut [f64]) {
+        unsafe { scal_impl(alpha, x) }
+    }
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn scal_impl(alpha: f64, x: &mut [f64]) {
+        let va = _mm_set1_pd(alpha);
+        let px = x.as_mut_ptr();
+        let chunks = x.len() / 4;
+        for i in 0..chunks {
+            let j = i * 4;
+            _mm_storeu_pd(px.add(j), _mm_mul_pd(_mm_loadu_pd(px.add(j)), va));
+            _mm_storeu_pd(px.add(j + 2), _mm_mul_pd(_mm_loadu_pd(px.add(j + 2)), va));
+        }
+        for j in chunks * 4..x.len() {
+            x[j] *= alpha;
+        }
+    }
+
+    pub fn sub(a: &[f64], b: &[f64], out: &mut [f64]) {
+        assert!(a.len() >= out.len() && b.len() >= out.len());
+        unsafe { sub_impl(a, b, out) }
+    }
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn sub_impl(a: &[f64], b: &[f64], out: &mut [f64]) {
+        let (pa, pb, po) = (a.as_ptr(), b.as_ptr(), out.as_mut_ptr());
+        let chunks = out.len() / 4;
+        for i in 0..chunks {
+            let j = i * 4;
+            _mm_storeu_pd(
+                po.add(j),
+                _mm_sub_pd(_mm_loadu_pd(pa.add(j)), _mm_loadu_pd(pb.add(j))),
+            );
+            _mm_storeu_pd(
+                po.add(j + 2),
+                _mm_sub_pd(_mm_loadu_pd(pa.add(j + 2)), _mm_loadu_pd(pb.add(j + 2))),
+            );
+        }
+        for j in chunks * 4..out.len() {
+            out[j] = a[j] - b[j];
+        }
+    }
+
+    pub fn spdot(indices: &[u32], values: &[f64], w: &[f64]) -> f64 {
+        unsafe { spdot_impl(indices, values, w) }
+    }
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn spdot_impl(indices: &[u32], values: &[f64], w: &[f64]) -> f64 {
+        let pv = values.as_ptr();
+        let chunks = values.len() / 4;
+        let mut acc01 = _mm_setzero_pd();
+        let mut acc23 = _mm_setzero_pd();
+        for c in 0..chunks {
+            let k = c * 4;
+            // lane l gathers w[indices[k + l]] — scalar loads feeding the
+            // 2-lane multiply/add, so lane l replays accumulator l exactly
+            let g01 = _mm_set_pd(w[indices[k + 1] as usize], w[indices[k] as usize]);
+            let g23 = _mm_set_pd(w[indices[k + 3] as usize], w[indices[k + 2] as usize]);
+            acc01 = _mm_add_pd(acc01, _mm_mul_pd(_mm_loadu_pd(pv.add(k)), g01));
+            acc23 = _mm_add_pd(acc23, _mm_mul_pd(_mm_loadu_pd(pv.add(k + 2)), g23));
+        }
+        let mut tail = 0.0;
+        for k in chunks * 4..values.len() {
+            tail += values[k] * w[indices[k] as usize];
+        }
+        fold4(acc01, acc23, tail)
+    }
+
+    pub fn spdot2(indices: &[u32], values: &[f64], a: &[f64], b: &[f64]) -> (f64, f64) {
+        unsafe { spdot2_impl(indices, values, a, b) }
+    }
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn spdot2_impl(indices: &[u32], values: &[f64], a: &[f64], b: &[f64]) -> (f64, f64) {
+        let pv = values.as_ptr();
+        let chunks = values.len() / 4;
+        let mut aa01 = _mm_setzero_pd();
+        let mut aa23 = _mm_setzero_pd();
+        let mut ab01 = _mm_setzero_pd();
+        let mut ab23 = _mm_setzero_pd();
+        for c in 0..chunks {
+            let k = c * 4;
+            let (j0, j1, j2, j3) = (
+                indices[k] as usize,
+                indices[k + 1] as usize,
+                indices[k + 2] as usize,
+                indices[k + 3] as usize,
+            );
+            let v01 = _mm_loadu_pd(pv.add(k));
+            let v23 = _mm_loadu_pd(pv.add(k + 2));
+            aa01 = _mm_add_pd(aa01, _mm_mul_pd(v01, _mm_set_pd(a[j1], a[j0])));
+            aa23 = _mm_add_pd(aa23, _mm_mul_pd(v23, _mm_set_pd(a[j3], a[j2])));
+            ab01 = _mm_add_pd(ab01, _mm_mul_pd(v01, _mm_set_pd(b[j1], b[j0])));
+            ab23 = _mm_add_pd(ab23, _mm_mul_pd(v23, _mm_set_pd(b[j3], b[j2])));
+        }
+        let mut tail_a = 0.0;
+        let mut tail_b = 0.0;
+        for k in chunks * 4..values.len() {
+            let j = indices[k] as usize;
+            tail_a += values[k] * a[j];
+            tail_b += values[k] * b[j];
+        }
+        (fold4(aa01, aa23, tail_a), fold4(ab01, ab23, tail_b))
+    }
+
+    pub fn spaxpy(c: f64, indices: &[u32], values: &[f64], out: &mut [f64]) {
+        unsafe { spaxpy_impl(c, indices, values, out) }
+    }
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn spaxpy_impl(c: f64, indices: &[u32], values: &[f64], out: &mut [f64]) {
+        let vc = _mm_set1_pd(c);
+        let pv = values.as_ptr();
+        let chunks = values.len() / 4;
+        let mut prod = [0.0f64; 4];
+        for ch in 0..chunks {
+            let k = ch * 4;
+            // products c·v vectorized; the scatter replays the scalar
+            // ascending-k update order
+            _mm_storeu_pd(prod.as_mut_ptr(), _mm_mul_pd(vc, _mm_loadu_pd(pv.add(k))));
+            _mm_storeu_pd(
+                prod.as_mut_ptr().add(2),
+                _mm_mul_pd(vc, _mm_loadu_pd(pv.add(k + 2))),
+            );
+            out[indices[k] as usize] += prod[0];
+            out[indices[k + 1] as usize] += prod[1];
+            out[indices[k + 2] as usize] += prod[2];
+            out[indices[k + 3] as usize] += prod[3];
+        }
+        for k in chunks * 4..values.len() {
+            out[indices[k] as usize] += c * values[k];
+        }
+    }
+
+    pub fn asum(a: &[f64]) -> f64 {
+        unsafe { asum_impl(a) }
+    }
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn asum_impl(a: &[f64]) -> f64 {
+        let sign_mask = _mm_set1_pd(-0.0);
+        let pa = a.as_ptr();
+        let chunks = a.len() / 4;
+        let mut acc01 = _mm_setzero_pd();
+        let mut acc23 = _mm_setzero_pd();
+        for i in 0..chunks {
+            let j = i * 4;
+            acc01 = _mm_add_pd(acc01, _mm_andnot_pd(sign_mask, _mm_loadu_pd(pa.add(j))));
+            acc23 = _mm_add_pd(acc23, _mm_andnot_pd(sign_mask, _mm_loadu_pd(pa.add(j + 2))));
+        }
+        let mut tail = 0.0;
+        for j in chunks * 4..a.len() {
+            tail += a[j].abs();
+        }
+        fold4(acc01, acc23, tail)
+    }
+
+    pub fn diff_nrm2_sq(a: &[f64], b: &[f64]) -> f64 {
+        assert!(b.len() >= a.len());
+        unsafe { diff_nrm2_sq_impl(a, b) }
+    }
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn diff_nrm2_sq_impl(a: &[f64], b: &[f64]) -> f64 {
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let chunks = a.len() / 4;
+        let mut acc01 = _mm_setzero_pd();
+        let mut acc23 = _mm_setzero_pd();
+        for i in 0..chunks {
+            let j = i * 4;
+            let d01 = _mm_sub_pd(_mm_loadu_pd(pa.add(j)), _mm_loadu_pd(pb.add(j)));
+            let d23 = _mm_sub_pd(_mm_loadu_pd(pa.add(j + 2)), _mm_loadu_pd(pb.add(j + 2)));
+            acc01 = _mm_add_pd(acc01, _mm_mul_pd(d01, d01));
+            acc23 = _mm_add_pd(acc23, _mm_mul_pd(d23, d23));
+        }
+        let mut tail = 0.0;
+        for j in chunks * 4..a.len() {
+            let d = a[j] - b[j];
+            tail += d * d;
+        }
+        fold4(acc01, acc23, tail)
+    }
+
+    pub fn diff_max_abs(a: &[f64], b: &[f64]) -> f64 {
+        assert!(b.len() >= a.len());
+        unsafe { diff_max_abs_impl(a, b) }
+    }
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn diff_max_abs_impl(a: &[f64], b: &[f64]) -> f64 {
+        let sign_mask = _mm_set1_pd(-0.0);
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let chunks = a.len() / 4;
+        let mut m01 = _mm_setzero_pd();
+        let mut m23 = _mm_setzero_pd();
+        for i in 0..chunks {
+            let j = i * 4;
+            let d01 = _mm_sub_pd(_mm_loadu_pd(pa.add(j)), _mm_loadu_pd(pb.add(j)));
+            let d23 = _mm_sub_pd(_mm_loadu_pd(pa.add(j + 2)), _mm_loadu_pd(pb.add(j + 2)));
+            m01 = _mm_max_pd(m01, _mm_andnot_pd(sign_mask, d01));
+            m23 = _mm_max_pd(m23, _mm_andnot_pd(sign_mask, d23));
+        }
+        let mut l01 = [0.0f64; 2];
+        let mut l23 = [0.0f64; 2];
+        _mm_storeu_pd(l01.as_mut_ptr(), m01);
+        _mm_storeu_pd(l23.as_mut_ptr(), m23);
+        let mut tail = 0.0f64;
+        for j in chunks * 4..a.len() {
+            tail = tail.max((a[j] - b[j]).abs());
+        }
+        l01[0].max(l01[1]).max(l23[0]).max(l23[1]).max(tail)
+    }
+
+    pub fn lattice_recon(lo: &[f64], spacing: &[f64], idx: &[u32], out: &mut [f64]) {
+        assert!(lo.len() >= out.len() && spacing.len() >= out.len());
+        unsafe { lattice_recon_impl(lo, spacing, idx, out) }
+    }
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn lattice_recon_impl(lo: &[f64], spacing: &[f64], idx: &[u32], out: &mut [f64]) {
+        let (pl, ps, po) = (lo.as_ptr(), spacing.as_ptr(), out.as_mut_ptr());
+        let chunks = out.len() / 4;
+        for i in 0..chunks {
+            let j = i * 4;
+            // u32 → f64 converts exactly in scalar (no SSE2 u32 convert)
+            let k01 = _mm_set_pd(idx[j + 1] as f64, idx[j] as f64);
+            let k23 = _mm_set_pd(idx[j + 3] as f64, idx[j + 2] as f64);
+            _mm_storeu_pd(
+                po.add(j),
+                _mm_add_pd(_mm_loadu_pd(pl.add(j)), _mm_mul_pd(_mm_loadu_pd(ps.add(j)), k01)),
+            );
+            _mm_storeu_pd(
+                po.add(j + 2),
+                _mm_add_pd(
+                    _mm_loadu_pd(pl.add(j + 2)),
+                    _mm_mul_pd(_mm_loadu_pd(ps.add(j + 2)), k23),
+                ),
+            );
+        }
+        for j in chunks * 4..out.len() {
+            out[j] = lo[j] + spacing[j] * idx[j] as f64;
+        }
+    }
+
+    pub fn frac_lattice(w: &[f64], lo: &[f64], inv_spacing: &[f64], out: &mut [f64]) {
+        assert!(w.len() >= out.len() && lo.len() >= out.len() && inv_spacing.len() >= out.len());
+        unsafe { frac_lattice_impl(w, lo, inv_spacing, out) }
+    }
+
+    #[target_feature(enable = "sse2")]
+    unsafe fn frac_lattice_impl(w: &[f64], lo: &[f64], inv_spacing: &[f64], out: &mut [f64]) {
+        let (pw, pl, pi, po) = (w.as_ptr(), lo.as_ptr(), inv_spacing.as_ptr(), out.as_mut_ptr());
+        let chunks = out.len() / 4;
+        for i in 0..chunks {
+            let j = i * 4;
+            _mm_storeu_pd(
+                po.add(j),
+                _mm_mul_pd(
+                    _mm_sub_pd(_mm_loadu_pd(pw.add(j)), _mm_loadu_pd(pl.add(j))),
+                    _mm_loadu_pd(pi.add(j)),
+                ),
+            );
+            _mm_storeu_pd(
+                po.add(j + 2),
+                _mm_mul_pd(
+                    _mm_sub_pd(_mm_loadu_pd(pw.add(j + 2)), _mm_loadu_pd(pl.add(j + 2))),
+                    _mm_loadu_pd(pi.add(j + 2)),
+                ),
+            );
+        }
+        for j in chunks * 4..out.len() {
+            out[j] = (w[j] - lo[j]) * inv_spacing[j];
+        }
+    }
+}
+
+/// AVX2 kernels: the four accumulator lanes are ONE `__m256d` register; each
+/// chunk is one unaligned load pair + `vmulpd` + `vaddpd` (never `vfmadd` —
+/// the no-FMA rule of the lane contract), and the fold stores the register
+/// and sums the lanes in the fixed scalar order.
+///
+/// Same safety discipline as the SSE2 module: `#[target_feature]` inner
+/// functions, wrappers reachable only through the runtime-checked tables.
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use core::arch::x86_64::*;
+
+    /// Fold the 4-lane accumulator + tail as `acc0 + acc1 + acc2 + acc3 + tail`.
+    #[inline]
+    unsafe fn fold4(acc: __m256d, tail: f64) -> f64 {
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), acc);
+        lanes[0] + lanes[1] + lanes[2] + lanes[3] + tail
+    }
+
+    pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+        assert!(b.len() >= a.len());
+        unsafe { dot_impl(a, b) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot_impl(a: &[f64], b: &[f64]) -> f64 {
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let chunks = a.len() / 4;
+        let mut acc = _mm256_setzero_pd();
+        for i in 0..chunks {
+            let j = i * 4;
+            acc = _mm256_add_pd(
+                acc,
+                _mm256_mul_pd(_mm256_loadu_pd(pa.add(j)), _mm256_loadu_pd(pb.add(j))),
+            );
+        }
+        let mut tail = 0.0;
+        for j in chunks * 4..a.len() {
+            tail += a[j] * b[j];
+        }
+        fold4(acc, tail)
+    }
+
+    pub fn dot2(v: &[f64], a: &[f64], b: &[f64]) -> (f64, f64) {
+        assert!(a.len() >= v.len() && b.len() >= v.len());
+        unsafe { dot2_impl(v, a, b) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn dot2_impl(v: &[f64], a: &[f64], b: &[f64]) -> (f64, f64) {
+        let (pv, pa, pb) = (v.as_ptr(), a.as_ptr(), b.as_ptr());
+        let chunks = v.len() / 4;
+        let mut acc_a = _mm256_setzero_pd();
+        let mut acc_b = _mm256_setzero_pd();
+        for i in 0..chunks {
+            let j = i * 4;
+            let vv = _mm256_loadu_pd(pv.add(j));
+            acc_a = _mm256_add_pd(acc_a, _mm256_mul_pd(vv, _mm256_loadu_pd(pa.add(j))));
+            acc_b = _mm256_add_pd(acc_b, _mm256_mul_pd(vv, _mm256_loadu_pd(pb.add(j))));
+        }
+        let mut tail_a = 0.0;
+        let mut tail_b = 0.0;
+        for j in chunks * 4..v.len() {
+            tail_a += v[j] * a[j];
+            tail_b += v[j] * b[j];
+        }
+        (fold4(acc_a, tail_a), fold4(acc_b, tail_b))
+    }
+
+    pub fn nrm2_sq(a: &[f64]) -> f64 {
+        unsafe { dot_impl(a, a) }
+    }
+
+    pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+        assert!(x.len() >= y.len());
+        unsafe { axpy_impl(alpha, x, y) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn axpy_impl(alpha: f64, x: &[f64], y: &mut [f64]) {
+        let va = _mm256_set1_pd(alpha);
+        let px = x.as_ptr();
+        let py = y.as_mut_ptr();
+        let chunks = y.len() / 4;
+        for i in 0..chunks {
+            let j = i * 4;
+            let yy = _mm256_add_pd(
+                _mm256_loadu_pd(py.add(j)),
+                _mm256_mul_pd(va, _mm256_loadu_pd(px.add(j))),
+            );
+            _mm256_storeu_pd(py.add(j), yy);
+        }
+        for j in chunks * 4..y.len() {
+            y[j] += alpha * x[j];
+        }
+    }
+
+    pub fn scal(alpha: f64, x: &mut [f64]) {
+        unsafe { scal_impl(alpha, x) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn scal_impl(alpha: f64, x: &mut [f64]) {
+        let va = _mm256_set1_pd(alpha);
+        let px = x.as_mut_ptr();
+        let chunks = x.len() / 4;
+        for i in 0..chunks {
+            let j = i * 4;
+            _mm256_storeu_pd(px.add(j), _mm256_mul_pd(_mm256_loadu_pd(px.add(j)), va));
+        }
+        for j in chunks * 4..x.len() {
+            x[j] *= alpha;
+        }
+    }
+
+    pub fn sub(a: &[f64], b: &[f64], out: &mut [f64]) {
+        assert!(a.len() >= out.len() && b.len() >= out.len());
+        unsafe { sub_impl(a, b, out) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn sub_impl(a: &[f64], b: &[f64], out: &mut [f64]) {
+        let (pa, pb, po) = (a.as_ptr(), b.as_ptr(), out.as_mut_ptr());
+        let chunks = out.len() / 4;
+        for i in 0..chunks {
+            let j = i * 4;
+            _mm256_storeu_pd(
+                po.add(j),
+                _mm256_sub_pd(_mm256_loadu_pd(pa.add(j)), _mm256_loadu_pd(pb.add(j))),
+            );
+        }
+        for j in chunks * 4..out.len() {
+            out[j] = a[j] - b[j];
+        }
+    }
+
+    pub fn spdot(indices: &[u32], values: &[f64], w: &[f64]) -> f64 {
+        unsafe { spdot_impl(indices, values, w) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn spdot_impl(indices: &[u32], values: &[f64], w: &[f64]) -> f64 {
+        let pv = values.as_ptr();
+        let chunks = values.len() / 4;
+        let mut acc = _mm256_setzero_pd();
+        for c in 0..chunks {
+            let k = c * 4;
+            // scalar gathers feeding the 4-lane multiply/add: bounds-checked
+            // (u32 indices can exceed the i32 range `vgatherdpd` sign-extends)
+            // and lane l = accumulator l exactly
+            let g = _mm256_set_pd(
+                w[indices[k + 3] as usize],
+                w[indices[k + 2] as usize],
+                w[indices[k + 1] as usize],
+                w[indices[k] as usize],
+            );
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(_mm256_loadu_pd(pv.add(k)), g));
+        }
+        let mut tail = 0.0;
+        for k in chunks * 4..values.len() {
+            tail += values[k] * w[indices[k] as usize];
+        }
+        fold4(acc, tail)
+    }
+
+    pub fn spdot2(indices: &[u32], values: &[f64], a: &[f64], b: &[f64]) -> (f64, f64) {
+        unsafe { spdot2_impl(indices, values, a, b) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn spdot2_impl(indices: &[u32], values: &[f64], a: &[f64], b: &[f64]) -> (f64, f64) {
+        let pv = values.as_ptr();
+        let chunks = values.len() / 4;
+        let mut acc_a = _mm256_setzero_pd();
+        let mut acc_b = _mm256_setzero_pd();
+        for c in 0..chunks {
+            let k = c * 4;
+            let (j0, j1, j2, j3) = (
+                indices[k] as usize,
+                indices[k + 1] as usize,
+                indices[k + 2] as usize,
+                indices[k + 3] as usize,
+            );
+            let vv = _mm256_loadu_pd(pv.add(k));
+            let ga = _mm256_set_pd(a[j3], a[j2], a[j1], a[j0]);
+            let gb = _mm256_set_pd(b[j3], b[j2], b[j1], b[j0]);
+            acc_a = _mm256_add_pd(acc_a, _mm256_mul_pd(vv, ga));
+            acc_b = _mm256_add_pd(acc_b, _mm256_mul_pd(vv, gb));
+        }
+        let mut tail_a = 0.0;
+        let mut tail_b = 0.0;
+        for k in chunks * 4..values.len() {
+            let j = indices[k] as usize;
+            tail_a += values[k] * a[j];
+            tail_b += values[k] * b[j];
+        }
+        (fold4(acc_a, tail_a), fold4(acc_b, tail_b))
+    }
+
+    pub fn spaxpy(c: f64, indices: &[u32], values: &[f64], out: &mut [f64]) {
+        unsafe { spaxpy_impl(c, indices, values, out) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn spaxpy_impl(c: f64, indices: &[u32], values: &[f64], out: &mut [f64]) {
+        let vc = _mm256_set1_pd(c);
+        let pv = values.as_ptr();
+        let chunks = values.len() / 4;
+        let mut prod = [0.0f64; 4];
+        for ch in 0..chunks {
+            let k = ch * 4;
+            _mm256_storeu_pd(
+                prod.as_mut_ptr(),
+                _mm256_mul_pd(vc, _mm256_loadu_pd(pv.add(k))),
+            );
+            out[indices[k] as usize] += prod[0];
+            out[indices[k + 1] as usize] += prod[1];
+            out[indices[k + 2] as usize] += prod[2];
+            out[indices[k + 3] as usize] += prod[3];
+        }
+        for k in chunks * 4..values.len() {
+            out[indices[k] as usize] += c * values[k];
+        }
+    }
+
+    pub fn asum(a: &[f64]) -> f64 {
+        unsafe { asum_impl(a) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn asum_impl(a: &[f64]) -> f64 {
+        let sign_mask = _mm256_set1_pd(-0.0);
+        let pa = a.as_ptr();
+        let chunks = a.len() / 4;
+        let mut acc = _mm256_setzero_pd();
+        for i in 0..chunks {
+            let j = i * 4;
+            acc = _mm256_add_pd(acc, _mm256_andnot_pd(sign_mask, _mm256_loadu_pd(pa.add(j))));
+        }
+        let mut tail = 0.0;
+        for j in chunks * 4..a.len() {
+            tail += a[j].abs();
+        }
+        fold4(acc, tail)
+    }
+
+    pub fn diff_nrm2_sq(a: &[f64], b: &[f64]) -> f64 {
+        assert!(b.len() >= a.len());
+        unsafe { diff_nrm2_sq_impl(a, b) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn diff_nrm2_sq_impl(a: &[f64], b: &[f64]) -> f64 {
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let chunks = a.len() / 4;
+        let mut acc = _mm256_setzero_pd();
+        for i in 0..chunks {
+            let j = i * 4;
+            let d = _mm256_sub_pd(_mm256_loadu_pd(pa.add(j)), _mm256_loadu_pd(pb.add(j)));
+            acc = _mm256_add_pd(acc, _mm256_mul_pd(d, d));
+        }
+        let mut tail = 0.0;
+        for j in chunks * 4..a.len() {
+            let d = a[j] - b[j];
+            tail += d * d;
+        }
+        fold4(acc, tail)
+    }
+
+    pub fn diff_max_abs(a: &[f64], b: &[f64]) -> f64 {
+        assert!(b.len() >= a.len());
+        unsafe { diff_max_abs_impl(a, b) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn diff_max_abs_impl(a: &[f64], b: &[f64]) -> f64 {
+        let sign_mask = _mm256_set1_pd(-0.0);
+        let (pa, pb) = (a.as_ptr(), b.as_ptr());
+        let chunks = a.len() / 4;
+        let mut m = _mm256_setzero_pd();
+        for i in 0..chunks {
+            let j = i * 4;
+            let d = _mm256_sub_pd(_mm256_loadu_pd(pa.add(j)), _mm256_loadu_pd(pb.add(j)));
+            m = _mm256_max_pd(m, _mm256_andnot_pd(sign_mask, d));
+        }
+        let mut lanes = [0.0f64; 4];
+        _mm256_storeu_pd(lanes.as_mut_ptr(), m);
+        let mut tail = 0.0f64;
+        for j in chunks * 4..a.len() {
+            tail = tail.max((a[j] - b[j]).abs());
+        }
+        lanes[0].max(lanes[1]).max(lanes[2]).max(lanes[3]).max(tail)
+    }
+
+    pub fn lattice_recon(lo: &[f64], spacing: &[f64], idx: &[u32], out: &mut [f64]) {
+        assert!(lo.len() >= out.len() && spacing.len() >= out.len());
+        unsafe { lattice_recon_impl(lo, spacing, idx, out) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn lattice_recon_impl(lo: &[f64], spacing: &[f64], idx: &[u32], out: &mut [f64]) {
+        let (pl, ps, po) = (lo.as_ptr(), spacing.as_ptr(), out.as_mut_ptr());
+        let chunks = out.len() / 4;
+        for i in 0..chunks {
+            let j = i * 4;
+            // u32 → f64 converts exactly in scalar (AVX2 has no u32 convert)
+            let k = _mm256_set_pd(
+                idx[j + 3] as f64,
+                idx[j + 2] as f64,
+                idx[j + 1] as f64,
+                idx[j] as f64,
+            );
+            _mm256_storeu_pd(
+                po.add(j),
+                _mm256_add_pd(
+                    _mm256_loadu_pd(pl.add(j)),
+                    _mm256_mul_pd(_mm256_loadu_pd(ps.add(j)), k),
+                ),
+            );
+        }
+        for j in chunks * 4..out.len() {
+            out[j] = lo[j] + spacing[j] * idx[j] as f64;
+        }
+    }
+
+    pub fn frac_lattice(w: &[f64], lo: &[f64], inv_spacing: &[f64], out: &mut [f64]) {
+        assert!(w.len() >= out.len() && lo.len() >= out.len() && inv_spacing.len() >= out.len());
+        unsafe { frac_lattice_impl(w, lo, inv_spacing, out) }
+    }
+
+    #[target_feature(enable = "avx2")]
+    unsafe fn frac_lattice_impl(w: &[f64], lo: &[f64], inv_spacing: &[f64], out: &mut [f64]) {
+        let (pw, pl, pi, po) = (w.as_ptr(), lo.as_ptr(), inv_spacing.as_ptr(), out.as_mut_ptr());
+        let chunks = out.len() / 4;
+        for i in 0..chunks {
+            let j = i * 4;
+            _mm256_storeu_pd(
+                po.add(j),
+                _mm256_mul_pd(
+                    _mm256_sub_pd(_mm256_loadu_pd(pw.add(j)), _mm256_loadu_pd(pl.add(j))),
+                    _mm256_loadu_pd(pi.add(j)),
+                ),
+            );
+        }
+        for j in chunks * 4..out.len() {
+            out[j] = (w[j] - lo[j]) * inv_spacing[j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, gen_vec};
+
+    /// Bit patterns of a slice, for whole-vector bitwise equality asserts.
+    fn bits(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// Every runtime-supported tier's table (scalar always included).
+    fn tables() -> Vec<&'static KernelTable> {
+        available_tiers()
+            .into_iter()
+            .map(|t| table_for(t).expect("available tier must have a table"))
+            .collect()
+    }
+
+    #[test]
+    fn dispatch_resolves_exactly_once() {
+        let a = kernels();
+        let b = kernels();
+        assert!(std::ptr::eq(a, b), "two kernels() calls returned different tables");
+        assert_eq!(resolve_count(), 1, "OnceLock init closure ran more than once");
+        // and the resolved tier is one this host actually supports
+        assert!(runtime_supports(a.tier));
+    }
+
+    #[test]
+    fn tier_parse_accepts_names_and_rejects_unknown() {
+        assert_eq!(Tier::parse("scalar").unwrap(), Tier::Scalar);
+        assert_eq!(Tier::parse("sse2").unwrap(), Tier::Sse2);
+        assert_eq!(Tier::parse("avx2").unwrap(), Tier::Avx2);
+        for bad in ["", "AVX2", "avx512", "auto", "scalar "] {
+            let err = Tier::parse(bad).unwrap_err().to_string();
+            assert!(err.contains("scalar|sse2|avx2"), "unhelpful error: {err}");
+        }
+    }
+
+    #[test]
+    fn resolve_selects_falls_back_and_errors() {
+        let only_scalar = |t: Tier| t == Tier::Scalar;
+        let all = |_: Tier| true;
+        // no request -> best supported
+        assert_eq!(resolve(None, all).unwrap(), (Tier::Avx2, None));
+        assert_eq!(resolve(None, only_scalar).unwrap(), (Tier::Scalar, None));
+        // supported request -> that tier, silently
+        assert_eq!(resolve(Some("sse2"), all).unwrap(), (Tier::Sse2, None));
+        // known-but-unsupported request -> scalar + a warning, never a fault
+        let (tier, warn) = resolve(Some("avx2"), only_scalar).unwrap();
+        assert_eq!(tier, Tier::Scalar);
+        assert!(warn.unwrap().contains("falling back to scalar"));
+        // unknown request -> hard error
+        assert!(resolve(Some("turbo"), all).is_err());
+    }
+
+    #[test]
+    fn table_for_scalar_always_exists() {
+        let t = table_for(Tier::Scalar).unwrap();
+        assert_eq!(t.tier, Tier::Scalar);
+        // every available tier resolves to a table tagged with its own name
+        for tier in available_tiers() {
+            assert_eq!(table_for(tier).unwrap().tier, tier);
+        }
+    }
+
+    /// Random length (0, <4 tails, multi-chunk) and alignment offset, so
+    /// loads cover both aligned and unaligned starts.
+    fn rand_slice_shape(rng: &mut crate::rng::Xoshiro256pp) -> (usize, usize) {
+        let len = rng.gen_index(67);
+        let off = rng.gen_index(2);
+        (len, off)
+    }
+
+    #[test]
+    fn prop_dense_kernels_bit_identical_across_tiers() {
+        let tabs = tables();
+        assert!(!tabs.is_empty());
+        forall(150, 0x51AD0, |rng| {
+            let (len, off) = rand_slice_shape(rng);
+            let av = gen_vec(rng, len + off, -3.0, 3.0);
+            let bv = gen_vec(rng, len + off, -3.0, 3.0);
+            let vv = gen_vec(rng, len + off, -3.0, 3.0);
+            let (a, b, v) = (&av[off..], &bv[off..], &vv[off..]);
+            let alpha = rng.gen_uniform(-2.0, 2.0);
+            let y0 = gen_vec(rng, len, -1.0, 1.0);
+
+            let r_dot = (scalar::dot)(a, b);
+            let r_dot2 = (scalar::dot2)(v, a, b);
+            let r_n2 = (scalar::nrm2_sq)(a);
+            let mut r_axpy = y0.clone();
+            scalar::axpy(alpha, a, &mut r_axpy);
+            let mut r_scal = y0.clone();
+            scalar::scal(alpha, &mut r_scal);
+            let mut r_sub = vec![0.0; len];
+            scalar::sub(a, b, &mut r_sub);
+
+            for t in &tabs {
+                let tier = t.tier;
+                assert_eq!((t.dot)(a, b).to_bits(), r_dot.to_bits(), "dot {tier} len={len}");
+                let d2 = (t.dot2)(v, a, b);
+                assert_eq!(d2.0.to_bits(), r_dot2.0.to_bits(), "dot2.0 {tier} len={len}");
+                assert_eq!(d2.1.to_bits(), r_dot2.1.to_bits(), "dot2.1 {tier} len={len}");
+                assert_eq!((t.nrm2_sq)(a).to_bits(), r_n2.to_bits(), "nrm2_sq {tier}");
+                let mut y = y0.clone();
+                (t.axpy)(alpha, a, &mut y);
+                assert_eq!(bits(&y), bits(&r_axpy), "axpy {tier} len={len}");
+                let mut x = y0.clone();
+                (t.scal)(alpha, &mut x);
+                assert_eq!(bits(&x), bits(&r_scal), "scal {tier} len={len}");
+                let mut o = vec![0.0; len];
+                (t.sub)(a, b, &mut o);
+                assert_eq!(bits(&o), bits(&r_sub), "sub {tier} len={len}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_sparse_kernels_bit_identical_across_tiers() {
+        let tabs = tables();
+        forall(150, 0x51AD1, |rng| {
+            let d = 1 + rng.gen_index(60);
+            let density = rng.gen_uniform(0.0, 1.0);
+            let idx: Vec<u32> = (0..d as u32).filter(|_| rng.next_f64() < density).collect();
+            let vals = gen_vec(rng, idx.len(), -3.0, 3.0);
+            let a = gen_vec(rng, d, -2.0, 2.0);
+            let b = gen_vec(rng, d, -2.0, 2.0);
+            let c = rng.gen_uniform(-2.0, 2.0);
+            let out0 = gen_vec(rng, d, -1.0, 1.0);
+
+            let r_spdot = (scalar::spdot)(&idx, &vals, &a);
+            let r_spdot2 = (scalar::spdot2)(&idx, &vals, &a, &b);
+            let mut r_spaxpy = out0.clone();
+            scalar::spaxpy(c, &idx, &vals, &mut r_spaxpy);
+
+            for t in &tabs {
+                let tier = t.tier;
+                assert_eq!(
+                    (t.spdot)(&idx, &vals, &a).to_bits(),
+                    r_spdot.to_bits(),
+                    "spdot {tier} nnz={}",
+                    idx.len()
+                );
+                let s2 = (t.spdot2)(&idx, &vals, &a, &b);
+                assert_eq!(s2.0.to_bits(), r_spdot2.0.to_bits(), "spdot2.0 {tier}");
+                assert_eq!(s2.1.to_bits(), r_spdot2.1.to_bits(), "spdot2.1 {tier}");
+                let mut o = out0.clone();
+                (t.spaxpy)(c, &idx, &vals, &mut o);
+                assert_eq!(bits(&o), bits(&r_spaxpy), "spaxpy {tier} nnz={}", idx.len());
+            }
+        });
+    }
+
+    #[test]
+    fn prop_scan_and_lattice_kernels_bit_identical_across_tiers() {
+        let tabs = tables();
+        forall(150, 0x51AD2, |rng| {
+            let (len, off) = rand_slice_shape(rng);
+            let av = gen_vec(rng, len + off, -4.0, 4.0);
+            let bv = gen_vec(rng, len + off, -4.0, 4.0);
+            let (a, b) = (&av[off..], &bv[off..]);
+            let lo = gen_vec(rng, len, -2.0, 0.0);
+            let spacing = gen_vec(rng, len, 1e-6, 0.5);
+            let inv: Vec<f64> = spacing.iter().map(|s| 1.0 / s).collect();
+            let idx: Vec<u32> = (0..len).map(|_| rng.gen_index(1024) as u32).collect();
+
+            let r_asum = (scalar::asum)(a);
+            let r_dn2 = (scalar::diff_nrm2_sq)(a, b);
+            let r_dmax = (scalar::diff_max_abs)(a, b);
+            let mut r_rec = vec![0.0; len];
+            scalar::lattice_recon(&lo, &spacing, &idx, &mut r_rec);
+            let mut r_frac = vec![0.0; len];
+            scalar::frac_lattice(a, &lo, &inv, &mut r_frac);
+
+            for t in &tabs {
+                let tier = t.tier;
+                assert_eq!((t.asum)(a).to_bits(), r_asum.to_bits(), "asum {tier} len={len}");
+                assert_eq!(
+                    (t.diff_nrm2_sq)(a, b).to_bits(),
+                    r_dn2.to_bits(),
+                    "diff_nrm2_sq {tier} len={len}"
+                );
+                assert_eq!(
+                    (t.diff_max_abs)(a, b).to_bits(),
+                    r_dmax.to_bits(),
+                    "diff_max_abs {tier} len={len}"
+                );
+                let mut o = vec![0.0; len];
+                (t.lattice_recon)(&lo, &spacing, &idx, &mut o);
+                assert_eq!(bits(&o), bits(&r_rec), "lattice_recon {tier} len={len}");
+                let mut f = vec![0.0; len];
+                (t.frac_lattice)(a, &lo, &inv, &mut f);
+                assert_eq!(bits(&f), bits(&r_frac), "frac_lattice {tier} len={len}");
+            }
+        });
+    }
+
+    #[test]
+    fn empty_and_tail_only_inputs() {
+        for t in tables() {
+            let tier = t.tier;
+            assert_eq!((t.dot)(&[], &[]), 0.0, "{tier}");
+            assert_eq!((t.dot2)(&[], &[], &[]), (0.0, 0.0), "{tier}");
+            assert_eq!((t.asum)(&[]), 0.0, "{tier}");
+            assert_eq!((t.diff_max_abs)(&[], &[]), 0.0, "{tier}");
+            assert_eq!((t.spdot)(&[], &[], &[1.0]), 0.0, "{tier}");
+            // pure-tail (len < 4) shapes
+            assert_eq!((t.dot)(&[2.0, 3.0], &[4.0, 5.0]), 23.0, "{tier}");
+            let mut y = [1.0, 2.0, 3.0];
+            (t.axpy)(2.0, &[1.0, 1.0, 1.0], &mut y);
+            assert_eq!(y, [3.0, 4.0, 5.0], "{tier}");
+            let mut o = [0.0; 2];
+            (t.lattice_recon)(&[1.0, 2.0], &[0.5, 0.25], &[2, 4], &mut o);
+            assert_eq!(o, [2.0, 3.0], "{tier}");
+        }
+    }
+}

@@ -17,6 +17,8 @@
 
 use anyhow::{bail, Result};
 
+use super::simd;
+
 /// A sparse row-major matrix in Compressed Sparse Row form.
 ///
 /// Invariants (enforced by [`CsrMatrix::new`]):
@@ -267,9 +269,10 @@ impl CsrMatrix {
     pub fn spmv(&self, x: &[f64], out: &mut [f64]) {
         debug_assert_eq!(x.len(), self.n_cols);
         debug_assert_eq!(out.len(), self.n_rows);
+        let k = simd::kernels();
         for (i, o) in out.iter_mut().enumerate() {
             let (idx, vals) = self.row(i);
-            *o = spdot(idx, vals, x);
+            *o = (k.spdot)(idx, vals, x);
         }
     }
 
@@ -288,12 +291,13 @@ impl CsrMatrix {
     pub fn spmv_t_acc(&self, coeff: &[f64], out: &mut [f64]) {
         debug_assert_eq!(coeff.len(), self.n_rows);
         debug_assert_eq!(out.len(), self.n_cols);
+        let k = simd::kernels();
         for (i, &c) in coeff.iter().enumerate() {
             if c == 0.0 {
                 continue;
             }
             let (idx, vals) = self.row(i);
-            spaxpy(c, idx, vals, out);
+            (k.spaxpy)(c, idx, vals, out);
         }
     }
 }
@@ -360,26 +364,13 @@ impl SparseVec {
 /// Sparse dot product `Σ_k values[k] · w[indices[k]]`.
 ///
 /// Same 4-independent-accumulator reduction as the dense [`super::dot`]
-/// (breaks the fp dependency chain for vectorized gathers AND makes a
-/// fully-stored row reduce in the exact dense grouping — the
+/// (each [`super::simd`] lane gathers for exactly one accumulator AND a
+/// fully-stored row reduces in the exact dense grouping — the
 /// bit-compatibility contract in the module docs).
 #[inline]
 pub fn spdot(indices: &[u32], values: &[f64], w: &[f64]) -> f64 {
     debug_assert_eq!(indices.len(), values.len());
-    let mut acc = [0.0f64; 4];
-    let chunks = values.len() / 4;
-    for c in 0..chunks {
-        let k = c * 4;
-        acc[0] += values[k] * w[indices[k] as usize];
-        acc[1] += values[k + 1] * w[indices[k + 1] as usize];
-        acc[2] += values[k + 2] * w[indices[k + 2] as usize];
-        acc[3] += values[k + 3] * w[indices[k + 3] as usize];
-    }
-    let mut tail = 0.0;
-    for k in chunks * 4..values.len() {
-        tail += values[k] * w[indices[k] as usize];
-    }
-    acc[0] + acc[1] + acc[2] + acc[3] + tail
+    (simd::kernels().spdot)(indices, values, w)
 }
 
 /// Fused two-vector sparse dot: `(row·a, row·b)` in ONE pass over the row's
@@ -390,46 +381,16 @@ pub fn spdot(indices: &[u32], values: &[f64], w: &[f64]) -> f64 {
 #[inline]
 pub fn spdot2(indices: &[u32], values: &[f64], a: &[f64], b: &[f64]) -> (f64, f64) {
     debug_assert_eq!(indices.len(), values.len());
-    let mut acc_a = [0.0f64; 4];
-    let mut acc_b = [0.0f64; 4];
-    let chunks = values.len() / 4;
-    for c in 0..chunks {
-        let k = c * 4;
-        let (j0, j1, j2, j3) = (
-            indices[k] as usize,
-            indices[k + 1] as usize,
-            indices[k + 2] as usize,
-            indices[k + 3] as usize,
-        );
-        acc_a[0] += values[k] * a[j0];
-        acc_a[1] += values[k + 1] * a[j1];
-        acc_a[2] += values[k + 2] * a[j2];
-        acc_a[3] += values[k + 3] * a[j3];
-        acc_b[0] += values[k] * b[j0];
-        acc_b[1] += values[k + 1] * b[j1];
-        acc_b[2] += values[k + 2] * b[j2];
-        acc_b[3] += values[k + 3] * b[j3];
-    }
-    let mut tail_a = 0.0;
-    let mut tail_b = 0.0;
-    for k in chunks * 4..values.len() {
-        let j = indices[k] as usize;
-        tail_a += values[k] * a[j];
-        tail_b += values[k] * b[j];
-    }
-    (
-        acc_a[0] + acc_a[1] + acc_a[2] + acc_a[3] + tail_a,
-        acc_b[0] + acc_b[1] + acc_b[2] + acc_b[3] + tail_b,
-    )
+    (simd::kernels().spdot2)(indices, values, a, b)
 }
 
-/// Sparse scaled scatter-add: `out[indices[k]] += c · values[k]`.
+/// Sparse scaled scatter-add: `out[indices[k]] += c · values[k]`, updates in
+/// ascending-`k` order (the products may vectorize; the scatter order is
+/// part of the bit contract).
 #[inline]
 pub fn spaxpy(c: f64, indices: &[u32], values: &[f64], out: &mut [f64]) {
     debug_assert_eq!(indices.len(), values.len());
-    for (&j, &v) in indices.iter().zip(values) {
-        out[j as usize] += c * v;
-    }
+    (simd::kernels().spaxpy)(c, indices, values, out)
 }
 
 #[cfg(test)]

@@ -121,6 +121,25 @@ impl Grid {
         self.lo[i]
     }
 
+    /// All lower edges as one slice (the SIMD lattice sweeps consume whole
+    /// coordinate planes at once).
+    #[inline]
+    pub fn lo_slice(&self) -> &[f64] {
+        &self.lo
+    }
+
+    /// All lattice spacings as one slice.
+    #[inline]
+    pub fn spacing_slice(&self) -> &[f64] {
+        &self.spacing
+    }
+
+    /// All reciprocal spacings as one slice.
+    #[inline]
+    pub fn inv_spacing_slice(&self) -> &[f64] {
+        &self.inv_spacing
+    }
+
     /// Value of lattice index `k` in coordinate `i`.
     #[inline]
     pub fn value_of(&self, i: usize, k: u32) -> f64 {

@@ -42,6 +42,6 @@ pub use zoo::{QsdCompressor, VbSparseCompressor, WangniCompressor};
 pub use grid::Grid;
 pub use replicated::{EncodeStats, Encoded, ReplicatedGrid};
 pub use urq::{
-    dequantize, dequantize_into, quantize_deterministic, quantize_urq, quantize_urq_into,
-    QuantStats,
+    dequantize, dequantize_into, quantize_dequantize_map_into, quantize_dequantize_map_into_with,
+    quantize_deterministic, quantize_urq, quantize_urq_into, quantize_urq_into_with, QuantStats,
 };

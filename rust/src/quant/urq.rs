@@ -12,8 +12,28 @@
 //! [`QuantStats`] and surfaced by the telemetry — experiments assert it stays
 //! rare.
 
+use std::cell::RefCell;
+
 use super::grid::Grid;
+use crate::linalg::simd::{self, KernelTable};
 use crate::rng::Xoshiro256pp;
+
+thread_local! {
+    /// Per-thread scratch for the fractional-lattice coordinates `t_i` of one
+    /// quantize sweep — keeps the hot loops allocation-free after warm-up
+    /// without threading a buffer through every caller.
+    static T_SCRATCH: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+}
+
+/// Run `f` over a zeroed length-`len` per-thread scratch slice.
+fn with_scratch<R>(len: usize, f: impl FnOnce(&mut [f64]) -> R) -> R {
+    T_SCRATCH.with(|cell| {
+        let mut buf = cell.borrow_mut();
+        buf.clear();
+        buf.resize(len, 0.0);
+        f(&mut buf)
+    })
+}
 
 /// Side effects of a quantization call, for telemetry/assertions.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -57,13 +77,37 @@ pub fn quantize_urq_into(
     rng: &mut Xoshiro256pp,
     idx: &mut Vec<u32>,
 ) -> QuantStats {
+    quantize_urq_into_with(simd::kernels(), w, grid, rng, idx)
+}
+
+/// [`quantize_urq_into`] with an explicit kernel table — the entry point for
+/// benches and tier-equivalence tests that need to compare SIMD tiers inside
+/// one process (the env-dispatched table resolves once and never switches).
+///
+/// The arithmetic splits into a vectorizable sweep and a scalar pass: the
+/// fractional lattice coordinates `t_i = (w_i − lo_i) · inv_spacing_i` go
+/// through the dispatched elementwise `frac_lattice` kernel (per-lane it is
+/// the exact scalar expression, so every tier yields the same bits), while
+/// classification + the conditional URQ rounding draw stay scalar — the rng
+/// consumes exactly one draw per *interior* coordinate in ascending order,
+/// a data-dependent stream no lane shuffle may perturb.
+pub fn quantize_urq_into_with(
+    kern: &KernelTable,
+    w: &[f64],
+    grid: &Grid,
+    rng: &mut Xoshiro256pp,
+    idx: &mut Vec<u32>,
+) -> QuantStats {
     assert_eq!(w.len(), grid.dim(), "dim mismatch");
     idx.clear();
     idx.reserve(w.len());
     let mut stats = QuantStats::default();
-    for (i, &x) in w.iter().enumerate() {
-        idx.push(quantize_coord_urq(x, grid, i, rng, &mut stats));
-    }
+    with_scratch(w.len(), |t| {
+        (kern.frac_lattice)(w, grid.lo_slice(), grid.inv_spacing_slice(), t);
+        for (i, (&x, &ti)) in w.iter().zip(t.iter()).enumerate() {
+            idx.push(classify_coord_urq(ti, x, grid, i, rng, &mut stats));
+        }
+    });
     stats
 }
 
@@ -84,41 +128,69 @@ pub fn quantize_dequantize_map_into(
     idx: &mut Vec<u32>,
     out: &mut [f64],
 ) -> QuantStats {
+    quantize_dequantize_map_into_with(simd::kernels(), u, grid, rng, idx, out)
+}
+
+/// [`quantize_dequantize_map_into`] with an explicit kernel table (see
+/// [`quantize_urq_into_with`] for why the table is a parameter).
+///
+/// The sweep runs in four passes that are value-identical to the original
+/// per-coordinate fusion: materialize `u(i)` into `out` (one call per
+/// coordinate, ascending — `u`'s observation order is unchanged), the
+/// dispatched `frac_lattice` sweep, the scalar classify+rng pass (same
+/// draw-per-interior-coordinate stream), and the dispatched `lattice_recon`
+/// sweep writing the reconstruction over `out`. Each pass is elementwise, so
+/// no tier and no pass boundary can move a bit.
+pub fn quantize_dequantize_map_into_with(
+    kern: &KernelTable,
+    u: impl Fn(usize) -> f64,
+    grid: &Grid,
+    rng: &mut Xoshiro256pp,
+    idx: &mut Vec<u32>,
+    out: &mut [f64],
+) -> QuantStats {
     assert_eq!(out.len(), grid.dim(), "dim mismatch");
     idx.clear();
     idx.reserve(out.len());
     let mut stats = QuantStats::default();
     for (i, o) in out.iter_mut().enumerate() {
-        let k = quantize_coord_urq(u(i), grid, i, rng, &mut stats);
-        idx.push(k);
-        *o = grid.value_of(i, k);
+        *o = u(i);
     }
+    with_scratch(out.len(), |t| {
+        (kern.frac_lattice)(out, grid.lo_slice(), grid.inv_spacing_slice(), t);
+        for (i, (&x, &ti)) in out.iter().zip(t.iter()).enumerate() {
+            idx.push(classify_coord_urq(ti, x, grid, i, rng, &mut stats));
+        }
+    });
+    (kern.lattice_recon)(grid.lo_slice(), grid.spacing_slice(), idx, out);
     stats
 }
 
+/// Classify one precomputed fractional lattice coordinate `t` (edge clamp /
+/// interior URQ draw). `t` MUST be exactly `(x − lo_i) · inv_spacing_i` —
+/// the callers compute it through the dispatched `frac_lattice` sweep, whose
+/// per-lane arithmetic is that exact expression on every tier.
 #[inline]
-fn quantize_coord_urq(
+fn classify_coord_urq(
+    t: f64,
     x: f64,
     grid: &Grid,
     i: usize,
     rng: &mut Xoshiro256pp,
     stats: &mut QuantStats,
 ) -> u32 {
-    let lo = grid.lo(i);
     let levels = grid.levels(i);
-    let t = (x - lo) * grid.inv_spacing(i); // fractional lattice coordinate
     let max_k = (levels - 1) as f64;
-    // fp tolerance: reconstructing a lattice point can overshoot the hull by
-    // a few ulps; only count *real* out-of-grid values as saturation
-    let tol = edge_tol(x, lo, grid.inv_spacing(i), max_k);
     if t <= 0.0 {
-        if t < -tol {
+        // fp tolerance: reconstructing a lattice point can overshoot the hull
+        // by a few ulps; only count *real* out-of-grid values as saturation
+        if t < -edge_tol(x, grid.lo(i), grid.inv_spacing(i), max_k) {
             stats.saturated += 1;
         }
         return 0;
     }
     if t >= max_k {
-        if t > max_k + tol {
+        if t > max_k + edge_tol(x, grid.lo(i), grid.inv_spacing(i), max_k) {
             stats.saturated += 1;
         }
         return (levels - 1) as u32;
@@ -171,12 +243,17 @@ pub fn dequantize(idx: &[u32], grid: &Grid) -> Vec<f64> {
 }
 
 /// Dequantize into a caller-owned buffer (hot-path variant, no allocation).
+/// Runs the dispatched `lattice_recon` sweep — per-lane it is exactly
+/// [`Grid::value_of`]'s `lo + spacing · k`, so the output bits match the
+/// scalar loop on every tier.
 pub fn dequantize_into(idx: &[u32], grid: &Grid, out: &mut [f64]) {
     assert_eq!(idx.len(), grid.dim());
     assert_eq!(out.len(), grid.dim());
-    for (i, &k) in idx.iter().enumerate() {
-        out[i] = grid.value_of(i, k);
-    }
+    debug_assert!(idx
+        .iter()
+        .enumerate()
+        .all(|(i, &k)| (k as u64) < grid.levels(i)));
+    (simd::kernels().lattice_recon)(grid.lo_slice(), grid.spacing_slice(), idx, out);
 }
 
 #[cfg(test)]
@@ -329,6 +406,73 @@ mod tests {
         );
         // identical residual rng state: both consumed the same draws
         assert_eq!(r1.next_u64(), r2.next_u64());
+    }
+
+    #[test]
+    fn prop_quantize_sweeps_bit_identical_across_tiers() {
+        // the full URQ encode (and the fused encode+reconstruct) must produce
+        // the same indices, stats, reconstruction bits, AND residual rng
+        // state whichever SIMD tier runs the lattice sweeps
+        use crate::testkit::{forall, gen_vec};
+        let scalar = simd::table_for(simd::Tier::Scalar).unwrap();
+        let tiers: Vec<_> = simd::available_tiers()
+            .into_iter()
+            .map(|t| simd::table_for(t).unwrap())
+            .collect();
+        forall(60, 0x9B1D, |r| {
+            let d = 1 + r.gen_index(33);
+            let center = gen_vec(r, d, -1.0, 1.0);
+            let radius = r.gen_uniform(0.5, 2.0);
+            let bits = 1 + r.gen_index(8) as u8;
+            let grid = Grid::uniform(center, radius, bits).unwrap();
+            // mix of interior, edge, and out-of-hull values
+            let w = gen_vec(r, d, -4.0, 4.0);
+            let seed = r.next_u64();
+
+            let mut rng_ref = Xoshiro256pp::seed_from_u64(seed);
+            let mut idx_ref = Vec::new();
+            let s_ref = quantize_urq_into_with(scalar, &w, &grid, &mut rng_ref, &mut idx_ref);
+            let mut rng_ref2 = Xoshiro256pp::seed_from_u64(seed);
+            let mut idx_ref2 = Vec::new();
+            let mut out_ref = vec![0.0; d];
+            let s_ref2 = quantize_dequantize_map_into_with(
+                scalar,
+                |i| w[i],
+                &grid,
+                &mut rng_ref2,
+                &mut idx_ref2,
+                &mut out_ref,
+            );
+
+            for t in &tiers {
+                let name = t.tier;
+                let mut rng_t = Xoshiro256pp::seed_from_u64(seed);
+                let mut idx_t = Vec::new();
+                let s_t = quantize_urq_into_with(t, &w, &grid, &mut rng_t, &mut idx_t);
+                assert_eq!(idx_t, idx_ref, "quantize idx {name}");
+                assert_eq!(s_t, s_ref, "quantize stats {name}");
+                assert_eq!(rng_t.next_u64(), rng_ref.clone().next_u64(), "rng {name}");
+
+                let mut rng_f = Xoshiro256pp::seed_from_u64(seed);
+                let mut idx_f = Vec::new();
+                let mut out_f = vec![0.0; d];
+                let s_f = quantize_dequantize_map_into_with(
+                    t,
+                    |i| w[i],
+                    &grid,
+                    &mut rng_f,
+                    &mut idx_f,
+                    &mut out_f,
+                );
+                assert_eq!(idx_f, idx_ref2, "fused idx {name}");
+                assert_eq!(s_f, s_ref2, "fused stats {name}");
+                assert_eq!(
+                    out_f.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    out_ref.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                    "fused reconstruction {name}"
+                );
+            }
+        });
     }
 
     #[test]

@@ -46,6 +46,7 @@ use anyhow::{bail, Result};
 use super::codec::{self, QuantizedPayload};
 use super::compressor::Compressor;
 use super::replicated::{EncodeStats, Encoded, ReplicatedGrid};
+use crate::linalg::simd;
 use crate::rng::Xoshiro256pp;
 
 /// Ledger bits of one index+value wire coordinate (u32 + f64) — the same
@@ -125,7 +126,12 @@ impl WangniCompressor {
             }
         }
         self.refresh[link] = !self.refresh[link];
-        let l1: f64 = g.iter().map(|x| x.abs()).sum();
+        // dispatched 4-accumulator ‖g‖₁ scan — every tier folds in the same
+        // order, so the selection probabilities are tier-independent; the
+        // value feeds only this sender-side pass (the decoder never
+        // recomputes it), so the reduction shape is free to differ from a
+        // serial fold
+        let l1 = (simd::kernels().asum)(g);
         let mut nnz = 0u64;
         if l1 > 0.0 && l1.is_finite() {
             for (j, (&gj, &uj)) in g.iter().zip(&self.draws[link]).enumerate() {
@@ -217,12 +223,11 @@ impl VbSparseCompressor {
     /// maximum coordinate always clears the RMS, so a nonzero difference
     /// ships at least one coordinate — the delay is never a deadlock.
     fn skim(&mut self, link: usize, g: &[f64], out: &mut [f64], mut emit: impl FnMut(u32, f64)) -> u64 {
+        // dispatched Σ(g−h)² scan; tier-independent bits (fixed fold order),
+        // and like Wangni's ‖g‖₁ the threshold exists only on the sending
+        // side — the decoder replays shipped deltas, never the scan
+        let sum2 = (simd::kernels().diff_nrm2_sq)(g, &self.h[link]);
         let h = &mut self.h[link];
-        let mut sum2 = 0.0;
-        for (gj, hj) in g.iter().zip(h.iter()) {
-            let dj = gj - hj;
-            sum2 += dj * dj;
-        }
         let tau = (sum2 / g.len() as f64).sqrt();
         let mut nnz = 0u64;
         for (j, (&gj, hj)) in g.iter().zip(h.iter_mut()).enumerate() {
@@ -332,15 +337,18 @@ impl QsdCompressor {
         out: &mut [f64],
     ) -> Result<(u64, f64)> {
         let b = grids.bits();
+        // dispatched max|g−h| radius scan: coordinates with dj == 0 (off the
+        // support) contribute 0.0 to a max that starts at 0.0, so scanning
+        // ALL coordinates yields the exact same radius as the old fused
+        // support-only fold — and f64 max is order-independent on the finite
+        // data this path guarantees (non-finite deltas bail below)
+        let radius = (simd::kernels().diff_max_abs)(g, &self.h[link]);
         let h = &mut self.h[link];
         self.idx.clear();
         self.codes.clear();
-        let mut radius = 0.0f64;
         for (j, (&gj, hj)) in g.iter().zip(h.iter()).enumerate() {
-            let dj = gj - *hj;
-            if dj != 0.0 {
+            if gj - *hj != 0.0 {
                 self.idx.push(j as u32);
-                radius = radius.max(dj.abs());
             }
         }
         if !self.idx.is_empty() {
