@@ -141,6 +141,7 @@ fn main() -> anyhow::Result<()> {
         N_WORKERS,
         Some(quant),
         train.fingerprint(0.1),
+        train.chunk_hashes(N_WORKERS),
         &root,
     )?;
     eprintln!("# all {N_WORKERS} workers connected");

@@ -1,0 +1,148 @@
+//! Out-of-core data-path benchmarks: what the streaming shard loader, the
+//! packed `.qmd` sidecar, and `--mmap` actually buy.
+//!
+//! Three headline ratios land in `BENCH_io.json`:
+//!
+//! - `sharded_load_peak_mem_ratio` — resident-set growth of
+//!   `load_libsvm_shard` (one canonical shard of 8) over the growth of the
+//!   full `load → split → standardize` pipeline on the same file. The
+//!   streaming loader holds O(rows) feature memory, so this should sit
+//!   near 1/N (RSS deltas from `/proc/self/statm` are a retained-pages
+//!   proxy for peak — see EXPERIMENTS.md §Perf for the methodology).
+//! - `mmap_vs_owned_load_speedup` — `.qmd` open with mapped feature arrays
+//!   vs decoded owned buffers.
+//! - `pack_load_vs_libsvm_parse_speedup` — `.qmd` owned load vs parsing
+//!   the libsvm text it was packed from.
+
+use std::io::Write as _;
+use std::path::Path;
+use std::time::Duration;
+
+use qmsvrg::benchkit::Bencher;
+use qmsvrg::data::loaders::{load_libsvm_format, load_libsvm_shard};
+use qmsvrg::data::qmd::{load_qmd, write_qmd};
+use qmsvrg::data::FeatureFormat;
+use qmsvrg::rng::Xoshiro256pp;
+
+/// Resident pages of this process (`/proc/self/statm`, field 2). Returns 0
+/// on platforms without procfs — the memory ratio then reads 0/0 and is
+/// reported as "n/a".
+fn rss_pages() -> u64 {
+    std::fs::read_to_string("/proc/self/statm")
+        .ok()
+        .and_then(|s| s.split_whitespace().nth(1).and_then(|v| v.parse().ok()))
+        .unwrap_or(0)
+}
+
+fn main() {
+    let dir = std::env::temp_dir().join("qmsvrg_bench_io");
+    std::fs::create_dir_all(&dir).unwrap();
+    let svm = dir.join("bench_io.svm");
+    let qmd = dir.join("bench_io.qmd");
+
+    // a deterministic ~2.5 MB libsvm fixture: n=20k, d=200, ~5% dense
+    let (n, d) = (20_000usize, 200usize);
+    let mut rng = Xoshiro256pp::seed_from_u64(0xB10);
+    {
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&svm).unwrap());
+        for _ in 0..n {
+            let y = if rng.gen_bool(0.5) { 1 } else { -1 };
+            write!(f, "{y}").unwrap();
+            for j in 0..d {
+                if rng.gen_bool(0.05) {
+                    write!(f, " {}:{:.6}", j + 1, rng.gen_uniform(-2.0, 2.0)).unwrap();
+                }
+            }
+            writeln!(f).unwrap();
+        }
+        f.flush().unwrap();
+    }
+
+    let mut b = Bencher::new(
+        Duration::from_millis(100),
+        Duration::from_millis(800),
+        1_000,
+    );
+    let mut extra: Vec<(&str, String)> = Vec::new();
+    println!("== bench_io ==");
+
+    // memory: one canonical shard of 8 vs the whole pipeline. Shard first
+    // (cold allocator), full second; both deltas are retained-RSS growth.
+    let n_workers = 8usize;
+    let before = rss_pages();
+    let shard = load_libsvm_shard(
+        &svm,
+        None,
+        FeatureFormat::Sparse,
+        0.8,
+        42,
+        n_workers,
+        0,
+        None,
+    )
+    .unwrap();
+    let shard_delta = rss_pages().saturating_sub(before);
+    println!(
+        "shard 0/{n_workers}: rows {}..{} of {} (+{shard_delta} pages)",
+        shard.rows.0, shard.rows.1, shard.n_train
+    );
+
+    let before = rss_pages();
+    let (mut full, _) = load_libsvm_format(&svm, None, FeatureFormat::Sparse)
+        .unwrap()
+        .split(0.8, 42);
+    full.standardize();
+    let full_delta = rss_pages().saturating_sub(before);
+    println!("full pipeline: n={} d={} (+{full_delta} pages)", full.n, full.d);
+    extra.push((
+        "sharded_load_peak_mem_ratio",
+        if full_delta > 0 {
+            format!("{:.3}", shard_delta as f64 / full_delta as f64)
+        } else {
+            "n/a".to_string()
+        },
+    ));
+
+    // the streamed slice must be the full pipeline's shard, bit for bit —
+    // a wrong benchmark subject would make every ratio above meaningless
+    assert_eq!(
+        shard.shard.fingerprint(0.1),
+        full.shard(n_workers)[0].fingerprint(0.1),
+        "streamed shard diverged from the in-memory pipeline"
+    );
+
+    // wall-clock: text parse vs packed load (owned) vs packed load (mmap)
+    let parse_ns = b
+        .bench("parse libsvm (n=20k, d=200, ~5% dense)", || {
+            load_libsvm_format(&svm, None, FeatureFormat::Sparse).unwrap().n
+        })
+        .ns_per_iter();
+    write_qmd(&qmd, &full, &full, true).unwrap();
+    let owned_ns = b
+        .bench("load .qmd (owned buffers)", || {
+            load_qmd(&qmd, false).unwrap().train.n
+        })
+        .ns_per_iter();
+    let mmap_ns = b
+        .bench("load .qmd (mmap windows)", || {
+            load_qmd(&qmd, true).unwrap().train.n
+        })
+        .ns_per_iter();
+    extra.push((
+        "mmap_vs_owned_load_speedup",
+        format!("{:.2}", owned_ns / mmap_ns),
+    ));
+    extra.push((
+        "pack_load_vs_libsvm_parse_speedup",
+        format!("{:.2}", parse_ns / owned_ns),
+    ));
+    extra.push((
+        "io_workload",
+        format!("libsvm n={n} d={d} ~5% dense, sparse storage, {n_workers} shards"),
+    ));
+
+    b.finish("bench_io");
+    if let Err(e) = b.write_json(Path::new("BENCH_io.json"), "bench_io", &extra) {
+        eprintln!("(could not write BENCH_io.json: {e})");
+    }
+}

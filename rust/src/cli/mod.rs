@@ -4,6 +4,7 @@
 //! qmsvrg train [--algorithm qm-svrg-a+] [--dataset power|mnist|<file>] ...
 //! qmsvrg experiment fig2|fig3|fig4|table1 [--bits N] [--samples N] [--out DIR]
 //! qmsvrg worker --connect HOST:PORT ...     (TCP worker for distributed runs)
+//! qmsvrg pack --dataset <file> [--out F.qmd] (freeze a parsed dataset)
 //! qmsvrg info                               (artifact + geometry report)
 //! ```
 
@@ -100,8 +101,8 @@ qmsvrg — communication-efficient variance-reduced SGD (QM-SVRG)
 
 USAGE:
   qmsvrg train       [--config FILE.toml] [--algorithm A]
-                     [--dataset power|mnist|PATH] [--samples N]
-                     [--format auto|dense|sparse]
+                     [--dataset power|mnist|PATH|PATH.qmd] [--samples N]
+                     [--format auto|dense|sparse] [--mmap]
                      [--workers N] [--epoch-len T] [--iters K] [--step A]
                      [--bits B] [--lambda L] [--seed S]
                      [--compressor urq|diana|wangni|vbsparse|qsd]
@@ -114,11 +115,14 @@ USAGE:
   qmsvrg worker      --connect HOST:PORT --shard IDX --workers N
                      [--dataset D] [--samples N] [--seed S] [--lambda L]
                      [--format auto|dense|sparse]
+                     [--shard-rows auto|A..B] [--mmap]
                      [--bits B] [--adaptive]
                      [--compressor urq|diana|wangni|vbsparse|qsd]
                      [--bit-alloc uniform|nonuniform]
                      [--plus true|false] [--step A] [--epoch-len T]
                      [--slack S] [--fixed-radius R]
+  qmsvrg pack        --dataset PATH|power|mnist [--samples N] [--seed S]
+                     [--format auto|dense|sparse] [--out FILE.qmd]
   qmsvrg info        [--artifacts DIR]
   qmsvrg help
 
@@ -147,9 +151,16 @@ Modes:      sync (default) runs the lockstep schedule — every worker every
             reproduces the sync run bit-for-bit.
 Data:       master and workers must resolve IDENTICAL training data — the
             Config handshake carries the full fingerprint (n, d, lambda,
-            storage, content hash of the standardized features), so a
-            --dataset/--samples/--seed/--lambda/--format disagreement is
-            refused at connect with a field-specific error.
+            storage, content hash of the standardized features) plus one
+            chunk hash per shard, so a --dataset/--samples/--seed/--lambda/
+            --format disagreement is refused at connect with a
+            field-specific error. A worker started with --shard-rows
+            streams ONLY its row range from the file (O(rows) memory) and
+            proves the slice against the master's chunk hash instead — a
+            wrong range or corrupted slice is refused naming the offending
+            rows. `qmsvrg pack` freezes a parsed+standardized dataset as a
+            flat .qmd that loads with no text parse; --mmap maps its arrays
+            in place so datasets larger than RAM open in O(1) heap.
 ";
 
 #[cfg(test)]

@@ -166,7 +166,9 @@ impl<D: Duplex> AsyncCluster<D> {
     ) -> Result<Self> {
         assert!(!links.is_empty(), "need at least one worker");
         let d = fp.d as usize;
-        let config = protocol::config_message(None, &fp);
+        // the elastic driver doesn't assign row ranges (workers may rejoin
+        // on any slot), so no shard claims: empty chunk hashes
+        let config = protocol::config_message(None, &fp, &[]);
         let mut cluster = Self {
             slots: links
                 .into_iter()

@@ -56,20 +56,25 @@ impl<D: Duplex> MessageCluster<D> {
     /// `root` is the run's root rng (the same one the workers derived their
     /// streams from); `fp` is the master's resolved-data fingerprint
     /// ([`crate::data::Dataset::fingerprint`] over the data this run trains
-    /// on, plus λ). Broadcasts the [`Message::Config`] handshake on every
-    /// link before returning: workers refuse a protocol-version,
-    /// quantization-config, or data-fingerprint mismatch instead of silently
-    /// mis-decoding (or training on different data).
+    /// on, plus λ); `chunk_hashes` the per-shard content hashes
+    /// ([`crate::data::Dataset::chunk_hashes`] of the training split, one
+    /// per worker — empty to skip shard assignment). Broadcasts the
+    /// [`Message::Config`] handshake on every link before returning:
+    /// workers refuse a protocol-version, quantization-config, or
+    /// data-fingerprint mismatch — and a `--shard-rows` worker whose slice
+    /// doesn't match its assigned range — instead of silently mis-decoding
+    /// (or training on different data).
     pub fn new(
         links: Vec<D>,
         quant: Option<QuantOpts>,
         fp: DataFingerprint,
+        chunk_hashes: Vec<u64>,
         root: &Xoshiro256pp,
     ) -> Result<Self> {
         assert!(!links.is_empty(), "need at least one worker");
         let n = links.len();
         let d = fp.d as usize;
-        let config = protocol::config_message(quant.as_ref(), &fp);
+        let config = protocol::config_message(quant.as_ref(), &fp, &chunk_hashes);
         let mut cluster = Self {
             links,
             d,
@@ -148,6 +153,7 @@ impl MessageCluster<TcpDuplex> {
         n_workers: usize,
         quant: Option<QuantOpts>,
         fp: DataFingerprint,
+        chunk_hashes: Vec<u64>,
         root: &Xoshiro256pp,
     ) -> Result<Self> {
         let mut links = Vec::with_capacity(n_workers);
@@ -155,7 +161,7 @@ impl MessageCluster<TcpDuplex> {
             let (stream, _) = listener.accept().context("accept")?;
             links.push(TcpDuplex::new(stream)?);
         }
-        Self::new(links, quant, fp, root)
+        Self::new(links, quant, fp, chunk_hashes, root)
     }
 }
 

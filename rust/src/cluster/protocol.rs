@@ -26,12 +26,19 @@ use crate::linalg::SparseVec;
 use crate::transport::{Duplex, FrameRef, Message, PROTO_VERSION};
 
 /// Build the `Config` handshake for a run: protocol version, quantization
-/// identity (0s = unquantized) and the resolved data fingerprint. Every
-/// master sends exactly this as a link's first message — at connect for the
-/// initial fleet, and again at re-admission when a worker rejoins mid-run
-/// (the fingerprint check is what makes churn *safe*: a rejoiner with
-/// different data is refused, not averaged in).
-pub fn config_message(quant: Option<&QuantOpts>, fp: &DataFingerprint) -> Message {
+/// identity (0s = unquantized), the resolved data fingerprint, and the
+/// per-shard `chunk_hashes` of the training split (empty when the driver
+/// doesn't assign row ranges — a `--shard-rows` worker then refuses to
+/// connect rather than skip verification). Every master sends exactly this
+/// as a link's first message — at connect for the initial fleet, and again
+/// at re-admission when a worker rejoins mid-run (the fingerprint check is
+/// what makes churn *safe*: a rejoiner with different data is refused, not
+/// averaged in).
+pub fn config_message(
+    quant: Option<&QuantOpts>,
+    fp: &DataFingerprint,
+    chunk_hashes: &[u64],
+) -> Message {
     Message::Config {
         version: PROTO_VERSION,
         compressor: quant.map_or(0, |q| q.compressor.wire_id()),
@@ -44,6 +51,7 @@ pub fn config_message(quant: Option<&QuantOpts>, fp: &DataFingerprint) -> Messag
         lambda_bits: fp.lambda_bits,
         data_hash: fp.content_hash,
         policy_fp: quant.map_or(0, |q| q.policy.fingerprint()),
+        chunk_hashes: chunk_hashes.to_vec(),
     }
 }
 
@@ -278,8 +286,8 @@ mod tests {
             lambda_bits: 0.1f64.to_bits(),
             content_hash: 0xABCD,
         };
-        // unquantized: all quant fields zero
-        match config_message(None, &fp) {
+        // unquantized: all quant fields zero; shard hashes pass through
+        match config_message(None, &fp, &[0x11, 0x22]) {
             Message::Config {
                 version,
                 compressor,
@@ -292,12 +300,14 @@ mod tests {
                 lambda_bits,
                 data_hash,
                 policy_fp,
+                chunk_hashes,
             } => {
                 assert_eq!(version, PROTO_VERSION);
                 assert_eq!((compressor, bits, plus, bit_alloc, policy_fp), (0, 0, 0, 0, 0));
                 assert_eq!((sparse, n, d), (0, 100, 9));
                 assert_eq!(lambda_bits, 0.1f64.to_bits());
                 assert_eq!(data_hash, 0xABCD);
+                assert_eq!(chunk_hashes, vec![0x11, 0x22]);
             }
             other => panic!("unexpected {other:?}"),
         }

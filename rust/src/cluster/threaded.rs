@@ -61,6 +61,7 @@ impl ThreadedCluster {
         // thing that catches a --seed/--samples drift. Cost is one pass
         // over data that standardize() already swept at load.
         let fp = train.fingerprint(lambda);
+        let chunk_hashes = train.chunk_hashes(n_workers);
         let shards = train.shard(n_workers);
         let mut links = Vec::with_capacity(n_workers);
         let mut handles = Vec::with_capacity(n_workers);
@@ -76,7 +77,7 @@ impl ThreadedCluster {
             }));
         }
         Ok(Self {
-            inner: MessageCluster::new(links, quant, fp, root)?,
+            inner: MessageCluster::new(links, quant, fp, chunk_hashes, root)?,
             handles,
         })
     }

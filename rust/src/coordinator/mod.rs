@@ -33,16 +33,19 @@ pub fn threaded(
 /// Accept `n_workers` TCP connections and build the master side of a
 /// multi-process deployment ([`MessageCluster::over_tcp`]); workers are
 /// separate `qmsvrg worker` processes. `fp` is the master's resolved-data
-/// fingerprint ([`Dataset::fingerprint`] of the training data + λ) —
-/// carried in the Config handshake so a worker whose
-/// `--dataset/--samples/--seed/--lambda/--format` resolved differently is
-/// refused at connect.
+/// fingerprint ([`Dataset::fingerprint`] of the training data + λ) and
+/// `chunk_hashes` the per-shard content hashes
+/// ([`Dataset::chunk_hashes`]) — carried in the Config handshake so a
+/// worker whose `--dataset/--samples/--seed/--lambda/--format` resolved
+/// differently, or whose `--shard-rows` slice isn't the range this master
+/// assigned it, is refused at connect.
 pub fn tcp(
     listener: &std::net::TcpListener,
     n_workers: usize,
     quant: Option<QuantOpts>,
     fp: DataFingerprint,
+    chunk_hashes: Vec<u64>,
     root: &Xoshiro256pp,
 ) -> Result<MessageCluster<TcpDuplex>> {
-    MessageCluster::over_tcp(listener, n_workers, quant, fp, root)
+    MessageCluster::over_tcp(listener, n_workers, quant, fp, chunk_hashes, root)
 }

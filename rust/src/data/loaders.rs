@@ -9,14 +9,25 @@
 //! `--format dense|sparse` / TOML `format`): rcv1/news20-class workloads are
 //! ~0.15% dense, and densifying them costs ~600× the memory and gradient
 //! flops the data warrants.
+//!
+//! **Streaming row-range loads** (`qmsvrg worker --shard-rows`): a worker
+//! that owns rows `[A, B)` of the master's training split never needs the
+//! full matrix. [`load_libsvm_shard`] / [`load_csv_shard`] index the file's
+//! row byte-offsets in one validating sweep, replay the master's shuffled
+//! split permutation ([`split_perm`]) over those offsets, accumulate the
+//! standardization statistics in the exact permutation order the full load
+//! would (f64 accumulation is order-sensitive — this is what makes the
+//! streamed shard *bit-identical* to `full_load().split().standardize()
+//! .shard()[w]`), and materialize only the `[A, B)` slice. Peak memory is
+//! O(B−A) rows + O(n) byte offsets instead of O(n) rows.
 
 use std::fs::File;
-use std::io::{BufRead, BufReader, Read};
+use std::io::{BufRead, BufReader, Read, Seek, SeekFrom};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::data::{Dataset, FeatureFormat};
+use crate::data::{shard_range, split_perm, Dataset, FeatureFormat};
 use crate::linalg::CsrMatrix;
 
 /// `FeatureFormat::Auto` densifies a loaded libsvm file above this density:
@@ -24,10 +35,55 @@ use crate::linalg::CsrMatrix;
 /// cost more than the dense flops they avoid (see EXPERIMENTS.md §Perf).
 pub const AUTO_DENSIFY_THRESHOLD: f64 = 0.25;
 
+/// Parse one CSV data line into `vals` (features only, label returned).
+/// Returns `Ok(None)` for blank lines and rows containing non-numeric
+/// fields (the UCI power data marks missing values with `?`). Tolerates
+/// CRLF line endings and stray field whitespace (each field is trimmed).
+fn parse_csv_line(
+    line: &str,
+    sep: char,
+    label_col: usize,
+    lineno: usize,
+    vals: &mut Vec<f64>,
+) -> Result<Option<f64>> {
+    if line.trim().is_empty() {
+        return Ok(None);
+    }
+    let fields: Vec<&str> = line.split(sep).collect();
+    if label_col >= fields.len() {
+        bail!("line {}: label col {} out of range", lineno + 1, label_col);
+    }
+    vals.clear();
+    let mut label = 0.0;
+    for (j, s) in fields.iter().enumerate() {
+        let Ok(v) = s.trim().parse::<f64>() else {
+            return Ok(None); // missing-value row
+        };
+        if j == label_col {
+            label = v;
+        } else {
+            vals.push(v);
+        }
+    }
+    Ok(Some(label))
+}
+
+/// Enforce a consistent CSV feature count across rows, with the offending
+/// line named.
+fn check_csv_dim(d: &mut Option<usize>, dim: usize, lineno: usize) -> Result<()> {
+    match *d {
+        None => *d = Some(dim),
+        Some(dd) if dd != dim => {
+            bail!("line {}: {} features, expected {}", lineno + 1, dim, dd)
+        }
+        _ => {}
+    }
+    Ok(())
+}
+
 /// Load a numeric CSV: one sample per line, label in `label_col`, every other
 /// column a feature. `skip_header` drops the first line. Rows containing
-/// non-numeric fields (the UCI power data marks missing values with `?`) are
-/// skipped.
+/// non-numeric fields are skipped.
 pub fn load_csv(
     path: &Path,
     sep: char,
@@ -39,40 +95,78 @@ pub fn load_csv(
     let mut x = Vec::new();
     let mut y = Vec::new();
     let mut d = None;
+    let mut vals = Vec::new();
     for (lineno, line) in reader.lines().enumerate() {
         let line = line?;
         if skip_header && lineno == 0 {
             continue;
         }
-        if line.trim().is_empty() {
+        let Some(label) = parse_csv_line(&line, sep, label_col, lineno, &mut vals)? else {
             continue;
-        }
-        let fields: Vec<&str> = line.split(sep).collect();
-        if label_col >= fields.len() {
-            bail!("line {}: label col {} out of range", lineno + 1, label_col);
-        }
-        let parsed: Option<Vec<f64>> = fields.iter().map(|s| s.trim().parse().ok()).collect();
-        let Some(vals) = parsed else {
-            continue; // missing-value row
         };
-        let dim = vals.len() - 1;
-        match d {
-            None => d = Some(dim),
-            Some(dd) if dd != dim => {
-                bail!("line {}: {} features, expected {}", lineno + 1, dim, dd)
-            }
-            _ => {}
-        }
-        y.push(vals[label_col]);
-        for (j, v) in vals.into_iter().enumerate() {
-            if j != label_col {
-                x.push(v);
-            }
-        }
+        check_csv_dim(&mut d, vals.len(), lineno)?;
+        y.push(label);
+        x.extend_from_slice(&vals);
     }
     let d = d.context("empty csv")?;
     let n = y.len();
     Dataset::new(x, y, n, d)
+}
+
+/// Parse one libsvm line into `row` as sorted 0-based `(index, value)`
+/// pairs, returning the label. `Ok(None)` for blank and comment-only lines.
+/// Tolerates CRLF endings and trailing whitespace (the line is trimmed
+/// after comment stripping); rejects non-finite labels, 0-based indices,
+/// indices beyond u32, and duplicate indices — each with the line named.
+fn parse_libsvm_line(
+    raw: &str,
+    lineno: usize,
+    row: &mut Vec<(u32, f64)>,
+) -> Result<Option<f64>> {
+    let line = raw.split('#').next().unwrap_or("").trim();
+    if line.is_empty() {
+        return Ok(None);
+    }
+    let mut it = line.split_whitespace();
+    let label: f64 = it
+        .next()
+        .context("missing label")?
+        .parse()
+        .with_context(|| format!("line {}: bad label", lineno + 1))?;
+    if !label.is_finite() {
+        bail!(
+            "line {}: label {} out of range (labels must be finite)",
+            lineno + 1,
+            label
+        );
+    }
+    row.clear();
+    for tok in it {
+        let (i, v) = tok
+            .split_once(':')
+            .with_context(|| format!("line {}: bad pair {tok:?}", lineno + 1))?;
+        let i: usize = i.parse().with_context(|| format!("line {}: bad index", lineno + 1))?;
+        if i == 0 {
+            bail!("line {}: libsvm indices are 1-based", lineno + 1);
+        }
+        if i > u32::MAX as usize {
+            bail!("line {}: feature index {i} exceeds u32 range", lineno + 1);
+        }
+        let v: f64 = v.parse().with_context(|| format!("line {}: bad value", lineno + 1))?;
+        row.push(((i - 1) as u32, v));
+    }
+    row.sort_unstable_by_key(|&(j, _)| j);
+    for pair in row.windows(2) {
+        if pair[0].0 == pair[1].0 {
+            bail!(
+                "line {}: duplicate feature index {} (libsvm rows must name \
+                 each feature at most once)",
+                lineno + 1,
+                pair[0].0 + 1
+            );
+        }
+    }
+    Ok(Some(label))
 }
 
 /// Load libsvm/svmlight format: `label idx:val idx:val ...` (1-based
@@ -107,42 +201,11 @@ pub fn load_libsvm_format(
     let mut max_idx = 0usize;
     for (lineno, line) in reader.lines().enumerate() {
         let line = line?;
-        let line = line.split('#').next().unwrap_or("").trim();
-        if line.is_empty() {
+        let Some(label) = parse_libsvm_line(&line, lineno, &mut row)? else {
             continue;
-        }
-        let mut it = line.split_whitespace();
-        let label: f64 = it
-            .next()
-            .context("missing label")?
-            .parse()
-            .with_context(|| format!("line {}: bad label", lineno + 1))?;
-        row.clear();
-        for tok in it {
-            let (i, v) = tok
-                .split_once(':')
-                .with_context(|| format!("line {}: bad pair {tok:?}", lineno + 1))?;
-            let i: usize = i.parse().with_context(|| format!("line {}: bad index", lineno + 1))?;
-            if i == 0 {
-                bail!("line {}: libsvm indices are 1-based", lineno + 1);
-            }
-            if i > u32::MAX as usize {
-                bail!("line {}: feature index {i} exceeds u32 range", lineno + 1);
-            }
-            let v: f64 = v.parse().with_context(|| format!("line {}: bad value", lineno + 1))?;
-            max_idx = max_idx.max(i);
-            row.push(((i - 1) as u32, v));
-        }
-        row.sort_unstable_by_key(|&(j, _)| j);
-        for pair in row.windows(2) {
-            if pair[0].0 == pair[1].0 {
-                bail!(
-                    "line {}: duplicate feature index {} (libsvm rows must name \
-                     each feature at most once)",
-                    lineno + 1,
-                    pair[0].0 + 1
-                );
-            }
+        };
+        if let Some(&(j, _)) = row.last() {
+            max_idx = max_idx.max(j as usize + 1);
         }
         y.push(label);
         for &(j, v) in &row {
@@ -170,6 +233,440 @@ pub fn load_libsvm_format(
             }
         }
     })
+}
+
+// ---------------------------------------------------------------------------
+// Streaming row-range loads (the out-of-core data path)
+// ---------------------------------------------------------------------------
+
+/// Byte span of one valid data row in its source file, with the 0-based
+/// source line for error messages on later passes.
+#[derive(Clone, Copy)]
+struct RowSpan {
+    off: u64,
+    len: u32,
+    lineno: u32,
+}
+
+/// Seek-and-read access to indexed rows on the later streaming passes.
+struct RowReader {
+    file: File,
+    buf: Vec<u8>,
+}
+
+impl RowReader {
+    fn open(path: &Path) -> Result<Self> {
+        Ok(Self {
+            file: File::open(path).with_context(|| format!("reopen {}", path.display()))?,
+            buf: Vec::new(),
+        })
+    }
+
+    fn read(&mut self, span: RowSpan) -> Result<&str> {
+        self.file.seek(SeekFrom::Start(span.off))?;
+        self.buf.resize(span.len as usize, 0);
+        self.file
+            .read_exact(&mut self.buf)
+            .with_context(|| format!("line {}: row vanished mid-load", span.lineno + 1))?;
+        std::str::from_utf8(&self.buf)
+            .with_context(|| format!("line {}: invalid utf-8", span.lineno + 1))
+    }
+}
+
+/// The row-level format a streaming pass parses. `read_row` fills `row`
+/// with sorted `(column, value)` entries — for CSV, *all* `d` columns
+/// (dense rows), mirroring the full loader's storage before any
+/// sparsification.
+enum Source {
+    Libsvm,
+    Csv {
+        sep: char,
+        label_col: usize,
+        vals: Vec<f64>,
+    },
+}
+
+impl Source {
+    fn read_row(
+        &mut self,
+        rdr: &mut RowReader,
+        span: RowSpan,
+        row: &mut Vec<(u32, f64)>,
+    ) -> Result<f64> {
+        let lineno = span.lineno as usize;
+        match self {
+            Source::Libsvm => {
+                let line = rdr.read(span)?;
+                parse_libsvm_line(line, lineno, row)?
+                    .with_context(|| format!("line {}: row vanished mid-load", lineno + 1))
+            }
+            Source::Csv {
+                sep,
+                label_col,
+                vals,
+            } => {
+                let line = rdr.read(span)?;
+                let label = parse_csv_line(line, *sep, *label_col, lineno, vals)?
+                    .with_context(|| format!("line {}: row vanished mid-load", lineno + 1))?;
+                row.clear();
+                for (j, &v) in vals.iter().enumerate() {
+                    row.push((j as u32, v));
+                }
+                Ok(label)
+            }
+        }
+    }
+
+    /// Whether CSR output keeps this stored value. libsvm keeps every
+    /// parsed pair (explicit zeros included — that is what the full loader
+    /// stores); CSV reaches CSR via `to_csr()`, which drops exact zeros.
+    fn csr_keeps(&self, v: f64) -> bool {
+        match self {
+            Source::Libsvm => true,
+            Source::Csv { .. } => v != 0.0,
+        }
+    }
+}
+
+/// A worker's row-range slice of a master run's training split, streamed
+/// straight from disk: the full matrix is never materialized.
+pub struct StreamedShard {
+    /// Rows `rows.0..rows.1` of the master's shuffled, standardized
+    /// training split — bit-identical to
+    /// `full_load().split().standardize().shard()[w]` for a canonical range.
+    pub shard: Dataset,
+    /// `[start, end)` in the master's train-row ordering.
+    pub rows: (usize, usize),
+    /// Global train-row count (what the master's Config `n` will carry).
+    pub n_train: usize,
+    /// Per-column standardization means over the full training split
+    /// (all-zero for CSR output: scale-only).
+    pub mean: Vec<f64>,
+    /// Per-column standardization scales over the full training split.
+    pub std: Vec<f64>,
+    /// Per-canonical-shard `Σ z²` of the standardized margins, `n_workers`
+    /// entries (labels are ±1, so `(y·v)² ≡ v²` bit-for-bit and the fold
+    /// matches each shard's `LogisticRidge` reduction exactly).
+    pub shard_sum_sq: Vec<f64>,
+    /// Canonical shard sizes (rows per worker under [`shard_range`]).
+    pub shard_sizes: Vec<usize>,
+}
+
+impl StreamedShard {
+    /// The master-side problem geometry recomputed from the streamed
+    /// stats: `(μ, L)` at ridge coefficient `lambda`, bit-identical to
+    /// `ShardedObjective::new(&full_train, n_workers, λ)`'s pair — each
+    /// shard bounds the mixture by `Σz²/(4 nₛ) + 2λ` and the worst shard
+    /// wins, exactly the fold the in-memory constructor runs.
+    pub fn geometry(&self, lambda: f64) -> (f64, f64) {
+        let l = self
+            .shard_sum_sq
+            .iter()
+            .zip(&self.shard_sizes)
+            .map(|(&ssq, &ns)| ssq / (4.0 * ns as f64) + 2.0 * lambda)
+            .fold(0.0f64, f64::max);
+        (2.0 * lambda, l)
+    }
+}
+
+/// Streamed counterpart of `load_libsvm_format(..).split(train_frac,
+/// split_seed)` + `standardize()` + `shard(n_workers)[shard_index]`,
+/// touching only O(rows) feature memory. `rows: None` resolves the
+/// canonical [`shard_range`] for `shard_index`; `Some((a, b))` loads an
+/// explicit range (the master's handshake will refuse a non-canonical one).
+pub fn load_libsvm_shard(
+    path: &Path,
+    dim: Option<usize>,
+    format: FeatureFormat,
+    train_frac: f64,
+    split_seed: u64,
+    n_workers: usize,
+    shard_index: usize,
+    rows: Option<(usize, usize)>,
+) -> Result<StreamedShard> {
+    // pass 1: validate every line, index row byte spans, size the problem
+    let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut reader = BufReader::new(f);
+    let mut line = String::new();
+    let mut row: Vec<(u32, f64)> = Vec::new();
+    let mut spans = Vec::new();
+    let mut off = 0u64;
+    let mut lineno = 0usize;
+    let (mut max_idx, mut nnz) = (0usize, 0usize);
+    loop {
+        line.clear();
+        let nb = reader.read_line(&mut line)?;
+        if nb == 0 {
+            break;
+        }
+        if parse_libsvm_line(&line, lineno, &mut row)?.is_some() {
+            spans.push(RowSpan {
+                off,
+                len: nb as u32,
+                lineno: lineno as u32,
+            });
+            if let Some(&(j, _)) = row.last() {
+                max_idx = max_idx.max(j as usize + 1);
+            }
+            nnz += row.len();
+        }
+        off += nb as u64;
+        lineno += 1;
+    }
+    if spans.is_empty() {
+        bail!("empty libsvm file {}", path.display());
+    }
+    let d = dim.unwrap_or(max_idx);
+    if d < max_idx {
+        bail!("declared dim {} < max feature index {}", d, max_idx);
+    }
+    // the full loader decides storage from the WHOLE file's density,
+    // before splitting — replicate that decision from the pass-1 counts
+    let density = nnz as f64 / (spans.len() as f64 * d as f64);
+    let dense_out = match format {
+        FeatureFormat::Dense => true,
+        FeatureFormat::Sparse => false,
+        FeatureFormat::Auto => density > AUTO_DENSIFY_THRESHOLD,
+    };
+    stream_shard(
+        path,
+        Source::Libsvm,
+        spans,
+        d,
+        dense_out,
+        train_frac,
+        split_seed,
+        n_workers,
+        shard_index,
+        rows,
+    )
+}
+
+/// Streamed counterpart of `load_csv(..).with_format(format)
+/// .split(train_frac, split_seed)` + `standardize()` +
+/// `shard(n_workers)[shard_index]` (see [`load_libsvm_shard`]).
+#[allow(clippy::too_many_arguments)]
+pub fn load_csv_shard(
+    path: &Path,
+    sep: char,
+    label_col: usize,
+    skip_header: bool,
+    format: FeatureFormat,
+    train_frac: f64,
+    split_seed: u64,
+    n_workers: usize,
+    shard_index: usize,
+    rows: Option<(usize, usize)>,
+) -> Result<StreamedShard> {
+    let f = File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut reader = BufReader::new(f);
+    let mut line = String::new();
+    let mut vals = Vec::new();
+    let mut spans = Vec::new();
+    let mut off = 0u64;
+    let mut lineno = 0usize;
+    let mut d = None;
+    loop {
+        line.clear();
+        let nb = reader.read_line(&mut line)?;
+        if nb == 0 {
+            break;
+        }
+        let header = skip_header && lineno == 0;
+        if !header && parse_csv_line(&line, sep, label_col, lineno, &mut vals)?.is_some() {
+            check_csv_dim(&mut d, vals.len(), lineno)?;
+            spans.push(RowSpan {
+                off,
+                len: nb as u32,
+                lineno: lineno as u32,
+            });
+        }
+        off += nb as u64;
+        lineno += 1;
+    }
+    let d = d.context("empty csv")?;
+    let dense_out = format != FeatureFormat::Sparse; // CSV is dense unless forced
+    stream_shard(
+        path,
+        Source::Csv {
+            sep,
+            label_col,
+            vals,
+        },
+        spans,
+        d,
+        dense_out,
+        train_frac,
+        split_seed,
+        n_workers,
+        shard_index,
+        rows,
+    )
+}
+
+/// The shared streaming engine: replay the split permutation over the
+/// indexed spans, accumulate column stats in the full load's exact float
+/// order, then build the `[start, end)` slice + per-shard geometry in one
+/// final sweep.
+#[allow(clippy::too_many_arguments)]
+fn stream_shard(
+    path: &Path,
+    mut src: Source,
+    spans: Vec<RowSpan>,
+    d: usize,
+    dense_out: bool,
+    train_frac: f64,
+    split_seed: u64,
+    n_workers: usize,
+    shard_index: usize,
+    rows: Option<(usize, usize)>,
+) -> Result<StreamedShard> {
+    let (perm, n_train) = split_perm(spans.len(), train_frac, split_seed);
+    if n_train == 0 {
+        bail!("training split of {} is empty", path.display());
+    }
+    if n_workers == 0 || n_workers > n_train {
+        bail!("cannot shard {n_train} training rows across {n_workers} workers");
+    }
+    if shard_index >= n_workers {
+        bail!("--shard {shard_index} out of range for {n_workers} workers");
+    }
+    let (start, end) = match rows {
+        Some((a, b)) => {
+            if a >= b || b > n_train {
+                bail!(
+                    "--shard-rows {a}..{b} is not a valid row range of the \
+                     {n_train}-row training split"
+                );
+            }
+            (a, b)
+        }
+        None => shard_range(n_train, n_workers, shard_index),
+    };
+    let train = &perm[..n_train];
+    let mut rdr = RowReader::open(path)?;
+    let mut row: Vec<(u32, f64)> = Vec::new();
+    let mut buf = vec![0.0; d]; // dense scatter buffer
+
+    // column stats, in the exact accumulation order of
+    // Dataset::standardize on the assembled training split
+    let mut mean = vec![0.0; d];
+    let mut std = vec![0.0; d];
+    if dense_out {
+        // dense = center + scale: a mean pass, then a centered-variance pass
+        for &fid in train {
+            src.read_row(&mut rdr, spans[fid], &mut row)?;
+            scatter(&row, &mut buf);
+            for j in 0..d {
+                mean[j] += buf[j];
+            }
+        }
+        for m in mean.iter_mut() {
+            *m /= n_train as f64;
+        }
+        for &fid in train {
+            src.read_row(&mut rdr, spans[fid], &mut row)?;
+            scatter(&row, &mut buf);
+            for j in 0..d {
+                let c = buf[j] - mean[j];
+                std[j] += c * c;
+            }
+        }
+    } else {
+        // CSR = scale-only: second moments over stored entries
+        for &fid in train {
+            src.read_row(&mut rdr, spans[fid], &mut row)?;
+            for &(j, v) in &row {
+                if src.csr_keeps(v) {
+                    std[j as usize] += v * v;
+                }
+            }
+        }
+    }
+    for s in std.iter_mut() {
+        *s = (*s / n_train as f64).sqrt();
+        if *s < 1e-12 {
+            *s = 1.0; // constant/empty column — matches Dataset::standardize
+        }
+    }
+
+    // build + geometry pass: every train row contributes its shard's Σz²;
+    // rows inside [start, end) are also materialized
+    let bounds: Vec<(usize, usize)> = (0..n_workers)
+        .map(|w| shard_range(n_train, n_workers, w))
+        .collect();
+    let ns = end - start;
+    let mut y = Vec::with_capacity(ns);
+    let mut x = Vec::new();
+    let (mut indptr, mut indices, mut values) = (vec![0usize], Vec::new(), Vec::new());
+    if dense_out {
+        x.reserve(ns * d);
+    }
+    let mut shard_sum_sq = vec![0.0; n_workers];
+    let mut w_cur = 0usize;
+    for (p, &fid) in train.iter().enumerate() {
+        while p >= bounds[w_cur].1 {
+            w_cur += 1;
+        }
+        let label = src.read_row(&mut rdr, spans[fid], &mut row)?;
+        let keep = p >= start && p < end;
+        let ssq = &mut shard_sum_sq[w_cur];
+        if dense_out {
+            scatter(&row, &mut buf);
+            for j in 0..d {
+                let v = (buf[j] - mean[j]) / std[j];
+                *ssq += v * v;
+                if keep {
+                    x.push(v);
+                }
+            }
+        } else {
+            for &(j, v) in &row {
+                if !src.csr_keeps(v) {
+                    continue;
+                }
+                let v = v / std[j as usize];
+                *ssq += v * v;
+                if keep {
+                    indices.push(j);
+                    values.push(v);
+                }
+            }
+            if keep {
+                indptr.push(indices.len());
+            }
+        }
+        if keep {
+            y.push(label);
+        }
+    }
+    let shard = if dense_out {
+        Dataset::new(x, y, ns, d)?
+    } else {
+        Dataset::from_csr(CsrMatrix::new(indptr, indices, values, d)?, y)?
+    };
+    if !dense_out {
+        mean = vec![0.0; d]; // scale-only standardization reports zero means
+    }
+    Ok(StreamedShard {
+        shard,
+        rows: (start, end),
+        n_train,
+        mean,
+        std,
+        shard_sum_sq,
+        shard_sizes: bounds.iter().map(|&(a, b)| b - a).collect(),
+    })
+}
+
+/// Scatter sorted sparse entries into a zeroed dense row buffer.
+fn scatter(row: &[(u32, f64)], buf: &mut [f64]) {
+    for v in buf.iter_mut() {
+        *v = 0.0;
+    }
+    for &(j, v) in row {
+        buf[j as usize] = v;
+    }
 }
 
 /// Load an MNIST IDX image/label pair (the standard `train-images-idx3-ubyte`
@@ -265,6 +762,27 @@ mod tests {
     }
 
     #[test]
+    fn csv_tolerates_crlf_line_endings() {
+        let p = tmpfile("crlf.csv", b"h1,h2,h3\r\n1.0,2.0,1\r\n3.0,4.0,-1\r\n");
+        let ds = load_csv(&p, ',', 2, true).unwrap();
+        assert_eq!((ds.n, ds.d), (2, 2));
+        assert_eq!(ds.row(1), &[3.0, 4.0]);
+        assert_eq!(ds.y, vec![1.0, -1.0]);
+    }
+
+    #[test]
+    fn csv_rejects_inconsistent_column_count_naming_the_line() {
+        // the same strictness the libsvm path applies to duplicate indices:
+        // a structurally-wrong row is refused with its line named, never
+        // silently reshaped
+        let p = tmpfile("ragged.csv", b"1.0,2.0,1\n3.0,4.0,-1\n5.0,6.0,7.0,1\n");
+        let err = load_csv(&p, ',', 2, false).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 3"), "{msg}");
+        assert!(msg.contains("features, expected"), "{msg}");
+    }
+
+    #[test]
     fn libsvm_sparse() {
         // density 3/6 = 0.5 > threshold: Auto densifies this tiny file, so
         // the dense row accessor keeps working exactly as before
@@ -312,6 +830,26 @@ mod tests {
     }
 
     #[test]
+    fn libsvm_tolerates_crlf_and_trailing_whitespace() {
+        let p = tmpfile("crlf.svm", b"+1 1:0.5 3:2.0 \r\n-1 2:1.5\t\r\n");
+        let ds = load_libsvm(&p, None).unwrap();
+        assert_eq!((ds.n, ds.d), (2, 3));
+        assert_eq!(ds.y, vec![1.0, -1.0]);
+        assert_eq!(ds.to_dense().row(0), &[0.5, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn libsvm_rejects_non_finite_label_naming_the_line() {
+        let p = tmpfile("naninf.svm", b"+1 1:0.5\ninf 2:1.0\n");
+        let err = load_libsvm(&p, None).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 2"), "{msg}");
+        assert!(msg.contains("out of range"), "{msg}");
+        let p2 = tmpfile("nan.svm", b"NaN 1:0.5\n");
+        assert!(load_libsvm(&p2, None).is_err());
+    }
+
+    #[test]
     fn libsvm_rejects_duplicate_indices() {
         // regression: the dense loader silently kept the last value of a
         // duplicated index (last-write-wins), hiding corrupt files
@@ -332,6 +870,161 @@ mod tests {
     fn libsvm_rejects_empty_file() {
         let p = tmpfile("empty.svm", b"# nothing but comments\n\n");
         assert!(load_libsvm(&p, None).is_err());
+    }
+
+    /// Deterministic random libsvm text: n rows, d columns, ~`density`
+    /// stored entries (1-based indices, column-sorted).
+    fn write_libsvm(name: &str, n: usize, d: usize, density: f64, seed: u64) -> std::path::PathBuf {
+        let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(seed);
+        let mut s = String::new();
+        for _ in 0..n {
+            s.push_str(if rng.gen_uniform(0.0, 1.0) < 0.5 { "-1" } else { "+1" });
+            for j in 0..d {
+                if rng.gen_uniform(0.0, 1.0) < density {
+                    s.push_str(&format!(" {}:{:.6}", j + 1, rng.gen_uniform(-2.0, 2.0)));
+                }
+            }
+            s.push('\n');
+        }
+        tmpfile(name, s.as_bytes())
+    }
+
+    /// Full-pipeline baseline: load + split + standardize, returning the
+    /// training split and its transform.
+    fn full_train(
+        p: &Path,
+        format: FeatureFormat,
+        seed: u64,
+    ) -> (Dataset, Vec<f64>, Vec<f64>) {
+        let ds = load_libsvm_format(p, None, format).unwrap();
+        let (mut tr, _te) = ds.split(0.8, seed);
+        let (mean, std) = tr.standardize();
+        (tr, mean, std)
+    }
+
+    fn assert_shard_bitwise(s: &StreamedShard, want: &Dataset) {
+        assert_eq!(s.shard.n, want.n);
+        assert_eq!(s.shard.d, want.d);
+        assert_eq!(
+            s.shard.y.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            want.y.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        // fingerprints hash every feature bit + the storage layout
+        assert_eq!(s.shard.fingerprint(0.1), want.fingerprint(0.1));
+        assert_eq!(s.shard.chunk_hash(), want.chunk_hash());
+    }
+
+    #[test]
+    fn streamed_libsvm_shard_is_bitwise_the_full_load_shard() {
+        for (format, name) in [
+            (FeatureFormat::Sparse, "stream_sp.svm"),
+            (FeatureFormat::Dense, "stream_dn.svm"),
+        ] {
+            let p = write_libsvm(name, 40, 7, 0.35, 99);
+            let (tr, mean, std) = full_train(&p, format, 42);
+            let sharded =
+                crate::algorithms::ShardedObjective::new(&tr, 3, 0.1);
+            for w in 0..3 {
+                let s = load_libsvm_shard(&p, None, format, 0.8, 42, 3, w, None).unwrap();
+                assert_eq!(s.n_train, tr.n);
+                assert_eq!(s.rows, shard_range(tr.n, 3, w));
+                assert_shard_bitwise(&s, &tr.shard(3)[w]);
+                // standardization stats replayed in the exact float order
+                let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&s.mean), bits(&mean));
+                assert_eq!(bits(&s.std), bits(&std));
+                // geometry: the policy constants the worker derives match
+                // the master's ShardedObjective bit-for-bit
+                let (mu, l) = s.geometry(0.1);
+                assert_eq!(mu.to_bits(), sharded.mu().to_bits());
+                assert_eq!(l.to_bits(), sharded.l_smooth().to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_auto_format_replays_the_density_decision() {
+        // dense-ish file: Auto densifies in both paths
+        let p = write_libsvm("stream_auto.svm", 30, 5, 0.6, 7);
+        let (tr, ..) = full_train(&p, FeatureFormat::Auto, 11);
+        assert!(!tr.is_sparse());
+        let s = load_libsvm_shard(&p, None, FeatureFormat::Auto, 0.8, 11, 2, 0, None).unwrap();
+        assert!(!s.shard.is_sparse());
+        assert_shard_bitwise(&s, &tr.shard(2)[0]);
+        // sparse file: Auto keeps CSR in both paths
+        let p = write_libsvm("stream_auto2.svm", 30, 24, 0.08, 8);
+        let (tr, ..) = full_train(&p, FeatureFormat::Auto, 11);
+        assert!(tr.is_sparse());
+        let s = load_libsvm_shard(&p, None, FeatureFormat::Auto, 0.8, 11, 2, 1, None).unwrap();
+        assert!(s.shard.is_sparse());
+        assert_shard_bitwise(&s, &tr.shard(2)[1]);
+    }
+
+    #[test]
+    fn streamed_explicit_rows_load_any_slice() {
+        let p = write_libsvm("stream_rows.svm", 25, 6, 0.4, 3);
+        let (tr, ..) = full_train(&p, FeatureFormat::Sparse, 5);
+        // a non-canonical slice: rows 3..9 of the training ordering
+        let s =
+            load_libsvm_shard(&p, None, FeatureFormat::Sparse, 0.8, 5, 2, 0, Some((3, 9))).unwrap();
+        assert_eq!(s.rows, (3, 9));
+        assert_eq!(s.shard.n, 6);
+        // bit-identical to slicing the full training split
+        let sliced = {
+            let crate::data::Features::Csr(m) = tr.feats() else { panic!() };
+            Dataset::from_csr(m.row_range(3, 9), tr.y[3..9].to_vec()).unwrap()
+        };
+        assert_eq!(s.shard.chunk_hash(), sliced.chunk_hash());
+    }
+
+    #[test]
+    fn streamed_csv_shard_is_bitwise_the_full_load_shard() {
+        // build a CSV twin of a small dense problem, label in column 0
+        let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(21);
+        let mut s = String::from("label,f1,f2,f3\n");
+        for _ in 0..30 {
+            let y = if rng.gen_uniform(0.0, 1.0) < 0.5 { -1.0 } else { 1.0 };
+            s.push_str(&format!(
+                "{y},{:.5},{:.5},{:.5}\n",
+                rng.gen_uniform(-3.0, 3.0),
+                rng.gen_uniform(-3.0, 3.0),
+                rng.gen_uniform(-3.0, 3.0)
+            ));
+        }
+        let p = tmpfile("stream.csv", s.as_bytes());
+        for format in [FeatureFormat::Auto, FeatureFormat::Sparse] {
+            let ds = load_csv(&p, ',', 0, true).unwrap().with_format(format);
+            let (mut tr, _te) = ds.split(0.8, 17);
+            let (mean, std) = tr.standardize();
+            for w in 0..2 {
+                let st = load_csv_shard(&p, ',', 0, true, format, 0.8, 17, 2, w, None).unwrap();
+                assert_shard_bitwise(&st, &tr.shard(2)[w]);
+                let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&st.mean), bits(&mean));
+                assert_eq!(bits(&st.std), bits(&std));
+            }
+        }
+    }
+
+    #[test]
+    fn streamed_rejects_bad_geometry_with_rows_named() {
+        let p = write_libsvm("stream_bad.svm", 20, 5, 0.4, 1);
+        // n_train = 16 here: out-of-range and empty ranges are refused
+        let err = load_libsvm_shard(&p, None, FeatureFormat::Sparse, 0.8, 5, 2, 0, Some((4, 99)))
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("4..99"), "{err:#}");
+        assert!(
+            load_libsvm_shard(&p, None, FeatureFormat::Sparse, 0.8, 5, 2, 0, Some((9, 9)))
+                .is_err()
+        );
+        // shard index beyond the worker count
+        assert!(
+            load_libsvm_shard(&p, None, FeatureFormat::Sparse, 0.8, 5, 2, 5, None).is_err()
+        );
+        // more workers than training rows
+        assert!(
+            load_libsvm_shard(&p, None, FeatureFormat::Sparse, 0.8, 5, 99, 0, None).is_err()
+        );
     }
 
     #[test]

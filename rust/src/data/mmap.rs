@@ -1,0 +1,213 @@
+//! A minimal, audited `mmap(2)` binding — the only `unsafe` outside
+//! `linalg/simd.rs` (CI pins the allowlist to exactly these two modules).
+//!
+//! No crate dependency: the two libc symbols we need are declared directly.
+//! The surface is deliberately tiny — read-only private mappings of whole
+//! files, plus bounds- and alignment-checked typed accessors — so the audit
+//! obligation stays a screenful:
+//!
+//! * the mapping is `PROT_READ | MAP_PRIVATE`: the kernel enforces that no
+//!   code path (safe or not) can write through it or affect the file;
+//! * `as_bytes`/`as_f64s`/`as_u32s` assert bounds and alignment before
+//!   every `from_raw_parts`, so a malformed `.qmd` layout panics with the
+//!   offending offset instead of reading out of the mapping;
+//! * `mmap` returns page-aligned addresses, so element alignment reduces to
+//!   the byte offset's alignment — which is what the accessors check;
+//! * the struct owns the mapping (`munmap` on drop) and hands out borrows
+//!   tied to its lifetime, so no view can outlive the mapping.
+//!
+//! `.qmd` files are little-endian on disk; [`MmapFile::open`] refuses to
+//! map on a big-endian target rather than silently mis-reading every word.
+
+use std::fs::File;
+use std::os::fd::AsRawFd;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+const PROT_READ: i32 = 1;
+const MAP_PRIVATE: i32 = 2;
+
+extern "C" {
+    fn mmap(
+        addr: *mut core::ffi::c_void,
+        len: usize,
+        prot: i32,
+        flags: i32,
+        fd: i32,
+        offset: i64,
+    ) -> *mut core::ffi::c_void;
+    fn munmap(addr: *mut core::ffi::c_void, len: usize) -> i32;
+}
+
+/// A read-only private memory mapping of an entire file.
+pub struct MmapFile {
+    ptr: *mut core::ffi::c_void,
+    len: usize,
+}
+
+// SAFETY: the mapping is immutable for its whole lifetime (PROT_READ |
+// MAP_PRIVATE) and the raw pointer is only ever read through the checked
+// accessors, so shared access across threads is data-race-free.
+unsafe impl Send for MmapFile {}
+unsafe impl Sync for MmapFile {}
+
+impl MmapFile {
+    /// Map `path` read-only. Fails on empty files (a zero-length `mmap` is
+    /// an error) and on big-endian targets (`.qmd` words are LE on disk).
+    pub fn open(path: &Path) -> Result<Self> {
+        if cfg!(target_endian = "big") {
+            bail!("mmap-backed .qmd files are little-endian; this target is big-endian");
+        }
+        let file = File::open(path).with_context(|| format!("open {}", path.display()))?;
+        let len = file
+            .metadata()
+            .with_context(|| format!("stat {}", path.display()))?
+            .len() as usize;
+        if len == 0 {
+            bail!("{}: cannot mmap an empty file", path.display());
+        }
+        // SAFETY: fd is a freshly opened, valid file descriptor; len > 0;
+        // a NULL addr hint asks the kernel to pick the placement. The fd
+        // may be closed immediately after — the mapping persists per
+        // mmap(2). MAP_FAILED is (void*)-1, checked below.
+        let ptr = unsafe {
+            mmap(
+                std::ptr::null_mut(),
+                len,
+                PROT_READ,
+                MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 {
+            bail!(
+                "{}: mmap of {} bytes failed (errno {})",
+                path.display(),
+                len,
+                std::io::Error::last_os_error()
+            );
+        }
+        Ok(Self { ptr, len })
+    }
+
+    /// Total mapped length in bytes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// True when the mapping is zero bytes (never: `open` refuses empty
+    /// files — provided because clippy insists alongside `len`).
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The whole mapping as bytes.
+    pub fn as_bytes(&self) -> &[u8] {
+        // SAFETY: ptr is a live PROT_READ mapping of exactly self.len
+        // bytes (invariant of open); u8 has no alignment requirement; the
+        // borrow is tied to &self, so it cannot outlive the munmap in Drop.
+        unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+    }
+
+    /// `count` f64 words starting at `byte_off`. Panics (with the offsets
+    /// named) on misalignment or out-of-bounds — a malformed layout must
+    /// never become a wild read.
+    pub fn as_f64s(&self, byte_off: usize, count: usize) -> &[f64] {
+        self.check(byte_off, count, 8, "f64");
+        // SAFETY: check() guarantees byte_off..byte_off+8*count lies
+        // inside the mapping and byte_off is 8-aligned; the mapping base
+        // is page-aligned, so the element pointer is 8-aligned too. Any
+        // bit pattern is a valid f64.
+        unsafe {
+            std::slice::from_raw_parts((self.ptr as *const u8).add(byte_off) as *const f64, count)
+        }
+    }
+
+    /// `count` u32 words starting at `byte_off`; same checks as
+    /// [`Self::as_f64s`].
+    pub fn as_u32s(&self, byte_off: usize, count: usize) -> &[u32] {
+        self.check(byte_off, count, 4, "u32");
+        // SAFETY: as for as_f64s, with 4-byte elements. Any bit pattern
+        // is a valid u32.
+        unsafe {
+            std::slice::from_raw_parts((self.ptr as *const u8).add(byte_off) as *const u32, count)
+        }
+    }
+
+    fn check(&self, byte_off: usize, count: usize, elem: usize, ty: &str) {
+        assert!(
+            byte_off % elem == 0,
+            "mmap: {ty} window at byte {byte_off} is not {elem}-aligned"
+        );
+        let end = byte_off
+            .checked_add(count.checked_mul(elem).expect("mmap window size overflow"))
+            .expect("mmap window end overflow");
+        assert!(
+            end <= self.len,
+            "mmap: {ty} window {byte_off}..{end} exceeds mapping of {} bytes",
+            self.len
+        );
+    }
+}
+
+impl Drop for MmapFile {
+    fn drop(&mut self) {
+        // SAFETY: ptr/len are exactly what mmap returned; the mapping is
+        // unmapped once, here, and all borrows of it have ended (they are
+        // tied to &self).
+        unsafe {
+            munmap(self.ptr, self.len);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn tmp(name: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("qmsvrg_test_mmap");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        let mut f = File::create(&p).unwrap();
+        f.write_all(bytes).unwrap();
+        p
+    }
+
+    #[test]
+    fn maps_a_file_and_reads_typed_windows() {
+        let mut bytes = Vec::new();
+        for v in [1.5f64, -2.25, 1e300] {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        for u in [7u32, 42] {
+            bytes.extend_from_slice(&u.to_le_bytes());
+        }
+        let p = tmp("typed.bin", &bytes);
+        let m = MmapFile::open(&p).unwrap();
+        assert_eq!(m.len(), 32);
+        assert_eq!(m.as_bytes(), &bytes[..]);
+        assert_eq!(m.as_f64s(0, 3), &[1.5, -2.25, 1e300]);
+        assert_eq!(m.as_u32s(24, 2), &[7, 42]);
+        // a shifted window reads the tail
+        assert_eq!(m.as_f64s(8, 2), &[-2.25, 1e300]);
+    }
+
+    #[test]
+    fn refuses_empty_files_and_checks_bounds() {
+        let p = tmp("empty.bin", &[]);
+        let err = MmapFile::open(&p).unwrap_err().to_string();
+        assert!(err.contains("empty"), "{err}");
+
+        let p = tmp("short.bin", &[0u8; 16]);
+        let m = MmapFile::open(&p).unwrap();
+        // out-of-bounds and misaligned windows panic with the offset named
+        assert!(std::panic::catch_unwind(|| m.as_f64s(8, 2)).is_err());
+        assert!(std::panic::catch_unwind(|| m.as_f64s(4, 1)).is_err());
+        assert!(std::panic::catch_unwind(|| m.as_u32s(2, 1)).is_err());
+        assert_eq!(m.as_u32s(12, 1), &[0]);
+    }
+}

@@ -20,18 +20,27 @@
 //! destroy sparsity — see [`Dataset::standardize`].
 
 pub mod loaders;
+pub mod mmap;
+pub mod qmd;
+pub mod storage;
 pub mod synthetic;
 
 use anyhow::{bail, Result};
 
 use crate::linalg::CsrMatrix;
 use crate::rng::Xoshiro256pp;
+use storage::FlatF64;
 
 /// Feature storage: row-major dense, or CSR sparse.
+///
+/// Both arms sit on the flat backings of [`storage`], so a `Features` can
+/// be an owned allocation, a zero-copy row-range view shared with sibling
+/// shards, or a window of an mmapped `.qmd` file — kernels downstream see
+/// plain slices either way.
 #[derive(Clone, Debug)]
 pub enum Features {
     /// Row-major `n × d` contiguous buffer.
-    Dense(Vec<f64>),
+    Dense(FlatF64),
     /// Compressed sparse rows.
     Csr(CsrMatrix),
 }
@@ -91,6 +100,12 @@ pub struct DataFingerprint {
     pub lambda_bits: u64,
     /// FNV-1a 64 over the exact bits of the standardized features (storage
     /// layout included) and labels. Cheap: one O(nnz + n) pass at startup.
+    ///
+    /// **Composable**: the hash is an outer FNV fold over per-row digests
+    /// (see [`Dataset::chunk_hash`]), so a worker holding only rows
+    /// `[A, B)` can prove its slice against the master's full-data identity
+    /// via the per-shard chunk-hash vector in the v7 Config handshake —
+    /// without either end ever materializing the other's rows.
     pub content_hash: u64,
 }
 
@@ -144,7 +159,7 @@ impl Dataset {
             bail!("y has {} entries, expected {}", y.len(), n);
         }
         Ok(Self {
-            feats: Features::Dense(x),
+            feats: Features::Dense(x.into()),
             y,
             n,
             d,
@@ -210,7 +225,7 @@ impl Dataset {
     #[inline]
     pub fn x(&self) -> &[f64] {
         match &self.feats {
-            Features::Dense(x) => x,
+            Features::Dense(x) => x.as_slice(),
             Features::Csr(_) => panic!(
                 "Dataset::x(): dense access on CSR storage (this Dataset holds \
                  Features::Csr) — dispatch on feats() or convert with to_dense()"
@@ -234,7 +249,7 @@ impl Dataset {
     pub fn to_dense(&self) -> Dataset {
         let x = match &self.feats {
             Features::Dense(x) => x.clone(),
-            Features::Csr(m) => m.to_dense(),
+            Features::Csr(m) => m.to_dense().into(),
         };
         Dataset {
             feats: Features::Dense(x),
@@ -285,6 +300,7 @@ impl Dataset {
         let (n, d) = (self.n, self.d);
         match &mut self.feats {
             Features::Dense(x) => {
+                let x = x.make_mut();
                 let mut mean = vec![0.0; d];
                 let mut std = vec![0.0; d];
                 for i in 0..n {
@@ -344,6 +360,7 @@ impl Dataset {
         let (n, d) = (self.n, self.d);
         match &mut self.feats {
             Features::Dense(x) => {
+                let x = x.make_mut();
                 for i in 0..n {
                     for j in 0..d {
                         let v = &mut x[i * d + j];
@@ -375,7 +392,7 @@ impl Dataset {
                         .copy_from_slice(&x[i * self.d..(i + 1) * self.d]);
                     out[i * d2 + self.d] = 1.0;
                 }
-                Features::Dense(out)
+                Features::Dense(out.into())
             }
             Features::Csr(m) => Features::Csr(m.with_bias_col()),
         };
@@ -389,11 +406,7 @@ impl Dataset {
 
     /// Deterministic shuffled train/test split (storage-preserving).
     pub fn split(&self, train_frac: f64, seed: u64) -> (Dataset, Dataset) {
-        assert!((0.0..=1.0).contains(&train_frac));
-        let mut idx: Vec<usize> = (0..self.n).collect();
-        let mut rng = Xoshiro256pp::seed_from_u64(seed);
-        rng.shuffle(&mut idx);
-        let n_train = ((self.n as f64) * train_frac).round() as usize;
+        let (idx, n_train) = split_perm(self.n, train_frac, seed);
         let take = |ids: &[usize]| {
             let feats = match &self.feats {
                 Features::Dense(x) => {
@@ -401,7 +414,7 @@ impl Dataset {
                     for &i in ids {
                         out.extend_from_slice(&x[i * self.d..(i + 1) * self.d]);
                     }
-                    Features::Dense(out)
+                    Features::Dense(out.into())
                 }
                 Features::Csr(m) => Features::Csr(m.select_rows(ids)),
             };
@@ -418,29 +431,52 @@ impl Dataset {
 
     /// Contiguous sharding across `n_workers` (first shards take the slack);
     /// this is the "divide data samples among N workers" of §1.
+    ///
+    /// Feature storage is **not** cloned: every shard is a row-range view
+    /// over this dataset's backing (one `Arc`-shared allocation, N windows
+    /// — see [`storage`]). Labels are O(n/N) copies. A shard that later
+    /// mutates its features (it shouldn't — shards are post-standardize)
+    /// detaches copy-on-write.
     pub fn shard(&self, n_workers: usize) -> Vec<Dataset> {
         assert!(n_workers >= 1 && n_workers <= self.n);
-        let base = self.n / n_workers;
-        let rem = self.n % n_workers;
         let mut out = Vec::with_capacity(n_workers);
-        let mut start = 0;
         for w in 0..n_workers {
-            let len = base + usize::from(w < rem);
+            let (start, end) = shard_range(self.n, n_workers, w);
             let feats = match &self.feats {
-                Features::Dense(x) => {
-                    Features::Dense(x[start * self.d..(start + len) * self.d].to_vec())
-                }
-                Features::Csr(m) => Features::Csr(m.row_range(start, start + len)),
+                Features::Dense(x) => Features::Dense(x.view(start * self.d, end * self.d)),
+                Features::Csr(m) => Features::Csr(m.row_range(start, end)),
             };
             out.push(Dataset {
                 feats,
-                y: self.y[start..start + len].to_vec(),
-                n: len,
+                y: self.y[start..end].to_vec(),
+                n: end - start,
                 d: self.d,
             });
-            start += len;
         }
         out
+    }
+
+    /// FNV-1a digest of row `i`: its features (storage-shaped) and label.
+    /// The unit the composable fingerprint folds over.
+    fn row_digest(&self, i: usize) -> u64 {
+        let mut h = Fnv64::new();
+        match &self.feats {
+            Features::Dense(x) => {
+                for v in &x[i * self.d..(i + 1) * self.d] {
+                    h.word(v.to_bits());
+                }
+            }
+            Features::Csr(m) => {
+                let (idx, vals) = m.row(i);
+                h.word(idx.len() as u64);
+                for (&j, &v) in idx.iter().zip(vals) {
+                    h.word(j as u64);
+                    h.word(v.to_bits());
+                }
+            }
+        }
+        h.word(self.y[i].to_bits());
+        h.0
     }
 
     /// Fingerprint this resolved dataset + the ridge λ for the Config
@@ -448,31 +484,21 @@ impl Dataset {
     /// will actually see — i.e. after split/standardize — so both ends of a
     /// TCP deployment compute it over identical bytes iff their loaders
     /// agreed on every data-defining knob.
+    ///
+    /// The content hash is an outer fold over per-row digests, so shard
+    /// slices compose: `chunk_hashes(N)[w]` computed here equals
+    /// [`Dataset::chunk_hash`] computed by a worker that loaded only shard
+    /// `w`'s rows.
     pub fn fingerprint(&self, lambda: f64) -> DataFingerprint {
         let mut h = Fnv64::new();
         h.word(self.n as u64);
         h.word(self.d as u64);
-        match &self.feats {
-            Features::Dense(x) => {
-                h.word(0); // storage tag
-                for v in x {
-                    h.word(v.to_bits());
-                }
-            }
-            Features::Csr(m) => {
-                h.word(1);
-                for i in 0..self.n {
-                    let (idx, vals) = m.row(i);
-                    h.word(idx.len() as u64);
-                    for (&j, &v) in idx.iter().zip(vals) {
-                        h.word(j as u64);
-                        h.word(v.to_bits());
-                    }
-                }
-            }
-        }
-        for y in &self.y {
-            h.word(y.to_bits());
+        h.word(match self.feats {
+            Features::Dense(_) => 0, // storage tag
+            Features::Csr(_) => 1,
+        });
+        for i in 0..self.n {
+            h.word(self.row_digest(i));
         }
         DataFingerprint {
             n: self.n as u64,
@@ -481,6 +507,35 @@ impl Dataset {
             lambda_bits: lambda.to_bits(),
             content_hash: h.0,
         }
+    }
+
+    /// Fold this dataset's rows as ONE chunk — what a worker that streamed
+    /// only its shard computes to claim it at the v7 handshake. Position-
+    /// independent: no n/d/storage prefix (those are checked as separate
+    /// fingerprint fields), just the row-digest fold, so it equals the
+    /// master-side entry of [`Dataset::chunk_hashes`] for the same rows.
+    pub fn chunk_hash(&self) -> u64 {
+        let mut h = Fnv64::new();
+        for i in 0..self.n {
+            h.word(self.row_digest(i));
+        }
+        h.0
+    }
+
+    /// Per-shard chunk hashes under the canonical [`shard_range`] layout —
+    /// the shard-assignment vector the master broadcasts in the Config
+    /// handshake so row-range workers can prove their slices.
+    pub fn chunk_hashes(&self, n_workers: usize) -> Vec<u64> {
+        (0..n_workers)
+            .map(|w| {
+                let (lo, hi) = shard_range(self.n, n_workers, w);
+                let mut h = Fnv64::new();
+                for i in lo..hi {
+                    h.word(self.row_digest(i));
+                }
+                h.0
+            })
+            .collect()
     }
 
     /// One-vs-all reduction: labels become +1 where `y == class`, else -1.
@@ -505,6 +560,37 @@ impl Dataset {
         c.dedup();
         c
     }
+}
+
+/// The canonical shard layout: row range `[start, end)` of shard `w` when
+/// `n` rows are divided across `n_workers` (first shards take the slack —
+/// the exact arithmetic of [`Dataset::shard`]). Shared by the sharder, the
+/// chunk-hash vector, the streaming loaders' `--shard-rows auto`, and the
+/// worker handshake's claim check, so every layer agrees on who owns which
+/// rows.
+pub fn shard_range(n: usize, n_workers: usize, w: usize) -> (usize, usize) {
+    assert!(n_workers >= 1 && w < n_workers, "shard {w} of {n_workers}");
+    let base = n / n_workers;
+    let rem = n % n_workers;
+    let start = w * base + w.min(rem);
+    let end = start + base + usize::from(w < rem);
+    (start, end)
+}
+
+/// The canonical shuffled-split layout: the row permutation and training
+/// count [`Dataset::split`] uses for `(train_frac, seed)` over `n` rows.
+/// The streaming row-range loaders ([`loaders::load_libsvm_shard`] /
+/// [`loaders::load_csv_shard`]) replay this permutation over byte offsets
+/// instead of resident rows — factored here so the two can never drift
+/// (any drift would shear every float of a streamed standardization off
+/// the full-load baseline).
+pub fn split_perm(n: usize, train_frac: f64, seed: u64) -> (Vec<usize>, usize) {
+    assert!((0.0..=1.0).contains(&train_frac));
+    let mut idx: Vec<usize> = (0..n).collect();
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    rng.shuffle(&mut idx);
+    let n_train = ((n as f64) * train_frac).round() as usize;
+    (idx, n_train)
 }
 
 #[cfg(test)]
@@ -706,7 +792,7 @@ mod tests {
         // a single feature bit moves the content hash
         let mut tweaked = toy();
         if let Features::Dense(x) = &mut tweaked.feats {
-            x[3] += 1e-12;
+            x.make_mut()[3] += 1e-12;
         }
         assert_ne!(fp.content_hash, tweaked.fingerprint(0.1).content_hash);
         // a label flip moves it too
@@ -733,6 +819,60 @@ mod tests {
             sp.fingerprint(0.1).content_hash,
             moved.fingerprint(0.1).content_hash
         );
+    }
+
+    #[test]
+    fn shard_is_a_zero_copy_view_over_one_backing() {
+        // dense: each shard's slice is literally a window of the parent's
+        // buffer — same addresses, not copies
+        let ds = toy();
+        let shards = ds.shard(2);
+        assert!(std::ptr::eq(&ds.x()[0], &shards[0].x()[0]));
+        assert!(std::ptr::eq(&ds.x()[3 * ds.d], &shards[1].x()[0]));
+        // sparse: the CSR views share the parent's entry storage
+        let sp = toy_sparse();
+        for s in sp.shard(2) {
+            let (Features::Csr(parent), Features::Csr(view)) = (sp.feats(), s.feats()) else {
+                panic!("storage changed")
+            };
+            assert!(parent.shares_storage(view), "shard must not clone entries");
+        }
+    }
+
+    #[test]
+    fn shard_range_matches_shard_layout() {
+        for (n, k) in [(5, 2), (7, 3), (12, 4), (3, 3), (9, 1)] {
+            let y = vec![1.0; n];
+            let ds = Dataset::new(vec![0.5; n * 2], y, n, 2).unwrap();
+            let shards = ds.shard(k);
+            let mut start = 0;
+            for (w, s) in shards.iter().enumerate() {
+                assert_eq!(shard_range(n, k, w), (start, start + s.n), "n={n} k={k} w={w}");
+                start += s.n;
+            }
+            assert_eq!(start, n);
+        }
+    }
+
+    #[test]
+    fn chunk_hashes_compose_with_shard_slices() {
+        // master side: per-shard chunk hashes over the full dataset;
+        // worker side: the same hash computed from ONLY the shard's rows.
+        // composability is what lets a streamed row-range load prove itself
+        for ds in [toy(), toy_sparse()] {
+            for k in 1..=2 {
+                let master = ds.chunk_hashes(k);
+                for (w, s) in ds.shard(k).iter().enumerate() {
+                    assert_eq!(master[w], s.chunk_hash(), "shard {w}/{k}");
+                }
+            }
+        }
+        // the whole dataset as one chunk is the 1-shard vector
+        let ds = toy();
+        assert_eq!(ds.chunk_hashes(1), vec![ds.chunk_hash()]);
+        // chunks are content-sensitive: different shards hash differently
+        let hs = ds.chunk_hashes(2);
+        assert_ne!(hs[0], hs[1]);
     }
 
     #[test]

@@ -1,0 +1,404 @@
+//! The `.qmd` packed-dataset sidecar: parse once, load forever.
+//!
+//! `qmsvrg pack` runs the normal load pipeline (parse → split →
+//! standardize) exactly once and freezes the result — both splits, already
+//! standardized — into a flat little-endian file whose array sections are
+//! 8-byte aligned. Loading it back is a header walk plus either a byte
+//! copy (owned) or, with `--mmap`, **no copy at all**: the value/index
+//! arrays stay in the page cache and [`crate::data::storage`] windows them
+//! in place, so datasets larger than RAM open in O(1) memory.
+//!
+//! Because the stored bits are the post-standardization values the trainer
+//! would have computed itself, a `.qmd` run is trivially bit-identical to
+//! the text-parse run it was packed from — pinned by the round-trip tests
+//! below and the CLI smoke in CI.
+//!
+//! ## Layout (all words little-endian, sections 8-byte aligned)
+//!
+//! | offset | field |
+//! |---|---|
+//! | 0 | magic `"QMSVRGD1"` (8 bytes) |
+//! | 8 | flags u64 — bit0 sparse, bit1 standardized |
+//! | 16 | n_train u64 |
+//! | 24 | n_test u64 |
+//! | 32 | d u64 |
+//! | 40 | train section, then test section |
+//!
+//! Sparse section: `nnz u64 · indptr (n+1)×u64 · values nnz×f64 ·
+//! labels n×f64 · indices nnz×u32 · pad to 8`. Dense section:
+//! `values (n·d)×f64 · labels n×f64`.
+
+use std::fs::File;
+use std::io::Write;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use super::mmap::MmapFile;
+use super::storage::{FlatF64, FlatU32};
+use super::{Dataset, Features};
+use crate::linalg::CsrMatrix;
+
+/// File magic: format name + layout version.
+pub const MAGIC: [u8; 8] = *b"QMSVRGD1";
+const FLAG_SPARSE: u64 = 1;
+const FLAG_STANDARDIZED: u64 = 2;
+const HEADER_LEN: usize = 40;
+
+/// A loaded `.qmd`: both splits plus whether they were packed
+/// post-standardization (if so, the trainer must NOT standardize again).
+pub struct QmdFile {
+    pub train: Dataset,
+    pub test: Dataset,
+    pub standardized: bool,
+}
+
+/// Write `train`/`test` (same storage kind, same d) as a `.qmd` file.
+pub fn write_qmd(path: &Path, train: &Dataset, test: &Dataset, standardized: bool) -> Result<()> {
+    if train.d != test.d {
+        bail!("qmd: train d={} but test d={}", train.d, test.d);
+    }
+    if train.is_sparse() != test.is_sparse() {
+        bail!(
+            "qmd: mixed storage (train {}, test {})",
+            train.storage_name(),
+            test.storage_name()
+        );
+    }
+    let mut out = std::io::BufWriter::new(
+        File::create(path).with_context(|| format!("create {}", path.display()))?,
+    );
+    out.write_all(&MAGIC)?;
+    let flags = if train.is_sparse() { FLAG_SPARSE } else { 0 }
+        | if standardized { FLAG_STANDARDIZED } else { 0 };
+    for w in [flags, train.n as u64, test.n as u64, train.d as u64] {
+        out.write_all(&w.to_le_bytes())?;
+    }
+    for ds in [train, test] {
+        write_section(&mut out, ds)?;
+    }
+    out.flush()?;
+    Ok(())
+}
+
+fn write_section<W: Write>(out: &mut W, ds: &Dataset) -> std::io::Result<()> {
+    match ds.feats() {
+        Features::Dense(x) => {
+            for v in x.iter() {
+                out.write_all(&v.to_le_bytes())?;
+            }
+            for y in &ds.y {
+                out.write_all(&y.to_le_bytes())?;
+            }
+        }
+        Features::Csr(m) => {
+            out.write_all(&(m.nnz() as u64).to_le_bytes())?;
+            for p in m.indptr() {
+                out.write_all(&(*p as u64).to_le_bytes())?;
+            }
+            for v in m.values() {
+                out.write_all(&v.to_le_bytes())?;
+            }
+            for y in &ds.y {
+                out.write_all(&y.to_le_bytes())?;
+            }
+            for j in m.indices() {
+                out.write_all(&j.to_le_bytes())?;
+            }
+            if (m.nnz() * 4) % 8 != 0 {
+                out.write_all(&[0u8; 4])?; // keep the next section 8-aligned
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Load a `.qmd`. With `use_mmap` the value/index arrays are windows of
+/// the mapping (O(1) heap for the feature payload); otherwise everything
+/// is decoded into owned buffers. Either way the CSR invariants are
+/// re-validated, so a corrupted file is refused with the defect named.
+pub fn load_qmd(path: &Path, use_mmap: bool) -> Result<QmdFile> {
+    let src = if use_mmap {
+        Src::Mapped(Arc::new(MmapFile::open(path)?))
+    } else {
+        Src::Owned(std::fs::read(path).with_context(|| format!("read {}", path.display()))?)
+    };
+    parse(&src).with_context(|| format!("{}: malformed .qmd", path.display()))
+}
+
+enum Src {
+    Owned(Vec<u8>),
+    Mapped(Arc<MmapFile>),
+}
+
+impl Src {
+    fn bytes(&self) -> &[u8] {
+        match self {
+            Src::Owned(v) => v,
+            Src::Mapped(m) => m.as_bytes(),
+        }
+    }
+
+    /// `count` f64s at `byte_off` — decoded copy (owned) or zero-copy
+    /// window (mapped). Bounds were checked by the layout walk.
+    fn f64s(&self, byte_off: usize, count: usize) -> FlatF64 {
+        match self {
+            Src::Owned(v) => v[byte_off..byte_off + 8 * count]
+                .chunks_exact(8)
+                .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+                .collect::<Vec<f64>>()
+                .into(),
+            Src::Mapped(m) => FlatF64::from_mmap(m.clone(), byte_off, count),
+        }
+    }
+
+    fn u32s(&self, byte_off: usize, count: usize) -> FlatU32 {
+        match self {
+            Src::Owned(v) => v[byte_off..byte_off + 4 * count]
+                .chunks_exact(4)
+                .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+                .collect::<Vec<u32>>()
+                .into(),
+            Src::Mapped(m) => FlatU32::from_mmap(m.clone(), byte_off, count),
+        }
+    }
+}
+
+fn read_u64s(bytes: &[u8], byte_off: usize, count: usize) -> Result<Vec<u64>> {
+    let end = byte_off
+        .checked_add(count.checked_mul(8).context("u64 run overflows")?)
+        .context("u64 run overflows")?;
+    if end > bytes.len() {
+        bail!("u64 run {byte_off}..{end} exceeds file of {} bytes", bytes.len());
+    }
+    Ok(bytes[byte_off..end]
+        .chunks_exact(8)
+        .map(|c| u64::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+fn parse(src: &Src) -> Result<QmdFile> {
+    let bytes = src.bytes();
+    if bytes.len() < HEADER_LEN {
+        bail!("file of {} bytes is shorter than the header", bytes.len());
+    }
+    if bytes[..8] != MAGIC {
+        bail!("bad magic {:02x?} (expected {:?})", &bytes[..8], std::str::from_utf8(&MAGIC).unwrap());
+    }
+    let head = read_u64s(bytes, 8, 4)?;
+    let (flags, n_train, n_test, d) = (head[0], head[1], head[2], head[3]);
+    if flags & !(FLAG_SPARSE | FLAG_STANDARDIZED) != 0 {
+        bail!("unknown flag bits {flags:#x}");
+    }
+    let sparse = flags & FLAG_SPARSE != 0;
+    let (n_train, n_test, d) = (n_train as usize, n_test as usize, d as usize);
+    let mut pos = HEADER_LEN;
+    let train = section(src, &mut pos, n_train, d, sparse).context("train section")?;
+    let test = section(src, &mut pos, n_test, d, sparse).context("test section")?;
+    if pos != bytes.len() {
+        bail!("{} trailing bytes after the test section", bytes.len() - pos);
+    }
+    Ok(QmdFile {
+        train,
+        test,
+        standardized: flags & FLAG_STANDARDIZED != 0,
+    })
+}
+
+fn section(src: &Src, pos: &mut usize, n: usize, d: usize, sparse: bool) -> Result<Dataset> {
+    let bytes = src.bytes();
+    let ck = |a: usize, b: usize| -> Result<usize> {
+        a.checked_add(b).context("section offset overflows")
+    };
+    if sparse {
+        let nnz = read_u64s(bytes, *pos, 1)?[0] as usize;
+        let indptr: Vec<usize> = read_u64s(bytes, *pos + 8, ck(n, 1)?)?
+            .into_iter()
+            .map(|p| p as usize)
+            .collect();
+        let values_off = ck(*pos + 8, (n + 1).checked_mul(8).context("indptr size")?)?;
+        let labels_off = ck(values_off, nnz.checked_mul(8).context("values size")?)?;
+        let indices_off = ck(labels_off, n.checked_mul(8).context("labels size")?)?;
+        let mut end = ck(indices_off, nnz.checked_mul(4).context("indices size")?)?;
+        if end % 8 != 0 {
+            end = ck(end, 4)?;
+        }
+        if end > bytes.len() {
+            bail!("sparse section {pos}..{end} exceeds file of {} bytes", bytes.len());
+        }
+        let m = CsrMatrix::from_backed(
+            indptr,
+            src.u32s(indices_off, nnz),
+            src.f64s(values_off, nnz),
+            d,
+        )?;
+        if m.n_rows() != n {
+            bail!("section holds {} rows, header says {n}", m.n_rows());
+        }
+        let y = labels(bytes, labels_off, n);
+        *pos = end;
+        Dataset::from_csr(m, y)
+    } else {
+        let nd = n.checked_mul(d).context("dense size overflows")?;
+        let values_off = *pos;
+        let labels_off = ck(values_off, nd.checked_mul(8).context("values size")?)?;
+        let end = ck(labels_off, n.checked_mul(8).context("labels size")?)?;
+        if end > bytes.len() {
+            bail!("dense section {pos}..{end} exceeds file of {} bytes", bytes.len());
+        }
+        let x = src.f64s(values_off, nd);
+        let y = labels(bytes, labels_off, n);
+        *pos = end;
+        Ok(Dataset {
+            feats: Features::Dense(x),
+            y,
+            n,
+            d,
+        })
+    }
+}
+
+/// Labels are small (O(n)) and consulted constantly — always an owned copy,
+/// even under mmap.
+fn labels(bytes: &[u8], byte_off: usize, n: usize) -> Vec<f64> {
+    bytes[byte_off..byte_off + 8 * n]
+        .chunks_exact(8)
+        .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("qmsvrg_test_qmd");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn dense_pair() -> (Dataset, Dataset) {
+        let ds = crate::data::synthetic::power_like(60, 7);
+        ds.split(0.8, 3)
+    }
+
+    fn sparse_pair() -> (Dataset, Dataset) {
+        let (tr, te) = dense_pair();
+        (
+            tr.with_format(crate::data::FeatureFormat::Sparse),
+            te.with_format(crate::data::FeatureFormat::Sparse),
+        )
+    }
+
+    fn assert_bitwise_eq(a: &Dataset, b: &Dataset) {
+        assert_eq!((a.n, a.d, a.is_sparse()), (b.n, b.d, b.is_sparse()));
+        let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a.y), bits(&b.y));
+        match (a.feats(), b.feats()) {
+            (Features::Dense(x), Features::Dense(z)) => assert_eq!(bits(x), bits(z)),
+            (Features::Csr(x), Features::Csr(z)) => {
+                assert_eq!(x.indptr(), z.indptr());
+                assert_eq!(x.indices(), z.indices());
+                assert_eq!(bits(x.values()), bits(z.values()));
+            }
+            _ => panic!("storage mismatch"),
+        }
+    }
+
+    #[test]
+    fn roundtrips_bitwise_owned_and_mmap() {
+        for (name, (mut tr, mut te)) in
+            [("dense.qmd", dense_pair()), ("sparse.qmd", sparse_pair())]
+        {
+            let (mean, std) = tr.standardize();
+            te.apply_standardization(&mean, &std);
+            let p = tmp(name);
+            write_qmd(&p, &tr, &te, true).unwrap();
+            for use_mmap in [false, true] {
+                let q = load_qmd(&p, use_mmap).unwrap();
+                assert!(q.standardized);
+                assert_bitwise_eq(&q.train, &tr);
+                assert_bitwise_eq(&q.test, &te);
+                // identical bits ⇒ identical fingerprint ⇒ a .qmd worker
+                // passes the same handshake as a text-parse worker
+                assert_eq!(q.train.fingerprint(0.1), tr.fingerprint(0.1));
+                if use_mmap {
+                    match q.train.feats() {
+                        Features::Csr(m) => assert!(m.is_mmap()),
+                        Features::Dense(_) => {}
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mmap_load_shards_and_trains_like_owned() {
+        let (mut tr, mut te) = sparse_pair();
+        let (mean, std) = tr.standardize();
+        te.apply_standardization(&mean, &std);
+        let p = tmp("shardable.qmd");
+        write_qmd(&p, &tr, &te, true).unwrap();
+        let q = load_qmd(&p, true).unwrap();
+        // shards of an mmap-backed dataset are still zero-copy windows
+        for (a, b) in q.train.shard(3).iter().zip(tr.shard(3).iter()) {
+            assert_bitwise_eq(a, b);
+        }
+        assert_eq!(q.train.chunk_hashes(3), tr.chunk_hashes(3));
+    }
+
+    #[test]
+    fn refuses_malformed_files_with_the_defect_named() {
+        let (tr, te) = dense_pair();
+        let p = tmp("ok.qmd");
+        write_qmd(&p, &tr, &te, false).unwrap();
+        let good = std::fs::read(&p).unwrap();
+
+        // bad magic
+        let mut bad = good.clone();
+        bad[0] ^= 0xFF;
+        let pb = tmp("badmagic.qmd");
+        std::fs::write(&pb, &bad).unwrap();
+        let err = format!("{:#}", load_qmd(&pb, false).unwrap_err());
+        assert!(err.contains("magic"), "{err}");
+
+        // truncated payload
+        let pt = tmp("short.qmd");
+        std::fs::write(&pt, &good[..good.len() - 8]).unwrap();
+        let err = format!("{:#}", load_qmd(&pt, false).unwrap_err());
+        assert!(err.contains("exceeds file"), "{err}");
+
+        // trailing garbage
+        let mut long = good.clone();
+        long.extend_from_slice(&[0u8; 16]);
+        let pl = tmp("long.qmd");
+        std::fs::write(&pl, &long).unwrap();
+        let err = format!("{:#}", load_qmd(&pl, false).unwrap_err());
+        assert!(err.contains("trailing"), "{err}");
+
+        // unknown flag bits
+        let mut flagged = good.clone();
+        flagged[8] |= 0x80;
+        let pf = tmp("flags.qmd");
+        std::fs::write(&pf, &flagged).unwrap();
+        let err = format!("{:#}", load_qmd(&pf, false).unwrap_err());
+        assert!(err.contains("flag"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_sparse_structure_is_refused_by_csr_validation() {
+        let (mut tr, mut te) = sparse_pair();
+        let (mean, std) = tr.standardize();
+        te.apply_standardization(&mean, &std);
+        let p = tmp("corrupt.qmd");
+        write_qmd(&p, &tr, &te, true).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        // scribble on the train indptr (first word after the section's nnz)
+        let off = HEADER_LEN + 8;
+        bytes[off..off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        let pc = tmp("corrupt2.qmd");
+        std::fs::write(&pc, &bytes).unwrap();
+        assert!(load_qmd(&pc, false).is_err());
+    }
+}

@@ -1,0 +1,251 @@
+//! Flat storage backings for feature data: one allocation, many views.
+//!
+//! The out-of-core data path (ISSUE 10) needs two things from the arrays
+//! under [`crate::linalg::CsrMatrix`] and [`crate::data::Features`]:
+//!
+//! 1. **Zero-copy sharding** — `Dataset::shard()` for the in-process and
+//!    threaded backends must hand N workers *views* over one shared
+//!    allocation instead of N clones. Peak memory for an in-RAM run drops
+//!    from ~2× the dataset to ~1×.
+//! 2. **mmap residency** — a `.qmd` sidecar (see [`super::qmd`]) can be
+//!    memory-mapped, so the value/index arrays never enter the heap at all
+//!    and the kernel pages them on demand; datasets larger than RAM train
+//!    at the cost of page faults, not OOM.
+//!
+//! Both collapse to the same shape: an element window (`off`, `len`) over a
+//! reference-counted backing that is either an owned `Vec` or a mapped file.
+//! [`FlatF64`]/[`FlatU32`] deref to plain slices, so every kernel downstream
+//! (SIMD spdot/spaxpy, the fingerprint sweep, the quantizer) sees the exact
+//! `&[f64]`/`&[u32]` it always saw — the numeric path is storage-blind,
+//! which is what keeps the cross-backend bit-identity matrix intact.
+//!
+//! Mutation goes through [`FlatF64::make_mut`]: a full-window owned backing
+//! with no other holders mutates in place; anything else (a shard view, an
+//! mmap window, a shared backing) is first materialized into a fresh owned
+//! `Vec` — copy-on-write, so standardization of a freshly loaded dataset
+//! stays allocation-free while a view can never scribble on its siblings.
+
+use std::sync::Arc;
+
+use super::mmap::MmapFile;
+
+macro_rules! flat_type {
+    ($(#[$doc:meta])* $name:ident, $back:ident, $t:ty, $accessor:ident) => {
+        #[derive(Clone)]
+        enum $back {
+            Owned(Arc<Vec<$t>>),
+            /// A typed window of a mapped file: `byte_off` is the start of
+            /// the *backing* array inside the file, `count` its element
+            /// length. The view window (`off`, `len`) indexes into that.
+            Mmap {
+                file: Arc<MmapFile>,
+                byte_off: usize,
+                count: usize,
+            },
+        }
+
+        $(#[$doc])*
+        #[derive(Clone)]
+        pub struct $name {
+            back: $back,
+            /// Element offset of this window into the backing.
+            off: usize,
+            /// Element length of this window.
+            len: usize,
+        }
+
+        impl $name {
+            /// Wrap a typed region of a mapped file (element offsets are
+            /// relative to `byte_off`; alignment and bounds are asserted by
+            /// the accessor on every deref).
+            pub fn from_mmap(file: Arc<MmapFile>, byte_off: usize, count: usize) -> Self {
+                // validate eagerly so a malformed sidecar fails at load,
+                // not on first kernel touch
+                let _ = file.$accessor(byte_off, count);
+                Self {
+                    back: $back::Mmap {
+                        file,
+                        byte_off,
+                        count,
+                    },
+                    off: 0,
+                    len: count,
+                }
+            }
+
+            /// A sub-window `[lo, hi)` of this window sharing the same
+            /// backing — an `Arc` bump, never a copy.
+            pub fn view(&self, lo: usize, hi: usize) -> Self {
+                assert!(lo <= hi && hi <= self.len, "view {lo}..{hi} of len {}", self.len);
+                Self {
+                    back: self.back.clone(),
+                    off: self.off + lo,
+                    len: hi - lo,
+                }
+            }
+
+            /// True when `self` and `other` are windows over the same
+            /// backing allocation (the zero-copy invariant the shard tests
+            /// pin).
+            pub fn shares_backing(&self, other: &Self) -> bool {
+                match (&self.back, &other.back) {
+                    ($back::Owned(a), $back::Owned(b)) => Arc::ptr_eq(a, b),
+                    (
+                        $back::Mmap { file: a, .. },
+                        $back::Mmap { file: b, .. },
+                    ) => Arc::ptr_eq(a, b),
+                    _ => false,
+                }
+            }
+
+            /// True when the elements live in a mapped file rather than on
+            /// the heap.
+            pub fn is_mmap(&self) -> bool {
+                matches!(self.back, $back::Mmap { .. })
+            }
+
+            /// Mutable access, copy-on-write. In-place only for a
+            /// full-window owned backing with no other holders; otherwise
+            /// the window is first materialized into a fresh owned `Vec`
+            /// (detaching from mmap backings and sibling views alike).
+            pub fn make_mut(&mut self) -> &mut [$t] {
+                let in_place = match &self.back {
+                    $back::Owned(v) => self.off == 0 && self.len == v.len(),
+                    $back::Mmap { .. } => false,
+                };
+                if !in_place {
+                    *self = Self::from(self.as_slice().to_vec());
+                }
+                match &mut self.back {
+                    $back::Owned(v) => Arc::make_mut(v).as_mut_slice(),
+                    // `from(Vec)` above guarantees Owned
+                    $back::Mmap { .. } => panic!("make_mut left an mmap backing"),
+                }
+            }
+
+            /// The window as a plain slice (also available via `Deref`).
+            pub fn as_slice(&self) -> &[$t] {
+                match &self.back {
+                    $back::Owned(v) => &v[self.off..self.off + self.len],
+                    $back::Mmap {
+                        file,
+                        byte_off,
+                        count,
+                    } => &file.$accessor(*byte_off, *count)[self.off..self.off + self.len],
+                }
+            }
+        }
+
+        impl From<Vec<$t>> for $name {
+            fn from(v: Vec<$t>) -> Self {
+                let len = v.len();
+                Self {
+                    back: $back::Owned(Arc::new(v)),
+                    off: 0,
+                    len,
+                }
+            }
+        }
+
+        impl std::ops::Deref for $name {
+            type Target = [$t];
+            fn deref(&self) -> &[$t] {
+                self.as_slice()
+            }
+        }
+
+        impl PartialEq for $name {
+            fn eq(&self, other: &Self) -> bool {
+                self.as_slice() == other.as_slice()
+            }
+        }
+
+        impl std::fmt::Debug for $name {
+            fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+                f.debug_list().entries(self.as_slice().iter()).finish()
+            }
+        }
+    };
+}
+
+flat_type!(
+    /// Flat `f64` storage: `Owned(Vec<f64>)` or a window of a mapped
+    /// `.qmd` file. Derefs to `&[f64]`.
+    FlatF64,
+    BackF64,
+    f64,
+    as_f64s
+);
+
+flat_type!(
+    /// Flat `u32` storage (CSR column indices): `Owned(Vec<u32>)` or a
+    /// window of a mapped `.qmd` file. Derefs to `&[u32]`.
+    FlatU32,
+    BackU32,
+    u32,
+    as_u32s
+);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn views_share_backing_and_never_copy() {
+        let a = FlatF64::from(vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+        let v = a.view(1, 4);
+        assert_eq!(&v[..], &[2.0, 3.0, 4.0]);
+        assert!(a.shares_backing(&v), "view must share the parent backing");
+        // the view's first element is literally the parent's element 1
+        assert!(std::ptr::eq(&a[1], &v[0]));
+        // a sub-view of the view still shares the original backing
+        let vv = v.view(1, 2);
+        assert!(a.shares_backing(&vv));
+        assert!(std::ptr::eq(&a[2], &vv[0]));
+    }
+
+    #[test]
+    fn make_mut_is_in_place_for_sole_owner_and_cow_for_views() {
+        // sole full-window owner: mutation happens in the same allocation
+        let mut a = FlatF64::from(vec![1.0, 2.0, 3.0]);
+        let p = a.as_slice().as_ptr();
+        a.make_mut()[0] = 9.0;
+        assert!(std::ptr::eq(p, a.as_slice().as_ptr()));
+        assert_eq!(a[0], 9.0);
+
+        // a view detaches on write and leaves the parent untouched
+        let parent = FlatF64::from(vec![1.0, 2.0, 3.0, 4.0]);
+        let mut view = parent.view(1, 3);
+        view.make_mut()[0] = -1.0;
+        assert_eq!(&view[..], &[-1.0, 3.0]);
+        assert_eq!(&parent[..], &[1.0, 2.0, 3.0, 4.0]);
+        assert!(!parent.shares_backing(&view), "write must detach the view");
+
+        // a second full-window holder also forces a copy (Arc::make_mut)
+        let mut b = parent.clone();
+        b.make_mut()[3] = 0.5;
+        assert_eq!(&parent[..], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(b[3], 0.5);
+    }
+
+    #[test]
+    fn u32_flat_mirrors_f64_semantics() {
+        let a = FlatU32::from(vec![0u32, 2, 5, 9]);
+        let v = a.view(2, 4);
+        assert_eq!(&v[..], &[5, 9]);
+        assert!(a.shares_backing(&v));
+        assert!(!a.is_mmap());
+        let mut w = v.clone();
+        w.make_mut()[0] = 7;
+        assert_eq!(&v[..], &[5, 9]);
+        assert_eq!(&w[..], &[7, 9]);
+    }
+
+    #[test]
+    fn equality_and_debug_go_through_the_slice() {
+        let a = FlatF64::from(vec![1.0, 2.0, 3.0]);
+        let b = FlatF64::from(vec![0.0, 1.0, 2.0, 3.0]).view(1, 4);
+        assert_eq!(a, b, "windows with equal contents compare equal");
+        assert_eq!(format!("{a:?}"), "[1.0, 2.0, 3.0]");
+    }
+}

@@ -54,9 +54,36 @@ pub fn grid_policy_for(
     slack: f64,
     fixed_radius: f64,
 ) -> GridPolicy {
+    grid_policy_from_geometry(
+        prob.mu(),
+        prob.l_smooth(),
+        prob.dim(),
+        adaptive,
+        step,
+        epoch_len,
+        slack,
+        fixed_radius,
+    )
+}
+
+/// Same constructor from raw geometry `(μ, L, d)` — for callers that never
+/// materialize a [`ShardedObjective`], like a `--shard-rows` worker whose
+/// [`crate::data::loaders::StreamedShard::geometry`] recovers the global
+/// (μ, L) from streamed per-shard sums. Keeping one body here is what makes
+/// the streamed worker's policy fingerprint bit-equal to the master's.
+#[allow(clippy::too_many_arguments)]
+pub fn grid_policy_from_geometry(
+    mu: f64,
+    l_smooth: f64,
+    dim: usize,
+    adaptive: bool,
+    step: f64,
+    epoch_len: usize,
+    slack: f64,
+    fixed_radius: f64,
+) -> GridPolicy {
     if adaptive {
-        let mut pol =
-            AdaptivePolicy::practical(prob.mu(), prob.l_smooth(), prob.dim(), step, epoch_len);
+        let mut pol = AdaptivePolicy::practical(mu, l_smooth, dim, step, epoch_len);
         pol.slack *= slack;
         GridPolicy::Adaptive(pol)
     } else {

@@ -18,6 +18,7 @@
 use anyhow::{bail, Result};
 
 use super::simd;
+use crate::data::storage::{FlatF64, FlatU32};
 
 /// A sparse row-major matrix in Compressed Sparse Row form.
 ///
@@ -26,11 +27,18 @@ use super::simd;
 ///   `indptr[0] == 0` and `indptr[n_rows] == indices.len() == values.len()`;
 /// * within each row, column indices are **strictly increasing** (sorted,
 ///   no duplicates) and `< n_cols`.
+///
+/// `indices`/`values` live in [`FlatU32`]/[`FlatF64`] backings, so a matrix
+/// can be an owned allocation, a zero-copy [`CsrMatrix::row_range`] view
+/// into a sibling's backing, or a window of an mmapped `.qmd` file — the
+/// kernels see identical slices in every case. `indptr` stays an owned
+/// `Vec`: a view needs its pointers rebased anyway, and O(rows) is noise
+/// next to O(nnz).
 #[derive(Clone, Debug, PartialEq)]
 pub struct CsrMatrix {
     indptr: Vec<usize>,
-    indices: Vec<u32>,
-    values: Vec<f64>,
+    indices: FlatU32,
+    values: FlatF64,
     n_rows: usize,
     n_cols: usize,
 }
@@ -41,6 +49,18 @@ impl CsrMatrix {
         indptr: Vec<usize>,
         indices: Vec<u32>,
         values: Vec<f64>,
+        n_cols: usize,
+    ) -> Result<Self> {
+        Self::from_backed(indptr, indices.into(), values.into(), n_cols)
+    }
+
+    /// [`CsrMatrix::new`] over pre-built storage backings (owned, view, or
+    /// mmap) — the `.qmd` load path. Runs the full invariant validation, so
+    /// a corrupted sidecar is refused here with the offending row named.
+    pub fn from_backed(
+        indptr: Vec<usize>,
+        indices: FlatU32,
+        values: FlatF64,
         n_cols: usize,
     ) -> Result<Self> {
         if indptr.is_empty() || indptr[0] != 0 {
@@ -118,8 +138,8 @@ impl CsrMatrix {
         }
         Self {
             indptr,
-            indices,
-            values,
+            indices: indices.into(),
+            values: values.into(),
             n_rows,
             n_cols,
         }
@@ -172,35 +192,63 @@ impl CsrMatrix {
     /// buffer; used for `Σ v²`-style reductions).
     #[inline]
     pub fn values(&self) -> &[f64] {
-        &self.values
+        self.values.as_slice()
+    }
+
+    /// All stored column indices, row-major (`.qmd` serialization).
+    #[inline]
+    pub fn indices(&self) -> &[u32] {
+        self.indices.as_slice()
+    }
+
+    /// The row-pointer array, `n_rows + 1` entries (`.qmd` serialization).
+    #[inline]
+    pub fn indptr(&self) -> &[usize] {
+        &self.indptr
+    }
+
+    /// True when `self` and `other` are views over the same storage
+    /// backing (the zero-copy shard invariant).
+    pub fn shares_storage(&self, other: &CsrMatrix) -> bool {
+        self.indices.shares_backing(&other.indices) && self.values.shares_backing(&other.values)
+    }
+
+    /// True when the entries live in a memory-mapped `.qmd` file.
+    pub fn is_mmap(&self) -> bool {
+        self.values.is_mmap()
     }
 
     /// All stored `(column, value)` pairs, row-major.
     pub fn iter_entries(&self) -> impl Iterator<Item = (usize, f64)> + '_ {
         self.indices
             .iter()
-            .zip(&self.values)
+            .zip(self.values.iter())
             .map(|(&j, &v)| (j as usize, v))
     }
 
     /// All stored `(column, &mut value)` pairs, row-major (scale-only
-    /// column transforms; the column structure is fixed).
+    /// column transforms; the column structure is fixed). Copy-on-write:
+    /// a view or mmap window detaches into owned storage first.
     pub fn iter_entries_mut(&mut self) -> impl Iterator<Item = (usize, &mut f64)> + '_ {
         self.indices
             .iter()
-            .zip(self.values.iter_mut())
+            .zip(self.values.make_mut().iter_mut())
             .map(|(&j, v)| (j as usize, v))
     }
 
-    /// Copy of the contiguous row block `[lo, hi)` (sharding).
+    /// The contiguous row block `[lo, hi)` as a zero-copy **view**: the
+    /// returned matrix shares this one's index/value backing (an `Arc`
+    /// bump) and only rebases the O(rows) `indptr`. This is what makes
+    /// `Dataset::shard()` allocation-free for the feature payload — N
+    /// workers, one backing.
     pub fn row_range(&self, lo: usize, hi: usize) -> CsrMatrix {
         assert!(lo <= hi && hi <= self.n_rows);
         let (a, b) = (self.indptr[lo], self.indptr[hi]);
         let indptr: Vec<usize> = self.indptr[lo..=hi].iter().map(|p| p - a).collect();
         CsrMatrix {
             indptr,
-            indices: self.indices[a..b].to_vec(),
-            values: self.values[a..b].to_vec(),
+            indices: self.indices.view(a, b),
+            values: self.values.view(a, b),
             n_rows: hi - lo,
             n_cols: self.n_cols,
         }
@@ -221,8 +269,8 @@ impl CsrMatrix {
         }
         CsrMatrix {
             indptr,
-            indices,
-            values,
+            indices: indices.into(),
+            values: values.into(),
             n_rows: ids.len(),
             n_cols: self.n_cols,
         }
@@ -244,21 +292,22 @@ impl CsrMatrix {
         }
         CsrMatrix {
             indptr,
-            indices,
-            values,
+            indices: indices.into(),
+            values: values.into(),
             n_rows: self.n_rows,
             n_cols: self.n_cols + 1,
         }
     }
 
     /// Scale every row by its own factor: `row_i *= c[i]` (margin
-    /// construction `z_i = y_i x_i`).
+    /// construction `z_i = y_i x_i`). Copy-on-write on shared storage.
     pub fn scale_rows(&mut self, c: &[f64]) {
         assert_eq!(c.len(), self.n_rows);
+        let values = self.values.make_mut();
         for i in 0..self.n_rows {
             let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
             let ci = c[i];
-            for v in &mut self.values[lo..hi] {
+            for v in &mut values[lo..hi] {
                 *v *= ci;
             }
         }
@@ -558,12 +607,29 @@ mod tests {
         }
         // still a valid CSR (strictly increasing indices)
         CsrMatrix::new(
-            m.indptr.clone(),
-            m.indices.clone(),
-            m.values.clone(),
-            m.n_cols,
+            m.indptr().to_vec(),
+            m.indices().to_vec(),
+            m.values().to_vec(),
+            m.n_cols(),
         )
         .unwrap();
+    }
+
+    #[test]
+    fn row_range_is_a_zero_copy_view() {
+        let m = toy();
+        let mid = m.row_range(1, 3);
+        assert!(m.shares_storage(&mid), "row_range must not copy entries");
+        // the view's first stored value is literally the parent's entry at
+        // its row-1 offset — same address, not just same bits
+        assert!(std::ptr::eq(&m.values()[1], &mid.values()[0]));
+        assert!(std::ptr::eq(&m.indices()[1], &mid.indices()[0]));
+        // mutating the view detaches it (copy-on-write), parent untouched
+        let mut w = m.row_range(0, 2);
+        w.scale_rows(&[2.0, 2.0]);
+        assert!(!m.shares_storage(&w));
+        assert_eq!(m.values(), &[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(w.values(), &[2.0, 4.0, 6.0]);
     }
 
     #[test]

@@ -25,6 +25,7 @@ fn run(argv: Vec<String>) -> Result<()> {
         "train" => cmd_train(&args),
         "experiment" => cmd_experiment(&args),
         "worker" => cmd_worker(&args),
+        "pack" => cmd_pack(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
@@ -34,16 +35,43 @@ fn run(argv: Vec<String>) -> Result<()> {
     }
 }
 
-/// Resolve `--dataset`: synthetic generators or a file on disk. `format`
-/// picks the feature storage: `Auto` keeps libsvm files sparse below the
-/// loader's density threshold, `dense`/`sparse` force a storage. Sparse
-/// storage standardizes scale-only (no centering — see README §Datasets).
+/// Resolve `--dataset`: synthetic generators, a file on disk, or a packed
+/// `.qmd` sidecar. `format` picks the feature storage: `Auto` keeps libsvm
+/// files sparse below the loader's density threshold, `dense`/`sparse`
+/// force a storage. Sparse storage standardizes scale-only (no centering —
+/// see README §Datasets). `use_mmap` memory-maps a `.qmd`'s feature arrays
+/// instead of copying them to the heap (other sources refuse it).
 fn load_dataset(
     name: &str,
     n_samples: usize,
     seed: u64,
     format: qmsvrg::data::FeatureFormat,
+    use_mmap: bool,
 ) -> Result<(Dataset, Dataset)> {
+    if name.ends_with(".qmd") {
+        let q = qmsvrg::data::qmd::load_qmd(Path::new(name), use_mmap)?;
+        let (mut train, mut test) = (q.train, q.test);
+        // a packed file froze its storage at `qmsvrg pack` time; converting
+        // here would copy (defeating --mmap), so an explicit --format that
+        // disagrees is a config error, not a conversion request
+        match format {
+            qmsvrg::data::FeatureFormat::Dense if train.is_sparse() => {
+                bail!("{name} was packed sparse; repack with --format dense instead of converting")
+            }
+            qmsvrg::data::FeatureFormat::Sparse if !train.is_sparse() => {
+                bail!("{name} was packed dense; repack with --format sparse instead of converting")
+            }
+            _ => {}
+        }
+        if !q.standardized {
+            let (mean, std) = train.standardize();
+            test.apply_standardization(&mean, &std);
+        }
+        return Ok((train, test));
+    }
+    if use_mmap {
+        bail!("--mmap needs a packed dataset: run `qmsvrg pack --dataset {name}` and train on the .qmd");
+    }
     let (mut train, mut test) = match name {
         "power" => {
             let ds = synthetic::power_like(n_samples, seed).with_format(format);
@@ -80,7 +108,7 @@ fn cmd_train(args: &Args) -> Result<()> {
     args.reject_unknown(&[
         "algorithm", "dataset", "samples", "workers", "epoch-len", "iters", "step", "bits",
         "lambda", "seed", "backend", "out", "digit", "fixed-radius", "slack", "config",
-        "compressor", "bit-alloc", "format", "mode", "quorum", "staleness",
+        "compressor", "bit-alloc", "format", "mode", "quorum", "staleness", "mmap",
     ])?;
     // start from a TOML config file when given, then apply CLI overrides
     let base = match args.get("config") {
@@ -129,7 +157,13 @@ fn cmd_train(args: &Args) -> Result<()> {
     };
     cfg.validate()?;
 
-    let (mut train, mut test) = load_dataset(&cfg.dataset, cfg.n_samples, cfg.seed, cfg.format)?;
+    let (mut train, mut test) = load_dataset(
+        &cfg.dataset,
+        cfg.n_samples,
+        cfg.seed,
+        cfg.format,
+        args.get("mmap").is_some(),
+    )?;
     if cfg.dataset == "mnist" {
         let digit = args.get_f64("digit", 9.0)?;
         train = train.one_vs_all(digit);
@@ -341,7 +375,7 @@ fn cmd_worker(args: &Args) -> Result<()> {
     args.reject_unknown(&[
         "connect", "dataset", "samples", "shard", "workers", "lambda", "bits", "seed",
         "adaptive", "backend", "compressor", "bit-alloc", "plus", "step", "epoch-len",
-        "slack", "fixed-radius", "format",
+        "slack", "fixed-radius", "format", "shard-rows", "mmap",
     ])?;
     let addr = args.get("connect").context("--connect HOST:PORT required")?;
     let n_samples = args.get_usize("samples", 20_000)?;
@@ -354,25 +388,88 @@ fn cmd_worker(args: &Args) -> Result<()> {
     // carries the master's resolved storage and this worker refuses a
     // mismatch at connect instead of silently training on different data.
     let format: qmsvrg::data::FeatureFormat = args.get_or("format", "auto").parse()?;
+    let dataset = args.get_or("dataset", "power");
 
-    // workers regenerate the whole dataset deterministically from the shared
-    // seed: their own shard for gradients, (for adaptive grids) the *global*
-    // problem geometry (μ, L, d) so the quantization grids replicate the
-    // master's bit-for-bit, and the full data fingerprint (n, d, λ, content
-    // hash of the standardized features) the Config handshake compares — any
-    // --dataset/--samples/--seed/--lambda/--format disagreement with the
-    // master is refused at connect
-    let (train, _) = load_dataset(&args.get_or("dataset", "power"), n_samples, seed, format)?;
-    let fp = train.fingerprint(lambda);
-    let shards = train.shard(n_workers);
-    let shard = &shards[shard_idx];
-    let obj = qmsvrg::objective::LogisticRidge::from_dataset(shard, lambda);
-    eprintln!(
-        "# worker {shard_idx}/{n_workers}: shard n={} d={} [{}], connecting to {addr}",
-        shard.n,
-        shard.d,
-        shard.storage_name()
-    );
+    // Two ways to come up with the shard + the handshake evidence:
+    //
+    // full load (default): regenerate the whole dataset deterministically
+    // from the shared seed — own shard for gradients, global geometry
+    // (μ, L, d) for bit-identical quantization grids, and the full data
+    // fingerprint (n, d, λ, content hash of the standardized features) the
+    // Config handshake compares, so any --dataset/--samples/--seed/
+    // --lambda/--format disagreement with the master is refused at connect.
+    //
+    // --shard-rows (streamed): parse ONLY this worker's row range from the
+    // file — O(rows) feature memory — and prove the slice instead: the
+    // fingerprint covers the slice, and a ShardClaim carries the row range
+    // + chunk hash the master checks against its own per-shard hashes, so
+    // a wrong or corrupted slice is refused with the offending rows named.
+    let (obj, fp, claim, geom);
+    if let Some(spec) = args.get("shard-rows") {
+        let rows = match spec {
+            "auto" => None,
+            s => {
+                let (a, b) = s
+                    .split_once("..")
+                    .with_context(|| format!("--shard-rows {s:?}: expected `auto` or `A..B`"))?;
+                Some((
+                    a.parse().with_context(|| format!("--shard-rows {s:?}"))?,
+                    b.parse().with_context(|| format!("--shard-rows {s:?}"))?,
+                ))
+            }
+        };
+        let path = Path::new(&dataset);
+        let s = if dataset.ends_with(".csv") {
+            loaders::load_csv_shard(
+                path, ',', 0, true, format, 0.8, seed, n_workers, shard_idx, rows,
+            )?
+        } else if dataset.ends_with(".svm") || dataset.ends_with(".libsvm") {
+            loaders::load_libsvm_shard(path, None, format, 0.8, seed, n_workers, shard_idx, rows)?
+        } else {
+            bail!(
+                "--shard-rows streams from a file dataset (*.csv|*.svm|*.libsvm); \
+                 {dataset:?} is not one"
+            )
+        };
+        eprintln!(
+            "# worker {shard_idx}/{n_workers}: streamed rows {}..{} of the {}-row split \
+             (n={} d={} [{}]), connecting to {addr}",
+            s.rows.0,
+            s.rows.1,
+            s.n_train,
+            s.shard.n,
+            s.shard.d,
+            s.shard.storage_name()
+        );
+        fp = s.shard.fingerprint(lambda);
+        claim = Some(qmsvrg::worker::ShardClaim {
+            index: shard_idx,
+            start: s.rows.0,
+            end: s.rows.1,
+            hash: s.shard.chunk_hash(),
+        });
+        let (mu, l) = s.geometry(lambda);
+        geom = Some((mu, l, s.shard.d));
+        obj = qmsvrg::objective::LogisticRidge::from_dataset(&s.shard, lambda);
+    } else {
+        let use_mmap = args.get("mmap").is_some();
+        let (train, _) = load_dataset(&dataset, n_samples, seed, format, use_mmap)?;
+        fp = train.fingerprint(lambda);
+        claim = None;
+        geom = args.get("bits").map(|_| {
+            let prob = qmsvrg::algorithms::ShardedObjective::new(&train, n_workers, lambda);
+            (prob.mu(), prob.l_smooth(), prob.dim())
+        });
+        let shards = train.shard(n_workers);
+        let shard = &shards[shard_idx];
+        obj = qmsvrg::objective::LogisticRidge::from_dataset(shard, lambda);
+        eprintln!(
+            "# worker {shard_idx}/{n_workers}: shard n={} d={} [{}], connecting to {addr}",
+            shard.n,
+            shard.d,
+            shard.storage_name()
+        );
+    }
 
     let quant = match args.get("bits") {
         Some(b) => {
@@ -380,10 +477,14 @@ fn cmd_worker(args: &Args) -> Result<()> {
             // the policy parameters feed the Config handshake's exact-bits
             // fingerprint, so every one the master can set is a flag here
             // (defaults mirror TrainConfig's) and the construction is the
-            // driver's own — never a second copy that could drift
-            let prob = qmsvrg::algorithms::ShardedObjective::new(&train, n_workers, lambda);
-            let policy = qmsvrg::driver::grid_policy_for(
-                &prob,
+            // driver's own — never a second copy that could drift. The
+            // streamed path feeds the SAME constructor from its recovered
+            // global geometry, so its fingerprint cannot drift either.
+            let (mu, l, d) = geom.expect("geometry is computed whenever --bits is set");
+            let policy = qmsvrg::driver::grid_policy_from_geometry(
+                mu,
+                l,
+                d,
                 args.get("adaptive").is_some(),
                 args.get_f64("step", 0.2)?,
                 args.get_usize("epoch-len", 8)?,
@@ -405,8 +506,45 @@ fn cmd_worker(args: &Args) -> Result<()> {
     let link = qmsvrg::transport::tcp::TcpDuplex::connect(addr)?;
     // the same stream an in-process worker i would draw from
     let rng = qmsvrg::rng::Xoshiro256pp::seed_from_u64(seed).worker_stream(shard_idx);
-    qmsvrg::worker::WorkerNode::new(obj, link, quant, fp, rng).run()?;
+    let mut node = qmsvrg::worker::WorkerNode::new(obj, link, quant, fp, rng);
+    if let Some(c) = claim {
+        node = node.with_shard_claim(c);
+    }
+    node.run()?;
     eprintln!("# worker {shard_idx} done");
+    Ok(())
+}
+
+/// Parse → split → standardize once, freeze the result as a `.qmd` sidecar
+/// ([`qmsvrg::data::qmd`]): later runs skip the text parse entirely and can
+/// `--mmap` the arrays for O(1)-heap loads. The packed bits are the exact
+/// post-standardization values, so a `.qmd` run is bit-identical to the
+/// text-parse run it came from.
+fn cmd_pack(args: &Args) -> Result<()> {
+    args.reject_unknown(&["dataset", "samples", "seed", "format", "out"])?;
+    let name = args
+        .get("dataset")
+        .context("--dataset power|mnist|PATH required")?;
+    let n_samples = args.get_usize("samples", 20_000)?;
+    let seed = args.get_u64("seed", 42)?;
+    let format: qmsvrg::data::FeatureFormat = args.get_or("format", "auto").parse()?;
+    let out = match args.get("out") {
+        Some(o) => std::path::PathBuf::from(o),
+        None => Path::new(name).with_extension("qmd"),
+    };
+    if name.ends_with(".qmd") {
+        bail!("{name} is already packed");
+    }
+    let (train, test) = load_dataset(name, n_samples, seed, format, false)?;
+    qmsvrg::data::qmd::write_qmd(&out, &train, &test, true)?;
+    println!(
+        "packed {name} -> {} (train n={} / test n={}, d={}, {} storage, standardized)",
+        out.display(),
+        train.n,
+        test.n,
+        train.d,
+        train.storage_name()
+    );
     Ok(())
 }
 

@@ -26,7 +26,7 @@ pub fn dense_margins(x: &[f64], y: &[f64], n: usize, d: usize) -> Vec<f64> {
 /// untouched, so margins inherit the features' sparsity exactly).
 pub fn margins_from_dataset(ds: &Dataset) -> Features {
     match ds.feats() {
-        Features::Dense(x) => Features::Dense(dense_margins(x, &ds.y, ds.n, ds.d)),
+        Features::Dense(x) => Features::Dense(dense_margins(x, &ds.y, ds.n, ds.d).into()),
         Features::Csr(m) => {
             debug_assert!(
                 ds.y.iter().all(|&v| v == 1.0 || v == -1.0),
@@ -67,7 +67,7 @@ mod tests {
         let (Features::Csr(zs), Features::Dense(zd)) = (&sparse, &dense) else {
             panic!("storage not preserved");
         };
-        assert_eq!(zs.to_dense(), *zd);
+        assert_eq!(zs.to_dense()[..], zd[..]);
         assert_eq!(zs.nnz(), 3, "margins inherit sparsity");
     }
 }

@@ -66,7 +66,7 @@ impl LogisticRidge {
     /// Build directly from precomputed dense margins `z_i = y_i x_i`.
     pub fn from_margins(z: Vec<f64>, n: usize, d: usize, lambda: f64) -> Self {
         assert_eq!(z.len(), n * d);
-        Self::from_margin_features(Features::Dense(z), n, d, lambda)
+        Self::from_margin_features(Features::Dense(z.into()), n, d, lambda)
     }
 
     /// Build from precomputed CSR margins.
@@ -150,7 +150,7 @@ impl LogisticRidge {
     /// storage).
     pub fn margins_dense(&self) -> Vec<f64> {
         match &self.z {
-            Features::Dense(z) => z.clone(),
+            Features::Dense(z) => z.to_vec(),
             Features::Csr(m) => m.to_dense(),
         }
     }

@@ -46,7 +46,13 @@ use anyhow::{bail, Result};
 /// per-coordinate widths each epoch, so a master/worker disagreement on the
 /// allocation mode — or on a compressor with link-local replicated state —
 /// must be refused at connect like any other lattice-geometry mismatch.
-pub const PROTO_VERSION: u16 = 6;
+/// v7: the out-of-core data path landed — `Config` gained `chunk_hashes`,
+/// the per-shard composable content hashes of the master's training split
+/// (the full `data_hash` folds over them), so a worker that streamed only
+/// its row range `[A, B)` from disk (`--shard-rows`) can prove its slice
+/// against the master's full-data fingerprint without ever holding the
+/// other shards. Empty on drivers that don't shard-verify (async).
+pub const PROTO_VERSION: u16 = 7;
 
 /// Ledger bits of one sparse-delta coordinate on the wire: a 32-bit column
 /// index plus a 64-bit value (`GradDelta`/`DeltaApply` carry
@@ -102,6 +108,13 @@ pub enum Message {
         /// slack / radius-mode — both ends must build lattices from
         /// identical parameters, not just the same policy class.
         policy_fp: u64,
+        /// Per-shard composable content hashes of the training split, one
+        /// per worker in canonical [`crate::data::shard_range`] order
+        /// (`Dataset::chunk_hashes`). A worker that holds only rows
+        /// `[A, B)` verifies `chunk_hashes[ξ]` against its own slice —
+        /// the streamed-shard twin of the full `data_hash` check. Empty
+        /// when the driver doesn't assign row ranges.
+        chunk_hashes: Vec<u64>,
     },
     /// Start epoch `epoch`: compute the node gradient at the current
     /// snapshot. `reply = 1` asks the worker to uplink it as a `GradRaw`
@@ -235,7 +248,9 @@ impl Message {
     /// [`Self::write_to`] by the same test.
     pub fn encoded_len(&self) -> usize {
         1 + match self {
-            Message::Config { .. } => 2 + 5 * 1 + 8 + 4 + 8 + 8 + 8,
+            Message::Config { chunk_hashes, .. } => {
+                2 + 5 * 1 + 8 + 4 + 8 + 8 + 8 + 4 + 8 * chunk_hashes.len()
+            }
             Message::EpochBegin { .. } => 4 + 1,
             Message::EpochRevert
             | Message::InnerRequest
@@ -292,6 +307,7 @@ impl Message {
                 lambda_bits,
                 data_hash,
                 policy_fp,
+                chunk_hashes,
             } => {
                 b.push(Self::TAG_CONFIG);
                 b.extend_from_slice(&version.to_le_bytes());
@@ -305,6 +321,10 @@ impl Message {
                 b.extend_from_slice(&lambda_bits.to_le_bytes());
                 b.extend_from_slice(&data_hash.to_le_bytes());
                 b.extend_from_slice(&policy_fp.to_le_bytes());
+                b.extend_from_slice(&(chunk_hashes.len() as u32).to_le_bytes());
+                for h in chunk_hashes {
+                    b.extend_from_slice(&h.to_le_bytes());
+                }
             }
             Message::EpochBegin { epoch, reply } => {
                 b.push(Self::TAG_EPOCH_BEGIN);
@@ -389,6 +409,7 @@ impl Message {
                 lambda_bits: r.u64()?,
                 data_hash: r.u64()?,
                 policy_fp: r.u64()?,
+                chunk_hashes: r.u64s()?,
             },
             Self::TAG_EPOCH_BEGIN => Message::EpochBegin {
                 epoch: r.u32()?,
@@ -696,6 +717,15 @@ impl<'a> Reader<'a> {
         Ok(n)
     }
 
+    fn u64s(&mut self) -> Result<Vec<u64>> {
+        let n = self.count(8)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.u64()?);
+        }
+        Ok(v)
+    }
+
     fn f64s(&mut self) -> Result<Vec<f64>> {
         let n = self.count(8)?;
         let mut v = Vec::with_capacity(n);
@@ -783,6 +813,7 @@ mod tests {
                 lambda_bits: 0.1f64.to_bits(),
                 data_hash: 0x0123_4567_89AB_CDEF,
                 policy_fp: 0xDEAD_BEEF_1234_5678,
+                chunk_hashes: vec![0x1111, 0x2222_0000_0000_0003],
             },
             Message::EpochBegin { epoch: 7, reply: 1 },
             Message::EpochRevert,

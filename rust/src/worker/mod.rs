@@ -24,7 +24,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::algorithms::channel::QuantOpts;
 use crate::algorithms::LazyIterate;
-use crate::data::DataFingerprint;
+use crate::data::{shard_range, DataFingerprint};
 use crate::linalg::SparseVec;
 use crate::objective::{LogisticRidge, Objective};
 use crate::quant::{BitAlloc, CompressorKind, GridPolicy, QuantState};
@@ -256,14 +256,35 @@ impl From<&QuantOpts> for WorkerQuant {
     }
 }
 
+/// A worker's claim about the row-range slice it streamed from disk
+/// (`qmsvrg worker --shard-rows`): shard `index`, the half-open train-row
+/// range `[start, end)` it loaded, and the slice's composable content hash
+/// ([`crate::data::Dataset::chunk_hash`]). Verified against the master's
+/// `Config.chunk_hashes` at the handshake — a wrong range or a corrupted
+/// slice is refused at connect with the offending rows named, never
+/// averaged into the run.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardClaim {
+    pub index: usize,
+    pub start: usize,
+    pub end: usize,
+    pub hash: u64,
+}
+
 /// The worker event loop.
 pub struct WorkerNode<D: Duplex, B: GradientSource> {
     backend: B,
     link: D,
     quant: Option<WorkerQuant>,
     /// This worker's resolved-data identity, compared against the master's
-    /// in the Config handshake (see [`DataFingerprint`]).
+    /// in the Config handshake (see [`DataFingerprint`]). With a
+    /// [`ShardClaim`] attached this is the fingerprint of the **slice**
+    /// (the worker never held the full matrix); without one it must match
+    /// the master's full-data fingerprint exactly.
     fp: DataFingerprint,
+    /// Row-range claim of a streamed-shard worker; `None` for workers that
+    /// loaded (and fingerprinted) the full training split.
+    claim: Option<ShardClaim>,
     rng: Xoshiro256pp,
 }
 
@@ -280,8 +301,18 @@ impl<D: Duplex, B: GradientSource> WorkerNode<D, B> {
             link,
             quant,
             fp,
+            claim: None,
             rng,
         }
+    }
+
+    /// Builder: mark this worker as holding only the row-range slice
+    /// described by `claim` (`fp` must then be the slice's fingerprint).
+    /// The handshake verifies the claim against the master's per-shard
+    /// `chunk_hashes` instead of the full-data content hash.
+    pub fn with_shard_claim(mut self, claim: ShardClaim) -> Self {
+        self.claim = Some(claim);
+        self
     }
 
     /// Run until `Shutdown`. Implements the worker side of Algorithm 1.
@@ -342,6 +373,7 @@ impl<D: Duplex, B: GradientSource> WorkerNode<D, B> {
                     lambda_bits: mlambda,
                     data_hash: mhash,
                     policy_fp,
+                    chunk_hashes,
                 } => {
                     if version != PROTO_VERSION {
                         bail!(
@@ -350,34 +382,101 @@ impl<D: Duplex, B: GradientSource> WorkerNode<D, B> {
                         );
                     }
                     let fp = &self.fp;
-                    if (mn, md, msparse) != (fp.n, fp.d, fp.sparse as u8) {
-                        bail!(
-                            "training-data mismatch: master resolved n={mn}, d={md}, \
-                             storage={}, this worker resolved n={}, d={}, storage={} — \
-                             start both ends with the same --dataset/--samples/--seed/--format",
-                            if msparse == 1 { "csr" } else { "dense" },
-                            fp.n,
-                            fp.d,
-                            if fp.sparse { "csr" } else { "dense" },
-                        );
-                    }
-                    if mlambda != fp.lambda_bits {
-                        bail!(
-                            "lambda mismatch: master λ={}, worker λ={} — λ shapes the \
-                             objective and every adaptive grid; start both ends with \
-                             the same --lambda",
-                            f64::from_bits(mlambda),
-                            fp.lambda(),
-                        );
-                    }
-                    if mhash != fp.content_hash {
-                        bail!(
-                            "training-data content mismatch: master hash {mhash:#018x}, worker \
-                             hash {:#018x} despite matching (n, d, λ, storage) — the two ends \
-                             loaded different data; start both with the same \
-                             --dataset/--samples/--seed (and identical dataset files)",
-                            fp.content_hash,
-                        );
+                    if let Some(c) = &self.claim {
+                        // streamed-shard worker: it holds rows [start, end)
+                        // only, so the global n and full content hash cannot
+                        // be checked directly — the claim is verified against
+                        // the master's per-shard chunk hashes instead
+                        if (md, msparse) != (fp.d, fp.sparse as u8) {
+                            bail!(
+                                "training-data mismatch: master resolved d={md}, storage={}, \
+                                 this worker's shard resolved d={}, storage={} — start both \
+                                 ends with the same --dataset/--format",
+                                if msparse == 1 { "csr" } else { "dense" },
+                                fp.d,
+                                if fp.sparse { "csr" } else { "dense" },
+                            );
+                        }
+                        if mlambda != fp.lambda_bits {
+                            bail!(
+                                "lambda mismatch: master λ={}, worker λ={} — λ shapes the \
+                                 objective and every adaptive grid; start both ends with \
+                                 the same --lambda",
+                                f64::from_bits(mlambda),
+                                fp.lambda(),
+                            );
+                        }
+                        if chunk_hashes.is_empty() {
+                            bail!(
+                                "this worker streamed rows {}..{} (--shard-rows) but the \
+                                 master's handshake carries no shard assignments — its \
+                                 driver doesn't assign row ranges; start this worker \
+                                 without --shard-rows",
+                                c.start,
+                                c.end,
+                            );
+                        }
+                        if c.index >= chunk_hashes.len() {
+                            bail!(
+                                "shard index {} out of range: the master assigned {} shards",
+                                c.index,
+                                chunk_hashes.len(),
+                            );
+                        }
+                        let (a, b) = shard_range(mn as usize, chunk_hashes.len(), c.index);
+                        if (a, b) != (c.start, c.end) {
+                            bail!(
+                                "shard row-range mismatch: the master assigned worker {} rows \
+                                 {a}..{b} of its {mn}-row training split, but this worker \
+                                 loaded rows {}..{} — fix --shard-rows (or pass `auto`)",
+                                c.index,
+                                c.start,
+                                c.end,
+                            );
+                        }
+                        if chunk_hashes[c.index] != c.hash {
+                            bail!(
+                                "shard content mismatch for rows {}..{}: master's chunk hash \
+                                 is {:#018x}, this worker's streamed slice hashes to \
+                                 {:#018x} despite the matching range — the two ends loaded \
+                                 different data; start both with the same --dataset/--seed \
+                                 (and identical dataset files)",
+                                c.start,
+                                c.end,
+                                chunk_hashes[c.index],
+                                c.hash,
+                            );
+                        }
+                    } else {
+                        if (mn, md, msparse) != (fp.n, fp.d, fp.sparse as u8) {
+                            bail!(
+                                "training-data mismatch: master resolved n={mn}, d={md}, \
+                                 storage={}, this worker resolved n={}, d={}, storage={} — \
+                                 start both ends with the same --dataset/--samples/--seed/--format",
+                                if msparse == 1 { "csr" } else { "dense" },
+                                fp.n,
+                                fp.d,
+                                if fp.sparse { "csr" } else { "dense" },
+                            );
+                        }
+                        if mlambda != fp.lambda_bits {
+                            bail!(
+                                "lambda mismatch: master λ={}, worker λ={} — λ shapes the \
+                                 objective and every adaptive grid; start both ends with \
+                                 the same --lambda",
+                                f64::from_bits(mlambda),
+                                fp.lambda(),
+                            );
+                        }
+                        if mhash != fp.content_hash {
+                            bail!(
+                                "training-data content mismatch: master hash {mhash:#018x}, worker \
+                                 hash {:#018x} despite matching (n, d, λ, storage) — the two ends \
+                                 loaded different data; start both with the same \
+                                 --dataset/--samples/--seed (and identical dataset files)",
+                                fp.content_hash,
+                            );
+                        }
                     }
                     let (wc, wb, wp, wa, wfp) = match &self.quant {
                         Some(q) => (
@@ -618,6 +717,7 @@ mod tests {
             lambda_bits: fp.lambda_bits,
             data_hash: fp.content_hash,
             policy_fp: 0,
+            chunk_hashes: vec![],
         }
     }
 
@@ -796,6 +896,7 @@ mod tests {
                 lambda_bits: fp.lambda_bits,
                 data_hash: fp.content_hash,
                 policy_fp: GridPolicy::Fixed { radius: 4.0 }.fingerprint(),
+                chunk_hashes: vec![],
             }
         };
         // matching handshake: worker keeps serving
@@ -903,6 +1004,7 @@ mod tests {
             lambda_bits: fpv.lambda_bits,
             data_hash: fpv.content_hash,
             policy_fp: GridPolicy::Fixed { radius: 4.0 }.fingerprint(),
+            chunk_hashes: vec![],
         };
         // master runs qsd, this worker wangni: names --compressor
         let e = err_for(cfg_with(
@@ -917,6 +1019,107 @@ mod tests {
             BitAlloc::Uniform.wire_id(),
         ));
         assert!(e.contains("bit-allocation mismatch"), "{e}");
+    }
+
+    /// Claim-path fixtures: the full training split sharded 2 ways, a
+    /// worker holding shard 1 only (its fingerprint is the SLICE's), and
+    /// the master handshake carrying the full-data identity + per-shard
+    /// chunk hashes — what a shard-assigning TCP master sends.
+    fn claim_parts() -> (Message, ShardClaim, DataFingerprint, LogisticRidge) {
+        let ds = train_ds();
+        let full_fp = ds.fingerprint(0.1);
+        let shards = ds.shard(2);
+        let (start, end) = crate::data::shard_range(ds.n, 2, 1);
+        let claim = ShardClaim {
+            index: 1,
+            start,
+            end,
+            hash: shards[1].chunk_hash(),
+        };
+        let cfg = Message::Config {
+            version: PROTO_VERSION,
+            compressor: 0,
+            bits: 0,
+            plus: 0,
+            bit_alloc: 0,
+            sparse: full_fp.sparse as u8,
+            n: full_fp.n,
+            d: full_fp.d,
+            lambda_bits: full_fp.lambda_bits,
+            data_hash: full_fp.content_hash,
+            policy_fp: 0,
+            chunk_hashes: ds.chunk_hashes(2),
+        };
+        let slice_fp = shards[1].fingerprint(0.1);
+        let obj = LogisticRidge::from_dataset(&shards[1], 0.1);
+        (cfg, claim, slice_fp, obj)
+    }
+
+    #[test]
+    fn shard_claim_worker_passes_the_handshake_and_serves() {
+        // a worker that never held the full matrix proves its slice against
+        // the master's composable chunk hashes and then serves normally
+        let (cfg, claim, slice_fp, obj) = claim_parts();
+        let expect = obj.loss(&[0.0; 9]);
+        let (mut master, wlink) = pair();
+        let node = WorkerNode::new(obj, wlink, None, slice_fp, Xoshiro256pp::seed_from_u64(21))
+            .with_shard_claim(claim);
+        let t = std::thread::spawn(move || node.run());
+        master.send(cfg).unwrap();
+        master.send(Message::QueryLoss).unwrap();
+        match master.recv().unwrap() {
+            Message::LossValue { loss } => assert_eq!(loss.to_bits(), expect.to_bits()),
+            other => panic!("unexpected {other:?}"),
+        }
+        master.send(Message::Shutdown).unwrap();
+        t.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn shard_claim_refusals_name_the_offending_rows() {
+        let run_claim = |cfg: Message, claim: ShardClaim, fp: DataFingerprint| {
+            let (mut master, wlink) = pair();
+            let obj = claim_parts().3;
+            let node = WorkerNode::new(obj, wlink, None, fp, Xoshiro256pp::seed_from_u64(22))
+                .with_shard_claim(claim);
+            let t = std::thread::spawn(move || node.run());
+            master.send(cfg).unwrap();
+            t.join().unwrap().unwrap_err().to_string()
+        };
+        // wrong --shard-rows (worker loaded shard 0's range, claims index 1):
+        // refused with both the assigned and the loaded rows named
+        let (cfg, good, slice_fp, _) = claim_parts();
+        let (a0, b0) = crate::data::shard_range(100, 2, 0);
+        let wrong_rows = ShardClaim {
+            start: a0,
+            end: b0,
+            ..good
+        };
+        let e = run_claim(cfg.clone(), wrong_rows, slice_fp);
+        assert!(e.contains("shard row-range mismatch"), "{e}");
+        assert!(e.contains(&format!("{}..{}", good.start, good.end)), "{e}");
+        assert!(e.contains(&format!("{a0}..{b0}")), "{e}");
+        // corrupted slice (same range, different bits): refused with the
+        // rows and both hashes named
+        let corrupt = ShardClaim {
+            hash: good.hash ^ 1,
+            ..good
+        };
+        let e = run_claim(cfg.clone(), corrupt, slice_fp);
+        assert!(e.contains("shard content mismatch"), "{e}");
+        assert!(e.contains(&format!("{}..{}", good.start, good.end)), "{e}");
+        // a master that assigns no shards can't admit a --shard-rows worker
+        let mut no_shards = cfg;
+        if let Message::Config { chunk_hashes, .. } = &mut no_shards {
+            chunk_hashes.clear();
+        }
+        let e = run_claim(no_shards, good, slice_fp);
+        assert!(e.contains("no shard assignments"), "{e}");
+        // claim index beyond the master's worker count
+        let mut bad_index = good;
+        bad_index.index = 7;
+        let e = run_claim(claim_parts().0, bad_index, slice_fp);
+        assert!(e.contains("out of range"), "{e}");
     }
 
     #[test]

@@ -19,7 +19,7 @@ use qmsvrg::quant::{AdaptivePolicy, BitAlloc, CompressorKind, GridPolicy};
 use qmsvrg::rng::Xoshiro256pp;
 use qmsvrg::transport::local::pair;
 use qmsvrg::transport::tcp::TcpDuplex;
-use qmsvrg::worker::{WorkerNode, WorkerQuant};
+use qmsvrg::worker::{ShardClaim, WorkerNode, WorkerQuant};
 
 fn dataset() -> Dataset {
     let mut ds = power_like(1200, 5);
@@ -131,6 +131,7 @@ fn run_tcp(ds: &Dataset, n: usize, q: Option<QuantOpts>, o: &SvrgOpts, seed: u64
     // backends (a real deployment doesn't need this — each link is
     // self-consistent — but the fingerprint comparison does)
     let fp = ds.fingerprint(0.1);
+    let chunk_hashes = ds.chunk_hashes(n);
     let shards = ds.shard(n);
     let mut handles = Vec::new();
     let mut links = Vec::new();
@@ -146,7 +147,7 @@ fn run_tcp(ds: &Dataset, n: usize, q: Option<QuantOpts>, o: &SvrgOpts, seed: u64
         let (stream, _) = listener.accept().unwrap();
         links.push(TcpDuplex::new(stream).unwrap());
     }
-    let mut cluster = MessageCluster::new(links, q, fp, &root).unwrap();
+    let mut cluster = MessageCluster::new(links, q, fp, chunk_hashes, &root).unwrap();
     let fp = {
         let mut gnorm_bits = Vec::new();
         let mut bits = Vec::new();
@@ -176,6 +177,122 @@ fn run_tcp(ds: &Dataset, n: usize, q: Option<QuantOpts>, o: &SvrgOpts, seed: u64
     // (QueryLoss is instrumentation: unmetered, so it cannot perturb the
     // ledger fields the fingerprint compares)
     fp
+}
+
+/// QM-SVRG over loopback TCP where each worker holds ONLY its slice (as a
+/// `--shard-rows` streamed worker would) and proves it through the v7
+/// [`ShardClaim`] handshake: slice fingerprint + row range + chunk hash,
+/// checked against the master's per-shard hashes.
+fn run_tcp_claims(ds: &Dataset, n: usize, q: Option<QuantOpts>, o: &SvrgOpts, seed: u64) -> RunFingerprint {
+    let root = Xoshiro256pp::seed_from_u64(seed);
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let fp = ds.fingerprint(0.1);
+    let chunk_hashes = ds.chunk_hashes(n);
+    let mut handles = Vec::new();
+    let mut links = Vec::new();
+    for (i, s) in ds.shard(n).into_iter().enumerate() {
+        let wq = q.as_ref().map(WorkerQuant::from);
+        let rng = root.worker_stream(i);
+        let addr = addr.clone();
+        let (start, end) = qmsvrg::data::shard_range(ds.n, n, i);
+        let slice_fp = s.fingerprint(0.1);
+        let claim = ShardClaim {
+            index: i,
+            start,
+            end,
+            hash: s.chunk_hash(),
+        };
+        handles.push(std::thread::spawn(move || {
+            let link = TcpDuplex::connect(&addr).unwrap();
+            let obj = LogisticRidge::from_dataset(&s, 0.1);
+            WorkerNode::new(obj, link, wq, slice_fp, rng)
+                .with_shard_claim(claim)
+                .run()
+                .unwrap();
+        }));
+        let (stream, _) = listener.accept().unwrap();
+        links.push(TcpDuplex::new(stream).unwrap());
+    }
+    let mut cluster = MessageCluster::new(links, q, fp, chunk_hashes, &root).unwrap();
+    let r = run_on(&mut cluster, o, &root);
+    for h in handles {
+        h.join().unwrap();
+    }
+    r
+}
+
+#[test]
+fn row_range_tcp_and_mmap_legs_bit_identical() {
+    // the out-of-core legs of the matrix: a worker that never saw the full
+    // dataset (row-range slice + ShardClaim handshake) and a master whose
+    // features live in a memory-mapped .qmd must BOTH reproduce the
+    // in-process run bit for bit — traces, ledgers, saturations
+    let ds = dataset();
+    let n = 4;
+    let o = opts(12, true);
+    let q = quant_opts(&ds, n, 5, true);
+    let a = run_in_process(&ds, n, Some(q.clone()), &o, 33);
+
+    let c = run_tcp_claims(&ds, n, Some(q.clone()), &o, 33);
+    assert_eq!(a, c, "in-process vs row-range tcp");
+
+    let dir = std::env::temp_dir().join("qmsvrg_test_distributed");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("matrix.qmd");
+    qmsvrg::data::qmd::write_qmd(&p, &ds, &ds, true).unwrap();
+    let m = qmsvrg::data::qmd::load_qmd(&p, true).unwrap().train;
+    let b = run_in_process(&m, n, Some(q), &o, 33);
+    assert_eq!(a, b, "in-process owned vs mmap-backed");
+}
+
+#[test]
+fn mismatched_shard_rows_refused_at_connect() {
+    // a worker claiming the WRONG row range must be refused at the v7
+    // handshake with the offending rows named — not silently trained
+    let ds = dataset();
+    let n = 2;
+    let root = Xoshiro256pp::seed_from_u64(3);
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let fp = ds.fingerprint(0.1);
+    let shards = ds.shard(n);
+    let s = shards[1].clone();
+    let (start, end) = qmsvrg::data::shard_range(ds.n, n, 1);
+    let bogus = ShardClaim {
+        index: 0, // holds shard 1's rows but claims slot 0
+        start,
+        end,
+        hash: s.chunk_hash(),
+    };
+    let slice_fp = s.fingerprint(0.1);
+    let rng = root.worker_stream(0);
+    let handle = std::thread::spawn(move || {
+        let link = TcpDuplex::connect(&addr).unwrap();
+        let obj = LogisticRidge::from_dataset(&s, 0.1);
+        WorkerNode::new(obj, link, None, slice_fp, rng)
+            .with_shard_claim(bogus)
+            .run()
+    });
+    let (stream, _) = listener.accept().unwrap();
+    let links = vec![TcpDuplex::new(stream).unwrap()];
+    // the worker refuses the Config and severs the link; the constructor
+    // only fans the Config out, so the refusal surfaces either there (send
+    // raced the severed socket) or on the first collective
+    let result = match MessageCluster::new(links, None, fp, ds.chunk_hashes(n), &root) {
+        Ok(mut cluster) => {
+            let r = run_svrg(&mut cluster, &opts(2, false), root.algo_stream(), &mut |_, _, _, _| {});
+            drop(cluster);
+            r.map(|_| ())
+        }
+        Err(e) => Err(e),
+    };
+    assert!(result.is_err(), "master should see the refused handshake");
+    let err = format!("{:#}", handle.join().unwrap().unwrap_err());
+    assert!(
+        err.contains("shard row-range mismatch") && err.contains(&format!("{start}..{end}")),
+        "worker error should name the offending rows: {err}"
+    );
 }
 
 #[test]
@@ -388,7 +505,7 @@ fn worker_crash_surfaces_as_error_not_hang() {
     }
     // the dead worker may sever its link before or after the constructor's
     // Config handshake lands, so either the constructor or the run errors
-    let result = match MessageCluster::new(links, None, fp, &root) {
+    let result = match MessageCluster::new(links, None, fp, ds.chunk_hashes(2), &root) {
         Ok(mut cluster) => {
             let r = run_svrg(&mut cluster, &opts(3, false), root.algo_stream(), &mut |_, _, _, _| {});
             // drop the cluster first: it holds the channel senders that keep

@@ -483,3 +483,110 @@ fn tiny_sparse_fixture_loads_and_trains() {
     assert!(report.trace.final_loss().is_finite());
     assert!(report.trace.total_bits() > 0);
 }
+
+/// Tentpole property: for random problem shapes, storages, densities, and
+/// split seeds, the streamed row-range loader
+/// ([`qmsvrg::data::loaders::load_libsvm_shard`]) is **bit-for-bit** the
+/// full pipeline `load → split → standardize → shard` — features, labels,
+/// fingerprint, chunk hash, AND the recovered global (μ, L) geometry that
+/// seeds the quantization grids. Explicit non-canonical ranges must equal
+/// the same rows of the in-memory training split.
+#[test]
+fn prop_streamed_row_range_load_is_bitwise_full_load_then_shard() {
+    use qmsvrg::algorithms::ShardedObjective;
+    use qmsvrg::data::loaders::{load_libsvm_format, load_libsvm_shard};
+    use qmsvrg::data::{Dataset, FeatureFormat, Features};
+    use std::io::Write as _;
+
+    let dir = std::env::temp_dir().join("qmsvrg_test_properties_stream");
+    std::fs::create_dir_all(&dir).unwrap();
+    let bits = |v: &[f64]| v.iter().map(|x| x.to_bits()).collect::<Vec<u64>>();
+    let assert_bitwise = |a: &Dataset, b: &Dataset, what: &str| {
+        assert_eq!((a.n, a.d, a.is_sparse()), (b.n, b.d, b.is_sparse()), "{what}");
+        assert_eq!(bits(&a.y), bits(&b.y), "{what}: labels");
+        match (a.feats(), b.feats()) {
+            (Features::Dense(x), Features::Dense(z)) => {
+                assert_eq!(bits(x), bits(z), "{what}: dense features")
+            }
+            (Features::Csr(x), Features::Csr(z)) => {
+                assert_eq!(x.indptr(), z.indptr(), "{what}: indptr");
+                assert_eq!(x.indices(), z.indices(), "{what}: indices");
+                assert_eq!(bits(x.values()), bits(z.values()), "{what}: values");
+            }
+            _ => unreachable!("storage agreement is asserted above"),
+        }
+    };
+
+    forall(12, 0xD47A, |rng| {
+        let n = 24 + rng.gen_index(60);
+        let d = 3 + rng.gen_index(12);
+        let density = rng.gen_uniform(0.05, 0.9);
+        let path = dir.join(format!("case_{:016x}.svm", rng.next_u64()));
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&path).unwrap());
+        for _ in 0..n {
+            let y = if rng.gen_bool(0.5) { 1 } else { -1 };
+            write!(f, "{y}").unwrap();
+            for j in 0..d {
+                if rng.gen_bool(density) {
+                    write!(f, " {}:{:.6}", j + 1, rng.gen_uniform(-2.0, 2.0)).unwrap();
+                }
+            }
+            writeln!(f).unwrap();
+        }
+        f.flush().unwrap();
+        drop(f);
+
+        let format = match rng.gen_index(3) {
+            0 => FeatureFormat::Auto, // exercises the replicated densify decision
+            1 => FeatureFormat::Dense,
+            _ => FeatureFormat::Sparse,
+        };
+        let split_seed = rng.next_u64();
+        let lambda = rng.gen_uniform(0.01, 0.3);
+
+        // the reference: everything in memory
+        let (mut full, _) = load_libsvm_format(&path, None, format)
+            .unwrap()
+            .split(0.8, split_seed);
+        full.standardize();
+        let n_workers = 1 + rng.gen_index(4);
+        let shards = full.shard(n_workers);
+        let w = rng.gen_index(n_workers);
+
+        // canonical range (`--shard-rows auto`)
+        let s = load_libsvm_shard(&path, None, format, 0.8, split_seed, n_workers, w, None).unwrap();
+        assert_bitwise(&s.shard, &shards[w], "canonical shard");
+        assert_eq!(s.n_train, full.n);
+        assert_eq!(
+            s.shard.fingerprint(lambda),
+            shards[w].fingerprint(lambda),
+            "slice fingerprint"
+        );
+        assert_eq!(s.shard.chunk_hash(), full.chunk_hashes(n_workers)[w], "chunk hash");
+        let prob = ShardedObjective::new(&full, n_workers, lambda);
+        let (mu, l) = s.geometry(lambda);
+        assert_eq!(mu.to_bits(), prob.mu().to_bits(), "recovered mu");
+        assert_eq!(l.to_bits(), prob.l_smooth().to_bits(), "recovered L");
+
+        // an arbitrary explicit range (`--shard-rows A..B`)
+        let a = rng.gen_index(full.n);
+        let b = a + 1 + rng.gen_index(full.n - a);
+        let e = load_libsvm_shard(&path, None, format, 0.8, split_seed, n_workers, w, Some((a, b)))
+            .unwrap();
+        assert_eq!(e.rows, (a, b));
+        assert_eq!(bits(&e.shard.y), bits(&full.y[a..b]), "explicit range: labels");
+        match (e.shard.feats(), full.feats()) {
+            (Features::Dense(x), Features::Dense(fx)) => {
+                assert_eq!(bits(x), bits(&fx[a * full.d..b * full.d]), "explicit range: dense")
+            }
+            (Features::Csr(x), Features::Csr(fm)) => {
+                let exp = fm.row_range(a, b);
+                assert_eq!(x.indptr(), exp.indptr(), "explicit range: indptr");
+                assert_eq!(x.indices(), exp.indices(), "explicit range: indices");
+                assert_eq!(bits(x.values()), bits(exp.values()), "explicit range: values");
+            }
+            _ => unreachable!("both ends resolve the same storage"),
+        }
+        std::fs::remove_file(&path).ok();
+    });
+}
